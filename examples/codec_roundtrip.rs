@@ -1,0 +1,80 @@
+//! Codec deep-dive: exercise the Gecko + SFP bitstreams on value streams
+//! with very different statistics and print the encoded-size anatomy —
+//! the hands-on version of Figs. 9/10.
+//!
+//! Run: `cargo run --release --example codec_roundtrip`
+
+use sfp::formats::Container;
+use sfp::gecko::{self, Mode};
+use sfp::sfp::SfpCodec;
+use sfp::stats::EncodedWidthCdf;
+use sfp::traces::ValueModel;
+
+fn show(label: &str, vals: &[f32], mant_bits: u32, elide_sign: bool) {
+    let exps = gecko::exponents(vals);
+    let delta = gecko::encode(&exps, Mode::Delta);
+    assert_eq!(gecko::decode(&delta, Mode::Delta), exps, "lossless");
+    let fixed_mode = Mode::FixedBias { bias: 127, group: 8 };
+    let fixed = gecko::encode(&exps, fixed_mode);
+    assert_eq!(gecko::decode(&fixed, fixed_mode), exps, "lossless");
+
+    let codec = SfpCodec::new(Container::Bf16, elide_sign);
+    let full = codec.compress(vals, mant_bits);
+
+    let mut cdf = EncodedWidthCdf::new();
+    cdf.add_exponents(&exps);
+
+    println!("--- {label} ({} values, n={mant_bits}) ---", vals.len());
+    println!(
+        "  gecko delta : {:.3} b/exponent (payload {:.3} + metadata {:.3})",
+        delta.total_bits() as f64 / vals.len() as f64,
+        delta.payload_bits as f64 / vals.len() as f64,
+        delta.metadata_bits as f64 / vals.len() as f64,
+    );
+    println!(
+        "  gecko fixed : {:.3} b/exponent",
+        fixed.total_bits() as f64 / vals.len() as f64
+    );
+    println!(
+        "  encoded-width CDF: {:>4.1}% <=1b, {:>4.1}% <=4b, {:>4.1}% <=5b",
+        100.0 * cdf.cdf_at(1),
+        100.0 * cdf.cdf_at(4),
+        100.0 * cdf.cdf_at(5),
+    );
+    println!(
+        "  SFP total   : {:.3} b/value = {:.1}% of BF16 ({} compressor cycles, {:.2} values/cycle)",
+        full.total_bits() as f64 / vals.len() as f64,
+        100.0 * full.ratio(Container::Bf16),
+        full.cycles,
+        vals.len() as f64 / full.cycles as f64,
+    );
+}
+
+fn main() {
+    let n = 64 * 4096;
+    show(
+        "post-ReLU activations (clustered zeros)",
+        &ValueModel::relu_act().sample_values(n, 11, true),
+        3,
+        true,
+    );
+    show(
+        "hswish activations (dense)",
+        &ValueModel::hswish_act().sample_values(n, 12, false),
+        3,
+        false,
+    );
+    show(
+        "trained weights (plateaued exponents)",
+        &ValueModel::weights().sample_values(n, 13, false),
+        4,
+        false,
+    );
+    // adversarial: white-noise bit patterns still roundtrip, just without
+    // compression wins
+    let mut rng = sfp::traces::SplitMix64::new(14);
+    let noise: Vec<f32> = (0..n)
+        .map(|_| f32::from_bits((rng.next_u64() as u32) & 0x7F7F_FFFF))
+        .collect();
+    show("adversarial white-noise exponents", &noise, 7, false);
+}

@@ -1,0 +1,80 @@
+//! Ablation sweep over the accelerator model: how do the Table II gains
+//! move with DRAM bandwidth, on-chip buffer size, and batch size?  This is
+//! the "design-choice ablation" DESIGN.md calls out for hwsim.
+//!
+//! Run: `cargo run --release --example hwsim_sweep`
+
+use sfp::formats::Container;
+use sfp::hwsim::{gains, simulate_pass, AccelConfig, ComputeType, LayerBits, PassStats};
+use sfp::report::FootprintModel;
+use sfp::traces::{resnet18, NetworkTrace};
+
+fn pass(cfg: &AccelConfig, net: &NetworkTrace, batch: usize, model: &FootprintModel, ct: ComputeType) -> PassStats {
+    let n = net.layers.len();
+    let bits: Vec<LayerBits> = net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let f = model.layer(l, i as f64 / n as f64, batch, i as u64);
+            LayerBits {
+                weight: f.total_weight_bits(),
+                act: f.total_act_bits(),
+            }
+        })
+        .collect();
+    let idx = std::cell::Cell::new(0);
+    simulate_pass(cfg, net, batch, ct, &move |_| {
+        let i = idx.get();
+        idx.set(i + 1);
+        bits[i % bits.len()]
+    })
+}
+
+fn main() {
+    let net = resnet18();
+    let qm = FootprintModel::sfp_qm(Container::Bf16);
+    let fp32 = FootprintModel::fp32();
+
+    println!("== DRAM bandwidth sweep (batch 256) ==");
+    println!("{:>10} {:>12} {:>12} {:>10}", "GB/s", "QM speedup", "QM energy", "membound%");
+    for gbs in [12.8, 25.6, 51.2, 102.4, 204.8] {
+        let cfg = AccelConfig {
+            dram_bw_bits: gbs * 8e9,
+            ..Default::default()
+        };
+        let base = pass(&cfg, &net, 256, &fp32, ComputeType::Fp32);
+        let v = pass(&cfg, &net, 256, &qm, ComputeType::Bf16);
+        let (s, e) = gains(&base, &v);
+        println!(
+            "{gbs:>10.1} {s:>11.2}x {e:>11.2}x {:>9.0}%",
+            100.0 * v.memory_bound_layers as f64 / v.total_layer_passes as f64
+        );
+    }
+
+    println!("\n== on-chip buffer sweep (batch 256) ==");
+    println!("{:>10} {:>14} {:>12}", "MiB", "FP32 traffic", "QM speedup");
+    for mib in [4.0, 8.0, 16.0, 32.0, 64.0, 128.0] {
+        let cfg = AccelConfig {
+            buffer_bytes: mib * 1024.0 * 1024.0,
+            ..Default::default()
+        };
+        let base = pass(&cfg, &net, 256, &fp32, ComputeType::Fp32);
+        let v = pass(&cfg, &net, 256, &qm, ComputeType::Bf16);
+        let (s, _) = gains(&base, &v);
+        println!("{mib:>10.0} {:>12.1}Gb {s:>11.2}x", base.dram_bits / 1e9);
+    }
+
+    println!("\n== batch-size sweep ==");
+    println!("{:>8} {:>12} {:>12} {:>12}", "batch", "BF16 speed", "QM speed", "BC speed");
+    let bc = FootprintModel::sfp_bc(Container::Bf16);
+    let bf = FootprintModel::bf16();
+    for batch in [32, 64, 128, 256, 512] {
+        let cfg = AccelConfig::default();
+        let base = pass(&cfg, &net, batch, &fp32, ComputeType::Fp32);
+        let b = gains(&base, &pass(&cfg, &net, batch, &bf, ComputeType::Bf16)).0;
+        let q = gains(&base, &pass(&cfg, &net, batch, &qm, ComputeType::Bf16)).0;
+        let c = gains(&base, &pass(&cfg, &net, batch, &bc, ComputeType::Bf16)).0;
+        println!("{batch:>8} {b:>11.2}x {q:>11.2}x {c:>11.2}x");
+    }
+}

@@ -1,0 +1,77 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! 1. Quantize a tensor's mantissas (the paper's Eq. 5 datapath).
+//! 2. Compress it with the Gecko/SFP codec and get the footprint split.
+//! 3. Ask the hwsim what that footprint buys on the modelled accelerator.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use sfp::formats::{quantize, Container};
+use sfp::hwsim::{gains, simulate_pass, AccelConfig, ComputeType, LayerBits};
+use sfp::report::FootprintModel;
+use sfp::sfp::SfpCodec;
+use sfp::traces::{resnet18, ValueModel};
+
+fn main() {
+    // --- 1. mantissa truncation -----------------------------------------
+    let x = 3.14159265f32;
+    println!("mantissa containers for {x}:");
+    for n in [23u32, 7, 4, 1, 0] {
+        let q = quantize(x, n, Container::Fp32);
+        println!("  n={n:>2}: {q:<12} bits={:#034b}", q.to_bits());
+    }
+
+    // --- 2. compress a trained-like tensor ------------------------------
+    let vals = ValueModel::relu_act().sample_values(64 * 1024, 1, true);
+    let codec = SfpCodec::new(Container::Bf16, /*elide_sign=*/ true);
+    let n = 3; // say BitChop settled at 3 mantissa bits
+    let c = codec.compress(&vals, n);
+    let back = codec.decompress(&c);
+    assert!(vals
+        .iter()
+        .zip(&back)
+        .all(|(&v, &b)| quantize(v, n, Container::Bf16).to_bits() == b.to_bits()));
+    println!(
+        "\nSFP codec @ n={n}: {:.2} b/value ({:.1}% of BF16, {:.1}% of FP32), lossless after quantization",
+        c.total_bits() as f64 / vals.len() as f64,
+        100.0 * c.ratio(Container::Bf16),
+        100.0 * c.total_bits() as f64 / (32.0 * vals.len() as f64),
+    );
+
+    // --- 3. what does that buy at ImageNet scale? ------------------------
+    let net = resnet18();
+    let cfg = AccelConfig::default();
+    let batch = 256;
+    let layer_bits = |model: &FootprintModel| -> Vec<LayerBits> {
+        let n_layers = net.layers.len();
+        net.layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let f = model.layer(l, i as f64 / n_layers as f64, batch, i as u64);
+                LayerBits {
+                    weight: f.total_weight_bits(),
+                    act: f.total_act_bits(),
+                }
+            })
+            .collect()
+    };
+    let b_fp32 = layer_bits(&FootprintModel::fp32());
+    let b_qm = layer_bits(&FootprintModel::sfp_qm(Container::Bf16));
+    let i1 = std::cell::Cell::new(0);
+    let fp32 = simulate_pass(&cfg, &net, batch, ComputeType::Fp32, &|_| {
+        let i = i1.get();
+        i1.set(i + 1);
+        b_fp32[i % b_fp32.len()]
+    });
+    let i2 = std::cell::Cell::new(0);
+    let qm = simulate_pass(&cfg, &net, batch, ComputeType::Bf16, &|_| {
+        let i = i2.get();
+        i2.set(i + 1);
+        b_qm[i % b_qm.len()]
+    });
+    let (speed, energy) = gains(&fp32, &qm);
+    println!(
+        "\nResNet18/ImageNet training pass on the modelled accelerator:\n  SFP_QM vs FP32: {speed:.2}x faster, {energy:.2}x more energy-efficient\n  (paper Table II: 2.30x / 6.12x)"
+    );
+}

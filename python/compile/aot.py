@@ -1,0 +1,158 @@
+"""AOT: lower every L2 entry point to HLO *text* + write the manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+(the version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly.  Lowered with ``return_tuple=True``
+so the Rust side always unwraps a tuple.
+
+``artifacts/manifest.json`` records, for every artifact, the ordered input
+and output tensor specs (name/shape/dtype) so the Rust runtime can marshal
+literals without guessing.  Python runs only at build time; ``make
+artifacts`` is a no-op when inputs are unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _param_specs(prefix=""):
+    out = []
+    for nm, s in zip(model.LAYERS, model.WEIGHT_SHAPES):
+        out.append(spec(f"{prefix}w_{nm}", s))
+    for nm, s in zip(model.LAYERS, model.BIAS_SHAPES):
+        out.append(spec(f"{prefix}b_{nm}", s))
+    return out
+
+
+def entry_specs():
+    """(inputs, outputs) per entry point; order == positional order."""
+    L = model.NUM_Q
+    scal_f = lambda n: spec(n, ())
+    scal_i = lambda n: spec(n, (), "i32")
+
+    train_in = (
+        _param_specs()
+        + _param_specs("m_")
+        + [spec("n_w", (L,)), spec("n_a", (L,))]
+        + [
+            spec("x", (model.BATCH, *model.IMAGE)),
+            spec("y", (model.BATCH,), "i32"),
+            scal_f("lr"),
+            scal_f("momentum"),
+            scal_f("lr_n"),
+            scal_f("gamma"),
+            scal_f("mmax"),
+            scal_i("stochastic"),
+            scal_i("step"),
+        ]
+    )
+    train_out = (
+        [spec(f"w_{nm}'", s) for nm, s in zip(model.LAYERS, model.WEIGHT_SHAPES)]
+        + [spec(f"b_{nm}'", s) for nm, s in zip(model.LAYERS, model.BIAS_SHAPES)]
+        + [spec(f"mw_{nm}'", s) for nm, s in zip(model.LAYERS, model.WEIGHT_SHAPES)]
+        + [spec(f"mb_{nm}'", s) for nm, s in zip(model.LAYERS, model.BIAS_SHAPES)]
+        + [
+            spec("n_w'", (L,)),
+            spec("n_a'", (L,)),
+            scal_f("task_loss"),
+            scal_f("total_loss"),
+            spec("n_used_w", (L,), "i32"),
+            spec("n_used_a", (L,), "i32"),
+            spec("act_gecko_bits", (L,)),
+            spec("w_gecko_bits", (L,)),
+            spec("act_zero_frac", (L,)),
+        ]
+    )
+
+    eval_in = _param_specs() + [
+        spec("n_w", (L,)),
+        spec("n_a", (L,)),
+        scal_f("mmax"),
+        spec("x", (model.BATCH, *model.IMAGE)),
+        spec("y", (model.BATCH,), "i32"),
+    ]
+    eval_out = [scal_i("correct"), scal_f("loss")]
+
+    fa_in = _param_specs() + [
+        spec("n_w", (L,)),
+        spec("n_a", (L,)),
+        scal_f("mmax"),
+        scal_i("stochastic"),
+        scal_i("step"),
+        spec("x", (model.BATCH, *model.IMAGE)),
+    ]
+    fa_out = [spec(f"a_{nm}", s) for nm, s in zip(model.LAYERS, model.ACT_SHAPES)]
+
+    return {
+        "train_step": (model.train_step, train_in, train_out),
+        "eval_step": (model.eval_step, eval_in, eval_out),
+        "forward_acts": (model.forward_acts, fa_in, fa_out),
+    }
+
+
+_DT = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt")
+    args = ap.parse_args()
+    art_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(art_dir, exist_ok=True)
+
+    manifest = {
+        "batch": model.BATCH,
+        "image": list(model.IMAGE),
+        "num_classes": model.NUM_CLASSES,
+        "layers": model.LAYERS,
+        "weight_shapes": [list(s) for s in model.WEIGHT_SHAPES],
+        "bias_shapes": [list(s) for s in model.BIAS_SHAPES],
+        "act_shapes": [list(s) for s in model.ACT_SHAPES],
+        "lambda_w": model.LAMBDA_W,
+        "lambda_a": model.LAMBDA_A,
+        "artifacts": {},
+    }
+
+    for name, (fn, ins, outs) in entry_specs().items():
+        shapes = [jax.ShapeDtypeStruct(tuple(s["shape"]), _DT[s["dtype"]]) for s in ins]
+        lowered = jax.jit(fn, keep_unused=True).lower(*shapes)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(art_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {"file": fname, "inputs": ins, "outputs": outs}
+        print(f"lowered {name}: {len(text)} chars, {len(ins)} in / {len(outs)} out")
+
+    with open(os.path.join(art_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    # Back-compat sentinel for the Makefile dependency (model.hlo.txt):
+    with open(args.out, "w") as f:
+        f.write("# see manifest.json; artifacts are per-entry-point\n")
+    print(f"manifest -> {os.path.join(art_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

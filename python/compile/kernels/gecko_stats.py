@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: Gecko exponent-encoding footprint statistics.
+
+Gecko (§IV-C) losslessly compresses the 8-bit biased exponents of stashed
+tensors.  Values stream in groups of 64 treated as an 8x8 matrix; each of
+the 8 columns shares a base exponent (the row-0 exponent, stored raw in
+8 b).  Rows 1..7 are stored as deltas from the column base in
+[magnitude, sign] format, with one 3-bit width field per row sized by a
+leading-one detector over the row's 8 magnitudes.
+
+Bit accounting per group (mirrored bit-exactly by ``rust/src/gecko``):
+
+    row 0           : 8 x 8 b bases                     = 64 b
+    rows 1..7, each : 3 b width + 8 x (w_r + 1) b       (w_r in 0..6)
+                      3 b width + 8 x 8 b raw escape    (w_r >= 7)
+
+The raw escape (width code 7) covers deltas whose magnitude needs 7 or 8
+bits, keeping the scheme lossless over the full exponent range.  This
+kernel computes only the encoded *size* (the paper's on-line footprint
+accounting); the actual bitstream encoder/decoder is the Rust `gecko`
+module on the request path.
+
+Runs as a Pallas kernel so footprint accounting lives in the same fused
+HLO as the training step: blocks of GROUPS_PER_BLOCK x 8 x 8 exponents
+stream through VMEM, one reduction per block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GROUP = 64  # values per Gecko group (8x8)
+GROUPS_PER_BLOCK = 128  # 128 groups = 8192 values = 32 KiB f32 per block
+BASE_ROW_BITS = 64  # 8 bases x 8 b
+WIDTH_FIELD_BITS = 3
+RAW_ESCAPE_WIDTH = 7  # width code meaning "raw 8 b exponents, no sign bit"
+
+
+def _delta_width(mag: jax.Array) -> jax.Array:
+    """Bits needed for a magnitude: 32 - clz(mag), 0 for mag == 0."""
+    return 32 - jax.lax.clz(mag.astype(jnp.int32))
+
+
+def _gecko_kernel(x_ref, o_ref):
+    bits = jax.lax.bitcast_convert_type(x_ref[...], jnp.uint32)
+    exp = ((bits >> jnp.uint32(23)) & jnp.uint32(0xFF)).astype(jnp.int32)
+    base = exp[:, :, 0:1, :]  # (1, G, 1, 8) row-0 bases
+    delta = exp[:, :, 1:, :] - base  # (1, G, 7, 8)
+    width = _delta_width(jnp.abs(delta))
+    w_row = jnp.max(width, axis=3)  # (1, G, 7)
+    row_bits = jnp.where(
+        w_row <= 6,
+        WIDTH_FIELD_BITS + 8 * (w_row + 1),
+        WIDTH_FIELD_BITS + 8 * 8,
+    )
+    o_ref[...] = (BASE_ROW_BITS + jnp.sum(row_bits, axis=2)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("groups_per_block",))
+def gecko_exponent_bits(
+    x: jax.Array, *, groups_per_block: int = GROUPS_PER_BLOCK
+) -> jax.Array:
+    """Total encoded exponent bits for ``x`` under Gecko delta encoding.
+
+    ``x`` is flattened and padded to a multiple of 64 by repeating the
+    tensor's last value (a zero-delta pad, the hardware pads the trailing
+    partial group the same way).  Returns a scalar i32 bit count.
+    """
+    flat = x.reshape(-1)
+    total = flat.shape[0]
+    pad = (-total) % (GROUP * groups_per_block)
+    if pad:
+        flat = jnp.concatenate([flat, jnp.broadcast_to(flat[-1], (pad,))])
+    n_groups = flat.shape[0] // GROUP
+    grid = n_groups // groups_per_block
+    tiled = flat.reshape(grid, groups_per_block, 8, 8)
+
+    per_group = pl.pallas_call(
+        _gecko_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((1, groups_per_block, 8, 8), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, groups_per_block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid, groups_per_block), jnp.int32),
+        interpret=True,
+    )(tiled)
+
+    # Remove the bits attributed to whole groups of pure padding; a partial
+    # trailing group is charged in full, exactly as the hardware would pad.
+    used_groups = (total + GROUP - 1) // GROUP
+    flat_costs = per_group.reshape(-1)
+    keep = jnp.arange(flat_costs.shape[0]) < used_groups
+    return jnp.sum(jnp.where(keep, flat_costs, 0))

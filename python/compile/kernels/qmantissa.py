@@ -1,0 +1,146 @@
+"""L1 Pallas kernel: mantissa-container quantization (Schrödinger's FP Eq. 5-6).
+
+The paper's Quantum Mantissa / BitChop datapath truncates the least
+significant mantissa bits of an IEEE-754 float while leaving sign and
+exponent untouched (Eq. 5):
+
+    Q(M, n) = M & ((2^n - 1) << (m - n))
+
+where ``m`` is the container's mantissa length (23 for FP32, 7 for
+BFloat16-contained-in-FP32) and ``n`` the number of mantissa bits kept.
+
+The kernel operates on the raw f32 bit pattern: everything is expressed as
+``bitcast -> mask -> bitcast`` so it lowers to pure VPU (elementwise) ops on
+TPU and never perturbs the MXU matmul fusion around it.  The mask depends
+only on a per-tensor scalar ``n``, matching the paper's observation that
+per-tensor stochastic-bitlength granularity is sufficient (§IV-A-3).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): tensors are flattened and
+tiled into ``BLOCK``-element VMEM blocks (multiples of the 8x128 VPU lane
+layout); the HBM<->VMEM schedule is expressed with a 1-D grid BlockSpec.
+``interpret=True`` is mandatory in this environment (CPU PJRT cannot run
+Mosaic custom-calls) — structure, not wallclock, is what we optimize here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Elements per VMEM block: 64 sublanes x 128 lanes = 8192 f32 = 32 KiB per
+# buffer; in+out double-buffered comfortably fits the ~16 MiB VMEM budget.
+BLOCK = 8192
+
+# f32 container constants.
+F32_MANT_BITS = 23
+BF16_MANT_BITS = 7
+FULL_MASK = 0xFFFF_FFFF
+
+
+def _quant_kernel(n_ref, x_ref, o_ref):
+    """Zero out all but the top ``n`` mantissa bits of each f32 lane."""
+    n = n_ref[0]
+    bits = jax.lax.bitcast_convert_type(x_ref[...], jnp.uint32)
+    # shift in [0, 23]: n == 23 keeps everything, n == 0 keeps sign+exponent.
+    shift = (F32_MANT_BITS - n).astype(jnp.uint32)
+    mask = jnp.uint32(FULL_MASK) << shift
+    o_ref[...] = jax.lax.bitcast_convert_type(bits & mask, jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def mantissa_quant(x: jax.Array, nbits: jax.Array, *, block: int = BLOCK) -> jax.Array:
+    """Truncate ``x``'s mantissas to ``nbits`` bits (Eq. 5), any shape.
+
+    ``nbits`` is a traced i32 scalar so the same compiled artifact serves
+    every bitlength — the Rust coordinator owns the adaptation policy.
+    For a BFloat16 container pass ``nbits <= 7``; the f32 bit pattern of a
+    bf16 value is recovered exactly because ``23 - n >= 16`` then.
+    """
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    total = flat.shape[0]
+    pad = (-total) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    grid = flat.shape[0] // block
+    tiled = flat.reshape(grid, block)
+    n_arr = jnp.asarray(nbits, jnp.int32).reshape(1)
+
+    out = pl.pallas_call(
+        _quant_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid, block), jnp.float32),
+        interpret=True,
+    )(n_arr, tiled)
+
+    return out.reshape(-1)[:total].reshape(orig_shape)
+
+
+def stochastic_nbits(n: jax.Array, u: jax.Array, mmax: jax.Array) -> jax.Array:
+    """Fractional-bitlength resolution (Eq. 6).
+
+    ``n`` is the real-valued learnable bitlength, ``u`` a uniform [0,1)
+    sample drawn once per tensor per step, ``mmax`` the container mantissa
+    length (23. or 7.).  Returns the integer bitlength actually used:
+    floor(n)+1 with probability frac(n), floor(n) otherwise, clipped to
+    [0, mmax].
+    """
+    nc = jnp.clip(n, 0.0, mmax)
+    ni = jnp.floor(nc)
+    frac = nc - ni
+    return (ni + (u < frac).astype(jnp.float32)).astype(jnp.int32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def fake_quant(x, n, u, mmax):
+    """Straight-through fake-quantization with a learnable bitlength.
+
+    Forward: stochastic integer bitlength from (n, u), mantissa truncation
+    via the Pallas kernel.  Backward: STE for ``x`` (gradient passes
+    through unchanged); for ``n`` the expected-value derivative
+    d E[Q(x,n)] / dn = Q(x, floor(n)+1) - Q(x, floor(n)) contracted with
+    the output cotangent (§IV-A-1, the "function of the weight values and
+    gradients" overhead the paper describes).  ``u`` and ``mmax`` get zero
+    gradients.
+    """
+    n_used = stochastic_nbits(n, u, mmax)
+    return mantissa_quant(x, n_used)
+
+
+def _fake_quant_fwd(x, n, u, mmax):
+    y = fake_quant(x, n, u, mmax)
+    return y, (x, n, mmax)
+
+
+def _mask_ref(x, n_int):
+    """Pure-jnp Eq. 5 for the bwd pass (cheap, avoids a second kernel)."""
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    shift = (F32_MANT_BITS - n_int).astype(jnp.uint32)
+    mask = jnp.uint32(FULL_MASK) << shift
+    return jax.lax.bitcast_convert_type(bits & mask, jnp.float32)
+
+
+def _fake_quant_bwd(res, g):
+    x, n, mmax = res
+    nc = jnp.clip(n, 0.0, mmax)
+    ni = jnp.floor(nc).astype(jnp.int32)
+    mmax_i = mmax.astype(jnp.int32)
+    q_lo = _mask_ref(x, ni)
+    q_hi = _mask_ref(x, jnp.minimum(ni + 1, mmax_i))
+    # d/dn of the expected quantized value: the value of the next mantissa
+    # bit.  Zero when clipped at the container ceiling.
+    g_n = jnp.sum(g * (q_hi - q_lo))
+    at_ceiling = (nc >= mmax).astype(jnp.float32)
+    g_n = g_n * (1.0 - at_ceiling)
+    return g, g_n, jnp.zeros_like(n), jnp.zeros_like(mmax)
+
+
+fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)

@@ -1,0 +1,75 @@
+"""Pure-jnp / numpy oracles for the Pallas kernels.
+
+Every kernel in this package must be bit-exact against its oracle here;
+``python/tests`` sweeps shapes, dtype containers, and bitlengths with
+hypothesis.  The same reference semantics are re-implemented in Rust
+(``rust/src/formats``, ``rust/src/gecko``) and cross-checked through
+golden files, so this module is the single source of truth for the
+numeric format.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32_MANT_BITS = 23
+
+
+def mantissa_quant_ref(x: jax.Array, nbits) -> jax.Array:
+    """Eq. 5: keep the top ``nbits`` mantissa bits, truncating the rest."""
+    bits = jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.float32), jnp.uint32)
+    shift = jnp.uint32(F32_MANT_BITS) - jnp.asarray(nbits, jnp.uint32)
+    mask = jnp.uint32(0xFFFFFFFF) << shift
+    return jax.lax.bitcast_convert_type(bits & mask, jnp.float32)
+
+
+def mantissa_quant_np(x: np.ndarray, nbits: int) -> np.ndarray:
+    """NumPy twin of :func:`mantissa_quant_ref` (golden-file generation)."""
+    bits = np.asarray(x, np.float32).view(np.uint32)
+    mask = np.uint32(0xFFFFFFFF << (F32_MANT_BITS - int(nbits)) & 0xFFFFFFFF)
+    return (bits & mask).view(np.float32)
+
+
+def gecko_exponent_bits_np(x: np.ndarray) -> int:
+    """Bit-count oracle for Gecko delta encoding (see gecko_stats.py)."""
+    flat = np.asarray(x, np.float32).reshape(-1)
+    total = flat.shape[0]
+    pad = (-total) % 64
+    if pad:
+        flat = np.concatenate([flat, np.broadcast_to(flat[-1], (pad,))])
+    exps = ((flat.view(np.uint32) >> 23) & 0xFF).astype(np.int64)
+    groups = exps.reshape(-1, 8, 8)
+    bits = 0
+    for g in groups:
+        bits += 64  # row-0 bases
+        delta = g[1:] - g[0:1]
+        mag = np.abs(delta)
+        width = np.where(mag == 0, 0, np.floor(np.log2(np.maximum(mag, 1))) + 1)
+        w_row = width.max(axis=1).astype(np.int64)
+        row = np.where(w_row <= 6, 3 + 8 * (w_row + 1), 3 + 64)
+        bits += int(row.sum())
+    return int(bits)
+
+
+def gecko_fixed_bias_bits_np(x: np.ndarray, bias: int = 127, group: int = 8) -> int:
+    """Bit-count oracle for Gecko's fixed-bias mode (§IV-C, groups of 8)."""
+    flat = np.asarray(x, np.float32).reshape(-1)
+    total = flat.shape[0]
+    pad = (-total) % group
+    if pad:
+        flat = np.concatenate([flat, np.broadcast_to(flat[-1], (pad,))])
+    exps = ((flat.view(np.uint32) >> 23) & 0xFF).astype(np.int64)
+    delta = exps.reshape(-1, group) - bias
+    mag = np.abs(delta)
+    width = np.where(mag == 0, 0, np.floor(np.log2(np.maximum(mag, 1))) + 1)
+    w_g = width.max(axis=1).astype(np.int64)
+    per_group = np.where(w_g <= 6, 3 + group * (w_g + 1), 3 + group * 8)
+    return int(per_group.sum())
+
+
+def exponent_histogram_np(x: np.ndarray) -> np.ndarray:
+    """256-bin histogram of biased exponents (Fig. 9 oracle)."""
+    exps = (np.asarray(x, np.float32).reshape(-1).view(np.uint32) >> 23) & 0xFF
+    return np.bincount(exps, minlength=256)

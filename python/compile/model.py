@@ -1,0 +1,297 @@
+"""L2: JAX model fwd/bwd with Schrödinger's FP fake-quantization.
+
+A ResNet-style CNN (the paper evaluates ResNet18/ImageNet; per DESIGN.md
+§2 we train a shape-reduced residual CNN end-to-end through the real
+three-layer stack and drive the ImageNet-scale tables from layer traces).
+
+Every stashed tensor — each conv/fc weight and each post-activation — is
+wrapped in :func:`kernels.qmantissa.fake_quant`, the straight-through
+stochastic mantissa truncation whose bitlengths are themselves inputs to
+the compiled step.  The Rust coordinator owns the adaptation policy:
+
+* Quantum Mantissa: pass ``lr_n > 0``, ``stochastic=1``; the per-tensor
+  bitlengths descend under the Eq. 7 footprint-weighted penalty.
+* BitChop: pass ``lr_n = 0`` and set all activation bitlengths to the
+  controller's network-wide ``n`` (weights to the container max).
+* Baselines: all bitlengths = container max (23 for FP32, 7 for BF16).
+
+The exported entry points take and return *flat positional* tensors; the
+exact order is recorded in ``artifacts/manifest.json`` by ``aot.py``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gecko_stats import gecko_exponent_bits
+from .kernels.qmantissa import fake_quant, stochastic_nbits
+
+# ----------------------------------------------------------------------------
+# Architecture: input 16x16x3, 10 classes.
+#   c0  : conv3x3  3->16                 (a0: 16x16x16)
+#   b1c1: conv3x3 16->16                 (a1)
+#   b1c2: conv3x3 16->16 + skip(a0)      (a2)
+#   d1  : conv3x3 s2 16->32              (a3: 8x8x32)
+#   b2c1: conv3x3 32->32                 (a4)
+#   b2c2: conv3x3 32->32 + skip(a3)      (a5)
+#   gap + fc 32->10                      (a6: pooled features, stashed)
+# ----------------------------------------------------------------------------
+
+IMAGE = (16, 16, 3)
+NUM_CLASSES = 10
+BATCH = 64
+
+LAYERS = ["c0", "b1c1", "b1c2", "d1", "b2c1", "b2c2", "fc"]
+NUM_Q = len(LAYERS)  # quantized weight tensors == quantized activations
+
+WEIGHT_SHAPES = [
+    (3, 3, 3, 16),
+    (3, 3, 16, 16),
+    (3, 3, 16, 16),
+    (3, 3, 16, 32),
+    (3, 3, 32, 32),
+    (3, 3, 32, 32),
+    (32, NUM_CLASSES),
+]
+BIAS_SHAPES = [(16,), (16,), (16,), (32,), (32,), (32,), (NUM_CLASSES,)]
+
+ACT_SHAPES = [
+    (BATCH, 16, 16, 16),
+    (BATCH, 16, 16, 16),
+    (BATCH, 16, 16, 16),
+    (BATCH, 8, 8, 32),
+    (BATCH, 8, 8, 32),
+    (BATCH, 8, 8, 32),
+    (BATCH, 32),
+]
+
+
+def _prod(s):
+    out = 1
+    for d in s:
+        out *= d
+    return out
+
+
+# Eq. 7 footprint weights λ_i: each tensor's share of the total stashed
+# footprint (elements, since every element carries the same container).
+_W_ELEMS = [_prod(s) for s in WEIGHT_SHAPES]
+_A_ELEMS = [_prod(s) for s in ACT_SHAPES]
+_TOTAL = float(sum(_W_ELEMS) + sum(_A_ELEMS))
+LAMBDA_W = [e / _TOTAL for e in _W_ELEMS]
+LAMBDA_A = [e / _TOTAL for e in _A_ELEMS]
+
+
+class StepHyper(NamedTuple):
+    lr: jax.Array  # SGD learning rate
+    momentum: jax.Array  # SGD momentum
+    lr_n: jax.Array  # bitlength learning rate (0 disables QM)
+    gamma: jax.Array  # Eq. 7 regularizer strength
+    mmax: jax.Array  # container mantissa bits as f32 (23. or 7.)
+    stochastic: jax.Array  # i32: 1 = stochastic fractional bitlengths
+    step: jax.Array  # i32: PRNG folding counter
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _quantize(x, n, u, hyper: StepHyper):
+    """fake_quant with the stochastic switch: deterministic = u pinned to 0
+    (so floor(n) is used) — matches the paper's round-up deployment when the
+    coordinator passes already-rounded integer bitlengths."""
+    u_eff = jnp.where(hyper.stochastic == 1, u, jnp.float32(0.0))
+    return fake_quant(x, n, u_eff, hyper.mmax)
+
+
+def forward(params, n_w, n_a, x, hyper: StepHyper):
+    """Forward pass; returns (logits, activations list post-quant)."""
+    ws = params["w"]
+    bs = params["b"]
+    key = jax.random.fold_in(jax.random.PRNGKey(0x5FB0), hyper.step)
+    us = jax.random.uniform(key, (2 * NUM_Q,))
+
+    def qw(i):
+        return _quantize(ws[i], n_w[i], us[i], hyper)
+
+    def qa(i, a):
+        return _quantize(a, n_a[i], us[NUM_Q + i], hyper)
+
+    acts = []
+    a = qa(0, jax.nn.relu(_conv(x, qw(0)) + bs[0]))
+    acts.append(a)
+    h = qa(1, jax.nn.relu(_conv(a, qw(1)) + bs[1]))
+    acts.append(h)
+    a = qa(2, jax.nn.relu(_conv(h, qw(2)) + bs[2] + a))
+    acts.append(a)
+    a = qa(3, jax.nn.relu(_conv(a, qw(3), stride=2) + bs[3]))
+    acts.append(a)
+    h = qa(4, jax.nn.relu(_conv(a, qw(4)) + bs[4]))
+    acts.append(h)
+    a = qa(5, jax.nn.relu(_conv(h, qw(5)) + bs[5] + a))
+    acts.append(a)
+    pooled = qa(6, jnp.mean(a, axis=(1, 2)))
+    acts.append(pooled)
+    logits = pooled @ qw(6) + bs[6]
+    return logits, acts
+
+
+def task_loss(params, n_w, n_a, x, y, hyper: StepHyper):
+    logits, acts = forward(params, n_w, n_a, x, hyper)
+    logp = jax.nn.log_softmax(logits)
+    ce = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    return ce, acts
+
+
+def total_loss(params, n_w, n_a, x, y, hyper: StepHyper):
+    """Eq. 7: L = L_task + γ Σ λ_i n_i (footprint-weighted bit penalty)."""
+    ce, acts = task_loss(params, n_w, n_a, x, y, hyper)
+    lam_w = jnp.asarray(LAMBDA_W, jnp.float32)
+    lam_a = jnp.asarray(LAMBDA_A, jnp.float32)
+    penalty = jnp.sum(lam_w * jnp.clip(n_w, 0.0, hyper.mmax)) + jnp.sum(
+        lam_a * jnp.clip(n_a, 0.0, hyper.mmax)
+    )
+    return ce + hyper.gamma * penalty, (ce, acts)
+
+
+# ----------------------------------------------------------------------------
+# Entry points (flat positional signatures; see aot.py for the manifest).
+# ----------------------------------------------------------------------------
+
+
+def _unflatten_params(flat):
+    ws = list(flat[: len(WEIGHT_SHAPES)])
+    bs = list(flat[len(WEIGHT_SHAPES) : 2 * len(WEIGHT_SHAPES)])
+    return {"w": ws, "b": bs}
+
+
+def _stats(acts, params):
+    """Per-layer footprint statistics the coordinator aggregates.
+
+    Returns (act_gecko_bits, w_gecko_bits, act_zero_frac) — the Gecko
+    encoded exponent size for every stashed tensor plus each activation's
+    zero fraction (feeds the JS / GIST++ baselines of Fig. 13)."""
+    a_bits = jnp.stack([gecko_exponent_bits(a) for a in acts]).astype(jnp.float32)
+    w_bits = jnp.stack([gecko_exponent_bits(w) for w in params["w"]]).astype(
+        jnp.float32
+    )
+    zfrac = jnp.stack([jnp.mean((a == 0).astype(jnp.float32)) for a in acts])
+    return a_bits, w_bits, zfrac
+
+
+def train_step(*args):
+    """One SGD+momentum step with fake-quantized stash tensors.
+
+    Flat inputs (order fixed, mirrored in the manifest):
+      w[7], b[7], mw[7], mb[7]      params + momentum buffers
+      n_w (7,), n_a (7,)            learnable bitlengths
+      x (B,16,16,3) f32, y (B,) i32
+      lr, momentum, lr_n, gamma, mmax   f32 scalars
+      stochastic, step                  i32 scalars
+    Flat outputs:
+      w'[7], b'[7], mw'[7], mb'[7], n_w', n_a',
+      task_loss, total_loss,
+      n_used_w (7,) i32, n_used_a (7,) i32,
+      act_gecko_bits (7,), w_gecko_bits (7,), act_zero_frac (7,)
+    """
+    nw = len(WEIGHT_SHAPES)
+    params = _unflatten_params(args[: 2 * nw])
+    mom = _unflatten_params(args[2 * nw : 4 * nw])
+    n_w, n_a, x, y = args[4 * nw : 4 * nw + 4]
+    lr, momentum, lr_n, gamma, mmax, stochastic, step = args[4 * nw + 4 :]
+    hyper = StepHyper(lr, momentum, lr_n, gamma, mmax, stochastic, step)
+
+    grad_fn = jax.value_and_grad(total_loss, argnums=(0, 1, 2), has_aux=True)
+    (tot, (ce, acts)), (g_p, g_nw, g_na) = grad_fn(params, n_w, n_a, x, y, hyper)
+
+    def upd(p, m, g):
+        m2 = momentum * m + g
+        return p - lr * m2, m2
+
+    new_w, new_mw = zip(
+        *[upd(p, m, g) for p, m, g in zip(params["w"], mom["w"], g_p["w"])]
+    )
+    new_b, new_mb = zip(
+        *[upd(p, m, g) for p, m, g in zip(params["b"], mom["b"], g_p["b"])]
+    )
+
+    n_w2 = jnp.clip(n_w - lr_n * g_nw, 0.0, mmax)
+    n_a2 = jnp.clip(n_a - lr_n * g_na, 0.0, mmax)
+
+    # Bitlengths actually used this step (for exact footprint accounting).
+    key = jax.random.fold_in(jax.random.PRNGKey(0x5FB0), step)
+    us = jax.random.uniform(key, (2 * NUM_Q,))
+    u_eff = jnp.where(stochastic == 1, us, jnp.zeros_like(us))
+    n_used_w = stochastic_nbits(n_w, u_eff[:NUM_Q], mmax)
+    n_used_a = stochastic_nbits(n_a, u_eff[NUM_Q:], mmax)
+
+    a_bits, w_bits, zfrac = _stats(acts, params)
+
+    return (
+        *new_w,
+        *new_b,
+        *new_mw,
+        *new_mb,
+        n_w2,
+        n_a2,
+        ce,
+        tot,
+        n_used_w,
+        n_used_a,
+        a_bits,
+        w_bits,
+        zfrac,
+    )
+
+
+def eval_step(*args):
+    """Validation: deployment-style deterministic quantization (bitlengths
+    rounded up, §IV-A-4).  Inputs: w[7], b[7], n_w, n_a, mmax, x, y.
+    Outputs: (correct_count i32, mean_ce f32)."""
+    nw = len(WEIGHT_SHAPES)
+    params = _unflatten_params(args[: 2 * nw])
+    n_w, n_a, mmax, x, y = args[2 * nw :]
+    hyper = StepHyper(
+        jnp.float32(0),
+        jnp.float32(0),
+        jnp.float32(0),
+        jnp.float32(0),
+        mmax,
+        jnp.int32(0),
+        jnp.int32(0),
+    )
+    logits, _ = forward(params, jnp.ceil(n_w), jnp.ceil(n_a), x, hyper)
+    correct = jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.int32))
+    logp = jax.nn.log_softmax(logits)
+    ce = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    return correct, ce
+
+
+def forward_acts(*args):
+    """Dump the post-quantization stashed activations for one batch — the
+    Rust side feeds these through the Gecko/SFP codecs (Figs. 9/10/12/13)
+    and the codec criterion benches.  Inputs: w[7], b[7], n_w, n_a, mmax,
+    stochastic, step, x.  Outputs: a0..a6."""
+    nw = len(WEIGHT_SHAPES)
+    params = _unflatten_params(args[: 2 * nw])
+    n_w, n_a, mmax, stochastic, step, x = args[2 * nw :]
+    hyper = StepHyper(
+        jnp.float32(0),
+        jnp.float32(0),
+        jnp.float32(0),
+        jnp.float32(0),
+        mmax,
+        stochastic,
+        step,
+    )
+    _, acts = forward(params, n_w, n_a, x, hyper)
+    return tuple(acts)

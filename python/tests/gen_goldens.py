@@ -1,0 +1,39 @@
+"""Regenerate the cross-language golden file consumed by rust/tests/golden.rs."""
+
+import json
+
+import numpy as np
+
+from compile.kernels import ref
+
+
+def main() -> None:
+    rng = np.random.default_rng(0x60)
+    vals = (rng.standard_normal(512) * np.exp(rng.standard_normal(512) * 2)).astype(
+        np.float32
+    )
+    vals[::17] = 0.0
+    vals[3] = 1e30
+    vals[7] = 1e-30  # exponent extremes
+
+    golden = {
+        "values_bits": [int(b) for b in vals.view(np.uint32)],
+        "quant": {
+            str(n): [int(b) for b in ref.mantissa_quant_np(vals, n).view(np.uint32)]
+            for n in [0, 1, 3, 7, 12, 23]
+        },
+        "gecko_delta_bits": ref.gecko_exponent_bits_np(vals),
+        "gecko_fixed_bits": ref.gecko_fixed_bias_bits_np(vals),
+        "exp_histogram_nonzero": {
+            str(i): int(c)
+            for i, c in enumerate(ref.exponent_histogram_np(vals))
+            if c > 0
+        },
+    }
+    with open("tests/golden/format_golden.json", "w") as f:
+        json.dump(golden, f)
+    print(f"golden written: {len(vals)} values")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,213 @@
+"""Kernel-vs-oracle correctness: the CORE numeric-format signal.
+
+Hypothesis sweeps shapes and bitlengths; every comparison is bit-exact
+(u32 view equality), not allclose — Eq. 5 truncation is deterministic.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.qmantissa import (
+    BLOCK,
+    fake_quant,
+    mantissa_quant,
+    stochastic_nbits,
+)
+from compile.kernels.gecko_stats import gecko_exponent_bits
+from compile.kernels import ref
+
+
+def _rand(shape, seed=0, scale=10.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------- mantissa
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(min_value=0, max_value=23),
+    total=st.integers(min_value=1, max_value=3000),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_mantissa_quant_matches_oracle(n, total, seed):
+    x = _rand((total,), seed)
+    got = np.asarray(mantissa_quant(jnp.asarray(x), n))
+    want = ref.mantissa_quant_np(x, n)
+    np.testing.assert_array_equal(got.view(np.uint32), want.view(np.uint32))
+
+
+@pytest.mark.parametrize("n", [0, 1, 3, 7, 12, 23])
+def test_mantissa_quant_multiblock(n):
+    """Shapes spanning multiple Pallas grid blocks, non-multiple remainder."""
+    x = _rand((2 * BLOCK + 77,), seed=n)
+    got = np.asarray(mantissa_quant(jnp.asarray(x), n))
+    want = ref.mantissa_quant_np(x, n)
+    np.testing.assert_array_equal(got.view(np.uint32), want.view(np.uint32))
+
+
+@pytest.mark.parametrize("n", [0, 4, 7])
+def test_bf16_container_path(n):
+    """n <= 7 zeroes at least the lower 16 bits => valid bf16 payloads."""
+    x = _rand((513,), seed=3)
+    got = np.asarray(mantissa_quant(jnp.asarray(x), n)).view(np.uint32)
+    assert (got & 0xFFFF == 0).all()
+
+
+def test_quant_idempotent():
+    x = _rand((1000,), 7)
+    q1 = np.asarray(mantissa_quant(jnp.asarray(x), 5))
+    q2 = np.asarray(mantissa_quant(jnp.asarray(q1), 5))
+    np.testing.assert_array_equal(q1.view(np.uint32), q2.view(np.uint32))
+
+
+def test_quant_full_width_is_identity():
+    x = _rand((1000,), 9)
+    q = np.asarray(mantissa_quant(jnp.asarray(x), 23))
+    np.testing.assert_array_equal(q.view(np.uint32), x.view(np.uint32))
+
+
+def test_quant_preserves_sign_and_exponent():
+    x = _rand((4096,), 11)
+    q = np.asarray(mantissa_quant(jnp.asarray(x), 0)).view(np.uint32)
+    np.testing.assert_array_equal(q, x.view(np.uint32) & 0xFF800000)
+
+
+def test_quant_error_bound():
+    """|x - Q(x,n)| < 2^(e - n + 1): truncation drops < 1 ulp at bit n."""
+    x = _rand((4096,), 13)
+    for n in [1, 4, 8]:
+        q = np.asarray(mantissa_quant(jnp.asarray(x), n))
+        exp = np.floor(np.log2(np.abs(x)))
+        bound = 2.0 ** (exp - n)
+        assert (np.abs(x - q) <= bound + 1e-30).all()
+
+
+# ------------------------------------------------------------- stochastic n
+
+
+def test_stochastic_nbits_integer_passthrough():
+    n = jnp.asarray([0.0, 3.0, 23.0])
+    out = stochastic_nbits(n, jnp.asarray([0.99, 0.5, 0.0]), jnp.float32(23.0))
+    np.testing.assert_array_equal(np.asarray(out), [0, 3, 23])
+
+
+def test_stochastic_nbits_fractional():
+    n = jnp.float32(4.3)
+    lo = stochastic_nbits(n, jnp.float32(0.9), jnp.float32(23.0))  # 0.9 >= .3
+    hi = stochastic_nbits(n, jnp.float32(0.1), jnp.float32(23.0))  # 0.1 < .3
+    assert int(lo) == 4 and int(hi) == 5
+
+
+def test_stochastic_nbits_clips():
+    out = stochastic_nbits(
+        jnp.asarray([-3.0, 99.0]), jnp.asarray([0.5, 0.5]), jnp.float32(7.0)
+    )
+    np.testing.assert_array_equal(np.asarray(out), [0, 7])
+
+
+# NOTE: st.floats is unusable in this environment (FTZ python build), so
+# fractional bitlengths are generated from integer milli-bits.
+@settings(max_examples=40, deadline=None)
+@given(
+    nf_milli=st.integers(min_value=0, max_value=23_000),
+    u_milli=st.integers(min_value=0, max_value=999),
+)
+def test_stochastic_nbits_bracket(nf_milli, u_milli):
+    nf, u = nf_milli / 1000.0, u_milli / 1000.0
+    out = int(stochastic_nbits(jnp.float32(nf), jnp.float32(u), jnp.float32(23.0)))
+    lo = int(np.floor(np.float32(nf)))
+    assert lo <= out <= min(lo + 1, 23)
+
+
+# ---------------------------------------------------------------- gradients
+
+
+def test_fake_quant_ste_passthrough():
+    x = jnp.asarray(_rand((256,), 5))
+    g = jax.grad(lambda v: jnp.sum(fake_quant(v, jnp.float32(4.0), jnp.float32(0.0), jnp.float32(23.0)) * 3.0))(x)
+    np.testing.assert_allclose(np.asarray(g), 3.0)
+
+
+def test_fake_quant_bitlength_gradient_sign():
+    """More bits => closer to x => lower L2 error: d||x-q||^2/dn < 0."""
+    x = jnp.asarray(_rand((4096,), 6))
+
+    def err(n):
+        q = fake_quant(x, n, jnp.float32(0.0), jnp.float32(23.0))
+        return jnp.sum((jax.lax.stop_gradient(x) - q) ** 2)
+
+    g = jax.grad(err)(jnp.float32(3.0))
+    assert float(g) < 0.0
+
+
+def test_fake_quant_gradient_zero_at_ceiling():
+    x = jnp.asarray(_rand((128,), 8))
+    g = jax.grad(
+        lambda n: jnp.sum(fake_quant(x, n, jnp.float32(0.0), jnp.float32(23.0)) ** 2)
+    )(jnp.float32(23.0))
+    assert float(g) == 0.0
+
+
+def test_fake_quant_expected_value_gradient():
+    """g_n equals <g, Q(x, n+1) - Q(x, n)> for integer n."""
+    x = jnp.asarray(_rand((512,), 4))
+    n0 = 5
+
+    def f(n):
+        return jnp.sum(fake_quant(x, n, jnp.float32(0.9), jnp.float32(23.0)))
+
+    g = float(jax.grad(f)(jnp.float32(n0)))
+    q_lo = ref.mantissa_quant_np(np.asarray(x), n0)
+    q_hi = ref.mantissa_quant_np(np.asarray(x), n0 + 1)
+    np.testing.assert_allclose(g, float((q_hi - q_lo).sum()), rtol=1e-5)
+
+
+# -------------------------------------------------------------- gecko stats
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    total=st.integers(min_value=1, max_value=5000),
+    seed=st.integers(min_value=0, max_value=2**16),
+    scale=st.sampled_from([1e-3, 1.0, 1e4]),
+)
+def test_gecko_bits_matches_oracle(total, seed, scale):
+    x = _rand((total,), seed, scale)
+    got = int(gecko_exponent_bits(jnp.asarray(x)))
+    assert got == ref.gecko_exponent_bits_np(x)
+
+
+def test_gecko_bits_constant_tensor_minimal():
+    """All-equal exponents -> every delta row is width 0: 64 + 7*(3+8) b."""
+    x = np.full((64,), 1.5, np.float32)
+    assert int(gecko_exponent_bits(jnp.asarray(x))) == 64 + 7 * (3 + 8)
+
+
+def test_gecko_bits_never_worse_than_escape():
+    x = _rand((4096,), 21, scale=1e30)  # extreme exponents
+    got = int(gecko_exponent_bits(jnp.asarray(x)))
+    groups = 4096 // 64
+    assert got <= groups * (64 + 7 * (3 + 64))
+
+
+def test_gecko_bits_beats_raw_on_trained_like_values():
+    """Gaussian values (trained-tensor-like): compressed < 8 b/exponent."""
+    x = _rand((8192,), 22, scale=1.0)
+    got = int(gecko_exponent_bits(jnp.asarray(x)))
+    assert got < 8192 * 8
+
+
+def test_gecko_zeros_tensor():
+    x = np.zeros((300,), np.float32)
+    assert int(gecko_exponent_bits(jnp.asarray(x))) == ref.gecko_exponent_bits_np(x)
+
+
+def test_fixed_bias_oracle_sane():
+    x = _rand((1024,), 23)
+    bits = ref.gecko_fixed_bias_bits_np(x)
+    assert 0 < bits < 1024 * (8 + 1)

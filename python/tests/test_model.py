@@ -1,0 +1,192 @@
+"""L2 model: shapes, training dynamics, entry-point contracts."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import compile.model as M
+
+
+def _init(seed=0):
+    rng = np.random.default_rng(seed)
+    ws = [
+        jnp.asarray(
+            rng.standard_normal(s).astype(np.float32)
+            * np.sqrt(2.0 / np.prod(s[:-1]))
+        )
+        for s in M.WEIGHT_SHAPES
+    ]
+    bs = [jnp.zeros(s, jnp.float32) for s in M.BIAS_SHAPES]
+    return ws, bs
+
+
+def _batch(seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((M.BATCH, *M.IMAGE)).astype(np.float32)
+    y = rng.integers(0, M.NUM_CLASSES, M.BATCH).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def _hyper(lr=0.05, lr_n=0.0, gamma=0.0, mmax=23.0, stochastic=0, step=0):
+    return (
+        jnp.float32(lr),
+        jnp.float32(0.9),
+        jnp.float32(lr_n),
+        jnp.float32(gamma),
+        jnp.float32(mmax),
+        jnp.int32(stochastic),
+        jnp.int32(step),
+    )
+
+
+def _run_step(ws, bs, mw, mb, n_w, n_a, x, y, **kw):
+    return M.train_step(*ws, *bs, *mw, *mb, n_w, n_a, x, y, *_hyper(**kw))
+
+
+class TestForward:
+    def test_activation_shapes(self):
+        ws, bs = _init()
+        x, _ = _batch()
+        n = jnp.full((M.NUM_Q,), 23.0)
+        hyper = M.StepHyper(*_hyper())
+        logits, acts = M.forward({"w": ws, "b": bs}, n, n, x, hyper)
+        assert logits.shape == (M.BATCH, M.NUM_CLASSES)
+        assert [a.shape for a in acts] == [tuple(s) for s in M.ACT_SHAPES]
+
+    def test_activations_nonnegative_post_relu(self):
+        ws, bs = _init(1)
+        x, _ = _batch(1)
+        n = jnp.full((M.NUM_Q,), 23.0)
+        _, acts = M.forward({"w": ws, "b": bs}, n, n, x, M.StepHyper(*_hyper()))
+        for a in acts[:-1]:  # pooled features are means of ReLU outputs too
+            assert float(jnp.min(a)) >= 0.0
+
+    def test_quantized_forward_bits_actually_truncated(self):
+        ws, bs = _init(2)
+        x, _ = _batch(2)
+        n = jnp.full((M.NUM_Q,), 3.0)
+        _, acts = M.forward({"w": ws, "b": bs}, n, n, x, M.StepHyper(*_hyper()))
+        bits = np.asarray(acts[0]).view(np.uint32)
+        assert (bits & ((1 << 20) - 1) == 0).all()  # 23-3 low bits zero
+
+
+class TestTrainStep:
+    def test_output_count_and_shapes(self):
+        ws, bs = _init()
+        mw = [jnp.zeros_like(w) for w in ws]
+        mb = [jnp.zeros_like(b) for b in bs]
+        n = jnp.full((M.NUM_Q,), 23.0)
+        x, y = _batch()
+        out = _run_step(ws, bs, mw, mb, n, n, x, y)
+        assert len(out) == 4 * M.NUM_Q + 9
+        for i, s in enumerate(M.WEIGHT_SHAPES):
+            assert out[i].shape == tuple(s)
+
+    def test_loss_decreases_fullprec(self):
+        ws, bs = _init(3)
+        mw = [jnp.zeros_like(w) for w in ws]
+        mb = [jnp.zeros_like(b) for b in bs]
+        n = jnp.full((M.NUM_Q,), 23.0)
+        x, y = _batch(3)
+        losses = []
+        for step in range(15):
+            out = _run_step(ws, bs, mw, mb, n, n, x, y, step=step)
+            ws, bs = list(out[:7]), list(out[7:14])
+            mw, mb = list(out[14:21]), list(out[21:28])
+            losses.append(float(out[30]))
+        assert losses[-1] < losses[0] * 0.8
+
+    def test_bitlengths_descend_under_penalty(self):
+        ws, bs = _init(4)
+        mw = [jnp.zeros_like(w) for w in ws]
+        mb = [jnp.zeros_like(b) for b in bs]
+        n_w = jnp.full((M.NUM_Q,), 23.0)
+        n_a = jnp.full((M.NUM_Q,), 23.0)
+        x, y = _batch(4)
+        for step in range(10):
+            out = _run_step(
+                ws, bs, mw, mb, n_w, n_a, x, y,
+                lr_n=5.0, gamma=0.1, stochastic=1, step=step,
+            )
+            ws, bs = list(out[:7]), list(out[7:14])
+            mw, mb = list(out[14:21]), list(out[21:28])
+            n_w, n_a = out[28], out[29]
+        assert float(jnp.mean(n_a)) < 23.0
+        assert float(jnp.mean(n_w)) < 23.0
+
+    def test_bitlengths_frozen_when_lr_n_zero(self):
+        ws, bs = _init(5)
+        mw = [jnp.zeros_like(w) for w in ws]
+        mb = [jnp.zeros_like(b) for b in bs]
+        n_a = jnp.asarray([4.0] * M.NUM_Q)
+        n_w = jnp.full((M.NUM_Q,), 23.0)
+        x, y = _batch(5)
+        out = _run_step(ws, bs, mw, mb, n_w, n_a, x, y, lr_n=0.0, gamma=0.1)
+        np.testing.assert_array_equal(np.asarray(out[29]), np.asarray(n_a))
+
+    def test_n_used_respects_container(self):
+        ws, bs = _init(6)
+        mw = [jnp.zeros_like(w) for w in ws]
+        mb = [jnp.zeros_like(b) for b in bs]
+        n = jnp.full((M.NUM_Q,), 23.0)  # above bf16 ceiling
+        x, y = _batch(6)
+        out = _run_step(ws, bs, mw, mb, n, n, x, y, mmax=7.0)
+        assert (np.asarray(out[32]) <= 7).all()
+        assert (np.asarray(out[33]) <= 7).all()
+
+    def test_stats_outputs_sane(self):
+        ws, bs = _init(7)
+        mw = [jnp.zeros_like(w) for w in ws]
+        mb = [jnp.zeros_like(b) for b in bs]
+        n = jnp.full((M.NUM_Q,), 23.0)
+        x, y = _batch(7)
+        out = _run_step(ws, bs, mw, mb, n, n, x, y)
+        a_bits, w_bits, zfrac = out[34], out[35], out[36]
+        a_elems = [int(np.prod(s)) for s in M.ACT_SHAPES]
+        for i in range(M.NUM_Q):
+            assert 0 < float(a_bits[i]) <= a_elems[i] * (64 + 7 * 67) / 64
+            assert 0.0 <= float(zfrac[i]) <= 1.0
+        # ReLU outputs should have a sizable zero fraction
+        assert float(zfrac[0]) > 0.1
+
+
+class TestEvalStep:
+    def test_correct_count_range(self):
+        ws, bs = _init(8)
+        n = jnp.full((M.NUM_Q,), 23.0)
+        x, y = _batch(8)
+        correct, ce = M.eval_step(*ws, *bs, n, n, jnp.float32(23.0), x, y)
+        assert 0 <= int(correct) <= M.BATCH
+        assert float(ce) > 0
+
+    def test_eval_rounds_bitlengths_up(self):
+        ws, bs = _init(9)
+        x, y = _batch(9)
+        n_frac = jnp.full((M.NUM_Q,), 3.2)
+        n_ceil = jnp.full((M.NUM_Q,), 4.0)
+        a = M.eval_step(*ws, *bs, n_frac, n_frac, jnp.float32(23.0), x, y)
+        b = M.eval_step(*ws, *bs, n_ceil, n_ceil, jnp.float32(23.0), x, y)
+        assert int(a[0]) == int(b[0]) and float(a[1]) == float(b[1])
+
+
+class TestForwardActs:
+    def test_shapes_and_quantization(self):
+        ws, bs = _init(10)
+        x, _ = _batch(10)
+        n = jnp.full((M.NUM_Q,), 2.0)
+        acts = M.forward_acts(
+            *ws, *bs, n, n, jnp.float32(23.0), jnp.int32(0), jnp.int32(0), x
+        )
+        assert [a.shape for a in acts] == [tuple(s) for s in M.ACT_SHAPES]
+        bits = np.asarray(acts[1]).view(np.uint32)
+        assert (bits & ((1 << 21) - 1) == 0).all()
+
+
+class TestLambdaWeights:
+    def test_lambdas_sum_to_one(self):
+        assert abs(sum(M.LAMBDA_W) + sum(M.LAMBDA_A) - 1.0) < 1e-9
+
+    def test_activations_dominate(self):
+        """Paper §VI-A: activations are the bulk of the stashed footprint."""
+        assert sum(M.LAMBDA_A) > 0.9

@@ -1,0 +1,52 @@
+//! Codec throughput benches — the L3 hot path (§Perf).  Measures the
+//! Gecko exponent codec, the full SFP pack/unpack pipe, and the pure
+//! accounting path, in values/second on trained-like streams.
+
+use sfp::formats::Container;
+use sfp::gecko::{self, Mode};
+use sfp::sfp::{sfp_bits, SfpCodec};
+use sfp::traces::ValueModel;
+use sfp::util::bench::{black_box, Bench};
+
+fn main() {
+    let n = 64 * 4096; // 256k values per iteration
+    let acts = ValueModel::relu_act().sample_values(n, 1, true);
+    let weights = ValueModel::weights().sample_values(n, 2, false);
+    let act_exps = gecko::exponents(&acts);
+
+    let b = Bench::new("gecko");
+    b.run("exponents_extract", n as f64, || {
+        black_box(gecko::exponents(black_box(&acts)));
+    });
+    b.run("encode_delta_acts", n as f64, || {
+        black_box(gecko::encode(black_box(&act_exps), Mode::Delta));
+    });
+    let enc = gecko::encode(&act_exps, Mode::Delta);
+    b.run("decode_delta_acts", n as f64, || {
+        black_box(gecko::decode(black_box(&enc), Mode::Delta));
+    });
+    b.run("encoded_bits_only", n as f64, || {
+        black_box(gecko::encoded_bits(black_box(&act_exps), Mode::Delta));
+    });
+    let fixed = Mode::FixedBias { bias: 127, group: 8 };
+    b.run("encode_fixed_acts", n as f64, || {
+        black_box(gecko::encode(black_box(&act_exps), fixed));
+    });
+
+    let b = Bench::new("sfp_codec");
+    for (label, vals, elide) in [("acts", &acts, true), ("weights", &weights, false)] {
+        let codec = SfpCodec::new(Container::Bf16, elide);
+        for n_mant in [1u32, 4, 7] {
+            b.run(&format!("compress_{label}_n{n_mant}"), n as f64, || {
+                black_box(codec.compress(black_box(vals), n_mant));
+            });
+        }
+        let c = codec.compress(vals, 4);
+        b.run(&format!("decompress_{label}_n4"), n as f64, || {
+            black_box(codec.decompress(black_box(&c)));
+        });
+        b.run(&format!("bits_only_{label}_n4"), n as f64, || {
+            black_box(sfp_bits(black_box(vals), 4, Container::Bf16, elide));
+        });
+    }
+}

@@ -1,0 +1,32 @@
+//! End-to-end table regeneration benches: one per paper table, plus the
+//! per-figure footprint models.  These time the full analytic pipeline
+//! (value-model sampling -> codecs -> hwsim).
+
+use sfp::formats::Container;
+use sfp::hwsim::AccelConfig;
+use sfp::report::{fig13_rows, tables, FootprintModel};
+use sfp::traces::{mobilenet_v3_small, resnet18};
+use sfp::util::bench::{black_box, Bench};
+
+fn main() {
+    let b = Bench::new("tables").with_epochs(5);
+    b.run("table1_both_networks", 2.0, || {
+        black_box(tables::table1());
+    });
+    b.run("table2_both_networks", 2.0, || {
+        black_box(tables::table2(&AccelConfig::default(), 256));
+    });
+
+    let b = Bench::new("footprint_models");
+    let rn = resnet18();
+    let mv = mobilenet_v3_small();
+    b.run("resnet18_sfp_qm", rn.layers.len() as f64, || {
+        black_box(FootprintModel::sfp_qm(Container::Bf16).network(&rn, 256));
+    });
+    b.run("mobilenet_sfp_bc", mv.layers.len() as f64, || {
+        black_box(FootprintModel::sfp_bc(Container::Bf16).network(&mv, 256));
+    });
+    b.run("fig13_resnet18", 7.0, || {
+        black_box(fig13_rows(&rn, 256));
+    });
+}

@@ -1,0 +1,64 @@
+//! PJRT train-step latency — the end-to-end hot loop of the coordinator
+//! (compiled HLO with the Pallas quantizers inside).  Requires `make
+//! artifacts`; skips gracefully when artifacts are missing.
+
+use sfp::coordinator::{TrainConfig, Trainer, Variant};
+use sfp::formats::Container;
+use sfp::runtime::Runtime;
+use sfp::util::bench::Bench;
+use std::path::Path;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts/manifest.json missing — run `make artifacts`; skipping");
+        return;
+    }
+    let rt = match Runtime::load(dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("runtime load failed ({e:#}); skipping");
+            return;
+        }
+    };
+    let batch = rt.manifest.batch as f64;
+
+    let b = Bench::new("train_step").with_epochs(5);
+    for (label, variant) in [
+        ("fp32", Variant::Fp32),
+        ("bf16", Variant::Bf16),
+        ("sfp_qm", Variant::SfpQm(Container::Bf16)),
+        ("sfp_bc", Variant::SfpBc(Container::Bf16)),
+    ] {
+        let cfg = TrainConfig {
+            variant,
+            epochs: 1,
+            steps_per_epoch: 1,
+            eval_batches: 1,
+            out_dir: None,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(&rt, cfg);
+        // one step per iteration (samples/s = batch/step-latency)
+        b.run(&format!("step_{label}"), batch, || {
+            trainer.run_one_step_for_bench().expect("step");
+        });
+    }
+
+    let cfg = TrainConfig {
+        variant: Variant::Fp32,
+        epochs: 1,
+        steps_per_epoch: 1,
+        eval_batches: 1,
+        out_dir: None,
+        ..Default::default()
+    };
+    let trainer = Trainer::new(&rt, cfg);
+    let b = Bench::new("eval_and_dump").with_epochs(5);
+    b.run("eval_step", batch, || {
+        trainer.evaluate().expect("eval");
+    });
+    b.run("forward_acts_dump", batch, || {
+        trainer.dump_acts(0).expect("dump");
+    });
+}

@@ -1,0 +1,265 @@
+//! BitChop (§IV-B): the history-based, hardware-style mantissa controller.
+//!
+//! Observes the per-period training loss (the only signal the hardware
+//! gets, via a user-level register), smooths it with an exponential moving
+//! average (Eq. 8), and decides −1 / 0 / +1 on the network-wide mantissa
+//! bitlength (Eq. 9) with a threshold ε tracking the average relative
+//! error between loss and EMA.  Full precision is restored around learning
+//! rate changes ("the network is more sensitive").
+
+#[derive(Debug, Clone)]
+pub struct BitChop {
+    /// Current mantissa bitlength (applied to the *next* period).
+    n: u32,
+    /// Container ceiling (23 FP32, 7 BF16).
+    n_max: u32,
+    /// Eq. 8 decay factor α.
+    alpha: f64,
+    /// EMA of the loss (Mavg).
+    mavg: Option<f64>,
+    /// Streaming mean of |L - Mavg| / |Mavg| — the ε estimator.
+    rel_err_mean: f64,
+    rel_err_count: u64,
+    /// Batches per period (N; the paper lands on N = 1).
+    period: u32,
+    in_period: u32,
+    period_loss_acc: f64,
+    /// Remaining periods at forced full precision after an LR change.
+    cooldown: u32,
+    cooldown_len: u32,
+    /// Periods observed (ε needs a short warm-up before decisions count).
+    periods: u64,
+    /// Stall recovery (§IV-B prose: "otherwise keep it the same or even
+    /// increase it"): if the EMA has stopped improving for a window while
+    /// bits are chopped, restore one bit — a stalled network at low
+    /// precision produces a flat loss that Eq. 9's worsening branch alone
+    /// would never react to.
+    stall_window: u32,
+    stall_count: u32,
+    best_mavg: f64,
+}
+
+impl BitChop {
+    pub fn new(n_max: u32) -> Self {
+        Self {
+            n: n_max,
+            n_max,
+            alpha: 0.1,
+            mavg: None,
+            rel_err_mean: 0.0,
+            rel_err_count: 0,
+            period: 1,
+            in_period: 0,
+            period_loss_acc: 0.0,
+            cooldown: 0,
+            cooldown_len: 8,
+            periods: 0,
+            stall_window: 16,
+            stall_count: 0,
+            best_mavg: f64::INFINITY,
+        }
+    }
+
+    pub fn with_alpha(mut self, alpha: f64) -> Self {
+        self.alpha = alpha;
+        self
+    }
+
+    pub fn with_period(mut self, period: u32) -> Self {
+        self.period = period.max(1);
+        self
+    }
+
+    /// Mantissa bitlength to use for the upcoming batch.
+    pub fn bits(&self) -> u32 {
+        if self.cooldown > 0 {
+            self.n_max
+        } else {
+            self.n
+        }
+    }
+
+    /// §IV-B: "Full precision is used during LR changes".
+    pub fn notify_lr_change(&mut self) {
+        self.cooldown = self.cooldown_len;
+        self.mavg = None; // the loss scale shifts; restart the EMA
+        self.best_mavg = f64::INFINITY;
+        self.stall_count = 0;
+        self.periods = 0;
+    }
+
+    /// Feed the loss of the batch that just ran; returns the bitlength for
+    /// the next batch.
+    pub fn observe(&mut self, loss: f64) -> u32 {
+        self.period_loss_acc += loss;
+        self.in_period += 1;
+        if self.in_period < self.period {
+            return self.bits();
+        }
+        let l_i = self.period_loss_acc / self.period as f64;
+        self.in_period = 0;
+        self.period_loss_acc = 0.0;
+
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+        }
+
+        let mavg = match self.mavg {
+            None => {
+                self.mavg = Some(l_i);
+                return self.bits();
+            }
+            Some(m) => m,
+        };
+
+        // ε_i: running average relative gap between L and Mavg (Eq. 9 text)
+        let rel = ((l_i - mavg) / mavg.abs().max(1e-12)).abs();
+        self.rel_err_count += 1;
+        self.rel_err_mean += (rel - self.rel_err_mean) / self.rel_err_count as f64;
+        let eps = self.rel_err_mean * mavg.abs();
+        self.periods += 1;
+
+        // Eq. 9 needs a meaningful ε; hold decisions for a short warm-up.
+        if self.periods > 4 {
+            if mavg > l_i + eps {
+                // improving => try fewer bits
+                self.n = self.n.saturating_sub(1);
+                self.stall_count = 0;
+            } else if mavg < l_i - eps {
+                // degrading => back off
+                self.n = (self.n + 1).min(self.n_max);
+                self.stall_count = 0;
+            } else {
+                // flat: count toward stall recovery
+                self.stall_count += 1;
+            }
+        }
+
+        // Stall recovery: chopped bits + no EMA progress for a window =>
+        // precision is limiting learning; restore one bit.
+        let new_mavg = mavg + self.alpha * (l_i - mavg);
+        if new_mavg < self.best_mavg * (1.0 - self.rel_err_mean * 0.25) {
+            self.best_mavg = new_mavg;
+            self.stall_count = 0;
+        } else if self.stall_count >= self.stall_window && self.n < self.n_max {
+            self.n += 1;
+            self.stall_count = 0;
+        }
+
+        // Eq. 8: Mavg += α (L - Mavg)
+        self.mavg = Some(new_mavg);
+        self.bits()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_full_precision() {
+        assert_eq!(BitChop::new(7).bits(), 7);
+        assert_eq!(BitChop::new(23).bits(), 23);
+    }
+
+    #[test]
+    fn improving_loss_chops_bits() {
+        let mut bc = BitChop::new(7);
+        for i in 0..50 {
+            bc.observe(5.0 - 0.08 * i as f64);
+        }
+        assert!(bc.bits() < 5, "bits {}", bc.bits());
+    }
+
+    #[test]
+    fn worsening_loss_restores_bits() {
+        let mut bc = BitChop::new(7);
+        for i in 0..30 {
+            bc.observe(5.0 - 0.1 * i as f64);
+        }
+        let low = bc.bits();
+        for i in 0..30 {
+            bc.observe(2.0 + 0.2 * i as f64);
+        }
+        assert!(bc.bits() > low, "bits {} vs {low}", bc.bits());
+    }
+
+    #[test]
+    fn never_exceeds_container_or_underflows() {
+        let mut bc = BitChop::new(7);
+        for i in 0..200 {
+            let loss = if i % 2 == 0 { 1.0 } else { 100.0 };
+            let b = bc.observe(loss);
+            assert!(b <= 7);
+        }
+        let mut bc = BitChop::new(7);
+        for i in 0..200 {
+            bc.observe(100.0 - i as f64); // monotone improvement
+        }
+        assert_eq!(bc.bits(), 0); // clipped at zero, no panic
+    }
+
+    #[test]
+    fn lr_change_forces_full_precision() {
+        let mut bc = BitChop::new(7);
+        for i in 0..40 {
+            bc.observe(5.0 - 0.1 * i as f64);
+        }
+        assert!(bc.bits() < 7);
+        bc.notify_lr_change();
+        assert_eq!(bc.bits(), 7);
+        // decays back to adaptive behaviour after the cooldown
+        for i in 0..20 {
+            bc.observe(1.0 - 0.01 * i as f64);
+        }
+        assert!(bc.bits() < 7);
+    }
+
+    #[test]
+    fn plateau_triggers_stall_recovery() {
+        // §IV-B prose: "otherwise keep it the same or even increase it" —
+        // a long plateau at chopped precision must drift bits back up
+        // rather than staying frozen (the failure mode that killed BC
+        // accuracy in the first e2e run; see EXPERIMENTS.md).
+        let mut bc = BitChop::new(7);
+        for i in 0..30 {
+            bc.observe(5.0 - 0.1 * i as f64);
+        }
+        let before = bc.bits();
+        assert!(before < 7);
+        let mut rng = crate::traces::SplitMix64::new(3);
+        for _ in 0..200 {
+            bc.observe(2.0 + 0.01 * rng.next_gaussian());
+        }
+        let after = bc.bits();
+        assert!(after > before, "stall must restore bits: {before} -> {after}");
+        assert!(after <= 7);
+    }
+
+    #[test]
+    fn progressing_loss_does_not_trigger_stall_recovery() {
+        // while the EMA keeps improving, stall recovery stays quiet and
+        // the controller keeps chopping
+        let mut bc = BitChop::new(23);
+        for i in 0..120 {
+            bc.observe(10.0 - 0.07 * i as f64);
+        }
+        assert!(bc.bits() < 12, "bits {}", bc.bits());
+    }
+
+    #[test]
+    fn period_aggregation() {
+        let mut bc = BitChop::new(7).with_period(4);
+        // only every 4th observe can change the bitlength
+        let mut changes = 0;
+        let mut prev = bc.bits();
+        for i in 0..40 {
+            let b = bc.observe(5.0 - 0.05 * i as f64);
+            if b != prev {
+                changes += 1;
+                prev = b;
+            }
+        }
+        assert!(changes <= 10);
+    }
+}

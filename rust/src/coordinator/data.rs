@@ -1,0 +1,122 @@
+//! Synthetic structured classification data (DESIGN.md §2 substitution for
+//! ImageNet): each class owns a fixed random template image; samples are
+//! `template * 0.8 + noise * 0.4`.  Deterministic per seed, generated
+//! entirely in Rust — the request path never touches Python.
+
+use crate::runtime::HostTensor;
+use crate::traces::SplitMix64;
+
+pub struct DataGen {
+    templates: Vec<f32>, // [classes * pixels]
+    pixels: usize,
+    classes: usize,
+    image: Vec<usize>,
+    batch: usize,
+}
+
+impl DataGen {
+    pub fn new(image: &[usize], classes: usize, batch: usize, seed: u64) -> Self {
+        let pixels: usize = image.iter().product();
+        let mut rng = SplitMix64::new(seed);
+        let templates = (0..classes * pixels)
+            .map(|_| rng.next_gaussian() as f32)
+            .collect();
+        Self {
+            templates,
+            pixels,
+            classes,
+            image: image.to_vec(),
+            batch,
+        }
+    }
+
+    /// Generate batch `index` of the training stream (stream 0) or the
+    /// held-out validation stream (stream 1).
+    pub fn batch(&self, stream: u64, index: u64) -> (HostTensor, HostTensor) {
+        let mut rng = SplitMix64::new(0x00DA7A ^ (stream << 56) ^ index);
+        let mut x = Vec::with_capacity(self.batch * self.pixels);
+        let mut y = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let class = (rng.next_u64() as usize) % self.classes;
+            y.push(class as i32);
+            let t = &self.templates[class * self.pixels..(class + 1) * self.pixels];
+            for &tv in t {
+                x.push(tv * 0.8 + rng.next_gaussian() as f32 * 0.4);
+            }
+        }
+        let mut shape = vec![self.batch];
+        shape.extend(&self.image);
+        (HostTensor::f32(&shape, x), HostTensor::i32(&[self.batch], y))
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+}
+
+/// He-normal initialization for the model parameters, shaped per manifest.
+pub fn init_params(
+    weight_shapes: &[Vec<usize>],
+    bias_shapes: &[Vec<usize>],
+    seed: u64,
+) -> (Vec<HostTensor>, Vec<HostTensor>) {
+    let mut rng = SplitMix64::new(seed);
+    let ws = weight_shapes
+        .iter()
+        .map(|s| {
+            let fan_in: usize = s[..s.len() - 1].iter().product();
+            let std = (2.0 / fan_in as f64).sqrt();
+            let n: usize = s.iter().product();
+            HostTensor::f32(
+                s,
+                (0..n).map(|_| (rng.next_gaussian() * std) as f32).collect(),
+            )
+        })
+        .collect();
+    let bs = bias_shapes
+        .iter()
+        .map(|s| HostTensor::f32(s, vec![0.0; s.iter().product()]))
+        .collect();
+    (ws, bs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_batches() {
+        let g = DataGen::new(&[4, 4, 3], 10, 8, 1);
+        let (x1, y1) = g.batch(0, 5);
+        let (x2, y2) = g.batch(0, 5);
+        assert_eq!(x1.as_f32().unwrap(), x2.as_f32().unwrap());
+        assert_eq!(y1.as_i32().unwrap(), y2.as_i32().unwrap());
+        let (x3, _) = g.batch(0, 6);
+        assert_ne!(x1.as_f32().unwrap(), x3.as_f32().unwrap());
+    }
+
+    #[test]
+    fn train_and_val_streams_differ() {
+        let g = DataGen::new(&[4, 4, 3], 10, 8, 1);
+        let (x1, _) = g.batch(0, 0);
+        let (x2, _) = g.batch(1, 0);
+        assert_ne!(x1.as_f32().unwrap(), x2.as_f32().unwrap());
+    }
+
+    #[test]
+    fn labels_in_range() {
+        let g = DataGen::new(&[4, 4, 3], 10, 64, 2);
+        let (_, y) = g.batch(0, 0);
+        assert!(y.as_i32().unwrap().iter().all(|&c| (0..10).contains(&c)));
+    }
+
+    #[test]
+    fn init_shapes_and_scale() {
+        let (ws, bs) = init_params(&[vec![3, 3, 3, 16]], &[vec![16]], 3);
+        assert_eq!(ws[0].elems(), 432);
+        assert_eq!(bs[0].as_f32().unwrap(), &[0.0; 16]);
+        let std = (ws[0].as_f32().unwrap().iter().map(|v| v * v).sum::<f32>() / 432.0).sqrt();
+        let expect = (2.0f32 / 27.0).sqrt();
+        assert!((std - expect).abs() / expect < 0.2, "std {std} vs {expect}");
+    }
+}

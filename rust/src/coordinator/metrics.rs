@@ -1,0 +1,117 @@
+//! Training metrics sinks: per-step CSV rows and run-level JSON summaries
+//! (the table/figure drivers read these back).
+
+use crate::util::json::Json;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// Append-oriented CSV writer with a fixed header.
+pub struct CsvSink {
+    file: std::io::BufWriter<std::fs::File>,
+    columns: usize,
+}
+
+impl CsvSink {
+    pub fn create(path: &Path, header: &[&str]) -> Result<Self> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(file, "{}", header.join(","))?;
+        Ok(Self {
+            file,
+            columns: header.len(),
+        })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> Result<()> {
+        debug_assert_eq!(values.len(), self.columns);
+        let mut line = String::with_capacity(values.len() * 12);
+        for (i, v) in values.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            line.push_str(&format!("{v}"));
+        }
+        writeln!(self.file, "{line}")?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// Run-level summary: arbitrary key → number/string/array, written as JSON.
+#[derive(Default)]
+pub struct Summary {
+    entries: BTreeMap<String, Json>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn num(&mut self, key: &str, v: f64) -> &mut Self {
+        self.entries.insert(key.into(), Json::Num(v));
+        self
+    }
+
+    pub fn str(&mut self, key: &str, v: &str) -> &mut Self {
+        self.entries.insert(key.into(), Json::Str(v.into()));
+        self
+    }
+
+    pub fn nums(&mut self, key: &str, vs: &[f64]) -> &mut Self {
+        self.entries.insert(
+            key.into(),
+            Json::Arr(vs.iter().map(|&v| Json::Num(v)).collect()),
+        );
+        self
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let obj = Json::Obj(self.entries.clone());
+        std::fs::write(path, obj.to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("sfp_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.csv");
+        let mut s = CsvSink::create(&p, &["step", "loss"]).unwrap();
+        s.row(&[0.0, 2.5]).unwrap();
+        s.row(&[1.0, 2.25]).unwrap();
+        s.flush().unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("step,loss\n0,2.5\n"));
+    }
+
+    #[test]
+    fn summary_json() {
+        let dir = std::env::temp_dir().join("sfp_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("s.json");
+        let mut s = Summary::new();
+        s.num("acc", 0.93).str("variant", "qm").nums("bits", &[1.0, 2.0]);
+        s.write(&p).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        assert_eq!(j.get("acc").unwrap().as_f64(), Some(0.93));
+        assert_eq!(j.get("bits").unwrap().idx(1).unwrap().as_f64(), Some(2.0));
+    }
+}

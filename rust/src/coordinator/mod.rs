@@ -1,0 +1,17 @@
+//! L3 coordinator: the request-path training orchestrator.
+//!
+//! * [`train::Trainer`] — epoch/step loop over the compiled PJRT step,
+//!   per-variant container policy, metrics + exact footprint ledger.
+//! * [`bitchop::BitChop`] — the §IV-B loss-EMA mantissa controller.
+//! * [`qm::QmSchedule`] — the §IV-A γ schedule and round-up endgame.
+//! * [`data::DataGen`] — deterministic synthetic classification data.
+//! * [`metrics`] — CSV / JSON sinks the figure drivers read back.
+
+pub mod bitchop;
+pub mod data;
+pub mod metrics;
+pub mod qm;
+pub mod train;
+
+pub use bitchop::BitChop;
+pub use train::{RunResult, TrainConfig, Trainer, Variant};

@@ -1,0 +1,96 @@
+//! Quantum Mantissa policy state (§IV-A): the gradient-side learning of
+//! bitlengths happens *inside* the compiled train step (L2's Eq. 7 penalty
+//! + the expected-value bitlength gradient in L1's custom VJP); this module
+//! owns the coordinator-side policy — the γ schedule and the §IV-A-4
+//! round-up endgame.
+
+/// γ regularizer schedule: the paper sets 0.1 / 0.01 / 0.001 at epochs
+/// 0 / 30 / 60 of a 90-epoch run; we express the breakpoints as fractions
+/// of the configured run length.
+#[derive(Debug, Clone)]
+pub struct QmSchedule {
+    pub epochs: usize,
+    pub gammas: [f32; 3],
+    /// Epoch fractions at which each γ stage begins.
+    pub stage_frac: [f64; 3],
+    /// Fraction of the run with rounded-up frozen bitlengths at the end
+    /// (paper: last 10 of 90 epochs).
+    pub roundup_frac: f64,
+    /// Bitlength learning rate while adapting.
+    pub lr_n: f32,
+}
+
+impl QmSchedule {
+    pub fn paper_like(epochs: usize) -> Self {
+        Self {
+            epochs,
+            gammas: [0.1, 0.01, 0.001],
+            stage_frac: [0.0, 1.0 / 3.0, 2.0 / 3.0],
+            roundup_frac: 1.0 / 9.0,
+            lr_n: 4.0,
+        }
+    }
+
+    /// Is `epoch` in the round-up endgame (§IV-A-4)?
+    pub fn in_roundup(&self, epoch: usize) -> bool {
+        epoch as f64 >= self.epochs as f64 * (1.0 - self.roundup_frac)
+    }
+
+    /// (γ, lr_n, stochastic) for this epoch.  In the endgame the bitlengths
+    /// are frozen (lr_n = 0), deterministic (stochastic = 0), and the
+    /// coordinator rounds the learned values up once on entry.
+    pub fn hyper(&self, epoch: usize) -> (f32, f32, i32) {
+        if self.in_roundup(epoch) {
+            return (0.0, 0.0, 0);
+        }
+        let frac = epoch as f64 / self.epochs.max(1) as f64;
+        let mut gamma = self.gammas[0];
+        for (g, f) in self.gammas.iter().zip(self.stage_frac) {
+            if frac >= f {
+                gamma = *g;
+            }
+        }
+        (gamma, self.lr_n, 1)
+    }
+
+    /// Round learned bitlengths up for deployment/endgame.
+    pub fn round_up(bits: &mut [f32], mmax: f32) {
+        for b in bits {
+            *b = b.ceil().clamp(0.0, mmax);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gamma_schedule_stages() {
+        let s = QmSchedule::paper_like(90);
+        assert_eq!(s.hyper(0).0, 0.1);
+        assert_eq!(s.hyper(29).0, 0.1);
+        assert_eq!(s.hyper(30).0, 0.01);
+        assert_eq!(s.hyper(60).0, 0.001);
+    }
+
+    #[test]
+    fn roundup_endgame() {
+        let s = QmSchedule::paper_like(90);
+        assert!(!s.in_roundup(79));
+        assert!(s.in_roundup(80)); // last 10 of 90
+        let (gamma, lr_n, stoch) = s.hyper(85);
+        assert_eq!((gamma, lr_n, stoch), (0.0, 0.0, 0));
+        // adapting phase is stochastic with a live lr_n
+        let (_, lr_n, stoch) = s.hyper(10);
+        assert!(lr_n > 0.0);
+        assert_eq!(stoch, 1);
+    }
+
+    #[test]
+    fn round_up_clamps() {
+        let mut bits = vec![1.2, 0.0, -0.5, 22.9, 25.0];
+        QmSchedule::round_up(&mut bits, 23.0);
+        assert_eq!(bits, vec![2.0, 0.0, 0.0, 23.0, 23.0]);
+    }
+}

@@ -1,0 +1,502 @@
+//! The training orchestrator: drives the AOT-compiled train/eval steps
+//! through PJRT, applies the per-variant container policy (FP32 / BF16
+//! baselines, SFP_QM, SFP_BC), and keeps the exact footprint ledger the
+//! tables and figures read.
+//!
+//! All adaptation decisions (BitChop's Eq. 8/9, the QM γ schedule and
+//! round-up endgame, LR drops) live here in Rust; the compiled step only
+//! exposes knobs (`n_w`, `n_a`, `lr_n`, `gamma`, `stochastic`, `mmax`).
+
+use super::bitchop::BitChop;
+use super::data::{init_params, DataGen};
+use super::metrics::{CsvSink, Summary};
+use super::qm::QmSchedule;
+use crate::formats::Container;
+use crate::runtime::{HostTensor, Runtime};
+use crate::stats::{BitlengthHistogram, ComponentBits, Footprint};
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Which compression scheme the run uses (Table I / II row labels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Uncompressed FP32 baseline.
+    Fp32,
+    /// Uncompressed BFloat16 baseline.
+    Bf16,
+    /// Gecko + Quantum Mantissa over the given container.
+    SfpQm(Container),
+    /// Gecko + BitChop over the given container.
+    SfpBc(Container),
+}
+
+impl Variant {
+    pub fn container(&self) -> Container {
+        match self {
+            Variant::Fp32 => Container::Fp32,
+            Variant::Bf16 => Container::Bf16,
+            Variant::SfpQm(c) | Variant::SfpBc(c) => *c,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Variant::Fp32 => "fp32".into(),
+            Variant::Bf16 => "bf16".into(),
+            Variant::SfpQm(c) => format!("sfp_qm_{}", c).to_lowercase(),
+            Variant::SfpBc(c) => format!("sfp_bc_{}", c).to_lowercase(),
+        }
+    }
+
+    pub fn parse(s: &str, container: Container) -> Option<Variant> {
+        match s {
+            "fp32" => Some(Variant::Fp32),
+            "bf16" => Some(Variant::Bf16),
+            "qm" | "sfp_qm" => Some(Variant::SfpQm(container)),
+            "bc" | "sfp_bc" => Some(Variant::SfpBc(container)),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub variant: Variant,
+    pub epochs: usize,
+    pub steps_per_epoch: usize,
+    pub eval_batches: usize,
+    pub lr0: f32,
+    pub momentum: f32,
+    pub seed: u64,
+    /// Where CSV/JSON metrics land (created if missing); None = no files.
+    pub out_dir: Option<PathBuf>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            variant: Variant::Fp32,
+            epochs: 6,
+            steps_per_epoch: 50,
+            eval_batches: 4,
+            lr0: 0.05,
+            momentum: 0.9,
+            seed: 42,
+            out_dir: None,
+        }
+    }
+}
+
+/// Per-epoch record (rows of figs 2/3/6/7).
+#[derive(Debug, Clone, Default)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub val_acc: f64,
+    pub val_loss: f64,
+    pub mean_bits_w: f64,
+    pub mean_bits_a: f64,
+    /// Weighted (by footprint λ) mean activation bits — fig 3's solid line.
+    pub wmean_bits_a: f64,
+    pub per_layer_bits_a: Vec<f64>,
+    pub per_layer_bits_w: Vec<f64>,
+}
+
+/// Result of one full run.
+#[derive(Debug, Clone, Default)]
+pub struct RunResult {
+    pub label: String,
+    pub epochs: Vec<EpochStats>,
+    pub final_val_acc: f64,
+    /// Cumulative stashed footprint over the whole run, this variant.
+    pub footprint: Footprint,
+    /// Same tensors at uncompressed FP32 / BF16 (Table I denominators).
+    pub footprint_fp32: Footprint,
+    pub footprint_bf16: Footprint,
+    /// BitChop bitlength histogram across all batches (fig 8).
+    pub bc_histogram: BitlengthHistogram,
+    /// Final learned bitlengths (QM).
+    pub final_n_w: Vec<f32>,
+    pub final_n_a: Vec<f32>,
+}
+
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    cfg: TrainConfig,
+    gen: DataGen,
+    // state
+    ws: Vec<HostTensor>,
+    bs: Vec<HostTensor>,
+    mws: Vec<HostTensor>,
+    mbs: Vec<HostTensor>,
+    n_w: Vec<f32>,
+    n_a: Vec<f32>,
+    bitchop: BitChop,
+    qm: QmSchedule,
+    lr: f32,
+    step: i32,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: TrainConfig) -> Trainer<'rt> {
+        let m = &rt.manifest;
+        let (ws, bs) = init_params(&m.weight_shapes, &m.bias_shapes, cfg.seed);
+        let mws = ws
+            .iter()
+            .map(|w| HostTensor::f32(&w.shape, vec![0.0; w.elems()]))
+            .collect();
+        let mbs = bs
+            .iter()
+            .map(|b| HostTensor::f32(&b.shape, vec![0.0; b.elems()]))
+            .collect();
+        let mmax = cfg.variant.container().mant_bits() as f32;
+        let l = m.num_layers();
+        let gen = DataGen::new(&m.image, m.num_classes, m.batch, cfg.seed ^ 0xDA7A);
+        Trainer {
+            rt,
+            gen,
+            ws,
+            bs,
+            mws,
+            mbs,
+            n_w: vec![mmax; l],
+            n_a: vec![mmax; l],
+            bitchop: BitChop::new(mmax as u32),
+            qm: QmSchedule::paper_like(cfg.epochs),
+            lr: cfg.lr0,
+            step: 0,
+            cfg,
+        }
+    }
+
+    fn mmax(&self) -> f32 {
+        self.cfg.variant.container().mant_bits() as f32
+    }
+
+    /// (lr_n, gamma, stochastic) + bitlength vectors for this step.
+    fn policy(&mut self, epoch: usize) -> (f32, f32, i32) {
+        let mmax = self.mmax();
+        match self.cfg.variant {
+            Variant::Fp32 | Variant::Bf16 => {
+                self.n_w.iter_mut().for_each(|n| *n = mmax);
+                self.n_a.iter_mut().for_each(|n| *n = mmax);
+                (0.0, 0.0, 0)
+            }
+            Variant::SfpBc(_) => {
+                // network-wide activation bitlength from the controller;
+                // weights stay at container precision (§IV-B "presently,
+                // BitChop adjusts the mantissa only for the activations").
+                let bits = self.bitchop.bits() as f32;
+                self.n_w.iter_mut().for_each(|n| *n = mmax);
+                self.n_a.iter_mut().for_each(|n| *n = bits);
+                (0.0, 0.0, 0)
+            }
+            Variant::SfpQm(_) => {
+                let (gamma, lr_n, stochastic) = self.qm.hyper(epoch);
+                if self.qm.in_roundup(epoch) {
+                    QmSchedule::round_up(&mut self.n_w, mmax);
+                    QmSchedule::round_up(&mut self.n_a, mmax);
+                }
+                (lr_n, gamma, stochastic)
+            }
+        }
+    }
+
+    /// Execute one training step; returns (task_loss, per-layer used bits,
+    /// gecko exponent bits, zero fractions).
+    #[allow(clippy::type_complexity)]
+    fn train_step(
+        &mut self,
+        epoch: usize,
+    ) -> Result<(f64, Vec<i32>, Vec<i32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let (lr_n, gamma, stochastic) = self.policy(epoch);
+        let l = self.rt.manifest.num_layers();
+        let (x, y) = self.gen.batch(0, self.step as u64);
+
+        let mut inputs = Vec::with_capacity(4 * l + 9);
+        inputs.extend(self.ws.iter().cloned());
+        inputs.extend(self.bs.iter().cloned());
+        inputs.extend(self.mws.iter().cloned());
+        inputs.extend(self.mbs.iter().cloned());
+        inputs.push(HostTensor::f32(&[l], self.n_w.clone()));
+        inputs.push(HostTensor::f32(&[l], self.n_a.clone()));
+        inputs.push(x);
+        inputs.push(y);
+        inputs.push(HostTensor::scalar_f32(self.lr));
+        inputs.push(HostTensor::scalar_f32(self.cfg.momentum));
+        inputs.push(HostTensor::scalar_f32(lr_n));
+        inputs.push(HostTensor::scalar_f32(gamma));
+        inputs.push(HostTensor::scalar_f32(self.mmax()));
+        inputs.push(HostTensor::scalar_i32(stochastic));
+        inputs.push(HostTensor::scalar_i32(self.step));
+
+        let out = self.rt.call("train_step", &inputs)?;
+        let mut it = out.into_iter();
+        self.ws = (0..l).map(|_| it.next().unwrap()).collect();
+        self.bs = (0..l).map(|_| it.next().unwrap()).collect();
+        self.mws = (0..l).map(|_| it.next().unwrap()).collect();
+        self.mbs = (0..l).map(|_| it.next().unwrap()).collect();
+        let n_w2 = it.next().unwrap();
+        let n_a2 = it.next().unwrap();
+        if matches!(self.cfg.variant, Variant::SfpQm(_)) {
+            self.n_w = n_w2.as_f32()?.to_vec();
+            self.n_a = n_a2.as_f32()?.to_vec();
+        }
+        let task_loss = it.next().unwrap().item()?;
+        let _total_loss = it.next().unwrap();
+        let n_used_w = it.next().unwrap().as_i32()?.to_vec();
+        let n_used_a = it.next().unwrap().as_i32()?.to_vec();
+        let a_gecko = it.next().unwrap().as_f32()?.to_vec();
+        let w_gecko = it.next().unwrap().as_f32()?.to_vec();
+        let zfrac = it.next().unwrap().as_f32()?.to_vec();
+
+        if matches!(self.cfg.variant, Variant::SfpBc(_)) {
+            self.bitchop.observe(task_loss);
+        }
+        self.step += 1;
+        Ok((task_loss, n_used_w, n_used_a, a_gecko, w_gecko, zfrac))
+    }
+
+    /// Validation over the held-out stream.
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
+        let m = &self.rt.manifest;
+        let l = m.num_layers();
+        let mut correct = 0usize;
+        let mut loss = 0.0f64;
+        for i in 0..self.cfg.eval_batches {
+            let (x, y) = self.gen.batch(1, i as u64);
+            let mut inputs = Vec::with_capacity(2 * l + 5);
+            inputs.extend(self.ws.iter().cloned());
+            inputs.extend(self.bs.iter().cloned());
+            inputs.push(HostTensor::f32(&[l], self.n_w.clone()));
+            inputs.push(HostTensor::f32(&[l], self.n_a.clone()));
+            inputs.push(HostTensor::scalar_f32(self.mmax()));
+            inputs.push(x);
+            inputs.push(y);
+            let out = self.rt.call("eval_step", &inputs)?;
+            correct += out[0].item()? as usize;
+            loss += out[1].item()?;
+        }
+        let total = (self.cfg.eval_batches * m.batch) as f64;
+        Ok((
+            correct as f64 / total,
+            loss / self.cfg.eval_batches as f64,
+        ))
+    }
+
+    /// Dump the post-quantization activations of one batch (figure input).
+    pub fn dump_acts(&self, batch_index: u64) -> Result<Vec<HostTensor>> {
+        let m = &self.rt.manifest;
+        let l = m.num_layers();
+        let (x, _) = self.gen.batch(0, batch_index);
+        let mut inputs = Vec::with_capacity(2 * l + 6);
+        inputs.extend(self.ws.iter().cloned());
+        inputs.extend(self.bs.iter().cloned());
+        inputs.push(HostTensor::f32(&[l], self.n_w.clone()));
+        inputs.push(HostTensor::f32(&[l], self.n_a.clone()));
+        inputs.push(HostTensor::scalar_f32(self.mmax()));
+        inputs.push(HostTensor::scalar_i32(0));
+        inputs.push(HostTensor::scalar_i32(self.step));
+        inputs.push(x);
+        self.rt.call("forward_acts", &inputs)
+    }
+
+    pub fn weights(&self) -> &[HostTensor] {
+        &self.ws
+    }
+
+    /// Force all bitlengths to a fixed value (test/figure helper).
+    pub fn into_bits_forced(mut self, bits: f32) -> Self {
+        self.n_w.iter_mut().for_each(|n| *n = bits);
+        self.n_a.iter_mut().for_each(|n| *n = bits);
+        self
+    }
+
+    /// Single uninstrumented step (bench harness hook).
+    pub fn run_one_step_for_bench(&mut self) -> Result<f64> {
+        let (loss, ..) = self.train_step(0)?;
+        Ok(loss)
+    }
+
+    pub fn bitlengths(&self) -> (&[f32], &[f32]) {
+        (&self.n_w, &self.n_a)
+    }
+
+    /// Run the configured training; produces the full metrics bundle.
+    pub fn run(&mut self) -> Result<RunResult> {
+        let m = &self.rt.manifest;
+        let l = m.num_layers();
+        let label = self.cfg.variant.label();
+        let mut res = RunResult {
+            label: label.clone(),
+            ..Default::default()
+        };
+        let mut step_csv = match &self.cfg.out_dir {
+            Some(dir) => Some(CsvSink::create(
+                &dir.join(format!("{label}_steps.csv")),
+                &["step", "epoch", "loss", "mean_bits_a", "mean_bits_w"],
+            )?),
+            None => None,
+        };
+
+        // LR drops at 1/3 and 2/3 of the run (paper's staged schedule).
+        let drops = [self.cfg.epochs / 3, 2 * self.cfg.epochs / 3];
+
+        let a_elems: Vec<f64> = m.act_shapes.iter().map(|s| s.iter().product::<usize>() as f64).collect();
+        let w_elems: Vec<f64> = m.weight_shapes.iter().map(|s| s.iter().product::<usize>() as f64).collect();
+
+        for epoch in 0..self.cfg.epochs {
+            if epoch > 0 && drops.contains(&epoch) {
+                self.lr *= 0.1;
+                self.bitchop.notify_lr_change();
+            }
+            let mut epoch_loss = 0.0;
+            let mut sum_bits_a = vec![0.0f64; l];
+            let mut sum_bits_w = vec![0.0f64; l];
+
+            for _ in 0..self.cfg.steps_per_epoch {
+                let (loss, n_used_w, n_used_a, a_gecko, w_gecko, zfrac) =
+                    self.train_step(epoch)?;
+                epoch_loss += loss;
+                if matches!(self.cfg.variant, Variant::SfpBc(_)) {
+                    res.bc_histogram.add(self.bitchop.bits());
+                }
+
+                // ---- exact per-step footprint ledger ------------------
+                let container_bits = self.cfg.variant.container().total_bits() as f64;
+                let is_sfp = matches!(
+                    self.cfg.variant,
+                    Variant::SfpQm(_) | Variant::SfpBc(_)
+                );
+                for i in 0..l {
+                    sum_bits_a[i] += n_used_a[i] as f64;
+                    sum_bits_w[i] += n_used_w[i] as f64;
+                    let (acts, weights) = if is_sfp {
+                        // acts: post-ReLU => sign elided; exponents via
+                        // Gecko (the step reports exact encoded bits);
+                        // mantissa = adaptive bits × elements.
+                        (
+                            ComponentBits {
+                                sign: 0.0,
+                                exponent: a_gecko[i] as f64,
+                                mantissa: n_used_a[i] as f64 * a_elems[i],
+                                metadata: 0.0,
+                            },
+                            ComponentBits {
+                                sign: w_elems[i],
+                                exponent: w_gecko[i] as f64,
+                                mantissa: n_used_w[i] as f64 * w_elems[i],
+                                metadata: 0.0,
+                            },
+                        )
+                    } else {
+                        (
+                            ComponentBits {
+                                sign: a_elems[i],
+                                exponent: 8.0 * a_elems[i],
+                                mantissa: (container_bits - 9.0) * a_elems[i],
+                                metadata: 0.0,
+                            },
+                            ComponentBits {
+                                sign: w_elems[i],
+                                exponent: 8.0 * w_elems[i],
+                                mantissa: (container_bits - 9.0) * w_elems[i],
+                                metadata: 0.0,
+                            },
+                        )
+                    };
+                    res.footprint.activations.add(acts);
+                    res.footprint.weights.add(weights);
+                    res.footprint_fp32.activations.add(ComponentBits {
+                        sign: a_elems[i],
+                        exponent: 8.0 * a_elems[i],
+                        mantissa: 23.0 * a_elems[i],
+                        metadata: 0.0,
+                    });
+                    res.footprint_fp32.weights.add(ComponentBits {
+                        sign: w_elems[i],
+                        exponent: 8.0 * w_elems[i],
+                        mantissa: 23.0 * w_elems[i],
+                        metadata: 0.0,
+                    });
+                    res.footprint_bf16.activations.add(ComponentBits {
+                        sign: a_elems[i],
+                        exponent: 8.0 * a_elems[i],
+                        mantissa: 7.0 * a_elems[i],
+                        metadata: 0.0,
+                    });
+                    res.footprint_bf16.weights.add(ComponentBits {
+                        sign: w_elems[i],
+                        exponent: 8.0 * w_elems[i],
+                        mantissa: 7.0 * w_elems[i],
+                        metadata: 0.0,
+                    });
+                    let _ = zfrac[i];
+                }
+
+                if let Some(csv) = step_csv.as_mut() {
+                    let mean_a = n_used_a.iter().map(|&b| b as f64).sum::<f64>() / l as f64;
+                    let mean_w = n_used_w.iter().map(|&b| b as f64).sum::<f64>() / l as f64;
+                    csv.row(&[
+                        (self.step - 1) as f64,
+                        epoch as f64,
+                        epoch_loss / ((self.step as f64) % self.cfg.steps_per_epoch as f64 + 1.0),
+                        mean_a,
+                        mean_w,
+                    ])?;
+                }
+            }
+
+            let (val_acc, val_loss) = self.evaluate()?;
+            let steps = self.cfg.steps_per_epoch as f64;
+            let lam_a = &self.rt.manifest.lambda_a;
+            let per_a: Vec<f64> = sum_bits_a.iter().map(|s| s / steps).collect();
+            let per_w: Vec<f64> = sum_bits_w.iter().map(|s| s / steps).collect();
+            let lam_sum: f64 = lam_a.iter().sum();
+            let wmean = per_a
+                .iter()
+                .zip(lam_a)
+                .map(|(b, l)| b * l)
+                .sum::<f64>()
+                / lam_sum;
+            res.epochs.push(EpochStats {
+                epoch,
+                train_loss: epoch_loss / steps,
+                val_acc,
+                val_loss,
+                mean_bits_a: per_a.iter().sum::<f64>() / l as f64,
+                mean_bits_w: per_w.iter().sum::<f64>() / l as f64,
+                wmean_bits_a: wmean,
+                per_layer_bits_a: per_a,
+                per_layer_bits_w: per_w,
+            });
+        }
+
+        if let Some(csv) = step_csv.as_mut() {
+            csv.flush()?;
+        }
+        res.final_val_acc = res.epochs.last().map(|e| e.val_acc).unwrap_or(0.0);
+        res.final_n_w = self.n_w.clone();
+        res.final_n_a = self.n_a.clone();
+
+        if let Some(dir) = &self.cfg.out_dir {
+            let mut s = Summary::new();
+            s.str("variant", &label)
+                .num("final_val_acc", res.final_val_acc)
+                .num("footprint_rel_fp32", res.footprint.relative_to(&res.footprint_fp32))
+                .num("footprint_rel_bf16", res.footprint.relative_to(&res.footprint_bf16))
+                .nums("final_n_a", &res.final_n_a.iter().map(|&v| v as f64).collect::<Vec<_>>())
+                .nums("final_n_w", &res.final_n_w.iter().map(|&v| v as f64).collect::<Vec<_>>())
+                .nums(
+                    "val_acc_per_epoch",
+                    &res.epochs.iter().map(|e| e.val_acc).collect::<Vec<_>>(),
+                )
+                .nums(
+                    "mean_bits_a_per_epoch",
+                    &res.epochs.iter().map(|e| e.mean_bits_a).collect::<Vec<_>>(),
+                );
+            s.write(&dir.join(format!("{label}_summary.json")))?;
+        }
+        Ok(res)
+    }
+}

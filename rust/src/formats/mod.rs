@@ -1,0 +1,205 @@
+//! IEEE-754 container utilities — the numeric-format ground truth.
+//!
+//! Mirrors `python/compile/kernels/ref.py` bit-for-bit; the cross-language
+//! golden tests in `rust/tests/golden.rs` pin the two implementations
+//! together.  Everything operates on the raw `u32` pattern of an `f32`:
+//! `[sign(1) | exponent(8, bias 127) | mantissa(23)]`.  A BFloat16 value is
+//! modelled as an `f32` whose low 16 mantissa bits are zero (the hardware
+//! ships 16-bit containers; the arithmetic value is identical).
+
+/// Mantissa bits of an IEEE-754 binary32.
+pub const F32_MANT_BITS: u32 = 23;
+/// Mantissa bits of BFloat16.
+pub const BF16_MANT_BITS: u32 = 7;
+/// Exponent field width shared by FP32 and BFloat16.
+pub const EXP_BITS: u32 = 8;
+/// Exponent bias shared by FP32 and BFloat16.
+pub const EXP_BIAS: i32 = 127;
+
+/// The floating-point container values are stashed in (§IV).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Container {
+    Fp32,
+    Bf16,
+}
+
+impl Container {
+    /// Mantissa bits the container can hold (the paper's `m`).
+    pub fn mant_bits(self) -> u32 {
+        match self {
+            Container::Fp32 => F32_MANT_BITS,
+            Container::Bf16 => BF16_MANT_BITS,
+        }
+    }
+
+    /// Uncompressed bits per value in this container.
+    pub fn total_bits(self) -> u32 {
+        1 + EXP_BITS + self.mant_bits()
+    }
+}
+
+impl std::fmt::Display for Container {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Container::Fp32 => write!(f, "FP32"),
+            Container::Bf16 => write!(f, "BF16"),
+        }
+    }
+}
+
+/// Split an `f32` into `(sign, biased exponent, mantissa)` fields.
+#[inline]
+pub fn split(x: f32) -> (u32, u32, u32) {
+    let b = x.to_bits();
+    (b >> 31, (b >> 23) & 0xFF, b & 0x7F_FFFF)
+}
+
+/// Reassemble an `f32` from `(sign, biased exponent, mantissa)` fields.
+#[inline]
+pub fn assemble(sign: u32, exp: u32, mant: u32) -> f32 {
+    f32::from_bits((sign << 31) | ((exp & 0xFF) << 23) | (mant & 0x7F_FFFF))
+}
+
+/// Biased exponent byte of an `f32` (0 for zeros/denormals, 255 for inf/NaN).
+#[inline]
+pub fn exponent(x: f32) -> u8 {
+    ((x.to_bits() >> 23) & 0xFF) as u8
+}
+
+/// Eq. 5: keep the top `n` mantissa bits (`n` counted within the f32
+/// mantissa field), truncating the rest.  `n = 23` is the identity,
+/// `n = 0` keeps only sign + exponent (value becomes ±2^e).
+#[inline]
+pub fn truncate_mantissa(x: f32, n: u32) -> f32 {
+    debug_assert!(n <= F32_MANT_BITS);
+    let mask = (u32::MAX) << (F32_MANT_BITS - n);
+    f32::from_bits(x.to_bits() & mask)
+}
+
+/// Truncate a full `f32` into its BFloat16-contained twin (drop the low
+/// 16 bits — round-toward-zero, matching the Pallas kernel semantics).
+#[inline]
+pub fn to_bf16(x: f32) -> f32 {
+    f32::from_bits(x.to_bits() & 0xFFFF_0000)
+}
+
+/// The 16-bit BFloat16 payload of an `f32` (after [`to_bf16`] truncation).
+#[inline]
+pub fn bf16_bits(x: f32) -> u16 {
+    (x.to_bits() >> 16) as u16
+}
+
+/// Quantize into a container: clamp `n` to the container's mantissa length
+/// and truncate; for BF16 this also drops the low 16 f32 bits.
+#[inline]
+pub fn quantize(x: f32, n: u32, container: Container) -> f32 {
+    let n = n.min(container.mant_bits());
+    let drop = F32_MANT_BITS - n;
+    f32::from_bits(x.to_bits() & (u32::MAX << drop))
+}
+
+/// Bits needed to represent `mag` (0 for 0): `32 - clz`, the hardware's
+/// leading-one detector (§IV-C).
+#[inline]
+pub fn mag_width(mag: u32) -> u32 {
+    32 - mag.leading_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_assemble_roundtrip() {
+        for &x in &[0.0f32, -0.0, 1.0, -1.5, 3.141592, 1e-38, 1e38, 255.75] {
+            let (s, e, m) = split(x);
+            assert_eq!(assemble(s, e, m).to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn truncate_full_width_is_identity() {
+        for &x in &[1.234f32, -9.75e-3, 6.022e23] {
+            assert_eq!(truncate_mantissa(x, 23).to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn truncate_zero_keeps_sign_exponent() {
+        let x = -13.37f32;
+        let t = truncate_mantissa(x, 0);
+        let (s, e, m) = split(t);
+        assert_eq!((s, e, m), (1, split(x).1, 0));
+        // magnitude is the power of two at x's exponent
+        assert_eq!(t, -8.0);
+    }
+
+    #[test]
+    fn truncate_monotone_in_bits() {
+        // more bits kept => error does not grow
+        let x = 0.7853981f32;
+        let mut prev = f32::INFINITY;
+        for n in 0..=23 {
+            let err = (x - truncate_mantissa(x, n)).abs();
+            assert!(err <= prev);
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn truncate_error_bound() {
+        // truncation error < 2^(e - n)
+        let xs: Vec<f32> = (1..1000).map(|i| (i as f32) * 0.37 - 180.0).collect();
+        for &x in &xs {
+            for n in [1u32, 4, 8, 15] {
+                let q = truncate_mantissa(x, n);
+                let e = x.abs().log2().floor();
+                assert!((x - q).abs() <= 2f32.powf(e - n as f32));
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_container_zeroes_low_16() {
+        let x = 1.2345678f32;
+        assert_eq!(to_bf16(x).to_bits() & 0xFFFF, 0);
+        assert_eq!(quantize(x, 23, Container::Bf16).to_bits() & 0xFFFF, 0);
+        // bf16 quantize with n=7 == plain bf16 truncation
+        assert_eq!(
+            quantize(x, 7, Container::Bf16).to_bits(),
+            to_bf16(x).to_bits()
+        );
+    }
+
+    #[test]
+    fn bf16_bits_roundtrip() {
+        let x = -2.71828f32;
+        let payload = bf16_bits(x);
+        assert_eq!(f32::from_bits((payload as u32) << 16), to_bf16(x));
+    }
+
+    #[test]
+    fn exponent_field() {
+        assert_eq!(exponent(1.0), 127);
+        assert_eq!(exponent(2.0), 128);
+        assert_eq!(exponent(0.5), 126);
+        assert_eq!(exponent(0.0), 0);
+        assert_eq!(exponent(f32::INFINITY), 255);
+    }
+
+    #[test]
+    fn mag_width_matches_leading_one_detector() {
+        assert_eq!(mag_width(0), 0);
+        assert_eq!(mag_width(1), 1);
+        assert_eq!(mag_width(2), 2);
+        assert_eq!(mag_width(3), 2);
+        assert_eq!(mag_width(4), 3);
+        assert_eq!(mag_width(255), 8);
+    }
+
+    #[test]
+    fn container_totals() {
+        assert_eq!(Container::Fp32.total_bits(), 32);
+        assert_eq!(Container::Bf16.total_bits(), 16);
+    }
+}

@@ -1,0 +1,169 @@
+//! Minimal MSB-first bit-packing primitives shared by the Gecko and SFP
+//! codecs.  The writer packs into `u64` words (the hot path of the whole
+//! compression stack — see EXPERIMENTS.md §Perf for the iteration log).
+
+/// Append-only bit writer, MSB-first within each 64-bit word.
+#[derive(Default, Debug, Clone)]
+pub struct BitWriter {
+    words: Vec<u64>,
+    /// Total bits written.
+    len: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bits: usize) -> Self {
+        Self {
+            words: Vec::with_capacity(bits / 64 + 1),
+            len: 0,
+        }
+    }
+
+    /// Append the low `n` bits of `v` (n <= 57 per call keeps the fast
+    /// two-word path branch-light; codecs never need more than 32).
+    #[inline]
+    pub fn push(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 57);
+        debug_assert!(n == 64 || v < (1u64 << n));
+        if n == 0 {
+            return;
+        }
+        let bit = self.len & 63;
+        let avail = 64 - bit as u32;
+        if self.len % 64 == 0 {
+            self.words.push(0);
+        }
+        let last = self.words.last_mut().unwrap();
+        if n <= avail {
+            *last |= v << (avail - n);
+        } else {
+            let hi = n - avail;
+            *last |= v >> hi;
+            self.words.push(v << (64 - hi));
+        }
+        self.len += n as usize;
+    }
+
+    /// Total bits written so far.
+    pub fn len_bits(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Finish and expose the packed words.
+    pub fn into_words(self) -> (Vec<u64>, usize) {
+        (self.words, self.len)
+    }
+
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+}
+
+/// Sequential reader over a [`BitWriter`]'s output.
+pub struct BitReader<'a> {
+    words: &'a [u64],
+    pos: usize,
+    len: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(words: &'a [u64], len_bits: usize) -> Self {
+        Self {
+            words,
+            pos: 0,
+            len: len_bits,
+        }
+    }
+
+    /// Read the next `n` bits (MSB-first); panics past the end in debug.
+    #[inline]
+    pub fn read(&mut self, n: u32) -> u64 {
+        debug_assert!(n <= 57);
+        debug_assert!(self.pos + n as usize <= self.len, "bitstream overrun");
+        if n == 0 {
+            return 0;
+        }
+        let word = self.pos / 64;
+        let bit = (self.pos & 63) as u32;
+        let avail = 64 - bit;
+        let out = if n <= avail {
+            (self.words[word] >> (avail - n)) & mask(n)
+        } else {
+            let hi = n - avail;
+            let top = self.words[word] & mask(avail);
+            (top << hi) | (self.words[word + 1] >> (64 - hi))
+        };
+        self.pos += n as usize;
+        out
+    }
+
+    /// Bits remaining.
+    pub fn remaining(&self) -> usize {
+        self.len - self.pos
+    }
+}
+
+#[inline]
+fn mask(n: u32) -> u64 {
+    if n >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << n) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_varied_widths() {
+        let mut w = BitWriter::new();
+        let fields: Vec<(u64, u32)> = (0..500)
+            .map(|i| {
+                let n = (i % 33) as u32 + 1;
+                ((i as u64).wrapping_mul(0x9E3779B97F4A7C15) & ((1u64 << n) - 1), n)
+            })
+            .collect();
+        for &(v, n) in &fields {
+            w.push(v, n);
+        }
+        let total: usize = fields.iter().map(|&(_, n)| n as usize).sum();
+        assert_eq!(w.len_bits(), total);
+        let (words, len) = w.into_words();
+        let mut r = BitReader::new(&words, len);
+        for &(v, n) in &fields {
+            assert_eq!(r.read(n), v, "width {n}");
+        }
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn zero_width_push_is_noop() {
+        let mut w = BitWriter::new();
+        w.push(0, 0);
+        w.push(0b101, 3);
+        assert_eq!(w.len_bits(), 3);
+        let (words, len) = w.into_words();
+        let mut r = BitReader::new(&words, len);
+        assert_eq!(r.read(3), 0b101);
+    }
+
+    #[test]
+    fn word_boundary_crossing() {
+        let mut w = BitWriter::new();
+        w.push((1u64 << 57) - 1, 57); // fill most of word 0
+        w.push(0x3FF, 10); // crosses into word 1
+        let (words, len) = w.into_words();
+        let mut r = BitReader::new(&words, len);
+        assert_eq!(r.read(57), (1u64 << 57) - 1);
+        assert_eq!(r.read(10), 0x3FF);
+    }
+}

@@ -1,0 +1,393 @@
+//! Gecko: lossless, value-adaptive exponent compression (§IV-C).
+//!
+//! Exponents of trained tensors cluster tightly around the bias (Fig. 9),
+//! so Gecko stores each exponent with only as many bits as its magnitude
+//! needs, amortizing the width metadata over groups:
+//!
+//! * **Delta mode** (the evaluated configuration): values stream in groups
+//!   of 64 viewed as an 8×8 matrix.  Each *column* shares a base exponent —
+//!   the column's row-0 exponent, stored raw (8 b).  Rows 1..7 hold deltas
+//!   from the column base in sign/magnitude; each *row* carries a 3-bit
+//!   width field sized by a leading-one detector across its 8 magnitudes.
+//! * **Fixed-bias mode**: deltas against a programmable bias (127 works
+//!   best for the studied models), groups of 8, one 3-bit width per group.
+//!
+//! Width codes 0..=6 mean "w magnitude bits + 1 sign bit per delta"; code 7
+//! is a raw escape (8 b exponent per value, no sign bit) that keeps the
+//! scheme lossless across the whole exponent range — deltas can span ±255.
+//!
+//! The width fields live in a *separate* metadata stream, exactly like the
+//! hardware's second sequential DRAM write stream (§V-A).  Encoded sizes
+//! match `python/compile/kernels/gecko_stats.py` bit-for-bit (golden test).
+
+pub mod bitstream;
+
+pub use bitstream::{BitReader, BitWriter};
+
+use crate::formats::mag_width;
+
+/// Values per delta-mode group (8×8).
+pub const GROUP: usize = 64;
+/// Rows (and lanes) per group.
+pub const ROWS: usize = 8;
+/// Width metadata bits per row/group.
+pub const WIDTH_FIELD_BITS: u32 = 3;
+/// Width code signalling the raw 8-bit escape.
+pub const RAW_ESCAPE: u32 = 7;
+
+/// Encoded exponent stream: payload + width metadata, as two sequential
+/// (DRAM-friendly) streams.
+#[derive(Debug, Clone)]
+pub struct Encoded {
+    pub payload: Vec<u64>,
+    pub payload_bits: usize,
+    pub metadata: Vec<u64>,
+    pub metadata_bits: usize,
+    /// Number of exponents encoded (excluding padding).
+    pub count: usize,
+}
+
+impl Encoded {
+    /// Total encoded bits `M + C` (§IV-C's compression-ratio numerator).
+    pub fn total_bits(&self) -> usize {
+        self.payload_bits + self.metadata_bits
+    }
+
+    /// `(M + C) / O` against raw 8-bit exponents.
+    pub fn compression_ratio(&self) -> f64 {
+        self.total_bits() as f64 / (8.0 * self.count as f64)
+    }
+}
+
+/// Gecko operating mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// 8×8 groups, per-column base from row 0, per-row widths.
+    Delta,
+    /// Groups of `group`, deltas against a fixed `bias`.
+    FixedBias { bias: u8, group: usize },
+}
+
+impl Default for Mode {
+    fn default() -> Self {
+        Mode::Delta
+    }
+}
+
+/// Extract biased exponents from an f32 slice.
+pub fn exponents(vals: &[f32]) -> Vec<u8> {
+    vals.iter()
+        .map(|v| ((v.to_bits() >> 23) & 0xFF) as u8)
+        .collect()
+}
+
+/// Encode a stream of biased exponents.  Trailing partial groups are padded
+/// by repeating the last exponent (zero deltas), as the hardware pads the
+/// final burst; padding costs are charged to the stream.
+pub fn encode(exps: &[u8], mode: Mode) -> Encoded {
+    match mode {
+        Mode::Delta => encode_delta(exps),
+        Mode::FixedBias { bias, group } => encode_fixed(exps, bias, group),
+    }
+}
+
+/// Decode an [`Encoded`] stream back to exponent bytes (exactly `count`).
+pub fn decode(enc: &Encoded, mode: Mode) -> Vec<u8> {
+    match mode {
+        Mode::Delta => decode_delta(enc),
+        Mode::FixedBias { bias, group } => decode_fixed(enc, bias, group),
+    }
+}
+
+fn padded(exps: &[u8], group: usize) -> Vec<u8> {
+    let mut v = exps.to_vec();
+    if v.is_empty() {
+        return v;
+    }
+    let pad = (group - v.len() % group) % group;
+    let last = *v.last().unwrap();
+    v.extend(std::iter::repeat(last).take(pad));
+    v
+}
+
+fn encode_delta(exps: &[u8]) -> Encoded {
+    let v = padded(exps, GROUP);
+    let mut payload = BitWriter::with_capacity(v.len() * 6);
+    let mut metadata = BitWriter::with_capacity(v.len() / ROWS * 3);
+
+    for g in v.chunks_exact(GROUP) {
+        // Row 0: the 8 column bases, raw.
+        let bases = &g[0..ROWS];
+        for &b in bases {
+            payload.push(b as u64, 8);
+        }
+        // Rows 1..7: sign/magnitude deltas, shared per-row width.
+        for r in 1..ROWS {
+            let row = &g[r * ROWS..(r + 1) * ROWS];
+            let w = row
+                .iter()
+                .zip(bases)
+                .map(|(&e, &b)| mag_width((e as i32 - b as i32).unsigned_abs()))
+                .max()
+                .unwrap();
+            if w <= 6 {
+                metadata.push(w as u64, WIDTH_FIELD_BITS);
+                for (&e, &b) in row.iter().zip(bases) {
+                    let d = e as i32 - b as i32;
+                    // fused [sign | magnitude] single push (perf §Perf)
+                    payload.push((((d < 0) as u64) << w) | d.unsigned_abs() as u64, w + 1);
+                }
+            } else {
+                metadata.push(RAW_ESCAPE as u64, WIDTH_FIELD_BITS);
+                for &e in row {
+                    payload.push(e as u64, 8);
+                }
+            }
+        }
+    }
+
+    let (pw, pb) = payload.into_words();
+    let (mw, mb) = metadata.into_words();
+    Encoded {
+        payload: pw,
+        payload_bits: pb,
+        metadata: mw,
+        metadata_bits: mb,
+        count: exps.len(),
+    }
+}
+
+fn decode_delta(enc: &Encoded) -> Vec<u8> {
+    let mut payload = BitReader::new(&enc.payload, enc.payload_bits);
+    let mut metadata = BitReader::new(&enc.metadata, enc.metadata_bits);
+    let padded_len = enc.count.div_ceil(GROUP) * GROUP;
+    let mut out = Vec::with_capacity(padded_len);
+
+    let groups = padded_len / GROUP;
+    for _ in 0..groups {
+        let mut bases = [0u8; ROWS];
+        for b in bases.iter_mut() {
+            *b = payload.read(8) as u8;
+        }
+        out.extend_from_slice(&bases);
+        for _ in 1..ROWS {
+            let w = metadata.read(WIDTH_FIELD_BITS) as u32;
+            if w == RAW_ESCAPE {
+                for _ in 0..ROWS {
+                    out.push(payload.read(8) as u8);
+                }
+            } else {
+                // fused [sign | magnitude] single read (perf §Perf)
+                for c in 0..ROWS {
+                    let field = payload.read(w + 1);
+                    let mag = (field & ((1 << w) - 1)) as i32;
+                    let d = if field >> w == 1 { -mag } else { mag };
+                    out.push((bases[c] as i32 + d) as u8);
+                }
+            }
+        }
+    }
+    out.truncate(enc.count);
+    out
+}
+
+fn encode_fixed(exps: &[u8], bias: u8, group: usize) -> Encoded {
+    assert!(group > 0);
+    let v = padded(exps, group);
+    let mut payload = BitWriter::with_capacity(v.len() * 6);
+    let mut metadata = BitWriter::with_capacity(v.len() / group * 3);
+
+    for g in v.chunks_exact(group) {
+        let w = g
+            .iter()
+            .map(|&e| mag_width((e as i32 - bias as i32).unsigned_abs()))
+            .max()
+            .unwrap();
+        if w <= 6 {
+            metadata.push(w as u64, WIDTH_FIELD_BITS);
+            for &e in g {
+                let d = e as i32 - bias as i32;
+                payload.push((((d < 0) as u64) << w) | d.unsigned_abs() as u64, w + 1);
+            }
+        } else {
+            metadata.push(RAW_ESCAPE as u64, WIDTH_FIELD_BITS);
+            for &e in g {
+                payload.push(e as u64, 8);
+            }
+        }
+    }
+
+    let (pw, pb) = payload.into_words();
+    let (mw, mb) = metadata.into_words();
+    Encoded {
+        payload: pw,
+        payload_bits: pb,
+        metadata: mw,
+        metadata_bits: mb,
+        count: exps.len(),
+    }
+}
+
+fn decode_fixed(enc: &Encoded, bias: u8, group: usize) -> Vec<u8> {
+    let mut payload = BitReader::new(&enc.payload, enc.payload_bits);
+    let mut metadata = BitReader::new(&enc.metadata, enc.metadata_bits);
+    let padded_len = enc.count.div_ceil(group) * group;
+    let mut out = Vec::with_capacity(padded_len);
+    for _ in 0..padded_len / group {
+        let w = metadata.read(WIDTH_FIELD_BITS) as u32;
+        for _ in 0..group {
+            if w == RAW_ESCAPE {
+                out.push(payload.read(8) as u8);
+            } else {
+                let field = payload.read(w + 1);
+                let mag = (field & ((1 << w) - 1)) as i32;
+                let d = if field >> w == 1 { -mag } else { mag };
+                out.push((bias as i32 + d) as u8);
+            }
+        }
+    }
+    out.truncate(enc.count);
+    out
+}
+
+/// Encoded size in bits without materializing the bitstream — the fast
+/// accounting path used by the footprint models (identical arithmetic to
+/// the Pallas `gecko_stats` kernel).
+pub fn encoded_bits(exps: &[u8], mode: Mode) -> usize {
+    match mode {
+        Mode::Delta => {
+            let v = padded(exps, GROUP);
+            let mut bits = 0usize;
+            for g in v.chunks_exact(GROUP) {
+                bits += ROWS * 8;
+                let bases = &g[0..ROWS];
+                for r in 1..ROWS {
+                    let row = &g[r * ROWS..(r + 1) * ROWS];
+                    let w = row
+                        .iter()
+                        .zip(bases)
+                        .map(|(&e, &b)| mag_width((e as i32 - b as i32).unsigned_abs()))
+                        .max()
+                        .unwrap();
+                    bits += WIDTH_FIELD_BITS as usize
+                        + if w <= 6 { ROWS * (w as usize + 1) } else { ROWS * 8 };
+                }
+            }
+            bits
+        }
+        Mode::FixedBias { bias, group } => {
+            let v = padded(exps, group);
+            let mut bits = 0usize;
+            for g in v.chunks_exact(group) {
+                let w = g
+                    .iter()
+                    .map(|&e| mag_width((e as i32 - bias as i32).unsigned_abs()))
+                    .max()
+                    .unwrap();
+                bits += WIDTH_FIELD_BITS as usize
+                    + if w <= 6 {
+                        group * (w as usize + 1)
+                    } else {
+                        group * 8
+                    };
+            }
+            bits
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exps_from(vals: &[f32]) -> Vec<u8> {
+        exponents(vals)
+    }
+
+    fn pseudo_vals(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut s = seed.wrapping_add(0x9E3779B97F4A7C15);
+        (0..n)
+            .map(|_| {
+                s ^= s >> 12;
+                s ^= s << 25;
+                s ^= s >> 27;
+                let u = (s.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32;
+                (u - 0.5) * 2.0 * scale
+            })
+            .collect()
+    }
+
+    #[test]
+    fn delta_roundtrip_gaussianish() {
+        let vals = pseudo_vals(1000, 1, 10.0);
+        let e = exps_from(&vals);
+        let enc = encode(&e, Mode::Delta);
+        assert_eq!(decode(&enc, Mode::Delta), e);
+    }
+
+    #[test]
+    fn delta_roundtrip_extreme_exponents() {
+        // forces raw escapes: mix tiny and huge magnitudes
+        let mut vals = pseudo_vals(512, 2, 1e30);
+        vals.extend(pseudo_vals(512, 3, 1e-30));
+        let e = exps_from(&vals);
+        let enc = encode(&e, Mode::Delta);
+        assert_eq!(decode(&enc, Mode::Delta), e);
+    }
+
+    #[test]
+    fn delta_roundtrip_with_zeros_and_partial_group() {
+        let mut vals = pseudo_vals(137, 4, 2.0);
+        vals[5] = 0.0;
+        vals[77] = 0.0;
+        let e = exps_from(&vals);
+        let enc = encode(&e, Mode::Delta);
+        assert_eq!(decode(&enc, Mode::Delta), e);
+        assert_eq!(enc.count, 137);
+    }
+
+    #[test]
+    fn fixed_roundtrip() {
+        let vals = pseudo_vals(999, 5, 4.0);
+        let e = exps_from(&vals);
+        let mode = Mode::FixedBias { bias: 127, group: 8 };
+        let enc = encode(&e, mode);
+        assert_eq!(decode(&enc, mode), e);
+    }
+
+    #[test]
+    fn constant_stream_minimal_size() {
+        let e = vec![127u8; 64];
+        let enc = encode(&e, Mode::Delta);
+        // 64 base bits + 7 rows * (8 sign bits); metadata 7 * 3
+        assert_eq!(enc.payload_bits, 64 + 7 * 8);
+        assert_eq!(enc.metadata_bits, 7 * 3);
+    }
+
+    #[test]
+    fn encoded_bits_matches_real_encoder() {
+        for seed in 0..5u64 {
+            let vals = pseudo_vals(473, seed, 7.0);
+            let e = exps_from(&vals);
+            for mode in [Mode::Delta, Mode::FixedBias { bias: 127, group: 8 }] {
+                let enc = encode(&e, mode);
+                assert_eq!(encoded_bits(&e, mode), enc.total_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn trained_like_values_compress_well() {
+        // Unit-scale values: exponents hug 127 => well under 8 b/exponent.
+        let vals = pseudo_vals(8192, 9, 1.0);
+        let enc = encode(&exps_from(&vals), Mode::Delta);
+        assert!(enc.compression_ratio() < 1.0, "{}", enc.compression_ratio());
+    }
+
+    #[test]
+    fn empty_stream() {
+        let enc = encode(&[], Mode::Delta);
+        assert_eq!(enc.total_bits(), 0);
+        assert!(decode(&enc, Mode::Delta).is_empty());
+    }
+}

@@ -1,0 +1,293 @@
+//! Analytical accelerator + DRAM model behind Table II (§VI-C).
+//!
+//! The paper models "an accelerator with 8K units each capable of 4 MACs
+//! per cycle and a 500 MHz clock for a peak compute bandwidth of 16 TFLOPS
+//! ... 8 channels of LPDDR4-3200 DRAM memory and 32 MB of on-chip buffers",
+//! with DRAMSIM3 timing/energy, CACTI buffers, and synthesized Gecko
+//! codecs.  None of those tools are available here; per DESIGN.md §2 the
+//! substitution is a consistent linear event-count model: a roofline
+//! `time = max(compute, memory, codec)` per layer per pass and an energy
+//! table multiplied into the same event counts.  The substitution preserves
+//! the quantities the table actually reports — *ratios* between formats —
+//! because all formats share the same counts and constants.
+//!
+//! Dataflow (§VI-C): forward runs layer-first per batch, reading weights
+//! once per layer per batch; backward uses the 32 MB buffer for
+//! mini-batching, re-reading weights once per mini-batch chunk; gradients
+//! are produced and consumed on-chip.
+
+use crate::traces::{LayerTrace, NetworkTrace};
+
+
+/// Energy/time constants of the modelled accelerator.
+///
+/// Calibration note (DESIGN.md §2): Table II's published numbers pin the
+/// paper's (unpublished) energy split — BF16's *exactly* 2.00× gain on both
+/// networks and SFP_QM's 6.12× at a 14.7% footprint are only consistent
+/// with DRAM ≈ 96–99% of baseline energy and BF16 MACs at half the FP32
+/// MAC energy.  The defaults below reproduce that split: system-level
+/// LPDDR4 energy at poor row locality (~40 pJ/b incl. controller + PHY)
+/// against an aggressively energy-optimized 65 nm MAC array.  Absolute
+/// joules are not comparable to silicon; ratios between formats are.
+#[derive(Debug, Clone, Copy)]
+pub struct AccelConfig {
+    /// MAC units × MACs/unit/cycle.
+    pub macs_per_cycle: f64,
+    /// Core clock (Hz).
+    pub freq: f64,
+    /// Aggregate DRAM bandwidth (bits/s): 8 × LPDDR4-3200 x16.
+    pub dram_bw_bits: f64,
+    /// On-chip buffer for backward-pass mini-batching (bytes).
+    pub buffer_bytes: f64,
+    /// DRAM energy per bit moved (pJ).
+    pub dram_pj_per_bit: f64,
+    /// On-chip SRAM energy per bit (pJ); every DRAM bit also crosses SRAM.
+    pub sram_pj_per_bit: f64,
+    /// FP32 MAC energy (pJ); BF16 MACs cost half (see calibration note).
+    pub mac_fp32_pj: f64,
+    /// Gecko/SFP codec energy per bit (pJ) — synthesis-scale, tiny.
+    pub codec_pj_per_bit: f64,
+    /// Codec throughput: values/cycle/channel × channels × 2 units.
+    pub codec_vals_per_cycle: f64,
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        Self {
+            macs_per_cycle: 8192.0 * 4.0,
+            freq: 500e6,
+            dram_bw_bits: 8.0 * 6.4e9 * 8.0, // 8 ch × 6.4 GB/s × 8 b
+            buffer_bytes: 32.0 * 1024.0 * 1024.0,
+            dram_pj_per_bit: 40.0,
+            sram_pj_per_bit: 0.6,
+            mac_fp32_pj: 0.06,
+            codec_pj_per_bit: 0.05,
+            codec_vals_per_cycle: 8.0 * 2.0 * 8.0,
+        }
+    }
+}
+
+impl AccelConfig {
+    /// Peak MAC throughput (MACs/s) — 16.4 T for the default config.
+    pub fn peak_macs(&self) -> f64 {
+        self.macs_per_cycle * self.freq
+    }
+}
+
+/// The compute datatype (decides MAC energy and on-chip word width).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputeType {
+    Fp32,
+    Bf16,
+}
+
+impl ComputeType {
+    fn mac_pj(self, cfg: &AccelConfig) -> f64 {
+        match self {
+            ComputeType::Fp32 => cfg.mac_fp32_pj,
+            ComputeType::Bf16 => cfg.mac_fp32_pj / 2.0,
+        }
+    }
+}
+
+/// Per-layer footprint (bits) the memory system actually moves — produced
+/// by the footprint models (raw containers, SFP, baselines).
+#[derive(Debug, Clone, Copy)]
+pub struct LayerBits {
+    /// One copy of the layer's weights.
+    pub weight: f64,
+    /// The layer's stashed output activations for the whole batch.
+    pub act: f64,
+}
+
+/// Time/energy totals for one training pass (fwd+bwd) of one batch.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PassStats {
+    pub time_s: f64,
+    pub energy_j: f64,
+    pub dram_bits: f64,
+    pub macs: f64,
+    /// Layers whose time is memory-bound (fwd+bwd counted separately).
+    pub memory_bound_layers: usize,
+    pub total_layer_passes: usize,
+}
+
+impl PassStats {
+    pub fn add(&mut self, o: &PassStats) {
+        self.time_s += o.time_s;
+        self.energy_j += o.energy_j;
+        self.dram_bits += o.dram_bits;
+        self.macs += o.macs;
+        self.memory_bound_layers += o.memory_bound_layers;
+        self.total_layer_passes += o.total_layer_passes;
+    }
+}
+
+/// Simulate one training pass of `net` at `batch`, with per-layer stored
+/// footprints given by `bits_of` (which encodes the compression variant).
+pub fn simulate_pass(
+    cfg: &AccelConfig,
+    net: &NetworkTrace,
+    batch: usize,
+    compute: ComputeType,
+    bits_of: &dyn Fn(&LayerTrace) -> LayerBits,
+) -> PassStats {
+    let mut out = PassStats::default();
+    let uncompressed_word = match compute {
+        ComputeType::Fp32 => 32.0,
+        ComputeType::Bf16 => 16.0,
+    };
+
+    for layer in &net.layers {
+        let b = bits_of(layer);
+        // effective MACs at the layer's achievable array utilization
+        let macs_f = layer.macs as f64 * batch as f64 / layer.compute_util.max(1e-3);
+
+        // ---- forward: read W once, stream in/out activations.  The input
+        // activation bits are the previous layer's output; charging each
+        // layer its own output once for write and once for read (by the
+        // next layer) double-counts exactly like hardware does (one write
+        // + one read per stashed tensor crossing DRAM).
+        let fwd_bits = b.weight + 2.0 * b.act;
+        out.add(&layer_pass(cfg, macs_f, fwd_bits, b.act, compute));
+
+        // ---- backward: 2× the MACs (weight grad + input grad); reads the
+        // stashed activations once; weights re-read per mini-batch chunk;
+        // weight update written once.  Gradients stay on-chip (§VI-C).
+        let act_bytes_per_sample = layer.act_elems as f64 * uncompressed_word / 8.0;
+        let chunk = (cfg.buffer_bytes / (2.0 * act_bytes_per_sample))
+            .floor()
+            .clamp(1.0, batch as f64);
+        let chunks = (batch as f64 / chunk).ceil();
+        let bwd_bits = b.act + chunks * b.weight + b.weight;
+        out.add(&layer_pass(cfg, 2.0 * macs_f, bwd_bits, b.act, compute));
+    }
+    out
+}
+
+fn layer_pass(
+    cfg: &AccelConfig,
+    macs: f64,
+    dram_bits: f64,
+    codec_value_bits: f64,
+    compute: ComputeType,
+) -> PassStats {
+    let t_compute = macs / cfg.peak_macs();
+    let t_memory = dram_bits / cfg.dram_bw_bits;
+    // codec: values crossing the compressors; bits/32 approximates values
+    let t_codec = (codec_value_bits / 32.0) / (cfg.codec_vals_per_cycle * cfg.freq);
+    let time = t_compute.max(t_memory).max(t_codec);
+
+    let energy_pj = dram_bits * cfg.dram_pj_per_bit
+        + dram_bits * cfg.sram_pj_per_bit
+        + macs * compute.mac_pj(cfg)
+        + codec_value_bits * cfg.codec_pj_per_bit;
+
+    PassStats {
+        time_s: time,
+        energy_j: energy_pj * 1e-12,
+        dram_bits,
+        macs,
+        memory_bound_layers: usize::from(t_memory >= t_compute),
+        total_layer_passes: 1,
+    }
+}
+
+/// Speedup and energy-efficiency gain of `variant` over `baseline`
+/// (Table II cells).
+pub fn gains(baseline: &PassStats, variant: &PassStats) -> (f64, f64) {
+    (
+        baseline.time_s / variant.time_s,
+        baseline.energy_j / variant.energy_j,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traces::resnet18;
+
+    fn raw_bits(word: f64, batch: usize) -> impl Fn(&LayerTrace) -> LayerBits {
+        move |l: &LayerTrace| LayerBits {
+            weight: l.weight_elems as f64 * word,
+            act: l.act_elems as f64 * word * batch as f64,
+        }
+    }
+
+    #[test]
+    fn peak_is_16_tflops() {
+        let cfg = AccelConfig::default();
+        assert!((cfg.peak_macs() - 16.384e12).abs() < 1e9);
+    }
+
+    #[test]
+    fn bf16_halves_traffic_not_time() {
+        // §VI-C: BF16 gives < 2× speedup because layers go compute-bound.
+        let cfg = AccelConfig::default();
+        let net = resnet18();
+        let fp32 = simulate_pass(&cfg, &net, 256, ComputeType::Fp32, &raw_bits(32.0, 256));
+        let bf16 = simulate_pass(&cfg, &net, 256, ComputeType::Bf16, &raw_bits(16.0, 256));
+        let (speed, energy) = gains(&fp32, &bf16);
+        assert!(speed > 1.2 && speed < 2.0, "bf16 speedup {speed}");
+        // the calibrated split makes BF16 land at the paper's exact 2.00×
+        assert!((energy - 2.0).abs() < 0.05, "bf16 energy {energy}");
+        // >= 2×: halving containers also fits more samples per backward
+        // mini-batch chunk, saving weight re-reads on top of the 2×.
+        let ratio = fp32.dram_bits / bf16.dram_bits;
+        assert!((2.0..2.2).contains(&ratio), "traffic ratio {ratio}");
+    }
+
+    #[test]
+    fn less_traffic_never_slower() {
+        let cfg = AccelConfig::default();
+        let net = resnet18();
+        let hi = simulate_pass(&cfg, &net, 64, ComputeType::Fp32, &raw_bits(32.0, 64));
+        let lo = simulate_pass(&cfg, &net, 64, ComputeType::Fp32, &raw_bits(8.0, 64));
+        assert!(lo.time_s <= hi.time_s);
+        assert!(lo.energy_j < hi.energy_j);
+    }
+
+    #[test]
+    fn compute_bound_floor() {
+        // With near-zero traffic, time approaches the compute roofline and
+        // further compression stops helping (the paper's §VI-C observation).
+        let cfg = AccelConfig::default();
+        let net = resnet18();
+        let tiny = simulate_pass(&cfg, &net, 256, ComputeType::Fp32, &raw_bits(0.5, 256));
+        let tinier = simulate_pass(&cfg, &net, 256, ComputeType::Fp32, &raw_bits(0.25, 256));
+        let (speed, _) = gains(&tiny, &tinier);
+        assert!(speed < 1.05, "already compute bound, speed {speed}");
+        let compute_time: f64 =
+            3.0 * net.total_macs_per_sample() as f64 * 256.0 / cfg.peak_macs();
+        assert!((tiny.time_s - compute_time) / compute_time < 0.25);
+    }
+
+    #[test]
+    fn dram_energy_dominates_at_fp32() {
+        let cfg = AccelConfig::default();
+        let net = resnet18();
+        let s = simulate_pass(&cfg, &net, 256, ComputeType::Fp32, &raw_bits(32.0, 256));
+        let dram_j = s.dram_bits * (cfg.dram_pj_per_bit + cfg.sram_pj_per_bit) * 1e-12;
+        // §VI-C: "energy consumption of DRAM accesses greatly outclasses
+        // that of computation" — the calibrated split puts DRAM > 90%.
+        assert!(dram_j / s.energy_j > 0.9, "dram share {}", dram_j / s.energy_j);
+    }
+
+    #[test]
+    fn minibatch_chunking_rereads_weights() {
+        // A layer whose batch activations exceed the buffer must re-read
+        // weights; verify traffic grows vs. an infinite buffer.
+        let net = resnet18();
+        let small = AccelConfig {
+            buffer_bytes: 4.0 * 1024.0 * 1024.0,
+            ..Default::default()
+        };
+        let big = AccelConfig {
+            buffer_bytes: 1e12,
+            ..Default::default()
+        };
+        let a = simulate_pass(&small, &net, 256, ComputeType::Fp32, &raw_bits(32.0, 256));
+        let b = simulate_pass(&big, &net, 256, ComputeType::Fp32, &raw_bits(32.0, 256));
+        assert!(a.dram_bits > b.dram_bits);
+    }
+}

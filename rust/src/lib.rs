@@ -1,0 +1,35 @@
+//! # Schrödinger's FP — reproduction library
+//!
+//! Reproduction of *"Schrödinger's FP: Dynamic Adaptation of Floating-Point
+//! Containers for Deep Learning Training"* (Nikolić et al., 2022) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** (`python/compile/kernels/`): Pallas mantissa-quantization and
+//!   Gecko-statistics kernels, AOT-lowered into the training step.
+//! * **L2** (`python/compile/model.py`): JAX fwd/bwd of a residual CNN with
+//!   fake-quantized stash tensors, exported as HLO text.
+//! * **L3** (this crate): everything on the request path — the PJRT runtime
+//!   ([`runtime`]), the training coordinator with the BitChop / Quantum
+//!   Mantissa adaptation policies ([`coordinator`]), and the hardware
+//!   substrates: bit-exact Gecko and SFP codecs ([`gecko`], [`sfp`]),
+//!   compression baselines ([`baselines`]), the analytical accelerator +
+//!   DRAM model ([`hwsim`]), ImageNet-scale layer traces ([`traces`]), and
+//!   streaming statistics ([`stats`]).
+//!
+//! Python never runs on the request path: `make artifacts` lowers the model
+//! once; the `repro` binary is self-contained afterwards.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod formats;
+pub mod gecko;
+pub mod hwsim;
+pub mod report;
+pub mod runtime;
+pub mod sfp;
+pub mod stats;
+pub mod traces;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,7 @@
+//! Table/figure generation — one driver per experiment in DESIGN.md §4.
+
+pub mod footprint;
+pub mod figures;
+pub mod tables;
+
+pub use footprint::{fig13_rows, Fig13Row, FootprintModel, MantissaPolicy};

@@ -1,0 +1,134 @@
+//! PJRT execution: load HLO-text artifacts, compile once, run many times.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: HLO *text* is the
+//! interchange format (xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id
+//! protos), computations are lowered with `return_tuple=True` so every
+//! execution returns one tuple literal that we decompose against the
+//! manifest's output specs.
+
+use super::manifest::{ArtifactSpec, DType, Manifest};
+use super::tensor::HostTensor;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A compiled entry point plus its marshaling specs.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+}
+
+/// The PJRT runtime: one CPU client + the compiled artifact table.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: BTreeMap<String, Executable>,
+}
+
+fn literal_of(t: &HostTensor) -> Result<xla::Literal> {
+    let ty = match t.dtype() {
+        DType::F32 => xla::ElementType::F32,
+        DType::I32 => xla::ElementType::S32,
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, &t.bytes())
+        .map_err(|e| anyhow!("literal creation: {e:?}"))
+}
+
+fn host_of(lit: &xla::Literal, spec: &super::manifest::TensorSpec) -> Result<HostTensor> {
+    match spec.dtype {
+        DType::F32 => {
+            let v = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("output '{}' to_vec f32: {e:?}", spec.name))?;
+            Ok(HostTensor::f32(&spec.shape, v))
+        }
+        DType::I32 => {
+            let v = lit
+                .to_vec::<i32>()
+                .map_err(|e| anyhow!("output '{}' to_vec i32: {e:?}", spec.name))?;
+            Ok(HostTensor::i32(&spec.shape, v))
+        }
+    }
+}
+
+impl Runtime {
+    /// Build a CPU PJRT client and compile every artifact in `dir`.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut executables = BTreeMap::new();
+        for (name, spec) in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("bad path {:?}", spec.file))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            executables.insert(
+                name.clone(),
+                Executable {
+                    exe,
+                    spec: spec.clone(),
+                },
+            );
+        }
+        Ok(Runtime {
+            client,
+            manifest,
+            executables,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute `name` with `inputs` (validated against the manifest order);
+    /// returns the flat output tensors in manifest order.
+    pub fn call(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("no executable {name}"))?;
+        let spec = &exe.spec;
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "{name}: {} inputs given, {} expected",
+                inputs.len(),
+                spec.inputs.len()
+            ));
+        }
+        for (t, s) in inputs.iter().zip(&spec.inputs) {
+            t.check(s).with_context(|| format!("calling {name}"))?;
+        }
+
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(literal_of).collect::<Result<_>>()?;
+        let result = exe
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        if parts.len() != spec.outputs.len() {
+            return Err(anyhow!(
+                "{name}: {} outputs, {} expected",
+                parts.len(),
+                spec.outputs.len()
+            ));
+        }
+        parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(l, s)| host_of(l, s))
+            .collect()
+    }
+}

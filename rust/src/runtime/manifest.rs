@@ -1,0 +1,207 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the Rust runtime: per-artifact ordered input/output tensor specs.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Element type of a marshalled tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(anyhow!("unsupported dtype {other}")),
+        }
+    }
+}
+
+/// One tensor slot in an entry point's flat signature.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The whole manifest: model geometry + artifact table.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub batch: usize,
+    pub image: Vec<usize>,
+    pub num_classes: usize,
+    pub layers: Vec<String>,
+    pub weight_shapes: Vec<Vec<usize>>,
+    pub bias_shapes: Vec<Vec<usize>>,
+    pub act_shapes: Vec<Vec<usize>>,
+    pub lambda_w: Vec<f64>,
+    pub lambda_a: Vec<f64>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn specs(j: &Json, key: &str) -> Result<Vec<TensorSpec>> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing {key}"))?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("spec name"))?
+                    .to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("spec shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<_>>()?,
+                dtype: DType::parse(t.get("dtype").and_then(Json::as_str).unwrap_or("f32"))?,
+            })
+        })
+        .collect()
+}
+
+fn shapes(j: &Json, key: &str) -> Result<Vec<Vec<usize>>> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing {key}"))?
+        .iter()
+        .map(|s| {
+            s.as_arr()
+                .ok_or_else(|| anyhow!("bad shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect()
+        })
+        .collect()
+}
+
+fn floats(j: &Json, key: &str) -> Result<Vec<f64>> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing {key}"))?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| anyhow!("bad float")))
+        .collect()
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`; artifact paths become absolute.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing artifacts"))?
+        {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(
+                        a.get("file")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("artifact file"))?,
+                    ),
+                    inputs: specs(a, "inputs")?,
+                    outputs: specs(a, "outputs")?,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            batch: j.get("batch").and_then(Json::as_usize).unwrap_or(64),
+            image: j
+                .get("image")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            num_classes: j.get("num_classes").and_then(Json::as_usize).unwrap_or(10),
+            layers: j
+                .get("layers")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|s| s.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default(),
+            weight_shapes: shapes(&j, "weight_shapes")?,
+            bias_shapes: shapes(&j, "bias_shapes")?,
+            act_shapes: shapes(&j, "act_shapes")?,
+            lambda_w: floats(&j, "lambda_w")?,
+            lambda_a: floats(&j, "lambda_a")?,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_generated_manifest_shape() {
+        let text = r#"{
+ "batch": 64, "image": [16, 16, 3], "num_classes": 10,
+ "layers": ["c0", "fc"],
+ "weight_shapes": [[3, 3, 3, 16], [32, 10]],
+ "bias_shapes": [[16], [10]],
+ "act_shapes": [[64, 16, 16, 16], [64, 32]],
+ "lambda_w": [0.1, 0.2], "lambda_a": [0.3, 0.4],
+ "artifacts": {"eval_step": {"file": "eval_step.hlo.txt",
+   "inputs": [{"name": "x", "shape": [64, 16, 16, 3], "dtype": "f32"},
+              {"name": "y", "shape": [64], "dtype": "i32"}],
+   "outputs": [{"name": "correct", "shape": [], "dtype": "i32"}]}}}"#;
+        let dir = std::env::temp_dir().join("sfp_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.batch, 64);
+        assert_eq!(m.layers, vec!["c0", "fc"]);
+        let a = m.artifact("eval_step").unwrap();
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.inputs[0].elems(), 64 * 16 * 16 * 3);
+        assert_eq!(a.outputs[0].shape.len(), 0);
+        assert!(m.artifact("nope").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: load AOT HLO-text artifacts (see `python/compile/aot.py`)
+//! and execute them from the request path.  Python never runs here.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::Runtime;
+pub use manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+pub use tensor::{Data, HostTensor};

@@ -1,0 +1,144 @@
+//! Host-side tensors marshalled into / out of PJRT literals.
+
+use super::manifest::{DType, TensorSpec};
+use anyhow::{anyhow, Result};
+
+/// A host tensor: shape + typed storage.  All request-path state (model
+/// parameters, optimizer state, batches) lives in these between steps.
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+#[derive(Debug, Clone)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self {
+            shape: shape.to_vec(),
+            data: Data::F32(data),
+        }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self {
+            shape: shape.to_vec(),
+            data: Data::I32(data),
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self::f32(&[], vec![v])
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Self::i32(&[], vec![v])
+    }
+
+    pub fn zeros(spec: &TensorSpec) -> Self {
+        match spec.dtype {
+            DType::F32 => Self::f32(&spec.shape, vec![0.0; spec.elems()]),
+            DType::I32 => Self::i32(&spec.shape, vec![0; spec.elems()]),
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
+    /// First element as f64 (for scalar outputs).
+    pub fn item(&self) -> Result<f64> {
+        match &self.data {
+            Data::F32(v) => v.first().map(|&x| x as f64),
+            Data::I32(v) => v.first().map(|&x| x as f64),
+        }
+        .ok_or_else(|| anyhow!("empty tensor"))
+    }
+
+    /// Validate against a manifest spec (shape + dtype).
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        if self.shape != spec.shape || self.dtype() != spec.dtype {
+            return Err(anyhow!(
+                "tensor mismatch for '{}': got {:?} {:?}, want {:?} {:?}",
+                spec.name,
+                self.shape,
+                self.dtype(),
+                spec.shape,
+                spec.dtype
+            ));
+        }
+        Ok(())
+    }
+
+    /// Raw little-endian bytes (for PJRT literal creation).
+    pub fn bytes(&self) -> Vec<u8> {
+        match &self.data {
+            Data::F32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            Data::I32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_item() {
+        let t = HostTensor::f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.elems(), 6);
+        assert_eq!(t.item().unwrap(), 1.0);
+        assert_eq!(t.bytes().len(), 24);
+    }
+
+    #[test]
+    fn spec_check() {
+        let spec = TensorSpec {
+            name: "x".into(),
+            shape: vec![4],
+            dtype: DType::I32,
+        };
+        assert!(HostTensor::i32(&[4], vec![0; 4]).check(&spec).is_ok());
+        assert!(HostTensor::f32(&[4], vec![0.; 4]).check(&spec).is_err());
+        assert!(HostTensor::i32(&[2, 2], vec![0; 4]).check(&spec).is_err());
+    }
+
+    #[test]
+    fn zeros_from_spec() {
+        let spec = TensorSpec {
+            name: "m".into(),
+            shape: vec![2, 2],
+            dtype: DType::F32,
+        };
+        let t = HostTensor::zeros(&spec);
+        assert_eq!(t.as_f32().unwrap(), &[0.0; 4]);
+    }
+}

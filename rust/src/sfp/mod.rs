@@ -1,0 +1,432 @@
+//! SFP compressor / decompressor — the hardware encode path of §V, Fig. 11.
+//!
+//! The hardware consumes one row of 8 values per cycle; a group is 8 rows
+//! (64 values) treated as an 8×8 matrix.  Column `c` shares a base exponent
+//! (its row-0 exponent); rows 1..7 store exponent deltas from the column
+//! bases.  Every row uses a single container bitlength:
+//!
+//! ```text
+//! row bits/value = value-sign (1, elided for known-non-negative tensors)
+//!                + exponent field   (8 raw for row 0;
+//!                                    w+1 sign/mag delta, or 8 raw escape)
+//!                + mantissa bits n  (from Quantum Mantissa or BitChop)
+//! ```
+//!
+//! The per-row exponent width (3 b) goes to a separate metadata stream —
+//! the hardware's second sequential DRAM stream.  Because every lane of a
+//! row uses the same bitlength, the 8 packers fill their 32-bit output
+//! registers in tandem (Proteus-style rotate-and-mask keeps values inside
+//! their lane), so the compressor emits aligned 8×32 b bursts; the cycle
+//! model below reflects that rate behaviour.
+//!
+//! Decompression restores the *container* value exactly: mantissa bits
+//! beyond `n` come back as zeros, i.e. `decompress(compress(x, n)) ==
+//! truncate_mantissa(x, n)` — lossless for tensors the quantizer already
+//! truncated (property-tested in `rust/tests/props.rs`).
+
+use crate::formats::{mag_width, Container, F32_MANT_BITS};
+use crate::gecko::{BitReader, BitWriter, RAW_ESCAPE, WIDTH_FIELD_BITS};
+
+/// Values per hardware row (= packer lanes).
+pub const LANES: usize = 8;
+/// Rows per group.
+pub const ROWS: usize = 8;
+/// Values per group.
+pub const GROUP: usize = LANES * ROWS;
+/// Output register width drained to memory per lane per cycle (FP32 mode).
+pub const LANE_DRAIN_BITS: usize = 32;
+
+/// Static configuration of one compressor/decompressor unit.
+#[derive(Debug, Clone, Copy)]
+pub struct SfpCodec {
+    pub container: Container,
+    /// Elide the value sign bit (post-ReLU tensors are non-negative, §IV-D).
+    pub elide_sign: bool,
+}
+
+/// A compressed tensor: payload + width metadata streams and bookkeeping
+/// needed for decompression and footprint accounting.
+#[derive(Debug, Clone)]
+pub struct Compressed {
+    pub payload: Vec<u64>,
+    pub payload_bits: usize,
+    pub metadata: Vec<u64>,
+    pub metadata_bits: usize,
+    pub count: usize,
+    pub mant_bits: u32,
+    /// Compressor occupancy from the cycle model (see [`SfpCodec::cycles`]).
+    pub cycles: u64,
+}
+
+impl Compressed {
+    /// Total stored bits (payload + metadata).
+    pub fn total_bits(&self) -> usize {
+        self.payload_bits + self.metadata_bits
+    }
+
+    /// Ratio vs. the uncompressed container.
+    pub fn ratio(&self, container: Container) -> f64 {
+        self.total_bits() as f64 / (container.total_bits() as f64 * self.count as f64)
+    }
+}
+
+impl SfpCodec {
+    pub fn new(container: Container, elide_sign: bool) -> Self {
+        Self {
+            container,
+            elide_sign,
+        }
+    }
+
+    /// Compress `vals` with `n` mantissa bits per value (the external
+    /// mantissa-length signal from Quantum Mantissa / BitChop).
+    ///
+    /// Values are expected in stream order; the trailing partial group is
+    /// padded with the last value, as the hardware pads the final burst.
+    pub fn compress(&self, vals: &[f32], n: u32) -> Compressed {
+        let n = n.min(self.container.mant_bits());
+        let sign_bits: u32 = if self.elide_sign { 0 } else { 1 };
+        let mut payload = BitWriter::with_capacity(vals.len() * (n as usize + 8));
+        let mut metadata = BitWriter::with_capacity(vals.len() / ROWS * 3);
+
+        if vals.is_empty() {
+            return Compressed {
+                payload: Vec::new(),
+                payload_bits: 0,
+                metadata: Vec::new(),
+                metadata_bits: 0,
+                count: 0,
+                mant_bits: n,
+                cycles: 0,
+            };
+        }
+
+        let mut padded = vals.to_vec();
+        let pad = (GROUP - padded.len() % GROUP) % GROUP;
+        let last = *padded.last().unwrap();
+        padded.extend(std::iter::repeat(last).take(pad));
+
+        // Perf note (EXPERIMENTS.md §Perf): each value is emitted with a
+        // SINGLE BitWriter::push of a fused [sign | exp-field | mantissa]
+        // word (≤ 32 bits) instead of three pushes — the bitstream layout
+        // is identical, the per-value call overhead is 3× lower.
+        for g in padded.chunks_exact(GROUP) {
+            let mut bases = [0u32; LANES];
+            // Row 0: raw exponents become the column bases.
+            for (c, &v) in g[..LANES].iter().enumerate() {
+                let b = v.to_bits();
+                bases[c] = (b >> 23) & 0xFF;
+                let mant = self.top_mantissa(b, n) as u64;
+                if self.elide_sign {
+                    payload.push(((bases[c] as u64) << n) | mant, 8 + n);
+                } else {
+                    let word = (((b >> 31) as u64) << (8 + n))
+                        | ((bases[c] as u64) << n)
+                        | mant;
+                    payload.push(word, 9 + n);
+                }
+            }
+            metadata.push(8, WIDTH_FIELD_BITS + 1); // row-0 marker width (8 raw); 4b field keeps streams self-describing
+            // Rows 1..7: delta exponents at a shared width.
+            for r in 1..ROWS {
+                let row = &g[r * LANES..(r + 1) * LANES];
+                let w = row
+                    .iter()
+                    .zip(&bases)
+                    .map(|(&v, &b)| {
+                        let e = ((v.to_bits() >> 23) & 0xFF) as i32;
+                        mag_width((e - b as i32).unsigned_abs())
+                    })
+                    .max()
+                    .unwrap();
+                let (code, raw) = if w <= 6 { (w, false) } else { (RAW_ESCAPE, true) };
+                metadata.push(code as u64, WIDTH_FIELD_BITS + 1);
+                for (c, &v) in row.iter().enumerate() {
+                    let b = v.to_bits();
+                    let e = ((b >> 23) & 0xFF) as i32;
+                    let mant = self.top_mantissa(b, n) as u64;
+                    // exp field: raw 8b, or [sign | mag] at width w+1
+                    let (exp_field, exp_bits) = if raw {
+                        (e as u64, 8)
+                    } else {
+                        let d = e - bases[c] as i32;
+                        ((((d < 0) as u64) << w) | d.unsigned_abs() as u64, w + 1)
+                    };
+                    if self.elide_sign {
+                        payload.push((exp_field << n) | mant, exp_bits + n);
+                    } else {
+                        let word = (((b >> 31) as u64) << (exp_bits + n))
+                            | (exp_field << n)
+                            | mant;
+                        payload.push(word, 1 + exp_bits + n);
+                    }
+                }
+                let _ = sign_bits;
+            }
+        }
+
+        let (pw, pb) = payload.into_words();
+        let (mw, mb) = metadata.into_words();
+        let cycles = self.cycles_for(padded.len(), pb + mb);
+        Compressed {
+            payload: pw,
+            payload_bits: pb,
+            metadata: mw,
+            metadata_bits: mb,
+            count: vals.len(),
+            mant_bits: n,
+            cycles,
+        }
+    }
+
+    /// Decompress back into container-format values (trimmed mantissa bits
+    /// return as zeros, signs return as + when elided).
+    pub fn decompress(&self, c: &Compressed) -> Vec<f32> {
+        let n = c.mant_bits;
+        let mut payload = BitReader::new(&c.payload, c.payload_bits);
+        let mut metadata = BitReader::new(&c.metadata, c.metadata_bits);
+        let padded_len = c.count.div_ceil(GROUP) * GROUP;
+        let mut out = Vec::with_capacity(padded_len);
+
+        // Mirror of the fused-write layout: one read per value, fields
+        // split with shifts (perf §Perf).
+        let sign_bits = u32::from(!self.elide_sign);
+        for _ in 0..padded_len / GROUP {
+            let marker = metadata.read(WIDTH_FIELD_BITS + 1) as u32;
+            debug_assert_eq!(marker, 8);
+            let mut bases = [0u32; LANES];
+            for base in bases.iter_mut() {
+                let word = payload.read(sign_bits + 8 + n);
+                let sign = if self.elide_sign { 0 } else { (word >> (8 + n)) as u32 & 1 };
+                let e = (word >> n) as u32 & 0xFF;
+                *base = e;
+                let m = word as u32 & mant_mask(n);
+                out.push(self.assemble(sign, e, m, n));
+            }
+            for _ in 1..ROWS {
+                let code = metadata.read(WIDTH_FIELD_BITS + 1) as u32;
+                let exp_bits = if code == RAW_ESCAPE { 8 } else { code + 1 };
+                for base in bases.iter() {
+                    let word = payload.read(sign_bits + exp_bits + n);
+                    let sign = if self.elide_sign {
+                        0
+                    } else {
+                        (word >> (exp_bits + n)) as u32 & 1
+                    };
+                    let exp_field = (word >> n) & ((1u64 << exp_bits) - 1);
+                    let e = if code == RAW_ESCAPE {
+                        exp_field as u32
+                    } else {
+                        let mag = (exp_field & ((1 << code) - 1)) as i32;
+                        let d = if exp_field >> code == 1 { -mag } else { mag };
+                        (*base as i32 + d) as u32
+                    };
+                    let m = word as u32 & mant_mask(n);
+                    out.push(self.assemble(sign, e, m, n));
+                }
+            }
+        }
+        out.truncate(c.count);
+        out
+    }
+
+    #[inline]
+    fn top_mantissa(&self, bits: u32, n: u32) -> u32 {
+        // top n mantissa bits of the container (bf16 mantissa is the top 7
+        // f32 mantissa bits, so one expression covers both containers).
+        if n == 0 {
+            0
+        } else {
+            (bits >> (F32_MANT_BITS - n)) & ((1 << n) - 1)
+        }
+    }
+
+    #[inline]
+    fn assemble(&self, sign: u32, exp: u32, top_mant: u32, n: u32) -> f32 {
+        let mant = if n == 0 {
+            0
+        } else {
+            top_mant << (F32_MANT_BITS - n)
+        };
+        f32::from_bits((sign << 31) | (exp << 23) | mant)
+    }
+
+    /// Cycle-count model of the 8-lane unit (§V-A): the input side consumes
+    /// one row (8 values) per cycle; the output side drains 8×32 b (8×16 b
+    /// for BF16) per cycle.  Unit occupancy is whichever is slower.
+    pub fn cycles_for(&self, padded_count: usize, total_bits: usize) -> u64 {
+        let input_cycles = (padded_count / LANES) as u64;
+        let drain_per_cycle = match self.container {
+            Container::Fp32 => LANES * LANE_DRAIN_BITS,
+            Container::Bf16 => LANES * LANE_DRAIN_BITS / 2,
+        };
+        let output_cycles = total_bits.div_ceil(drain_per_cycle) as u64;
+        input_cycles.max(output_cycles)
+    }
+}
+
+#[inline]
+fn mant_mask(n: u32) -> u32 {
+    if n == 0 {
+        0
+    } else {
+        (1u32 << n) - 1
+    }
+}
+
+/// Footprint (bits) of one tensor under the full SFP scheme without
+/// materializing a bitstream — mantissa `n` per value, Gecko-delta
+/// exponents, optional sign elision.  Used by the ImageNet-scale footprint
+/// models; matches [`SfpCodec::compress`] totals exactly (unit-tested).
+pub fn sfp_bits(vals: &[f32], n: u32, container: Container, elide_sign: bool) -> usize {
+    let n = n.min(container.mant_bits()) as usize;
+    if vals.is_empty() {
+        return 0;
+    }
+    let mut padded: Vec<u8> = vals
+        .iter()
+        .map(|v| ((v.to_bits() >> 23) & 0xFF) as u8)
+        .collect();
+    let pad = (GROUP - padded.len() % GROUP) % GROUP;
+    let last = *padded.last().unwrap();
+    padded.extend(std::iter::repeat(last).take(pad));
+
+    let sign = usize::from(!elide_sign);
+    let mut bits = 0usize;
+    for g in padded.chunks_exact(GROUP) {
+        bits += (WIDTH_FIELD_BITS as usize + 1) * ROWS; // metadata per row
+        bits += LANES * (sign + 8 + n); // row 0
+        let bases = &g[..LANES];
+        for r in 1..ROWS {
+            let row = &g[r * LANES..(r + 1) * LANES];
+            let w = row
+                .iter()
+                .zip(bases)
+                .map(|(&e, &b)| mag_width((e as i32 - b as i32).unsigned_abs()))
+                .max()
+                .unwrap() as usize;
+            let exp_bits = if w <= 6 { w + 1 } else { 8 };
+            bits += LANES * (sign + exp_bits + n);
+        }
+    }
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::truncate_mantissa;
+
+    fn pseudo_vals(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut s = seed.wrapping_add(0x9E3779B97F4A7C15);
+        (0..n)
+            .map(|_| {
+                s ^= s >> 12;
+                s ^= s << 25;
+                s ^= s >> 27;
+                let u = (s.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32;
+                (u - 0.5) * 2.0 * scale
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_equals_truncation_fp32() {
+        let vals = pseudo_vals(1000, 1, 5.0);
+        for n in [0u32, 1, 4, 11, 23] {
+            let codec = SfpCodec::new(Container::Fp32, false);
+            let c = codec.compress(&vals, n);
+            let back = codec.decompress(&c);
+            for (i, (&v, &b)) in vals.iter().zip(&back).enumerate() {
+                assert_eq!(
+                    truncate_mantissa(v, n).to_bits(),
+                    b.to_bits(),
+                    "n={n} i={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_bf16_container() {
+        let vals = pseudo_vals(513, 2, 100.0);
+        let codec = SfpCodec::new(Container::Bf16, false);
+        for n in [0u32, 3, 7] {
+            let c = codec.compress(&vals, n);
+            let back = codec.decompress(&c);
+            for (&v, &b) in vals.iter().zip(&back) {
+                assert_eq!(truncate_mantissa(v, n).to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sign_elision_nonnegative() {
+        let vals: Vec<f32> = pseudo_vals(256, 3, 9.0).iter().map(|v| v.abs()).collect();
+        let with = SfpCodec::new(Container::Fp32, false).compress(&vals, 5);
+        let without = SfpCodec::new(Container::Fp32, true).compress(&vals, 5);
+        // exactly one bit per (padded) value saved
+        assert_eq!(with.payload_bits - without.payload_bits, 256);
+        let back = SfpCodec::new(Container::Fp32, true).decompress(&without);
+        for (&v, &b) in vals.iter().zip(&back) {
+            assert_eq!(truncate_mantissa(v, 5).to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn compresses_trained_like_tensor() {
+        // unit-scale values, 4 mantissa bits: well under half of FP32
+        let vals = pseudo_vals(4096, 4, 1.0);
+        let c = SfpCodec::new(Container::Fp32, false).compress(&vals, 4);
+        assert!(c.ratio(Container::Fp32) < 0.5, "{}", c.ratio(Container::Fp32));
+    }
+
+    #[test]
+    fn sfp_bits_matches_compressor() {
+        for seed in 0..4u64 {
+            let vals = pseudo_vals(700, seed, 3.0);
+            for n in [0u32, 2, 7] {
+                for elide in [false, true] {
+                    let c = SfpCodec::new(Container::Fp32, elide).compress(&vals, n);
+                    assert_eq!(sfp_bits(&vals, n, Container::Fp32, elide), c.total_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cycle_model_rates() {
+        let codec = SfpCodec::new(Container::Fp32, false);
+        // Incompressible stream: output side dominates.
+        let c_in = 64 * 100;
+        let worst_bits = c_in * 32;
+        assert_eq!(
+            codec.cycles_for(c_in, worst_bits),
+            (worst_bits / 256) as u64
+        );
+        // Highly compressed: input side (8 values/cycle) dominates.
+        assert_eq!(codec.cycles_for(c_in, 64), (c_in / 8) as u64);
+    }
+
+    #[test]
+    fn zeros_heavy_stream_roundtrip() {
+        let mut vals = pseudo_vals(300, 6, 2.0);
+        for v in vals.iter_mut().step_by(3) {
+            *v = 0.0;
+        }
+        let codec = SfpCodec::new(Container::Fp32, false);
+        let c = codec.compress(&vals, 3);
+        let back = codec.decompress(&c);
+        for (&v, &b) in vals.iter().zip(&back) {
+            assert_eq!(truncate_mantissa(v, 3).to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        let codec = SfpCodec::new(Container::Fp32, false);
+        let c = codec.compress(&[], 4);
+        assert_eq!(c.total_bits(), 0);
+        assert!(codec.decompress(&c).is_empty());
+    }
+}

@@ -1,0 +1,321 @@
+//! Streaming statistics: exponent histograms (Fig. 9), post-encoding
+//! bitlength CDFs (Fig. 10), BitChop bitlength histograms (Fig. 8), and
+//! the per-component footprint ledger behind Table I / Fig. 12 / Fig. 13.
+
+use crate::formats::mag_width;
+use crate::gecko;
+
+
+/// Fixed 256-bin histogram over biased exponent bytes.
+#[derive(Debug, Clone)]
+pub struct ExponentHistogram {
+    pub bins: Vec<u64>,
+    pub total: u64,
+}
+
+impl Default for ExponentHistogram {
+    fn default() -> Self {
+        Self {
+            bins: vec![0; 256],
+            total: 0,
+        }
+    }
+}
+
+impl ExponentHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_vals(&mut self, vals: &[f32]) {
+        for &v in vals {
+            self.bins[((v.to_bits() >> 23) & 0xFF) as usize] += 1;
+            self.total += 1;
+        }
+    }
+
+    pub fn merge(&mut self, other: &Self) {
+        for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+
+    /// Fraction of mass within ±`radius` of the bias (127) — the Fig. 9
+    /// "heavily biased around 127" summary statistic.
+    pub fn mass_near_bias(&self, radius: usize) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let lo = 127usize.saturating_sub(radius);
+        let hi = (127 + radius).min(255);
+        let m: u64 = self.bins[lo..=hi].iter().sum();
+        m as f64 / self.total as f64
+    }
+
+    /// (exponent, count) pairs for non-empty bins, for figure CSVs.
+    pub fn nonzero(&self) -> Vec<(u8, u64)> {
+        self.bins
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (i as u8, c))
+            .collect()
+    }
+}
+
+/// Distribution of per-value *encoded* exponent widths after Gecko delta
+/// encoding (Fig. 10: x = bits, y = cumulative fraction of values).
+///
+/// Each value is charged the bits Gecko actually stores for it: 8 for a
+/// row-0 base or a raw-escape row, `w+1` for a delta row of width `w`.
+#[derive(Debug, Clone, Default)]
+pub struct EncodedWidthCdf {
+    /// counts[b] = values stored with exactly `b` bits (b in 0..=8).
+    pub counts: [u64; 9],
+    pub total: u64,
+}
+
+impl EncodedWidthCdf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_vals(&mut self, vals: &[f32]) {
+        let exps = gecko::exponents(vals);
+        self.add_exponents(&exps);
+    }
+
+    pub fn add_exponents(&mut self, exps: &[u8]) {
+        if exps.is_empty() {
+            return;
+        }
+        let mut v = exps.to_vec();
+        let pad = (gecko::GROUP - v.len() % gecko::GROUP) % gecko::GROUP;
+        let last = *v.last().unwrap();
+        v.extend(std::iter::repeat(last).take(pad));
+        for g in v.chunks_exact(gecko::GROUP) {
+            let bases = &g[..8];
+            for _ in bases {
+                self.counts[8] += 1;
+            }
+            for r in 1..8 {
+                let row = &g[r * 8..(r + 1) * 8];
+                let w = row
+                    .iter()
+                    .zip(bases)
+                    .map(|(&e, &b)| mag_width((e as i32 - b as i32).unsigned_abs()))
+                    .max()
+                    .unwrap();
+                let per_val = if w <= 6 { w as usize + 1 } else { 8 };
+                self.counts[per_val] += 8;
+            }
+        }
+        self.total += v.len() as u64;
+    }
+
+    /// Cumulative fraction of values encoded in <= `bits` bits.
+    pub fn cdf_at(&self, bits: usize) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let c: u64 = self.counts[..=bits.min(8)].iter().sum();
+        c as f64 / self.total as f64
+    }
+}
+
+/// Histogram over mantissa bitlengths 0..=23 (Fig. 8: BitChop's choices
+/// over the batches of an epoch; Fig. 4 per-layer snapshots).
+#[derive(Debug, Clone)]
+pub struct BitlengthHistogram {
+    pub counts: Vec<u64>,
+}
+
+impl Default for BitlengthHistogram {
+    fn default() -> Self {
+        Self {
+            counts: vec![0; 24],
+        }
+    }
+}
+
+impl BitlengthHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, bits: u32) {
+        self.counts[(bits as usize).min(23)] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            return 0.0;
+        }
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(b, &c)| b as f64 * c as f64)
+            .sum::<f64>()
+            / t as f64
+    }
+}
+
+/// Footprint ledger split by datatype component — the Fig. 12 breakdown.
+/// All fields are bits, accumulated over a training run or one pass.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ComponentBits {
+    pub sign: f64,
+    pub exponent: f64,
+    pub mantissa: f64,
+    pub metadata: f64,
+}
+
+impl ComponentBits {
+    pub fn total(&self) -> f64 {
+        self.sign + self.exponent + self.mantissa + self.metadata
+    }
+
+    pub fn add(&mut self, other: ComponentBits) {
+        self.sign += other.sign;
+        self.exponent += other.exponent;
+        self.mantissa += other.mantissa;
+        self.metadata += other.metadata;
+    }
+
+    pub fn scaled(&self, k: f64) -> ComponentBits {
+        ComponentBits {
+            sign: self.sign * k,
+            exponent: self.exponent * k,
+            mantissa: self.mantissa * k,
+            metadata: self.metadata * k,
+        }
+    }
+}
+
+/// Weights + activations footprint for one configuration (Table I rows,
+/// Fig. 12 bars).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Footprint {
+    pub weights: ComponentBits,
+    pub activations: ComponentBits,
+}
+
+impl Footprint {
+    pub fn total(&self) -> f64 {
+        self.weights.total() + self.activations.total()
+    }
+
+    pub fn add(&mut self, other: &Footprint) {
+        self.weights.add(other.weights);
+        self.activations.add(other.activations);
+    }
+
+    /// Footprint relative to a baseline (Table I's "% of FP32" column).
+    pub fn relative_to(&self, base: &Footprint) -> f64 {
+        self.total() / base.total()
+    }
+}
+
+/// Simple streaming mean (Welford, no variance needed here).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Mean {
+    pub n: u64,
+    pub mean: f64,
+}
+
+impl Mean {
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        self.mean += (x - self.mean) / self.n as f64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponent_histogram_counts() {
+        let mut h = ExponentHistogram::new();
+        h.add_vals(&[1.0, 2.0, 0.5, 1.5, 0.0]);
+        assert_eq!(h.bins[127], 2); // 1.0, 1.5
+        assert_eq!(h.bins[128], 1); // 2.0
+        assert_eq!(h.bins[126], 1); // 0.5
+        assert_eq!(h.bins[0], 1); // 0.0
+        assert_eq!(h.total, 5);
+        assert!((h.mass_near_bias(2) - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = ExponentHistogram::new();
+        a.add_vals(&[1.0]);
+        let mut b = ExponentHistogram::new();
+        b.add_vals(&[2.0, 4.0]);
+        a.merge(&b);
+        assert_eq!(a.total, 3);
+        assert_eq!(a.bins[128], 1);
+    }
+
+    #[test]
+    fn width_cdf_constant_stream() {
+        // all-same exponents: 8 bases at 8 b, 56 deltas at 1 b per group
+        let vals = vec![1.5f32; 64];
+        let mut c = EncodedWidthCdf::new();
+        c.add_vals(&vals);
+        assert_eq!(c.counts[8], 8);
+        assert_eq!(c.counts[1], 56);
+        assert!((c.cdf_at(1) - 56.0 / 64.0).abs() < 1e-12);
+        assert!((c.cdf_at(8) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn width_cdf_total_bits_consistent_with_gecko_payload() {
+        // Sum over the CDF equals the gecko payload minus nothing: the CDF
+        // charges exactly the per-value payload bits (metadata excluded).
+        let vals: Vec<f32> = (0..640).map(|i| (i as f32 * 0.37).sin() * 8.0).collect();
+        let mut c = EncodedWidthCdf::new();
+        c.add_vals(&vals);
+        let per_val_bits: u64 = c
+            .counts
+            .iter()
+            .enumerate()
+            .map(|(b, &n)| b as u64 * n)
+            .sum();
+        let enc = gecko::encode(&gecko::exponents(&vals), gecko::Mode::Delta);
+        assert_eq!(per_val_bits as usize, enc.payload_bits);
+    }
+
+    #[test]
+    fn bitlength_histogram_mean() {
+        let mut h = BitlengthHistogram::new();
+        h.add(2);
+        h.add(4);
+        assert_eq!(h.mean(), 3.0);
+        assert_eq!(h.total(), 2);
+    }
+
+    #[test]
+    fn footprint_arithmetic() {
+        let mut f = Footprint::default();
+        f.activations.mantissa = 70.0;
+        f.activations.exponent = 24.0;
+        f.activations.sign = 6.0;
+        let base = Footprint {
+            weights: ComponentBits::default(),
+            activations: ComponentBits {
+                sign: 10.0,
+                exponent: 80.0,
+                mantissa: 110.0,
+                metadata: 0.0,
+            },
+        };
+        assert!((f.relative_to(&base) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,563 @@
+//! Shape-accurate layer traces of the paper's evaluation networks.
+//!
+//! The paper trains ResNet18 and MobileNetV3-Small on ImageNet and collects
+//! per-layer traffic/compute counts via PyTorch hooks (§VI-C).  We rebuild
+//! those counts from the published architectures: every conv/fc layer with
+//! its weight tensor size, stashed-activation size, MACs per sample, and
+//! how its activation is consumed ([`ActKind`] — decides Gist/JS/sign
+//! encodings).
+//!
+//! A [`ValueModel`] per tensor generates representative value streams for
+//! the codecs: biased-exponent Gaussians (Fig. 9 shows trained exponents
+//! hug the bias) plus a zero fraction for post-ReLU activations.  The
+//! defaults are calibrated against the e2e training run of this repo
+//! (EXPERIMENTS.md §Calibration) and cross-checked against the paper's
+//! aggregate ratios (tests below).
+
+use crate::baselines::ActKind;
+
+
+/// One trainable layer of a traced network.
+#[derive(Debug, Clone)]
+pub struct LayerTrace {
+    pub name: String,
+    /// Weight elements (0 for pooling-only stages folded into neighbours).
+    pub weight_elems: usize,
+    /// Stashed activation elements per sample (the layer's *output*).
+    pub act_elems: usize,
+    /// MACs per sample for the forward pass.
+    pub macs: usize,
+    /// How the output activation is consumed.
+    pub act_kind: ActKind,
+    /// Output activation is non-negative (ReLU/ReLU6 ⇒ sign elision, §IV-D).
+    pub nonneg_act: bool,
+    /// Fraction of the MAC array this layer can keep busy (depthwise convs
+    /// have little input-channel parallelism — they hit a fraction of peak).
+    pub compute_util: f64,
+    /// Value model for the output activation.
+    pub act_model: ValueModel,
+    /// Value model for the weights.
+    pub weight_model: ValueModel,
+}
+
+/// Parametric model of a tensor's value stream: biased-exponent Gaussian +
+/// point mass at exact zero, both with *spatial correlation*:
+///
+/// * zeros follow a two-state Markov chain (ReLU zeros cluster by channel
+///   and spatial region, they are not i.i.d. — this is what makes Gecko's
+///   delta rows hit width 0 on real activations, Fig. 10);
+/// * non-zero exponents follow an AR(1) process around `exp_mean`
+///   (neighbouring magnitudes are similar, §IV-C "values that are close-by
+///   tend to have similar magnitude").
+#[derive(Debug, Clone, Copy)]
+pub struct ValueModel {
+    pub zero_frac: f64,
+    pub exp_mean: f64,
+    pub exp_std: f64,
+    /// P(next is zero | current is zero) — zero-run persistence.
+    pub zero_persist: f64,
+    /// AR(1) coefficient for the non-zero exponent process.
+    pub exp_rho: f64,
+}
+
+impl ValueModel {
+    pub const fn new(zero_frac: f64, exp_mean: f64, exp_std: f64) -> Self {
+        Self {
+            zero_frac,
+            exp_mean,
+            exp_std,
+            // mean zero-run ≈ 200 values: ReLU zeros come as dead
+            // channels/regions spanning many 64-value codec groups
+            zero_persist: 0.998,
+            exp_rho: 0.95,
+        }
+    }
+
+    /// Post-ReLU activation stream (calibrated: ≈36% zeros network-wide,
+    /// matching the paper's "30% JS reduction on BF16" — see baselines;
+    /// exponent spread tuned so the Gecko activation ratio lands at the
+    /// paper's ≈0.5, Fig. 10).
+    pub const fn relu_act() -> Self {
+        Self::new(0.36, 124.0, 2.0)
+    }
+
+    /// hswish activation stream (MobileNet V3): almost no exact zeros.
+    pub const fn hswish_act() -> Self {
+        Self::new(0.02, 124.0, 2.4)
+    }
+
+    /// Trained conv/fc weights: no zeros, tight sub-unit magnitudes with
+    /// strong spatial correlation (per-filter norms make neighbouring
+    /// weight exponents plateau — §IV-C's "spatial correlation" remark).
+    pub const fn weights() -> Self {
+        Self {
+            zero_frac: 0.0,
+            exp_mean: 121.0,
+            exp_std: 1.2,
+            zero_persist: 0.998,
+            exp_rho: 0.99,
+        }
+    }
+
+    /// P(zero | previous non-zero), chosen so the chain's stationary zero
+    /// probability equals `zero_frac`.
+    fn p_enter_zero(&self) -> f64 {
+        if self.zero_frac <= 0.0 {
+            return 0.0;
+        }
+        (self.zero_frac * (1.0 - self.zero_persist) / (1.0 - self.zero_frac)).min(1.0)
+    }
+
+    /// Draw `count` biased exponents (deterministic per `seed`).
+    pub fn sample_exponents(&self, count: usize, seed: u64) -> Vec<u8> {
+        let mut rng = SplitMix64::new(seed);
+        let mut stream = ExpStream::new(self, &mut rng);
+        (0..count).map(|_| stream.next(&mut rng)).collect()
+    }
+
+    /// Draw `count` f32 values consistent with the exponent model (uniform
+    /// mantissas, non-negative when `nonneg`).
+    pub fn sample_values(&self, count: usize, seed: u64, nonneg: bool) -> Vec<f32> {
+        let mut rng = SplitMix64::new(seed);
+        let mut stream = ExpStream::new(self, &mut rng);
+        (0..count)
+            .map(|_| {
+                let e = stream.next(&mut rng) as u32;
+                if e == 0 {
+                    return 0.0f32;
+                }
+                let mant = (rng.next_u64() & 0x7F_FFFF) as u32;
+                let sign = if nonneg { 0 } else { (rng.next_u64() & 1) as u32 };
+                f32::from_bits((sign << 31) | (e << 23) | mant)
+            })
+            .collect()
+    }
+}
+
+/// Stateful generator implementing the Markov-zero + AR(1)-exponent model.
+struct ExpStream {
+    model: ValueModel,
+    in_zero: bool,
+    /// AR(1) deviation from `exp_mean`, in exponent units.
+    dev: f64,
+    /// innovation std so the stationary std equals `exp_std`.
+    innov_std: f64,
+}
+
+impl ExpStream {
+    fn new(model: &ValueModel, rng: &mut SplitMix64) -> Self {
+        Self {
+            model: *model,
+            in_zero: rng.next_f64() < model.zero_frac,
+            dev: model.exp_std * rng.next_gaussian(),
+            innov_std: model.exp_std * (1.0 - model.exp_rho * model.exp_rho).sqrt(),
+        }
+    }
+
+    fn next(&mut self, rng: &mut SplitMix64) -> u8 {
+        let m = &self.model;
+        let u = rng.next_f64();
+        self.in_zero = if self.in_zero {
+            u < m.zero_persist
+        } else {
+            u < m.p_enter_zero()
+        };
+        // the AR process advances regardless so magnitudes stay correlated
+        // across zero runs (as feature-map magnitudes do)
+        self.dev = m.exp_rho * self.dev + self.innov_std * rng.next_gaussian();
+        if self.in_zero {
+            0
+        } else {
+            (m.exp_mean + self.dev).round().clamp(1.0, 254.0) as u8
+        }
+    }
+}
+
+/// Deterministic SplitMix64 — the repo-wide seedable RNG (no rand dep on
+/// the request path).
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+    cached_gaussian: Option<f64>,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            state: seed,
+            cached_gaussian: None,
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn next_gaussian(&mut self) -> f64 {
+        if let Some(g) = self.cached_gaussian.take() {
+            return g;
+        }
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.cached_gaussian = Some(r * s);
+        r * c
+    }
+}
+
+/// A traced network: ordered layers + a display name.
+#[derive(Debug, Clone)]
+pub struct NetworkTrace {
+    pub name: String,
+    pub layers: Vec<LayerTrace>,
+}
+
+impl NetworkTrace {
+    pub fn total_weight_elems(&self) -> usize {
+        self.layers.iter().map(|l| l.weight_elems).sum()
+    }
+
+    pub fn total_act_elems_per_sample(&self) -> usize {
+        self.layers.iter().map(|l| l.act_elems).sum()
+    }
+
+    pub fn total_macs_per_sample(&self) -> usize {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+}
+
+/// Achievable MAC-array utilization: the 8K×4 array parallelizes over the
+/// weight-reuse dimensions (k²·cin·cout); layers with fewer weight-level
+/// parallel MACs than lanes (depthwise, narrow 1×1) run under-utilized —
+/// this is what caps MobileNetV3's gains in Table II.
+fn util_of(weight_elems: usize) -> f64 {
+    (weight_elems as f64 / 8192.0).clamp(0.05, 1.0)
+}
+
+fn conv(
+    name: &str,
+    k: usize,
+    cin: usize,
+    cout: usize,
+    out_hw: usize,
+    act_kind: ActKind,
+    relu: bool,
+) -> LayerTrace {
+    LayerTrace {
+        name: name.to_string(),
+        weight_elems: k * k * cin * cout,
+        act_elems: out_hw * out_hw * cout,
+        macs: k * k * cin * cout * out_hw * out_hw,
+        act_kind,
+        nonneg_act: relu,
+        compute_util: util_of(k * k * cin * cout),
+        act_model: if relu {
+            ValueModel::relu_act()
+        } else {
+            ValueModel::hswish_act()
+        },
+        weight_model: ValueModel::weights(),
+    }
+}
+
+fn dwconv(name: &str, k: usize, c: usize, out_hw: usize, relu: bool) -> LayerTrace {
+    LayerTrace {
+        name: name.to_string(),
+        weight_elems: k * k * c,
+        act_elems: out_hw * out_hw * c,
+        macs: k * k * c * out_hw * out_hw,
+        act_kind: ActKind::ReluConv,
+        nonneg_act: relu,
+        compute_util: util_of(k * k * c),
+        act_model: if relu {
+            ValueModel::relu_act()
+        } else {
+            ValueModel::hswish_act()
+        },
+        weight_model: ValueModel::weights(),
+    }
+}
+
+/// ResNet18 at 224×224 (He et al.; basic blocks, no bottlenecks).
+pub fn resnet18() -> NetworkTrace {
+    let mut l = Vec::new();
+    // conv1 feeds the 3×3 max-pool => ReLU→Pool class (Gist 1-bit eligible).
+    l.push(conv("conv1", 7, 3, 64, 112, ActKind::ReluPool, true));
+    // layer1: 2 blocks @ 64ch, 56×56
+    for b in 0..2 {
+        l.push(conv(&format!("l1.b{b}.c1"), 3, 64, 64, 56, ActKind::ReluConv, true));
+        l.push(conv(&format!("l1.b{b}.c2"), 3, 64, 64, 56, ActKind::ReluConv, true));
+    }
+    // layer2: 128ch, 28×28, block 0 downsamples (1×1 projection shortcut)
+    l.push(conv("l2.b0.c1", 3, 64, 128, 28, ActKind::ReluConv, true));
+    l.push(conv("l2.b0.c2", 3, 128, 128, 28, ActKind::ReluConv, true));
+    l.push(conv("l2.b0.down", 1, 64, 128, 28, ActKind::ReluConv, true));
+    l.push(conv("l2.b1.c1", 3, 128, 128, 28, ActKind::ReluConv, true));
+    l.push(conv("l2.b1.c2", 3, 128, 128, 28, ActKind::ReluConv, true));
+    // layer3: 256ch, 14×14
+    l.push(conv("l3.b0.c1", 3, 128, 256, 14, ActKind::ReluConv, true));
+    l.push(conv("l3.b0.c2", 3, 256, 256, 14, ActKind::ReluConv, true));
+    l.push(conv("l3.b0.down", 1, 128, 256, 14, ActKind::ReluConv, true));
+    l.push(conv("l3.b1.c1", 3, 256, 256, 14, ActKind::ReluConv, true));
+    l.push(conv("l3.b1.c2", 3, 256, 256, 14, ActKind::ReluConv, true));
+    // layer4: 512ch, 7×7
+    l.push(conv("l4.b0.c1", 3, 256, 512, 7, ActKind::ReluConv, true));
+    l.push(conv("l4.b0.c2", 3, 512, 512, 7, ActKind::ReluConv, true));
+    l.push(conv("l4.b0.down", 1, 256, 512, 7, ActKind::ReluConv, true));
+    l.push(conv("l4.b1.c1", 3, 512, 512, 7, ActKind::ReluConv, true));
+    l.push(conv("l4.b1.c2", 3, 512, 512, 7, ActKind::ReluConv, true));
+    // head: global avg-pool then fc 512→1000 (linear output, dense)
+    l.push(LayerTrace {
+        name: "fc".into(),
+        weight_elems: 512 * 1000,
+        act_elems: 1000,
+        macs: 512 * 1000,
+        act_kind: ActKind::Dense,
+        nonneg_act: false,
+        compute_util: 1.0,
+        act_model: ValueModel::new(0.0, 126.0, 2.0),
+        weight_model: ValueModel::weights(),
+    });
+    NetworkTrace {
+        name: "ResNet18".into(),
+        layers: l,
+    }
+}
+
+/// One MobileNetV3 inverted-residual block: expand 1×1 → depthwise k×k →
+/// project 1×1 (linear).  SE blocks are folded into the depthwise MAC count
+/// (they are < 1% of compute and their activations are tiny).
+#[allow(clippy::too_many_arguments)]
+fn bneck(
+    l: &mut Vec<LayerTrace>,
+    idx: usize,
+    k: usize,
+    cin: usize,
+    cexp: usize,
+    cout: usize,
+    out_hw: usize,
+    relu: bool,
+) {
+    let in_hw = l
+        .last()
+        .map(|p| (p.act_elems / cin, p))
+        .map(|(px, _)| (px as f64).sqrt() as usize)
+        .unwrap_or(out_hw);
+    l.push(conv(
+        &format!("bneck{idx}.expand"),
+        1,
+        cin,
+        cexp,
+        in_hw,
+        ActKind::ReluConv,
+        relu,
+    ));
+    l.push(dwconv(&format!("bneck{idx}.dw"), k, cexp, out_hw, relu));
+    // projection is linear (no NL): dense activation
+    let mut proj = conv(
+        &format!("bneck{idx}.project"),
+        1,
+        cexp,
+        cout,
+        out_hw,
+        ActKind::Dense,
+        false,
+    );
+    proj.act_model = ValueModel::new(0.01, 124.5, 3.0);
+    l.push(proj);
+}
+
+/// MobileNetV3-Small at 224×224 (Howard et al., Table 2).
+pub fn mobilenet_v3_small() -> NetworkTrace {
+    let mut l = Vec::new();
+    // stem: 3×3 s2 → 16ch @112², hswish
+    l.push(conv("stem", 3, 3, 16, 112, ActKind::ReluConv, false));
+    // bneck1: 3×3, exp 16, out 16, SE, RE, s2 → 56²
+    l.push(dwconv("bneck1.dw", 3, 16, 56, true));
+    let mut p = conv("bneck1.project", 1, 16, 16, 56, ActKind::Dense, false);
+    p.act_model = ValueModel::new(0.01, 124.5, 3.0);
+    l.push(p);
+    // bneck2: 3×3, exp 72, out 24, RE, s2 → 28²
+    bneck(&mut l, 2, 3, 16, 72, 24, 28, true);
+    // bneck3: 3×3, exp 88, out 24, RE, s1
+    bneck(&mut l, 3, 3, 24, 88, 24, 28, true);
+    // bneck4: 5×5, exp 96, out 40, HS, s2 → 14²
+    bneck(&mut l, 4, 5, 24, 96, 40, 14, false);
+    // bneck5-6: 5×5, exp 240, out 40, HS
+    bneck(&mut l, 5, 5, 40, 240, 40, 14, false);
+    bneck(&mut l, 6, 5, 40, 240, 40, 14, false);
+    // bneck7: 5×5, exp 120, out 48, HS
+    bneck(&mut l, 7, 5, 40, 120, 48, 14, false);
+    // bneck8: 5×5, exp 144, out 48, HS
+    bneck(&mut l, 8, 5, 48, 144, 48, 14, false);
+    // bneck9: 5×5, exp 288, out 96, HS, s2 → 7²
+    bneck(&mut l, 9, 5, 48, 288, 96, 7, false);
+    // bneck10-11: 5×5, exp 576, out 96, HS
+    bneck(&mut l, 10, 5, 96, 576, 96, 7, false);
+    bneck(&mut l, 11, 5, 96, 576, 96, 7, false);
+    // head convs
+    l.push(conv("head.conv", 1, 96, 576, 7, ActKind::ReluConv, false));
+    l.push(LayerTrace {
+        name: "head.fc1".into(),
+        weight_elems: 576 * 1024,
+        act_elems: 1024,
+        macs: 576 * 1024,
+        act_kind: ActKind::ReluConv,
+        nonneg_act: false,
+        compute_util: 1.0,
+        act_model: ValueModel::hswish_act(),
+        weight_model: ValueModel::weights(),
+    });
+    l.push(LayerTrace {
+        name: "head.fc2".into(),
+        weight_elems: 1024 * 1000,
+        act_elems: 1000,
+        macs: 1024 * 1000,
+        act_kind: ActKind::Dense,
+        nonneg_act: false,
+        compute_util: 1.0,
+        act_model: ValueModel::new(0.0, 126.0, 2.0),
+        weight_model: ValueModel::weights(),
+    });
+    NetworkTrace {
+        name: "MobileNetV3-Small".into(),
+        layers: l,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_param_count() {
+        // Conv + fc weights of ResNet18 ≈ 11.2M elements (11.69M params
+        // total including BN); our conv/fc-only trace must land close.
+        let t = resnet18();
+        let w = t.total_weight_elems();
+        assert!((10_500_000..12_000_000).contains(&w), "weights = {w}");
+    }
+
+    #[test]
+    fn resnet18_macs() {
+        // ≈ 1.82 GMACs per 224×224 sample.
+        let t = resnet18();
+        let m = t.total_macs_per_sample();
+        assert!((1_600_000_000..2_000_000_000).contains(&m), "macs = {m}");
+    }
+
+    #[test]
+    fn resnet18_activation_volume() {
+        // ≈ 2.5M stashed activation elements per sample → with batch 256
+        // the gigabyte-scale stash the paper's §III-D describes (FP32).
+        let t = resnet18();
+        let a = t.total_act_elems_per_sample();
+        assert!((2_000_000..3_500_000).contains(&a), "acts = {a}");
+        let gb_batch256 = a as f64 * 4.0 * 256.0 / 1e9;
+        assert!(gb_batch256 > 2.0, "stash = {gb_batch256} GB");
+    }
+
+    #[test]
+    fn mobilenet_small_param_count() {
+        // MobileNetV3-Small ≈ 2.5M params (2.9M incl. classifier+BN).
+        let t = mobilenet_v3_small();
+        let w = t.total_weight_elems();
+        assert!((2_000_000..3_200_000).contains(&w), "weights = {w}");
+    }
+
+    #[test]
+    fn mobilenet_small_macs() {
+        // ≈ 56–66 MMACs per sample.
+        let t = mobilenet_v3_small();
+        let m = t.total_macs_per_sample();
+        assert!((45_000_000..80_000_000).contains(&m), "macs = {m}");
+    }
+
+    #[test]
+    fn mobilenet_mostly_dense_activations() {
+        // §VI-B: MNv3 "sparsely uses ReLU" → little JS/Gist potential.
+        let t = mobilenet_v3_small();
+        let relu_elems: usize = t
+            .layers
+            .iter()
+            .filter(|l| l.nonneg_act)
+            .map(|l| l.act_elems)
+            .sum();
+        let frac = relu_elems as f64 / t.total_act_elems_per_sample() as f64;
+        assert!(frac < 0.35, "relu act fraction = {frac}");
+    }
+
+    #[test]
+    fn activations_dominate_weights() {
+        // §VI-A: at batch 256 activations dwarf weights for both nets.
+        for t in [resnet18(), mobilenet_v3_small()] {
+            let acts = t.total_act_elems_per_sample() * 256;
+            assert!(acts > 10 * t.total_weight_elems(), "{}", t.name);
+        }
+    }
+
+    #[test]
+    fn value_model_exponent_stream_is_biased() {
+        let m = ValueModel::relu_act();
+        let exps = m.sample_exponents(100_000, 7);
+        let zeros = exps.iter().filter(|&&e| e == 0).count() as f64 / 1e5;
+        assert!((zeros - 0.36).abs() < 0.03, "zero frac {zeros}");
+        let nz: Vec<f64> = exps.iter().filter(|&&e| e > 0).map(|&e| e as f64).collect();
+        let mean = nz.iter().sum::<f64>() / nz.len() as f64;
+        assert!((mean - 124.0).abs() < 0.5, "mean {mean}");
+    }
+
+    #[test]
+    fn value_model_values_match_exponent_model() {
+        let m = ValueModel::weights();
+        let vals = m.sample_values(50_000, 9, false);
+        let mean_exp = vals
+            .iter()
+            .map(|v| ((v.to_bits() >> 23) & 0xFF) as f64)
+            .sum::<f64>()
+            / 5e4;
+        assert!((mean_exp - 121.0).abs() < 0.5, "mean exp {mean_exp}");
+        // signs present
+        assert!(vals.iter().any(|&v| v < 0.0));
+    }
+
+    #[test]
+    fn splitmix_deterministic() {
+        let a: Vec<u64> = {
+            let mut r = SplitMix64::new(42);
+            (0..5).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = SplitMix64::new(42);
+            (0..5).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn gecko_ratio_on_modelled_weights_near_paper() {
+        // Paper §IV-C: overall weight-exponent compression ratio 0.56,
+        // activations 0.52.  Our value models must land in that region.
+        use crate::gecko::{encode, Mode};
+        let w = ValueModel::weights().sample_exponents(64 * 2048, 11);
+        let rw = encode(&w, Mode::Delta).compression_ratio();
+        // paper reports 0.56 over the whole run; our stationary model
+        // sits slightly tighter (trained-end statistics) — see DESIGN.md
+        assert!((0.32..0.70).contains(&rw), "weight ratio {rw}");
+        let a = ValueModel::relu_act().sample_exponents(64 * 2048, 13);
+        let ra = encode(&a, Mode::Delta).compression_ratio();
+        assert!((0.40..0.70).contains(&ra), "act ratio {ra}");
+    }
+}

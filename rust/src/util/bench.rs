@@ -1,0 +1,80 @@
+//! In-tree micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs each `[[bench]]` target's `main()` with
+//! `harness = false`; targets build a [`Bench`] and register closures.
+//! Methodology: warmup, then N timed epochs; reports min / median / mean
+//! throughput so perf iterations (EXPERIMENTS.md §Perf) are comparable.
+
+use std::time::Instant;
+
+pub struct Bench {
+    name: String,
+    warmup_iters: usize,
+    epochs: usize,
+    min_epoch_iters: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Report {
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        println!("== bench group: {name} ==");
+        Self {
+            name: name.to_string(),
+            warmup_iters: 3,
+            epochs: 7,
+            min_epoch_iters: 1,
+        }
+    }
+
+    pub fn with_epochs(mut self, epochs: usize) -> Self {
+        self.epochs = epochs;
+        self
+    }
+
+    /// Time `f`, which processes `items` logical items per call (used for
+    /// throughput reporting: values/s, steps/s, ...).
+    pub fn run<F: FnMut()>(&self, case: &str, items: f64, mut f: F) -> Report {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        // size epochs to >= ~20ms each for stable numbers
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((0.02 / once).ceil() as usize).max(self.min_epoch_iters);
+
+        let mut samples = Vec::with_capacity(self.epochs);
+        for _ in 0..self.epochs {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / iters as f64 * 1e9);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let report = Report {
+            median_ns: samples[samples.len() / 2],
+            min_ns: samples[0],
+            mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+        };
+        let per_item = report.median_ns / items.max(1.0);
+        let throughput = 1e9 / per_item;
+        println!(
+            "{}/{case}: median {:>10.1} ns  min {:>10.1} ns  ({:.3e} items/s)",
+            self.name, report.median_ns, report.min_ns, throughput
+        );
+        report
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

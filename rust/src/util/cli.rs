@@ -1,0 +1,98 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! A bare `--name` followed by a non-dash token is parsed as an option
+//! (`--name value`); use `--name=value` or trailing position for flags.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: Iterator<Item = String>>(mut it: I) -> Self {
+        let mut out = Args::default();
+        let mut pending: Option<String> = None;
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some(p) = pending.take() {
+                    out.flags.push(p);
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else {
+                    pending = Some(key.to_string());
+                }
+            } else if let Some(k) = pending.take() {
+                out.options.insert(k, a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        if let Some(p) = pending {
+            out.flags.push(p);
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse("train out.csv --epochs 5 --variant=qm --verbose");
+        assert_eq!(a.positional, vec!["train", "out.csv"]);
+        assert_eq!(a.get("epochs"), Some("5"));
+        assert_eq!(a.get("variant"), Some("qm"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("--lr 0.05 --steps 100");
+        assert_eq!(a.get_f64("lr", 1.0), 0.05);
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert_eq!(a.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--quiet");
+        assert!(a.has_flag("quiet"));
+    }
+}

@@ -1,0 +1,7 @@
+//! Offline-environment stand-ins for common crates (see Cargo.toml note):
+//! JSON, CLI parsing, a bench harness, and property testing.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;

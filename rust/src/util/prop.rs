@@ -1,0 +1,74 @@
+//! In-tree property-testing helper (proptest is unavailable offline).
+//!
+//! [`check`] runs a property against `iters` randomly generated cases from
+//! a deterministic SplitMix64 stream; on failure it reports the case seed
+//! so the exact input can be replayed.  Generators live on [`Gen`].
+
+use crate::traces::SplitMix64;
+
+/// Random-input generator handed to properties.
+pub struct Gen {
+    rng: SplitMix64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: SplitMix64::new(seed),
+        }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.rng.next_u64() as usize) % (hi - lo + 1)
+    }
+
+    pub fn u32_in(&mut self, lo: u32, hi: u32) -> u32 {
+        lo + (self.rng.next_u64() as u32) % (hi - lo + 1)
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Arbitrary finite f32 with full exponent coverage (no NaN/Inf, which
+    /// the stash never contains — XLA training values are finite).
+    pub fn finite_f32(&mut self) -> f32 {
+        loop {
+            let bits = (self.rng.next_u64() >> 32) as u32;
+            let v = f32::from_bits(bits);
+            if v.is_finite() {
+                return v;
+            }
+        }
+    }
+
+    /// Trained-tensor-like f32 (unit-scale Gaussian).
+    pub fn gaussian_f32(&mut self, scale: f32) -> f32 {
+        self.rng.next_gaussian() as f32 * scale
+    }
+
+    pub fn vec_f32<F: FnMut(&mut Gen) -> f32>(&mut self, len: usize, mut f: F) -> Vec<f32> {
+        (0..len).map(|_| f(self)).collect()
+    }
+}
+
+/// Run `prop` on `iters` generated cases; panics with the failing seed.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, iters: u64, mut prop: F) {
+    for case in 0..iters {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}

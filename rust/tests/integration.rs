@@ -1,0 +1,169 @@
+//! Integration over the real PJRT runtime + AOT artifacts.  These tests
+//! need `make artifacts` to have run; they skip (with a notice) otherwise
+//! so `cargo test` works in a fresh checkout.
+
+use sfp::coordinator::{TrainConfig, Trainer, Variant};
+use sfp::formats::Container;
+use sfp::runtime::{HostTensor, Runtime};
+use std::path::Path;
+
+// The PJRT client wraps Rc handles (not Sync), so each test thread owns
+// its own runtime via thread_local; the artifact compile is ~1s.
+thread_local! {
+    static RT: std::cell::OnceCell<Option<Runtime>> = const { std::cell::OnceCell::new() };
+}
+
+fn with_runtime<R>(f: impl FnOnce(&Runtime) -> R) -> Option<R> {
+    RT.with(|cell| {
+        cell.get_or_init(|| {
+            let dir = Path::new("artifacts");
+            if !dir.join("manifest.json").exists() {
+                eprintln!("skipping integration tests: run `make artifacts` first");
+                return None;
+            }
+            Some(Runtime::load(dir).expect("runtime load"))
+        })
+        .as_ref()
+        .map(f)
+    })
+}
+
+fn quick_cfg(variant: Variant) -> TrainConfig {
+    TrainConfig {
+        variant,
+        epochs: 1,
+        steps_per_epoch: 3,
+        eval_batches: 1,
+        out_dir: None,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn loads_all_three_artifacts() {
+    with_runtime(|rt| {
+        for name in ["train_step", "eval_step", "forward_acts"] {
+            assert!(rt.manifest.artifact(name).is_ok(), "{name}");
+        }
+        assert_eq!(rt.manifest.num_layers(), 7);
+    });
+}
+
+#[test]
+fn train_step_reduces_loss_fp32() {
+    with_runtime(|rt| {
+        let cfg = TrainConfig {
+            epochs: 1,
+            steps_per_epoch: 12,
+            eval_batches: 1,
+            out_dir: None,
+            ..Default::default()
+        };
+        let mut t = Trainer::new(rt, cfg);
+        let first = t.run_one_step_for_bench().unwrap();
+        let mut last = first;
+        for _ in 0..11 {
+            last = t.run_one_step_for_bench().unwrap();
+        }
+        assert!(last < first, "loss {first} -> {last}");
+    });
+}
+
+#[test]
+fn qm_bitlengths_descend_through_pjrt() {
+    with_runtime(|rt| {
+        let mut cfg = quick_cfg(Variant::SfpQm(Container::Bf16));
+        cfg.steps_per_epoch = 10;
+        let mut t = Trainer::new(rt, cfg);
+        let res = t.run().unwrap();
+        let mean_a: f32 = res.final_n_a.iter().sum::<f32>() / res.final_n_a.len() as f32;
+        assert!(mean_a < 7.0, "n_a should drop below the bf16 ceiling: {mean_a}");
+        assert!(res.final_n_a.iter().all(|&b| (0.0..=7.0).contains(&b)));
+    });
+}
+
+#[test]
+fn bc_controller_engages_through_pjrt() {
+    with_runtime(|rt| {
+        let mut cfg = quick_cfg(Variant::SfpBc(Container::Bf16));
+        cfg.steps_per_epoch = 15;
+        let res = Trainer::new(rt, cfg).run().unwrap();
+        assert!(res.bc_histogram.total() == 15);
+        assert!(res.bc_histogram.mean() <= 7.0);
+    });
+}
+
+#[test]
+fn footprint_ledger_fp32_is_identity() {
+    with_runtime(|rt| {
+        let res = Trainer::new(rt, quick_cfg(Variant::Fp32)).run().unwrap();
+        let rel = res.footprint.relative_to(&res.footprint_fp32);
+        assert!((rel - 1.0).abs() < 1e-9, "{rel}");
+        let bf = Trainer::new(rt, quick_cfg(Variant::Bf16)).run().unwrap();
+        let rel = bf.footprint.relative_to(&bf.footprint_fp32);
+        assert!((rel - 0.5).abs() < 1e-9, "{rel}");
+    });
+}
+
+#[test]
+fn sfp_variant_reduces_footprint_e2e() {
+    with_runtime(|rt| {
+        let mut cfg = quick_cfg(Variant::SfpBc(Container::Bf16));
+        cfg.steps_per_epoch = 8;
+        let res = Trainer::new(rt, cfg).run().unwrap();
+        let rel = res.footprint.relative_to(&res.footprint_fp32);
+        assert!(rel < 0.55, "SFP_BC must beat BF16's 0.5 eventually: {rel}");
+    });
+}
+
+#[test]
+fn eval_step_accuracy_in_range() {
+    with_runtime(|rt| {
+        let t = Trainer::new(rt, quick_cfg(Variant::Fp32));
+        let (acc, loss) = t.evaluate().unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+        assert!(loss.is_finite() && loss > 0.0);
+    });
+}
+
+#[test]
+fn forward_acts_are_quantized_and_shaped() {
+    with_runtime(|rt| {
+        let t = Trainer::new(rt, quick_cfg(Variant::Fp32)).into_bits_forced(2.0);
+        let acts = t.dump_acts(0).unwrap();
+        assert_eq!(acts.len(), rt.manifest.num_layers());
+        for (a, spec) in acts.iter().zip(&rt.manifest.act_shapes) {
+            assert_eq!(&a.shape, spec);
+        }
+        // with n=2 the low 21 mantissa bits must be zero
+        let bits = acts[0].as_f32().unwrap();
+        assert!(bits.iter().all(|v| v.to_bits() & ((1 << 21) - 1) == 0));
+    });
+}
+
+#[test]
+fn runtime_rejects_bad_inputs() {
+    with_runtime(|rt| {
+        let err = rt.call("train_step", &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("inputs"));
+        let err = rt.call("nonexistent", &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("no executable"));
+        // wrong dtype in slot 0
+        let spec = &rt.manifest.artifact("eval_step").unwrap().inputs;
+        let mut bad: Vec<HostTensor> = spec.iter().map(HostTensor::zeros).collect();
+        bad[0] = HostTensor::i32(&spec[0].shape, vec![0; spec[0].elems()]);
+        let err = rt.call("eval_step", &bad).unwrap_err();
+        assert!(format!("{err:#}").contains("mismatch"));
+    });
+}
+
+#[test]
+fn deterministic_same_seed_same_loss() {
+    with_runtime(|rt| {
+        let run = || {
+            let mut t = Trainer::new(rt, quick_cfg(Variant::Fp32));
+            t.run_one_step_for_bench().unwrap()
+        };
+        assert_eq!(run(), run());
+    });
+}

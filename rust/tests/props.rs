@@ -1,0 +1,215 @@
+//! Property-based invariants across the numeric-format stack (in-tree
+//! `util::prop` harness — proptest is unavailable offline).
+
+use sfp::baselines::{self, ActKind};
+use sfp::coordinator::BitChop;
+use sfp::formats::{quantize, truncate_mantissa, Container};
+use sfp::gecko::{self, Mode};
+use sfp::sfp::{sfp_bits, SfpCodec};
+use sfp::stats::EncodedWidthCdf;
+use sfp::util::prop::{check, Gen};
+
+fn arbitrary_vals(g: &mut Gen) -> Vec<f32> {
+    let len = g.usize_in(1, 2000);
+    // mix: fully arbitrary finite floats, trained-like, and zero-heavy
+    match g.u32_in(0, 2) {
+        0 => g.vec_f32(len, |g| g.finite_f32()),
+        1 => g.vec_f32(len, |g| g.gaussian_f32(3.0)),
+        _ => g.vec_f32(len, |g| {
+            if g.bool() {
+                0.0
+            } else {
+                g.gaussian_f32(0.1)
+            }
+        }),
+    }
+}
+
+#[test]
+fn prop_gecko_delta_roundtrip() {
+    check("gecko delta encode∘decode = id", 200, |g| {
+        let vals = arbitrary_vals(g);
+        let exps = gecko::exponents(&vals);
+        let enc = gecko::encode(&exps, Mode::Delta);
+        assert_eq!(gecko::decode(&enc, Mode::Delta), exps);
+    });
+}
+
+#[test]
+fn prop_gecko_fixed_roundtrip() {
+    check("gecko fixed encode∘decode = id", 200, |g| {
+        let vals = arbitrary_vals(g);
+        let exps = gecko::exponents(&vals);
+        let mode = Mode::FixedBias {
+            bias: g.u32_in(0, 255) as u8,
+            group: g.usize_in(1, 32),
+        };
+        let enc = gecko::encode(&exps, mode);
+        assert_eq!(gecko::decode(&enc, mode), exps);
+    });
+}
+
+#[test]
+fn prop_gecko_size_accounting_exact() {
+    check("encoded_bits == materialized size", 150, |g| {
+        let vals = arbitrary_vals(g);
+        let exps = gecko::exponents(&vals);
+        for mode in [Mode::Delta, Mode::FixedBias { bias: 127, group: 8 }] {
+            assert_eq!(gecko::encoded_bits(&exps, mode), gecko::encode(&exps, mode).total_bits());
+        }
+    });
+}
+
+#[test]
+fn prop_sfp_roundtrip_is_truncation() {
+    check("sfp decompress∘compress = truncate", 120, |g| {
+        let vals = arbitrary_vals(g);
+        let n = g.u32_in(0, 23);
+        let container = if g.bool() { Container::Fp32 } else { Container::Bf16 };
+        let elide = g.bool();
+        let signed_ok = !elide || vals.iter().all(|v| v.to_bits() >> 31 == 0);
+        let vals: Vec<f32> = if elide && !signed_ok {
+            vals.iter().map(|v| f32::from_bits(v.to_bits() & 0x7FFF_FFFF)).collect()
+        } else {
+            vals
+        };
+        let codec = SfpCodec::new(container, elide);
+        let c = codec.compress(&vals, n);
+        let back = codec.decompress(&c);
+        assert_eq!(back.len(), vals.len());
+        for (&v, &b) in vals.iter().zip(&back) {
+            assert_eq!(quantize(v, n, container).to_bits(), b.to_bits());
+        }
+    });
+}
+
+#[test]
+fn prop_sfp_bits_matches_compressor() {
+    check("sfp_bits == compressor total", 100, |g| {
+        let vals = arbitrary_vals(g);
+        let n = g.u32_in(0, 23);
+        let elide = g.bool();
+        let codec = SfpCodec::new(Container::Fp32, elide);
+        assert_eq!(
+            sfp_bits(&vals, n, Container::Fp32, elide),
+            codec.compress(&vals, n).total_bits()
+        );
+    });
+}
+
+#[test]
+fn prop_truncation_error_bounded() {
+    check("|x - Q(x,n)| < 2^(e-n)", 200, |g| {
+        let x = g.gaussian_f32(100.0);
+        if x == 0.0 {
+            return;
+        }
+        let n = g.u32_in(0, 23);
+        let q = truncate_mantissa(x, n);
+        let e = x.abs().log2().floor();
+        assert!((x - q).abs() <= 2f32.powf(e - n as f32) * (1.0 + 1e-6));
+        // truncation moves toward zero, never away
+        assert!(q.abs() <= x.abs());
+        assert!(q == 0.0 || q.signum() == x.signum());
+    });
+}
+
+#[test]
+fn prop_quantize_idempotent_and_monotone_bits() {
+    check("Q(Q(x,n),n) = Q(x,n); bits(n+1) refines", 200, |g| {
+        let x = g.finite_f32();
+        let n = g.u32_in(0, 22);
+        let q1 = truncate_mantissa(x, n);
+        assert_eq!(truncate_mantissa(q1, n).to_bits(), q1.to_bits());
+        // coarser quantization of a finer one equals direct coarse quant
+        let fine = truncate_mantissa(x, n + 1);
+        assert_eq!(truncate_mantissa(fine, n).to_bits(), q1.to_bits());
+    });
+}
+
+#[test]
+fn prop_bitchop_bounded() {
+    check("bitchop stays in [0, n_max]", 60, |g| {
+        let n_max = g.u32_in(1, 23);
+        let mut bc = BitChop::new(n_max);
+        for _ in 0..300 {
+            let loss = g.f64_unit() * 10.0;
+            let b = bc.observe(loss);
+            assert!(b <= n_max);
+        }
+    });
+}
+
+#[test]
+fn prop_width_cdf_masses_sum_to_one() {
+    check("cdf(8) == 1 and monotone", 100, |g| {
+        let vals = arbitrary_vals(g);
+        let mut c = EncodedWidthCdf::new();
+        c.add_vals(&vals);
+        let mut prev = 0.0;
+        for b in 0..=8 {
+            let v = c.cdf_at(b);
+            assert!(v >= prev - 1e-12);
+            prev = v;
+        }
+        assert!((c.cdf_at(8) - 1.0).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn prop_baselines_sane() {
+    check("baseline footprints are ordered sanely", 100, |g| {
+        let count = g.usize_in(1, 1_000_000);
+        let zf = g.f64_unit();
+        let dense = baselines::dense_bits(count, Container::Bf16);
+        let js = baselines::js_bits(count, zf, Container::Bf16);
+        for kind in [ActKind::ReluPool, ActKind::ReluConv, ActKind::Dense] {
+            let gist = baselines::gist_pp_bits(count, zf, kind, Container::Bf16);
+            assert!(gist <= dense, "GIST++ never inflates");
+        }
+        // JS can inflate but by at most the tag bits
+        assert!(js <= dense + count);
+    });
+}
+
+#[test]
+fn prop_footprint_additivity() {
+    check("component ledger adds linearly", 100, |g| {
+        use sfp::stats::{ComponentBits, Footprint};
+        let mk = |g: &mut Gen| ComponentBits {
+            sign: g.f64_unit() * 1e6,
+            exponent: g.f64_unit() * 1e6,
+            mantissa: g.f64_unit() * 1e6,
+            metadata: g.f64_unit() * 1e6,
+        };
+        let a = mk(g);
+        let b = mk(g);
+        let mut f = Footprint::default();
+        f.activations.add(a);
+        f.activations.add(b);
+        assert!((f.total() - (a.total() + b.total())).abs() < 1e-6);
+    });
+}
+
+#[test]
+fn prop_hwsim_monotone_in_traffic() {
+    check("less traffic => no more time/energy", 40, |g| {
+        use sfp::hwsim::{simulate_pass, AccelConfig, ComputeType, LayerBits};
+        use sfp::traces::resnet18;
+        let cfg = AccelConfig::default();
+        let net = resnet18();
+        let w1 = 8.0 + g.f64_unit() * 24.0;
+        let w2 = g.f64_unit() * w1; // strictly less
+        let batch = g.usize_in(16, 512);
+        let mk = |word: f64| {
+            move |l: &sfp::traces::LayerTrace| LayerBits {
+                weight: l.weight_elems as f64 * word,
+                act: l.act_elems as f64 * word * batch as f64,
+            }
+        };
+        let hi = simulate_pass(&cfg, &net, batch, ComputeType::Fp32, &mk(w1));
+        let lo = simulate_pass(&cfg, &net, batch, ComputeType::Fp32, &mk(w2));
+        assert!(lo.time_s <= hi.time_s * (1.0 + 1e-9));
+        assert!(lo.energy_j <= hi.energy_j * (1.0 + 1e-9));
+    });
+}
