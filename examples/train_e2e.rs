@@ -31,6 +31,7 @@ fn main() -> anyhow::Result<()> {
         momentum: 0.9,
         seed: args.get_usize("seed", 42) as u64,
         out_dir: Some(out.clone()),
+        ..Default::default()
     };
 
     let t0 = std::time::Instant::now();

@@ -1,0 +1,133 @@
+//! Stash subsystem benches: worker-pool encode scaling vs a single
+//! thread (the acceptance gate: the pool must sustain >= 2x single-thread
+//! encode throughput), parallel restore, and arena store/load overhead.
+
+use sfp::formats::Container;
+use sfp::stash::{
+    CodecKind, ContainerMeta, GeckoStashCodec, Stash, StashCodec, StashConfig, TensorId,
+};
+use sfp::traces::ValueModel;
+use sfp::util::bench::{black_box, Bench};
+use std::time::Instant;
+
+/// One training step's worth of stash traffic: `tensors` tensors of
+/// `vals_per_tensor` trained-like activation values.
+fn workload(tensors: usize, vals_per_tensor: usize) -> Vec<Vec<f32>> {
+    (0..tensors)
+        .map(|i| ValueModel::relu_act().sample_values(vals_per_tensor, i as u64, true))
+        .collect()
+}
+
+fn main() {
+    let tensors = 32;
+    let vals_per_tensor = 64 * 1024;
+    let total = (tensors * vals_per_tensor) as f64;
+    let data = workload(tensors, vals_per_tensor);
+    let meta = ContainerMeta::new(Container::Bf16, 3).with_sign_elision(true);
+
+    // --- encode scaling: direct single-thread codec vs the pool ---------
+    // The pool path hands each tensor an owned copy (put takes Vec<f32>,
+    // as the trainer does); clone in the baseline too so the comparison
+    // is like-for-like.
+    let b = Bench::new("stash_encode").with_epochs(5);
+    let r_single = b.run("single_thread", total, || {
+        for vals in &data {
+            let owned = vals.clone();
+            black_box(GeckoStashCodec.encode(black_box(&owned), &meta));
+        }
+    });
+
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    let pool_stash = Stash::new(StashConfig {
+        codec: CodecKind::Gecko,
+        threads,
+        queue_depth: 2 * threads,
+        chunk_values: 16 * 1024,
+    });
+    let r_pool = b.run(&format!("pool_{threads}_threads"), total, || {
+        for (i, vals) in data.iter().enumerate() {
+            pool_stash.put(TensorId::act(i), vals.clone(), meta);
+        }
+        pool_stash.flush();
+        for i in 0..data.len() {
+            pool_stash.discard(TensorId::act(i));
+        }
+    });
+    let speedup = r_single.median_ns / r_pool.median_ns;
+    println!(
+        "pool_speedup: {speedup:.2}x over single thread with {threads} workers (target >= 2x)"
+    );
+    // Acceptance gate: with >= 4 workers the pool must sustain >= 2x the
+    // single-thread encode throughput.  Fail the bench run (CI executes
+    // it) instead of warning into the void; skip the gate on machines too
+    // narrow to possibly meet it, and gate on best-observed epochs (min)
+    // so shared-runner noise can't flake a healthy pool.
+    let gate_failed = threads >= 4 && r_single.min_ns / r_pool.min_ns < 2.0;
+
+    // --- full round-trip: put + flush + parallel take -------------------
+    let b = Bench::new("stash_roundtrip").with_epochs(5);
+    let stash = Stash::new(StashConfig {
+        codec: CodecKind::Gecko,
+        threads,
+        queue_depth: 2 * threads,
+        chunk_values: 16 * 1024,
+    });
+    let ids: Vec<TensorId> = (0..data.len()).map(TensorId::act).collect();
+    b.run("put_flush_take_all", total, || {
+        for (i, vals) in data.iter().enumerate() {
+            stash.put(TensorId::act(i), vals.clone(), meta);
+        }
+        stash.flush();
+        black_box(stash.take_all(&ids));
+    });
+
+    // --- chunked encode overhead vs one-shot ----------------------------
+    let b = Bench::new("stash_codec").with_epochs(5);
+    let one = &data[0];
+    b.run("encode_one_shot", vals_per_tensor as f64, || {
+        black_box(GeckoStashCodec.encode(black_box(one), &meta));
+    });
+    b.run("encode_chunked_4k", vals_per_tensor as f64, || {
+        black_box(GeckoStashCodec.encode_chunked(black_box(one), &meta, 4096));
+    });
+    let enc = GeckoStashCodec.encode(one, &meta);
+    b.run("decode", vals_per_tensor as f64, || {
+        black_box(GeckoStashCodec.decode(black_box(&enc), &meta));
+    });
+
+    // --- steady-state arena reuse: allocation must plateau --------------
+    let stash = Stash::new(StashConfig {
+        codec: CodecKind::Gecko,
+        threads,
+        queue_depth: 2 * threads,
+        chunk_values: 16 * 1024,
+    });
+    let t0 = Instant::now();
+    let steps = 20;
+    let mut allocated_after_first = 0;
+    for step in 0..steps {
+        for (i, vals) in data.iter().enumerate() {
+            stash.put(TensorId::act(i), vals.clone(), meta);
+        }
+        stash.flush();
+        for i in 0..data.len() {
+            stash.discard(TensorId::act(i));
+        }
+        if step == 0 {
+            allocated_after_first = stash.arena_allocated_bytes();
+        }
+    }
+    println!(
+        "arena_steady_state: {:.2} MB allocated after step 1, {:.2} MB after {steps} steps ({:.1} steps/s)",
+        allocated_after_first as f64 / 1e6,
+        stash.arena_allocated_bytes() as f64 / 1e6,
+        steps as f64 / t0.elapsed().as_secs_f64(),
+    );
+
+    if gate_failed {
+        eprintln!("FAIL: pool encode speedup below the 2x acceptance gate");
+        std::process::exit(1);
+    }
+}

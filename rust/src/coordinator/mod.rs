@@ -2,6 +2,12 @@
 //!
 //! * [`train::Trainer`] — epoch/step loop over the compiled PJRT step,
 //!   per-variant container policy, metrics + exact footprint ledger.
+//!   With [`train::TrainConfig::stash`] set, every step also routes its
+//!   post-forward tensors through the compressed stash
+//!   ([`crate::stash`]): the policy's bitlengths become per-tensor
+//!   container metadata, the worker pool encodes into the chunk arena,
+//!   and the tensors are restored (bit-exact) for the backward — so
+//!   BitChop/QM decisions move real stored bytes, not just counters.
 //! * [`bitchop::BitChop`] — the §IV-B loss-EMA mantissa controller.
 //! * [`qm::QmSchedule`] — the §IV-A γ schedule and round-up endgame.
 //! * [`data::DataGen`] — deterministic synthetic classification data.

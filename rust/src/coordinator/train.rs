@@ -13,8 +13,9 @@ use super::metrics::{CsvSink, Summary};
 use super::qm::QmSchedule;
 use crate::formats::Container;
 use crate::runtime::{HostTensor, Runtime};
+use crate::stash::{ContainerMeta, LedgerSnapshot, Stash, StashConfig, TensorId};
 use crate::stats::{BitlengthHistogram, ComponentBits, Footprint};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::path::PathBuf;
 
 /// Which compression scheme the run uses (Table I / II row labels).
@@ -70,6 +71,10 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Where CSV/JSON metrics land (created if missing); None = no files.
     pub out_dir: Option<PathBuf>,
+    /// Route every step's post-forward tensors through the compressed
+    /// stash (encode via the worker pool, restore for backward).  None =
+    /// the analytic footprint ledger only.
+    pub stash: Option<StashConfig>,
 }
 
 impl Default for TrainConfig {
@@ -83,6 +88,7 @@ impl Default for TrainConfig {
             momentum: 0.9,
             seed: 42,
             out_dir: None,
+            stash: None,
         }
     }
 }
@@ -118,6 +124,18 @@ pub struct RunResult {
     /// Final learned bitlengths (QM).
     pub final_n_w: Vec<f32>,
     pub final_n_a: Vec<f32>,
+    /// Stash ledger totals when the run stored real compressed tensors
+    /// (`TrainConfig::stash`): actually-written/read bytes vs FP32.
+    pub stash: Option<LedgerSnapshot>,
+}
+
+/// Sources and metadata of one step's stashed tensors, held across the
+/// fused step call for post-restore verification.
+struct StashedStep {
+    acts: Vec<HostTensor>,
+    ws: Vec<HostTensor>,
+    meta_a: Vec<ContainerMeta>,
+    meta_w: Vec<ContainerMeta>,
 }
 
 pub struct Trainer<'rt> {
@@ -135,6 +153,7 @@ pub struct Trainer<'rt> {
     qm: QmSchedule,
     lr: f32,
     step: i32,
+    stash: Option<Stash>,
 }
 
 impl<'rt> Trainer<'rt> {
@@ -165,6 +184,7 @@ impl<'rt> Trainer<'rt> {
             qm: QmSchedule::paper_like(cfg.epochs),
             lr: cfg.lr0,
             step: 0,
+            stash: cfg.stash.map(Stash::new),
             cfg,
         }
     }
@@ -210,6 +230,9 @@ impl<'rt> Trainer<'rt> {
         epoch: usize,
     ) -> Result<(f64, Vec<i32>, Vec<i32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
         let (lr_n, gamma, stochastic) = self.policy(epoch);
+        // Stash this step's post-forward tensors (pre-update weights, this
+        // step's batch and bitlengths) before the fused step runs them.
+        let stashed = self.stash_put_prestep()?;
         let l = self.rt.manifest.num_layers();
         let (x, y) = self.gen.batch(0, self.step as u64);
 
@@ -254,7 +277,88 @@ impl<'rt> Trainer<'rt> {
             self.bitchop.observe(task_loss);
         }
         self.step += 1;
+        if let Some(stashed) = stashed {
+            self.stash_restore(stashed)?;
+        }
         Ok((task_loss, n_used_w, n_used_a, a_gecko, w_gecko, zfrac))
+    }
+
+    /// First half of the stash round-trip: dump this step's post-forward
+    /// activations (forward with the *pre-update* weights, this step's
+    /// batch) and queue them plus the live weights on the encode pool with
+    /// the bitlengths the policy just chose — so BitChop/QM decisions
+    /// change *real stored bytes* step by step.  Returns the sources for
+    /// post-step verification.
+    fn stash_put_prestep(&self) -> Result<Option<StashedStep>> {
+        let Some(stash) = &self.stash else {
+            return Ok(None);
+        };
+        let container = self.cfg.variant.container();
+        let acts = self.dump_acts(self.step as u64)?;
+        // QM carries fractional bitlengths; the container stores ceil(n)
+        // mantissa bits (the round-up the QM endgame also applies).
+        let meta_of = |n: f32| ContainerMeta::new(container, n.max(0.0).ceil() as u32);
+        let meta_a: Vec<ContainerMeta> = self.n_a.iter().map(|&n| meta_of(n)).collect();
+        let meta_w: Vec<ContainerMeta> = self.n_w.iter().map(|&n| meta_of(n)).collect();
+        for (i, a) in acts.iter().enumerate() {
+            stash.put(TensorId::act(i), a.as_f32()?.to_vec(), meta_a[i]);
+        }
+        for (i, w) in self.ws.iter().enumerate() {
+            stash.put(TensorId::weight(i), w.as_f32()?.to_vec(), meta_w[i]);
+        }
+        stash.flush();
+        if stash.failures() > 0 {
+            return Err(anyhow!("stash encode worker failed"));
+        }
+        Ok(Some(StashedStep {
+            acts,
+            ws: self.ws.clone(),
+            meta_a,
+            meta_w,
+        }))
+    }
+
+    /// Second half: after the fused step (which recomputes its own copies),
+    /// restore the stashed tensors as the backward would, charging the
+    /// ledger's read traffic.  Restores are spot-checked bit-exact against
+    /// the quantized sources (full scan in debug builds; strided sample in
+    /// release so the check stays off the critical path — the exhaustive
+    /// guarantee lives in the codec property tests).
+    fn stash_restore(&self, stashed: StashedStep) -> Result<()> {
+        let Some(stash) = &self.stash else {
+            return Ok(());
+        };
+        let l = stashed.acts.len();
+        let ids: Vec<TensorId> = (0..l)
+            .map(TensorId::act)
+            .chain((0..stashed.ws.len()).map(TensorId::weight))
+            .collect();
+        let restored = stash.take_all(&ids);
+        for (k, back) in restored.iter().enumerate() {
+            let back = back
+                .as_ref()
+                .ok_or_else(|| anyhow!("stashed tensor {k} missing at restore"))?;
+            let (src, meta) = if k < l {
+                (&stashed.acts[k], stashed.meta_a[k])
+            } else {
+                (&stashed.ws[k - l], stashed.meta_w[k - l])
+            };
+            if back.len() != src.elems() {
+                return Err(anyhow!("stash restore length mismatch for tensor {k}"));
+            }
+            let stride = if cfg!(debug_assertions) {
+                1
+            } else {
+                (back.len() / 64).max(1)
+            };
+            let vals = src.as_f32()?;
+            for i in (0..back.len()).step_by(stride) {
+                if meta.quantized(vals[i]).to_bits() != back[i].to_bits() {
+                    return Err(anyhow!("stash restore not bit-exact for tensor {k}"));
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Validation over the held-out stream.
@@ -342,8 +446,16 @@ impl<'rt> Trainer<'rt> {
         // LR drops at 1/3 and 2/3 of the run (paper's staged schedule).
         let drops = [self.cfg.epochs / 3, 2 * self.cfg.epochs / 3];
 
-        let a_elems: Vec<f64> = m.act_shapes.iter().map(|s| s.iter().product::<usize>() as f64).collect();
-        let w_elems: Vec<f64> = m.weight_shapes.iter().map(|s| s.iter().product::<usize>() as f64).collect();
+        let a_elems: Vec<f64> = m
+            .act_shapes
+            .iter()
+            .map(|s| s.iter().product::<usize>() as f64)
+            .collect();
+        let w_elems: Vec<f64> = m
+            .weight_shapes
+            .iter()
+            .map(|s| s.iter().product::<usize>() as f64)
+            .collect();
 
         for epoch in 0..self.cfg.epochs {
             if epoch > 0 && drops.contains(&epoch) {
@@ -478,6 +590,7 @@ impl<'rt> Trainer<'rt> {
         res.final_val_acc = res.epochs.last().map(|e| e.val_acc).unwrap_or(0.0);
         res.final_n_w = self.n_w.clone();
         res.final_n_a = self.n_a.clone();
+        res.stash = self.stash.as_ref().map(Stash::ledger);
 
         if let Some(dir) = &self.cfg.out_dir {
             let mut s = Summary::new();
@@ -495,6 +608,12 @@ impl<'rt> Trainer<'rt> {
                     "mean_bits_a_per_epoch",
                     &res.epochs.iter().map(|e| e.mean_bits_a).collect::<Vec<_>>(),
                 );
+            if let Some(ls) = &res.stash {
+                s.num("stash_written_bits", ls.written_bits)
+                    .num("stash_read_bits", ls.read_bits)
+                    .num("stash_peak_resident_bits", ls.peak_resident_bits)
+                    .num("stash_ratio_vs_fp32", ls.ratio_vs_fp32());
+            }
             s.write(&dir.join(format!("{label}_summary.json")))?;
         }
         Ok(res)

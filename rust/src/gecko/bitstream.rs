@@ -47,6 +47,74 @@ impl BitWriter {
         self.len += n as usize;
     }
 
+    /// Rebuild a writer from previously-emitted words (to extend or
+    /// concatenate streams).  Bits at positions `>= len_bits` are cleared,
+    /// restoring the writer invariant that unwritten bits are zero —
+    /// without it, the first `push` after rebuilding would OR into stale
+    /// tail bits.
+    pub fn from_words(mut words: Vec<u64>, len_bits: usize) -> Self {
+        debug_assert!(len_bits <= words.len() * 64);
+        words.truncate(len_bits.div_ceil(64));
+        let tail = len_bits % 64;
+        if tail != 0 {
+            if let Some(last) = words.last_mut() {
+                *last &= u64::MAX << (64 - tail);
+            }
+        }
+        Self {
+            words,
+            len: len_bits,
+        }
+    }
+
+    /// Append `len_bits` bits from `words` (MSB-first, as produced by
+    /// [`BitWriter::into_words`]) onto this stream.
+    ///
+    /// This is the chunk-boundary concatenation path: encoding a tensor in
+    /// N chunks and appending the pieces is bit-identical to one-shot
+    /// encoding.  A word-granular `Vec` concat is only correct when the
+    /// left stream's length is a multiple of 64 — this handles the general
+    /// case by re-pushing the appended bits at the current bit offset.
+    pub fn append_words(&mut self, words: &[u64], len_bits: usize) {
+        debug_assert!(len_bits <= words.len() * 64);
+        if len_bits == 0 {
+            return;
+        }
+        let used = len_bits.div_ceil(64);
+        if self.len % 64 == 0 {
+            // Word-aligned fast path: memcpy, then clear the tail so the
+            // writer invariant (zero bits past `len`) holds even when the
+            // source's final word carries garbage past its length.
+            self.words.extend_from_slice(&words[..used]);
+            self.len += len_bits;
+            let tail = self.len % 64;
+            if tail != 0 {
+                if let Some(last) = self.words.last_mut() {
+                    *last &= u64::MAX << (64 - tail);
+                }
+            }
+            return;
+        }
+        let mut remaining = len_bits;
+        for &w in &words[..used] {
+            let take = remaining.min(64) as u32;
+            // push() accepts <= 57 bits per call; split each word into two
+            // MSB-first halves.
+            let hi = take.min(32);
+            self.push(w >> (64 - hi), hi);
+            if take > 32 {
+                let lo = take - 32;
+                self.push((w >> (32 - lo)) & ((1u64 << lo) - 1), lo);
+            }
+            remaining -= take as usize;
+        }
+    }
+
+    /// Append another writer's stream (see [`BitWriter::append_words`]).
+    pub fn append(&mut self, other: &BitWriter) {
+        self.append_words(other.words(), other.len_bits());
+    }
+
     /// Total bits written so far.
     pub fn len_bits(&self) -> usize {
         self.len
@@ -154,6 +222,90 @@ mod tests {
         let (words, len) = w.into_words();
         let mut r = BitReader::new(&words, len);
         assert_eq!(r.read(3), 0b101);
+    }
+
+    fn pseudo_fields(count: usize) -> Vec<(u64, u32)> {
+        (0..count)
+            .map(|i| {
+                let n = (i % 33) as u32 + 1;
+                (
+                    (i as u64).wrapping_mul(0x9E3779B97F4A7C15) & ((1u64 << n) - 1),
+                    n,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn append_matches_contiguous_pushes() {
+        // Regression for chunk-boundary correctness: splitting a stream at
+        // ANY field boundary and appending the halves must reproduce the
+        // one-shot stream bit for bit (word-aligned splits hide the bug;
+        // unaligned ones caught the naive Vec-concat approach).
+        let fields = pseudo_fields(300);
+        let mut oneshot = BitWriter::new();
+        for &(v, n) in &fields {
+            oneshot.push(v, n);
+        }
+        for split in [0, 1, 7, 64, 65, 150, 299, 300] {
+            let mut left = BitWriter::new();
+            let mut right = BitWriter::new();
+            for &(v, n) in &fields[..split] {
+                left.push(v, n);
+            }
+            for &(v, n) in &fields[split..] {
+                right.push(v, n);
+            }
+            left.append(&right);
+            assert_eq!(left.len_bits(), oneshot.len_bits(), "split {split}");
+            assert_eq!(left.words(), oneshot.words(), "split {split}");
+        }
+    }
+
+    #[test]
+    fn append_after_append_stays_consistent() {
+        // Three-way unaligned concatenation, then read everything back.
+        let fields = pseudo_fields(200);
+        let mut w = BitWriter::new();
+        for part in fields.chunks(67) {
+            let mut chunk = BitWriter::new();
+            for &(v, n) in part {
+                chunk.push(v, n);
+            }
+            w.append(&chunk);
+        }
+        let (words, len) = w.into_words();
+        let mut r = BitReader::new(&words, len);
+        for &(v, n) in &fields {
+            assert_eq!(r.read(n), v, "width {n}");
+        }
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn from_words_clears_tail_garbage() {
+        // Rebuilding from words whose final word has junk past the length
+        // must not corrupt subsequent pushes (push ORs into the last word).
+        let mut w = BitWriter::from_words(vec![u64::MAX], 3);
+        assert_eq!(w.len_bits(), 3);
+        w.push(0, 5);
+        let (words, len) = w.into_words();
+        let mut r = BitReader::new(&words, len);
+        assert_eq!(r.read(3), 0b111);
+        assert_eq!(r.read(5), 0);
+    }
+
+    #[test]
+    fn append_words_source_longer_than_length() {
+        // The source slice may carry extra words past len_bits; only the
+        // declared bits must land.
+        let mut w = BitWriter::new();
+        w.push(0b10, 2);
+        w.append_words(&[0xFFFF_FFFF_FFFF_FFFF, 0xDEAD_BEEF], 4);
+        assert_eq!(w.len_bits(), 6);
+        let (words, len) = w.into_words();
+        let mut r = BitReader::new(&words, len);
+        assert_eq!(r.read(6), 0b101111);
     }
 
     #[test]

@@ -390,4 +390,64 @@ mod tests {
         assert_eq!(enc.total_bits(), 0);
         assert!(decode(&enc, Mode::Delta).is_empty());
     }
+
+    /// Concatenate chunk encodings (chunks must cover whole groups except
+    /// the last).  The production chunk path is
+    /// `stash::EncodedStreams::concat` over the same
+    /// `BitWriter::append_words` primitive; this helper pins the invariant
+    /// at the `Encoded` level.
+    fn concat(chunks: &[Encoded]) -> Encoded {
+        let mut payload = BitWriter::new();
+        let mut metadata = BitWriter::new();
+        let mut count = 0usize;
+        for c in chunks {
+            payload.append_words(&c.payload, c.payload_bits);
+            metadata.append_words(&c.metadata, c.metadata_bits);
+            count += c.count;
+        }
+        let (pw, pb) = payload.into_words();
+        let (mw, mb) = metadata.into_words();
+        Encoded {
+            payload: pw,
+            payload_bits: pb,
+            metadata: mw,
+            metadata_bits: mb,
+            count,
+        }
+    }
+
+    #[test]
+    fn chunked_encode_concat_is_one_shot() {
+        // Regression (chunk-boundary correctness): encoding a tensor in N
+        // group-aligned chunks and concatenating must be bit-identical to
+        // one-shot encoding — payload words, metadata words, and lengths.
+        let vals = pseudo_vals(64 * 5 + 37, 21, 6.0);
+        let e = exps_from(&vals);
+        let one = encode(&e, Mode::Delta);
+        for chunk in [GROUP, 2 * GROUP, 3 * GROUP] {
+            let parts: Vec<Encoded> =
+                e.chunks(chunk).map(|c| encode(c, Mode::Delta)).collect();
+            let cat = concat(&parts);
+            assert_eq!(cat.count, one.count, "chunk {chunk}");
+            assert_eq!(cat.payload_bits, one.payload_bits, "chunk {chunk}");
+            assert_eq!(cat.metadata_bits, one.metadata_bits, "chunk {chunk}");
+            assert_eq!(cat.payload, one.payload, "chunk {chunk}");
+            assert_eq!(cat.metadata, one.metadata, "chunk {chunk}");
+            assert_eq!(decode(&cat, Mode::Delta), e);
+        }
+    }
+
+    #[test]
+    fn chunked_encode_concat_fixed_bias() {
+        let vals = pseudo_vals(500, 23, 2.0);
+        let e = exps_from(&vals);
+        let mode = Mode::FixedBias { bias: 127, group: 8 };
+        let one = encode(&e, mode);
+        let parts: Vec<Encoded> = e.chunks(120).map(|c| encode(c, mode)).collect();
+        let cat = concat(&parts);
+        assert_eq!(cat.payload, one.payload);
+        assert_eq!(cat.metadata, one.metadata);
+        assert_eq!(cat.payload_bits, one.payload_bits);
+        assert_eq!(decode(&cat, mode), e);
+    }
 }

@@ -193,6 +193,30 @@ fn layer_pass(
     }
 }
 
+/// [`simulate_pass`] with explicit per-layer footprints — the entry point
+/// for *measured* bits (e.g. the stash ledger's stored-bytes per layer)
+/// rather than a footprint-model closure.  `bits[i]` is consumed for
+/// `net.layers[i]`; this leans on `simulate_pass` requesting `bits_of`
+/// exactly once per layer in iteration order, and panics (rather than
+/// silently misattributing) if that contract ever changes.
+pub fn simulate_pass_with_bits(
+    cfg: &AccelConfig,
+    net: &NetworkTrace,
+    batch: usize,
+    compute: ComputeType,
+    bits: &[LayerBits],
+) -> PassStats {
+    assert_eq!(bits.len(), net.layers.len());
+    let idx = std::cell::Cell::new(0usize);
+    simulate_pass(cfg, net, batch, compute, &move |_| {
+        let i = idx.get();
+        idx.set(i + 1);
+        *bits
+            .get(i)
+            .expect("simulate_pass must request bits once per layer, in order")
+    })
+}
+
 /// Speedup and energy-efficiency gain of `variant` over `baseline`
 /// (Table II cells).
 pub fn gains(baseline: &PassStats, variant: &PassStats) -> (f64, f64) {

@@ -10,14 +10,25 @@
 //!   fake-quantized stash tensors, exported as HLO text.
 //! * **L3** (this crate): everything on the request path — the PJRT runtime
 //!   ([`runtime`]), the training coordinator with the BitChop / Quantum
-//!   Mantissa adaptation policies ([`coordinator`]), and the hardware
-//!   substrates: bit-exact Gecko and SFP codecs ([`gecko`], [`sfp`]),
-//!   compression baselines ([`baselines`]), the analytical accelerator +
-//!   DRAM model ([`hwsim`]), ImageNet-scale layer traces ([`traces`]), and
-//!   streaming statistics ([`stats`]).
+//!   Mantissa adaptation policies ([`coordinator`]), the concurrent
+//!   compressed-tensor stash that holds post-forward tensors until the
+//!   backward pass ([`stash`]), and the hardware substrates: bit-exact
+//!   Gecko and SFP codecs ([`gecko`], [`sfp`]), compression baselines
+//!   ([`baselines`]), the analytical accelerator + DRAM model ([`hwsim`]),
+//!   ImageNet-scale layer traces ([`traces`]), and streaming statistics
+//!   ([`stats`]).
+//!
+//! The stash layer ([`stash`]) is the memory path the paper's claims hinge
+//! on: tensors are encoded by a bounded worker pool into a chunk-recycling
+//! arena under per-tensor container metadata, and its ledger reports the
+//! *actually stored* bytes — cross-checked against the analytic
+//! [`report::footprint`] models (`repro stash`) and fed to [`hwsim`]'s
+//! DRAM model.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the model
-//! once; the `repro` binary is self-contained afterwards.
+//! once; the `repro` binary is self-contained afterwards.  Builds without
+//! the `pjrt` feature substitute a manifest-only runtime stub so the codec,
+//! trace-model, and stash paths work everywhere.
 
 pub mod baselines;
 pub mod coordinator;
@@ -27,6 +38,7 @@ pub mod hwsim;
 pub mod report;
 pub mod runtime;
 pub mod sfp;
+pub mod stash;
 pub mod stats;
 pub mod traces;
 pub mod util;

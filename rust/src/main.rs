@@ -6,19 +6,25 @@
 //!   table2   performance / energy of Table II (hwsim)
 //!   fig      regenerate a figure's CSV (--id 2|3|4|6|7|8|9|10|12|13)
 //!   compress demo the Gecko/SFP codecs on a synthetic tensor
+//!   stash    stash-subsystem sweep over a trace model: store/restore real
+//!            compressed tensors, cross-check stored bytes against the
+//!            analytic footprint model, measure pool throughput + hwsim
 //!   all      every trace-model table + figure in one go
 
 use anyhow::{anyhow, Result};
 use sfp::coordinator::{TrainConfig, Trainer, Variant};
 use sfp::formats::Container;
-use sfp::hwsim::AccelConfig;
-use sfp::report::{figures, tables};
+use sfp::hwsim::{gains, simulate_pass_with_bits, AccelConfig, ComputeType, LayerBits};
+use sfp::report::footprint::SAMPLE;
+use sfp::report::{figures, tables, FootprintModel, MantissaPolicy};
 use sfp::runtime::Runtime;
 use sfp::sfp::SfpCodec;
-use sfp::stats::{EncodedWidthCdf, ExponentHistogram};
-use sfp::traces::{mobilenet_v3_small, resnet18, ValueModel};
+use sfp::stash::{CodecKind, ContainerMeta, Stash, StashConfig, TensorId};
+use sfp::stats::ExponentHistogram;
+use sfp::traces::{mobilenet_v3_small, resnet18, values_with_exponents, NetworkTrace, ValueModel};
 use sfp::util::cli::Args;
 use std::path::{Path, PathBuf};
+use std::time::Instant;
 
 fn main() {
     let args = Args::from_env();
@@ -40,6 +46,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "table2" => cmd_table2(args),
         "fig" => cmd_fig(args),
         "compress" => cmd_compress(args),
+        "stash" => cmd_stash(args),
         "all" => cmd_all(args),
         _ => {
             print_help();
@@ -56,10 +63,13 @@ fn print_help() {
          \n\
          train     --variant fp32|bf16|qm|bc [--container bf16|fp32]\n\
          \u{20}         [--epochs N] [--steps N] [--out DIR] [--artifacts DIR]\n\
+         \u{20}         [--stash gecko|sfp|raw] (store real compressed tensors per step)\n\
          table1    print Table I footprint columns (trace models)\n\
          table2    print Table II perf/energy (hwsim) [--batch N]\n\
          fig       --id 2|3|4|6|7|8|9|10|12|13 [--out DIR] [--source trace|e2e]\n\
          compress  codec demo [--count N] [--mantissa N]\n\
+         stash     --model resnet18|mobilenet [--policy qm|bc|full] [--codec gecko|sfp|raw]\n\
+         \u{20}         [--batch N] [--threads N] [--queue N] [--chunk-values N]\n\
          all       regenerate all trace-model tables + figures [--out DIR]"
     );
 }
@@ -82,8 +92,20 @@ fn load_runtime(args: &Args) -> Result<Runtime> {
     Ok(rt)
 }
 
-fn train_cfg(args: &Args, variant: Variant) -> TrainConfig {
-    TrainConfig {
+fn train_cfg(args: &Args, variant: Variant) -> Result<TrainConfig> {
+    // A present-yet-unknown --stash codec must fail loudly rather than
+    // silently running without the stash measurement.
+    let stash = match args.get("stash") {
+        None => None,
+        Some(s) => Some(StashConfig {
+            codec: CodecKind::parse(s)
+                .ok_or_else(|| anyhow!("unknown --stash codec {s} (gecko|sfp|raw)"))?,
+            threads: args.get_usize("threads", 0),
+            queue_depth: args.get_usize("queue", 0),
+            chunk_values: args.get_usize("chunk-values", 0),
+        }),
+    };
+    Ok(TrainConfig {
         variant,
         epochs: args.get_usize("epochs", 6),
         steps_per_epoch: args.get_usize("steps", 40),
@@ -92,7 +114,8 @@ fn train_cfg(args: &Args, variant: Variant) -> TrainConfig {
         momentum: args.get_f64("momentum", 0.9) as f32,
         seed: args.get_usize("seed", 42) as u64,
         out_dir: Some(out_dir(args)),
-    }
+        stash,
+    })
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -100,7 +123,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let variant = Variant::parse(&args.get_or("variant", "qm"), container)
         .ok_or_else(|| anyhow!("unknown --variant"))?;
     let rt = load_runtime(args)?;
-    let cfg = train_cfg(args, variant);
+    let cfg = train_cfg(args, variant)?;
     eprintln!("training {:?}: {} epochs x {} steps", variant, cfg.epochs, cfg.steps_per_epoch);
     let res = Trainer::new(&rt, cfg).run()?;
     println!("variant={}", res.label);
@@ -109,6 +132,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!("footprint_rel_bf16={:.4}", res.footprint.relative_to(&res.footprint_bf16));
     println!("final_n_a={:?}", res.final_n_a);
     println!("final_n_w={:?}", res.final_n_w);
+    if let Some(ls) = &res.stash {
+        println!(
+            "stash: wrote {:.1} MB / read {:.1} MB compressed ({:.1}% of FP32), peak resident {:.1} MB",
+            ls.written_bits / 8e6,
+            ls.read_bits / 8e6,
+            100.0 * ls.ratio_vs_fp32(),
+            ls.peak_resident_bits / 8e6,
+        );
+    }
     Ok(())
 }
 
@@ -160,7 +192,7 @@ fn cmd_table2(args: &Args) -> Result<()> {
 
 fn trained_histograms(rt: &Runtime, args: &Args) -> Result<(ExponentHistogram, ExponentHistogram)> {
     // Short warm-up training, then histogram real stash tensors.
-    let mut cfg = train_cfg(args, Variant::Fp32);
+    let mut cfg = train_cfg(args, Variant::Fp32)?;
     cfg.epochs = args.get_usize("epochs", 2);
     cfg.steps_per_epoch = args.get_usize("steps", 20);
     cfg.out_dir = None;
@@ -185,10 +217,10 @@ fn cmd_fig(args: &Args) -> Result<()> {
     match id {
         2 | 3 | 4 => {
             let rt = load_runtime(args)?;
-            let qm = Trainer::new(&rt, train_cfg(args, Variant::SfpQm(container_of(args)))).run()?;
+            let qm = Trainer::new(&rt, train_cfg(args, Variant::SfpQm(container_of(args)))?).run()?;
             match id {
                 2 => {
-                    let base = Trainer::new(&rt, train_cfg(args, Variant::Fp32)).run()?;
+                    let base = Trainer::new(&rt, train_cfg(args, Variant::Fp32)?).run()?;
                     figures::fig_accuracy(&dir.join("fig2_accuracy_qm.csv"), &base, &qm)?;
                     println!("fig2 -> {}", dir.join("fig2_accuracy_qm.csv").display());
                 }
@@ -204,15 +236,15 @@ fn cmd_fig(args: &Args) -> Result<()> {
         }
         6 | 7 | 8 => {
             let rt = load_runtime(args)?;
-            let bc = Trainer::new(&rt, train_cfg(args, Variant::SfpBc(Container::Bf16))).run()?;
+            let bc = Trainer::new(&rt, train_cfg(args, Variant::SfpBc(Container::Bf16))?).run()?;
             match id {
                 6 => {
-                    let base = Trainer::new(&rt, train_cfg(args, Variant::Bf16)).run()?;
+                    let base = Trainer::new(&rt, train_cfg(args, Variant::Bf16)?).run()?;
                     figures::fig_accuracy(&dir.join("fig6_accuracy_bc.csv"), &base, &bc)?;
                     println!("fig6 -> {}", dir.join("fig6_accuracy_bc.csv").display());
                 }
                 7 => {
-                    let fp = Trainer::new(&rt, train_cfg(args, Variant::SfpBc(Container::Fp32))).run()?;
+                    let fp = Trainer::new(&rt, train_cfg(args, Variant::SfpBc(Container::Fp32))?).run()?;
                     figures::fig7_bc_bits(&dir.join("fig7_bc_bits.csv"), &bc, Some(&fp))?;
                     println!("fig7 -> {}", dir.join("fig7_bc_bits.csv").display());
                 }
@@ -288,6 +320,224 @@ fn cmd_compress(args: &Args) -> Result<()> {
             c.cycles as f64 / count as f64,
         );
     }
+    Ok(())
+}
+
+fn stash_net(args: &Args) -> Result<NetworkTrace> {
+    match args.get_or("model", "resnet18").as_str() {
+        "resnet18" => Ok(resnet18()),
+        "mobilenet" | "mobilenet_v3_small" | "mnv3" => Ok(mobilenet_v3_small()),
+        other => Err(anyhow!("unknown --model {other} (resnet18|mobilenet)")),
+    }
+}
+
+/// Stash sweep over a trace model: encode one sampled value stream per
+/// tensor through the worker pool (the same exponent streams the analytic
+/// footprint model sizes Gecko on), report measured stored bytes scaled to
+/// full tensor size against the analytic numbers, verify bit-exact
+/// restore, and feed the measured bits to the hwsim DRAM model.
+fn cmd_stash(args: &Args) -> Result<()> {
+    let container = container_of(args);
+    let net = stash_net(args)?;
+    let policy_name = args.get_or("policy", "qm");
+    let policy = match policy_name.as_str() {
+        "qm" => MantissaPolicy::qm_default(),
+        "bc" => MantissaPolicy::bc_default(container),
+        "full" => MantissaPolicy::Full,
+        other => return Err(anyhow!("unknown --policy {other} (qm|bc|full)")),
+    };
+    let kind = CodecKind::parse(&args.get_or("codec", "gecko"))
+        .ok_or_else(|| anyhow!("unknown --codec (gecko|sfp|raw)"))?;
+    let batch = args.get_usize("batch", 256);
+    let stash = Stash::new(StashConfig {
+        codec: kind,
+        threads: args.get_usize("threads", 0),
+        queue_depth: args.get_usize("queue", 0),
+        chunk_values: args.get_usize("chunk-values", 0),
+    });
+
+    let n_layers = net.layers.len();
+    let sched = policy.integer_schedule(n_layers, container);
+    // What the measured bytes should land on: the SFP schedule for the
+    // compressing codecs, the dense container for the raw baseline.  The
+    // gecko codec's layout matches the analytic accounting bit-for-bit;
+    // the sfp codec differs only in metadata framing (reported, ungated).
+    let analytic = match kind {
+        CodecKind::Raw => match container {
+            Container::Fp32 => FootprintModel::fp32(),
+            Container::Bf16 => FootprintModel::bf16(),
+        },
+        _ => FootprintModel::from_schedule(container, &sched),
+    };
+
+    println!(
+        "Stash sweep — {} @ batch {batch}, policy {policy_name}, codec {}, container {container}, {} worker threads",
+        net.name,
+        stash.codec_name(),
+        stash.threads(),
+    );
+    println!(
+        "(each tensor stashed as a {SAMPLE}-value sampled stream; reported MB scale to full tensor size)"
+    );
+
+    // One sampled stream per tensor, sharing the analytic model's exponent
+    // streams (seeds mirror FootprintModel::layer) so measured == analytic
+    // for the component-stream codec.
+    let mut streams: Vec<(TensorId, Vec<f32>, ContainerMeta, f64)> = Vec::new();
+    for (i, l) in net.layers.iter().enumerate() {
+        let seed = 0x5EED ^ i as u64;
+        let (n_a, n_w) = sched[i];
+        let a_exps = l.act_model.sample_exponents(SAMPLE, seed ^ 0xAC7);
+        let a_vals = values_with_exponents(&a_exps, seed ^ 0x7A1, l.nonneg_act);
+        let a_meta = ContainerMeta::new(container, n_a).with_sign_elision(l.nonneg_act);
+        let a_scale = (l.act_elems * batch) as f64 / SAMPLE as f64;
+        streams.push((TensorId::act(i), a_vals, a_meta, a_scale));
+
+        let w_count = SAMPLE.min(l.weight_elems.max(64));
+        let w_exps = l.weight_model.sample_exponents(w_count, seed ^ 0x3E1);
+        let w_vals = values_with_exponents(&w_exps, seed ^ 0x3F2, false);
+        let w_meta = ContainerMeta::new(container, n_w);
+        let w_scale = l.weight_elems as f64 / w_count as f64;
+        streams.push((TensorId::weight(i), w_vals, w_meta, w_scale));
+    }
+    let total_vals: usize = streams.iter().map(|(_, v, _, _)| v.len()).sum();
+
+    // --- encode throughput: direct single-thread codec vs the pool.  The
+    // pool path hands over an owned copy per tensor (put takes Vec<f32>),
+    // so the baseline clones too — like-for-like timing.
+    let codec = kind.build();
+    let t0 = Instant::now();
+    for (_, v, m, _) in &streams {
+        let owned = v.clone();
+        std::hint::black_box(codec.encode(&owned, m));
+    }
+    let t_single = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let t0 = Instant::now();
+    for (id, v, m, _) in &streams {
+        stash.put(*id, v.clone(), *m);
+    }
+    stash.flush();
+    let t_pool = t0.elapsed().as_secs_f64().max(1e-9);
+    if stash.failures() > 0 {
+        return Err(anyhow!("{} stash worker jobs failed", stash.failures()));
+    }
+
+    // --- stored bytes vs the analytic footprint model --------------------
+    let mb = |bits: f64| bits / 8e6;
+    println!(
+        "\n{:<18} {:>4} {:>4} {:>12} {:>12} {:>9}",
+        "layer", "n_a", "n_w", "stash MB", "analytic MB", "delta %"
+    );
+    let mut measured_bits = Vec::with_capacity(n_layers);
+    let mut stash_total = 0.0;
+    let mut analytic_total = 0.0;
+    for (i, l) in net.layers.iter().enumerate() {
+        // centered depth fraction => PerLayer policy index is exactly i
+        let frac = (i as f64 + 0.5) / n_layers as f64;
+        let lf = analytic.layer(l, frac, batch, 0x5EED ^ i as u64);
+        let a = stash
+            .stored_bits(TensorId::act(i))
+            .ok_or_else(|| anyhow!("activation {i} not resident"))?;
+        let w = stash
+            .stored_bits(TensorId::weight(i))
+            .ok_or_else(|| anyhow!("weight {i} not resident"))?;
+        let (a_scale, w_scale) = (streams[2 * i].3, streams[2 * i + 1].3);
+        let measured = a.total() * a_scale + w.total() * w_scale;
+        let expected = lf.total_act_bits() + lf.total_weight_bits();
+        measured_bits.push(LayerBits {
+            weight: w.total() * w_scale,
+            act: a.total() * a_scale,
+        });
+        stash_total += measured;
+        analytic_total += expected;
+        println!(
+            "{:<18} {:>4} {:>4} {:>12.2} {:>12.2} {:>8.3}%",
+            l.name,
+            sched[i].0,
+            sched[i].1,
+            mb(measured),
+            mb(expected),
+            100.0 * (measured - expected) / expected,
+        );
+    }
+    let fp32_total = FootprintModel::fp32().network(&net, batch).total();
+    let delta = 100.0 * (stash_total - analytic_total).abs() / analytic_total;
+    println!(
+        "totals: stash {:.2} MB vs analytic {:.2} MB (delta {delta:.4}%) — {:.1}% of FP32",
+        mb(stash_total),
+        mb(analytic_total),
+        100.0 * stash_total / fp32_total,
+    );
+    if kind != CodecKind::Sfp && delta > 1.0 {
+        return Err(anyhow!(
+            "stash/analytic footprint divergence {delta:.3}% exceeds 1%"
+        ));
+    }
+
+    // --- restore: parallel decode, verified bit-exact --------------------
+    let ids: Vec<TensorId> = streams.iter().map(|(id, ..)| *id).collect();
+    let t0 = Instant::now();
+    let restored = stash.take_all(&ids);
+    let t_restore = t0.elapsed().as_secs_f64().max(1e-9);
+    for ((id, vals, meta, _), back) in streams.iter().zip(&restored) {
+        let back = back
+            .as_ref()
+            .ok_or_else(|| anyhow!("{id:?} missing at restore"))?;
+        if back.len() != vals.len() {
+            return Err(anyhow!("{id:?} restore length mismatch"));
+        }
+        for (&v, &b) in vals.iter().zip(back) {
+            if meta.quantized(v).to_bits() != b.to_bits() {
+                return Err(anyhow!("{id:?} restore not bit-exact"));
+            }
+        }
+    }
+    println!(
+        "restore: {}/{} tensors bit-exact after stash round-trip",
+        restored.len(),
+        streams.len()
+    );
+
+    // --- throughput + arena + hwsim --------------------------------------
+    let mvals = total_vals as f64 / 1e6;
+    println!(
+        "encode: single-thread {:.1} Mvals/s, pool {:.1} Mvals/s ({:.2}x); decode (pool) {:.1} Mvals/s",
+        mvals / t_single,
+        mvals / t_pool,
+        t_single / t_pool,
+        mvals / t_restore,
+    );
+    println!(
+        "arena: high-water {:.2} MB, allocated {:.2} MB (free-listed for reuse); pool queue bounded",
+        stash.arena_high_water_bytes() as f64 / 1e6,
+        stash.arena_allocated_bytes() as f64 / 1e6,
+    );
+
+    let accel = AccelConfig::default();
+    let fp32_bits: Vec<LayerBits> = net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let lf = FootprintModel::fp32().layer(l, (i as f64 + 0.5) / n_layers as f64, batch, 0);
+            LayerBits {
+                weight: lf.total_weight_bits(),
+                act: lf.total_act_bits(),
+            }
+        })
+        .collect();
+    let compute = match container {
+        Container::Fp32 => ComputeType::Fp32,
+        Container::Bf16 => ComputeType::Bf16,
+    };
+    let base = simulate_pass_with_bits(&accel, &net, batch, ComputeType::Fp32, &fp32_bits);
+    let ours = simulate_pass_with_bits(&accel, &net, batch, compute, &measured_bits);
+    let (speed, energy) = gains(&base, &ours);
+    println!(
+        "hwsim on measured stash bytes: {speed:.2}x speedup, {energy:.2}x energy vs FP32 (DRAM traffic {:.1}%)",
+        100.0 * ours.dram_bits / base.dram_bits,
+    );
     Ok(())
 }
 

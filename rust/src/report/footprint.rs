@@ -52,7 +52,7 @@ impl MantissaPolicy {
     }
 
     /// Bits for layer at depth-quantile `frac` (0..1).
-    fn bits_at(&self, frac: f64, weights: bool, container: Container) -> f64 {
+    pub fn bits_at(&self, frac: f64, weights: bool, container: Container) -> f64 {
         match self {
             MantissaPolicy::Full => container.mant_bits() as f64,
             MantissaPolicy::NetworkWide { act_bits } => {
@@ -71,6 +71,25 @@ impl MantissaPolicy {
                 (v[idx] as f64).min(container.mant_bits() as f64)
             }
         }
+    }
+
+    /// The integer per-layer `(act_bits, weight_bits)` container schedule
+    /// this policy induces over `layers` layers — the single source of
+    /// truth shared by the analytic model ([`FootprintModel::from_schedule`])
+    /// and the stash sweep (`repro stash`), so their stored-bytes numbers
+    /// are comparable (fractional averages like BitChop's 4.5 b round to
+    /// the nearest storable container).
+    pub fn integer_schedule(&self, layers: usize, container: Container) -> Vec<(u32, u32)> {
+        let n = layers.max(1);
+        (0..layers)
+            .map(|i| {
+                let f = i as f64 / n as f64;
+                (
+                    self.bits_at(f, false, container).round() as u32,
+                    self.bits_at(f, true, container).round() as u32,
+                )
+            })
+            .collect()
     }
 }
 
@@ -128,6 +147,20 @@ impl FootprintModel {
         Self {
             container,
             policy: MantissaPolicy::bc_default(container),
+            sfp: true,
+        }
+    }
+
+    /// SFP model over an explicit integer `(act_bits, weight_bits)` per-layer
+    /// schedule (see [`MantissaPolicy::integer_schedule`]) — what `repro
+    /// stash` compares its measured stored-bytes against.
+    pub fn from_schedule(container: Container, schedule: &[(u32, u32)]) -> Self {
+        Self {
+            container,
+            policy: MantissaPolicy::PerLayer {
+                act_bits: schedule.iter().map(|&(a, _)| a).collect(),
+                weight_bits: schedule.iter().map(|&(_, w)| w).collect(),
+            },
             sfp: true,
         }
     }

@@ -2,7 +2,7 @@
 
 use super::footprint::FootprintModel;
 use crate::formats::Container;
-use crate::hwsim::{gains, simulate_pass, AccelConfig, ComputeType, LayerBits, PassStats};
+use crate::hwsim::{gains, simulate_pass_with_bits, AccelConfig, ComputeType, LayerBits, PassStats};
 use crate::traces::{mobilenet_v3_small, resnet18, NetworkTrace};
 
 /// One Table I row: footprint relative to FP32 for each variant.
@@ -53,7 +53,6 @@ fn pass_for(
     compute: ComputeType,
 ) -> PassStats {
     let n = net.layers.len().max(1);
-    // Pre-compute per-layer footprints (the closure must be Fn).
     let bits: Vec<LayerBits> = net
         .layers
         .iter()
@@ -66,12 +65,7 @@ fn pass_for(
             }
         })
         .collect();
-    let idx = std::cell::Cell::new(0usize);
-    simulate_pass(cfg, net, batch, compute, &move |_l| {
-        let i = idx.get();
-        idx.set((i + 1) % bits.len());
-        bits[i]
-    })
+    simulate_pass_with_bits(cfg, net, batch, compute, &bits)
 }
 
 /// Regenerate Table II from the trace models + hwsim.

@@ -1,0 +1,38 @@
+//! Manifest-only stand-in for the PJRT runtime, used when the crate is
+//! built without the `pjrt` feature (the `xla` bindings are not available
+//! in the offline build environment).  Manifests still load, so everything
+//! that only needs model geometry — the trace models, the stash sweep, the
+//! footprint ledgers — works; executing a compiled step reports the
+//! missing backend instead.
+
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// API-compatible shell of [`client::Runtime`](crate::runtime) holding only
+/// the manifest.
+pub struct Runtime {
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Load `dir/manifest.json`; no artifacts are compiled in this build.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        Ok(Runtime { manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (built without the `pjrt` feature)".into()
+    }
+
+    /// Always fails: there is no backend to execute against.
+    pub fn call(&self, name: &str, _inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        Err(anyhow!(
+            "cannot execute '{name}': built without the `pjrt` feature (the \
+             xla bindings are unavailable offline); trace-model and stash \
+             commands still work"
+        ))
+    }
+}

@@ -1,6 +1,10 @@
 //! PJRT runtime: load AOT HLO-text artifacts (see `python/compile/aot.py`)
 //! and execute them from the request path.  Python never runs here.
 
+#[cfg(feature = "pjrt")]
+pub mod client;
+#[cfg(not(feature = "pjrt"))]
+#[path = "client_stub.rs"]
 pub mod client;
 pub mod manifest;
 pub mod tensor;

@@ -1,0 +1,170 @@
+//! Chunk-granular arena for compressed bit streams.
+//!
+//! Stashed tensors live exactly as long as one training step (written
+//! post-forward, read back for backward), so the allocation pattern is a
+//! tight produce/consume cycle.  The arena stores every stream as a run of
+//! fixed-size `u64` chunks recycled through a free list: steady-state
+//! training reuses the same chunks step after step instead of hitting the
+//! allocator, and the chunk count gives the resident/high-water numbers
+//! the ledger reports.
+
+use std::sync::Mutex;
+
+/// Words per arena chunk (32 KiB).  Small enough that a short stream wastes
+/// little, large enough that multi-MB activation stashes need few slots.
+pub const CHUNK_WORDS: usize = 4096;
+
+/// Handle to one stored bit stream: its chunk slots plus the bit length.
+/// Only the arena that issued it can resolve it.
+#[derive(Debug, Clone)]
+pub struct ChunkSeq {
+    slots: Vec<u32>,
+    pub len_bits: usize,
+}
+
+impl ChunkSeq {
+    /// Whole-chunk bytes this stream pins in the arena.
+    pub fn resident_bytes(&self) -> usize {
+        self.slots.len() * CHUNK_WORDS * 8
+    }
+}
+
+#[derive(Default)]
+struct Slabs {
+    /// Slot id → chunk storage (each `CHUNK_WORDS` long).
+    chunks: Vec<Box<[u64]>>,
+    free: Vec<u32>,
+    in_use: usize,
+    high_water: usize,
+}
+
+/// Shared, thread-safe chunk store (workers encode into it concurrently).
+#[derive(Default)]
+pub struct ChunkArena {
+    inner: Mutex<Slabs>,
+}
+
+impl ChunkArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Store a packed bit stream; copies `len_bits.div_ceil(64)` words.
+    pub fn store(&self, words: &[u64], len_bits: usize) -> ChunkSeq {
+        let used = len_bits.div_ceil(64);
+        debug_assert!(used <= words.len());
+        let mut inner = self.inner.lock().unwrap();
+        let mut slots = Vec::with_capacity(used.div_ceil(CHUNK_WORDS));
+        for piece in words[..used].chunks(CHUNK_WORDS) {
+            let slot = match inner.free.pop() {
+                Some(s) => s,
+                None => {
+                    inner
+                        .chunks
+                        .push(vec![0u64; CHUNK_WORDS].into_boxed_slice());
+                    (inner.chunks.len() - 1) as u32
+                }
+            };
+            inner.chunks[slot as usize][..piece.len()].copy_from_slice(piece);
+            slots.push(slot);
+        }
+        inner.in_use += slots.len();
+        inner.high_water = inner.high_water.max(inner.in_use);
+        ChunkSeq { slots, len_bits }
+    }
+
+    /// Copy a stored stream back out (exactly `len_bits.div_ceil(64)` words).
+    pub fn load(&self, seq: &ChunkSeq) -> Vec<u64> {
+        let used = seq.len_bits.div_ceil(64);
+        let inner = self.inner.lock().unwrap();
+        let mut out = Vec::with_capacity(used);
+        let mut remaining = used;
+        for &slot in &seq.slots {
+            let take = remaining.min(CHUNK_WORDS);
+            out.extend_from_slice(&inner.chunks[slot as usize][..take]);
+            remaining -= take;
+        }
+        debug_assert_eq!(remaining, 0);
+        out
+    }
+
+    /// Return a stream's chunks to the free list.
+    pub fn release(&self, seq: ChunkSeq) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.in_use -= seq.slots.len();
+        inner.free.extend(seq.slots);
+    }
+
+    /// Bytes currently pinned by live streams (whole-chunk granularity).
+    pub fn in_use_bytes(&self) -> usize {
+        self.inner.lock().unwrap().in_use * CHUNK_WORDS * 8
+    }
+
+    /// Total bytes ever allocated (live + free-listed).
+    pub fn allocated_bytes(&self) -> usize {
+        self.inner.lock().unwrap().chunks.len() * CHUNK_WORDS * 8
+    }
+
+    /// Peak concurrently-live bytes over the arena's lifetime.
+    pub fn high_water_bytes(&self) -> usize {
+        self.inner.lock().unwrap().high_water * CHUNK_WORDS * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_load_roundtrip_multi_chunk() {
+        let arena = ChunkArena::new();
+        let words: Vec<u64> = (0..CHUNK_WORDS as u64 * 2 + 100)
+            .map(|i| i.wrapping_mul(0x9E3779B97F4A7C15))
+            .collect();
+        let bits = words.len() * 64 - 13; // non-word-aligned tail
+        let seq = arena.store(&words, bits);
+        assert_eq!(seq.slots.len(), 3);
+        let back = arena.load(&seq);
+        assert_eq!(back.len(), bits.div_ceil(64));
+        assert_eq!(&back[..], &words[..back.len()]);
+        arena.release(seq);
+        assert_eq!(arena.in_use_bytes(), 0);
+    }
+
+    #[test]
+    fn free_list_reuse_bounds_allocation() {
+        let arena = ChunkArena::new();
+        let words = vec![7u64; CHUNK_WORDS];
+        for _ in 0..50 {
+            let seq = arena.store(&words, CHUNK_WORDS * 64);
+            arena.release(seq);
+        }
+        // one chunk ever allocated despite 50 store/release cycles
+        assert_eq!(arena.allocated_bytes(), CHUNK_WORDS * 8);
+        assert_eq!(arena.high_water_bytes(), CHUNK_WORDS * 8);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let arena = ChunkArena::new();
+        let seq = arena.store(&[], 0);
+        assert_eq!(seq.resident_bytes(), 0);
+        assert!(arena.load(&seq).is_empty());
+        arena.release(seq);
+    }
+
+    #[test]
+    fn interleaved_streams_stay_disjoint() {
+        let arena = ChunkArena::new();
+        let a: Vec<u64> = (0..300).collect();
+        let b: Vec<u64> = (1000..1000 + 300).collect();
+        let sa = arena.store(&a, 300 * 64);
+        let sb = arena.store(&b, 300 * 64);
+        assert_eq!(arena.load(&sa), a);
+        assert_eq!(arena.load(&sb), b);
+        arena.release(sa);
+        // releasing one must not disturb the other
+        assert_eq!(arena.load(&sb), b);
+        arena.release(sb);
+    }
+}

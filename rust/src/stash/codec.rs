@@ -1,0 +1,425 @@
+//! [`StashCodec`]: the encode/decode contract of the stash, implemented by
+//! adapters over the existing compression stacks:
+//!
+//! * [`GeckoStashCodec`] — component-stream layout: Gecko-encoded exponents
+//!   (payload + width metadata), a packed `n`-bit mantissa stream, and an
+//!   optional sign stream.  Bit-for-bit the accounting the analytic
+//!   [`FootprintModel`](crate::report::FootprintModel) charges, so stash
+//!   ledger totals and `report::footprint` agree exactly.
+//! * [`SfpStashCodec`] — the §V hardware layout via [`SfpCodec`]: one
+//!   interleaved payload stream plus row-width metadata, as the 8-lane
+//!   compressor would burst it to DRAM.
+//! * [`RawStashCodec`] — the FP32/BF16 baseline: container words verbatim.
+//!
+//! Every codec is *lossless after quantization*: `decode(encode(v, meta))`
+//! equals `quantize(v, meta.mant(), meta.container)` bit-for-bit (property
+//! tested in `rust/tests/props.rs`, down to the 1-mantissa-bit extreme).
+
+use crate::formats::{bf16_bits, Container, F32_MANT_BITS};
+use crate::gecko::{self, BitReader, BitWriter, Mode};
+use crate::sfp::{Compressed, SfpCodec};
+use crate::stats::ComponentBits;
+
+/// Per-tensor container metadata chosen by the active policy (QM/BitChop):
+/// which container the tensor is stashed in and how many mantissa bits
+/// survive, plus the exponent encoding and sign handling.
+#[derive(Debug, Clone, Copy)]
+pub struct ContainerMeta {
+    pub container: Container,
+    /// Mantissa bits to keep (clamped to the container's mantissa length).
+    pub mant_bits: u32,
+    /// Exponent encoding; both modes are lossless (raw escape).
+    pub exp_mode: Mode,
+    /// Elide value signs — only valid for known-non-negative tensors
+    /// (post-ReLU activations, §IV-D).
+    pub elide_sign: bool,
+}
+
+impl ContainerMeta {
+    pub fn new(container: Container, mant_bits: u32) -> Self {
+        Self {
+            container,
+            mant_bits,
+            exp_mode: Mode::Delta,
+            elide_sign: false,
+        }
+    }
+
+    pub fn with_sign_elision(mut self, elide: bool) -> Self {
+        self.elide_sign = elide;
+        self
+    }
+
+    pub fn with_exp_mode(mut self, mode: Mode) -> Self {
+        self.exp_mode = mode;
+        self
+    }
+
+    /// Effective mantissa length inside this container.
+    pub fn mant(&self) -> u32 {
+        self.mant_bits.min(self.container.mant_bits())
+    }
+
+    /// The container value every stored f32 is reduced to.
+    pub fn quantized(&self, v: f32) -> f32 {
+        crate::formats::quantize(v, self.mant(), self.container)
+    }
+}
+
+/// One encoded tensor as raw bit streams (not yet placed in the arena).
+#[derive(Debug, Clone)]
+pub struct EncodedStreams {
+    pub count: usize,
+    /// `(words, len_bits)` per stream, in codec-defined order.
+    pub streams: Vec<(Vec<u64>, usize)>,
+    /// Exact component split of the stored bits (the ledger's Fig. 12 axis;
+    /// `bits.total()` equals the summed stream lengths).
+    pub bits: ComponentBits,
+}
+
+impl EncodedStreams {
+    pub fn total_bits(&self) -> usize {
+        self.streams.iter().map(|s| s.1).sum()
+    }
+
+    /// Concatenate chunk encodings stream-by-stream (bit-granular append —
+    /// the `gecko::bitstream` chunk-boundary path).  Chunks must come from
+    /// the same codec/meta, with whole codec groups everywhere but the
+    /// last chunk; [`StashCodec::encode_chunked`] guarantees both.
+    pub fn concat(chunks: &[EncodedStreams]) -> Option<EncodedStreams> {
+        let first = chunks.first()?;
+        let mut writers: Vec<BitWriter> = first
+            .streams
+            .iter()
+            .map(|(w, b)| BitWriter::from_words(w.clone(), *b))
+            .collect();
+        let mut count = first.count;
+        let mut bits = first.bits;
+        for c in &chunks[1..] {
+            debug_assert_eq!(c.streams.len(), writers.len());
+            for (w, (words, len)) in writers.iter_mut().zip(&c.streams) {
+                w.append_words(words, *len);
+            }
+            count += c.count;
+            bits.add(c.bits);
+        }
+        Some(EncodedStreams {
+            count,
+            streams: writers.into_iter().map(BitWriter::into_words).collect(),
+            bits,
+        })
+    }
+}
+
+/// The stash's pluggable compression contract.
+pub trait StashCodec: Send + Sync {
+    /// Short identifier for CLI/ledger rows.
+    fn name(&self) -> &'static str;
+
+    /// Group granularity under `meta`: chunked encoding is bit-identical
+    /// to one-shot only when every chunk but the last is a multiple of
+    /// this many values (the codec pads partial groups, so an unaligned
+    /// interior chunk would bake padding into the middle of the stream).
+    fn group(&self, meta: &ContainerMeta) -> usize;
+
+    /// Encode `vals` under `meta`.
+    fn encode(&self, vals: &[f32], meta: &ContainerMeta) -> EncodedStreams;
+
+    /// Decode a tensor encoded with the same `meta`.
+    fn decode(&self, enc: &EncodedStreams, meta: &ContainerMeta) -> Vec<f32>;
+
+    /// Encode in `chunk_values`-sized pieces (rounded up to a group
+    /// multiple) and concatenate — bit-identical to one-shot [`encode`]
+    /// (`StashCodec::encode`), but bounds the working set per piece and is
+    /// how pool workers stream large tensors through.
+    fn encode_chunked(
+        &self,
+        vals: &[f32],
+        meta: &ContainerMeta,
+        chunk_values: usize,
+    ) -> EncodedStreams {
+        let g = self.group(meta).max(1);
+        let chunk = chunk_values.max(1).div_ceil(g) * g;
+        let parts: Vec<EncodedStreams> =
+            vals.chunks(chunk).map(|c| self.encode(c, meta)).collect();
+        EncodedStreams::concat(&parts).unwrap_or_else(|| self.encode(vals, meta))
+    }
+}
+
+/// Gecko-exponent + packed-mantissa + sign component streams.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct GeckoStashCodec;
+
+impl StashCodec for GeckoStashCodec {
+    fn name(&self) -> &'static str {
+        "gecko"
+    }
+
+    fn group(&self, meta: &ContainerMeta) -> usize {
+        match meta.exp_mode {
+            Mode::Delta => gecko::GROUP,
+            Mode::FixedBias { group, .. } => group,
+        }
+    }
+
+    fn encode(&self, vals: &[f32], meta: &ContainerMeta) -> EncodedStreams {
+        let n = meta.mant();
+        let exps = gecko::exponents(vals);
+        let enc = gecko::encode(&exps, meta.exp_mode);
+        let mut mant = BitWriter::with_capacity(vals.len() * n as usize);
+        let mut sign = BitWriter::with_capacity(if meta.elide_sign { 0 } else { vals.len() });
+        for &v in vals {
+            let b = v.to_bits();
+            if n > 0 {
+                mant.push(((b >> (F32_MANT_BITS - n)) & ((1u32 << n) - 1)) as u64, n);
+            }
+            if !meta.elide_sign {
+                sign.push((b >> 31) as u64, 1);
+            }
+        }
+        let (mw, mb) = mant.into_words();
+        let (sw, sb) = sign.into_words();
+        let bits = ComponentBits {
+            sign: sb as f64,
+            exponent: enc.payload_bits as f64,
+            mantissa: mb as f64,
+            metadata: enc.metadata_bits as f64,
+        };
+        EncodedStreams {
+            count: vals.len(),
+            streams: vec![
+                (enc.payload, enc.payload_bits),
+                (enc.metadata, enc.metadata_bits),
+                (mw, mb),
+                (sw, sb),
+            ],
+            bits,
+        }
+    }
+
+    fn decode(&self, enc: &EncodedStreams, meta: &ContainerMeta) -> Vec<f32> {
+        let n = meta.mant();
+        let g = gecko::Encoded {
+            payload: enc.streams[0].0.clone(),
+            payload_bits: enc.streams[0].1,
+            metadata: enc.streams[1].0.clone(),
+            metadata_bits: enc.streams[1].1,
+            count: enc.count,
+        };
+        let exps = gecko::decode(&g, meta.exp_mode);
+        let mut mant = BitReader::new(&enc.streams[2].0, enc.streams[2].1);
+        let mut sign = BitReader::new(&enc.streams[3].0, enc.streams[3].1);
+        exps.iter()
+            .map(|&e| {
+                let m = if n > 0 {
+                    (mant.read(n) as u32) << (F32_MANT_BITS - n)
+                } else {
+                    0
+                };
+                let s = if meta.elide_sign {
+                    0
+                } else {
+                    sign.read(1) as u32
+                };
+                f32::from_bits((s << 31) | ((e as u32) << 23) | m)
+            })
+            .collect()
+    }
+}
+
+/// Hardware-layout adapter over [`SfpCodec`] (§V interleaved bursts).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SfpStashCodec;
+
+impl StashCodec for SfpStashCodec {
+    fn name(&self) -> &'static str {
+        "sfp"
+    }
+
+    fn group(&self, _meta: &ContainerMeta) -> usize {
+        crate::sfp::GROUP
+    }
+
+    fn encode(&self, vals: &[f32], meta: &ContainerMeta) -> EncodedStreams {
+        let codec = SfpCodec::new(meta.container, meta.elide_sign);
+        let c = codec.compress(vals, meta.mant());
+        let padded = if vals.is_empty() {
+            0
+        } else {
+            vals.len().div_ceil(crate::sfp::GROUP) * crate::sfp::GROUP
+        };
+        // Component split of the interleaved payload: mantissa and sign
+        // widths are fixed per (padded) value; the remainder is exponent.
+        let mant = (c.mant_bits as usize * padded) as f64;
+        let sign = if meta.elide_sign { 0.0 } else { padded as f64 };
+        let bits = ComponentBits {
+            sign,
+            mantissa: mant,
+            exponent: c.payload_bits as f64 - mant - sign,
+            metadata: c.metadata_bits as f64,
+        };
+        EncodedStreams {
+            count: vals.len(),
+            streams: vec![(c.payload, c.payload_bits), (c.metadata, c.metadata_bits)],
+            bits,
+        }
+    }
+
+    fn decode(&self, enc: &EncodedStreams, meta: &ContainerMeta) -> Vec<f32> {
+        let codec = SfpCodec::new(meta.container, meta.elide_sign);
+        let c = Compressed {
+            payload: enc.streams[0].0.clone(),
+            payload_bits: enc.streams[0].1,
+            metadata: enc.streams[1].0.clone(),
+            metadata_bits: enc.streams[1].1,
+            count: enc.count,
+            mant_bits: meta.mant(),
+            cycles: 0,
+        };
+        codec.decompress(&c)
+    }
+}
+
+/// Uncompressed-container baseline: quantized values stored verbatim
+/// (32 b/value FP32, 16 b/value BF16).  Ignores sign elision — the
+/// container layout is fixed.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RawStashCodec;
+
+impl StashCodec for RawStashCodec {
+    fn name(&self) -> &'static str {
+        "raw"
+    }
+
+    fn group(&self, _meta: &ContainerMeta) -> usize {
+        1
+    }
+
+    fn encode(&self, vals: &[f32], meta: &ContainerMeta) -> EncodedStreams {
+        let total = meta.container.total_bits();
+        let mut w = BitWriter::with_capacity(vals.len() * total as usize);
+        for &v in vals {
+            let q = meta.quantized(v);
+            match meta.container {
+                Container::Fp32 => w.push(q.to_bits() as u64, 32),
+                Container::Bf16 => w.push(bf16_bits(q) as u64, 16),
+            }
+        }
+        let (words, len) = w.into_words();
+        let count = vals.len() as f64;
+        let bits = ComponentBits {
+            sign: count,
+            exponent: 8.0 * count,
+            mantissa: (total as f64 - 9.0) * count,
+            metadata: 0.0,
+        };
+        EncodedStreams {
+            count: vals.len(),
+            streams: vec![(words, len)],
+            bits,
+        }
+    }
+
+    fn decode(&self, enc: &EncodedStreams, meta: &ContainerMeta) -> Vec<f32> {
+        let mut r = BitReader::new(&enc.streams[0].0, enc.streams[0].1);
+        (0..enc.count)
+            .map(|_| match meta.container {
+                Container::Fp32 => f32::from_bits(r.read(32) as u32),
+                Container::Bf16 => f32::from_bits((r.read(16) as u32) << 16),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traces::ValueModel;
+
+    fn codecs() -> Vec<Box<dyn StashCodec>> {
+        vec![
+            Box::new(GeckoStashCodec),
+            Box::new(SfpStashCodec),
+            Box::new(RawStashCodec),
+        ]
+    }
+
+    #[test]
+    fn roundtrip_is_quantization_all_codecs() {
+        let vals = ValueModel::weights().sample_values(777, 3, false);
+        for codec in codecs() {
+            for n in [0u32, 1, 4, 7, 23] {
+                for container in [Container::Fp32, Container::Bf16] {
+                    let meta = ContainerMeta::new(container, n);
+                    let enc = codec.encode(&vals, &meta);
+                    let back = codec.decode(&enc, &meta);
+                    assert_eq!(back.len(), vals.len());
+                    for (i, (&v, &b)) in vals.iter().zip(&back).enumerate() {
+                        assert_eq!(
+                            meta.quantized(v).to_bits(),
+                            b.to_bits(),
+                            "{} n={n} {container} i={i}",
+                            codec.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_equals_one_shot_all_codecs() {
+        let vals = ValueModel::relu_act().sample_values(64 * 4 + 19, 5, true);
+        let meta = ContainerMeta::new(Container::Bf16, 3).with_sign_elision(true);
+        for codec in codecs() {
+            let one = codec.encode(&vals, &meta);
+            for chunk in [1usize, 64, 100, 129] {
+                let cat = codec.encode_chunked(&vals, &meta, chunk);
+                assert_eq!(cat.count, one.count, "{} chunk {chunk}", codec.name());
+                assert_eq!(
+                    cat.streams, one.streams,
+                    "{} chunk {chunk}",
+                    codec.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gecko_component_split_matches_streams() {
+        let vals = ValueModel::relu_act().sample_values(1000, 9, true);
+        let meta = ContainerMeta::new(Container::Bf16, 2).with_sign_elision(true);
+        let enc = GeckoStashCodec.encode(&vals, &meta);
+        assert_eq!(enc.bits.total() as usize, enc.total_bits());
+        assert_eq!(enc.bits.sign, 0.0);
+        assert_eq!(enc.bits.mantissa, 2.0 * 1000.0);
+    }
+
+    #[test]
+    fn sfp_component_split_matches_streams() {
+        let vals = ValueModel::weights().sample_values(640, 11, false);
+        let meta = ContainerMeta::new(Container::Fp32, 5);
+        let enc = SfpStashCodec.encode(&vals, &meta);
+        assert!((enc.bits.total() - enc.total_bits() as f64).abs() < 1e-9);
+        assert_eq!(enc.bits.mantissa, 5.0 * 640.0);
+        assert_eq!(enc.bits.sign, 640.0);
+    }
+
+    #[test]
+    fn raw_bf16_is_16_bits_per_value() {
+        let vals = ValueModel::weights().sample_values(100, 13, false);
+        let meta = ContainerMeta::new(Container::Bf16, 7);
+        let enc = RawStashCodec.encode(&vals, &meta);
+        assert_eq!(enc.total_bits(), 1600);
+    }
+
+    #[test]
+    fn empty_tensor_all_codecs() {
+        let meta = ContainerMeta::new(Container::Fp32, 4);
+        for codec in codecs() {
+            let enc = codec.encode(&[], &meta);
+            assert_eq!(enc.total_bits(), 0);
+            assert!(codec.decode(&enc, &meta).is_empty());
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Footprint + bandwidth ledger: every stash write, read, and release
+//! lands here, giving (a) exact resident stored bits with the Fig. 12
+//! component split — directly comparable to the analytic
+//! `report::footprint` numbers — and (b) the cumulative DRAM write/read
+//! traffic the `hwsim` memory model consumes.
+
+use crate::stats::{ComponentBits, Footprint};
+use std::sync::Mutex;
+
+/// Which side of the [`Footprint`] ledger a tensor belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TensorClass {
+    Activation,
+    Weight,
+}
+
+/// Point-in-time copy of the ledger counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LedgerSnapshot {
+    /// Bits currently resident in the stash, by component and class.
+    pub resident: Footprint,
+    /// Peak resident bits over the ledger's lifetime.
+    pub peak_resident_bits: f64,
+    /// Cumulative encoded bits written (stash-side DRAM write traffic).
+    pub written_bits: f64,
+    /// Cumulative encoded bits read back (restore-side DRAM read traffic).
+    pub read_bits: f64,
+    /// Uncompressed FP32 bits of everything ever written — the Table I
+    /// denominator for the achieved ratio.
+    pub written_fp32_bits: f64,
+    pub writes: u64,
+    pub reads: u64,
+}
+
+impl LedgerSnapshot {
+    /// Achieved footprint relative to stashing the same tensors as FP32.
+    pub fn ratio_vs_fp32(&self) -> f64 {
+        if self.written_fp32_bits == 0.0 {
+            return 1.0;
+        }
+        self.written_bits / self.written_fp32_bits
+    }
+}
+
+/// Thread-safe ledger shared between pool workers and the caller.
+#[derive(Default)]
+pub struct StashLedger {
+    inner: Mutex<LedgerSnapshot>,
+}
+
+impl StashLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_write(&self, class: TensorClass, bits: ComponentBits, count: usize) {
+        let mut s = self.inner.lock().unwrap();
+        match class {
+            TensorClass::Activation => s.resident.activations.add(bits),
+            TensorClass::Weight => s.resident.weights.add(bits),
+        }
+        s.written_bits += bits.total();
+        s.written_fp32_bits += 32.0 * count as f64;
+        s.writes += 1;
+        s.peak_resident_bits = s.peak_resident_bits.max(s.resident.total());
+    }
+
+    pub fn record_read(&self, bits_total: f64) {
+        let mut s = self.inner.lock().unwrap();
+        s.read_bits += bits_total;
+        s.reads += 1;
+    }
+
+    /// A tensor left the stash: subtract its components from residency.
+    pub fn record_release(&self, class: TensorClass, bits: ComponentBits) {
+        let mut s = self.inner.lock().unwrap();
+        match class {
+            TensorClass::Activation => s.resident.activations.add(bits.scaled(-1.0)),
+            TensorClass::Weight => s.resident.weights.add(bits.scaled(-1.0)),
+        }
+    }
+
+    pub fn snapshot(&self) -> LedgerSnapshot {
+        *self.inner.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cb(sign: f64, exp: f64, mant: f64, meta: f64) -> ComponentBits {
+        ComponentBits {
+            sign,
+            exponent: exp,
+            mantissa: mant,
+            metadata: meta,
+        }
+    }
+
+    #[test]
+    fn write_read_release_cycle() {
+        let l = StashLedger::new();
+        l.record_write(TensorClass::Activation, cb(0.0, 400.0, 100.0, 21.0), 100);
+        l.record_write(TensorClass::Weight, cb(50.0, 200.0, 150.0, 10.0), 50);
+        let s = l.snapshot();
+        assert_eq!(s.writes, 2);
+        assert!((s.resident.total() - (521.0 + 410.0)).abs() < 1e-9);
+        assert!((s.written_fp32_bits - 32.0 * 150.0).abs() < 1e-9);
+        assert!((s.peak_resident_bits - 931.0).abs() < 1e-9);
+
+        l.record_read(521.0);
+        l.record_release(TensorClass::Activation, cb(0.0, 400.0, 100.0, 21.0));
+        let s = l.snapshot();
+        assert_eq!(s.reads, 1);
+        assert!((s.resident.activations.total()).abs() < 1e-9);
+        // peak unaffected by release
+        assert!((s.peak_resident_bits - 931.0).abs() < 1e-9);
+        assert!(s.ratio_vs_fp32() < 1.0);
+    }
+}

@@ -1,0 +1,459 @@
+//! Concurrent compressed-tensor stash — the memory path between forward
+//! and backward.
+//!
+//! The paper's premise (§III) is that *stashed* activations and weights —
+//! written after the forward pass, read back for the backward — dominate
+//! off-chip traffic, and that adaptive containers shrink them 3–5×.  This
+//! subsystem actually *holds* those tensors compressed between the passes
+//! instead of only counting bits analytically:
+//!
+//! ```text
+//!  put(id, vals, meta) ──▶ [StashPool workers] ── encode_chunked ──▶
+//!        ▲ back-pressure        │ StashCodec (gecko / sfp / raw)
+//!        │ (bounded queue)      ▼
+//!        │                 [ChunkArena]  fixed 32 KiB chunks, free-list reuse
+//!        │                      │
+//!  take(id) ◀── decode ◀────────┘        every write/read/release ──▶ [StashLedger]
+//! ```
+//!
+//! * [`codec::StashCodec`] — pluggable encode/decode, adapters over the
+//!   existing Gecko, SFP, and baseline compression stacks; per-tensor
+//!   [`codec::ContainerMeta`] carries the mantissa/exponent bitlengths the
+//!   active policy (Quantum Mantissa / BitChop) chose.
+//! * [`arena::ChunkArena`] — chunk-granular storage with free-list reuse.
+//! * [`pool::StashPool`] — bounded-queue encode/decode worker threads.
+//! * [`ledger::StashLedger`] — exact stored-bits + bandwidth accounting;
+//!   feeds both `report::footprint` comparisons and `hwsim`'s DRAM model.
+//!
+//! Consumers: `coordinator::train::Trainer` (opt-in per-step stashing on
+//! the request path) and the `repro stash` sweep/verification command.
+
+pub mod arena;
+pub mod codec;
+pub mod ledger;
+pub mod pool;
+
+pub use arena::{ChunkArena, ChunkSeq, CHUNK_WORDS};
+pub use codec::{
+    ContainerMeta, EncodedStreams, GeckoStashCodec, RawStashCodec, SfpStashCodec, StashCodec,
+};
+pub use ledger::{LedgerSnapshot, StashLedger, TensorClass};
+pub use pool::StashPool;
+
+use crate::stats::ComponentBits;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Which codec adapter a stash uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CodecKind {
+    Gecko,
+    Sfp,
+    Raw,
+}
+
+impl CodecKind {
+    pub fn parse(s: &str) -> Option<CodecKind> {
+        match s {
+            "gecko" => Some(CodecKind::Gecko),
+            "sfp" => Some(CodecKind::Sfp),
+            "raw" | "dense" => Some(CodecKind::Raw),
+            _ => None,
+        }
+    }
+
+    pub fn build(self) -> Arc<dyn StashCodec> {
+        match self {
+            CodecKind::Gecko => Arc::new(GeckoStashCodec),
+            CodecKind::Sfp => Arc::new(SfpStashCodec),
+            CodecKind::Raw => Arc::new(RawStashCodec),
+        }
+    }
+}
+
+/// Stash construction knobs (all zeros = sensible defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct StashConfig {
+    pub codec: CodecKind,
+    /// Worker threads; 0 = available parallelism.
+    pub threads: usize,
+    /// Bounded submit-queue depth; 0 = 2× threads.
+    pub queue_depth: usize,
+    /// Encode chunk granularity in values (rounded up to the codec group);
+    /// 0 = 64 Ki values.
+    pub chunk_values: usize,
+}
+
+impl Default for StashConfig {
+    fn default() -> Self {
+        Self {
+            codec: CodecKind::Gecko,
+            threads: 0,
+            queue_depth: 0,
+            chunk_values: 0,
+        }
+    }
+}
+
+/// Key of one stashed tensor within a step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TensorId {
+    pub class: TensorClass,
+    pub layer: usize,
+}
+
+impl TensorId {
+    pub fn act(layer: usize) -> TensorId {
+        TensorId {
+            class: TensorClass::Activation,
+            layer,
+        }
+    }
+
+    pub fn weight(layer: usize) -> TensorId {
+        TensorId {
+            class: TensorClass::Weight,
+            layer,
+        }
+    }
+}
+
+/// One resident tensor: arena handles per codec stream + bookkeeping.
+struct StoredTensor {
+    /// Submission order of the `put` that produced this entry — encode jobs
+    /// for the same id may finish out of order on different workers, and
+    /// only the newest submission may win.
+    seq: u64,
+    count: usize,
+    meta: ContainerMeta,
+    streams: Vec<ChunkSeq>,
+    bits: ComponentBits,
+}
+
+type Store = Mutex<HashMap<TensorId, StoredTensor>>;
+
+/// The concurrent compressed-tensor stash.
+pub struct Stash {
+    codec: Arc<dyn StashCodec>,
+    arena: Arc<ChunkArena>,
+    ledger: Arc<StashLedger>,
+    store: Arc<Store>,
+    pool: StashPool,
+    chunk_values: usize,
+    put_seq: AtomicU64,
+}
+
+impl Stash {
+    pub fn new(cfg: StashConfig) -> Stash {
+        Stash {
+            codec: cfg.codec.build(),
+            arena: Arc::new(ChunkArena::new()),
+            ledger: Arc::new(StashLedger::new()),
+            store: Arc::new(Mutex::new(HashMap::new())),
+            pool: StashPool::new(cfg.threads, cfg.queue_depth),
+            chunk_values: if cfg.chunk_values == 0 {
+                64 * 1024
+            } else {
+                cfg.chunk_values
+            },
+            put_seq: AtomicU64::new(0),
+        }
+    }
+
+    /// Queue `vals` for encoding and storage under `id`.  Returns as soon
+    /// as the job is accepted; blocks only on queue back-pressure.  A
+    /// tensor already stored under `id` is replaced (its chunks freed).
+    pub fn put(&self, id: TensorId, vals: Vec<f32>, meta: ContainerMeta) {
+        let codec = Arc::clone(&self.codec);
+        let arena = Arc::clone(&self.arena);
+        let ledger = Arc::clone(&self.ledger);
+        let store = Arc::clone(&self.store);
+        let chunk_values = self.chunk_values;
+        let seq = self.put_seq.fetch_add(1, Ordering::SeqCst);
+        self.pool.submit(Box::new(move || {
+            let enc = codec.encode_chunked(&vals, &meta, chunk_values);
+            let streams: Vec<ChunkSeq> = enc
+                .streams
+                .iter()
+                .map(|(words, len)| arena.store(words, *len))
+                .collect();
+            ledger.record_write(id.class, enc.bits, enc.count);
+            let fresh = StoredTensor {
+                seq,
+                count: enc.count,
+                meta,
+                streams,
+                bits: enc.bits,
+            };
+            // Encode jobs can finish out of submission order; the newest
+            // submission wins even if an older one lands afterwards.
+            let loser = {
+                let mut map = store.lock().unwrap();
+                let newer_resident = map.get(&id).is_some_and(|e| e.seq > seq);
+                if newer_resident {
+                    Some(fresh)
+                } else {
+                    map.insert(id, fresh)
+                }
+            };
+            if let Some(old) = loser {
+                release_stored(&arena, &ledger, id.class, old);
+            }
+        }));
+    }
+
+    /// Barrier: wait until every queued put/take job has finished.
+    pub fn flush(&self) {
+        self.pool.wait_idle();
+    }
+
+    /// Decode a resident tensor without removing it.  Call after
+    /// [`Stash::flush`] — a tensor still in the encode queue is not yet
+    /// visible.
+    pub fn get(&self, id: TensorId) -> Option<Vec<f32>> {
+        // Copy out under the lock (the lock also pins the chunks against a
+        // concurrent take/discard releasing them); decode outside it so a
+        // large tensor doesn't stall the pool workers on store access.
+        let (enc, meta) = {
+            let store = self.store.lock().unwrap();
+            let stored = store.get(&id)?;
+            (load_streams(&self.arena, stored), stored.meta)
+        };
+        self.ledger.record_read(enc.bits.total());
+        Some(self.codec.decode(&enc, &meta))
+    }
+
+    /// Decode a tensor and remove it, returning its chunks to the arena —
+    /// the restore-for-backward path.
+    pub fn take(&self, id: TensorId) -> Option<Vec<f32>> {
+        let stored = self.store.lock().unwrap().remove(&id)?;
+        let enc = load_streams(&self.arena, &stored);
+        self.ledger.record_read(enc.bits.total());
+        let vals = self.codec.decode(&enc, &stored.meta);
+        release_stored(&self.arena, &self.ledger, id.class, stored);
+        Some(vals)
+    }
+
+    /// Decode-and-remove a batch of tensors in parallel on the pool;
+    /// result slots line up with `ids` (`None` = not resident).
+    pub fn take_all(&self, ids: &[TensorId]) -> Vec<Option<Vec<f32>>> {
+        self.flush();
+        let results = Arc::new(Mutex::new(Vec::new()));
+        results.lock().unwrap().resize_with(ids.len(), || None);
+        for (slot, &id) in ids.iter().enumerate() {
+            let Some(stored) = self.store.lock().unwrap().remove(&id) else {
+                continue;
+            };
+            let codec = Arc::clone(&self.codec);
+            let arena = Arc::clone(&self.arena);
+            let ledger = Arc::clone(&self.ledger);
+            let results = Arc::clone(&results);
+            self.pool.submit(Box::new(move || {
+                let enc = load_streams(&arena, &stored);
+                ledger.record_read(enc.bits.total());
+                let vals = codec.decode(&enc, &stored.meta);
+                release_stored(&arena, &ledger, id.class, stored);
+                results.lock().unwrap()[slot] = Some(vals);
+            }));
+        }
+        self.pool.wait_idle();
+        let mut guard = results.lock().unwrap();
+        std::mem::take(&mut *guard)
+    }
+
+    /// Drop a resident tensor without decoding it.
+    pub fn discard(&self, id: TensorId) {
+        if let Some(stored) = self.store.lock().unwrap().remove(&id) {
+            release_stored(&self.arena, &self.ledger, id.class, stored);
+        }
+    }
+
+    /// Component split of one resident tensor's stored bits.
+    pub fn stored_bits(&self, id: TensorId) -> Option<ComponentBits> {
+        self.store.lock().unwrap().get(&id).map(|s| s.bits)
+    }
+
+    /// Element count of one resident tensor.
+    pub fn stored_count(&self, id: TensorId) -> Option<usize> {
+        self.store.lock().unwrap().get(&id).map(|s| s.count)
+    }
+
+    pub fn resident_tensors(&self) -> usize {
+        self.store.lock().unwrap().len()
+    }
+
+    pub fn ledger(&self) -> LedgerSnapshot {
+        self.ledger.snapshot()
+    }
+
+    pub fn arena_in_use_bytes(&self) -> usize {
+        self.arena.in_use_bytes()
+    }
+
+    pub fn arena_allocated_bytes(&self) -> usize {
+        self.arena.allocated_bytes()
+    }
+
+    pub fn arena_high_water_bytes(&self) -> usize {
+        self.arena.high_water_bytes()
+    }
+
+    pub fn codec_name(&self) -> &'static str {
+        self.codec.name()
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Encode/decode jobs that panicked (0 in a healthy run).
+    pub fn failures(&self) -> usize {
+        self.pool.failures()
+    }
+}
+
+fn load_streams(arena: &ChunkArena, stored: &StoredTensor) -> EncodedStreams {
+    EncodedStreams {
+        count: stored.count,
+        streams: stored
+            .streams
+            .iter()
+            .map(|seq| (arena.load(seq), seq.len_bits))
+            .collect(),
+        bits: stored.bits,
+    }
+}
+
+fn release_stored(
+    arena: &ChunkArena,
+    ledger: &StashLedger,
+    class: TensorClass,
+    stored: StoredTensor,
+) {
+    ledger.record_release(class, stored.bits);
+    for seq in stored.streams {
+        arena.release(seq);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Container;
+    use crate::traces::ValueModel;
+
+    fn small_stash(kind: CodecKind) -> Stash {
+        Stash::new(StashConfig {
+            codec: kind,
+            threads: 2,
+            queue_depth: 4,
+            chunk_values: 256,
+        })
+    }
+
+    #[test]
+    fn put_flush_take_roundtrip() {
+        let stash = small_stash(CodecKind::Gecko);
+        let vals = ValueModel::relu_act().sample_values(1000, 1, true);
+        let meta = ContainerMeta::new(Container::Bf16, 3).with_sign_elision(true);
+        stash.put(TensorId::act(0), vals.clone(), meta);
+        stash.flush();
+        assert_eq!(stash.resident_tensors(), 1);
+        let back = stash.take(TensorId::act(0)).unwrap();
+        for (&v, &b) in vals.iter().zip(&back) {
+            assert_eq!(meta.quantized(v).to_bits(), b.to_bits());
+        }
+        assert_eq!(stash.resident_tensors(), 0);
+        assert!(stash.ledger().resident.total().abs() < 1e-9);
+        assert_eq!(stash.failures(), 0);
+    }
+
+    #[test]
+    fn take_all_parallel_restore() {
+        let stash = small_stash(CodecKind::Sfp);
+        let meta = ContainerMeta::new(Container::Fp32, 5);
+        let tensors: Vec<Vec<f32>> = (0..8)
+            .map(|i| ValueModel::weights().sample_values(700 + i * 13, i as u64, false))
+            .collect();
+        for (i, t) in tensors.iter().enumerate() {
+            stash.put(TensorId::weight(i), t.clone(), meta);
+        }
+        let ids: Vec<TensorId> = (0..8).map(TensorId::weight).collect();
+        let back = stash.take_all(&ids);
+        for (t, b) in tensors.iter().zip(&back) {
+            let b = b.as_ref().unwrap();
+            assert_eq!(t.len(), b.len());
+            for (&v, &x) in t.iter().zip(b) {
+                assert_eq!(meta.quantized(v).to_bits(), x.to_bits());
+            }
+        }
+        // missing id comes back None
+        assert!(stash.take_all(&[TensorId::weight(99)])[0].is_none());
+    }
+
+    #[test]
+    fn replacement_releases_old_chunks() {
+        let stash = small_stash(CodecKind::Raw);
+        let meta = ContainerMeta::new(Container::Fp32, 23);
+        let vals = ValueModel::weights().sample_values(5000, 7, false);
+        stash.put(TensorId::act(3), vals.clone(), meta);
+        stash.flush();
+        let resident_once = stash.ledger().resident.total();
+        for _ in 0..5 {
+            stash.put(TensorId::act(3), vals.clone(), meta);
+            stash.flush();
+        }
+        // same tensor resident once, not six times
+        assert!((stash.ledger().resident.total() - resident_once).abs() < 1e-9);
+        assert_eq!(stash.resident_tensors(), 1);
+        stash.discard(TensorId::act(3));
+        assert_eq!(stash.arena_in_use_bytes(), 0);
+    }
+
+    #[test]
+    fn ledger_matches_stored_bits() {
+        let stash = small_stash(CodecKind::Gecko);
+        let meta = ContainerMeta::new(Container::Bf16, 4);
+        let vals = ValueModel::relu_act().sample_values(2000, 3, true);
+        stash.put(TensorId::act(0), vals, meta);
+        stash.flush();
+        let bits = stash.stored_bits(TensorId::act(0)).unwrap();
+        let s = stash.ledger();
+        assert!((s.resident.total() - bits.total()).abs() < 1e-9);
+        assert!((s.written_bits - bits.total()).abs() < 1e-9);
+        assert!((s.written_fp32_bits - 32.0 * 2000.0).abs() < 1e-9);
+        assert!(s.ratio_vs_fp32() < 1.0, "{}", s.ratio_vs_fp32());
+    }
+
+    #[test]
+    fn latest_put_wins_without_intervening_flush() {
+        // Two encode jobs for the same id race on different workers; the
+        // later submission must be the one resident after the barrier,
+        // whichever finishes first.
+        let stash = small_stash(CodecKind::Raw);
+        let meta = ContainerMeta::new(Container::Fp32, 23);
+        for round in 0..20 {
+            stash.put(TensorId::act(0), vec![1.0; 4096], meta);
+            stash.put(TensorId::act(0), vec![2.0; 4096], meta);
+            stash.flush();
+            let back = stash.get(TensorId::act(0)).unwrap();
+            assert!(back.iter().all(|&v| v == 2.0), "round {round}");
+            stash.discard(TensorId::act(0));
+        }
+        assert_eq!(stash.arena_in_use_bytes(), 0);
+    }
+
+    #[test]
+    fn get_keeps_tensor_resident() {
+        let stash = small_stash(CodecKind::Gecko);
+        let meta = ContainerMeta::new(Container::Fp32, 8);
+        stash.put(TensorId::act(1), vec![1.5f32; 100], meta);
+        stash.flush();
+        let a = stash.get(TensorId::act(1)).unwrap();
+        let b = stash.get(TensorId::act(1)).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(stash.ledger().reads, 2);
+        assert_eq!(stash.resident_tensors(), 1);
+    }
+}

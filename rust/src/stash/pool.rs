@@ -1,0 +1,173 @@
+//! Bounded multi-threaded worker pool for stash encode/decode jobs.
+//!
+//! The submit queue is a `sync_channel`, so a producer that outruns the
+//! workers blocks instead of buffering unbounded *uncompressed* tensors —
+//! the back-pressure that keeps the stash's own memory footprint bounded
+//! (the entire point of stashing compressed).  `wait_idle` is the step
+//! barrier: the trainer submits every post-forward tensor, then waits once
+//! before the backward needs them.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A unit of pool work (encode or decode closure).
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct StashPool {
+    tx: Option<SyncSender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+    failed: Arc<AtomicUsize>,
+}
+
+impl StashPool {
+    /// `threads = 0` uses the machine's available parallelism;
+    /// `queue_depth = 0` defaults to twice the thread count.
+    pub fn new(threads: usize, queue_depth: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        } else {
+            threads
+        };
+        let queue_depth = if queue_depth == 0 {
+            2 * threads
+        } else {
+            queue_depth
+        };
+        let (tx, rx) = sync_channel::<Job>(queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let failed = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                let failed = Arc::clone(&failed);
+                std::thread::spawn(move || worker_loop(&rx, &pending, &failed))
+            })
+            .collect();
+        Self {
+            tx: Some(tx),
+            workers,
+            pending,
+            failed,
+        }
+    }
+
+    /// Submit a job; blocks while the queue is full (back-pressure).
+    pub fn submit(&self, job: Job) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool not shut down")
+            .send(job)
+            .expect("worker threads alive");
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cv.wait(p).unwrap();
+        }
+    }
+
+    /// Jobs that panicked (a failed job never blocks [`wait_idle`]).
+    pub fn failures(&self) -> usize {
+        self.failed.load(Ordering::SeqCst)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+fn worker_loop(
+    rx: &Mutex<Receiver<Job>>,
+    pending: &(Mutex<usize>, Condvar),
+    failed: &AtomicUsize,
+) {
+    loop {
+        // Hold the receiver lock only for the dequeue, not the job.
+        let job = match rx.lock().unwrap().recv() {
+            Ok(job) => job,
+            Err(_) => return, // sender dropped: shutdown
+        };
+        if catch_unwind(AssertUnwindSafe(job)).is_err() {
+            failed.fetch_add(1, Ordering::SeqCst);
+        }
+        let (lock, cv) = pending;
+        *lock.lock().unwrap() -= 1;
+        cv.notify_all();
+    }
+}
+
+impl Drop for StashPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs_and_waits() {
+        let pool = StashPool::new(4, 2);
+        let sum = Arc::new(AtomicU64::new(0));
+        for i in 0..100u64 {
+            let sum = Arc::clone(&sum);
+            pool.submit(Box::new(move || {
+                sum.fetch_add(i, Ordering::SeqCst);
+            }));
+        }
+        pool.wait_idle();
+        assert_eq!(sum.load(Ordering::SeqCst), 99 * 100 / 2);
+        assert_eq!(pool.failures(), 0);
+    }
+
+    #[test]
+    fn bounded_queue_applies_backpressure_without_deadlock() {
+        let pool = StashPool::new(1, 1);
+        let hits = Arc::new(AtomicU64::new(0));
+        for _ in 0..20 {
+            let hits = Arc::clone(&hits);
+            pool.submit(Box::new(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                hits.fetch_add(1, Ordering::SeqCst);
+            }));
+        }
+        pool.wait_idle();
+        assert_eq!(hits.load(Ordering::SeqCst), 20);
+    }
+
+    #[test]
+    fn panicked_job_counts_and_does_not_wedge() {
+        let pool = StashPool::new(2, 4);
+        pool.submit(Box::new(|| panic!("boom")));
+        pool.submit(Box::new(|| {}));
+        pool.wait_idle();
+        assert_eq!(pool.failures(), 1);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = StashPool::new(3, 2);
+        pool.submit(Box::new(|| {}));
+        drop(pool); // must not hang
+    }
+}

@@ -134,6 +134,26 @@ impl ValueModel {
     }
 }
 
+/// Synthesize f32 values carrying exactly `exps` as their biased exponents
+/// (uniform mantissas, optional random signs; exponent 0 becomes exact
+/// zero).  Lets two consumers share one exponent stream — the analytic
+/// footprint model sizes Gecko on `sample_exponents` output, and the stash
+/// sweep encodes *values* over the identical exponents so measured and
+/// analytic bits agree exactly.
+pub fn values_with_exponents(exps: &[u8], seed: u64, nonneg: bool) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    exps.iter()
+        .map(|&e| {
+            if e == 0 {
+                return 0.0f32;
+            }
+            let mant = (rng.next_u64() & 0x7F_FFFF) as u32;
+            let sign = if nonneg { 0 } else { (rng.next_u64() & 1) as u32 };
+            f32::from_bits((sign << 31) | ((e as u32) << 23) | mant)
+        })
+        .collect()
+}
+
 /// Stateful generator implementing the Markov-zero + AR(1)-exponent model.
 struct ExpStream {
     model: ValueModel,

@@ -6,6 +6,10 @@ use sfp::coordinator::BitChop;
 use sfp::formats::{quantize, truncate_mantissa, Container};
 use sfp::gecko::{self, Mode};
 use sfp::sfp::{sfp_bits, SfpCodec};
+use sfp::stash::{
+    CodecKind, ContainerMeta, GeckoStashCodec, RawStashCodec, SfpStashCodec, Stash, StashCodec,
+    StashConfig, TensorId,
+};
 use sfp::stats::EncodedWidthCdf;
 use sfp::util::prop::{check, Gen};
 
@@ -189,6 +193,142 @@ fn prop_footprint_additivity() {
         f.activations.add(b);
         assert!((f.total() - (a.total() + b.total())).abs() < 1e-6);
     });
+}
+
+/// Arbitrary container metadata covering both containers, every mantissa
+/// length including the paper's 1-bit extreme, and both exponent modes
+/// (FixedBias with small groups yields the ~3-bit exponent fields).
+fn arbitrary_meta(g: &mut Gen) -> ContainerMeta {
+    let container = if g.bool() { Container::Fp32 } else { Container::Bf16 };
+    let mant = [0u32, 1, 2, 7, 23, g.u32_in(0, 23)][g.usize_in(0, 5)];
+    let exp_mode = if g.bool() {
+        Mode::Delta
+    } else {
+        Mode::FixedBias {
+            bias: g.u32_in(0, 255) as u8,
+            group: g.usize_in(1, 32),
+        }
+    };
+    ContainerMeta::new(container, mant).with_exp_mode(exp_mode)
+}
+
+#[test]
+fn prop_stash_roundtrip_bit_exact_every_codec() {
+    check("stash→restore == quantize for every StashCodec", 25, |g| {
+        let mut vals = arbitrary_vals(g);
+        let mut meta = arbitrary_meta(g);
+        if g.bool() {
+            // sign elision requires a non-negative tensor
+            for v in vals.iter_mut() {
+                *v = f32::from_bits(v.to_bits() & 0x7FFF_FFFF);
+            }
+            meta = meta.with_sign_elision(true);
+        }
+        for kind in [CodecKind::Gecko, CodecKind::Sfp, CodecKind::Raw] {
+            let stash = Stash::new(StashConfig {
+                codec: kind,
+                threads: g.usize_in(1, 4),
+                queue_depth: g.usize_in(1, 4),
+                chunk_values: g.usize_in(1, 800),
+            });
+            stash.put(TensorId::act(0), vals.clone(), meta);
+            stash.flush();
+            let back = stash.take(TensorId::act(0)).unwrap();
+            assert_eq!(back.len(), vals.len(), "{kind:?}");
+            for (i, (&v, &b)) in vals.iter().zip(&back).enumerate() {
+                assert_eq!(
+                    meta.quantized(v).to_bits(),
+                    b.to_bits(),
+                    "{kind:?} i={i} mant={} mode={:?}",
+                    meta.mant_bits,
+                    meta.exp_mode,
+                );
+            }
+            assert_eq!(stash.failures(), 0, "{kind:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_stash_chunked_encode_equals_one_shot() {
+    check("encode_chunked == encode for any chunk size", 60, |g| {
+        let vals = arbitrary_vals(g);
+        let meta = arbitrary_meta(g);
+        let chunk = g.usize_in(1, 3000);
+        let codecs: [&dyn StashCodec; 3] = [&GeckoStashCodec, &SfpStashCodec, &RawStashCodec];
+        for codec in codecs {
+            let one = codec.encode(&vals, &meta);
+            let cat = codec.encode_chunked(&vals, &meta, chunk);
+            assert_eq!(one.count, cat.count, "{} chunk={chunk}", codec.name());
+            assert_eq!(one.streams, cat.streams, "{} chunk={chunk}", codec.name());
+            assert!(
+                (one.bits.total() - cat.bits.total()).abs() < 1e-9,
+                "{} component ledger drift",
+                codec.name()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_stash_ledger_conserves_bits() {
+    check("ledger residency returns to zero after takes", 15, |g| {
+        let stash = Stash::new(StashConfig {
+            codec: [CodecKind::Gecko, CodecKind::Sfp, CodecKind::Raw][g.usize_in(0, 2)],
+            threads: g.usize_in(1, 4),
+            queue_depth: 2,
+            chunk_values: 512,
+        });
+        let k = g.usize_in(1, 6);
+        for i in 0..k {
+            let vals = g.vec_f32(g.usize_in(1, 1500), |g| g.gaussian_f32(2.0));
+            stash.put(TensorId::weight(i), vals, ContainerMeta::new(Container::Fp32, 4));
+        }
+        stash.flush();
+        let s = stash.ledger();
+        assert_eq!(s.writes, k as u64);
+        let stored: f64 = (0..k)
+            .map(|i| stash.stored_bits(TensorId::weight(i)).unwrap().total())
+            .sum();
+        assert!((s.resident.total() - stored).abs() < 1e-9);
+        assert!((s.written_bits - stored).abs() < 1e-9);
+        for i in 0..k {
+            stash.take(TensorId::weight(i)).unwrap();
+        }
+        let s = stash.ledger();
+        assert!(s.resident.total().abs() < 1e-9);
+        // every tensor read back exactly once
+        assert!((s.read_bits - s.written_bits).abs() < 1e-9);
+        assert_eq!(stash.arena_in_use_bytes(), 0);
+    });
+}
+
+#[test]
+fn stash_extreme_container_one_mantissa_bit() {
+    // The paper's most aggressive configuration: 1 mantissa bit in a BF16
+    // container with tight fixed-bias exponent groups (~3-bit delta
+    // fields on trained-like streams) — still bit-exact, and far below
+    // the dense BF16 footprint.
+    use sfp::traces::ValueModel;
+    let vals = ValueModel::relu_act().sample_values(64 * 512, 17, true);
+    let meta = ContainerMeta::new(Container::Bf16, 1)
+        .with_exp_mode(Mode::FixedBias { bias: 124, group: 8 })
+        .with_sign_elision(true);
+    let stash = Stash::new(StashConfig {
+        codec: CodecKind::Gecko,
+        threads: 2,
+        queue_depth: 2,
+        chunk_values: 4096,
+    });
+    stash.put(TensorId::act(0), vals.clone(), meta);
+    stash.flush();
+    let bits = stash.stored_bits(TensorId::act(0)).unwrap().total();
+    let ratio = bits / (16.0 * vals.len() as f64);
+    assert!(ratio < 0.6, "1-bit container ratio vs BF16 = {ratio}");
+    let back = stash.take(TensorId::act(0)).unwrap();
+    for (&v, &b) in vals.iter().zip(&back) {
+        assert_eq!(meta.quantized(v).to_bits(), b.to_bits());
+    }
 }
 
 #[test]
