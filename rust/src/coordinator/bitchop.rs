@@ -37,6 +37,10 @@ pub struct BitChop {
     stall_window: u32,
     stall_count: u32,
     best_mavg: f64,
+    /// Eq. 9 branch taken at the latest completed period: +1 chop (loss
+    /// improving), −1 restore (worsening), 0 hold/warm-up.  BitWave's
+    /// exponent side keys off this without re-deriving the EMA.
+    last_decision: i8,
 }
 
 impl BitChop {
@@ -57,6 +61,7 @@ impl BitChop {
             stall_window: 16,
             stall_count: 0,
             best_mavg: f64::INFINITY,
+            last_decision: 0,
         }
     }
 
@@ -86,6 +91,23 @@ impl BitChop {
         self.best_mavg = f64::INFINITY;
         self.stall_count = 0;
         self.periods = 0;
+        self.last_decision = 0;
+    }
+
+    /// Still inside the forced-full-precision window after an LR change.
+    pub fn in_cooldown(&self) -> bool {
+        self.cooldown > 0
+    }
+
+    /// Container ceiling this controller was built with.
+    pub fn n_max(&self) -> u32 {
+        self.n_max
+    }
+
+    /// Eq. 9 branch of the latest completed period (+1 chop / −1 restore /
+    /// 0 hold).
+    pub fn last_decision(&self) -> i8 {
+        self.last_decision
     }
 
     /// Feed the loss of the batch that just ran; returns the bitlength for
@@ -120,15 +142,18 @@ impl BitChop {
         self.periods += 1;
 
         // Eq. 9 needs a meaningful ε; hold decisions for a short warm-up.
+        self.last_decision = 0;
         if self.periods > 4 {
             if mavg > l_i + eps {
                 // improving => try fewer bits
                 self.n = self.n.saturating_sub(1);
                 self.stall_count = 0;
+                self.last_decision = 1;
             } else if mavg < l_i - eps {
                 // degrading => back off
                 self.n = (self.n + 1).min(self.n_max);
                 self.stall_count = 0;
+                self.last_decision = -1;
             } else {
                 // flat: count toward stall recovery
                 self.stall_count += 1;
@@ -149,6 +174,85 @@ impl BitChop {
         // Eq. 8: Mavg += α (L - Mavg)
         self.mavg = Some(new_mavg);
         self.bits()
+    }
+
+    /// Serialize the complete controller state (policy checkpointing).
+    /// Finite f64s round-trip bit-exactly through the JSON layer's
+    /// shortest-representation formatting; the two possibly-non-finite
+    /// slots (`mavg` unset, `best_mavg` = ∞) serialize as null.
+    pub fn state_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut o = std::collections::BTreeMap::new();
+        let mut num = |k: &str, v: f64| {
+            o.insert(k.to_string(), Json::Num(v));
+        };
+        num("n", self.n as f64);
+        num("n_max", self.n_max as f64);
+        num("alpha", self.alpha);
+        num("rel_err_mean", self.rel_err_mean);
+        num("rel_err_count", self.rel_err_count as f64);
+        num("period", self.period as f64);
+        num("in_period", self.in_period as f64);
+        num("period_loss_acc", self.period_loss_acc);
+        num("cooldown", self.cooldown as f64);
+        num("cooldown_len", self.cooldown_len as f64);
+        num("periods", self.periods as f64);
+        num("stall_window", self.stall_window as f64);
+        num("stall_count", self.stall_count as f64);
+        num("last_decision", self.last_decision as f64);
+        o.insert(
+            "mavg".to_string(),
+            match self.mavg {
+                Some(m) => Json::Num(m),
+                None => Json::Null,
+            },
+        );
+        o.insert(
+            "best_mavg".to_string(),
+            if self.best_mavg.is_finite() {
+                Json::Num(self.best_mavg)
+            } else {
+                Json::Null
+            },
+        );
+        Json::Obj(o)
+    }
+
+    /// Restore a controller from [`BitChop::state_json`] output.
+    pub fn from_state_json(state: &crate::util::json::Json) -> anyhow::Result<BitChop> {
+        use crate::util::json::Json;
+        let f = |k: &str| -> anyhow::Result<f64> {
+            state
+                .get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("bitchop state: missing '{k}'"))
+        };
+        Ok(BitChop {
+            n: f("n")? as u32,
+            n_max: f("n_max")? as u32,
+            alpha: f("alpha")?,
+            mavg: match state.get("mavg") {
+                Some(Json::Num(v)) => Some(*v),
+                Some(Json::Null) => None,
+                _ => return Err(anyhow::anyhow!("bitchop state: missing 'mavg'")),
+            },
+            rel_err_mean: f("rel_err_mean")?,
+            rel_err_count: f("rel_err_count")? as u64,
+            period: f("period")? as u32,
+            in_period: f("in_period")? as u32,
+            period_loss_acc: f("period_loss_acc")?,
+            cooldown: f("cooldown")? as u32,
+            cooldown_len: f("cooldown_len")? as u32,
+            periods: f("periods")? as u64,
+            stall_window: f("stall_window")? as u32,
+            stall_count: f("stall_count")? as u32,
+            best_mavg: match state.get("best_mavg") {
+                Some(Json::Num(v)) => *v,
+                Some(Json::Null) => f64::INFINITY,
+                _ => return Err(anyhow::anyhow!("bitchop state: missing 'best_mavg'")),
+            },
+            last_decision: f("last_decision")? as i8,
+        })
     }
 }
 
@@ -245,6 +349,95 @@ mod tests {
             bc.observe(10.0 - 0.07 * i as f64);
         }
         assert!(bc.bits() < 12, "bits {}", bc.bits());
+    }
+
+    #[test]
+    fn cooldown_preserves_chopped_bits_underneath() {
+        // The LR-change cooldown forces n_max at the *output* but must not
+        // forget the learned bitlength: once the window expires, the
+        // controller resumes from where it was, not from full precision.
+        let mut bc = BitChop::new(7);
+        for i in 0..40 {
+            bc.observe(5.0 - 0.1 * i as f64);
+        }
+        let chopped = bc.bits();
+        assert!(chopped < 7);
+        bc.notify_lr_change();
+        assert!(bc.in_cooldown());
+        assert_eq!(bc.bits(), 7);
+        // flat-ish loss through the cooldown: no Eq. 9 movement (EMA
+        // restarted, warm-up holds decisions), so after exactly
+        // cooldown_len completed periods the old bitlength resurfaces
+        let mut cooldown_periods = 0;
+        for _ in 0..8 {
+            assert_eq!(bc.bits(), 7, "cooldown must pin full precision");
+            bc.observe(1.0);
+            cooldown_periods += 1;
+        }
+        assert!(!bc.in_cooldown(), "after {cooldown_periods} periods");
+        assert_eq!(bc.bits(), chopped, "chopped bits resume after cooldown");
+    }
+
+    #[test]
+    fn cooldown_decrements_per_period_not_per_batch() {
+        let mut bc = BitChop::new(7).with_period(4);
+        for i in 0..60 {
+            bc.observe(5.0 - 0.05 * i as f64);
+        }
+        let chopped = bc.bits();
+        assert!(chopped < 7);
+        bc.notify_lr_change();
+        // 8 periods × 4 batches: every batch inside the window sees n_max
+        for _ in 0..32 {
+            assert!(bc.in_cooldown());
+            assert_eq!(bc.bits(), 7);
+            bc.observe(1.0);
+        }
+        assert!(!bc.in_cooldown());
+        assert_eq!(bc.bits(), chopped);
+    }
+
+    #[test]
+    fn stall_recovery_climbs_gradually_but_never_past_ceiling() {
+        let mut bc = BitChop::new(7);
+        for i in 0..30 {
+            bc.observe(5.0 - 0.1 * i as f64);
+        }
+        let low = bc.bits();
+        let mut prev = low;
+        assert!(low < 7);
+        // long dead-flat plateau: recovery restores at most one bit per
+        // period and never crosses the container ceiling
+        let mut rng = crate::traces::SplitMix64::new(11);
+        for _ in 0..1000 {
+            let b = bc.observe(2.0 + 0.001 * rng.next_gaussian());
+            assert!(b <= 7);
+            assert!(b as i64 - prev as i64 <= 1, "one bit per period max");
+            prev = b;
+        }
+        assert!(bc.bits() > low, "plateau must drift bits back up: {low} -> {}", bc.bits());
+    }
+
+    #[test]
+    fn state_json_roundtrip_mid_run() {
+        let mut bc = BitChop::new(23).with_period(2).with_alpha(0.2);
+        let mut rng = crate::traces::SplitMix64::new(5);
+        for i in 0..57 {
+            bc.observe(4.0 - 0.05 * i as f64 + 0.01 * rng.next_gaussian());
+        }
+        bc.notify_lr_change();
+        for i in 0..7 {
+            bc.observe(2.0 - 0.01 * i as f64);
+        }
+        let state = bc.state_json();
+        let mut restored = BitChop::from_state_json(&state).unwrap();
+        assert_eq!(restored.state_json(), state);
+        // identical continuation, including mid-period and cooldown state
+        for i in 0..40 {
+            let loss = 2.0 + 0.05 * i as f64;
+            assert_eq!(bc.observe(loss), restored.observe(loss), "step {i}");
+        }
+        assert_eq!(bc.last_decision(), restored.last_decision());
     }
 
     #[test]

@@ -1,15 +1,20 @@
 //! L3 coordinator: the request-path training orchestrator.
 //!
-//! * [`train::Trainer`] — epoch/step loop over the compiled PJRT step,
-//!   per-variant container policy, metrics + exact footprint ledger.
-//!   With [`train::TrainConfig::stash`] set, every step also routes its
-//!   post-forward tensors through the compressed stash
-//!   ([`crate::stash`]): the policy's bitlengths become per-tensor
-//!   container metadata, the worker pool encodes into the chunk arena,
-//!   and the tensors are restored (bit-exact) for the backward — so
-//!   BitChop/QM decisions move real stored bytes, not just counters.
-//! * [`bitchop::BitChop`] — the §IV-B loss-EMA mantissa controller.
-//! * [`qm::QmSchedule`] — the §IV-A γ schedule and round-up endgame.
+//! * [`train::Trainer`] — epoch/step loop over the compiled PJRT step.
+//!   Every variant's adaptation decisions route through the unified
+//!   policy engine ([`crate::policy`]): each period the Trainer feeds the
+//!   active [`crate::policy::BitPolicy`] the step's signals (loss,
+//!   learned bitlengths, exponent-range stats) and applies the returned
+//!   per-tensor container plans to the step knobs.  With
+//!   [`train::TrainConfig::stash`] set, the plans also become per-tensor
+//!   container metadata on the compressed stash ([`crate::stash`]): the
+//!   worker pool encodes into the chunk arena and the tensors are
+//!   restored (bit-exact) for the backward — so QM/QE/BitWave/BitChop
+//!   decisions move real stored bytes, not just counters.
+//! * [`bitchop::BitChop`] — the §IV-B loss-EMA mantissa controller (also
+//!   embedded in [`crate::policy::BitWave`]).
+//! * [`qm::QmSchedule`] — alias of the shared γ schedule
+//!   ([`crate::policy::GammaSchedule`]) plus its boundary regressions.
 //! * [`data::DataGen`] — deterministic synthetic classification data.
 //! * [`metrics`] — CSV / JSON sinks the figure drivers read back.
 

@@ -1,65 +1,15 @@
-//! Quantum Mantissa policy state (§IV-A): the gradient-side learning of
+//! Quantum Mantissa schedule (§IV-A): the gradient-side learning of
 //! bitlengths happens *inside* the compiled train step (L2's Eq. 7 penalty
-//! + the expected-value bitlength gradient in L1's custom VJP); this module
-//! owns the coordinator-side policy — the γ schedule and the §IV-A-4
-//! round-up endgame.
+//! + the expected-value bitlength gradient in L1's custom VJP); the
+//! coordinator-side γ schedule and §IV-A-4 round-up endgame now live in
+//! [`crate::policy::schedule::GammaSchedule`], shared with Quantum
+//! Exponent.  This module keeps the historical `QmSchedule` name plus the
+//! stage-boundary regression tests that pin the schedule's exact epoch
+//! arithmetic (γ switches precisely at the `stage_frac` breakpoints; the
+//! round-up endgame always covers at least one epoch, even on runs shorter
+//! than ⌈1/roundup_frac⌉ epochs).
 
-/// γ regularizer schedule: the paper sets 0.1 / 0.01 / 0.001 at epochs
-/// 0 / 30 / 60 of a 90-epoch run; we express the breakpoints as fractions
-/// of the configured run length.
-#[derive(Debug, Clone)]
-pub struct QmSchedule {
-    pub epochs: usize,
-    pub gammas: [f32; 3],
-    /// Epoch fractions at which each γ stage begins.
-    pub stage_frac: [f64; 3],
-    /// Fraction of the run with rounded-up frozen bitlengths at the end
-    /// (paper: last 10 of 90 epochs).
-    pub roundup_frac: f64,
-    /// Bitlength learning rate while adapting.
-    pub lr_n: f32,
-}
-
-impl QmSchedule {
-    pub fn paper_like(epochs: usize) -> Self {
-        Self {
-            epochs,
-            gammas: [0.1, 0.01, 0.001],
-            stage_frac: [0.0, 1.0 / 3.0, 2.0 / 3.0],
-            roundup_frac: 1.0 / 9.0,
-            lr_n: 4.0,
-        }
-    }
-
-    /// Is `epoch` in the round-up endgame (§IV-A-4)?
-    pub fn in_roundup(&self, epoch: usize) -> bool {
-        epoch as f64 >= self.epochs as f64 * (1.0 - self.roundup_frac)
-    }
-
-    /// (γ, lr_n, stochastic) for this epoch.  In the endgame the bitlengths
-    /// are frozen (lr_n = 0), deterministic (stochastic = 0), and the
-    /// coordinator rounds the learned values up once on entry.
-    pub fn hyper(&self, epoch: usize) -> (f32, f32, i32) {
-        if self.in_roundup(epoch) {
-            return (0.0, 0.0, 0);
-        }
-        let frac = epoch as f64 / self.epochs.max(1) as f64;
-        let mut gamma = self.gammas[0];
-        for (g, f) in self.gammas.iter().zip(self.stage_frac) {
-            if frac >= f {
-                gamma = *g;
-            }
-        }
-        (gamma, self.lr_n, 1)
-    }
-
-    /// Round learned bitlengths up for deployment/endgame.
-    pub fn round_up(bits: &mut [f32], mmax: f32) {
-        for b in bits {
-            *b = b.ceil().clamp(0.0, mmax);
-        }
-    }
-}
+pub use crate::policy::schedule::GammaSchedule as QmSchedule;
 
 #[cfg(test)]
 mod tests {
@@ -75,6 +25,22 @@ mod tests {
     }
 
     #[test]
+    fn gamma_pinned_at_exact_stage_breakpoints() {
+        // the fractions 30/90 and 60/90 must compare equal to the stored
+        // stage_frac values (1/3, 2/3) in f64 — no epsilon drift allowed
+        let s = QmSchedule::paper_like(90);
+        assert_eq!(s.hyper(59).0, 0.01);
+        assert_eq!(s.hyper(60).0, 0.001);
+        // a run length that is not a multiple of 3: breakpoints land on
+        // the first epoch at-or-after the fraction
+        let s = QmSchedule::paper_like(10);
+        assert_eq!(s.hyper(3).0, 0.1); // 3/10 < 1/3
+        assert_eq!(s.hyper(4).0, 0.01); // 4/10 >= 1/3
+        assert_eq!(s.hyper(6).0, 0.01); // 6/10 < 2/3
+        assert_eq!(s.hyper(7).0, 0.001); // 7/10 >= 2/3
+    }
+
+    #[test]
     fn roundup_endgame() {
         let s = QmSchedule::paper_like(90);
         assert!(!s.in_roundup(79));
@@ -85,6 +51,21 @@ mod tests {
         let (_, lr_n, stoch) = s.hyper(10);
         assert!(lr_n > 0.0);
         assert_eq!(stoch, 1);
+    }
+
+    #[test]
+    fn roundup_entry_epoch_off_by_one_guard() {
+        // regression: the endgame must exist on short runs — the Trainer's
+        // 6-epoch default previously computed a 5.33-epoch threshold that
+        // epoch 5 (the last) never reached, so QM runs ended un-rounded
+        let s = QmSchedule::paper_like(6);
+        assert_eq!(s.roundup_entry(), 5);
+        assert!(s.in_roundup(5));
+        assert!(!s.in_roundup(4));
+        assert_eq!(s.hyper(5), (0.0, 0.0, 0));
+        // and the paper-length run keeps its exact entry epoch
+        assert_eq!(QmSchedule::paper_like(90).roundup_entry(), 80);
+        assert_eq!(QmSchedule::paper_like(45).roundup_entry(), 40);
     }
 
     #[test]

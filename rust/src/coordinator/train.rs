@@ -1,20 +1,27 @@
 //! The training orchestrator: drives the AOT-compiled train/eval steps
-//! through PJRT, applies the per-variant container policy (FP32 / BF16
-//! baselines, SFP_QM, SFP_BC), and keeps the exact footprint ledger the
-//! tables and figures read.
+//! through PJRT, applies the active adaptation policy's per-tensor
+//! [`ContainerPlan`]s (FP32 / BF16 baselines, SFP_QM, SFP_BC, SFP_QM+QE,
+//! SFP_BitWave) to both the step knobs and the stash's container metadata
+//! live each period, and keeps the exact footprint ledger the tables and
+//! figures read.
 //!
-//! All adaptation decisions (BitChop's Eq. 8/9, the QM γ schedule and
-//! round-up endgame, LR drops) live here in Rust; the compiled step only
-//! exposes knobs (`n_w`, `n_a`, `lr_n`, `gamma`, `stochastic`, `mmax`).
+//! All adaptation decisions route through one [`BitPolicy`] engine
+//! ([`crate::policy`]): the Trainer feeds it per-period
+//! [`StepSignals`](crate::policy::StepSignals) (loss, learned bitlengths
+//! from the compiled step, exponent-range stats of the stashed tensors)
+//! and applies the returned plans; the compiled step only exposes knobs
+//! (`n_w`, `n_a`, `lr_n`, `gamma`, `stochastic`, `mmax`).
 
-use super::bitchop::BitChop;
 use super::data::{init_params, DataGen};
 use super::metrics::{CsvSink, Summary};
-use super::qm::QmSchedule;
 use crate::formats::Container;
+use crate::policy::{
+    BitChopPolicy, BitPolicy, Composite, FixedPolicy, NetworkPlan, QuantumExponent,
+    QuantumMantissa, StepSignals,
+};
 use crate::runtime::{HostTensor, Runtime};
-use crate::stash::{ContainerMeta, LedgerSnapshot, Stash, StashConfig, TensorId};
-use crate::stats::{BitlengthHistogram, ComponentBits, Footprint};
+use crate::stash::{ContainerMeta, EpochTraffic, LedgerSnapshot, Stash, StashConfig, TensorId};
+use crate::stats::{BitlengthHistogram, ComponentBits, ExpRangeStats, Footprint};
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
 
@@ -29,6 +36,11 @@ pub enum Variant {
     SfpQm(Container),
     /// Gecko + BitChop over the given container.
     SfpBc(Container),
+    /// Quantum Mantissa + Quantum Exponent (the paper's headline pair):
+    /// learned per-layer mantissa *and* exponent bitlengths.
+    SfpQmQe(Container),
+    /// BitWave: loss-driven network-wide mantissa + exponent bitlengths.
+    SfpBw(Container),
 }
 
 impl Variant {
@@ -36,7 +48,10 @@ impl Variant {
         match self {
             Variant::Fp32 => Container::Fp32,
             Variant::Bf16 => Container::Bf16,
-            Variant::SfpQm(c) | Variant::SfpBc(c) => *c,
+            Variant::SfpQm(c)
+            | Variant::SfpBc(c)
+            | Variant::SfpQmQe(c)
+            | Variant::SfpBw(c) => *c,
         }
     }
 
@@ -46,6 +61,8 @@ impl Variant {
             Variant::Bf16 => "bf16".into(),
             Variant::SfpQm(c) => format!("sfp_qm_{}", c).to_lowercase(),
             Variant::SfpBc(c) => format!("sfp_bc_{}", c).to_lowercase(),
+            Variant::SfpQmQe(c) => format!("sfp_qmqe_{}", c).to_lowercase(),
+            Variant::SfpBw(c) => format!("sfp_bw_{}", c).to_lowercase(),
         }
     }
 
@@ -55,7 +72,46 @@ impl Variant {
             "bf16" => Some(Variant::Bf16),
             "qm" | "sfp_qm" => Some(Variant::SfpQm(container)),
             "bc" | "sfp_bc" => Some(Variant::SfpBc(container)),
+            "qmqe" | "qm_qe" | "sfp_qmqe" => Some(Variant::SfpQmQe(container)),
+            "bw" | "bitwave" | "sfp_bw" => Some(Variant::SfpBw(container)),
             _ => None,
+        }
+    }
+
+    /// Adapts mantissa bitlengths through the compiled step's in-graph
+    /// learner (the QM family).
+    fn learns_mantissa_in_graph(&self) -> bool {
+        matches!(self, Variant::SfpQm(_) | Variant::SfpQmQe(_))
+    }
+
+    /// Needs per-period exponent-range statistics (the exponent-adapting
+    /// policies).
+    fn needs_exp_stats(&self) -> bool {
+        matches!(self, Variant::SfpQmQe(_) | Variant::SfpBw(_))
+    }
+
+    /// Build the adaptation policy driving this variant.
+    fn build_policy(
+        &self,
+        layers: usize,
+        epochs: usize,
+        steps_per_epoch: usize,
+    ) -> Box<dyn BitPolicy> {
+        let c = self.container();
+        // the e2e model's manifest does not declare non-negative outputs,
+        // so sign elision stays off on this path (the trace sweeps set it
+        // from the layer traces instead)
+        let nonneg = vec![false; layers];
+        match self {
+            Variant::Fp32 | Variant::Bf16 => Box::new(FixedPolicy::new(c, layers)),
+            Variant::SfpQm(_) => Box::new(QuantumMantissa::e2e(c, layers, epochs)),
+            Variant::SfpBc(_) => Box::new(BitChopPolicy::new(c, layers)),
+            Variant::SfpQmQe(_) => Box::new(Composite::new(
+                "qm+qe",
+                Box::new(QuantumMantissa::e2e(c, layers, epochs)),
+                Box::new(QuantumExponent::new(c, epochs, steps_per_epoch, nonneg)),
+            )),
+            Variant::SfpBw(_) => Box::new(crate::policy::BitWave::new(c, nonneg)),
         }
     }
 }
@@ -106,6 +162,10 @@ pub struct EpochStats {
     pub wmean_bits_a: f64,
     pub per_layer_bits_a: Vec<f64>,
     pub per_layer_bits_w: Vec<f64>,
+    /// Mean planned exponent field widths at epoch end (8 = full IEEE
+    /// field; below 8 only for the exponent-adapting variants).
+    pub mean_exp_bits_a: f64,
+    pub mean_exp_bits_w: f64,
 }
 
 /// Result of one full run.
@@ -127,6 +187,8 @@ pub struct RunResult {
     /// Stash ledger totals when the run stored real compressed tensors
     /// (`TrainConfig::stash`): actually-written/read bytes vs FP32.
     pub stash: Option<LedgerSnapshot>,
+    /// Per-epoch stash traffic (footprint-over-time; empty without stash).
+    pub stash_epochs: Vec<EpochTraffic>,
 }
 
 /// Sources and metadata of one step's stashed tensors, held across the
@@ -149,8 +211,14 @@ pub struct Trainer<'rt> {
     mbs: Vec<HostTensor>,
     n_w: Vec<f32>,
     n_a: Vec<f32>,
-    bitchop: BitChop,
-    qm: QmSchedule,
+    /// The unified adaptation engine driving this variant.
+    policy: Box<dyn BitPolicy>,
+    /// Plan currently applied to the step knobs + stash metadata.
+    plan: NetworkPlan,
+    /// Exponent-range stats of the latest period's tensors (collected on
+    /// the stash path; empty otherwise).
+    stats_a: Vec<ExpRangeStats>,
+    stats_w: Vec<ExpRangeStats>,
     lr: f32,
     step: i32,
     stash: Option<Stash>,
@@ -171,6 +239,8 @@ impl<'rt> Trainer<'rt> {
         let mmax = cfg.variant.container().mant_bits() as f32;
         let l = m.num_layers();
         let gen = DataGen::new(&m.image, m.num_classes, m.batch, cfg.seed ^ 0xDA7A);
+        let policy = cfg.variant.build_policy(l, cfg.epochs, cfg.steps_per_epoch);
+        let plan = policy.plan();
         Trainer {
             rt,
             gen,
@@ -180,8 +250,10 @@ impl<'rt> Trainer<'rt> {
             mbs,
             n_w: vec![mmax; l],
             n_a: vec![mmax; l],
-            bitchop: BitChop::new(mmax as u32),
-            qm: QmSchedule::paper_like(cfg.epochs),
+            policy,
+            plan,
+            stats_a: Vec::new(),
+            stats_w: Vec::new(),
             lr: cfg.lr0,
             step: 0,
             stash: cfg.stash.map(Stash::new),
@@ -193,32 +265,15 @@ impl<'rt> Trainer<'rt> {
         self.cfg.variant.container().mant_bits() as f32
     }
 
-    /// (lr_n, gamma, stochastic) + bitlength vectors for this step.
-    fn policy(&mut self, epoch: usize) -> (f32, f32, i32) {
+    /// Write the current plan's mantissa bitlengths into the step's `n`
+    /// vectors (fractional for the in-graph learners; the stash ceils).
+    fn apply_plan(&mut self) {
         let mmax = self.mmax();
-        match self.cfg.variant {
-            Variant::Fp32 | Variant::Bf16 => {
-                self.n_w.iter_mut().for_each(|n| *n = mmax);
-                self.n_a.iter_mut().for_each(|n| *n = mmax);
-                (0.0, 0.0, 0)
-            }
-            Variant::SfpBc(_) => {
-                // network-wide activation bitlength from the controller;
-                // weights stay at container precision (§IV-B "presently,
-                // BitChop adjusts the mantissa only for the activations").
-                let bits = self.bitchop.bits() as f32;
-                self.n_w.iter_mut().for_each(|n| *n = mmax);
-                self.n_a.iter_mut().for_each(|n| *n = bits);
-                (0.0, 0.0, 0)
-            }
-            Variant::SfpQm(_) => {
-                let (gamma, lr_n, stochastic) = self.qm.hyper(epoch);
-                if self.qm.in_roundup(epoch) {
-                    QmSchedule::round_up(&mut self.n_w, mmax);
-                    QmSchedule::round_up(&mut self.n_a, mmax);
-                }
-                (lr_n, gamma, stochastic)
-            }
+        for (n, p) in self.n_a.iter_mut().zip(&self.plan.acts) {
+            *n = p.mant.clamp(0.0, mmax);
+        }
+        for (n, p) in self.n_w.iter_mut().zip(&self.plan.weights) {
+            *n = p.mant.clamp(0.0, mmax);
         }
     }
 
@@ -229,7 +284,8 @@ impl<'rt> Trainer<'rt> {
         &mut self,
         epoch: usize,
     ) -> Result<(f64, Vec<i32>, Vec<i32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
-        let (lr_n, gamma, stochastic) = self.policy(epoch);
+        let (lr_n, gamma, stochastic) = self.policy.step_hyper(epoch);
+        self.apply_plan();
         // Stash this step's post-forward tensors (pre-update weights, this
         // step's batch and bitlengths) before the fused step runs them.
         let stashed = self.stash_put_prestep()?;
@@ -261,7 +317,7 @@ impl<'rt> Trainer<'rt> {
         self.mbs = (0..l).map(|_| it.next().unwrap()).collect();
         let n_w2 = it.next().unwrap();
         let n_a2 = it.next().unwrap();
-        if matches!(self.cfg.variant, Variant::SfpQm(_)) {
+        if self.cfg.variant.learns_mantissa_in_graph() {
             self.n_w = n_w2.as_f32()?.to_vec();
             self.n_a = n_a2.as_f32()?.to_vec();
         }
@@ -273,9 +329,19 @@ impl<'rt> Trainer<'rt> {
         let w_gecko = it.next().unwrap().as_f32()?.to_vec();
         let zfrac = it.next().unwrap().as_f32()?.to_vec();
 
-        if matches!(self.cfg.variant, Variant::SfpBc(_)) {
-            self.bitchop.observe(task_loss);
-        }
+        // Feed the period's signals to the policy engine; its plan applies
+        // to the next step's knobs and stash metadata.
+        let learned = self.cfg.variant.learns_mantissa_in_graph();
+        self.plan = self.policy.observe(&StepSignals {
+            epoch,
+            step: self.step as usize,
+            loss: task_loss,
+            lr_changed: false,
+            learned_n_a: if learned { Some(&self.n_a) } else { None },
+            learned_n_w: if learned { Some(&self.n_w) } else { None },
+            act_stats: &self.stats_a,
+            weight_stats: &self.stats_w,
+        });
         self.step += 1;
         if let Some(stashed) = stashed {
             self.stash_restore(stashed)?;
@@ -285,21 +351,62 @@ impl<'rt> Trainer<'rt> {
 
     /// First half of the stash round-trip: dump this step's post-forward
     /// activations (forward with the *pre-update* weights, this step's
-    /// batch) and queue them plus the live weights on the encode pool with
-    /// the bitlengths the policy just chose — so BitChop/QM decisions
-    /// change *real stored bytes* step by step.  Returns the sources for
-    /// post-step verification.
-    fn stash_put_prestep(&self) -> Result<Option<StashedStep>> {
-        let Some(stash) = &self.stash else {
+    /// batch) and queue them plus the live weights on the encode pool
+    /// under the per-tensor [`ContainerMeta`] the active policy's plan
+    /// induces — so QM/QE/BitWave/BitChop decisions change *real stored
+    /// bytes* (mantissa width, exponent layout, sign handling) step by
+    /// step.  Also refreshes the exponent-range statistics the
+    /// exponent-side policies observe.  Returns the sources for post-step
+    /// verification.
+    fn stash_put_prestep(&mut self) -> Result<Option<StashedStep>> {
+        // Refreshing ExpRangeStats runs two extra Gecko measurement passes
+        // per tensor (delta + fixed-bias), so amortize it: exponent ranges
+        // drift over many steps, not per batch.
+        const STATS_REFRESH_STEPS: i32 = 8;
+        let needs_stats = self.cfg.variant.needs_exp_stats()
+            && (self.stats_w.is_empty() || self.step % STATS_REFRESH_STEPS == 0);
+        if self.stash.is_none() {
+            // No materialized activations without the stash path; feed the
+            // policies weight-side stats at least (cheap, host-resident).
+            if needs_stats {
+                let mut stats = Vec::with_capacity(self.ws.len());
+                for w in &self.ws {
+                    stats.push(ExpRangeStats::from_vals(w.as_f32()?));
+                }
+                self.stats_w = stats;
+            }
             return Ok(None);
-        };
+        }
         let container = self.cfg.variant.container();
         let acts = self.dump_acts(self.step as u64)?;
-        // QM carries fractional bitlengths; the container stores ceil(n)
-        // mantissa bits (the round-up the QM endgame also applies).
-        let meta_of = |n: f32| ContainerMeta::new(container, n.max(0.0).ceil() as u32);
-        let meta_a: Vec<ContainerMeta> = self.n_a.iter().map(|&n| meta_of(n)).collect();
-        let meta_w: Vec<ContainerMeta> = self.n_w.iter().map(|&n| meta_of(n)).collect();
+        // Fractional learned bitlengths ceil into the stored container
+        // (the round-up the QM endgame also applies); exponent mode and
+        // sign elision come straight from the plan.
+        let meta_a: Vec<ContainerMeta> = self
+            .plan
+            .acts
+            .iter()
+            .map(|p| p.meta(container))
+            .collect();
+        let meta_w: Vec<ContainerMeta> = self
+            .plan
+            .weights
+            .iter()
+            .map(|p| p.meta(container))
+            .collect();
+        if needs_stats {
+            let mut sa = Vec::with_capacity(acts.len());
+            for a in &acts {
+                sa.push(ExpRangeStats::from_vals(a.as_f32()?));
+            }
+            let mut sw = Vec::with_capacity(self.ws.len());
+            for w in &self.ws {
+                sw.push(ExpRangeStats::from_vals(w.as_f32()?));
+            }
+            self.stats_a = sa;
+            self.stats_w = sw;
+        }
+        let stash = self.stash.as_ref().expect("checked above");
         for (i, a) in acts.iter().enumerate() {
             stash.put(TensorId::act(i), a.as_f32()?.to_vec(), meta_a[i]);
         }
@@ -460,7 +567,8 @@ impl<'rt> Trainer<'rt> {
         for epoch in 0..self.cfg.epochs {
             if epoch > 0 && drops.contains(&epoch) {
                 self.lr *= 0.1;
-                self.bitchop.notify_lr_change();
+                self.policy.notify_lr_change();
+                self.plan = self.policy.plan();
             }
             let mut epoch_loss = 0.0;
             let mut sum_bits_a = vec![0.0f64; l];
@@ -470,16 +578,29 @@ impl<'rt> Trainer<'rt> {
                 let (loss, n_used_w, n_used_a, a_gecko, w_gecko, zfrac) =
                     self.train_step(epoch)?;
                 epoch_loss += loss;
-                if matches!(self.cfg.variant, Variant::SfpBc(_)) {
-                    res.bc_histogram.add(self.bitchop.bits());
+                if matches!(self.cfg.variant, Variant::SfpBc(_) | Variant::SfpBw(_)) {
+                    let bits = self
+                        .plan
+                        .acts
+                        .first()
+                        .map(|p| p.store_mant_bits())
+                        .unwrap_or(0);
+                    res.bc_histogram.add(bits);
                 }
 
                 // ---- exact per-step footprint ledger ------------------
                 let container_bits = self.cfg.variant.container().total_bits() as f64;
                 let is_sfp = matches!(
                     self.cfg.variant,
-                    Variant::SfpQm(_) | Variant::SfpBc(_)
+                    Variant::SfpQm(_)
+                        | Variant::SfpBc(_)
+                        | Variant::SfpQmQe(_)
+                        | Variant::SfpBw(_)
                 );
+                // exponent-adapting variants charge the learned fixed-width
+                // exponent field (the paper's pre-Gecko QM+QE / BitWave
+                // accounting); the others charge Gecko's measured bits
+                let plan_exp = self.cfg.variant.needs_exp_stats();
                 for i in 0..l {
                     sum_bits_a[i] += n_used_a[i] as f64;
                     sum_bits_w[i] += n_used_w[i] as f64;
@@ -487,16 +608,26 @@ impl<'rt> Trainer<'rt> {
                         // acts: post-ReLU => sign elided; exponents via
                         // Gecko (the step reports exact encoded bits);
                         // mantissa = adaptive bits × elements.
+                        let exp_a = if plan_exp {
+                            self.plan.acts[i].exp_bits as f64 * a_elems[i]
+                        } else {
+                            a_gecko[i] as f64
+                        };
+                        let exp_w = if plan_exp {
+                            self.plan.weights[i].exp_bits as f64 * w_elems[i]
+                        } else {
+                            w_gecko[i] as f64
+                        };
                         (
                             ComponentBits {
                                 sign: 0.0,
-                                exponent: a_gecko[i] as f64,
+                                exponent: exp_a,
                                 mantissa: n_used_a[i] as f64 * a_elems[i],
                                 metadata: 0.0,
                             },
                             ComponentBits {
                                 sign: w_elems[i],
-                                exponent: w_gecko[i] as f64,
+                                exponent: exp_w,
                                 mantissa: n_used_w[i] as f64 * w_elems[i],
                                 metadata: 0.0,
                             },
@@ -581,7 +712,12 @@ impl<'rt> Trainer<'rt> {
                 wmean_bits_a: wmean,
                 per_layer_bits_a: per_a,
                 per_layer_bits_w: per_w,
+                mean_exp_bits_a: self.plan.mean_act_exp(),
+                mean_exp_bits_w: self.plan.mean_weight_exp(),
             });
+            if let Some(stash) = &self.stash {
+                stash.mark_epoch();
+            }
         }
 
         if let Some(csv) = step_csv.as_mut() {
@@ -591,10 +727,16 @@ impl<'rt> Trainer<'rt> {
         res.final_n_w = self.n_w.clone();
         res.final_n_a = self.n_a.clone();
         res.stash = self.stash.as_ref().map(Stash::ledger);
+        res.stash_epochs = self
+            .stash
+            .as_ref()
+            .map(Stash::epoch_traffic)
+            .unwrap_or_default();
 
         if let Some(dir) = &self.cfg.out_dir {
             let mut s = Summary::new();
             s.str("variant", &label)
+                .str("policy", self.policy.name())
                 .num("final_val_acc", res.final_val_acc)
                 .num("footprint_rel_fp32", res.footprint.relative_to(&res.footprint_fp32))
                 .num("footprint_rel_bf16", res.footprint.relative_to(&res.footprint_bf16))
@@ -607,6 +749,10 @@ impl<'rt> Trainer<'rt> {
                 .nums(
                     "mean_bits_a_per_epoch",
                     &res.epochs.iter().map(|e| e.mean_bits_a).collect::<Vec<_>>(),
+                )
+                .nums(
+                    "mean_exp_bits_a_per_epoch",
+                    &res.epochs.iter().map(|e| e.mean_exp_bits_a).collect::<Vec<_>>(),
                 );
             if let Some(ls) = &res.stash {
                 s.num("stash_written_bits", ls.written_bits)

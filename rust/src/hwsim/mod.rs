@@ -217,6 +217,28 @@ pub fn simulate_pass_with_bits(
     })
 }
 
+/// Per-layer stored bits induced by an adaptation policy's
+/// [`NetworkPlan`](crate::policy::NetworkPlan) — the coupling that lets
+/// live container plans drive the Table II machinery
+/// ([`simulate_pass_with_bits`]) and the sweep footprints directly.
+pub fn layer_bits_from_plans(
+    net: &NetworkTrace,
+    plan: &crate::policy::NetworkPlan,
+    batch: usize,
+    container: crate::formats::Container,
+) -> Vec<LayerBits> {
+    assert_eq!(plan.acts.len(), net.layers.len());
+    assert_eq!(plan.weights.len(), net.layers.len());
+    net.layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| LayerBits {
+            weight: l.weight_elems as f64 * plan.weights[i].bits_per_value(container),
+            act: (l.act_elems * batch) as f64 * plan.acts[i].bits_per_value(container),
+        })
+        .collect()
+}
+
 /// Speedup and energy-efficiency gain of `variant` over `baseline`
 /// (Table II cells).
 pub fn gains(baseline: &PassStats, variant: &PassStats) -> (f64, f64) {
@@ -295,6 +317,19 @@ mod tests {
         // §VI-C: "energy consumption of DRAM accesses greatly outclasses
         // that of computation" — the calibrated split puts DRAM > 90%.
         assert!(dram_j / s.energy_j > 0.9, "dram share {}", dram_j / s.energy_j);
+    }
+
+    #[test]
+    fn layer_bits_from_plans_matches_hand_count() {
+        use crate::formats::Container;
+        use crate::policy::NetworkPlan;
+        let net = resnet18();
+        let plan = NetworkPlan::full(Container::Fp32, net.layers.len());
+        let bits = layer_bits_from_plans(&net, &plan, 4, Container::Fp32);
+        for (b, l) in bits.iter().zip(&net.layers) {
+            assert!((b.weight - 32.0 * l.weight_elems as f64).abs() < 1e-6);
+            assert!((b.act - 32.0 * (l.act_elems * 4) as f64).abs() < 1e-6);
+        }
     }
 
     #[test]

@@ -9,21 +9,29 @@
 //! * **L2** (`python/compile/model.py`): JAX fwd/bwd of a residual CNN with
 //!   fake-quantized stash tensors, exported as HLO text.
 //! * **L3** (this crate): everything on the request path — the PJRT runtime
-//!   ([`runtime`]), the training coordinator with the BitChop / Quantum
-//!   Mantissa adaptation policies ([`coordinator`]), the concurrent
-//!   compressed-tensor stash that holds post-forward tensors until the
-//!   backward pass ([`stash`]), and the hardware substrates: bit-exact
-//!   Gecko and SFP codecs ([`gecko`], [`sfp`]), compression baselines
-//!   ([`baselines`]), the analytical accelerator + DRAM model ([`hwsim`]),
-//!   ImageNet-scale layer traces ([`traces`]), and streaming statistics
-//!   ([`stats`]).
+//!   ([`runtime`]), the training coordinator ([`coordinator`]), the unified
+//!   adaptation-policy engine ([`policy`]), the concurrent compressed-tensor
+//!   stash that holds post-forward tensors until the backward pass
+//!   ([`stash`]), and the hardware substrates: bit-exact Gecko and SFP
+//!   codecs ([`gecko`], [`sfp`]), compression baselines ([`baselines`]),
+//!   the analytical accelerator + DRAM model ([`hwsim`]), ImageNet-scale
+//!   layer traces ([`traces`]), and streaming statistics ([`stats`]).
+//!
+//! The policy engine ([`policy`]) is where the paper's adaptation methods
+//! live: Quantum Mantissa, Quantum Exponent, BitWave, and BitChop all
+//! implement one `BitPolicy` trait (`observe(signals) → ContainerPlan` per
+//! tensor, plus bit-exact checkpoint/restore).  The Trainer applies each
+//! period's plans to the stash's per-tensor container metadata live, the
+//! hwsim consumes the plans' bits-per-pass, and `repro policy` sweeps every
+//! policy over the trace models to reproduce the paper's QM+QE / BitWave /
+//! +Gecko footprint ordering.
 //!
 //! The stash layer ([`stash`]) is the memory path the paper's claims hinge
 //! on: tensors are encoded by a bounded worker pool into a chunk-recycling
 //! arena under per-tensor container metadata, and its ledger reports the
 //! *actually stored* bytes — cross-checked against the analytic
-//! [`report::footprint`] models (`repro stash`) and fed to [`hwsim`]'s
-//! DRAM model.
+//! [`report::footprint`] models (`repro stash`), split per epoch for the
+//! footprint-over-time reports, and fed to [`hwsim`]'s DRAM model.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the model
 //! once; the `repro` binary is self-contained afterwards.  Builds without
@@ -35,6 +43,7 @@ pub mod coordinator;
 pub mod formats;
 pub mod gecko;
 pub mod hwsim;
+pub mod policy;
 pub mod report;
 pub mod runtime;
 pub mod sfp;

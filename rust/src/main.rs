@@ -9,13 +9,20 @@
 //!   stash    stash-subsystem sweep over a trace model: store/restore real
 //!            compressed tensors, cross-check stored bytes against the
 //!            analytic footprint model, measure pool throughput + hwsim
+//!   policy   adaptation-policy sweep over the trace models: run QM+QE,
+//!            BitWave, and QM-only through the unified BitPolicy engine,
+//!            emit per-epoch bitlength trajectories (JSON) and end-of-run
+//!            footprints with/without Gecko on the exponent streams
 //!   all      every trace-model table + figure in one go
 
 use anyhow::{anyhow, Result};
 use sfp::coordinator::{TrainConfig, Trainer, Variant};
 use sfp::formats::Container;
 use sfp::hwsim::{gains, simulate_pass_with_bits, AccelConfig, ComputeType, LayerBits};
-use sfp::report::footprint::SAMPLE;
+use sfp::policy::sweep::{self, PolicyKind, SweepConfig};
+use sfp::report::footprint::{
+    ACT_EXP_SEED, ACT_VAL_SEED, SAMPLE, STREAM_SEED, WEIGHT_EXP_SEED, WEIGHT_VAL_SEED,
+};
 use sfp::report::{figures, tables, FootprintModel, MantissaPolicy};
 use sfp::runtime::Runtime;
 use sfp::sfp::SfpCodec;
@@ -47,6 +54,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "fig" => cmd_fig(args),
         "compress" => cmd_compress(args),
         "stash" => cmd_stash(args),
+        "policy" => cmd_policy(args),
         "all" => cmd_all(args),
         _ => {
             print_help();
@@ -61,15 +69,18 @@ fn print_help() {
          \n\
          USAGE: repro <command> [--options]\n\
          \n\
-         train     --variant fp32|bf16|qm|bc [--container bf16|fp32]\n\
+         train     --variant fp32|bf16|qm|bc|qmqe|bw [--container bf16|fp32]\n\
          \u{20}         [--epochs N] [--steps N] [--out DIR] [--artifacts DIR]\n\
          \u{20}         [--stash gecko|sfp|raw] (store real compressed tensors per step)\n\
          table1    print Table I footprint columns (trace models)\n\
-         table2    print Table II perf/energy (hwsim) [--batch N]\n\
+         table2    print Table II perf/energy (hwsim) [--batch N] [--source model|stash]\n\
          fig       --id 2|3|4|6|7|8|9|10|12|13 [--out DIR] [--source trace|e2e]\n\
          compress  codec demo [--count N] [--mantissa N]\n\
          stash     --model resnet18|mobilenet [--policy qm|bc|full] [--codec gecko|sfp|raw]\n\
          \u{20}         [--batch N] [--threads N] [--queue N] [--chunk-values N]\n\
+         policy    --model resnet18|mobilenet|all [--policy qmqe|bitwave|qm|all]\n\
+         \u{20}         [--epochs N] [--steps N] [--batch N] [--sample N] [--out DIR]\n\
+         \u{20}         [--verify-restore] (check mid-run checkpoint/restore continuity)\n\
          all       regenerate all trace-model tables + figures [--out DIR]"
     );
 }
@@ -141,6 +152,11 @@ fn cmd_train(args: &Args) -> Result<()> {
             ls.peak_resident_bits / 8e6,
         );
     }
+    if !res.stash_epochs.is_empty() {
+        let p = out_dir(args).join(format!("{}_footprint_over_time.csv", res.label));
+        figures::footprint_over_time(&p, &res)?;
+        println!("footprint-over-time -> {}", p.display());
+    }
     Ok(())
 }
 
@@ -165,8 +181,15 @@ fn cmd_table1(_args: &Args) -> Result<()> {
 
 fn cmd_table2(args: &Args) -> Result<()> {
     let batch = args.get_usize("batch", 256);
-    let rows = tables::table2(&AccelConfig::default(), batch);
-    println!("Table II — gains vs FP32 baseline (batch {batch}; paper values in brackets)");
+    let source = args.get_or("source", "model");
+    let rows = match source.as_str() {
+        "model" => tables::table2(&AccelConfig::default(), batch),
+        "stash" => tables::table2_stash(&AccelConfig::default(), batch)?,
+        other => return Err(anyhow!("unknown --source {other} (model|stash)")),
+    };
+    println!(
+        "Table II — gains vs FP32 baseline (batch {batch}, SFP bits from {source}; paper values in brackets)"
+    );
     println!(
         "{:<22} {:>22} {:>22} {:>22}",
         "Network", "BF16 speed/energy", "SFP_QM speed/energy", "SFP_BC speed/energy"
@@ -385,17 +408,17 @@ fn cmd_stash(args: &Args) -> Result<()> {
     // for the component-stream codec.
     let mut streams: Vec<(TensorId, Vec<f32>, ContainerMeta, f64)> = Vec::new();
     for (i, l) in net.layers.iter().enumerate() {
-        let seed = 0x5EED ^ i as u64;
+        let seed = STREAM_SEED ^ i as u64;
         let (n_a, n_w) = sched[i];
-        let a_exps = l.act_model.sample_exponents(SAMPLE, seed ^ 0xAC7);
-        let a_vals = values_with_exponents(&a_exps, seed ^ 0x7A1, l.nonneg_act);
+        let a_exps = l.act_model.sample_exponents(SAMPLE, seed ^ ACT_EXP_SEED);
+        let a_vals = values_with_exponents(&a_exps, seed ^ ACT_VAL_SEED, l.nonneg_act);
         let a_meta = ContainerMeta::new(container, n_a).with_sign_elision(l.nonneg_act);
         let a_scale = (l.act_elems * batch) as f64 / SAMPLE as f64;
         streams.push((TensorId::act(i), a_vals, a_meta, a_scale));
 
         let w_count = SAMPLE.min(l.weight_elems.max(64));
-        let w_exps = l.weight_model.sample_exponents(w_count, seed ^ 0x3E1);
-        let w_vals = values_with_exponents(&w_exps, seed ^ 0x3F2, false);
+        let w_exps = l.weight_model.sample_exponents(w_count, seed ^ WEIGHT_EXP_SEED);
+        let w_vals = values_with_exponents(&w_exps, seed ^ WEIGHT_VAL_SEED, false);
         let w_meta = ContainerMeta::new(container, n_w);
         let w_scale = l.weight_elems as f64 / w_count as f64;
         streams.push((TensorId::weight(i), w_vals, w_meta, w_scale));
@@ -435,7 +458,7 @@ fn cmd_stash(args: &Args) -> Result<()> {
     for (i, l) in net.layers.iter().enumerate() {
         // centered depth fraction => PerLayer policy index is exactly i
         let frac = (i as f64 + 0.5) / n_layers as f64;
-        let lf = analytic.layer(l, frac, batch, 0x5EED ^ i as u64);
+        let lf = analytic.layer(l, frac, batch, STREAM_SEED ^ i as u64);
         let a = stash
             .stored_bits(TensorId::act(i))
             .ok_or_else(|| anyhow!("activation {i} not resident"))?;
@@ -538,6 +561,101 @@ fn cmd_stash(args: &Args) -> Result<()> {
         "hwsim on measured stash bytes: {speed:.2}x speedup, {energy:.2}x energy vs FP32 (DRAM traffic {:.1}%)",
         100.0 * ours.dram_bits / base.dram_bits,
     );
+    Ok(())
+}
+
+/// Adaptation-policy sweep over the trace models through the unified
+/// `BitPolicy` engine: per-epoch bitlength trajectories as JSON, end-of-run
+/// footprints with and without Gecko on the exponent streams, and the
+/// paper's QM+QE / BitWave / +Gecko ordering printed with reference values.
+fn cmd_policy(args: &Args) -> Result<()> {
+    let nets: Vec<NetworkTrace> = match args.get_or("model", "all").as_str() {
+        "resnet18" => vec![resnet18()],
+        "mobilenet" | "mobilenet_v3_small" | "mnv3" => vec![mobilenet_v3_small()],
+        "all" => vec![resnet18(), mobilenet_v3_small()],
+        other => return Err(anyhow!("unknown --model {other} (resnet18|mobilenet|all)")),
+    };
+    let kinds: Vec<PolicyKind> = match args.get_or("policy", "all").as_str() {
+        "all" => PolicyKind::all().to_vec(),
+        s => vec![PolicyKind::parse(s)
+            .ok_or_else(|| anyhow!("unknown --policy {s} (qmqe|bitwave|qm|all)"))?],
+    };
+    let cfg = SweepConfig {
+        epochs: args.get_usize("epochs", 9),
+        steps_per_epoch: args.get_usize("steps", 30),
+        batch: args.get_usize("batch", 256),
+        container: container_of(args),
+        sample: args.get_usize("sample", SAMPLE),
+        seed: args.get_usize("seed", STREAM_SEED as usize) as u64,
+    };
+    let dir = out_dir(args).join("policy");
+    std::fs::create_dir_all(&dir)?;
+
+    println!(
+        "Policy sweep — {} epochs x {} steps, batch {}, container {}, {} values/tensor",
+        cfg.epochs, cfg.steps_per_epoch, cfg.batch, cfg.container, cfg.sample
+    );
+    println!(
+        "(paper averages in brackets: QM+QE 4.74x -> +Gecko 5.64x; BitWave 3.19x -> +Gecko 4.56x)"
+    );
+    println!(
+        "\n{:<20} {:<9} {:>11} {:>12} {:>11} {:>10}",
+        "network", "policy", "no-gecko", "gecko", "mant_a", "exp_a"
+    );
+    let mut by_kind: Vec<(PolicyKind, Vec<f64>, Vec<f64>)> =
+        kinds.iter().map(|&k| (k, Vec::new(), Vec::new())).collect();
+    for net in &nets {
+        for (k, plans, geckos) in by_kind.iter_mut() {
+            let res = sweep::run_policy(net, *k, &cfg)?;
+            let last = res.epochs.last().expect("at least one epoch");
+            println!(
+                "{:<20} {:<9} {:>10.2}x {:>11.2}x {:>11.2} {:>10.2}",
+                res.network,
+                res.policy,
+                res.plan_reduction(),
+                res.gecko_reduction(),
+                last.mean_mant_a,
+                last.mean_exp_a,
+            );
+            let path = dir.join(format!(
+                "{}_{}.json",
+                net.name.to_lowercase().replace('-', "_"),
+                res.policy.replace('+', "_")
+            ));
+            res.write_json(&path)?;
+            plans.push(res.plan_reduction());
+            geckos.push(res.gecko_reduction());
+        }
+    }
+    println!();
+    for (k, plans, geckos) in &by_kind {
+        let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        println!(
+            "{:<9} average: {:.2}x footprint reduction, {:.2}x with Gecko exponents",
+            k.label(),
+            avg(plans),
+            avg(geckos),
+        );
+    }
+    println!("trajectories -> {}", dir.display());
+
+    if args.has_flag("verify-restore") {
+        let quick = SweepConfig {
+            sample: 4 * 1024,
+            ..cfg.clone()
+        };
+        for net in &nets {
+            for &k in &kinds {
+                let split = quick.steps_per_epoch * (quick.epochs / 3).max(1) + 3;
+                sweep::verify_restore_continuation(net, k, &quick, split, 40)?;
+                println!(
+                    "restore-continuity OK: {} / {} (split at step {split})",
+                    net.name,
+                    k.label()
+                );
+            }
+        }
+    }
     Ok(())
 }
 

@@ -1,0 +1,387 @@
+//! BitWave behind the [`BitPolicy`] trait: the loss-EMA controller
+//! (§IV-B's BitChop, Eq. 8/9 semantics untouched) extended to drive
+//! exponent *and* mantissa bitlengths network-wide — the paper's 3.19×
+//! hardware-friendly alternative to the learned per-layer pair.
+//!
+//! * **Mantissa** — exactly the embedded [`BitChop`] decision stream; the
+//!   network-wide bitlength applies to activations and weights alike.
+//! * **Exponent** — a single network-wide width rides the same decision
+//!   stream at a slower cadence: while the loss is not degrading it shaves
+//!   one bit per [`EXP_SHRINK_RUN`] periods, any "worsening" period
+//!   restores one, and the streaming range statistics impose a hard floor
+//!   (a width that would saturate any tensor's observed exponent range is
+//!   never emitted — saturating the stash corrupts the values the backward
+//!   pass restores).  Around LR changes the whole container returns to
+//!   full precision, mirroring BitChop's cooldown.
+//!
+//! [`BitChopPolicy`] wraps a bare BitChop as a mantissa-only policy (acts
+//! network-wide, weights at container precision) — the historical SFP_BC
+//! variant expressed through the engine.
+
+use super::{
+    modes_from_json, modes_to_json, state_u32, BitPolicy, ContainerPlan, NetworkPlan, StepSignals,
+};
+use crate::coordinator::BitChop;
+use crate::formats::Container;
+use crate::gecko::Mode;
+use crate::util::json::Json;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Non-degrading periods required to shave one exponent bit (the exponent
+/// moves slower than the mantissa — its quantization failure mode is
+/// saturation, not noise, so it descends steadily toward the range floor
+/// and only a worsening loss backs it off).
+const EXP_SHRINK_RUN: u32 = 4;
+
+/// Overflow tolerance for the network-wide exponent floor.
+const OVERFLOW_TOL: f64 = 1e-5;
+
+pub struct BitWave {
+    chop: BitChop,
+    nonneg_act: Vec<bool>,
+    /// Network-wide exponent width (outside cooldowns).
+    exp_bits: u32,
+    /// Hard floor: the widest requirement any tensor has shown.
+    exp_floor: u32,
+    /// Consecutive improving periods since the last exponent move.
+    improve_run: u32,
+    /// Per-tensor lossless Gecko layouts (storage only; the width above is
+    /// the network-wide container decision).
+    mode_a: Vec<Mode>,
+    mode_w: Vec<Mode>,
+}
+
+impl BitWave {
+    pub fn new(container: Container, nonneg_act: Vec<bool>) -> Self {
+        let layers = nonneg_act.len();
+        Self {
+            chop: BitChop::new(container.mant_bits()),
+            nonneg_act,
+            exp_bits: 8,
+            exp_floor: 1,
+            improve_run: 0,
+            mode_a: vec![Mode::Delta; layers],
+            mode_w: vec![Mode::Delta; layers],
+        }
+    }
+
+    fn effective(&self) -> (f32, u32) {
+        // cooldown: full container precision on both axes (§IV-B)
+        if self.chop.in_cooldown() {
+            (self.chop.n_max() as f32, 8)
+        } else {
+            (self.chop.bits() as f32, self.exp_bits)
+        }
+    }
+
+    fn make_plan(&self) -> NetworkPlan {
+        let (mant, exp_bits) = self.effective();
+        let acts = self
+            .mode_a
+            .iter()
+            .zip(&self.nonneg_act)
+            .map(|(&mode, &nonneg)| ContainerPlan {
+                mant,
+                exp_bits,
+                exp_mode: mode,
+                elide_sign: nonneg,
+            })
+            .collect();
+        let weights = self
+            .mode_w
+            .iter()
+            .map(|&mode| ContainerPlan {
+                mant,
+                exp_bits,
+                exp_mode: mode,
+                elide_sign: false,
+            })
+            .collect();
+        NetworkPlan { acts, weights }
+    }
+}
+
+impl BitPolicy for BitWave {
+    fn name(&self) -> &'static str {
+        "bitwave"
+    }
+
+    fn observe(&mut self, sig: &StepSignals) -> NetworkPlan {
+        if sig.lr_changed {
+            self.notify_lr_change();
+        }
+        // ---- exponent floor + storage modes from the range statistics
+        let mut floor = 1u32;
+        for (i, stats) in sig.act_stats.iter().enumerate() {
+            if stats.count > 0 {
+                floor = floor.max(stats.needed_exp_bits(OVERFLOW_TOL));
+                if let Some(m) = self.mode_a.get_mut(i) {
+                    *m = stats.gecko_best().1;
+                }
+            }
+        }
+        for (i, stats) in sig.weight_stats.iter().enumerate() {
+            if stats.count > 0 {
+                floor = floor.max(stats.needed_exp_bits(OVERFLOW_TOL));
+                if let Some(m) = self.mode_w.get_mut(i) {
+                    *m = stats.gecko_best().1;
+                }
+            }
+        }
+        // Narrowing needs range evidence for the *activations* (the widest
+        // and footprint-dominating tensors); weight-only stats — the
+        // no-stash e2e path — must not shrink the network-wide width.
+        if sig.act_stats.iter().any(|s| s.count > 0) {
+            self.exp_floor = floor;
+        } else {
+            self.exp_floor = 8;
+        }
+        self.exp_bits = self.exp_bits.max(self.exp_floor);
+
+        // ---- mantissa: the unmodified Eq. 8/9 controller
+        self.chop.observe(sig.loss);
+
+        // ---- exponent rides the same decision at a slower cadence:
+        // degrading loss backs off a bit, anything else (improving or
+        // hold) counts toward the next shave
+        if self.chop.last_decision() == -1 {
+            self.exp_bits = (self.exp_bits + 1).min(8);
+            self.improve_run = 0;
+        } else {
+            self.improve_run += 1;
+            if self.improve_run >= EXP_SHRINK_RUN && self.exp_bits > self.exp_floor {
+                self.exp_bits -= 1;
+                self.improve_run = 0;
+            }
+        }
+        self.make_plan()
+    }
+
+    fn plan(&self) -> NetworkPlan {
+        self.make_plan()
+    }
+
+    fn notify_lr_change(&mut self) {
+        self.chop.notify_lr_change();
+        self.improve_run = 0;
+    }
+
+    fn checkpoint(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("chop".to_string(), self.chop.state_json());
+        o.insert("exp_bits".to_string(), Json::Num(self.exp_bits as f64));
+        o.insert("exp_floor".to_string(), Json::Num(self.exp_floor as f64));
+        o.insert("improve_run".to_string(), Json::Num(self.improve_run as f64));
+        o.insert("mode_a".to_string(), modes_to_json(&self.mode_a));
+        o.insert("mode_w".to_string(), modes_to_json(&self.mode_w));
+        Json::Obj(o)
+    }
+
+    fn restore(&mut self, state: &Json) -> Result<()> {
+        self.chop = BitChop::from_state_json(
+            state
+                .get("chop")
+                .ok_or_else(|| anyhow::anyhow!("bitwave state: missing chop"))?,
+        )?;
+        self.exp_bits = state_u32(state, "exp_bits")?;
+        self.exp_floor = state_u32(state, "exp_floor")?;
+        self.improve_run = state_u32(state, "improve_run")?;
+        self.mode_a = modes_from_json(state, "mode_a")?;
+        self.mode_w = modes_from_json(state, "mode_w")?;
+        Ok(())
+    }
+}
+
+/// The historical SFP_BC wiring as a [`BitPolicy`]: BitChop drives the
+/// network-wide *activation* mantissa, weights stay at container precision,
+/// exponents stay full ("presently, BitChop adjusts the mantissa only for
+/// the activations", §IV-B).
+pub struct BitChopPolicy {
+    chop: BitChop,
+    container: Container,
+    layers: usize,
+}
+
+impl BitChopPolicy {
+    pub fn new(container: Container, layers: usize) -> Self {
+        Self {
+            chop: BitChop::new(container.mant_bits()),
+            container,
+            layers,
+        }
+    }
+
+    fn make_plan(&self) -> NetworkPlan {
+        let mut plan = NetworkPlan::full(self.container, self.layers);
+        let bits = self.chop.bits() as f32;
+        for p in plan.acts.iter_mut() {
+            p.mant = bits;
+        }
+        plan
+    }
+}
+
+impl BitPolicy for BitChopPolicy {
+    fn name(&self) -> &'static str {
+        "bc"
+    }
+
+    fn observe(&mut self, sig: &StepSignals) -> NetworkPlan {
+        if sig.lr_changed {
+            self.chop.notify_lr_change();
+        }
+        self.chop.observe(sig.loss);
+        self.make_plan()
+    }
+
+    fn plan(&self) -> NetworkPlan {
+        self.make_plan()
+    }
+
+    fn notify_lr_change(&mut self) {
+        self.chop.notify_lr_change();
+    }
+
+    fn checkpoint(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("chop".to_string(), self.chop.state_json());
+        Json::Obj(o)
+    }
+
+    fn restore(&mut self, state: &Json) -> Result<()> {
+        self.chop = BitChop::from_state_json(
+            state
+                .get("chop")
+                .ok_or_else(|| anyhow::anyhow!("bc state: missing chop"))?,
+        )?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::ExpRangeStats;
+    use crate::traces::ValueModel;
+
+    fn stats(seed: u64) -> (Vec<ExpRangeStats>, Vec<ExpRangeStats>) {
+        let a = vec![
+            ExpRangeStats::from_exponents(&ValueModel::relu_act().sample_exponents(8192, seed)),
+        ];
+        let w = vec![
+            ExpRangeStats::from_exponents(&ValueModel::weights().sample_exponents(8192, seed ^ 1)),
+        ];
+        (a, w)
+    }
+
+    fn sig<'a>(
+        epoch: usize,
+        step: usize,
+        loss: f64,
+        a: &'a [ExpRangeStats],
+        w: &'a [ExpRangeStats],
+    ) -> StepSignals<'a> {
+        StepSignals {
+            epoch,
+            step,
+            loss,
+            lr_changed: false,
+            learned_n_a: None,
+            learned_n_w: None,
+            act_stats: a,
+            weight_stats: w,
+        }
+    }
+
+    #[test]
+    fn improving_loss_shrinks_both_axes() {
+        let (a, w) = stats(3);
+        let mut bw = BitWave::new(Container::Bf16, vec![true]);
+        for i in 0..60 {
+            bw.observe(&sig(0, i, 5.0 - 0.08 * i as f64, &a, &w));
+        }
+        let plan = bw.plan();
+        assert!(plan.acts[0].mant < 7.0, "mantissa chopped: {}", plan.acts[0].mant);
+        assert!(plan.acts[0].exp_bits < 8, "exponent chopped: {}", plan.acts[0].exp_bits);
+        // the floor from the range stats is never violated
+        let floor = a[0]
+            .needed_exp_bits(1e-5)
+            .max(w[0].needed_exp_bits(1e-5));
+        assert!(plan.acts[0].exp_bits >= floor);
+        // weights ride the same network-wide container
+        assert_eq!(plan.weights[0].exp_bits, plan.acts[0].exp_bits);
+        assert_eq!(plan.weights[0].mant, plan.acts[0].mant);
+    }
+
+    #[test]
+    fn no_stats_keeps_exponent_full() {
+        let mut bw = BitWave::new(Container::Bf16, vec![false]);
+        for i in 0..60 {
+            bw.observe(&sig(0, i, 5.0 - 0.08 * i as f64, &[], &[]));
+        }
+        assert_eq!(bw.plan().acts[0].exp_bits, 8);
+        assert!(bw.plan().acts[0].mant < 7.0);
+    }
+
+    #[test]
+    fn lr_change_restores_full_container() {
+        let (a, w) = stats(7);
+        let mut bw = BitWave::new(Container::Bf16, vec![true]);
+        for i in 0..60 {
+            bw.observe(&sig(0, i, 5.0 - 0.08 * i as f64, &a, &w));
+        }
+        assert!(bw.plan().acts[0].exp_bits < 8);
+        bw.notify_lr_change();
+        let plan = bw.plan();
+        assert_eq!(plan.acts[0].mant, 7.0);
+        assert_eq!(plan.acts[0].exp_bits, 8);
+    }
+
+    #[test]
+    fn worsening_loss_restores_exponent_bits() {
+        let (a, w) = stats(13);
+        let mut bw = BitWave::new(Container::Bf16, vec![true]);
+        for i in 0..60 {
+            bw.observe(&sig(0, i, 5.0 - 0.08 * i as f64, &a, &w));
+        }
+        let low = bw.plan().acts[0].exp_bits;
+        for i in 0..40 {
+            bw.observe(&sig(1, 60 + i, 1.0 + 0.2 * i as f64, &a, &w));
+        }
+        assert!(bw.plan().acts[0].exp_bits > low);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_continues_identically() {
+        let (a, w) = stats(17);
+        let mut bw = BitWave::new(Container::Bf16, vec![true]);
+        let mut rng = crate::traces::SplitMix64::new(23);
+        for i in 0..50 {
+            bw.observe(&sig(0, i, 4.0 - 0.05 * i as f64 + 0.01 * rng.next_gaussian(), &a, &w));
+        }
+        let ck = bw.checkpoint();
+        let mut bw2 = BitWave::new(Container::Bf16, vec![true]);
+        bw2.restore(&ck).unwrap();
+        assert_eq!(ck, bw2.checkpoint());
+        for i in 0..40 {
+            let loss = 2.0 + 0.03 * (i as f64) * if i % 2 == 0 { 1.0 } else { -1.0 };
+            let p1 = bw.observe(&sig(1, 50 + i as usize, loss, &a, &w));
+            let p2 = bw2.observe(&sig(1, 50 + i as usize, loss, &a, &w));
+            assert_eq!(p1, p2, "step {i}");
+        }
+    }
+
+    #[test]
+    fn bitchop_policy_preserves_legacy_shape() {
+        let mut p = BitChopPolicy::new(Container::Bf16, 3);
+        for i in 0..50 {
+            p.observe(&sig(0, i, 5.0 - 0.08 * i as f64, &[], &[]));
+        }
+        let plan = p.plan();
+        assert!(plan.acts[0].mant < 7.0);
+        assert_eq!(plan.weights[0].mant, 7.0, "weights stay at container");
+        assert_eq!(plan.acts[0].exp_bits, 8, "exponent untouched");
+        assert!(plan.acts.iter().all(|c| c.mant == plan.acts[0].mant));
+    }
+}

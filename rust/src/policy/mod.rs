@@ -1,0 +1,454 @@
+//! Unified adaptation-policy engine: every method that decides *how many
+//! bits each tensor gets* — Quantum Mantissa, Quantum Exponent, BitWave,
+//! BitChop, fixed baselines — implements one [`BitPolicy`] trait and emits
+//! per-tensor [`ContainerPlan`]s that the rest of the system consumes:
+//!
+//! ```text
+//!  StepSignals ──▶ BitPolicy::observe ──▶ NetworkPlan (ContainerPlan per tensor)
+//!  (loss, learned                           │
+//!   bitlengths,                             ├─▶ Trainer: n_w/n_a step knobs
+//!   exponent-range                          ├─▶ stash: ContainerMeta per tensor
+//!   stats)                                  ├─▶ hwsim: bits per layer pass
+//!                                           └─▶ report: bitlength trajectories
+//! ```
+//!
+//! A [`ContainerPlan`] carries the three axes the paper adapts (§IV):
+//! fractional mantissa bitlength (ceiled for storage), exponent field
+//! width + lossless Gecko storage mode, and sign elision.  Policies
+//! checkpoint/restore their full adaptation state as JSON ([`BitPolicy::
+//! checkpoint`]) so a mid-run restore continues with identical plans.
+//!
+//! Implementations:
+//! * [`qm::QuantumMantissa`] — §IV-A learned per-layer mantissa bitlengths
+//!   (adopts the compiled step's in-graph learner in e2e runs; a surrogate
+//!   descent stands in for it on the trace models).
+//! * [`qe::QuantumExponent`] — §IV learned per-layer exponent bitlengths,
+//!   driven by streaming max-exponent/overflow statistics
+//!   ([`crate::stats::ExpRangeStats`]), sharing the γ-schedule machinery
+//!   ([`schedule::GammaSchedule`]).
+//! * [`bitwave::BitWave`] — the loss-EMA controller extended to drive
+//!   exponent *and* mantissa network-wide (Eq. 8/9 semantics preserved via
+//!   the embedded [`crate::coordinator::BitChop`]).
+//! * [`Composite`] — mantissa bits from one policy, exponent layout from
+//!   another: QM + QE is the paper's headline pair.
+//! * [`FixedPolicy`] — static full-container baselines (FP32/BF16).
+//!
+//! The [`sweep`] module runs each policy over the ImageNet-scale trace
+//! models (`repro policy`), emitting per-epoch bitlength trajectories and
+//! end-of-run footprints with and without Gecko on the exponent streams.
+
+pub mod bitwave;
+pub mod qe;
+pub mod qm;
+pub mod schedule;
+pub mod sweep;
+
+pub use bitwave::{BitChopPolicy, BitWave};
+pub use qe::QuantumExponent;
+pub use qm::QuantumMantissa;
+pub use schedule::GammaSchedule;
+pub use sweep::{PolicyKind, PolicyRunResult, SweepConfig};
+
+use crate::formats::Container;
+use crate::gecko::Mode;
+use crate::stash::ContainerMeta;
+use crate::stats::ExpRangeStats;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// One tensor's container decision for the upcoming period.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ContainerPlan {
+    /// Fractional mantissa bitlength (drives the stochastic train-step
+    /// quantizer); storage keeps `ceil(mant)` bits.
+    pub mant: f32,
+    /// Learned exponent container width in bits (8 = the full IEEE field).
+    pub exp_bits: u32,
+    /// Lossless Gecko layout the stash stores the exponent stream in.
+    pub exp_mode: Mode,
+    /// Elide value signs (valid only for known-non-negative tensors, §IV-D).
+    pub elide_sign: bool,
+}
+
+impl ContainerPlan {
+    /// Full-precision plan for `container` (the baseline / initial state).
+    pub fn full(container: Container) -> Self {
+        Self {
+            mant: container.mant_bits() as f32,
+            exp_bits: 8,
+            exp_mode: Mode::Delta,
+            elide_sign: false,
+        }
+    }
+
+    /// Integer mantissa bits the container actually stores.
+    pub fn store_mant_bits(&self) -> u32 {
+        self.mant.max(0.0).ceil() as u32
+    }
+
+    /// Plan-accounted stored bits per value: sign + fixed-width learned
+    /// exponent field + ceiled mantissa.  This is the *pre-Gecko* number
+    /// (the paper's QM+QE / BitWave footprints); Gecko on the exponent
+    /// stream only ever shrinks it further.
+    pub fn bits_per_value(&self, container: Container) -> f64 {
+        let sign = if self.elide_sign { 0.0 } else { 1.0 };
+        sign + self.exp_bits as f64 + self.store_mant_bits().min(container.mant_bits()) as f64
+    }
+
+    /// The stash container metadata this plan induces.
+    pub fn meta(&self, container: Container) -> ContainerMeta {
+        ContainerMeta::new(container, self.store_mant_bits())
+            .with_exp_mode(self.exp_mode)
+            .with_sign_elision(self.elide_sign)
+    }
+}
+
+/// The full per-tensor plan set for one period.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkPlan {
+    pub acts: Vec<ContainerPlan>,
+    pub weights: Vec<ContainerPlan>,
+}
+
+impl NetworkPlan {
+    pub fn full(container: Container, layers: usize) -> Self {
+        Self {
+            acts: vec![ContainerPlan::full(container); layers],
+            weights: vec![ContainerPlan::full(container); layers],
+        }
+    }
+
+    fn mean<F: Fn(&ContainerPlan) -> f64>(plans: &[ContainerPlan], f: F) -> f64 {
+        if plans.is_empty() {
+            return 0.0;
+        }
+        plans.iter().map(f).sum::<f64>() / plans.len() as f64
+    }
+
+    pub fn mean_act_mant(&self) -> f64 {
+        Self::mean(&self.acts, |p| p.mant as f64)
+    }
+
+    pub fn mean_weight_mant(&self) -> f64 {
+        Self::mean(&self.weights, |p| p.mant as f64)
+    }
+
+    pub fn mean_act_exp(&self) -> f64 {
+        Self::mean(&self.acts, |p| p.exp_bits as f64)
+    }
+
+    pub fn mean_weight_exp(&self) -> f64 {
+        Self::mean(&self.weights, |p| p.exp_bits as f64)
+    }
+}
+
+/// Per-period training signals handed to [`BitPolicy::observe`].
+pub struct StepSignals<'a> {
+    pub epoch: usize,
+    pub step: usize,
+    /// Task loss of the period that just ran.
+    pub loss: f64,
+    /// The learning rate changed right before this period.
+    pub lr_changed: bool,
+    /// Learned per-layer fractional mantissa bitlengths from the compiled
+    /// step's in-graph learner (QM); `None` when unavailable.
+    pub learned_n_a: Option<&'a [f32]>,
+    pub learned_n_w: Option<&'a [f32]>,
+    /// Per-layer exponent-range statistics of this period's tensors
+    /// (empty slices when the run does not materialize tensors).
+    pub act_stats: &'a [ExpRangeStats],
+    pub weight_stats: &'a [ExpRangeStats],
+}
+
+/// The adaptation-policy contract: observe one period's signals, emit the
+/// container plan for the next period, and checkpoint/restore bit-exactly.
+pub trait BitPolicy: Send {
+    /// Short identifier for CLI rows / JSON summaries.
+    fn name(&self) -> &'static str;
+
+    /// Observe one period; returns the plan to apply to the next period's
+    /// tensors.
+    fn observe(&mut self, sig: &StepSignals) -> NetworkPlan;
+
+    /// The current plan without new observations.
+    fn plan(&self) -> NetworkPlan;
+
+    /// (lr_n, γ, stochastic) knobs for the compiled train step (only the
+    /// gradient-side learners use them).
+    fn step_hyper(&self, _epoch: usize) -> (f32, f32, i32) {
+        (0.0, 0.0, 0)
+    }
+
+    /// Learning-rate change notification (full-precision cooldowns).
+    fn notify_lr_change(&mut self) {}
+
+    /// Serialize the complete adaptation state.  `restore` of the result
+    /// must reproduce identical subsequent plans (property-tested).
+    fn checkpoint(&self) -> Json;
+
+    /// Restore state produced by [`BitPolicy::checkpoint`].
+    fn restore(&mut self, state: &Json) -> Result<()>;
+}
+
+/// Mantissa bits (and sign elision) from `mant`, exponent width/mode from
+/// `exp` — the composition that makes QM + QE the paper's headline pair
+/// while letting each half evolve (and checkpoint) independently.
+pub struct Composite {
+    name: &'static str,
+    mant: Box<dyn BitPolicy>,
+    exp: Box<dyn BitPolicy>,
+}
+
+impl Composite {
+    pub fn new(name: &'static str, mant: Box<dyn BitPolicy>, exp: Box<dyn BitPolicy>) -> Self {
+        Self { name, mant, exp }
+    }
+
+    fn merge(m: NetworkPlan, e: &NetworkPlan) -> NetworkPlan {
+        let splice = |ms: Vec<ContainerPlan>, es: &[ContainerPlan]| -> Vec<ContainerPlan> {
+            ms.into_iter()
+                .zip(es)
+                .map(|(mp, ep)| ContainerPlan {
+                    mant: mp.mant,
+                    exp_bits: ep.exp_bits,
+                    exp_mode: ep.exp_mode,
+                    elide_sign: mp.elide_sign || ep.elide_sign,
+                })
+                .collect()
+        };
+        NetworkPlan {
+            acts: splice(m.acts, &e.acts),
+            weights: splice(m.weights, &e.weights),
+        }
+    }
+}
+
+impl BitPolicy for Composite {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn observe(&mut self, sig: &StepSignals) -> NetworkPlan {
+        let m = self.mant.observe(sig);
+        let e = self.exp.observe(sig);
+        Self::merge(m, &e)
+    }
+
+    fn plan(&self) -> NetworkPlan {
+        Self::merge(self.mant.plan(), &self.exp.plan())
+    }
+
+    fn step_hyper(&self, epoch: usize) -> (f32, f32, i32) {
+        // the mantissa half owns the compiled-step learner knobs
+        self.mant.step_hyper(epoch)
+    }
+
+    fn notify_lr_change(&mut self) {
+        self.mant.notify_lr_change();
+        self.exp.notify_lr_change();
+    }
+
+    fn checkpoint(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("mant".to_string(), self.mant.checkpoint());
+        o.insert("exp".to_string(), self.exp.checkpoint());
+        Json::Obj(o)
+    }
+
+    fn restore(&mut self, state: &Json) -> Result<()> {
+        self.mant
+            .restore(state.get("mant").ok_or_else(|| anyhow!("missing mant state"))?)?;
+        self.exp
+            .restore(state.get("exp").ok_or_else(|| anyhow!("missing exp state"))?)
+    }
+}
+
+/// Static full-container policy — the FP32/BF16 baselines expressed through
+/// the same engine so the Trainer has exactly one wiring path.
+pub struct FixedPolicy {
+    plan: NetworkPlan,
+}
+
+impl FixedPolicy {
+    pub fn new(container: Container, layers: usize) -> Self {
+        Self {
+            plan: NetworkPlan::full(container, layers),
+        }
+    }
+}
+
+impl BitPolicy for FixedPolicy {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn observe(&mut self, _sig: &StepSignals) -> NetworkPlan {
+        self.plan.clone()
+    }
+
+    fn plan(&self) -> NetworkPlan {
+        self.plan.clone()
+    }
+
+    fn checkpoint(&self) -> Json {
+        Json::Obj(BTreeMap::new())
+    }
+
+    fn restore(&mut self, _state: &Json) -> Result<()> {
+        Ok(())
+    }
+}
+
+// ---- JSON state helpers shared by the policy implementations -----------
+
+pub(crate) fn state_f64(state: &Json, key: &str) -> Result<f64> {
+    state
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("policy state: missing number '{key}'"))
+}
+
+pub(crate) fn state_u32(state: &Json, key: &str) -> Result<u32> {
+    Ok(state_f64(state, key)? as u32)
+}
+
+pub(crate) fn state_bool(state: &Json, key: &str) -> Result<bool> {
+    match state.get(key) {
+        Some(Json::Bool(b)) => Ok(*b),
+        _ => Err(anyhow!("policy state: missing bool '{key}'")),
+    }
+}
+
+pub(crate) fn state_vec_f32(state: &Json, key: &str) -> Result<Vec<f32>> {
+    state
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("policy state: missing array '{key}'"))?
+        .iter()
+        .map(|j| {
+            j.as_f64()
+                .map(|v| v as f32)
+                .ok_or_else(|| anyhow!("policy state: non-number in '{key}'"))
+        })
+        .collect()
+}
+
+pub(crate) fn jnums_f32(vs: &[f32]) -> Json {
+    Json::Arr(vs.iter().map(|&v| Json::Num(v as f64)).collect())
+}
+
+pub(crate) fn mode_to_json(mode: Mode) -> Json {
+    match mode {
+        Mode::Delta => Json::Str("delta".to_string()),
+        Mode::FixedBias { bias, group } => {
+            let mut o = BTreeMap::new();
+            o.insert("bias".to_string(), Json::Num(bias as f64));
+            o.insert("group".to_string(), Json::Num(group as f64));
+            Json::Obj(o)
+        }
+    }
+}
+
+pub(crate) fn mode_from_json(j: &Json) -> Result<Mode> {
+    match j {
+        Json::Str(s) if s == "delta" => Ok(Mode::Delta),
+        Json::Obj(_) => Ok(Mode::FixedBias {
+            bias: state_f64(j, "bias")? as u8,
+            group: state_f64(j, "group")? as usize,
+        }),
+        _ => Err(anyhow!("policy state: bad exponent mode")),
+    }
+}
+
+pub(crate) fn modes_to_json(modes: &[Mode]) -> Json {
+    Json::Arr(modes.iter().map(|&m| mode_to_json(m)).collect())
+}
+
+pub(crate) fn modes_from_json(state: &Json, key: &str) -> Result<Vec<Mode>> {
+    state
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("policy state: missing array '{key}'"))?
+        .iter()
+        .map(mode_from_json)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_bits_per_value() {
+        let p = ContainerPlan {
+            mant: 1.3,
+            exp_bits: 4,
+            exp_mode: Mode::Delta,
+            elide_sign: true,
+        };
+        // 0 sign + 4 exponent + ceil(1.3)=2 mantissa
+        assert_eq!(p.bits_per_value(Container::Bf16), 6.0);
+        assert_eq!(p.store_mant_bits(), 2);
+        let full = ContainerPlan::full(Container::Fp32);
+        assert_eq!(full.bits_per_value(Container::Fp32), 32.0);
+        let full16 = ContainerPlan::full(Container::Bf16);
+        assert_eq!(full16.bits_per_value(Container::Bf16), 16.0);
+    }
+
+    #[test]
+    fn plan_meta_application() {
+        let p = ContainerPlan {
+            mant: 2.7,
+            exp_bits: 4,
+            exp_mode: Mode::FixedBias { bias: 124, group: 8 },
+            elide_sign: true,
+        };
+        let m = p.meta(Container::Bf16);
+        assert_eq!(m.mant_bits, 3);
+        assert!(m.elide_sign);
+        assert_eq!(m.exp_mode, Mode::FixedBias { bias: 124, group: 8 });
+    }
+
+    #[test]
+    fn composite_merges_axes() {
+        let m = NetworkPlan {
+            acts: vec![ContainerPlan {
+                mant: 1.0,
+                exp_bits: 8,
+                exp_mode: Mode::Delta,
+                elide_sign: true,
+            }],
+            weights: vec![ContainerPlan::full(Container::Bf16)],
+        };
+        let e = NetworkPlan {
+            acts: vec![ContainerPlan {
+                mant: 7.0,
+                exp_bits: 4,
+                exp_mode: Mode::FixedBias { bias: 120, group: 8 },
+                elide_sign: false,
+            }],
+            weights: vec![ContainerPlan {
+                mant: 7.0,
+                exp_bits: 3,
+                exp_mode: Mode::Delta,
+                elide_sign: false,
+            }],
+        };
+        let out = Composite::merge(m, &e);
+        assert_eq!(out.acts[0].mant, 1.0);
+        assert_eq!(out.acts[0].exp_bits, 4);
+        assert!(out.acts[0].elide_sign);
+        assert_eq!(out.weights[0].exp_bits, 3);
+    }
+
+    #[test]
+    fn mode_json_roundtrip() {
+        for m in [
+            Mode::Delta,
+            Mode::FixedBias { bias: 121, group: 8 },
+        ] {
+            assert_eq!(mode_from_json(&mode_to_json(m)).unwrap(), m);
+        }
+    }
+}

@@ -1,0 +1,317 @@
+//! Quantum Exponent behind the [`BitPolicy`] trait (§IV): learned
+//! per-layer *exponent* bitlengths.
+//!
+//! The paper learns exponent bitlengths with the same gradient machinery
+//! as Quantum Mantissa; on the coordinator side that learner reduces to a
+//! γ-paced descent of each tensor's exponent field width toward the
+//! smallest width whose overflow (saturation) probability stays below a
+//! tolerance — the quantity the streaming max-exponent/overflow statistics
+//! ([`crate::stats::ExpRangeStats`]) measure directly.  AdaptivFloat's
+//! per-tensor exponent bias and Flexpoint's range tracking are the same
+//! signal; here the bias is the tensor's mean biased exponent and the
+//! width descends under the shared [`GammaSchedule`], freezing ceiled in
+//! the round-up endgame exactly like the mantissa learner.
+//!
+//! Each plan also carries the cheaper lossless Gecko layout for the
+//! tensor's exponent stream (delta vs learned-fixed-bias mode), so the
+//! stash stores what the policy learned and Gecko-on-exponents improves
+//! the fixed-width footprint further (the paper's 4.74× → 5.64× step).
+
+use super::schedule::GammaSchedule;
+use super::{
+    jnums_f32, modes_from_json, modes_to_json, state_bool, state_vec_f32, BitPolicy,
+    ContainerPlan, NetworkPlan, StepSignals,
+};
+use crate::formats::Container;
+use crate::gecko::Mode;
+use crate::stats::ExpRangeStats;
+use crate::util::json::Json;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+/// Saturating a stashed tensor corrupts the values the backward pass
+/// restores, so the learned width keeps overflow essentially impossible.
+const OVERFLOW_TOL: f64 = 1e-5;
+
+pub struct QuantumExponent {
+    sched: GammaSchedule,
+    container: Container,
+    nonneg_act: Vec<bool>,
+    /// Learned fractional exponent bitlengths per layer.
+    e_a: Vec<f32>,
+    e_w: Vec<f32>,
+    /// Current required width per tensor (the overflow-tolerance floor the
+    /// learned width descends to; widening ranges raise it immediately).
+    req_a: Vec<f32>,
+    req_w: Vec<f32>,
+    /// Chosen lossless Gecko layout per tensor.
+    mode_a: Vec<Mode>,
+    mode_w: Vec<Mode>,
+    /// Descent per unit lr_n·γ (run-length scaled, like the QM surrogate).
+    scale: f32,
+    rounded: bool,
+}
+
+impl QuantumExponent {
+    pub fn new(
+        container: Container,
+        epochs: usize,
+        steps_per_epoch: usize,
+        nonneg_act: Vec<bool>,
+    ) -> Self {
+        let layers = nonneg_act.len();
+        let sched = GammaSchedule::paper_like(epochs);
+        let stage1_epochs = ((epochs as f64 * sched.stage_frac[1]).round() as usize).max(1);
+        let stage1_obs = (stage1_epochs * steps_per_epoch.max(1)) as f32;
+        // cover the full 8-bit range within 80% of the first γ stage
+        let scale = 8.0 / (0.8 * stage1_obs * sched.lr_n * sched.gammas[0]);
+        Self {
+            sched,
+            container,
+            nonneg_act,
+            e_a: vec![8.0; layers],
+            e_w: vec![8.0; layers],
+            req_a: vec![8.0; layers],
+            req_w: vec![8.0; layers],
+            mode_a: vec![Mode::Delta; layers],
+            mode_w: vec![Mode::Delta; layers],
+            scale,
+            rounded: false,
+        }
+    }
+
+    fn make_plan(&self) -> NetworkPlan {
+        let mant = self.container.mant_bits() as f32;
+        let acts = self
+            .e_a
+            .iter()
+            .zip(&self.mode_a)
+            .zip(&self.nonneg_act)
+            .map(|((&e, &mode), &nonneg)| ContainerPlan {
+                mant,
+                exp_bits: (e.ceil() as u32).clamp(1, 8),
+                exp_mode: mode,
+                elide_sign: nonneg,
+            })
+            .collect();
+        let weights = self
+            .e_w
+            .iter()
+            .zip(&self.mode_w)
+            .map(|(&e, &mode)| ContainerPlan {
+                mant,
+                exp_bits: (e.ceil() as u32).clamp(1, 8),
+                exp_mode: mode,
+                elide_sign: false,
+            })
+            .collect();
+        NetworkPlan { acts, weights }
+    }
+
+    /// One tensor's update: requirement floor from the streaming stats,
+    /// γ-paced descent of the learned width, storage-mode refresh.
+    fn update_one(
+        e: &mut f32,
+        req: &mut f32,
+        mode: &mut Mode,
+        stats: &ExpRangeStats,
+        step: f32,
+        frozen: bool,
+    ) {
+        if stats.count > 0 {
+            *req = stats.needed_exp_bits(OVERFLOW_TOL) as f32;
+            *mode = stats.gecko_best().1;
+        }
+        if *req > *e {
+            // range violation: saturation would corrupt restored tensors,
+            // so recovery overrides even the frozen endgame
+            *e = *req;
+        } else if !frozen {
+            *e = (*e - step).max(*req);
+        }
+    }
+}
+
+impl BitPolicy for QuantumExponent {
+    fn name(&self) -> &'static str {
+        "qe"
+    }
+
+    fn observe(&mut self, sig: &StepSignals) -> NetworkPlan {
+        let (gamma, lr_n, _) = self.sched.hyper(sig.epoch);
+        let in_roundup = self.sched.in_roundup(sig.epoch);
+        let step = lr_n * gamma * self.scale;
+        for (i, (e, req)) in self.e_a.iter_mut().zip(self.req_a.iter_mut()).enumerate() {
+            if let Some(stats) = sig.act_stats.get(i) {
+                Self::update_one(e, req, &mut self.mode_a[i], stats, step, in_roundup);
+            }
+        }
+        for (i, (e, req)) in self.e_w.iter_mut().zip(self.req_w.iter_mut()).enumerate() {
+            if let Some(stats) = sig.weight_stats.get(i) {
+                Self::update_one(e, req, &mut self.mode_w[i], stats, step, in_roundup);
+            }
+        }
+        if in_roundup && !self.rounded {
+            for e in self.e_a.iter_mut().chain(self.e_w.iter_mut()) {
+                *e = e.ceil().clamp(1.0, 8.0);
+            }
+            self.rounded = true;
+        }
+        self.make_plan()
+    }
+
+    fn plan(&self) -> NetworkPlan {
+        self.make_plan()
+    }
+
+    fn checkpoint(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("e_a".to_string(), jnums_f32(&self.e_a));
+        o.insert("e_w".to_string(), jnums_f32(&self.e_w));
+        o.insert("req_a".to_string(), jnums_f32(&self.req_a));
+        o.insert("req_w".to_string(), jnums_f32(&self.req_w));
+        o.insert("mode_a".to_string(), modes_to_json(&self.mode_a));
+        o.insert("mode_w".to_string(), modes_to_json(&self.mode_w));
+        o.insert("rounded".to_string(), Json::Bool(self.rounded));
+        Json::Obj(o)
+    }
+
+    fn restore(&mut self, state: &Json) -> Result<()> {
+        self.e_a = state_vec_f32(state, "e_a")?;
+        self.e_w = state_vec_f32(state, "e_w")?;
+        self.req_a = state_vec_f32(state, "req_a")?;
+        self.req_w = state_vec_f32(state, "req_w")?;
+        self.mode_a = modes_from_json(state, "mode_a")?;
+        self.mode_w = modes_from_json(state, "mode_w")?;
+        self.rounded = state_bool(state, "rounded")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traces::ValueModel;
+
+    fn stats_for(model: ValueModel, seed: u64) -> ExpRangeStats {
+        ExpRangeStats::from_exponents(&model.sample_exponents(16 * 1024, seed))
+    }
+
+    #[test]
+    fn learns_narrow_widths_on_trained_streams() {
+        let act = vec![stats_for(ValueModel::relu_act(), 7)];
+        let wgt = vec![stats_for(ValueModel::weights(), 9)];
+        let mut p = QuantumExponent::new(Container::Bf16, 6, 30, vec![true]);
+        let mut step = 0;
+        for epoch in 0..6 {
+            for _ in 0..30 {
+                p.observe(&StepSignals {
+                    epoch,
+                    step,
+                    loss: 1.0,
+                    lr_changed: false,
+                    learned_n_a: None,
+                    learned_n_w: None,
+                    act_stats: &act,
+                    weight_stats: &wgt,
+                });
+                step += 1;
+            }
+        }
+        let plan = p.plan();
+        // §IV: "3 or 4 exponent bits" — trained-like streams land there
+        // (the tight-tolerance activation tail needs one more).
+        assert!(
+            (3..=5).contains(&plan.acts[0].exp_bits),
+            "act exp bits {}",
+            plan.acts[0].exp_bits
+        );
+        assert!(
+            (3..=4).contains(&plan.weights[0].exp_bits),
+            "weight exp bits {}",
+            plan.weights[0].exp_bits
+        );
+        // learned widths must cover the observed range at the tolerance
+        assert!(plan.acts[0].exp_bits >= act[0].needed_exp_bits(1e-5));
+        assert!(plan.weights[0].exp_bits >= wgt[0].needed_exp_bits(1e-5));
+    }
+
+    #[test]
+    fn no_stats_means_full_width() {
+        let mut p = QuantumExponent::new(Container::Bf16, 6, 30, vec![false; 2]);
+        for s in 0..60 {
+            p.observe(&StepSignals {
+                epoch: s / 30,
+                step: s,
+                loss: 1.0,
+                lr_changed: false,
+                learned_n_a: None,
+                learned_n_w: None,
+                act_stats: &[],
+                weight_stats: &[],
+            });
+        }
+        assert!(p.plan().acts.iter().all(|c| c.exp_bits == 8));
+    }
+
+    #[test]
+    fn widening_range_recovers_immediately() {
+        let narrow = vec![ExpRangeStats::from_exponents(&[124u8; 4096])];
+        let wgt = vec![ExpRangeStats::from_exponents(&[121u8; 4096])];
+        let mut p = QuantumExponent::new(Container::Bf16, 6, 30, vec![false]);
+        let sig = |epoch, step, a: &'_ [ExpRangeStats], w: &'_ [ExpRangeStats]| StepSignals {
+            epoch,
+            step,
+            loss: 1.0,
+            lr_changed: false,
+            learned_n_a: None,
+            learned_n_w: None,
+            act_stats: a,
+            weight_stats: w,
+        };
+        // epochs 0..3: adaptation phase, constant stream → width 1
+        for s in 0..100 {
+            p.observe(&sig(s / 30, s, &narrow, &wgt));
+        }
+        let before = p.plan().acts[0].exp_bits;
+        assert!(before <= 2, "constant stream narrows hard: {before}");
+        // the range blows up in the frozen endgame: widths must jump, not
+        // drift — saturating stashed tensors is never acceptable
+        let mut wide_exps = vec![124u8; 4096];
+        for (k, e) in wide_exps.iter_mut().enumerate() {
+            if k % 3 == 0 {
+                *e = 90;
+            }
+        }
+        let wide = vec![ExpRangeStats::from_exponents(&wide_exps)];
+        let plan = p.observe(&sig(5, 210, &wide, &wgt));
+        assert!(
+            plan.acts[0].exp_bits >= wide[0].needed_exp_bits(1e-5),
+            "overflow guard must react in one period"
+        );
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_stable() {
+        let act = vec![stats_for(ValueModel::relu_act(), 3)];
+        let wgt = vec![stats_for(ValueModel::weights(), 5)];
+        let mut p = QuantumExponent::new(Container::Bf16, 9, 20, vec![true]);
+        for s in 0..50 {
+            p.observe(&StepSignals {
+                epoch: s / 20,
+                step: s,
+                loss: 1.0,
+                lr_changed: false,
+                learned_n_a: None,
+                learned_n_w: None,
+                act_stats: &act,
+                weight_stats: &wgt,
+            });
+        }
+        let ck = p.checkpoint();
+        let mut q = QuantumExponent::new(Container::Bf16, 9, 20, vec![true]);
+        q.restore(&ck).unwrap();
+        assert_eq!(ck, q.checkpoint());
+        assert_eq!(p.plan(), q.plan());
+    }
+}

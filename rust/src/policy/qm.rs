@@ -1,0 +1,286 @@
+//! Quantum Mantissa behind the [`BitPolicy`] trait (§IV-A): per-layer
+//! learned mantissa bitlengths under the staged γ schedule with the
+//! round-up endgame.
+//!
+//! Two operating modes share one state machine:
+//!
+//! * **e2e** — the actual bitlength gradients live *inside* the compiled
+//!   train step (Eq. 7's penalty + the expected-value bitlength VJP); the
+//!   policy adopts the learned values from
+//!   [`StepSignals::learned_n_a`](super::StepSignals) each period and owns
+//!   only the schedule (γ stages, lr_n, stochastic flag) and the endgame
+//!   ceil-and-freeze.
+//! * **surrogate** (trace sweeps, no compiled step) — a deterministic
+//!   descent toward per-layer target bitlengths calibrated from this
+//!   repo's e2e runs ([`crate::report::MantissaPolicy::qm_default`]),
+//!   paced by the same lr_n·γ product the in-graph learner uses, so the
+//!   per-epoch trajectories have the paper's Fig. 3 shape.
+
+use super::schedule::GammaSchedule;
+use super::{
+    jnums_f32, state_bool, state_vec_f32, BitPolicy, ContainerPlan, NetworkPlan, StepSignals,
+};
+use crate::formats::Container;
+use crate::gecko::Mode;
+use crate::util::json::Json;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+pub struct QuantumMantissa {
+    sched: GammaSchedule,
+    container: Container,
+    nonneg_act: Vec<bool>,
+    /// Learned fractional bitlengths (acts, weights) per layer.
+    n_a: Vec<f32>,
+    n_w: Vec<f32>,
+    /// Trace-mode surrogate targets per layer; `None` in e2e runs.
+    targets: Option<Vec<(f32, f32)>>,
+    /// Surrogate descent per unit lr_n·γ, sized so the full container→target
+    /// drop completes inside the first γ stage regardless of run length.
+    surrogate_scale: f32,
+    /// Round-up endgame entered (bitlengths ceiled and frozen).
+    rounded: bool,
+}
+
+impl QuantumMantissa {
+    /// e2e mode: bitlengths arrive via `StepSignals::learned_n_*`.
+    pub fn e2e(container: Container, layers: usize, epochs: usize) -> Self {
+        Self::build(container, layers, epochs, 1, vec![false; layers], None)
+    }
+
+    /// Trace-sweep mode: descend toward `targets` = per-layer
+    /// (act_bits, weight_bits) over `epochs` × `steps_per_epoch`
+    /// observations.
+    pub fn surrogate(
+        container: Container,
+        epochs: usize,
+        steps_per_epoch: usize,
+        nonneg_act: Vec<bool>,
+        targets: Vec<(f32, f32)>,
+    ) -> Self {
+        let layers = targets.len();
+        Self::build(
+            container,
+            layers,
+            epochs,
+            steps_per_epoch,
+            nonneg_act,
+            Some(targets),
+        )
+    }
+
+    fn build(
+        container: Container,
+        layers: usize,
+        epochs: usize,
+        steps_per_epoch: usize,
+        nonneg_act: Vec<bool>,
+        targets: Option<Vec<(f32, f32)>>,
+    ) -> Self {
+        let mmax = container.mant_bits() as f32;
+        let sched = GammaSchedule::paper_like(epochs);
+        // Observations inside the first γ stage; the surrogate covers the
+        // whole container range in 80% of them so every layer reaches its
+        // target with slack before γ decays.
+        let stage1_epochs = ((epochs as f64 * sched.stage_frac[1]).round() as usize).max(1);
+        let stage1_obs = (stage1_epochs * steps_per_epoch.max(1)) as f32;
+        let surrogate_scale = mmax / (0.8 * stage1_obs * sched.lr_n * sched.gammas[0]);
+        Self {
+            sched,
+            container,
+            nonneg_act,
+            n_a: vec![mmax; layers],
+            n_w: vec![mmax; layers],
+            targets,
+            surrogate_scale,
+            rounded: false,
+        }
+    }
+
+    fn mmax(&self) -> f32 {
+        self.container.mant_bits() as f32
+    }
+
+    fn make_plan(&self) -> NetworkPlan {
+        let acts = self
+            .n_a
+            .iter()
+            .zip(&self.nonneg_act)
+            .map(|(&n, &nonneg)| ContainerPlan {
+                mant: n,
+                exp_bits: 8,
+                exp_mode: Mode::Delta,
+                elide_sign: nonneg,
+            })
+            .collect();
+        let weights = self
+            .n_w
+            .iter()
+            .map(|&n| ContainerPlan {
+                mant: n,
+                exp_bits: 8,
+                exp_mode: Mode::Delta,
+                elide_sign: false,
+            })
+            .collect();
+        NetworkPlan { acts, weights }
+    }
+}
+
+impl BitPolicy for QuantumMantissa {
+    fn name(&self) -> &'static str {
+        "qm"
+    }
+
+    fn observe(&mut self, sig: &StepSignals) -> NetworkPlan {
+        let mmax = self.mmax();
+        let (gamma, lr_n, _stochastic) = self.sched.hyper(sig.epoch);
+        if self.sched.in_roundup(sig.epoch) {
+            if !self.rounded {
+                // §IV-A-4: adopt any last learned values, then ceil-freeze.
+                if let Some(n) = sig.learned_n_a {
+                    self.n_a.copy_from_slice(n);
+                }
+                if let Some(n) = sig.learned_n_w {
+                    self.n_w.copy_from_slice(n);
+                }
+                GammaSchedule::round_up(&mut self.n_a, mmax);
+                GammaSchedule::round_up(&mut self.n_w, mmax);
+                self.rounded = true;
+            }
+            return self.make_plan();
+        }
+        if let (Some(na), Some(nw)) = (sig.learned_n_a, sig.learned_n_w) {
+            // e2e: the compiled step learned these; clamp into the container.
+            for (n, &v) in self.n_a.iter_mut().zip(na) {
+                *n = v.clamp(0.0, mmax);
+            }
+            for (n, &v) in self.n_w.iter_mut().zip(nw) {
+                *n = v.clamp(0.0, mmax);
+            }
+        } else if let Some(targets) = &self.targets {
+            // surrogate: γ-paced descent toward the calibrated targets.
+            let step = lr_n * gamma * self.surrogate_scale;
+            for (i, &(ta, tw)) in targets.iter().enumerate() {
+                self.n_a[i] = (self.n_a[i] - step).clamp(ta.min(mmax), mmax);
+                self.n_w[i] = (self.n_w[i] - step).clamp(tw.min(mmax), mmax);
+            }
+        }
+        self.make_plan()
+    }
+
+    fn plan(&self) -> NetworkPlan {
+        self.make_plan()
+    }
+
+    fn step_hyper(&self, epoch: usize) -> (f32, f32, i32) {
+        let (gamma, lr_n, stochastic) = self.sched.hyper(epoch);
+        (lr_n, gamma, stochastic)
+    }
+
+    fn checkpoint(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("n_a".to_string(), jnums_f32(&self.n_a));
+        o.insert("n_w".to_string(), jnums_f32(&self.n_w));
+        o.insert("rounded".to_string(), Json::Bool(self.rounded));
+        Json::Obj(o)
+    }
+
+    fn restore(&mut self, state: &Json) -> Result<()> {
+        self.n_a = state_vec_f32(state, "n_a")?;
+        self.n_w = state_vec_f32(state, "n_w")?;
+        self.rounded = state_bool(state, "rounded")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(epoch: usize, step: usize) -> StepSignals<'static> {
+        StepSignals {
+            epoch,
+            step,
+            loss: 1.0,
+            lr_changed: false,
+            learned_n_a: None,
+            learned_n_w: None,
+            act_stats: &[],
+            weight_stats: &[],
+        }
+    }
+
+    #[test]
+    fn surrogate_descends_to_targets_and_rounds_up() {
+        let mut p = QuantumMantissa::surrogate(
+            Container::Bf16,
+            6,
+            30,
+            vec![true, true, false],
+            vec![(1.0, 2.0), (1.5, 2.0), (2.0, 3.0)],
+        );
+        let mut step = 0;
+        for epoch in 0..6 {
+            for _ in 0..30 {
+                p.observe(&sig(epoch, step));
+                step += 1;
+            }
+        }
+        let plan = p.plan();
+        // endgame: ceiled integers at the targets
+        assert_eq!(plan.acts[0].mant, 1.0);
+        assert_eq!(plan.acts[1].mant, 2.0); // ceil(1.5)
+        assert_eq!(plan.weights[2].mant, 3.0);
+        assert!(plan.acts[0].elide_sign);
+        assert!(!plan.acts[2].elide_sign);
+        assert_eq!(plan.acts[0].exp_bits, 8, "QM alone leaves exponents full");
+    }
+
+    #[test]
+    fn e2e_adopts_learned_bits() {
+        let mut p = QuantumMantissa::e2e(Container::Bf16, 2, 90);
+        let na = [3.2f32, 1.1];
+        let nw = [4.0f32, 2.5];
+        let s = StepSignals {
+            epoch: 1,
+            step: 1,
+            loss: 1.0,
+            lr_changed: false,
+            learned_n_a: Some(&na),
+            learned_n_w: Some(&nw),
+            act_stats: &[],
+            weight_stats: &[],
+        };
+        let plan = p.observe(&s);
+        assert_eq!(plan.acts[0].mant, 3.2);
+        assert_eq!(plan.weights[1].mant, 2.5);
+        // store bits are ceiled
+        assert_eq!(plan.acts[1].store_mant_bits(), 2);
+    }
+
+    #[test]
+    fn checkpoint_restores_bitlengths() {
+        let mut p = QuantumMantissa::surrogate(
+            Container::Bf16,
+            9,
+            10,
+            vec![false; 2],
+            vec![(1.0, 2.0), (1.0, 2.0)],
+        );
+        for s in 0..40 {
+            p.observe(&sig(s / 10, s));
+        }
+        let ck = p.checkpoint();
+        let mut q = QuantumMantissa::surrogate(
+            Container::Bf16,
+            9,
+            10,
+            vec![false; 2],
+            vec![(1.0, 2.0), (1.0, 2.0)],
+        );
+        q.restore(&ck).unwrap();
+        assert_eq!(p.plan(), q.plan());
+        assert_eq!(ck, q.checkpoint());
+    }
+}

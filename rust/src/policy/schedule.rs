@@ -1,0 +1,144 @@
+//! The staged γ-regularizer schedule shared by the learned-bitlength
+//! policies (§IV-A for mantissas, §IV-B's exponent twin): three γ stages
+//! expressed as fractions of the run, a bitlength learning rate, and the
+//! round-up endgame that freezes ceiled bitlengths for the tail of the run.
+//!
+//! Generalized out of the original `coordinator::qm::QmSchedule` so that
+//! Quantum Exponent (and any future gradient-side learner) reuses the same
+//! machinery; `QmSchedule` remains as a name alias for compatibility.
+
+/// γ regularizer schedule: the paper sets 0.1 / 0.01 / 0.001 at epochs
+/// 0 / 30 / 60 of a 90-epoch run; we express the breakpoints as fractions
+/// of the configured run length.
+#[derive(Debug, Clone)]
+pub struct GammaSchedule {
+    pub epochs: usize,
+    pub gammas: [f32; 3],
+    /// Epoch fractions at which each γ stage begins.
+    pub stage_frac: [f64; 3],
+    /// Fraction of the run with rounded-up frozen bitlengths at the end
+    /// (paper: last 10 of 90 epochs).
+    pub roundup_frac: f64,
+    /// Bitlength learning rate while adapting.
+    pub lr_n: f32,
+}
+
+impl GammaSchedule {
+    pub fn paper_like(epochs: usize) -> Self {
+        Self {
+            epochs,
+            gammas: [0.1, 0.01, 0.001],
+            stage_frac: [0.0, 1.0 / 3.0, 2.0 / 3.0],
+            roundup_frac: 1.0 / 9.0,
+            lr_n: 4.0,
+        }
+    }
+
+    /// First epoch of the round-up endgame (§IV-A-4).  The endgame covers
+    /// the last `roundup_frac` of the run rounded to whole epochs — but
+    /// always at least one epoch, so short runs (e.g. the 6-epoch default)
+    /// still freeze-and-round instead of skipping the endgame entirely
+    /// (the historical `epochs * (1 - roundup_frac)` threshold was never
+    /// reached by runs shorter than ⌈1/roundup_frac⌉ epochs).
+    pub fn roundup_entry(&self) -> usize {
+        let tail = ((self.epochs as f64 * self.roundup_frac).round() as usize).max(1);
+        self.epochs.saturating_sub(tail)
+    }
+
+    /// Is `epoch` in the round-up endgame (§IV-A-4)?
+    pub fn in_roundup(&self, epoch: usize) -> bool {
+        epoch >= self.roundup_entry()
+    }
+
+    /// (γ, lr_n, stochastic) for this epoch.  In the endgame the bitlengths
+    /// are frozen (lr_n = 0), deterministic (stochastic = 0), and the
+    /// coordinator rounds the learned values up once on entry.
+    pub fn hyper(&self, epoch: usize) -> (f32, f32, i32) {
+        if self.in_roundup(epoch) {
+            return (0.0, 0.0, 0);
+        }
+        let frac = epoch as f64 / self.epochs.max(1) as f64;
+        let mut gamma = self.gammas[0];
+        for (g, f) in self.gammas.iter().zip(self.stage_frac) {
+            if frac >= f {
+                gamma = *g;
+            }
+        }
+        (gamma, self.lr_n, 1)
+    }
+
+    /// Round learned bitlengths up for deployment/endgame.
+    pub fn round_up(bits: &mut [f32], mmax: f32) {
+        for b in bits {
+            *b = b.ceil().clamp(0.0, mmax);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_boundaries_exact() {
+        let s = GammaSchedule::paper_like(90);
+        // γ changes exactly at the stage_frac breakpoints, not one off.
+        assert_eq!(s.hyper(0).0, 0.1);
+        assert_eq!(s.hyper(29).0, 0.1);
+        assert_eq!(s.hyper(30).0, 0.01);
+        assert_eq!(s.hyper(59).0, 0.01);
+        assert_eq!(s.hyper(60).0, 0.001);
+        assert_eq!(s.hyper(79).0, 0.001);
+    }
+
+    #[test]
+    fn stage_boundaries_exact_non_multiple() {
+        // 9-epoch run: 3/9 and 6/9 land exactly on 1/3 and 2/3 in f64.
+        let s = GammaSchedule::paper_like(9);
+        assert_eq!(s.hyper(2).0, 0.1);
+        assert_eq!(s.hyper(3).0, 0.01);
+        assert_eq!(s.hyper(5).0, 0.01);
+        assert_eq!(s.hyper(6).0, 0.001);
+    }
+
+    #[test]
+    fn roundup_entry_matches_paper_run() {
+        let s = GammaSchedule::paper_like(90);
+        assert_eq!(s.roundup_entry(), 80); // last 10 of 90
+        assert!(!s.in_roundup(79));
+        assert!(s.in_roundup(80));
+        assert_eq!(s.hyper(85), (0.0, 0.0, 0));
+    }
+
+    #[test]
+    fn roundup_entry_short_runs_off_by_one_guard() {
+        // 6-epoch run: 6/9 of an epoch rounds to a single endgame epoch;
+        // the old floor-threshold formula skipped the endgame entirely.
+        let s = GammaSchedule::paper_like(6);
+        assert_eq!(s.roundup_entry(), 5);
+        assert!(!s.in_roundup(4));
+        assert!(s.in_roundup(5));
+        // 9 epochs -> exactly one endgame epoch (9/9 = 1).
+        let s = GammaSchedule::paper_like(9);
+        assert_eq!(s.roundup_entry(), 8);
+        // degenerate 1-epoch run keeps the at-least-one-epoch guarantee
+        let s = GammaSchedule::paper_like(1);
+        assert_eq!(s.roundup_entry(), 0);
+        assert!(s.in_roundup(0));
+    }
+
+    #[test]
+    fn adapting_phase_is_stochastic_with_live_lr() {
+        let s = GammaSchedule::paper_like(90);
+        let (_, lr_n, stoch) = s.hyper(10);
+        assert!(lr_n > 0.0);
+        assert_eq!(stoch, 1);
+    }
+
+    #[test]
+    fn round_up_clamps() {
+        let mut bits = vec![1.2, 0.0, -0.5, 22.9, 25.0];
+        GammaSchedule::round_up(&mut bits, 23.0);
+        assert_eq!(bits, vec![2.0, 0.0, 0.0, 23.0, 23.0]);
+    }
+}

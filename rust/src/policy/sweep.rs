@@ -1,0 +1,653 @@
+//! Trace-driven policy sweep (`repro policy`): run each adaptation policy
+//! over the ImageNet-scale trace models, emit per-epoch bitlength
+//! trajectories, and report end-of-run footprints two ways — the plan's
+//! fixed-width containers (the paper's QM+QE 4.74× / BitWave 3.19×
+//! numbers) and with Gecko losslessly compressing the resulting exponent
+//! streams through the real stash (the 5.64× / 4.56× step).
+//!
+//! The sweep stands in for an ImageNet training run: per-tensor value
+//! streams come from the calibrated [`crate::traces::ValueModel`]s (the
+//! same streams the analytic footprint models measure), the loss curve is
+//! a staged-decay model with the LR drops the Trainer applies at 1/3 and
+//! 2/3 of the run, and — crucially for BitWave's feedback loop — the loss
+//! carries a mantissa-quantization penalty term, so chopping bits too far
+//! *raises* the observed loss exactly as it would in real training.
+
+use super::{BitPolicy, Composite, NetworkPlan, QuantumExponent, QuantumMantissa};
+use crate::formats::Container;
+use crate::hwsim;
+use crate::report::footprint::{
+    ACT_EXP_SEED, ACT_VAL_SEED, SAMPLE, STREAM_SEED, WEIGHT_EXP_SEED, WEIGHT_VAL_SEED,
+};
+use crate::report::MantissaPolicy;
+use crate::stash::{CodecKind, ContainerMeta, LedgerSnapshot, Stash, StashConfig, TensorId};
+use crate::stats::ExpRangeStats;
+use crate::traces::{values_with_exponents, NetworkTrace, SplitMix64};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// Which policy a sweep run exercises.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Quantum Mantissa + Quantum Exponent — the paper's headline pair.
+    QmQe,
+    /// BitWave — network-wide mantissa + exponent from the loss EMA.
+    BitWave,
+    /// Quantum Mantissa alone (exponents stay at the full 8-bit field) —
+    /// shows that exponent adaptation is the load-bearing half.
+    QmOnly,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s {
+            "qmqe" | "qm_qe" | "qm+qe" => Some(PolicyKind::QmQe),
+            "bitwave" | "bw" => Some(PolicyKind::BitWave),
+            "qm" | "qm_only" => Some(PolicyKind::QmOnly),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PolicyKind::QmQe => "qm+qe",
+            PolicyKind::BitWave => "bitwave",
+            PolicyKind::QmOnly => "qm",
+        }
+    }
+
+    pub fn all() -> [PolicyKind; 3] {
+        [PolicyKind::QmQe, PolicyKind::BitWave, PolicyKind::QmOnly]
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub epochs: usize,
+    pub steps_per_epoch: usize,
+    pub batch: usize,
+    pub container: Container,
+    /// Values sampled per tensor stream (scaled to full tensor size).
+    pub sample: usize,
+    pub seed: u64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            epochs: 9,
+            steps_per_epoch: 30,
+            batch: 256,
+            container: Container::Bf16,
+            sample: SAMPLE,
+            seed: STREAM_SEED,
+        }
+    }
+}
+
+/// One epoch of a policy's trajectory (the Fig. 3-style series the JSON
+/// output carries).
+#[derive(Debug, Clone, Copy)]
+pub struct EpochPoint {
+    pub epoch: usize,
+    pub mean_mant_a: f64,
+    pub mean_mant_w: f64,
+    pub mean_exp_a: f64,
+    pub mean_exp_w: f64,
+    /// Mean per-step stored bits over the epoch (plan accounting).
+    pub plan_bits: f64,
+    pub ratio_vs_fp32: f64,
+}
+
+/// Result of one (network, policy) sweep run.
+#[derive(Debug, Clone)]
+pub struct PolicyRunResult {
+    pub policy: String,
+    pub network: String,
+    pub epochs: Vec<EpochPoint>,
+    /// Per-step FP32 footprint of the same tensors (the denominator).
+    pub fp32_bits: f64,
+    /// End-of-run per-step footprint, fixed-width plan containers
+    /// (averaged over the final epoch, so controllers that oscillate
+    /// around their equilibrium report the equilibrium).
+    pub plan_bits: f64,
+    /// The final plan's fixed-width footprint (the exact container set the
+    /// Gecko measurement stored — differs from `plan_bits` only for
+    /// oscillating controllers).
+    pub final_plan_bits: f64,
+    /// Same tensors stored through the stash with Gecko on the exponent
+    /// streams (measured, scaled to full tensor size).
+    pub gecko_bits: f64,
+    /// Ledger of the final stash measurement.
+    pub ledger: LedgerSnapshot,
+}
+
+impl PolicyRunResult {
+    /// Footprint reduction vs FP32 without Gecko (paper: QM+QE 4.74×,
+    /// BitWave 3.19×).
+    pub fn plan_reduction(&self) -> f64 {
+        self.fp32_bits / self.plan_bits
+    }
+
+    /// With Gecko on the exponents (paper: 5.64× / 4.56×).
+    pub fn gecko_reduction(&self) -> f64 {
+        self.fp32_bits / self.gecko_bits
+    }
+
+    /// Reduction of the exact end-state containers (the apples-to-apples
+    /// baseline for [`PolicyRunResult::gecko_reduction`]: same mantissa
+    /// and sign bits, fixed-width vs Gecko exponents).
+    pub fn final_plan_reduction(&self) -> f64 {
+        self.fp32_bits / self.final_plan_bits
+    }
+
+    /// Trajectory + summary as JSON (the `repro policy` artifact).
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        use crate::coordinator::metrics::Summary;
+        let mut s = Summary::new();
+        s.str("policy", &self.policy)
+            .str("network", &self.network)
+            .num("fp32_bits", self.fp32_bits)
+            .num("plan_bits", self.plan_bits)
+            .num("final_plan_bits", self.final_plan_bits)
+            .num("gecko_bits", self.gecko_bits)
+            .num("plan_reduction", self.plan_reduction())
+            .num("gecko_reduction", self.gecko_reduction())
+            .nums(
+                "epoch",
+                &self.epochs.iter().map(|e| e.epoch as f64).collect::<Vec<_>>(),
+            )
+            .nums(
+                "mean_mant_a",
+                &self.epochs.iter().map(|e| e.mean_mant_a).collect::<Vec<_>>(),
+            )
+            .nums(
+                "mean_mant_w",
+                &self.epochs.iter().map(|e| e.mean_mant_w).collect::<Vec<_>>(),
+            )
+            .nums(
+                "mean_exp_a",
+                &self.epochs.iter().map(|e| e.mean_exp_a).collect::<Vec<_>>(),
+            )
+            .nums(
+                "mean_exp_w",
+                &self.epochs.iter().map(|e| e.mean_exp_w).collect::<Vec<_>>(),
+            )
+            .nums(
+                "ratio_vs_fp32",
+                &self.epochs.iter().map(|e| e.ratio_vs_fp32).collect::<Vec<_>>(),
+            );
+        s.write(path)
+    }
+}
+
+/// Build the policy a sweep run drives (also the constructor the
+/// checkpoint/restore property tests use).
+pub fn build_policy(kind: PolicyKind, net: &NetworkTrace, cfg: &SweepConfig) -> Box<dyn BitPolicy> {
+    let nonneg: Vec<bool> = net.layers.iter().map(|l| l.nonneg_act).collect();
+    let n = net.layers.len().max(1);
+    // surrogate targets from the repo's calibrated e2e bitlengths
+    let qm_t = MantissaPolicy::qm_default();
+    let targets: Vec<(f32, f32)> = (0..net.layers.len())
+        .map(|i| {
+            let f = i as f64 / n as f64;
+            (
+                qm_t.bits_at(f, false, cfg.container) as f32,
+                qm_t.bits_at(f, true, cfg.container) as f32,
+            )
+        })
+        .collect();
+    match kind {
+        PolicyKind::QmQe => Box::new(Composite::new(
+            "qm+qe",
+            Box::new(QuantumMantissa::surrogate(
+                cfg.container,
+                cfg.epochs,
+                cfg.steps_per_epoch,
+                nonneg.clone(),
+                targets,
+            )),
+            Box::new(QuantumExponent::new(
+                cfg.container,
+                cfg.epochs,
+                cfg.steps_per_epoch,
+                nonneg,
+            )),
+        )),
+        PolicyKind::QmOnly => Box::new(QuantumMantissa::surrogate(
+            cfg.container,
+            cfg.epochs,
+            cfg.steps_per_epoch,
+            nonneg,
+            targets,
+        )),
+        PolicyKind::BitWave => Box::new(super::BitWave::new(cfg.container, nonneg)),
+    }
+}
+
+/// One per-tensor sampled stream with its scale to full tensor size.
+pub struct TensorStream {
+    pub id: TensorId,
+    pub vals: Vec<f32>,
+    pub stats: ExpRangeStats,
+    pub scale: f64,
+}
+
+/// Sample every tensor of `net` once (seeds mirror the analytic footprint
+/// model / `repro stash`, so all three measurement paths see the same
+/// streams).
+pub fn sample_streams(net: &NetworkTrace, cfg: &SweepConfig) -> Vec<TensorStream> {
+    let mut out = Vec::with_capacity(2 * net.layers.len());
+    for (i, l) in net.layers.iter().enumerate() {
+        let seed = cfg.seed ^ i as u64;
+        let a_exps = l.act_model.sample_exponents(cfg.sample, seed ^ ACT_EXP_SEED);
+        let a_vals = values_with_exponents(&a_exps, seed ^ ACT_VAL_SEED, l.nonneg_act);
+        out.push(TensorStream {
+            id: TensorId::act(i),
+            stats: ExpRangeStats::from_exponents(&a_exps),
+            vals: a_vals,
+            scale: (l.act_elems * cfg.batch) as f64 / cfg.sample as f64,
+        });
+        let w_count = cfg.sample.min(l.weight_elems.max(64));
+        let w_exps = l.weight_model.sample_exponents(w_count, seed ^ WEIGHT_EXP_SEED);
+        let w_vals = values_with_exponents(&w_exps, seed ^ WEIGHT_VAL_SEED, false);
+        out.push(TensorStream {
+            id: TensorId::weight(i),
+            stats: ExpRangeStats::from_exponents(&w_exps),
+            vals: w_vals,
+            scale: l.weight_elems as f64 / w_count as f64,
+        });
+    }
+    out
+}
+
+/// Staged-decay loss model with LR drops and a mantissa-quantization
+/// penalty — the feedback that makes BitWave's Eq. 9 controller settle at
+/// a finite bitlength instead of chopping to zero.
+pub struct LossModel {
+    rng: SplitMix64,
+    epochs: usize,
+    drops: [usize; 2],
+    steps_per_epoch: usize,
+    floor: f64,
+    amps: [f64; 3],
+    decay: f64,
+    noise: f64,
+    mant_penalty: f64,
+}
+
+impl LossModel {
+    pub fn new(cfg: &SweepConfig) -> Self {
+        Self {
+            rng: SplitMix64::new(cfg.seed ^ 0x105),
+            epochs: cfg.epochs.max(1),
+            drops: [cfg.epochs / 3, 2 * cfg.epochs / 3],
+            steps_per_epoch: cfg.steps_per_epoch.max(1),
+            floor: 0.5,
+            amps: [2.0, 0.6, 0.25],
+            decay: 5.0,
+            noise: 0.012,
+            // Quantization-noise cliff: 12·2⁻ᵐ makes one more chopped bit
+            // visibly worsen the loss once m reaches ~4, exactly where the
+            // paper's Fig. 7 shows BitWave's controller settling — below
+            // that the penalty step exceeds the Eq. 9 ε and the controller
+            // restores; above it the step is lost in the noise.
+            mant_penalty: 12.0,
+        }
+    }
+
+    /// Segment index and its starting epoch for `epoch`.
+    fn segment(&self, epoch: usize) -> (usize, usize) {
+        if epoch < self.drops[0] {
+            (0, 0)
+        } else if epoch < self.drops[1] {
+            (1, self.drops[0])
+        } else {
+            (2, self.drops[1])
+        }
+    }
+
+    /// The LR drops before `epoch` begins (the Trainer's staged schedule).
+    pub fn lr_drops_at(&self, epoch: usize, step_in_epoch: usize) -> bool {
+        step_in_epoch == 0 && epoch > 0 && self.drops.contains(&epoch)
+    }
+
+    /// Observed task loss for this step given the mean activation mantissa
+    /// bits currently applied (the quantization-noise feedback term).
+    pub fn loss(&mut self, epoch: usize, step_in_epoch: usize, mean_mant: f64) -> f64 {
+        let (seg, seg_start) = self.segment(epoch);
+        let seg_epochs = match seg {
+            0 => self.drops[0],
+            1 => self.drops[1] - self.drops[0],
+            _ => self.epochs.saturating_sub(self.drops[1]),
+        }
+        .max(1);
+        let steps_in = ((epoch - seg_start) * self.steps_per_epoch + step_in_epoch) as f64;
+        let t_in = steps_in / (seg_epochs * self.steps_per_epoch) as f64;
+        self.floor
+            + self.amps[seg] * (-self.decay * t_in).exp()
+            + self.mant_penalty * 2f64.powf(-mean_mant)
+            + self.noise * self.rng.next_gaussian()
+    }
+}
+
+/// Per-step stored bits of the whole network under `plan` (plan
+/// accounting, via the hwsim coupling).
+pub fn plan_step_bits(
+    net: &NetworkTrace,
+    plan: &NetworkPlan,
+    batch: usize,
+    container: Container,
+) -> f64 {
+    hwsim::layer_bits_from_plans(net, plan, batch, container)
+        .iter()
+        .map(|b| b.weight + b.act)
+        .sum()
+}
+
+/// Run one policy over one trace network.
+pub fn run_policy(
+    net: &NetworkTrace,
+    kind: PolicyKind,
+    cfg: &SweepConfig,
+) -> Result<PolicyRunResult> {
+    let streams = sample_streams(net, cfg);
+    let n = net.layers.len();
+    let act_stats: Vec<ExpRangeStats> =
+        (0..n).map(|i| streams[2 * i].stats.clone()).collect();
+    let weight_stats: Vec<ExpRangeStats> =
+        (0..n).map(|i| streams[2 * i + 1].stats.clone()).collect();
+
+    let fp32_bits: f64 = net
+        .layers
+        .iter()
+        .map(|l| 32.0 * ((l.act_elems * cfg.batch) as f64 + l.weight_elems as f64))
+        .sum();
+
+    let mut policy = build_policy(kind, net, cfg);
+    let mut loss_model = LossModel::new(cfg);
+    let mut epochs = Vec::with_capacity(cfg.epochs);
+    let mut step = 0usize;
+    for epoch in 0..cfg.epochs {
+        let mut epoch_bits = 0.0;
+        for s in 0..cfg.steps_per_epoch {
+            let lr_changed = loss_model.lr_drops_at(epoch, s);
+            if lr_changed {
+                policy.notify_lr_change();
+            }
+            let mean_mant = policy.plan().mean_act_mant();
+            let loss = loss_model.loss(epoch, s, mean_mant);
+            let plan = policy.observe(&super::StepSignals {
+                epoch,
+                step,
+                loss,
+                lr_changed,
+                learned_n_a: None,
+                learned_n_w: None,
+                act_stats: &act_stats,
+                weight_stats: &weight_stats,
+            });
+            epoch_bits += plan_step_bits(net, &plan, cfg.batch, cfg.container);
+            step += 1;
+        }
+        let plan = policy.plan();
+        let mean_bits = epoch_bits / cfg.steps_per_epoch.max(1) as f64;
+        epochs.push(EpochPoint {
+            epoch,
+            mean_mant_a: plan.mean_act_mant(),
+            mean_mant_w: plan.mean_weight_mant(),
+            mean_exp_a: plan.mean_act_exp(),
+            mean_exp_w: plan.mean_weight_exp(),
+            plan_bits: mean_bits,
+            ratio_vs_fp32: mean_bits / fp32_bits,
+        });
+    }
+
+    // ---- end-of-run footprint: mean plan bits over the final epoch, and
+    // the same tensors stored through the stash with Gecko exponents.
+    let plan_bits = epochs
+        .last()
+        .map(|e| e.plan_bits)
+        .ok_or_else(|| anyhow!("sweep ran zero epochs"))?;
+    let plan = policy.plan();
+    let final_plan_bits = plan_step_bits(net, &plan, cfg.batch, cfg.container);
+    let stash = Stash::new(StashConfig {
+        codec: CodecKind::Gecko,
+        ..Default::default()
+    });
+    for s in &streams {
+        let meta: ContainerMeta = match s.id.class {
+            crate::stash::TensorClass::Activation => plan.acts[s.id.layer].meta(cfg.container),
+            crate::stash::TensorClass::Weight => plan.weights[s.id.layer].meta(cfg.container),
+        };
+        stash.put(s.id, s.vals.clone(), meta);
+    }
+    stash.flush();
+    if stash.failures() > 0 {
+        return Err(anyhow!("{} stash encode jobs failed", stash.failures()));
+    }
+    let mut gecko_bits = 0.0;
+    for s in &streams {
+        let bits = stash
+            .stored_bits(s.id)
+            .ok_or_else(|| anyhow!("{:?} not resident after sweep encode", s.id))?;
+        gecko_bits += bits.total() * s.scale;
+    }
+    let ledger = stash.ledger();
+
+    Ok(PolicyRunResult {
+        policy: kind.label().to_string(),
+        network: net.name.clone(),
+        epochs,
+        fp32_bits,
+        plan_bits,
+        final_plan_bits,
+        gecko_bits,
+        ledger,
+    })
+}
+
+/// Checkpoint a policy mid-run and verify (used by `repro policy
+/// --verify-restore` and the property tests): a fresh policy restored from
+/// the checkpoint must continue with identical plans.
+pub fn verify_restore_continuation(
+    net: &NetworkTrace,
+    kind: PolicyKind,
+    cfg: &SweepConfig,
+    split_step: usize,
+    extra_steps: usize,
+) -> Result<Json> {
+    let streams = sample_streams(net, cfg);
+    let n = net.layers.len();
+    let act_stats: Vec<ExpRangeStats> =
+        (0..n).map(|i| streams[2 * i].stats.clone()).collect();
+    let weight_stats: Vec<ExpRangeStats> =
+        (0..n).map(|i| streams[2 * i + 1].stats.clone()).collect();
+    let spe = cfg.steps_per_epoch.max(1);
+
+    let drive = |policy: &mut dyn BitPolicy,
+                 from: usize,
+                 to: usize,
+                 losses: &mut LossModel|
+     -> Vec<NetworkPlan> {
+        let mut plans = Vec::new();
+        for step in from..to {
+            let (epoch, s) = (step / spe, step % spe);
+            let lr_changed = losses.lr_drops_at(epoch, s);
+            if lr_changed {
+                policy.notify_lr_change();
+            }
+            let mean_mant = policy.plan().mean_act_mant();
+            let loss = losses.loss(epoch, s, mean_mant);
+            plans.push(policy.observe(&super::StepSignals {
+                epoch,
+                step,
+                loss,
+                lr_changed,
+                learned_n_a: None,
+                learned_n_w: None,
+                act_stats: &act_stats,
+                weight_stats: &weight_stats,
+            }));
+        }
+        plans
+    };
+
+    let mut p1 = build_policy(kind, net, cfg);
+    let mut lm1 = LossModel::new(cfg);
+    drive(p1.as_mut(), 0, split_step, &mut lm1);
+    let ck = p1.checkpoint();
+
+    let mut p2 = build_policy(kind, net, cfg);
+    p2.restore(&ck)?;
+    if p2.checkpoint() != ck {
+        return Err(anyhow!("checkpoint not bit-stable through restore"));
+    }
+    // drive p2's loss model through the prefix so both see the same tail
+    let mut lm2 = LossModel::new(cfg);
+    for step in 0..split_step {
+        let (epoch, s) = (step / spe, step % spe);
+        // replay the exact mean-mantissa feedback p1 saw is unnecessary:
+        // the RNG is the only stateful part, so burn the same draws
+        let _ = lm2.loss(epoch, s, 0.0);
+    }
+    let a = drive(p1.as_mut(), split_step, split_step + extra_steps, &mut lm1);
+    let b = drive(p2.as_mut(), split_step, split_step + extra_steps, &mut lm2);
+    if a != b {
+        return Err(anyhow!(
+            "restored policy diverged within {extra_steps} steps of the split"
+        ));
+    }
+    Ok(ck)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traces::{mobilenet_v3_small, resnet18};
+
+    fn quick_cfg() -> SweepConfig {
+        SweepConfig {
+            sample: 16 * 1024,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sweep_reproduces_paper_ordering() {
+        let cfg = quick_cfg();
+        let mut qmqe_sum = 0.0;
+        let mut bw_sum = 0.0;
+        for net in [resnet18(), mobilenet_v3_small()] {
+            let qmqe = run_policy(&net, PolicyKind::QmQe, &cfg).unwrap();
+            let bw = run_policy(&net, PolicyKind::BitWave, &cfg).unwrap();
+            let qm = run_policy(&net, PolicyKind::QmOnly, &cfg).unwrap();
+            // per-network ordering: QM+QE beats BitWave; Gecko on the
+            // exponents improves both (the paper's 4.74→5.64 / 3.19→4.56)
+            assert!(
+                qmqe.plan_reduction() > bw.plan_reduction(),
+                "{}: qm+qe {:.2}x vs bitwave {:.2}x",
+                net.name,
+                qmqe.plan_reduction(),
+                bw.plan_reduction()
+            );
+            assert!(
+                qmqe.gecko_reduction() > qmqe.final_plan_reduction(),
+                "{}: gecko must improve qm+qe ({:.2}x vs {:.2}x)",
+                net.name,
+                qmqe.gecko_reduction(),
+                qmqe.final_plan_reduction()
+            );
+            assert!(
+                bw.gecko_reduction() > bw.final_plan_reduction(),
+                "{}: gecko must improve bitwave ({:.2}x vs {:.2}x)",
+                net.name,
+                bw.gecko_reduction(),
+                bw.final_plan_reduction()
+            );
+            // exponent adaptation is the load-bearing half: QM alone
+            // (8-bit exponents) compresses far less than QM+QE
+            assert!(
+                qm.plan_reduction() < qmqe.plan_reduction() - 0.5,
+                "{}: qm-only {:.2}x vs qm+qe {:.2}x",
+                net.name,
+                qm.plan_reduction(),
+                qmqe.plan_reduction()
+            );
+            // Fig. 7 fidelity: BitWave's controller must settle at a few
+            // mantissa bits, not collapse toward zero (a collapse would
+            // also flip the QM+QE ordering above)
+            let bw_mant = bw.epochs.last().unwrap().mean_mant_a;
+            assert!(
+                (3.0..=6.5).contains(&bw_mant),
+                "{}: bitwave end mantissa {bw_mant:.1}",
+                net.name
+            );
+            qmqe_sum += qmqe.plan_reduction();
+            bw_sum += bw.plan_reduction();
+        }
+        // paper bands: QM+QE 4.74×, BitWave 3.19× (averaged over networks;
+        // the sweep lands ≈4.9× and ≈3.4× — gates leave margin for the
+        // controller settling one bit away across stream seeds)
+        let qmqe_avg = qmqe_sum / 2.0;
+        let bw_avg = bw_sum / 2.0;
+        assert!(qmqe_avg >= 4.4, "qm+qe average reduction {qmqe_avg:.2}x");
+        assert!(bw_avg >= 2.8, "bitwave average reduction {bw_avg:.2}x");
+        assert!(bw_avg < qmqe_avg, "ordering");
+    }
+
+    #[test]
+    fn trajectories_descend_and_emit() {
+        let cfg = quick_cfg();
+        let net = resnet18();
+        let res = run_policy(&net, PolicyKind::QmQe, &cfg).unwrap();
+        assert_eq!(res.epochs.len(), cfg.epochs);
+        let first = &res.epochs[0];
+        let last = res.epochs.last().unwrap();
+        assert!(last.mean_mant_a < first.mean_mant_a, "mantissa descends");
+        assert!(last.mean_exp_a < first.mean_exp_a, "exponent descends");
+        assert!(last.ratio_vs_fp32 < first.ratio_vs_fp32);
+        // JSON artifact writes and parses back
+        let dir = std::env::temp_dir().join("sfp_policy_sweep_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("traj.json");
+        res.write_json(&p).unwrap();
+        let j = crate::util::json::Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        assert_eq!(j.get("policy").unwrap().as_str(), Some("qm+qe"));
+        assert_eq!(
+            j.get("mean_exp_a").unwrap().as_arr().unwrap().len(),
+            cfg.epochs
+        );
+    }
+
+    #[test]
+    fn stash_measurement_consistent_with_ledger() {
+        let cfg = SweepConfig {
+            sample: 8 * 1024,
+            ..quick_cfg()
+        };
+        let net = mobilenet_v3_small();
+        let res = run_policy(&net, PolicyKind::BitWave, &cfg).unwrap();
+        // unscaled ledger totals must equal the sum the sweep scaled
+        assert!(res.ledger.written_bits > 0.0);
+        assert!(res.gecko_bits > 0.0);
+        assert!(res.ledger.ratio_vs_fp32() < 1.0);
+    }
+
+    #[test]
+    fn mid_run_restore_continues_identically_all_policies() {
+        let cfg = SweepConfig {
+            sample: 4 * 1024,
+            ..quick_cfg()
+        };
+        let net = resnet18();
+        for kind in PolicyKind::all() {
+            // split inside epoch 1 and again right after the first LR drop
+            for split in [40, cfg.steps_per_epoch * (cfg.epochs / 3) + 3] {
+                verify_restore_continuation(&net, kind, &cfg, split, 50)
+                    .unwrap_or_else(|e| panic!("{kind:?} split {split}: {e}"));
+            }
+        }
+    }
+}

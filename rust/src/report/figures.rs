@@ -84,6 +84,33 @@ pub fn fig8_bc_histogram(path: &Path, bc: &RunResult) -> Result<()> {
     csv.flush()
 }
 
+/// Footprint-over-time: per-epoch stash traffic of a run (what an
+/// adapting container actually wrote/read each epoch, plus the planned
+/// exponent width trajectory) — the policy engine's adaptation curve on
+/// real stored bytes.  Requires a run with `TrainConfig::stash` set.
+pub fn footprint_over_time(path: &Path, run: &RunResult) -> Result<()> {
+    let mut csv = CsvSink::create(
+        path,
+        &["epoch", "written_mb", "read_mb", "ratio_vs_fp32", "mean_bits_a", "mean_exp_bits_a"],
+    )?;
+    for (i, e) in run.stash_epochs.iter().enumerate() {
+        let (bits, exp) = run
+            .epochs
+            .get(i)
+            .map(|s| (s.mean_bits_a, s.mean_exp_bits_a))
+            .unwrap_or((f64::NAN, f64::NAN));
+        csv.row(&[
+            i as f64,
+            e.written_bits / 8e6,
+            e.read_bits / 8e6,
+            e.ratio_vs_fp32(),
+            bits,
+            exp,
+        ])?;
+    }
+    csv.flush()
+}
+
 /// Fig 9: exponent value distribution for weights and activations.
 pub fn fig9_exponents(
     path: &Path,
@@ -218,6 +245,31 @@ mod tests {
         assert!(cw.cdf_at(1) > 0.08, "weights 1b: {}", cw.cdf_at(1));
         assert!(ca.cdf_at(1) > 0.22, "acts 1b: {}", ca.cdf_at(1));
         fig10_cdf(&tdir().join("fig10.csv"), &cw, &ca).unwrap();
+    }
+
+    #[test]
+    fn footprint_over_time_emits() {
+        use crate::coordinator::train::EpochStats;
+        use crate::stash::EpochTraffic;
+        let mut run = RunResult::default();
+        for i in 0..3 {
+            run.stash_epochs.push(EpochTraffic {
+                written_bits: 8e6 * (3.0 - i as f64),
+                read_bits: 8e6 * (3.0 - i as f64),
+                written_fp32_bits: 32e6,
+            });
+            run.epochs.push(EpochStats {
+                epoch: i,
+                mean_bits_a: 7.0 - i as f64,
+                mean_exp_bits_a: 8.0 - i as f64,
+                ..Default::default()
+            });
+        }
+        let p = tdir().join("fpot.csv");
+        footprint_over_time(&p, &run).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 4);
+        assert!(text.starts_with("epoch,written_mb"));
     }
 
     #[test]

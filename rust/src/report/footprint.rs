@@ -10,11 +10,25 @@
 use crate::baselines::{self, ActKind};
 use crate::formats::Container;
 use crate::gecko;
+use crate::hwsim::LayerBits;
+use crate::stash::{CodecKind, ContainerMeta, Stash, StashConfig, TensorId};
 use crate::stats::{ComponentBits, Footprint};
-use crate::traces::{LayerTrace, NetworkTrace};
+use crate::traces::{values_with_exponents, LayerTrace, NetworkTrace};
+use anyhow::anyhow;
 
 /// Values sampled per tensor for codec measurement.
 pub const SAMPLE: usize = 64 * 512;
+
+/// Per-tensor stream seed scheme shared by the analytic footprint model,
+/// the stash measurement ([`stash_measured_bits`], `repro stash`), and the
+/// policy sweep (`repro policy`): layer `i` draws from
+/// `STREAM_SEED ^ i ^ <component seed>`, so every measurement path sees
+/// bit-identical streams and their cross-checks are exact.
+pub const STREAM_SEED: u64 = 0x5EED;
+pub const ACT_EXP_SEED: u64 = 0xAC7;
+pub const ACT_VAL_SEED: u64 = 0x7A1;
+pub const WEIGHT_EXP_SEED: u64 = 0x3E1;
+pub const WEIGHT_VAL_SEED: u64 = 0x3F2;
 
 /// Mantissa bitlength policy for a variant at ImageNet scale.
 #[derive(Debug, Clone)]
@@ -192,11 +206,11 @@ impl FootprintModel {
         }
 
         // --- SFP: measure Gecko exponent bits on sampled streams.
-        let a_exps = l.act_model.sample_exponents(SAMPLE, seed ^ 0xAC7);
+        let a_exps = l.act_model.sample_exponents(SAMPLE, seed ^ ACT_EXP_SEED);
         let a_enc = gecko::encoded_bits(&a_exps, gecko::Mode::Delta) as f64;
         let a_scale = act_elems / SAMPLE as f64;
         let w_sample = SAMPLE.min(l.weight_elems.max(64));
-        let w_exps = l.weight_model.sample_exponents(w_sample, seed ^ 0x3E1);
+        let w_exps = l.weight_model.sample_exponents(w_sample, seed ^ WEIGHT_EXP_SEED);
         let w_enc = gecko::encoded_bits(&w_exps, gecko::Mode::Delta) as f64;
         let w_scale = w_elems / w_sample as f64;
 
@@ -224,12 +238,67 @@ impl FootprintModel {
         let n = net.layers.len().max(1);
         let mut out = Footprint::default();
         for (i, l) in net.layers.iter().enumerate() {
-            let lf = self.layer(l, i as f64 / n as f64, batch, 0x5EED ^ i as u64);
+            let lf = self.layer(l, i as f64 / n as f64, batch, STREAM_SEED ^ i as u64);
             out.activations.add(lf.acts);
             out.weights.add(lf.weights);
         }
         out
     }
+}
+
+/// Per-layer stored bits *measured* through a real [`Stash`]: one sampled
+/// value stream per tensor (seeds mirror [`FootprintModel::layer`], so the
+/// streams are the ones the analytic model sizes Gecko on) encoded under
+/// the integer `(act_bits, weight_bits)` schedule, scaled to full tensor
+/// size.  This is the `repro stash` measurement path factored out so
+/// `table2 --source stash` can drive the hwsim with measured bytes.
+pub fn stash_measured_bits(
+    net: &NetworkTrace,
+    schedule: &[(u32, u32)],
+    container: Container,
+    batch: usize,
+    kind: CodecKind,
+) -> anyhow::Result<Vec<LayerBits>> {
+    assert_eq!(schedule.len(), net.layers.len());
+    let stash = Stash::new(StashConfig {
+        codec: kind,
+        ..Default::default()
+    });
+    let mut scales = Vec::with_capacity(net.layers.len());
+    for (i, l) in net.layers.iter().enumerate() {
+        let seed = STREAM_SEED ^ i as u64;
+        let (n_a, n_w) = schedule[i];
+        let a_exps = l.act_model.sample_exponents(SAMPLE, seed ^ ACT_EXP_SEED);
+        let a_vals = values_with_exponents(&a_exps, seed ^ ACT_VAL_SEED, l.nonneg_act);
+        let a_meta = ContainerMeta::new(container, n_a).with_sign_elision(l.nonneg_act);
+        stash.put(TensorId::act(i), a_vals, a_meta);
+        let w_count = SAMPLE.min(l.weight_elems.max(64));
+        let w_exps = l.weight_model.sample_exponents(w_count, seed ^ WEIGHT_EXP_SEED);
+        let w_vals = values_with_exponents(&w_exps, seed ^ WEIGHT_VAL_SEED, false);
+        stash.put(TensorId::weight(i), w_vals, ContainerMeta::new(container, n_w));
+        scales.push((
+            (l.act_elems * batch) as f64 / SAMPLE as f64,
+            l.weight_elems as f64 / w_count as f64,
+        ));
+    }
+    stash.flush();
+    if stash.failures() > 0 {
+        return Err(anyhow!("{} stash encode jobs failed", stash.failures()));
+    }
+    let mut out = Vec::with_capacity(net.layers.len());
+    for (i, (a_scale, w_scale)) in scales.iter().enumerate() {
+        let a = stash
+            .stored_bits(TensorId::act(i))
+            .ok_or_else(|| anyhow!("activation {i} not resident"))?;
+        let w = stash
+            .stored_bits(TensorId::weight(i))
+            .ok_or_else(|| anyhow!("weight {i} not resident"))?;
+        out.push(LayerBits {
+            weight: w.total() * w_scale,
+            act: a.total() * a_scale,
+        });
+    }
+    Ok(out)
 }
 
 /// Activation-only footprints for the Fig. 13 comparison set.
@@ -353,6 +422,27 @@ mod tests {
         assert!(get("GIST++") > 0.85 * get("BF16"));
         let sfp_gain = get("BF16") / get("SFP_QM");
         assert!((1.5..3.5).contains(&sfp_gain), "sfp gain {sfp_gain}");
+    }
+
+    #[test]
+    fn stash_measured_bits_matches_analytic_gecko() {
+        // the gecko component-stream codec lays bits out exactly as the
+        // analytic model accounts them: per-layer deltas stay under 1%
+        let net = resnet18();
+        let sched = MantissaPolicy::qm_default().integer_schedule(net.layers.len(), Container::Bf16);
+        let measured =
+            stash_measured_bits(&net, &sched, Container::Bf16, 256, CodecKind::Gecko).unwrap();
+        let analytic = FootprintModel::from_schedule(Container::Bf16, &sched);
+        let n = net.layers.len();
+        for (i, (l, m)) in net.layers.iter().zip(&measured).enumerate() {
+            let lf = analytic.layer(l, (i as f64 + 0.5) / n as f64, 256, STREAM_SEED ^ i as u64);
+            let expected = lf.total_act_bits() + lf.total_weight_bits();
+            let got = m.act + m.weight;
+            assert!(
+                ((got - expected) / expected).abs() < 0.01,
+                "layer {i}: measured {got} vs analytic {expected}"
+            );
+        }
     }
 
     #[test]

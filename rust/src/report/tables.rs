@@ -1,8 +1,9 @@
 //! Table I / Table II drivers (and the hwsim coupling they share).
 
-use super::footprint::FootprintModel;
+use super::footprint::{stash_measured_bits, FootprintModel, MantissaPolicy};
 use crate::formats::Container;
 use crate::hwsim::{gains, simulate_pass_with_bits, AccelConfig, ComputeType, LayerBits, PassStats};
+use crate::stash::CodecKind;
 use crate::traces::{mobilenet_v3_small, resnet18, NetworkTrace};
 
 /// One Table I row: footprint relative to FP32 for each variant.
@@ -101,6 +102,38 @@ pub fn table2(cfg: &AccelConfig, batch: usize) -> Vec<Table2Row> {
         .collect()
 }
 
+/// Table II with the SFP columns' per-layer bits *measured* through the
+/// stash (`repro table2 --source stash`) instead of the analytic footprint
+/// model — the raw-container baselines stay analytic because dense
+/// containers are exact by construction.
+pub fn table2_stash(cfg: &AccelConfig, batch: usize) -> anyhow::Result<Vec<Table2Row>> {
+    [resnet18(), mobilenet_v3_small()]
+        .into_iter()
+        .map(|net| -> anyhow::Result<Table2Row> {
+            let n = net.layers.len();
+            let fp32 = pass_for(cfg, &net, batch, &FootprintModel::fp32(), ComputeType::Fp32);
+            let bf16 = pass_for(cfg, &net, batch, &FootprintModel::bf16(), ComputeType::Bf16);
+            let qm_sched = MantissaPolicy::qm_default().integer_schedule(n, Container::Bf16);
+            let qm_bits =
+                stash_measured_bits(&net, &qm_sched, Container::Bf16, batch, CodecKind::Gecko)?;
+            let qm = simulate_pass_with_bits(cfg, &net, batch, ComputeType::Bf16, &qm_bits);
+            let bc_sched =
+                MantissaPolicy::bc_default(Container::Bf16).integer_schedule(n, Container::Bf16);
+            let bc_bits =
+                stash_measured_bits(&net, &bc_sched, Container::Bf16, batch, CodecKind::Gecko)?;
+            let bc = simulate_pass_with_bits(cfg, &net, batch, ComputeType::Bf16, &bc_bits);
+            Ok(Table2Row {
+                network: net.name.clone(),
+                bf16: gains(&fp32, &bf16),
+                qm: gains(&fp32, &qm),
+                bc: gains(&fp32, &bc),
+                membound_fp32: fp32.memory_bound_layers as f64 / fp32.total_layer_passes as f64,
+                membound_qm: qm.memory_bound_layers as f64 / qm.total_layer_passes as f64,
+            })
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,6 +170,33 @@ mod tests {
             assert!(r.qm.0 >= r.bc.0 - 0.05, "qm >= bc speed");
             assert!(r.qm.1 > r.bc.1 - 0.05, "qm >= bc energy");
             assert!(r.qm.0 > r.bf16.0, "sfp beats bf16");
+        }
+    }
+
+    #[test]
+    fn table2_stash_source_tracks_analytic() {
+        // measured-bytes Table II must land near the analytic table (the
+        // gecko stash layout matches the analytic accounting bit-for-bit,
+        // so gains differ only by sampling-scale rounding)
+        let analytic = table2(&AccelConfig::default(), 256);
+        let measured = table2_stash(&AccelConfig::default(), 256).unwrap();
+        for (a, m) in analytic.iter().zip(&measured) {
+            assert_eq!(a.network, m.network);
+            assert!(
+                (a.qm.0 - m.qm.0).abs() / a.qm.0 < 0.05,
+                "{}: qm speed {} vs {}",
+                a.network,
+                a.qm.0,
+                m.qm.0
+            );
+            assert!(
+                (a.qm.1 - m.qm.1).abs() / a.qm.1 < 0.05,
+                "{}: qm energy {} vs {}",
+                a.network,
+                a.qm.1,
+                m.qm.1
+            );
+            assert!(m.bc.0 > 1.0 && m.bc.1 > 1.0);
         }
     }
 

@@ -42,15 +42,54 @@ impl LedgerSnapshot {
     }
 }
 
+/// Traffic accumulated between two [`StashLedger::mark_epoch`] cuts — the
+/// footprint-over-time axis of the policy reports (how an adapting
+/// container's stored bytes shrink epoch by epoch).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EpochTraffic {
+    pub written_bits: f64,
+    pub read_bits: f64,
+    pub written_fp32_bits: f64,
+}
+
+impl EpochTraffic {
+    pub fn ratio_vs_fp32(&self) -> f64 {
+        if self.written_fp32_bits == 0.0 {
+            return 1.0;
+        }
+        self.written_bits / self.written_fp32_bits
+    }
+}
+
 /// Thread-safe ledger shared between pool workers and the caller.
 #[derive(Default)]
 pub struct StashLedger {
     inner: Mutex<LedgerSnapshot>,
+    /// (snapshot at the last mark, per-epoch deltas so far).
+    marks: Mutex<(LedgerSnapshot, Vec<EpochTraffic>)>,
 }
 
 impl StashLedger {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Cut an epoch boundary: record the traffic since the previous mark.
+    pub fn mark_epoch(&self) {
+        let now = self.snapshot();
+        let mut m = self.marks.lock().unwrap();
+        let last = m.0;
+        m.1.push(EpochTraffic {
+            written_bits: now.written_bits - last.written_bits,
+            read_bits: now.read_bits - last.read_bits,
+            written_fp32_bits: now.written_fp32_bits - last.written_fp32_bits,
+        });
+        m.0 = now;
+    }
+
+    /// Per-epoch traffic deltas recorded so far.
+    pub fn epoch_traffic(&self) -> Vec<EpochTraffic> {
+        self.marks.lock().unwrap().1.clone()
     }
 
     pub fn record_write(&self, class: TensorClass, bits: ComponentBits, count: usize) {
@@ -117,5 +156,26 @@ mod tests {
         // peak unaffected by release
         assert!((s.peak_resident_bits - 931.0).abs() < 1e-9);
         assert!(s.ratio_vs_fp32() < 1.0);
+    }
+
+    #[test]
+    fn epoch_marks_cut_traffic_deltas() {
+        let l = StashLedger::new();
+        l.record_write(TensorClass::Activation, cb(0.0, 100.0, 50.0, 0.0), 100);
+        l.mark_epoch();
+        l.record_write(TensorClass::Activation, cb(0.0, 60.0, 20.0, 0.0), 100);
+        l.record_read(80.0);
+        l.mark_epoch();
+        let epochs = l.epoch_traffic();
+        assert_eq!(epochs.len(), 2);
+        assert!((epochs[0].written_bits - 150.0).abs() < 1e-9);
+        assert!((epochs[0].read_bits).abs() < 1e-9);
+        assert!((epochs[1].written_bits - 80.0).abs() < 1e-9);
+        assert!((epochs[1].read_bits - 80.0).abs() < 1e-9);
+        assert!((epochs[1].written_fp32_bits - 3200.0).abs() < 1e-9);
+        assert!(epochs[1].ratio_vs_fp32() < 1.0);
+        // an epoch with no traffic records a zero row, not a panic
+        l.mark_epoch();
+        assert!((l.epoch_traffic()[2].written_bits).abs() < 1e-9);
     }
 }

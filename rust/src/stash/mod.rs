@@ -37,7 +37,7 @@ pub use arena::{ChunkArena, ChunkSeq, CHUNK_WORDS};
 pub use codec::{
     ContainerMeta, EncodedStreams, GeckoStashCodec, RawStashCodec, SfpStashCodec, StashCodec,
 };
-pub use ledger::{LedgerSnapshot, StashLedger, TensorClass};
+pub use ledger::{EpochTraffic, LedgerSnapshot, StashLedger, TensorClass};
 pub use pool::StashPool;
 
 use crate::stats::ComponentBits;
@@ -285,6 +285,16 @@ impl Stash {
 
     pub fn ledger(&self) -> LedgerSnapshot {
         self.ledger.snapshot()
+    }
+
+    /// Cut an epoch boundary in the ledger (footprint-over-time series).
+    pub fn mark_epoch(&self) {
+        self.ledger.mark_epoch();
+    }
+
+    /// Per-epoch written/read traffic between [`Stash::mark_epoch`] cuts.
+    pub fn epoch_traffic(&self) -> Vec<EpochTraffic> {
+        self.ledger.epoch_traffic()
     }
 
     pub fn arena_in_use_bytes(&self) -> usize {

@@ -222,6 +222,177 @@ impl Footprint {
     }
 }
 
+/// Per-tensor exponent-range statistics driving the exponent-side
+/// adaptation policies (Quantum Exponent, BitWave): zero mass, non-zero
+/// exponent extremes and mean, a signed-delta width histogram around the
+/// tensor's estimated bias, and the measured Gecko cost of the observed
+/// stream under both encoder modes (so policies can pick the cheaper
+/// lossless exponent layout per tensor).
+#[derive(Debug, Clone)]
+pub struct ExpRangeStats {
+    pub count: u64,
+    pub zeros: u64,
+    /// Non-zero biased-exponent extremes (255/0 sentinels when empty).
+    pub min_exp: u8,
+    pub max_exp: u8,
+    /// Mean biased exponent over the non-zero values.
+    pub mean_exp: f64,
+    /// `widths[w]` = non-zero values whose delta from `bias` fits a signed
+    /// field of exactly `w` bits (w in 1..=7); `widths[8]` counts values
+    /// only a raw 8-bit absolute field covers.  Index 0 is unused.
+    pub widths: [u64; 9],
+    /// Estimated bias the width histogram was computed against.
+    pub bias: u8,
+    /// Measured Gecko encoded bits of the observed exponent stream.
+    pub gecko_delta_bits: u64,
+    /// Same stream under `Mode::FixedBias { bias, group: 8 }`.
+    pub gecko_fixed_bits: u64,
+}
+
+impl Default for ExpRangeStats {
+    fn default() -> Self {
+        Self {
+            count: 0,
+            zeros: 0,
+            min_exp: 255,
+            max_exp: 0,
+            mean_exp: 0.0,
+            widths: [0; 9],
+            bias: 127,
+            gecko_delta_bits: 0,
+            gecko_fixed_bits: 0,
+        }
+    }
+}
+
+/// Smallest signed-field width (1..=7) representing delta `d`
+/// (covering `[-2^(w-1), 2^(w-1) - 1]`); 8 = raw absolute escape.
+fn signed_width(d: i32) -> usize {
+    for w in 1..=7usize {
+        let half = 1i32 << (w - 1);
+        if d >= -half && d < half {
+            return w;
+        }
+    }
+    8
+}
+
+impl ExpRangeStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Two-pass build from a biased-exponent stream: mean → bias, then the
+    /// width histogram and both Gecko measurements against that bias.
+    pub fn from_exponents(exps: &[u8]) -> Self {
+        let mut zeros = 0u64;
+        let mut min_exp = 255u8;
+        let mut max_exp = 0u8;
+        let mut sum = 0.0f64;
+        for &e in exps {
+            if e == 0 {
+                zeros += 1;
+            } else {
+                sum += e as f64;
+                min_exp = min_exp.min(e);
+                max_exp = max_exp.max(e);
+            }
+        }
+        let count = exps.len() as u64;
+        let nz = count - zeros;
+        let (mean_exp, bias) = if nz > 0 {
+            let m = sum / nz as f64;
+            (m, m.round().clamp(1.0, 254.0) as u8)
+        } else {
+            (0.0, 127u8)
+        };
+        let mut widths = [0u64; 9];
+        for &e in exps {
+            if e != 0 {
+                widths[signed_width(e as i32 - bias as i32)] += 1;
+            }
+        }
+        Self {
+            count,
+            zeros,
+            min_exp,
+            max_exp,
+            mean_exp,
+            widths,
+            bias,
+            gecko_delta_bits: gecko::encoded_bits(exps, gecko::Mode::Delta) as u64,
+            gecko_fixed_bits: gecko::encoded_bits(
+                exps,
+                gecko::Mode::FixedBias { bias, group: 8 },
+            ) as u64,
+        }
+    }
+
+    pub fn from_vals(vals: &[f32]) -> Self {
+        Self::from_exponents(&gecko::exponents(vals))
+    }
+
+    /// Fold another tensor/period's stats in (width histograms were built
+    /// against each part's own bias — an approximation the policies accept,
+    /// since biases of one tensor drift slowly between periods).
+    pub fn merge(&mut self, other: &Self) {
+        let nz_a = (self.count - self.zeros) as f64;
+        let nz_b = (other.count - other.zeros) as f64;
+        if nz_a + nz_b > 0.0 {
+            self.mean_exp = (self.mean_exp * nz_a + other.mean_exp * nz_b) / (nz_a + nz_b);
+            self.bias = self.mean_exp.round().clamp(1.0, 254.0) as u8;
+        }
+        self.count += other.count;
+        self.zeros += other.zeros;
+        self.min_exp = self.min_exp.min(other.min_exp);
+        self.max_exp = self.max_exp.max(other.max_exp);
+        for (a, b) in self.widths.iter_mut().zip(&other.widths) {
+            *a += b;
+        }
+        self.gecko_delta_bits += other.gecko_delta_bits;
+        self.gecko_fixed_bits += other.gecko_fixed_bits;
+    }
+
+    pub fn nonzeros(&self) -> u64 {
+        self.count - self.zeros
+    }
+
+    /// Smallest exponent-field width `e` (1..=8) such that the fraction of
+    /// non-zero values overflowing a signed e-bit delta field stays ≤ `tol`
+    /// — the streaming overflow statistic Quantum Exponent descends to.
+    pub fn needed_exp_bits(&self, tol: f64) -> u32 {
+        let nz = self.nonzeros();
+        if nz == 0 {
+            return 1;
+        }
+        let budget = tol * nz as f64;
+        let mut over = 0u64; // values needing more than `e` bits
+        let mut need = 8u32;
+        for e in (1..8usize).rev() {
+            over += self.widths[e + 1];
+            if over as f64 <= budget {
+                need = e as u32;
+            } else {
+                break;
+            }
+        }
+        need
+    }
+
+    /// The cheaper lossless Gecko layout for this stream (bits, mode).
+    pub fn gecko_best(&self) -> (u64, gecko::Mode) {
+        let fixed = gecko::Mode::FixedBias {
+            bias: self.bias,
+            group: 8,
+        };
+        if self.gecko_fixed_bits < self.gecko_delta_bits {
+            (self.gecko_fixed_bits, fixed)
+        } else {
+            (self.gecko_delta_bits, gecko::Mode::Delta)
+        }
+    }
+}
+
 /// Simple streaming mean (Welford, no variance needed here).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Mean {
@@ -299,6 +470,55 @@ mod tests {
         h.add(4);
         assert_eq!(h.mean(), 3.0);
         assert_eq!(h.total(), 2);
+    }
+
+    #[test]
+    fn exp_range_stats_widths_and_need() {
+        // constant exponent stream: everything fits the 1-bit field
+        let s = ExpRangeStats::from_exponents(&[127u8; 640]);
+        assert_eq!(s.bias, 127);
+        assert_eq!(s.widths[1], 640);
+        assert_eq!(s.needed_exp_bits(0.0), 1);
+        // a 1% tail at large deltas is ignored at tol 2% but not at 0
+        let mut exps = vec![127u8; 990];
+        exps.extend(vec![200u8; 10]);
+        let s = ExpRangeStats::from_exponents(&exps);
+        assert_eq!(s.needed_exp_bits(0.02), 1);
+        assert_eq!(s.needed_exp_bits(0.0), 8);
+    }
+
+    #[test]
+    fn exp_range_stats_zeros_excluded_from_widths() {
+        let s = ExpRangeStats::from_exponents(&[0, 0, 124, 124, 125, 0]);
+        assert_eq!(s.zeros, 3);
+        assert_eq!(s.nonzeros(), 3);
+        assert_eq!(s.min_exp, 124);
+        assert_eq!(s.max_exp, 125);
+        let wsum: u64 = s.widths.iter().sum();
+        assert_eq!(wsum, 3);
+    }
+
+    #[test]
+    fn exp_range_stats_gecko_measurements_match_encoder() {
+        let exps: Vec<u8> = (0..512).map(|i| 120 + (i % 7) as u8).collect();
+        let s = ExpRangeStats::from_exponents(&exps);
+        assert_eq!(
+            s.gecko_delta_bits as usize,
+            gecko::encoded_bits(&exps, gecko::Mode::Delta)
+        );
+        let (best, _mode) = s.gecko_best();
+        assert!(best <= s.gecko_delta_bits);
+        assert!(best <= s.gecko_fixed_bits);
+    }
+
+    #[test]
+    fn exp_range_stats_merge_accumulates() {
+        let mut a = ExpRangeStats::from_exponents(&[127u8; 100]);
+        let b = ExpRangeStats::from_exponents(&[130u8; 300]);
+        a.merge(&b);
+        assert_eq!(a.count, 400);
+        assert_eq!(a.max_exp, 130);
+        assert!((a.mean_exp - (127.0 * 100.0 + 130.0 * 300.0) / 400.0).abs() < 1e-9);
     }
 
     #[test]

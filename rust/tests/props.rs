@@ -5,6 +5,9 @@ use sfp::baselines::{self, ActKind};
 use sfp::coordinator::BitChop;
 use sfp::formats::{quantize, truncate_mantissa, Container};
 use sfp::gecko::{self, Mode};
+use sfp::policy::sweep::{build_policy, PolicyKind, SweepConfig};
+use sfp::policy::StepSignals;
+use sfp::stats::ExpRangeStats;
 use sfp::sfp::{sfp_bits, SfpCodec};
 use sfp::stash::{
     CodecKind, ContainerMeta, GeckoStashCodec, RawStashCodec, SfpStashCodec, Stash, StashCodec,
@@ -329,6 +332,76 @@ fn stash_extreme_container_one_mantissa_bit() {
     for (&v, &b) in vals.iter().zip(&back) {
         assert_eq!(meta.quantized(v).to_bits(), b.to_bits());
     }
+}
+
+#[test]
+fn prop_policy_checkpoint_restore_bit_exact() {
+    // Acceptance property: checkpoint → restore round-trips bit-exactly
+    // (the restored policy's own checkpoint equals the original), and a
+    // mid-run restore continues with identical subsequent ContainerPlans
+    // under an arbitrary loss/LR-change tail.
+    use sfp::traces::resnet18;
+    let net = resnet18();
+    let layers = net.layers.len();
+    check("policy checkpoint/restore continues identically", 8, |g| {
+        let cfg = SweepConfig {
+            epochs: 9,
+            steps_per_epoch: 10,
+            batch: 8,
+            container: Container::Bf16,
+            sample: 512,
+            seed: g.u64(),
+        };
+        // random-but-plausible exponent streams per layer
+        let mk_stats = |g: &mut sfp::util::prop::Gen, lo: u32, hi: u32| -> Vec<ExpRangeStats> {
+            (0..layers)
+                .map(|_| {
+                    let exps: Vec<u8> =
+                        (0..512).map(|_| g.u32_in(lo, hi) as u8).collect();
+                    ExpRangeStats::from_exponents(&exps)
+                })
+                .collect()
+        };
+        let act_stats = mk_stats(g, 118, 132);
+        let weight_stats = mk_stats(g, 116, 126);
+        let prefix = g.usize_in(1, 60);
+        let tail = g.usize_in(5, 40);
+        let series: Vec<(f64, bool)> = (0..prefix + tail)
+            .map(|_| (g.f64_unit() * 5.0, g.f64_unit() < 0.05))
+            .collect();
+        for kind in PolicyKind::all() {
+            let mut p1 = build_policy(kind, &net, &cfg);
+            let drive = |p: &mut dyn sfp::policy::BitPolicy,
+                         range: std::ops::Range<usize>| {
+                let mut plans = Vec::new();
+                for step in range {
+                    let (loss, lr_changed) = series[step];
+                    if lr_changed {
+                        p.notify_lr_change();
+                    }
+                    plans.push(p.observe(&StepSignals {
+                        epoch: step / cfg.steps_per_epoch,
+                        step,
+                        loss,
+                        lr_changed,
+                        learned_n_a: None,
+                        learned_n_w: None,
+                        act_stats: &act_stats,
+                        weight_stats: &weight_stats,
+                    }));
+                }
+                plans
+            };
+            drive(p1.as_mut(), 0..prefix);
+            let ck = p1.checkpoint();
+            let mut p2 = build_policy(kind, &net, &cfg);
+            p2.restore(&ck).expect("restore");
+            assert_eq!(ck, p2.checkpoint(), "{kind:?}: checkpoint not bit-stable");
+            let a = drive(p1.as_mut(), prefix..prefix + tail);
+            let b = drive(p2.as_mut(), prefix..prefix + tail);
+            assert_eq!(a, b, "{kind:?}: restored policy diverged");
+        }
+    });
 }
 
 #[test]
