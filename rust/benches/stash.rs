@@ -1,10 +1,14 @@
 //! Stash subsystem benches: worker-pool encode scaling vs a single
-//! thread (the acceptance gate: the pool must sustain >= 2x single-thread
-//! encode throughput), parallel restore, and arena store/load overhead.
+//! thread (acceptance gate: the pool must sustain >= 2x single-thread
+//! encode throughput), zero-copy decode vs the materialized restore
+//! baseline (acceptance gate: zero-copy must win), parallel restore, and
+//! arena store/load overhead.
 
 use sfp::formats::Container;
+use sfp::gecko::SegReader;
 use sfp::stash::{
-    CodecKind, ContainerMeta, GeckoStashCodec, Stash, StashCodec, StashConfig, TensorId,
+    ChunkArena, ChunkSeq, CodecKind, ContainerMeta, EncodedStreams, GeckoStashCodec,
+    RawStashCodec, Stash, StashCodec, StashConfig, TensorId,
 };
 use sfp::traces::ValueModel;
 use sfp::util::bench::{black_box, Bench};
@@ -45,6 +49,7 @@ fn main() {
         threads,
         queue_depth: 2 * threads,
         chunk_values: 16 * 1024,
+        budget_bytes: 0,
     });
     let r_pool = b.run(&format!("pool_{threads}_threads"), total, || {
         for (i, vals) in data.iter().enumerate() {
@@ -66,6 +71,80 @@ fn main() {
     // so shared-runner noise can't flake a healthy pool.
     let gate_failed = threads >= 4 && r_single.min_ns / r_pool.min_ns < 2.0;
 
+    // --- zero-copy decode vs the materialized restore baseline ----------
+    // The pre-refactor restore copied every stream out of the arena as a
+    // fresh Vec<u64> before decoding; the zero-copy path pins the chunks
+    // and decodes them in place.  Gate on the raw-FP32 codec, where the
+    // copied bytes are largest relative to decode work (the advantage is
+    // structural, so the gate is noise-tolerant); gecko is reported
+    // alongside ungated.
+    let arena = ChunkArena::new();
+    let raw_meta = ContainerMeta::new(Container::Fp32, 23);
+    let big = ValueModel::weights().sample_values(1 << 20, 99, false);
+    let raw_enc = RawStashCodec.encode(&big, &raw_meta);
+    let raw_seqs: Vec<ChunkSeq> = raw_enc
+        .streams
+        .iter()
+        .map(|(w, bits)| arena.store(w, *bits))
+        .collect();
+    let b = Bench::new("stash_decode").with_epochs(7);
+    let r_mat = b.run("materialized_raw", big.len() as f64, || {
+        let streams: Vec<(Vec<u64>, usize)> = raw_seqs
+            .iter()
+            .map(|s| (arena.load(s), s.len_bits))
+            .collect();
+        let enc = EncodedStreams {
+            count: raw_enc.count,
+            streams,
+            bits: raw_enc.bits,
+        };
+        black_box(RawStashCodec.decode(&enc, &raw_meta));
+    });
+    let r_zc = b.run("zero_copy_raw", big.len() as f64, || {
+        let pins: Vec<_> = raw_seqs.iter().map(|s| arena.pin(s)).collect();
+        let segs: Vec<Vec<&[u64]>> = pins.iter().map(|p| p.segs()).collect();
+        let mut readers: Vec<SegReader> = segs
+            .iter()
+            .zip(&pins)
+            .map(|(s, p)| SegReader::new(s, p.len_bits))
+            .collect();
+        black_box(RawStashCodec.decode_view(raw_enc.count, &mut readers, &raw_meta));
+    });
+    let decode_speedup = r_mat.min_ns / r_zc.min_ns;
+    println!(
+        "decode_zero_copy_speedup: {decode_speedup:.2}x over the materialized baseline (gate: >= 1x)"
+    );
+    let decode_gate_failed = decode_speedup < 1.0;
+
+    let gecko_enc = GeckoStashCodec.encode_chunked(&data[0], &meta, 16 * 1024);
+    let gecko_seqs: Vec<ChunkSeq> = gecko_enc
+        .streams
+        .iter()
+        .map(|(w, bits)| arena.store(w, *bits))
+        .collect();
+    b.run("materialized_gecko", vals_per_tensor as f64, || {
+        let streams: Vec<(Vec<u64>, usize)> = gecko_seqs
+            .iter()
+            .map(|s| (arena.load(s), s.len_bits))
+            .collect();
+        let enc = EncodedStreams {
+            count: gecko_enc.count,
+            streams,
+            bits: gecko_enc.bits,
+        };
+        black_box(GeckoStashCodec.decode(&enc, &meta));
+    });
+    b.run("zero_copy_gecko", vals_per_tensor as f64, || {
+        let pins: Vec<_> = gecko_seqs.iter().map(|s| arena.pin(s)).collect();
+        let segs: Vec<Vec<&[u64]>> = pins.iter().map(|p| p.segs()).collect();
+        let mut readers: Vec<SegReader> = segs
+            .iter()
+            .zip(&pins)
+            .map(|(s, p)| SegReader::new(s, p.len_bits))
+            .collect();
+        black_box(GeckoStashCodec.decode_view(gecko_enc.count, &mut readers, &meta));
+    });
+
     // --- full round-trip: put + flush + parallel take -------------------
     let b = Bench::new("stash_roundtrip").with_epochs(5);
     let stash = Stash::new(StashConfig {
@@ -73,6 +152,7 @@ fn main() {
         threads,
         queue_depth: 2 * threads,
         chunk_values: 16 * 1024,
+        budget_bytes: 0,
     });
     let ids: Vec<TensorId> = (0..data.len()).map(TensorId::act).collect();
     b.run("put_flush_take_all", total, || {
@@ -103,6 +183,7 @@ fn main() {
         threads,
         queue_depth: 2 * threads,
         chunk_values: 16 * 1024,
+        budget_bytes: 0,
     });
     let t0 = Instant::now();
     let steps = 20;
@@ -128,6 +209,11 @@ fn main() {
 
     if gate_failed {
         eprintln!("FAIL: pool encode speedup below the 2x acceptance gate");
+    }
+    if decode_gate_failed {
+        eprintln!("FAIL: zero-copy decode slower than the materialized restore baseline");
+    }
+    if gate_failed || decode_gate_failed {
         std::process::exit(1);
     }
 }

@@ -11,6 +11,13 @@
 //! from the compiled step, exponent-range stats of the stashed tensors)
 //! and applies the returned plans; the compiled step only exposes knobs
 //! (`n_w`, `n_a`, `lr_n`, `gamma`, `stochastic`, `mmax`).
+//!
+//! The stash round-trip is double-buffered: step N's encodes and step
+//! N−1's restore-prefetch (queued via [`Stash::take_deferred`]) both run
+//! on the stash worker pool *while* step N's compiled call executes, so
+//! encode/decode latency hides behind compute; the post-call barrier
+//! verifies the prefetched restores bit-exact, and epoch boundaries drain
+//! the pipeline so ledger cuts stay step-aligned.
 
 use super::data::{init_params, DataGen};
 use super::metrics::{CsvSink, Summary};
@@ -20,7 +27,9 @@ use crate::policy::{
     QuantumMantissa, StepSignals,
 };
 use crate::runtime::{HostTensor, Runtime};
-use crate::stash::{ContainerMeta, EpochTraffic, LedgerSnapshot, Stash, StashConfig, TensorId};
+use crate::stash::{
+    ContainerMeta, EpochTraffic, LedgerSnapshot, RestoreTicket, Stash, StashConfig, TensorId,
+};
 use crate::stats::{BitlengthHistogram, ComponentBits, ExpRangeStats, Footprint};
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
@@ -192,12 +201,22 @@ pub struct RunResult {
 }
 
 /// Sources and metadata of one step's stashed tensors, held across the
-/// fused step call for post-restore verification.
+/// double-buffered pipeline (stashed during step N, restore-prefetched
+/// while step N+1's compiled call runs) for post-restore verification.
 struct StashedStep {
     acts: Vec<HostTensor>,
     ws: Vec<HostTensor>,
     meta_a: Vec<ContainerMeta>,
     meta_w: Vec<ContainerMeta>,
+}
+
+impl StashedStep {
+    fn ids(&self) -> Vec<TensorId> {
+        (0..self.acts.len())
+            .map(TensorId::act)
+            .chain((0..self.ws.len()).map(TensorId::weight))
+            .collect()
+    }
 }
 
 pub struct Trainer<'rt> {
@@ -222,6 +241,9 @@ pub struct Trainer<'rt> {
     lr: f32,
     step: i32,
     stash: Option<Stash>,
+    /// Previous step's stashed tensors, encoded and visible but not yet
+    /// restored — the in-flight half of the double buffer.
+    pending: Option<StashedStep>,
 }
 
 impl<'rt> Trainer<'rt> {
@@ -257,6 +279,7 @@ impl<'rt> Trainer<'rt> {
             lr: cfg.lr0,
             step: 0,
             stash: cfg.stash.map(Stash::new),
+            pending: None,
             cfg,
         }
     }
@@ -286,8 +309,14 @@ impl<'rt> Trainer<'rt> {
     ) -> Result<(f64, Vec<i32>, Vec<i32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
         let (lr_n, gamma, stochastic) = self.policy.step_hyper(epoch);
         self.apply_plan();
-        // Stash this step's post-forward tensors (pre-update weights, this
-        // step's batch and bitlengths) before the fused step runs them.
+        // Double-buffered stash pipeline: queue the *previous* step's
+        // restore-prefetch first (its entries leave the stash now, so this
+        // step's puts under the same ids can't race it), then queue this
+        // step's encodes — both directions run on the worker pool while
+        // the compiled step below executes, hiding stash latency behind
+        // compute.  The barrier + bit-exact verification happen after the
+        // step returns.
+        let prefetch = self.stash_begin_restore();
         let stashed = self.stash_put_prestep()?;
         let l = self.rt.manifest.num_layers();
         let (x, y) = self.gen.batch(0, self.step as u64);
@@ -343,9 +372,18 @@ impl<'rt> Trainer<'rt> {
             weight_stats: &self.stats_w,
         });
         self.step += 1;
-        if let Some(stashed) = stashed {
-            self.stash_restore(stashed)?;
+        // Pipeline barrier: wait for this step's encodes and the previous
+        // step's prefetched decodes, then verify the restores bit-exact.
+        if let Some(stash) = &self.stash {
+            stash.flush();
+            if stash.failures() > 0 {
+                return Err(anyhow!("stash worker failed"));
+            }
         }
+        if let Some((prev, ticket)) = prefetch {
+            Self::verify_restored(&prev, &ticket.collect())?;
+        }
+        self.pending = stashed;
         Ok((task_loss, n_used_w, n_used_a, a_gecko, w_gecko, zfrac))
     }
 
@@ -413,10 +451,8 @@ impl<'rt> Trainer<'rt> {
         for (i, w) in self.ws.iter().enumerate() {
             stash.put(TensorId::weight(i), w.as_f32()?.to_vec(), meta_w[i]);
         }
-        stash.flush();
-        if stash.failures() > 0 {
-            return Err(anyhow!("stash encode worker failed"));
-        }
+        // No flush here: the encodes drain on the pool while the compiled
+        // step runs; train_step's post-call barrier syncs and verifies.
         Ok(Some(StashedStep {
             acts,
             ws: self.ws.clone(),
@@ -425,22 +461,40 @@ impl<'rt> Trainer<'rt> {
         }))
     }
 
-    /// Second half: after the fused step (which recomputes its own copies),
-    /// restore the stashed tensors as the backward would, charging the
-    /// ledger's read traffic.  Restores are spot-checked bit-exact against
-    /// the quantized sources (full scan in debug builds; strided sample in
-    /// release so the check stays off the critical path — the exhaustive
-    /// guarantee lives in the codec property tests).
-    fn stash_restore(&self, stashed: StashedStep) -> Result<()> {
+    /// Start the previous step's restore-prefetch: its entries leave the
+    /// stash synchronously and the decode jobs queue on the worker pool,
+    /// overlapping the compiled step that runs next.
+    fn stash_begin_restore(&mut self) -> Option<(StashedStep, RestoreTicket)> {
+        let prev = self.pending.take()?;
+        let stash = self.stash.as_ref()?;
+        let ticket = stash.take_deferred(&prev.ids());
+        Some((prev, ticket))
+    }
+
+    /// Drain the double-buffered pipeline: restore and verify the last
+    /// in-flight step's tensors (epoch boundaries and run end, so epoch
+    /// ledger cuts and evaluation never see a half-finished step).
+    fn stash_drain(&mut self) -> Result<()> {
+        let Some(prev) = self.pending.take() else {
+            return Ok(());
+        };
         let Some(stash) = &self.stash else {
             return Ok(());
         };
+        let restored = stash.take_all(&prev.ids());
+        if stash.failures() > 0 {
+            return Err(anyhow!("stash restore worker failed"));
+        }
+        Self::verify_restored(&prev, &restored)
+    }
+
+    /// Verify restored tensors against the quantized sources, as the
+    /// backward would consume them.  Restores are spot-checked bit-exact
+    /// (full scan in debug builds; strided sample in release so the check
+    /// stays off the critical path — the exhaustive guarantee lives in the
+    /// codec property tests).
+    fn verify_restored(stashed: &StashedStep, restored: &[Option<Vec<f32>>]) -> Result<()> {
         let l = stashed.acts.len();
-        let ids: Vec<TensorId> = (0..l)
-            .map(TensorId::act)
-            .chain((0..stashed.ws.len()).map(TensorId::weight))
-            .collect();
-        let restored = stash.take_all(&ids);
         for (k, back) in restored.iter().enumerate() {
             let back = back
                 .as_ref()
@@ -690,6 +744,9 @@ impl<'rt> Trainer<'rt> {
                 }
             }
 
+            // Epoch boundary: drain the in-flight stash step so the
+            // ledger's epoch cut and the evaluation see a settled stash.
+            self.stash_drain()?;
             let (val_acc, val_loss) = self.evaluate()?;
             let steps = self.cfg.steps_per_epoch as f64;
             let lam_a = &self.rt.manifest.lambda_a;
@@ -758,7 +815,11 @@ impl<'rt> Trainer<'rt> {
                 s.num("stash_written_bits", ls.written_bits)
                     .num("stash_read_bits", ls.read_bits)
                     .num("stash_peak_resident_bits", ls.peak_resident_bits)
-                    .num("stash_ratio_vs_fp32", ls.ratio_vs_fp32());
+                    .num("stash_ratio_vs_fp32", ls.ratio_vs_fp32())
+                    .num("stash_spill_written_bits", ls.spill_written_bits)
+                    .num("stash_spill_read_bits", ls.spill_read_bits)
+                    .num("stash_evictions", ls.evictions as f64)
+                    .num("stash_faults", ls.faults as f64);
             }
             s.write(&dir.join(format!("{label}_summary.json")))?;
         }

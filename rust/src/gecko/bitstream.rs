@@ -187,6 +187,110 @@ fn mask(n: u32) -> u64 {
     }
 }
 
+/// Sequential MSB-first reader over a bit stream stored as a *run of word
+/// segments* — the zero-copy restore path: arena chunk runs are read in
+/// place instead of being materialized into one contiguous `Vec<u64>`.
+///
+/// Words are pulled through a 64-bit staging accumulator, so the hot
+/// `read` has no per-call word-index arithmetic; crossing a segment
+/// boundary costs one slice advance.  `SegReader::single` degenerates to
+/// the contiguous case, which is how the materialized decode paths now
+/// run too (one reader implementation, property-tested against
+/// [`BitReader`]).
+pub struct SegReader<'a> {
+    /// Words of the current segment not yet pulled into the accumulator.
+    cur: &'a [u64],
+    /// Segments after `cur`.
+    rest: &'a [&'a [u64]],
+    /// Staging bits, MSB-aligned: the top `have` bits are the next bits.
+    acc: u64,
+    have: u32,
+    pos: usize,
+    len: usize,
+}
+
+impl<'a> SegReader<'a> {
+    /// Reader over `len_bits` bits spread across `segs` in order.  Every
+    /// segment may have any length; together they must hold at least
+    /// `len_bits.div_ceil(64)` words.
+    pub fn new(segs: &'a [&'a [u64]], len_bits: usize) -> Self {
+        debug_assert!(len_bits.div_ceil(64) <= segs.iter().map(|s| s.len()).sum::<usize>());
+        let (cur, rest): (&[u64], &[&[u64]]) = match segs.split_first() {
+            Some((first, rest)) => (*first, rest),
+            None => (&[], &[]),
+        };
+        Self {
+            cur,
+            rest,
+            acc: 0,
+            have: 0,
+            pos: 0,
+            len: len_bits,
+        }
+    }
+
+    /// Reader over one contiguous word slice (the single-segment case).
+    pub fn single(words: &'a [u64], len_bits: usize) -> Self {
+        Self {
+            cur: words,
+            rest: &[],
+            acc: 0,
+            have: 0,
+            pos: 0,
+            len: len_bits,
+        }
+    }
+
+    #[inline]
+    fn fetch(&mut self) -> u64 {
+        while self.cur.is_empty() {
+            let (first, rest) = self.rest.split_first().expect("bitstream overrun");
+            self.cur = *first;
+            self.rest = rest;
+        }
+        let w = self.cur[0];
+        self.cur = &self.cur[1..];
+        w
+    }
+
+    /// Read the next `n` bits (MSB-first, n <= 57 like [`BitReader`]);
+    /// panics past the declared length in debug builds.
+    #[inline]
+    pub fn read(&mut self, n: u32) -> u64 {
+        debug_assert!(n <= 57);
+        debug_assert!(self.pos + n as usize <= self.len, "bitstream overrun");
+        if n == 0 {
+            return 0;
+        }
+        self.pos += n as usize;
+        if self.have >= n {
+            let out = self.acc >> (64 - n);
+            self.acc <<= n;
+            self.have -= n;
+            return out;
+        }
+        // Split read: top `have` bits from the accumulator, the rest from
+        // the next word.  `lo` is in 1..=57 so every shift below is < 64.
+        let hi_bits = self.have;
+        let hi = if hi_bits == 0 {
+            0
+        } else {
+            self.acc >> (64 - hi_bits)
+        };
+        let w = self.fetch();
+        let lo = n - hi_bits;
+        let out = (hi << lo) | (w >> (64 - lo));
+        self.acc = w << lo;
+        self.have = 64 - lo;
+        out
+    }
+
+    /// Bits remaining.
+    pub fn remaining(&self) -> usize {
+        self.len - self.pos
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -317,5 +421,70 @@ mod tests {
         let mut r = BitReader::new(&words, len);
         assert_eq!(r.read(57), (1u64 << 57) - 1);
         assert_eq!(r.read(10), 0x3FF);
+    }
+
+    #[test]
+    fn seg_reader_single_matches_bit_reader() {
+        let fields = pseudo_fields(400);
+        let mut w = BitWriter::new();
+        for &(v, n) in &fields {
+            w.push(v, n);
+        }
+        let (words, len) = w.into_words();
+        let mut a = BitReader::new(&words, len);
+        let mut b = SegReader::single(&words, len);
+        for &(_, n) in &fields {
+            assert_eq!(a.read(n), b.read(n), "width {n}");
+        }
+        assert_eq!(b.remaining(), 0);
+    }
+
+    #[test]
+    fn seg_reader_across_segment_splits() {
+        // Any word-granular split of the stream (the arena's chunk
+        // boundaries are word-aligned) must read back identically,
+        // including splits that land inside a multi-word field read.
+        let fields = pseudo_fields(600);
+        let mut w = BitWriter::new();
+        for &(v, n) in &fields {
+            w.push(v, n);
+        }
+        let (words, len) = w.into_words();
+        for split in [0usize, 1, 2, 7, 64, 100, words.len()] {
+            let split = split.min(words.len());
+            let segs: Vec<&[u64]> = vec![&words[..split], &words[split..]];
+            let mut r = SegReader::new(&segs, len);
+            for &(v, n) in &fields {
+                assert_eq!(r.read(n), v, "split {split} width {n}");
+            }
+            assert_eq!(r.remaining(), 0);
+        }
+    }
+
+    #[test]
+    fn seg_reader_many_small_segments() {
+        let fields = pseudo_fields(300);
+        let mut w = BitWriter::new();
+        for &(v, n) in &fields {
+            w.push(v, n);
+        }
+        let (words, len) = w.into_words();
+        // 1-word segments plus an interleaved empty segment
+        let mut segs: Vec<&[u64]> = Vec::new();
+        for chunk in words.chunks(1) {
+            segs.push(chunk);
+            segs.push(&[]);
+        }
+        let mut r = SegReader::new(&segs, len);
+        for &(v, n) in &fields {
+            assert_eq!(r.read(n), v, "width {n}");
+        }
+    }
+
+    #[test]
+    fn seg_reader_empty_stream() {
+        let mut r = SegReader::new(&[], 0);
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(r.read(0), 0);
     }
 }

@@ -22,7 +22,7 @@
 
 pub mod bitstream;
 
-pub use bitstream::{BitReader, BitWriter};
+pub use bitstream::{BitReader, BitWriter, SegReader};
 
 use crate::formats::mag_width;
 
@@ -93,9 +93,23 @@ pub fn encode(exps: &[u8], mode: Mode) -> Encoded {
 
 /// Decode an [`Encoded`] stream back to exponent bytes (exactly `count`).
 pub fn decode(enc: &Encoded, mode: Mode) -> Vec<u8> {
+    let mut payload = SegReader::single(&enc.payload, enc.payload_bits);
+    let mut metadata = SegReader::single(&enc.metadata, enc.metadata_bits);
+    decode_readers(&mut payload, &mut metadata, enc.count, mode)
+}
+
+/// Decode `count` exponents from already-positioned payload/metadata
+/// readers — the zero-copy restore path (the readers may span arena chunk
+/// segments; [`decode`] is this over single-segment readers).
+pub fn decode_readers(
+    payload: &mut SegReader,
+    metadata: &mut SegReader,
+    count: usize,
+    mode: Mode,
+) -> Vec<u8> {
     match mode {
-        Mode::Delta => decode_delta(enc),
-        Mode::FixedBias { bias, group } => decode_fixed(enc, bias, group),
+        Mode::Delta => decode_delta(payload, metadata, count),
+        Mode::FixedBias { bias, group } => decode_fixed(payload, metadata, count, bias, group),
     }
 }
 
@@ -157,10 +171,8 @@ fn encode_delta(exps: &[u8]) -> Encoded {
     }
 }
 
-fn decode_delta(enc: &Encoded) -> Vec<u8> {
-    let mut payload = BitReader::new(&enc.payload, enc.payload_bits);
-    let mut metadata = BitReader::new(&enc.metadata, enc.metadata_bits);
-    let padded_len = enc.count.div_ceil(GROUP) * GROUP;
+fn decode_delta(payload: &mut SegReader, metadata: &mut SegReader, count: usize) -> Vec<u8> {
+    let padded_len = count.div_ceil(GROUP) * GROUP;
     let mut out = Vec::with_capacity(padded_len);
 
     let groups = padded_len / GROUP;
@@ -187,7 +199,7 @@ fn decode_delta(enc: &Encoded) -> Vec<u8> {
             }
         }
     }
-    out.truncate(enc.count);
+    out.truncate(count);
     out
 }
 
@@ -228,10 +240,14 @@ fn encode_fixed(exps: &[u8], bias: u8, group: usize) -> Encoded {
     }
 }
 
-fn decode_fixed(enc: &Encoded, bias: u8, group: usize) -> Vec<u8> {
-    let mut payload = BitReader::new(&enc.payload, enc.payload_bits);
-    let mut metadata = BitReader::new(&enc.metadata, enc.metadata_bits);
-    let padded_len = enc.count.div_ceil(group) * group;
+fn decode_fixed(
+    payload: &mut SegReader,
+    metadata: &mut SegReader,
+    count: usize,
+    bias: u8,
+    group: usize,
+) -> Vec<u8> {
+    let padded_len = count.div_ceil(group) * group;
     let mut out = Vec::with_capacity(padded_len);
     for _ in 0..padded_len / group {
         let w = metadata.read(WIDTH_FIELD_BITS) as u32;
@@ -246,7 +262,7 @@ fn decode_fixed(enc: &Encoded, bias: u8, group: usize) -> Vec<u8> {
             }
         }
     }
-    out.truncate(enc.count);
+    out.truncate(count);
     out
 }
 

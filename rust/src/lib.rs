@@ -27,10 +27,17 @@
 //! +Gecko footprint ordering.
 //!
 //! The stash layer ([`stash`]) is the memory path the paper's claims hinge
-//! on: tensors are encoded by a bounded worker pool into a chunk-recycling
-//! arena under per-tensor container metadata, and its ledger reports the
-//! *actually stored* bytes — cross-checked against the analytic
-//! [`report::footprint`] models (`repro stash`), split per epoch for the
+//! on: tensors are encoded by a bounded worker pool into a *tiered*
+//! chunk-recycling arena (a DRAM tier plus a budget-driven file-backed
+//! spill tier for cold chunk runs) under per-tensor container metadata,
+//! and restored zero-copy — decoders read pinned arena chunks in place
+//! through segmented bit readers instead of materialized stream copies.
+//! The Trainer double-buffers the round-trip: encodes and the previous
+//! step's restore-prefetch overlap the compiled step on the worker pool.
+//! The ledger reports the *actually stored* bytes split into DRAM and
+//! spill traffic — cross-checked against the analytic
+//! [`report::footprint`] models (`repro stash`, with `--budget-bytes` as
+//! a spill sweep axis), cut atomically per epoch for the
 //! footprint-over-time reports, and fed to [`hwsim`]'s DRAM model.
 //!
 //! Python never runs on the request path: `make artifacts` lowers the model

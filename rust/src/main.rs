@@ -30,6 +30,8 @@ use sfp::stash::{CodecKind, ContainerMeta, Stash, StashConfig, TensorId};
 use sfp::stats::ExponentHistogram;
 use sfp::traces::{mobilenet_v3_small, resnet18, values_with_exponents, NetworkTrace, ValueModel};
 use sfp::util::cli::Args;
+use sfp::util::json::Json;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
@@ -72,12 +74,14 @@ fn print_help() {
          train     --variant fp32|bf16|qm|bc|qmqe|bw [--container bf16|fp32]\n\
          \u{20}         [--epochs N] [--steps N] [--out DIR] [--artifacts DIR]\n\
          \u{20}         [--stash gecko|sfp|raw] (store real compressed tensors per step)\n\
+         \u{20}         [--budget-bytes N] (arena DRAM budget; cold chunks spill to disk)\n\
          table1    print Table I footprint columns (trace models)\n\
          table2    print Table II perf/energy (hwsim) [--batch N] [--source model|stash]\n\
          fig       --id 2|3|4|6|7|8|9|10|12|13 [--out DIR] [--source trace|e2e]\n\
          compress  codec demo [--count N] [--mantissa N]\n\
          stash     --model resnet18|mobilenet [--policy qm|bc|full] [--codec gecko|sfp|raw]\n\
          \u{20}         [--batch N] [--threads N] [--queue N] [--chunk-values N]\n\
+         \u{20}         [--budget-bytes N[,N...]] (spill-tier sweep axis; JSON in <out>)\n\
          policy    --model resnet18|mobilenet|all [--policy qmqe|bitwave|qm|all]\n\
          \u{20}         [--epochs N] [--steps N] [--batch N] [--sample N] [--out DIR]\n\
          \u{20}         [--verify-restore] (check mid-run checkpoint/restore continuity)\n\
@@ -114,6 +118,7 @@ fn train_cfg(args: &Args, variant: Variant) -> Result<TrainConfig> {
             threads: args.get_usize("threads", 0),
             queue_depth: args.get_usize("queue", 0),
             chunk_values: args.get_usize("chunk-values", 0),
+            budget_bytes: args.get_usize("budget-bytes", 0),
         }),
     };
     Ok(TrainConfig {
@@ -359,7 +364,38 @@ fn stash_net(args: &Args) -> Result<NetworkTrace> {
 /// footprint model sizes Gecko on), report measured stored bytes scaled to
 /// full tensor size against the analytic numbers, verify bit-exact
 /// restore, and feed the measured bits to the hwsim DRAM model.
+/// `--budget-bytes N[,N...]` adds the spill tier as a sweep axis; every
+/// run lands as a row in `<out>/stash_sweep.json` with the
+/// resident/spill byte split and eviction/fault counts.
 fn cmd_stash(args: &Args) -> Result<()> {
+    let budgets: Vec<usize> = match args.get("budget-bytes") {
+        None => vec![0],
+        Some(s) => {
+            let mut v = Vec::new();
+            for tok in s.split(',') {
+                v.push(tok.trim().parse::<usize>().map_err(|_| {
+                    anyhow!("bad --budget-bytes entry '{tok}' (comma-separated bytes; 0 = unlimited)")
+                })?);
+            }
+            v
+        }
+    };
+    let verbose = budgets.len() == 1;
+    let mut rows = Vec::new();
+    for &budget in &budgets {
+        rows.push(stash_run(args, budget, verbose)?);
+    }
+    let dir = out_dir(args);
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("stash_sweep.json");
+    std::fs::write(&path, Json::Arr(rows).to_string())?;
+    println!("stash sweep JSON -> {}", path.display());
+    Ok(())
+}
+
+/// One stash measurement run at a fixed arena budget (0 = unlimited);
+/// returns the JSON row for the sweep output.
+fn stash_run(args: &Args, budget: usize, verbose: bool) -> Result<Json> {
     let container = container_of(args);
     let net = stash_net(args)?;
     let policy_name = args.get_or("policy", "qm");
@@ -377,6 +413,7 @@ fn cmd_stash(args: &Args) -> Result<()> {
         threads: args.get_usize("threads", 0),
         queue_depth: args.get_usize("queue", 0),
         chunk_values: args.get_usize("chunk-values", 0),
+        budget_bytes: budget,
     });
 
     let n_layers = net.layers.len();
@@ -394,14 +431,21 @@ fn cmd_stash(args: &Args) -> Result<()> {
     };
 
     println!(
-        "Stash sweep — {} @ batch {batch}, policy {policy_name}, codec {}, container {container}, {} worker threads",
+        "Stash sweep — {} @ batch {batch}, policy {policy_name}, codec {}, container {container}, {} worker threads, budget {}",
         net.name,
         stash.codec_name(),
         stash.threads(),
+        if budget == 0 {
+            "unlimited".to_string()
+        } else {
+            format!("{:.2} MB", budget as f64 / 1e6)
+        },
     );
-    println!(
-        "(each tensor stashed as a {SAMPLE}-value sampled stream; reported MB scale to full tensor size)"
-    );
+    if verbose {
+        println!(
+            "(each tensor stashed as a {SAMPLE}-value sampled stream; reported MB scale to full tensor size)"
+        );
+    }
 
     // One sampled stream per tensor, sharing the analytic model's exponent
     // streams (seeds mirror FootprintModel::layer) so measured == analytic
@@ -448,10 +492,12 @@ fn cmd_stash(args: &Args) -> Result<()> {
 
     // --- stored bytes vs the analytic footprint model --------------------
     let mb = |bits: f64| bits / 8e6;
-    println!(
-        "\n{:<18} {:>4} {:>4} {:>12} {:>12} {:>9}",
-        "layer", "n_a", "n_w", "stash MB", "analytic MB", "delta %"
-    );
+    if verbose {
+        println!(
+            "\n{:<18} {:>4} {:>4} {:>12} {:>12} {:>9}",
+            "layer", "n_a", "n_w", "stash MB", "analytic MB", "delta %"
+        );
+    }
     let mut measured_bits = Vec::with_capacity(n_layers);
     let mut stash_total = 0.0;
     let mut analytic_total = 0.0;
@@ -474,15 +520,17 @@ fn cmd_stash(args: &Args) -> Result<()> {
         });
         stash_total += measured;
         analytic_total += expected;
-        println!(
-            "{:<18} {:>4} {:>4} {:>12.2} {:>12.2} {:>8.3}%",
-            l.name,
-            sched[i].0,
-            sched[i].1,
-            mb(measured),
-            mb(expected),
-            100.0 * (measured - expected) / expected,
-        );
+        if verbose {
+            println!(
+                "{:<18} {:>4} {:>4} {:>12.2} {:>12.2} {:>8.3}%",
+                l.name,
+                sched[i].0,
+                sched[i].1,
+                mb(measured),
+                mb(expected),
+                100.0 * (measured - expected) / expected,
+            );
+        }
     }
     let fp32_total = FootprintModel::fp32().network(&net, batch).total();
     let delta = 100.0 * (stash_total - analytic_total).abs() / analytic_total;
@@ -521,6 +569,29 @@ fn cmd_stash(args: &Args) -> Result<()> {
         restored.len(),
         streams.len()
     );
+
+    // --- spill tier: resident/spill byte split + eviction counts ---------
+    let snap = stash.ledger();
+    let dram_peak = stash.arena_high_water_bytes();
+    let spill_peak = stash.arena_spill_high_water_bytes();
+    if budget > 0 {
+        println!(
+            "spill: DRAM peak {:.2} MB / spill peak {:.2} MB; evicted {:.2} MB ({} chunks), faulted {:.2} MB ({} chunks)",
+            dram_peak as f64 / 1e6,
+            spill_peak as f64 / 1e6,
+            snap.spill_written_bits / 8e6,
+            snap.evictions,
+            snap.spill_read_bits / 8e6,
+            snap.faults,
+        );
+        // a budget below what the run needs resident MUST engage the tier
+        if snap.evictions == 0 && dram_peak + spill_peak > budget {
+            return Err(anyhow!(
+                "budget {budget} B is below the {}-B working set but the spill tier never engaged",
+                dram_peak + spill_peak
+            ));
+        }
+    }
 
     // --- throughput + arena + hwsim --------------------------------------
     let mvals = total_vals as f64 / 1e6;
@@ -561,7 +632,29 @@ fn cmd_stash(args: &Args) -> Result<()> {
         "hwsim on measured stash bytes: {speed:.2}x speedup, {energy:.2}x energy vs FP32 (DRAM traffic {:.1}%)",
         100.0 * ours.dram_bits / base.dram_bits,
     );
-    Ok(())
+
+    let mut row = BTreeMap::new();
+    let mut put = |k: &str, v: Json| {
+        row.insert(k.to_string(), v);
+    };
+    put("model", Json::Str(net.name.clone()));
+    put("codec", Json::Str(stash.codec_name().to_string()));
+    put("policy", Json::Str(policy_name.clone()));
+    put("batch", Json::Num(batch as f64));
+    put("budget_bytes", Json::Num(budget as f64));
+    put("stash_mb", Json::Num(mb(stash_total)));
+    put("analytic_mb", Json::Num(mb(analytic_total)));
+    put("frac_of_fp32", Json::Num(stash_total / fp32_total));
+    put("dram_peak_bytes", Json::Num(dram_peak as f64));
+    put("spill_peak_bytes", Json::Num(spill_peak as f64));
+    put("spill_written_bytes", Json::Num(snap.spill_written_bits / 8.0));
+    put("spill_read_bytes", Json::Num(snap.spill_read_bits / 8.0));
+    put("evictions", Json::Num(snap.evictions as f64));
+    put("faults", Json::Num(snap.faults as f64));
+    put("encode_pool_mvals_s", Json::Num(mvals / t_pool));
+    put("decode_mvals_s", Json::Num(mvals / t_restore));
+    put("restore_bit_exact", Json::Bool(true));
+    Ok(Json::Obj(row))
 }
 
 /// Adaptation-policy sweep over the trace models through the unified

@@ -91,7 +91,16 @@ pub fn fig8_bc_histogram(path: &Path, bc: &RunResult) -> Result<()> {
 pub fn footprint_over_time(path: &Path, run: &RunResult) -> Result<()> {
     let mut csv = CsvSink::create(
         path,
-        &["epoch", "written_mb", "read_mb", "ratio_vs_fp32", "mean_bits_a", "mean_exp_bits_a"],
+        &[
+            "epoch",
+            "written_mb",
+            "read_mb",
+            "spill_written_mb",
+            "spill_read_mb",
+            "ratio_vs_fp32",
+            "mean_bits_a",
+            "mean_exp_bits_a",
+        ],
     )?;
     for (i, e) in run.stash_epochs.iter().enumerate() {
         let (bits, exp) = run
@@ -103,6 +112,8 @@ pub fn footprint_over_time(path: &Path, run: &RunResult) -> Result<()> {
             i as f64,
             e.written_bits / 8e6,
             e.read_bits / 8e6,
+            e.spill_written_bits / 8e6,
+            e.spill_read_bits / 8e6,
             e.ratio_vs_fp32(),
             bits,
             exp,
@@ -257,6 +268,7 @@ mod tests {
                 written_bits: 8e6 * (3.0 - i as f64),
                 read_bits: 8e6 * (3.0 - i as f64),
                 written_fp32_bits: 32e6,
+                ..Default::default()
             });
             run.epochs.push(EpochStats {
                 epoch: i,

@@ -25,7 +25,7 @@
 //! truncated (property-tested in `rust/tests/props.rs`).
 
 use crate::formats::{mag_width, Container, F32_MANT_BITS};
-use crate::gecko::{BitReader, BitWriter, RAW_ESCAPE, WIDTH_FIELD_BITS};
+use crate::gecko::{BitWriter, SegReader, RAW_ESCAPE, WIDTH_FIELD_BITS};
 
 /// Values per hardware row (= packer lanes).
 pub const LANES: usize = 8;
@@ -42,6 +42,12 @@ pub struct SfpCodec {
     pub container: Container,
     /// Elide the value sign bit (post-ReLU tensors are non-negative, §IV-D).
     pub elide_sign: bool,
+    /// Learned per-tensor exponent bias register (Quantum Exponent).  When
+    /// set, *every* row — including row 0 — stores sign/magnitude deltas
+    /// against this register at a shared per-row width, instead of raw
+    /// 8-bit row-0 column bases; the raw escape keeps the layout lossless
+    /// over the full exponent range.  `None` = the §V row-0-base layout.
+    pub bias: Option<u8>,
 }
 
 /// A compressed tensor: payload + width metadata streams and bookkeeping
@@ -75,7 +81,14 @@ impl SfpCodec {
         Self {
             container,
             elide_sign,
+            bias: None,
         }
+    }
+
+    /// Use a learned exponent bias register (see [`SfpCodec::bias`]).
+    pub fn with_bias(mut self, bias: Option<u8>) -> Self {
+        self.bias = bias;
+        self
     }
 
     /// Compress `vals` with `n` mantissa bits per value (the external
@@ -111,6 +124,45 @@ impl SfpCodec {
         // word (≤ 32 bits) instead of three pushes — the bitstream layout
         // is identical, the per-value call overhead is 3× lower.
         for g in padded.chunks_exact(GROUP) {
+            if let Some(bias) = self.bias {
+                // Bias-register layout: all 8 rows delta against the
+                // learned per-tensor register at a shared per-row width
+                // (no raw row-0 bases), so Quantum Exponent's narrowing
+                // reaches the hardware stream too.
+                for r in 0..ROWS {
+                    let row = &g[r * LANES..(r + 1) * LANES];
+                    let w = row
+                        .iter()
+                        .map(|&v| {
+                            let e = ((v.to_bits() >> 23) & 0xFF) as i32;
+                            mag_width((e - bias as i32).unsigned_abs())
+                        })
+                        .max()
+                        .unwrap();
+                    let (code, raw) = if w <= 6 { (w, false) } else { (RAW_ESCAPE, true) };
+                    metadata.push(code as u64, WIDTH_FIELD_BITS + 1);
+                    for &v in row {
+                        let b = v.to_bits();
+                        let e = ((b >> 23) & 0xFF) as i32;
+                        let mant = self.top_mantissa(b, n) as u64;
+                        let (exp_field, exp_bits) = if raw {
+                            (e as u64, 8)
+                        } else {
+                            let d = e - bias as i32;
+                            ((((d < 0) as u64) << w) | d.unsigned_abs() as u64, w + 1)
+                        };
+                        if self.elide_sign {
+                            payload.push((exp_field << n) | mant, exp_bits + n);
+                        } else {
+                            let word = (((b >> 31) as u64) << (exp_bits + n))
+                                | (exp_field << n)
+                                | mant;
+                            payload.push(word, 1 + exp_bits + n);
+                        }
+                    }
+                }
+                continue;
+            }
             let mut bases = [0u32; LANES];
             // Row 0: raw exponents become the column bases.
             for (c, &v) in g[..LANES].iter().enumerate() {
@@ -182,16 +234,53 @@ impl SfpCodec {
     /// Decompress back into container-format values (trimmed mantissa bits
     /// return as zeros, signs return as + when elided).
     pub fn decompress(&self, c: &Compressed) -> Vec<f32> {
-        let n = c.mant_bits;
-        let mut payload = BitReader::new(&c.payload, c.payload_bits);
-        let mut metadata = BitReader::new(&c.metadata, c.metadata_bits);
-        let padded_len = c.count.div_ceil(GROUP) * GROUP;
+        let mut payload = SegReader::single(&c.payload, c.payload_bits);
+        let mut metadata = SegReader::single(&c.metadata, c.metadata_bits);
+        self.decompress_readers(&mut payload, &mut metadata, c.count, c.mant_bits)
+    }
+
+    /// [`SfpCodec::decompress`] from already-positioned payload/metadata
+    /// readers — the zero-copy restore path (the readers may span arena
+    /// chunk segments).
+    pub fn decompress_readers(
+        &self,
+        payload: &mut SegReader,
+        metadata: &mut SegReader,
+        count: usize,
+        n: u32,
+    ) -> Vec<f32> {
+        let padded_len = count.div_ceil(GROUP) * GROUP;
         let mut out = Vec::with_capacity(padded_len);
 
         // Mirror of the fused-write layout: one read per value, fields
         // split with shifts (perf §Perf).
         let sign_bits = u32::from(!self.elide_sign);
         for _ in 0..padded_len / GROUP {
+            if let Some(bias) = self.bias {
+                for _ in 0..ROWS {
+                    let code = metadata.read(WIDTH_FIELD_BITS + 1) as u32;
+                    let exp_bits = if code == RAW_ESCAPE { 8 } else { code + 1 };
+                    for _ in 0..LANES {
+                        let word = payload.read(sign_bits + exp_bits + n);
+                        let sign = if self.elide_sign {
+                            0
+                        } else {
+                            (word >> (exp_bits + n)) as u32 & 1
+                        };
+                        let exp_field = (word >> n) & ((1u64 << exp_bits) - 1);
+                        let e = if code == RAW_ESCAPE {
+                            exp_field as u32
+                        } else {
+                            let mag = (exp_field & ((1 << code) - 1)) as i32;
+                            let d = if exp_field >> code == 1 { -mag } else { mag };
+                            (bias as i32 + d) as u32
+                        };
+                        let m = word as u32 & mant_mask(n);
+                        out.push(self.assemble(sign, e, m, n));
+                    }
+                }
+                continue;
+            }
             let marker = metadata.read(WIDTH_FIELD_BITS + 1) as u32;
             debug_assert_eq!(marker, 8);
             let mut bases = [0u32; LANES];
@@ -226,7 +315,7 @@ impl SfpCodec {
                 }
             }
         }
-        out.truncate(c.count);
+        out.truncate(count);
         out
     }
 
@@ -277,7 +366,9 @@ fn mant_mask(n: u32) -> u32 {
 /// Footprint (bits) of one tensor under the full SFP scheme without
 /// materializing a bitstream — mantissa `n` per value, Gecko-delta
 /// exponents, optional sign elision.  Used by the ImageNet-scale footprint
-/// models; matches [`SfpCodec::compress`] totals exactly (unit-tested).
+/// models; matches [`SfpCodec::compress`] totals exactly for the default
+/// row-0-base layout (unit-tested; the bias-register layout stores fewer
+/// bits and is measured through the stash instead).
 pub fn sfp_bits(vals: &[f32], n: u32, container: Container, elide_sign: bool) -> usize {
     let n = n.min(container.mant_bits()) as usize;
     if vals.is_empty() {
@@ -428,5 +519,67 @@ mod tests {
         let c = codec.compress(&[], 4);
         assert_eq!(c.total_bits(), 0);
         assert!(codec.decompress(&c).is_empty());
+    }
+
+    #[test]
+    fn bias_register_roundtrip_is_truncation() {
+        let vals = pseudo_vals(1000, 8, 4.0);
+        for bias in [0u8, 100, 127, 254] {
+            for n in [0u32, 1, 5, 23] {
+                for elide in [false, true] {
+                    let vals: Vec<f32> = if elide {
+                        vals.iter().map(|v| v.abs()).collect()
+                    } else {
+                        vals.clone()
+                    };
+                    let codec = SfpCodec::new(Container::Fp32, elide).with_bias(Some(bias));
+                    let c = codec.compress(&vals, n);
+                    let back = codec.decompress(&c);
+                    for (i, (&v, &b)) in vals.iter().zip(&back).enumerate() {
+                        assert_eq!(
+                            truncate_mantissa(v, n).to_bits(),
+                            b.to_bits(),
+                            "bias={bias} n={n} elide={elide} i={i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bias_register_narrows_trained_like_stream() {
+        // Unit-scale values hug exponent 127: a learned 127 register turns
+        // row-0's raw 8-bit bases into narrow deltas, so the bias layout
+        // must store strictly fewer payload bits than the §V base layout.
+        let vals = pseudo_vals(64 * 64, 12, 1.0);
+        let base = SfpCodec::new(Container::Bf16, false).compress(&vals, 3);
+        let biased = SfpCodec::new(Container::Bf16, false)
+            .with_bias(Some(127))
+            .compress(&vals, 3);
+        assert!(
+            biased.payload_bits < base.payload_bits,
+            "biased {} vs base {}",
+            biased.payload_bits,
+            base.payload_bits
+        );
+        let back = SfpCodec::new(Container::Bf16, false)
+            .with_bias(Some(127))
+            .decompress(&biased);
+        for (&v, &b) in vals.iter().zip(&back) {
+            assert_eq!(truncate_mantissa(v, 3).to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn bias_register_extreme_exponents_escape_raw() {
+        let mut vals = pseudo_vals(300, 13, 1e30);
+        vals.extend(pseudo_vals(300, 14, 1e-30));
+        let codec = SfpCodec::new(Container::Fp32, false).with_bias(Some(127));
+        let c = codec.compress(&vals, 7);
+        let back = codec.decompress(&c);
+        for (&v, &b) in vals.iter().zip(&back) {
+            assert_eq!(truncate_mantissa(v, 7).to_bits(), b.to_bits());
+        }
     }
 }

@@ -8,16 +8,23 @@
 //!   ledger totals and `report::footprint` agree exactly.
 //! * [`SfpStashCodec`] — the §V hardware layout via [`SfpCodec`]: one
 //!   interleaved payload stream plus row-width metadata, as the 8-lane
-//!   compressor would burst it to DRAM.
+//!   compressor would burst it to DRAM.  A `FixedBias` exponent mode in
+//!   the [`ContainerMeta`] (Quantum Exponent's learned per-layer bias)
+//!   switches the layout to per-row bias registers, so the policy's
+//!   exponent narrowing reaches the hardware stream too.
 //! * [`RawStashCodec`] — the FP32/BF16 baseline: container words verbatim.
+//!
+//! Decoding is zero-copy: [`StashCodec::decode_view`] consumes
+//! [`SegReader`]s over arena-resident chunk runs in place; the owned
+//! [`StashCodec::decode`] is a thin wrapper over single-segment readers.
 //!
 //! Every codec is *lossless after quantization*: `decode(encode(v, meta))`
 //! equals `quantize(v, meta.mant(), meta.container)` bit-for-bit (property
 //! tested in `rust/tests/props.rs`, down to the 1-mantissa-bit extreme).
 
 use crate::formats::{bf16_bits, Container, F32_MANT_BITS};
-use crate::gecko::{self, BitReader, BitWriter, Mode};
-use crate::sfp::{Compressed, SfpCodec};
+use crate::gecko::{self, BitWriter, Mode, SegReader};
+use crate::sfp::SfpCodec;
 use crate::stats::ComponentBits;
 
 /// Per-tensor container metadata chosen by the active policy (QM/BitChop):
@@ -125,8 +132,28 @@ pub trait StashCodec: Send + Sync {
     /// Encode `vals` under `meta`.
     fn encode(&self, vals: &[f32], meta: &ContainerMeta) -> EncodedStreams;
 
-    /// Decode a tensor encoded with the same `meta`.
-    fn decode(&self, enc: &EncodedStreams, meta: &ContainerMeta) -> Vec<f32>;
+    /// Decode a tensor from per-stream bit readers (codec-defined stream
+    /// order, matching [`EncodedStreams::streams`]) — the zero-copy
+    /// restore path: the readers borrow arena chunk memory directly, so
+    /// no materialized `Vec<u64>` copies exist on the restore path.
+    fn decode_view(
+        &self,
+        count: usize,
+        streams: &mut [SegReader<'_>],
+        meta: &ContainerMeta,
+    ) -> Vec<f32>;
+
+    /// Decode a materialized tensor encoded with the same `meta`
+    /// (convenience over [`StashCodec::decode_view`] for one-shot paths,
+    /// tests, and benches).
+    fn decode(&self, enc: &EncodedStreams, meta: &ContainerMeta) -> Vec<f32> {
+        let mut readers: Vec<SegReader> = enc
+            .streams
+            .iter()
+            .map(|(words, bits)| SegReader::single(words, *bits))
+            .collect();
+        self.decode_view(enc.count, &mut readers, meta)
+    }
 
     /// Encode in `chunk_values`-sized pieces (rounded up to a group
     /// multiple) and concatenate — bit-identical to one-shot [`encode`]
@@ -197,18 +224,17 @@ impl StashCodec for GeckoStashCodec {
         }
     }
 
-    fn decode(&self, enc: &EncodedStreams, meta: &ContainerMeta) -> Vec<f32> {
+    fn decode_view(
+        &self,
+        count: usize,
+        streams: &mut [SegReader<'_>],
+        meta: &ContainerMeta,
+    ) -> Vec<f32> {
         let n = meta.mant();
-        let g = gecko::Encoded {
-            payload: enc.streams[0].0.clone(),
-            payload_bits: enc.streams[0].1,
-            metadata: enc.streams[1].0.clone(),
-            metadata_bits: enc.streams[1].1,
-            count: enc.count,
+        let [payload, metadata, mant, sign] = streams else {
+            panic!("gecko codec expects 4 streams");
         };
-        let exps = gecko::decode(&g, meta.exp_mode);
-        let mut mant = BitReader::new(&enc.streams[2].0, enc.streams[2].1);
-        let mut sign = BitReader::new(&enc.streams[3].0, enc.streams[3].1);
+        let exps = gecko::decode_readers(payload, metadata, count, meta.exp_mode);
         exps.iter()
             .map(|&e| {
                 let m = if n > 0 {
@@ -227,6 +253,16 @@ impl StashCodec for GeckoStashCodec {
     }
 }
 
+/// The learned exponent bias register the SFP hardware layout uses for a
+/// tensor stored under `meta` — Quantum Exponent's per-layer fixed-bias
+/// choice carries straight into the §V stream (see [`SfpCodec::bias`]).
+fn sfp_bias_of(meta: &ContainerMeta) -> Option<u8> {
+    match meta.exp_mode {
+        Mode::Delta => None,
+        Mode::FixedBias { bias, .. } => Some(bias),
+    }
+}
+
 /// Hardware-layout adapter over [`SfpCodec`] (§V interleaved bursts).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct SfpStashCodec;
@@ -241,7 +277,7 @@ impl StashCodec for SfpStashCodec {
     }
 
     fn encode(&self, vals: &[f32], meta: &ContainerMeta) -> EncodedStreams {
-        let codec = SfpCodec::new(meta.container, meta.elide_sign);
+        let codec = SfpCodec::new(meta.container, meta.elide_sign).with_bias(sfp_bias_of(meta));
         let c = codec.compress(vals, meta.mant());
         let padded = if vals.is_empty() {
             0
@@ -265,18 +301,17 @@ impl StashCodec for SfpStashCodec {
         }
     }
 
-    fn decode(&self, enc: &EncodedStreams, meta: &ContainerMeta) -> Vec<f32> {
-        let codec = SfpCodec::new(meta.container, meta.elide_sign);
-        let c = Compressed {
-            payload: enc.streams[0].0.clone(),
-            payload_bits: enc.streams[0].1,
-            metadata: enc.streams[1].0.clone(),
-            metadata_bits: enc.streams[1].1,
-            count: enc.count,
-            mant_bits: meta.mant(),
-            cycles: 0,
+    fn decode_view(
+        &self,
+        count: usize,
+        streams: &mut [SegReader<'_>],
+        meta: &ContainerMeta,
+    ) -> Vec<f32> {
+        let [payload, metadata] = streams else {
+            panic!("sfp codec expects 2 streams");
         };
-        codec.decompress(&c)
+        let codec = SfpCodec::new(meta.container, meta.elide_sign).with_bias(sfp_bias_of(meta));
+        codec.decompress_readers(payload, metadata, count, meta.mant())
     }
 }
 
@@ -320,9 +355,16 @@ impl StashCodec for RawStashCodec {
         }
     }
 
-    fn decode(&self, enc: &EncodedStreams, meta: &ContainerMeta) -> Vec<f32> {
-        let mut r = BitReader::new(&enc.streams[0].0, enc.streams[0].1);
-        (0..enc.count)
+    fn decode_view(
+        &self,
+        count: usize,
+        streams: &mut [SegReader<'_>],
+        meta: &ContainerMeta,
+    ) -> Vec<f32> {
+        let [r] = streams else {
+            panic!("raw codec expects 1 stream");
+        };
+        (0..count)
             .map(|_| match meta.container {
                 Container::Fp32 => f32::from_bits(r.read(32) as u32),
                 Container::Bf16 => f32::from_bits((r.read(16) as u32) << 16),
@@ -420,6 +462,63 @@ mod tests {
             let enc = codec.encode(&[], &meta);
             assert_eq!(enc.total_bits(), 0);
             assert!(codec.decode(&enc, &meta).is_empty());
+        }
+    }
+
+    #[test]
+    fn view_decode_over_split_segments_matches_owned() {
+        // decode_view over word-split streams (as arena chunk runs would
+        // present them) must equal the materialized decode bit-for-bit
+        let vals = ValueModel::relu_act().sample_values(3000, 21, true);
+        for meta in [
+            ContainerMeta::new(Container::Bf16, 3).with_sign_elision(true),
+            ContainerMeta::new(Container::Fp32, 7)
+                .with_exp_mode(crate::gecko::Mode::FixedBias { bias: 126, group: 8 }),
+        ] {
+            for codec in codecs() {
+                let enc = codec.encode(&vals, &meta);
+                let owned = codec.decode(&enc, &meta);
+                let split_segs: Vec<(Vec<&[u64]>, usize)> = enc
+                    .streams
+                    .iter()
+                    .map(|(words, bits)| {
+                        let mid = words.len() / 2;
+                        (vec![&words[..mid], &words[mid..]], *bits)
+                    })
+                    .collect();
+                let mut readers: Vec<SegReader> = split_segs
+                    .iter()
+                    .map(|(segs, bits)| SegReader::new(segs, *bits))
+                    .collect();
+                let viewed = codec.decode_view(enc.count, &mut readers, &meta);
+                assert_eq!(owned.len(), viewed.len(), "{}", codec.name());
+                for (a, b) in owned.iter().zip(&viewed) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{}", codec.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sfp_codec_uses_learned_bias_registers() {
+        // A FixedBias meta (Quantum Exponent's output) must narrow the sfp
+        // payload vs the raw row-0-base layout on trained-like streams
+        // (weights: tight exponent cluster, no zeros), and still
+        // round-trip bit-exact.
+        let vals = ValueModel::weights().sample_values(64 * 64, 5, false);
+        let delta = ContainerMeta::new(Container::Bf16, 2);
+        let biased = delta.with_exp_mode(crate::gecko::Mode::FixedBias { bias: 121, group: 8 });
+        let enc_delta = SfpStashCodec.encode(&vals, &delta);
+        let enc_biased = SfpStashCodec.encode(&vals, &biased);
+        assert!(
+            enc_biased.total_bits() < enc_delta.total_bits(),
+            "biased {} vs delta {}",
+            enc_biased.total_bits(),
+            enc_delta.total_bits()
+        );
+        let back = SfpStashCodec.decode(&enc_biased, &biased);
+        for (&v, &b) in vals.iter().zip(&back) {
+            assert_eq!(biased.quantized(v).to_bits(), b.to_bits());
         }
     }
 }

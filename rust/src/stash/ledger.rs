@@ -1,8 +1,12 @@
-//! Footprint + bandwidth ledger: every stash write, read, and release
-//! lands here, giving (a) exact resident stored bits with the Fig. 12
-//! component split — directly comparable to the analytic
-//! `report::footprint` numbers — and (b) the cumulative DRAM write/read
-//! traffic the `hwsim` memory model consumes.
+//! Footprint + bandwidth ledger: every stash write, read, release, and
+//! spill-tier crossing lands here, giving (a) exact resident stored bits
+//! with the Fig. 12 component split — directly comparable to the analytic
+//! `report::footprint` numbers — and (b) the cumulative traffic split into
+//! DRAM (encode writes / restore reads) and spill bytes (cold-chunk
+//! evictions / demand faults), so the `hwsim` DRAM model never charges
+//! spilled bytes as resident DRAM traffic.  All counters live under one
+//! lock and [`StashLedger::mark_epoch`] cuts them in a single snapshot, so
+//! a `footprint_over_time` row can never mix epochs across the two tiers.
 
 use crate::stats::{ComponentBits, Footprint};
 use std::sync::Mutex;
@@ -30,6 +34,15 @@ pub struct LedgerSnapshot {
     pub written_fp32_bits: f64,
     pub writes: u64,
     pub reads: u64,
+    /// Bits moved DRAM → spill tier (cold-chunk evictions, whole-chunk
+    /// granularity — that is what actually crosses the tier boundary).
+    pub spill_written_bits: f64,
+    /// Bits faulted back spill → DRAM on demand (whole-chunk granularity).
+    pub spill_read_bits: f64,
+    /// Chunk evictions to the spill tier.
+    pub evictions: u64,
+    /// Chunk faults back from the spill tier.
+    pub faults: u64,
 }
 
 impl LedgerSnapshot {
@@ -50,6 +63,10 @@ pub struct EpochTraffic {
     pub written_bits: f64,
     pub read_bits: f64,
     pub written_fp32_bits: f64,
+    /// Spill-tier eviction bytes this epoch (bits, chunk-granular).
+    pub spill_written_bits: f64,
+    /// Spill-tier fault-back bytes this epoch (bits, chunk-granular).
+    pub spill_read_bits: f64,
 }
 
 impl EpochTraffic {
@@ -75,14 +92,22 @@ impl StashLedger {
     }
 
     /// Cut an epoch boundary: record the traffic since the previous mark.
+    ///
+    /// The marks lock is taken *before* the counter snapshot, so (a)
+    /// concurrent cuts serialize into disjoint `[last, now]` intervals and
+    /// (b) the DRAM and spill counters of one row come from a single
+    /// atomic snapshot — a worker recording between the two reads cannot
+    /// smear its traffic across adjacent epochs.
     pub fn mark_epoch(&self) {
-        let now = self.snapshot();
         let mut m = self.marks.lock().unwrap();
+        let now = self.snapshot();
         let last = m.0;
         m.1.push(EpochTraffic {
             written_bits: now.written_bits - last.written_bits,
             read_bits: now.read_bits - last.read_bits,
             written_fp32_bits: now.written_fp32_bits - last.written_fp32_bits,
+            spill_written_bits: now.spill_written_bits - last.spill_written_bits,
+            spill_read_bits: now.spill_read_bits - last.spill_read_bits,
         });
         m.0 = now;
     }
@@ -108,6 +133,20 @@ impl StashLedger {
         let mut s = self.inner.lock().unwrap();
         s.read_bits += bits_total;
         s.reads += 1;
+    }
+
+    /// A cold chunk was evicted DRAM → spill.
+    pub fn record_spill_write(&self, bits: f64) {
+        let mut s = self.inner.lock().unwrap();
+        s.spill_written_bits += bits;
+        s.evictions += 1;
+    }
+
+    /// A spilled chunk was faulted back spill → DRAM.
+    pub fn record_spill_read(&self, bits: f64) {
+        let mut s = self.inner.lock().unwrap();
+        s.spill_read_bits += bits;
+        s.faults += 1;
     }
 
     /// A tensor left the stash: subtract its components from residency.
@@ -177,5 +216,26 @@ mod tests {
         // an epoch with no traffic records a zero row, not a panic
         l.mark_epoch();
         assert!((l.epoch_traffic()[2].written_bits).abs() < 1e-9);
+    }
+
+    #[test]
+    fn epoch_marks_split_dram_and_spill() {
+        let l = StashLedger::new();
+        l.record_write(TensorClass::Activation, cb(0.0, 100.0, 50.0, 0.0), 100);
+        l.record_spill_write(4096.0);
+        l.record_spill_write(4096.0);
+        l.mark_epoch();
+        l.record_spill_read(4096.0);
+        l.mark_epoch();
+        let rows = l.epoch_traffic();
+        assert!((rows[0].spill_written_bits - 8192.0).abs() < 1e-9);
+        assert!((rows[0].spill_read_bits).abs() < 1e-9);
+        assert!((rows[1].spill_written_bits).abs() < 1e-9);
+        assert!((rows[1].spill_read_bits - 4096.0).abs() < 1e-9);
+        // the DRAM-side row stayed clean of spill traffic
+        assert!((rows[0].written_bits - 150.0).abs() < 1e-9);
+        let s = l.snapshot();
+        assert_eq!(s.evictions, 2);
+        assert_eq!(s.faults, 1);
     }
 }

@@ -12,34 +12,50 @@
 //!        ▲ back-pressure        │ StashCodec (gecko / sfp / raw)
 //!        │ (bounded queue)      ▼
 //!        │                 [ChunkArena]  fixed 32 KiB chunks, free-list reuse
-//!        │                      │
-//!  take(id) ◀── decode ◀────────┘        every write/read/release ──▶ [StashLedger]
+//!        │                   │      │ budget crossed: cold runs evict ▼
+//!        │                   │      └──────────▶ [spill file] ◀ fault on pin
+//!        │                   ▼ pin (Arc, zero-copy)
+//!  take(id) ◀ decode_view ◀──┘   every write/read/evict/fault ──▶ [StashLedger]
 //! ```
 //!
 //! * [`codec::StashCodec`] — pluggable encode/decode, adapters over the
 //!   existing Gecko, SFP, and baseline compression stacks; per-tensor
 //!   [`codec::ContainerMeta`] carries the mantissa/exponent bitlengths the
-//!   active policy (Quantum Mantissa / BitChop) chose.
-//! * [`arena::ChunkArena`] — chunk-granular storage with free-list reuse.
+//!   active policy (Quantum Mantissa / Quantum Exponent / BitChop) chose.
+//!   Decoding is zero-copy: [`codec::StashCodec::decode_view`] reads
+//!   pinned arena chunks in place through segmented bit readers.
+//! * [`arena::ChunkArena`] — tiered chunk storage: a free-list-recycled
+//!   DRAM tier plus a budget-driven file-backed spill tier (cold chunk
+//!   runs evict when resident bytes cross [`StashConfig::budget_bytes`],
+//!   and fault back on demand).
 //! * [`pool::StashPool`] — bounded-queue encode/decode worker threads.
-//! * [`ledger::StashLedger`] — exact stored-bits + bandwidth accounting;
-//!   feeds both `report::footprint` comparisons and `hwsim`'s DRAM model.
+//! * [`ledger::StashLedger`] — exact stored-bits + bandwidth accounting,
+//!   split into DRAM and spill traffic; feeds `report::footprint`
+//!   comparisons and `hwsim`'s DRAM model, with atomic per-epoch cuts.
+//!
+//! Restores come in two shapes: the blocking [`Stash::take`]/
+//! [`Stash::take_all`], and [`Stash::take_deferred`], which removes the
+//! entries immediately but runs the decodes on the pool — the
+//! restore-prefetch half of the Trainer's double-buffered pipeline (step
+//! N−1's decodes and step N's encodes both overlap the compiled step).
 //!
 //! Consumers: `coordinator::train::Trainer` (opt-in per-step stashing on
-//! the request path) and the `repro stash` sweep/verification command.
+//! the request path) and the `repro stash` sweep/verification command
+//! (`--budget-bytes` sweeps the spill tier).
 
 pub mod arena;
 pub mod codec;
 pub mod ledger;
 pub mod pool;
 
-pub use arena::{ChunkArena, ChunkSeq, CHUNK_WORDS};
+pub use arena::{ChunkArena, ChunkSeq, PinnedStream, CHUNK_BYTES, CHUNK_WORDS};
 pub use codec::{
     ContainerMeta, EncodedStreams, GeckoStashCodec, RawStashCodec, SfpStashCodec, StashCodec,
 };
 pub use ledger::{EpochTraffic, LedgerSnapshot, StashLedger, TensorClass};
 pub use pool::StashPool;
 
+use crate::gecko::SegReader;
 use crate::stats::ComponentBits;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -83,6 +99,11 @@ pub struct StashConfig {
     /// Encode chunk granularity in values (rounded up to the codec group);
     /// 0 = 64 Ki values.
     pub chunk_values: usize,
+    /// DRAM budget for the arena's resident tier in bytes; 0 = unlimited
+    /// (spill tier disabled).  When live resident bytes cross the budget,
+    /// cold chunk runs evict to a file-backed spill region and fault back
+    /// on demand — batch sizes beyond DRAM become a sweep axis.
+    pub budget_bytes: usize,
 }
 
 impl Default for StashConfig {
@@ -92,6 +113,7 @@ impl Default for StashConfig {
             threads: 0,
             queue_depth: 0,
             chunk_values: 0,
+            budget_bytes: 0,
         }
     }
 }
@@ -146,10 +168,15 @@ pub struct Stash {
 
 impl Stash {
     pub fn new(cfg: StashConfig) -> Stash {
+        let ledger = Arc::new(StashLedger::new());
         Stash {
             codec: cfg.codec.build(),
-            arena: Arc::new(ChunkArena::new()),
-            ledger: Arc::new(StashLedger::new()),
+            arena: Arc::new(ChunkArena::with_budget(
+                cfg.budget_bytes,
+                None,
+                Some(Arc::clone(&ledger)),
+            )),
+            ledger,
             store: Arc::new(Mutex::new(HashMap::new())),
             pool: StashPool::new(cfg.threads, cfg.queue_depth),
             chunk_values: if cfg.chunk_values == 0 {
@@ -212,33 +239,46 @@ impl Stash {
     /// [`Stash::flush`] — a tensor still in the encode queue is not yet
     /// visible.
     pub fn get(&self, id: TensorId) -> Option<Vec<f32>> {
-        // Copy out under the lock (the lock also pins the chunks against a
-        // concurrent take/discard releasing them); decode outside it so a
-        // large tensor doesn't stall the pool workers on store access.
-        let (enc, meta) = {
+        // Pin the chunks under the store lock (Arc clones, plus spill
+        // faults for evicted runs) so a concurrent take/discard can't
+        // release them mid-read; decode outside the lock, in place.
+        let (pins, count, meta, bits) = {
             let store = self.store.lock().unwrap();
             let stored = store.get(&id)?;
-            (load_streams(&self.arena, stored), stored.meta)
+            let pins: Vec<PinnedStream> =
+                stored.streams.iter().map(|s| self.arena.pin(s)).collect();
+            (pins, stored.count, stored.meta, stored.bits)
         };
-        self.ledger.record_read(enc.bits.total());
-        Some(self.codec.decode(&enc, &meta))
+        self.ledger.record_read(bits.total());
+        let segs: Vec<Vec<&[u64]>> = pins.iter().map(PinnedStream::segs).collect();
+        let mut readers: Vec<SegReader> = segs
+            .iter()
+            .zip(&pins)
+            .map(|(s, p)| SegReader::new(s, p.len_bits))
+            .collect();
+        Some(self.codec.decode_view(count, &mut readers, &meta))
     }
 
     /// Decode a tensor and remove it, returning its chunks to the arena —
-    /// the restore-for-backward path.
+    /// the restore-for-backward path (zero-copy: decodes pinned chunks in
+    /// place).
     pub fn take(&self, id: TensorId) -> Option<Vec<f32>> {
         let stored = self.store.lock().unwrap().remove(&id)?;
-        let enc = load_streams(&self.arena, &stored);
-        self.ledger.record_read(enc.bits.total());
-        let vals = self.codec.decode(&enc, &stored.meta);
+        self.ledger.record_read(stored.bits.total());
+        let vals = decode_stored(self.codec.as_ref(), &self.arena, &stored);
         release_stored(&self.arena, &self.ledger, id.class, stored);
         Some(vals)
     }
 
-    /// Decode-and-remove a batch of tensors in parallel on the pool;
-    /// result slots line up with `ids` (`None` = not resident).
-    pub fn take_all(&self, ids: &[TensorId]) -> Vec<Option<Vec<f32>>> {
-        self.flush();
+    /// Remove `ids` from the stash immediately and queue their decodes on
+    /// the worker pool *without waiting* — the restore-prefetch half of
+    /// the Trainer's double buffer.  The caller overlaps other work (the
+    /// compiled train step) with the decodes, then calls [`Stash::flush`]
+    /// and [`RestoreTicket::collect`]s.  Because the entries leave the
+    /// store synchronously, `put`s for the same ids submitted afterwards
+    /// cannot race the restore.  Tensors still in the encode queue are not
+    /// yet visible — flush first if puts may be outstanding.
+    pub fn take_deferred(&self, ids: &[TensorId]) -> RestoreTicket {
         let results = Arc::new(Mutex::new(Vec::new()));
         results.lock().unwrap().resize_with(ids.len(), || None);
         for (slot, &id) in ids.iter().enumerate() {
@@ -250,16 +290,22 @@ impl Stash {
             let ledger = Arc::clone(&self.ledger);
             let results = Arc::clone(&results);
             self.pool.submit(Box::new(move || {
-                let enc = load_streams(&arena, &stored);
-                ledger.record_read(enc.bits.total());
-                let vals = codec.decode(&enc, &stored.meta);
+                ledger.record_read(stored.bits.total());
+                let vals = decode_stored(codec.as_ref(), &arena, &stored);
                 release_stored(&arena, &ledger, id.class, stored);
                 results.lock().unwrap()[slot] = Some(vals);
             }));
         }
-        self.pool.wait_idle();
-        let mut guard = results.lock().unwrap();
-        std::mem::take(&mut *guard)
+        RestoreTicket { results }
+    }
+
+    /// Decode-and-remove a batch of tensors in parallel on the pool;
+    /// result slots line up with `ids` (`None` = not resident).
+    pub fn take_all(&self, ids: &[TensorId]) -> Vec<Option<Vec<f32>>> {
+        self.flush();
+        let ticket = self.take_deferred(ids);
+        self.flush();
+        ticket.collect()
     }
 
     /// Drop a resident tensor without decoding it.
@@ -309,6 +355,16 @@ impl Stash {
         self.arena.high_water_bytes()
     }
 
+    /// Live bytes currently evicted to the spill tier.
+    pub fn arena_spill_bytes(&self) -> usize {
+        self.arena.spill_in_use_bytes()
+    }
+
+    /// Peak concurrently-spilled bytes over the stash's lifetime.
+    pub fn arena_spill_high_water_bytes(&self) -> usize {
+        self.arena.spill_high_water_bytes()
+    }
+
     pub fn codec_name(&self) -> &'static str {
         self.codec.name()
     }
@@ -323,16 +379,33 @@ impl Stash {
     }
 }
 
-fn load_streams(arena: &ChunkArena, stored: &StoredTensor) -> EncodedStreams {
-    EncodedStreams {
-        count: stored.count,
-        streams: stored
-            .streams
-            .iter()
-            .map(|seq| (arena.load(seq), seq.len_bits))
-            .collect(),
-        bits: stored.bits,
+/// Handle to a batch of deferred restores queued by
+/// [`Stash::take_deferred`]: collect after a [`Stash::flush`] barrier.
+pub struct RestoreTicket {
+    results: Arc<Mutex<Vec<Option<Vec<f32>>>>>,
+}
+
+impl RestoreTicket {
+    /// Result slots line up with the `ids` passed to
+    /// [`Stash::take_deferred`] (`None` = not resident).  Only complete
+    /// after a [`Stash::flush`].
+    pub fn collect(self) -> Vec<Option<Vec<f32>>> {
+        std::mem::take(&mut *self.results.lock().unwrap())
     }
+}
+
+/// Zero-copy decode of one stored tensor: pin its chunk runs (faulting
+/// spilled ones back), then decode the pinned memory in place through
+/// segmented bit readers — no materialized `Vec<u64>` stream copies.
+fn decode_stored(codec: &dyn StashCodec, arena: &ChunkArena, stored: &StoredTensor) -> Vec<f32> {
+    let pins: Vec<PinnedStream> = stored.streams.iter().map(|s| arena.pin(s)).collect();
+    let segs: Vec<Vec<&[u64]>> = pins.iter().map(PinnedStream::segs).collect();
+    let mut readers: Vec<SegReader> = segs
+        .iter()
+        .zip(&pins)
+        .map(|(s, p)| SegReader::new(s, p.len_bits))
+        .collect();
+    codec.decode_view(stored.count, &mut readers, &stored.meta)
 }
 
 fn release_stored(
@@ -359,6 +432,7 @@ mod tests {
             threads: 2,
             queue_depth: 4,
             chunk_values: 256,
+            budget_bytes: 0,
         })
     }
 
@@ -465,5 +539,72 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(stash.ledger().reads, 2);
         assert_eq!(stash.resident_tensors(), 1);
+    }
+
+    #[test]
+    fn budgeted_stash_spills_and_restores_bit_exact() {
+        // Budget of one chunk: several raw-FP32 tensors can't all stay
+        // resident, so cold runs must spill — and every restore must still
+        // be bit-exact, with the ledger reporting the tier split.
+        let stash = Stash::new(StashConfig {
+            codec: CodecKind::Raw,
+            threads: 2,
+            queue_depth: 4,
+            chunk_values: 4096,
+            budget_bytes: CHUNK_BYTES,
+        });
+        let meta = ContainerMeta::new(Container::Fp32, 23);
+        let tensors: Vec<Vec<f32>> = (0..6)
+            .map(|i| ValueModel::weights().sample_values(20_000, i as u64, false))
+            .collect();
+        for (i, t) in tensors.iter().enumerate() {
+            stash.put(TensorId::act(i), t.clone(), meta);
+        }
+        stash.flush();
+        assert_eq!(stash.failures(), 0);
+        let snap = stash.ledger();
+        assert!(snap.evictions > 0, "budget pressure must evict");
+        assert!(snap.spill_written_bits > 0.0);
+        assert!(stash.arena_spill_bytes() > 0);
+        assert!(stash.arena_in_use_bytes() <= CHUNK_BYTES);
+        let ids: Vec<TensorId> = (0..6).map(TensorId::act).collect();
+        let back = stash.take_all(&ids);
+        for (t, b) in tensors.iter().zip(&back) {
+            let b = b.as_ref().unwrap();
+            assert_eq!(t.len(), b.len());
+            for (&v, &x) in t.iter().zip(b) {
+                assert_eq!(meta.quantized(v).to_bits(), x.to_bits());
+            }
+        }
+        let snap = stash.ledger();
+        assert!(snap.faults > 0, "restores must fault spilled runs back");
+        assert!(snap.spill_read_bits > 0.0);
+        assert_eq!(stash.arena_spill_bytes(), 0);
+        assert_eq!(stash.arena_in_use_bytes(), 0);
+        assert_eq!(stash.failures(), 0);
+    }
+
+    #[test]
+    fn take_deferred_then_put_same_id_does_not_race() {
+        // The double-buffer ordering: remove step N-1's entry via
+        // take_deferred, immediately put step N's tensor under the same
+        // id, then flush — the deferred restore must return step N-1's
+        // values and the store must hold step N's.
+        let stash = small_stash(CodecKind::Gecko);
+        let meta = ContainerMeta::new(Container::Fp32, 6);
+        let old = vec![1.0f32; 3000];
+        let new = vec![2.0f32; 3000];
+        stash.put(TensorId::act(0), old.clone(), meta);
+        stash.flush();
+        let ticket = stash.take_deferred(&[TensorId::act(0)]);
+        stash.put(TensorId::act(0), new.clone(), meta);
+        stash.flush();
+        let restored = ticket.collect();
+        let back = restored[0].as_ref().expect("deferred restore present");
+        assert!(back.iter().all(|&v| v == 1.0));
+        let now = stash.get(TensorId::act(0)).unwrap();
+        assert!(now.iter().all(|&v| v == 2.0));
+        stash.discard(TensorId::act(0));
+        assert_eq!(stash.failures(), 0);
     }
 }

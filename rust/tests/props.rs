@@ -233,6 +233,8 @@ fn prop_stash_roundtrip_bit_exact_every_codec() {
                 threads: g.usize_in(1, 4),
                 queue_depth: g.usize_in(1, 4),
                 chunk_values: g.usize_in(1, 800),
+                // sometimes squeeze the arena so the spill tier engages
+                budget_bytes: if g.bool() { g.usize_in(1, 128) * 1024 } else { 0 },
             });
             stash.put(TensorId::act(0), vals.clone(), meta);
             stash.flush();
@@ -281,6 +283,7 @@ fn prop_stash_ledger_conserves_bits() {
             threads: g.usize_in(1, 4),
             queue_depth: 2,
             chunk_values: 512,
+            budget_bytes: 0,
         });
         let k = g.usize_in(1, 6);
         for i in 0..k {
@@ -307,6 +310,72 @@ fn prop_stash_ledger_conserves_bits() {
 }
 
 #[test]
+fn prop_stash_restore_bit_exact_under_eviction_churn() {
+    // Random DRAM budgets force spill-tier churn; interleaved puts and
+    // restores across all codecs — including the 1-mantissa-bit / 0-bit
+    // extremes and tight fixed-bias exponent groups — must stay bit-exact
+    // whether a tensor's chunks are resident, spilled, or a mix.
+    check("spill churn keeps restores bit-exact", 12, |g| {
+        for kind in [CodecKind::Gecko, CodecKind::Sfp, CodecKind::Raw] {
+            let stash = Stash::new(StashConfig {
+                codec: kind,
+                threads: g.usize_in(1, 3),
+                queue_depth: g.usize_in(1, 4),
+                chunk_values: g.usize_in(64, 1024),
+                // 1..64 KiB: from below a single chunk to a couple chunks
+                budget_bytes: g.usize_in(1, 64) * 1024,
+            });
+            let mut live: Vec<(usize, Vec<f32>, ContainerMeta)> = Vec::new();
+            let mut next_id = 0usize;
+            for _round in 0..g.usize_in(2, 4) {
+                for _ in 0..g.usize_in(1, 3) {
+                    let mant = [0u32, 1, 1, 7][g.usize_in(0, 3)];
+                    let container = if g.bool() { Container::Fp32 } else { Container::Bf16 };
+                    let mut meta = ContainerMeta::new(container, mant);
+                    if g.bool() {
+                        meta = meta.with_exp_mode(Mode::FixedBias {
+                            bias: g.u32_in(100, 140) as u8,
+                            group: g.usize_in(4, 16),
+                        });
+                    }
+                    let mut vals = g.vec_f32(g.usize_in(1, 6000), |g| g.gaussian_f32(2.0));
+                    if g.bool() {
+                        for v in vals.iter_mut() {
+                            *v = f32::from_bits(v.to_bits() & 0x7FFF_FFFF);
+                        }
+                        meta = meta.with_sign_elision(true);
+                    }
+                    stash.put(TensorId::act(next_id), vals.clone(), meta);
+                    live.push((next_id, vals, meta));
+                    next_id += 1;
+                }
+                stash.flush();
+                // restore a random subset mid-run, under budget pressure
+                while !live.is_empty() && g.bool() {
+                    let k = g.usize_in(0, live.len() - 1);
+                    let (id, vals, meta) = live.swap_remove(k);
+                    let back = stash.take(TensorId::act(id)).expect("resident");
+                    assert_eq!(back.len(), vals.len(), "{kind:?}");
+                    for (&v, &b) in vals.iter().zip(&back) {
+                        assert_eq!(meta.quantized(v).to_bits(), b.to_bits(), "{kind:?}");
+                    }
+                }
+            }
+            for (id, vals, meta) in live {
+                let back = stash.take(TensorId::act(id)).expect("resident");
+                assert_eq!(back.len(), vals.len(), "{kind:?}");
+                for (&v, &b) in vals.iter().zip(&back) {
+                    assert_eq!(meta.quantized(v).to_bits(), b.to_bits(), "{kind:?}");
+                }
+            }
+            assert_eq!(stash.failures(), 0, "{kind:?}");
+            assert_eq!(stash.arena_in_use_bytes(), 0, "{kind:?}");
+            assert_eq!(stash.arena_spill_bytes(), 0, "{kind:?}");
+        }
+    });
+}
+
+#[test]
 fn stash_extreme_container_one_mantissa_bit() {
     // The paper's most aggressive configuration: 1 mantissa bit in a BF16
     // container with tight fixed-bias exponent groups (~3-bit delta
@@ -322,6 +391,7 @@ fn stash_extreme_container_one_mantissa_bit() {
         threads: 2,
         queue_depth: 2,
         chunk_values: 4096,
+        budget_bytes: 0,
     });
     stash.put(TensorId::act(0), vals.clone(), meta);
     stash.flush();
