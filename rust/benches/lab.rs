@@ -1,0 +1,126 @@
+//! Lab orchestration bench: a 2 models × 2 codecs × 2 budgets stash grid
+//! (plus its consolidation job) run three ways — serial, parallel
+//! (work-stealing), and warm-cache — with per-job timings surfaced in the
+//! emitted `lab_manifest.json`.
+//!
+//! Acceptance gates (CI executes this bench):
+//!   * parallel grid wall-clock <= serial on machines with >= 4 cores
+//!   * parallel artifacts byte-identical to serial (content fingerprints)
+//!   * warm re-run resolves 100% from cache, executing zero jobs
+
+use sfp::formats::Container;
+use sfp::lab::{self, JobGraph, JobSpec, JobStatus, ResultCache, StashSpec};
+use sfp::report::footprint::STREAM_SEED;
+use sfp::stash::CodecKind;
+use std::time::Instant;
+
+fn smoke_2x2x2() -> JobGraph {
+    let mut g = JobGraph::new();
+    let mut runs = Vec::new();
+    for model in ["resnet18", "mobilenet"] {
+        for codec in [CodecKind::Gecko, CodecKind::Js] {
+            for budget in [0usize, 256 * 1024] {
+                runs.push(g.push(
+                    JobSpec::StashRun(StashSpec {
+                        model: model.into(),
+                        policy: "qm".into(),
+                        codec,
+                        container: Container::Bf16,
+                        batch: 128,
+                        budget_bytes: budget,
+                        sample: 8 * 1024,
+                        seed: STREAM_SEED,
+                    }),
+                    vec![],
+                ));
+            }
+        }
+    }
+    g.push(JobSpec::StashSummary, runs);
+    g
+}
+
+fn fresh_cache(name: &str) -> ResultCache {
+    let dir = std::env::temp_dir().join(format!("sfp_lab_bench_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    ResultCache::open(&dir).expect("open bench cache")
+}
+
+fn main() {
+    let graph = smoke_2x2x2();
+    println!("== bench group: lab ==");
+    println!("grid: {} jobs (2 models x 2 codecs x 2 budgets + summary)", graph.len());
+
+    let cache_serial = fresh_cache("serial");
+    let t0 = Instant::now();
+    let serial = lab::run_serial(&graph, &cache_serial);
+    let serial_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    let cache_parallel = fresh_cache("parallel");
+    let t0 = Instant::now();
+    let parallel = lab::run_parallel(&graph, &cache_parallel, threads);
+    let parallel_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let t0 = Instant::now();
+    let warm = lab::run_parallel(&graph, &cache_parallel, threads);
+    let warm_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // per-job timings, surfaced in the manifest as in every lab run
+    let manifest = std::env::temp_dir().join(format!(
+        "sfp_lab_bench_manifest_{}.json",
+        std::process::id()
+    ));
+    lab::write_manifest(&manifest, &parallel, parallel_ms, "parallel").expect("manifest");
+    for r in &parallel {
+        println!("lab/{}: {:>8.1} ms ({:?})", r.label, r.wall_ms, r.status);
+    }
+    println!(
+        "lab/serial: {serial_ms:.1} ms  lab/parallel_{threads}_threads: {parallel_ms:.1} ms \
+         ({:.2}x)  lab/warm_cache: {warm_ms:.1} ms",
+        serial_ms / parallel_ms.max(1e-9),
+    );
+    println!("manifest (per-job timings) -> {}", manifest.display());
+
+    let mut failed = false;
+
+    // every job healthy in both modes
+    if !serial.iter().all(|r| r.ok()) || !parallel.iter().all(|r| r.ok()) {
+        eprintln!("FAIL: lab jobs failed in the bench grid");
+        failed = true;
+    }
+
+    // parallel artifacts byte-identical to serial (content fingerprints)
+    for (s, p) in serial.iter().zip(&parallel) {
+        if s.hash != p.hash || s.artifacts != p.artifacts {
+            eprintln!(
+                "FAIL: artifact divergence between serial and parallel for {}",
+                s.label
+            );
+            failed = true;
+        }
+    }
+
+    // warm re-run must be pure cache hits, executing zero jobs
+    if !warm.iter().all(|r| r.status == JobStatus::Cached) {
+        eprintln!("FAIL: warm re-run executed jobs instead of hitting the cache");
+        failed = true;
+    }
+
+    // the point of the subsystem: the parallel grid must not be slower
+    // than the serial loop it replaced (skip on machines too narrow to
+    // possibly show a win; gate leaves no fudge — with >= 4 workers the
+    // expected margin is >= 2x)
+    if threads >= 4 && parallel_ms > serial_ms {
+        eprintln!(
+            "FAIL: parallel grid wall-clock {parallel_ms:.1} ms exceeds serial {serial_ms:.1} ms"
+        );
+        failed = true;
+    }
+
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -822,6 +822,12 @@ impl<'rt> Trainer<'rt> {
                     .num("stash_faults", ls.faults as f64);
             }
             s.write(&dir.join(format!("{label}_summary.json")))?;
+            if !res.stash_epochs.is_empty() {
+                crate::report::figures::footprint_over_time(
+                    &dir.join(format!("{label}_footprint_over_time.csv")),
+                    &res,
+                )?;
+            }
         }
         Ok(res)
     }

@@ -1,0 +1,300 @@
+//! Content-addressed on-disk result cache.  Each completed job owns one
+//! entry directory named `<kind>-<hash>` containing its artifacts plus a
+//! `job.json` record; a warm re-run of an unchanged grid resolves every
+//! job here and executes nothing.
+//!
+//! Layout:
+//!
+//! ```text
+//! <root>/<kind>-<hash>/job.json        record: params, artifact fingerprints
+//! <root>/<kind>-<hash>/artifacts/...   the job's output files
+//! ```
+//!
+//! Commits are atomic-by-rename: a job executes into a private staging
+//! directory and the finished entry is renamed into place, so concurrent
+//! workers (or a killed run) can never expose a half-written entry.  The
+//! record stores per-artifact byte counts and FNV fingerprints;
+//! [`ResultCache::lookup`] re-verifies them so a truncated entry is
+//! treated as a miss and re-executed rather than trusted.
+
+use super::hash::file_hash;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Fingerprint of one artifact file inside a cache entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactInfo {
+    /// Path relative to the entry's `artifacts/` directory.
+    pub rel: String,
+    pub bytes: u64,
+    /// FNV-1a content hash (hex).
+    pub hash: String,
+}
+
+impl ArtifactInfo {
+    /// The one JSON rendering shared by cache records and run manifests.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("rel".to_string(), Json::Str(self.rel.clone()));
+        m.insert("bytes".to_string(), Json::Num(self.bytes as f64));
+        m.insert("hash".to_string(), Json::Str(self.hash.clone()));
+        Json::Obj(m)
+    }
+}
+
+/// A committed (or freshly looked-up) cache entry.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub kind: String,
+    pub label: String,
+    pub hash: String,
+    pub params_json: String,
+    pub artifacts: Vec<ArtifactInfo>,
+    /// Absolute path of the entry's `artifacts/` directory.
+    pub artifacts_dir: PathBuf,
+}
+
+/// The cache root.
+pub struct ResultCache {
+    root: PathBuf,
+}
+
+impl ResultCache {
+    /// Open (creating if needed) a cache rooted at `root`.  Staging
+    /// directories orphaned by a *dead* run (`.tmp-<kind>-<hash>-<pid>-<n>`
+    /// whose pid no longer exists) are swept here — their pid+nonce names
+    /// never collide with a new run's, so nothing else would reclaim them.
+    /// Live processes sharing the cache root keep their staging dirs.
+    pub fn open(root: &Path) -> Result<ResultCache> {
+        std::fs::create_dir_all(root)
+            .with_context(|| format!("create cache root {}", root.display()))?;
+        if let Ok(entries) = std::fs::read_dir(root) {
+            for entry in entries.flatten() {
+                let name = entry.file_name().to_string_lossy().into_owned();
+                if name.starts_with(".tmp-") && staging_pid_is_dead(&name) {
+                    let _ = std::fs::remove_dir_all(entry.path());
+                }
+            }
+        }
+        Ok(ResultCache {
+            root: root.to_path_buf(),
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn entry_dir(&self, kind: &str, hash: &str) -> PathBuf {
+        self.root.join(format!("{kind}-{hash}"))
+    }
+
+    /// Artifact directory of a (possibly not yet existing) entry — for
+    /// callers that already hold a verified [`JobReport`]'s artifact list
+    /// and only need the files, without a re-verifying [`ResultCache::lookup`].
+    pub fn entry_artifacts_dir(&self, kind: &str, hash: &str) -> PathBuf {
+        self.entry_dir(kind, hash).join("artifacts")
+    }
+
+    /// Look a job up by content hash; verifies the record and every
+    /// artifact fingerprint so a corrupt entry reads as a miss.
+    pub fn lookup(&self, kind: &str, hash: &str) -> Option<JobRecord> {
+        let dir = self.entry_dir(kind, hash);
+        let record = std::fs::read_to_string(dir.join("job.json")).ok()?;
+        let j = Json::parse(&record).ok()?;
+        let artifacts_dir = dir.join("artifacts");
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts")?.as_arr()? {
+            let info = ArtifactInfo {
+                rel: a.get("rel")?.as_str()?.to_string(),
+                bytes: a.get("bytes")?.as_f64()? as u64,
+                hash: a.get("hash")?.as_str()?.to_string(),
+            };
+            let path = artifacts_dir.join(&info.rel);
+            let meta = std::fs::metadata(&path).ok()?;
+            if meta.len() != info.bytes || file_hash(&path).ok()? != info.hash {
+                return None; // truncated or tampered entry: treat as miss
+            }
+            artifacts.push(info);
+        }
+        Some(JobRecord {
+            kind: j.get("kind")?.as_str()?.to_string(),
+            label: j.get("label")?.as_str()?.to_string(),
+            hash: j.get("hash")?.as_str()?.to_string(),
+            params_json: j.get("params")?.to_string(),
+            artifacts,
+            artifacts_dir,
+        })
+    }
+
+    /// Begin a job execution: returns a private staging directory whose
+    /// `artifacts/` subdirectory the job writes into.
+    pub fn stage(&self, kind: &str, hash: &str, nonce: u64) -> Result<PathBuf> {
+        let dir = self
+            .root
+            .join(format!(".tmp-{kind}-{hash}-{}-{nonce}", std::process::id()));
+        if dir.exists() {
+            std::fs::remove_dir_all(&dir)?;
+        }
+        std::fs::create_dir_all(dir.join("artifacts"))?;
+        Ok(dir)
+    }
+
+    /// Commit a staged execution: fingerprint every artifact, write the
+    /// record, and rename the staging directory into place.  If another
+    /// worker committed the same hash first, the staging copy is discarded
+    /// and the winner's record is returned.
+    pub fn commit(
+        &self,
+        kind: &str,
+        label: &str,
+        hash: &str,
+        params_json: &str,
+        staging: &Path,
+    ) -> Result<JobRecord> {
+        let art_dir = staging.join("artifacts");
+        let mut artifacts = Vec::new();
+        collect_artifacts(&art_dir, Path::new(""), &mut artifacts)?;
+        artifacts.sort_by(|a, b| a.rel.cmp(&b.rel));
+
+        let mut rec = BTreeMap::new();
+        rec.insert("version".to_string(), Json::Num(super::spec::CACHE_VERSION as f64));
+        rec.insert("kind".to_string(), Json::Str(kind.to_string()));
+        rec.insert("label".to_string(), Json::Str(label.to_string()));
+        rec.insert("hash".to_string(), Json::Str(hash.to_string()));
+        rec.insert(
+            "params".to_string(),
+            Json::parse(params_json).map_err(|e| anyhow!("bad params json: {e}"))?,
+        );
+        rec.insert(
+            "artifacts".to_string(),
+            Json::Arr(artifacts.iter().map(ArtifactInfo::to_json).collect()),
+        );
+        std::fs::write(staging.join("job.json"), Json::Obj(rec).to_string())?;
+
+        let final_dir = self.entry_dir(kind, hash);
+        match std::fs::rename(staging, &final_dir) {
+            Ok(()) => {}
+            Err(_) if final_dir.join("job.json").exists() => {
+                // lost a commit race: the winner's entry is equivalent by
+                // content-addressing; drop ours
+                let _ = std::fs::remove_dir_all(staging);
+            }
+            Err(e) => {
+                return Err(anyhow!(
+                    "commit rename to {} failed: {e}",
+                    final_dir.display()
+                ))
+            }
+        }
+        // The fingerprints were computed from the files just written; no
+        // need to re-read the whole entry through a verifying lookup.
+        Ok(JobRecord {
+            kind: kind.to_string(),
+            label: label.to_string(),
+            hash: hash.to_string(),
+            params_json: params_json.to_string(),
+            artifacts,
+            artifacts_dir: final_dir.join("artifacts"),
+        })
+    }
+
+    /// Abort a staged execution, removing its directory.
+    pub fn discard(&self, staging: &Path) {
+        let _ = std::fs::remove_dir_all(staging);
+    }
+}
+
+/// Does the staging-dir name `.tmp-<kind>-<hash>-<pid>-<nonce>` belong to
+/// a process that no longer exists?  Unparseable names read as live (never
+/// delete what we can't attribute); our own pid reads as dead — a
+/// same-pid leftover can only be from a previous process instance.
+fn staging_pid_is_dead(name: &str) -> bool {
+    let mut parts = name.rsplit('-');
+    let _nonce = parts.next();
+    let Some(pid) = parts.next().and_then(|p| p.parse::<u32>().ok()) else {
+        return false;
+    };
+    if pid == std::process::id() {
+        return true;
+    }
+    !Path::new("/proc").join(pid.to_string()).exists()
+}
+
+/// Recursively fingerprint every file under `dir` (relative paths sorted
+/// by the caller).
+fn collect_artifacts(dir: &Path, rel: &Path, out: &mut Vec<ArtifactInfo>) -> Result<()> {
+    for entry in std::fs::read_dir(dir.join(rel))
+        .with_context(|| format!("read artifact dir {}", dir.join(rel).display()))?
+    {
+        let entry = entry?;
+        let name = entry.file_name();
+        let sub = rel.join(&name);
+        if entry.file_type()?.is_dir() {
+            collect_artifacts(dir, &sub, out)?;
+        } else {
+            let path = dir.join(&sub);
+            out.push(ArtifactInfo {
+                rel: sub.to_string_lossy().replace('\\', "/"),
+                bytes: entry.metadata()?.len(),
+                hash: file_hash(&path)?,
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("sfp_lab_cache_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn stage_commit_lookup_roundtrip() {
+        let cache = ResultCache::open(&tdir("roundtrip")).unwrap();
+        assert!(cache.lookup("t", "abc").is_none());
+        let staging = cache.stage("t", "abc", 0).unwrap();
+        std::fs::write(staging.join("artifacts/out.json"), b"{\"x\":1}").unwrap();
+        std::fs::create_dir_all(staging.join("artifacts/sub")).unwrap();
+        std::fs::write(staging.join("artifacts/sub/data.csv"), b"a,b\n1,2\n").unwrap();
+        let rec = cache.commit("t", "label", "abc", "{}", &staging).unwrap();
+        assert_eq!(rec.artifacts.len(), 2);
+        assert_eq!(rec.artifacts[0].rel, "out.json");
+        assert_eq!(rec.artifacts[1].rel, "sub/data.csv");
+        let hit = cache.lookup("t", "abc").expect("warm lookup");
+        assert_eq!(hit.artifacts, rec.artifacts);
+        assert!(hit.artifacts_dir.join("sub/data.csv").exists());
+    }
+
+    #[test]
+    fn corrupt_entry_reads_as_miss() {
+        let cache = ResultCache::open(&tdir("corrupt")).unwrap();
+        let staging = cache.stage("t", "h1", 0).unwrap();
+        std::fs::write(staging.join("artifacts/a.json"), b"payload").unwrap();
+        let rec = cache.commit("t", "l", "h1", "{}", &staging).unwrap();
+        // truncate the artifact behind the record's back
+        std::fs::write(rec.artifacts_dir.join("a.json"), b"pay").unwrap();
+        assert!(cache.lookup("t", "h1").is_none(), "size mismatch = miss");
+    }
+
+    #[test]
+    fn commit_race_keeps_first_winner() {
+        let cache = ResultCache::open(&tdir("race")).unwrap();
+        let s1 = cache.stage("t", "h2", 1).unwrap();
+        std::fs::write(s1.join("artifacts/a"), b"one").unwrap();
+        cache.commit("t", "l", "h2", "{}", &s1).unwrap();
+        let s2 = cache.stage("t", "h2", 2).unwrap();
+        std::fs::write(s2.join("artifacts/a"), b"one").unwrap();
+        let rec = cache.commit("t", "l", "h2", "{}", &s2).unwrap();
+        assert_eq!(rec.artifacts.len(), 1);
+        assert!(!s2.exists(), "loser staging discarded");
+    }
+}

@@ -1,0 +1,475 @@
+//! Dependency-aware work-stealing executor over a [`JobGraph`].
+//!
+//! Scheduling model: every job starts with a count of unfinished
+//! dependencies; jobs at zero are seeded round-robin across per-worker
+//! deques.  A worker pops from the *front* of its own deque (LIFO — a
+//! just-unblocked dependent likely has its inputs warm) and steals from
+//! the *back* of a victim's deque when its own runs dry, so long chains
+//! stay local while idle workers drain whoever is busiest.  Completing a
+//! job decrements its dependents' counts; a dependent reaching zero is
+//! pushed onto the completing worker's own deque.
+//!
+//! Execution of one job: content-hash lookup in the
+//! [`ResultCache`](super::cache::ResultCache) first — a hit skips
+//! execution entirely (`cached` in the report); a miss runs the spec into
+//! a staging directory and commits by rename.  A failed job poisons its
+//! transitive dependents (reported `skipped`), but independent branches
+//! keep running — one broken figure doesn't waste the rest of the grid.
+//!
+//! [`run_serial`] executes the same graph on the caller's thread in
+//! insertion order (a topological order by construction — edges only
+//! point backwards).  The acceptance check diffs its artifact bytes
+//! against a parallel run's: both orders must produce bit-identical
+//! artifacts, which holds because job execution is deterministic and jobs
+//! only communicate through declared dependency artifacts.
+
+use super::cache::{JobRecord, ResultCache};
+use super::hash::job_hash;
+use super::jobs::execute_spec;
+use super::spec::{JobSpec, CACHE_VERSION};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// One node: a spec plus the indices of the jobs it needs finished first.
+pub struct JobNode {
+    pub spec: JobSpec,
+    pub deps: Vec<usize>,
+}
+
+/// A DAG of jobs.  Edges may only point to already-added jobs, so the
+/// insertion order is always a valid topological order and cycles are
+/// impossible by construction.
+#[derive(Default)]
+pub struct JobGraph {
+    pub nodes: Vec<JobNode>,
+}
+
+impl JobGraph {
+    pub fn new() -> JobGraph {
+        JobGraph::default()
+    }
+
+    /// Add a job depending on previously added jobs; returns its id.
+    pub fn push(&mut self, spec: JobSpec, deps: Vec<usize>) -> usize {
+        for &d in &deps {
+            assert!(d < self.nodes.len(), "dependency {d} not yet added");
+        }
+        self.nodes.push(JobNode { spec, deps });
+        self.nodes.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Content hash of every job, dependency hashes chained in (so an
+    /// upstream config change re-hashes exactly its downstream cone).
+    pub fn hashes(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let dep_hashes: Vec<String> =
+                node.deps.iter().map(|&d| out[d].clone()).collect();
+            out.push(job_hash(
+                node.spec.kind(),
+                &node.spec.params_json(),
+                &dep_hashes,
+                CACHE_VERSION,
+            ));
+        }
+        out
+    }
+}
+
+/// How one job ended.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobStatus {
+    /// Executed in this run.
+    Executed,
+    /// Served from the content-addressed cache without executing.
+    Cached,
+    /// Execution failed.
+    Failed(String),
+    /// Not attempted: a transitive dependency failed.
+    Skipped,
+}
+
+/// Per-job outcome row (the manifest's unit).
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub id: usize,
+    pub kind: String,
+    pub label: String,
+    pub hash: String,
+    pub status: JobStatus,
+    /// Wall-clock of this run's handling (≈0 for cache hits).
+    pub wall_ms: f64,
+    pub artifacts: Vec<super::cache::ArtifactInfo>,
+}
+
+impl JobReport {
+    pub fn ok(&self) -> bool {
+        matches!(self.status, JobStatus::Executed | JobStatus::Cached)
+    }
+}
+
+struct Scheduler<'g> {
+    graph: &'g JobGraph,
+    hashes: Vec<String>,
+    cache: &'g ResultCache,
+    deques: Vec<Mutex<VecDeque<usize>>>,
+    remaining: Vec<AtomicUsize>,
+    dependents: Vec<Vec<usize>>,
+    /// Completed-job records (cache entries) for dependency artifact access.
+    records: Vec<Mutex<Option<JobRecord>>>,
+    /// Jobs whose subtree is poisoned by an upstream failure.
+    poisoned: Vec<AtomicUsize>,
+    reports: Mutex<Vec<Option<JobReport>>>,
+    done: AtomicUsize,
+    nonce: AtomicUsize,
+    idle: (Mutex<usize>, Condvar),
+}
+
+impl<'g> Scheduler<'g> {
+    fn new(graph: &'g JobGraph, cache: &'g ResultCache, workers: usize) -> Scheduler<'g> {
+        let n = graph.len();
+        let mut dependents = vec![Vec::new(); n];
+        for (id, node) in graph.nodes.iter().enumerate() {
+            for &d in &node.deps {
+                dependents[d].push(id);
+            }
+        }
+        Scheduler {
+            hashes: graph.hashes(),
+            graph,
+            cache,
+            deques: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            remaining: graph
+                .nodes
+                .iter()
+                .map(|node| AtomicUsize::new(node.deps.len()))
+                .collect(),
+            dependents,
+            records: (0..n).map(|_| Mutex::new(None)).collect(),
+            poisoned: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+            reports: Mutex::new((0..n).map(|_| None).collect()),
+            done: AtomicUsize::new(0),
+            nonce: AtomicUsize::new(0),
+            idle: (Mutex::new(0), Condvar::new()),
+        }
+    }
+
+    fn seed(&self) {
+        let mut w = 0;
+        for (id, node) in self.graph.nodes.iter().enumerate() {
+            if node.deps.is_empty() {
+                self.deques[w].lock().unwrap().push_back(id);
+                w = (w + 1) % self.deques.len();
+            }
+        }
+    }
+
+    /// Pop local front, then steal from victims' backs.
+    fn next_job(&self, worker: usize) -> Option<usize> {
+        if let Some(id) = self.deques[worker].lock().unwrap().pop_front() {
+            return Some(id);
+        }
+        let n = self.deques.len();
+        for off in 1..n {
+            let victim = (worker + off) % n;
+            if let Some(id) = self.deques[victim].lock().unwrap().pop_back() {
+                return Some(id);
+            }
+        }
+        None
+    }
+
+    /// Execute (or resolve from cache) one job, record its report, and
+    /// release its dependents.
+    fn run_job(&self, worker: usize, id: usize) {
+        let node = &self.graph.nodes[id];
+        let hash = &self.hashes[id];
+        let kind = node.spec.kind();
+        let label = node.spec.label();
+        let t0 = Instant::now();
+
+        let status_and_record: (JobStatus, Option<JobRecord>) =
+            if self.poisoned[id].load(Ordering::SeqCst) != 0 {
+                (JobStatus::Skipped, None)
+            } else if let Some(rec) = self.cache.lookup(kind, hash) {
+                (JobStatus::Cached, Some(rec))
+            } else {
+                // gather dependency artifact directories, in edge order
+                let deps: Vec<JobRecord> = node
+                    .deps
+                    .iter()
+                    .map(|&d| {
+                        self.records[d]
+                            .lock()
+                            .unwrap()
+                            .clone()
+                            .expect("dependency completed before dependent")
+                    })
+                    .collect();
+                let nonce = self.nonce.fetch_add(1, Ordering::SeqCst) as u64;
+                match self.cache.stage(kind, hash, nonce) {
+                    Err(e) => (JobStatus::Failed(format!("{e:#}")), None),
+                    Ok(staging) => {
+                        let art_dir = staging.join("artifacts");
+                        match execute_spec(&node.spec, &art_dir, &deps) {
+                            Ok(()) => match self.cache.commit(
+                                kind,
+                                &label,
+                                hash,
+                                &node.spec.params_json(),
+                                &staging,
+                            ) {
+                                Ok(rec) => (JobStatus::Executed, Some(rec)),
+                                Err(e) => (JobStatus::Failed(format!("{e:#}")), None),
+                            },
+                            Err(e) => {
+                                self.cache.discard(&staging);
+                                (JobStatus::Failed(format!("{e:#}")), None)
+                            }
+                        }
+                    }
+                }
+            };
+
+        let (status, record) = status_and_record;
+        let failed = !matches!(status, JobStatus::Executed | JobStatus::Cached);
+        let artifacts = record
+            .as_ref()
+            .map(|r| r.artifacts.clone())
+            .unwrap_or_default();
+        *self.records[id].lock().unwrap() = record;
+        self.reports.lock().unwrap()[id] = Some(JobReport {
+            id,
+            kind: kind.to_string(),
+            label,
+            hash: hash.clone(),
+            status,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            artifacts,
+        });
+
+        // release dependents (poisoning them first on failure, so the
+        // release below can never race a clean execution)
+        for &dep in &self.dependents[id] {
+            if failed {
+                self.poisoned[dep].fetch_add(1, Ordering::SeqCst);
+            }
+            if self.remaining[dep].fetch_sub(1, Ordering::SeqCst) == 1 {
+                self.deques[worker].lock().unwrap().push_front(dep);
+            }
+        }
+        self.done.fetch_add(1, Ordering::SeqCst);
+        // wake idle workers: new jobs may be stealable, or the run is over
+        let (lock, cv) = &self.idle;
+        let mut gen = lock.lock().unwrap();
+        *gen += 1;
+        drop(gen);
+        cv.notify_all();
+    }
+
+    fn worker_loop(&self, worker: usize) {
+        loop {
+            if let Some(id) = self.next_job(worker) {
+                self.run_job(worker, id);
+                continue;
+            }
+            if self.done.load(Ordering::SeqCst) >= self.graph.len() {
+                return;
+            }
+            // nothing runnable here: sleep until some job completes
+            let (lock, cv) = &self.idle;
+            let gen = lock.lock().unwrap();
+            let seen = *gen;
+            if self.done.load(Ordering::SeqCst) >= self.graph.len() {
+                return;
+            }
+            // re-check the deques under no deque lock is fine: a push that
+            // happened before we read `gen` bumps it, so the wait below
+            // cannot miss it
+            let _unused = cv
+                .wait_timeout_while(gen, std::time::Duration::from_millis(50), |g| *g == seen)
+                .unwrap();
+        }
+    }
+}
+
+/// Run the graph on `threads` workers (0 = available parallelism, capped
+/// at the job count).  Returns one report per job, in graph order.
+pub fn run_parallel(
+    graph: &JobGraph,
+    cache: &ResultCache,
+    threads: usize,
+) -> Vec<JobReport> {
+    if graph.is_empty() {
+        return Vec::new();
+    }
+    let threads = if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+    } else {
+        threads
+    };
+    let threads = threads.clamp(1, graph.len());
+    let sched = Scheduler::new(graph, cache, threads);
+    sched.seed();
+    std::thread::scope(|scope| {
+        for w in 1..threads {
+            let s = &sched;
+            scope.spawn(move || s.worker_loop(w));
+        }
+        sched.worker_loop(0);
+    });
+    sched
+        .reports
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("every job reported"))
+        .collect()
+}
+
+/// Run the graph on the caller's thread in insertion order — the
+/// deterministic reference the parallel mode's artifacts are
+/// byte-compared against.
+pub fn run_serial(graph: &JobGraph, cache: &ResultCache) -> Vec<JobReport> {
+    if graph.is_empty() {
+        return Vec::new();
+    }
+    let sched = Scheduler::new(graph, cache, 1);
+    for id in 0..graph.len() {
+        // insertion order is topological: all deps already ran
+        sched.run_job(0, id);
+    }
+    sched
+        .reports
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("every job reported"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Container;
+    use crate::lab::spec::StashSpec;
+    use crate::stash::CodecKind;
+    use std::path::PathBuf;
+
+    fn tdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("sfp_lab_exec_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn tiny_stash(model: &str, codec: CodecKind, budget: usize) -> JobSpec {
+        JobSpec::StashRun(StashSpec {
+            model: model.into(),
+            policy: "qm".into(),
+            codec,
+            container: Container::Bf16,
+            batch: 64,
+            budget_bytes: budget,
+            sample: 2048,
+            seed: 0x5EED,
+        })
+    }
+
+    #[test]
+    fn graph_hash_chaining_reruns_only_the_cone() {
+        let mut g1 = JobGraph::new();
+        let a = g1.push(tiny_stash("resnet18", CodecKind::Gecko, 0), vec![]);
+        let b = g1.push(tiny_stash("resnet18", CodecKind::Raw, 0), vec![]);
+        g1.push(JobSpec::StashSummary, vec![a, b]);
+        let h1 = g1.hashes();
+
+        // change one leaf: its hash and the summary's change, the sibling's
+        // stays identical
+        let mut g2 = JobGraph::new();
+        let a2 = g2.push(tiny_stash("resnet18", CodecKind::Gecko, 4096), vec![]);
+        let b2 = g2.push(tiny_stash("resnet18", CodecKind::Raw, 0), vec![]);
+        g2.push(JobSpec::StashSummary, vec![a2, b2]);
+        let h2 = g2.hashes();
+
+        assert_ne!(h1[0], h2[0], "edited leaf re-hashes");
+        assert_eq!(h1[1], h2[1], "untouched sibling keeps its hash");
+        assert_ne!(h1[2], h2[2], "summary is in the edited cone");
+    }
+
+    #[test]
+    fn parallel_executes_all_then_warm_run_executes_none() {
+        let cache = ResultCache::open(&tdir("warm")).unwrap();
+        let mut g = JobGraph::new();
+        let a = g.push(tiny_stash("resnet18", CodecKind::Gecko, 0), vec![]);
+        let b = g.push(tiny_stash("resnet18", CodecKind::Js, 0), vec![]);
+        g.push(JobSpec::StashSummary, vec![a, b]);
+
+        let cold = run_parallel(&g, &cache, 2);
+        assert_eq!(cold.len(), 3);
+        assert!(cold.iter().all(|r| r.status == JobStatus::Executed), "{cold:?}");
+        assert!(cold.iter().all(|r| !r.artifacts.is_empty()));
+
+        let warm = run_parallel(&g, &cache, 2);
+        assert!(
+            warm.iter().all(|r| r.status == JobStatus::Cached),
+            "warm re-run must execute zero jobs: {warm:?}"
+        );
+        // cache hits resolve to the same artifact fingerprints
+        for (c, w) in cold.iter().zip(&warm) {
+            assert_eq!(c.artifacts, w.artifacts);
+        }
+    }
+
+    #[test]
+    fn serial_and_parallel_artifacts_are_byte_identical() {
+        let cache_s = ResultCache::open(&tdir("ser")).unwrap();
+        let cache_p = ResultCache::open(&tdir("par")).unwrap();
+        let mut g = JobGraph::new();
+        let mut leaves = Vec::new();
+        for codec in [CodecKind::Gecko, CodecKind::Raw, CodecKind::Js] {
+            leaves.push(g.push(tiny_stash("resnet18", codec, 0), vec![]));
+        }
+        g.push(JobSpec::StashSummary, leaves);
+
+        let rs = run_serial(&g, &cache_s);
+        let rp = run_parallel(&g, &cache_p, 3);
+        for (s, p) in rs.iter().zip(&rp) {
+            assert!(s.ok() && p.ok());
+            assert_eq!(s.hash, p.hash);
+            assert_eq!(
+                s.artifacts, p.artifacts,
+                "artifact bytes must not depend on execution order ({})",
+                s.label
+            );
+        }
+    }
+
+    #[test]
+    fn failure_poisons_only_the_dependent_cone() {
+        let cache = ResultCache::open(&tdir("poison")).unwrap();
+        let mut g = JobGraph::new();
+        // unknown model → the job itself fails
+        let bad = g.push(tiny_stash("no_such_model", CodecKind::Gecko, 0), vec![]);
+        let good = g.push(tiny_stash("resnet18", CodecKind::Raw, 0), vec![]);
+        let summary = g.push(JobSpec::StashSummary, vec![bad, good]);
+        let lone = g.push(tiny_stash("resnet18", CodecKind::Gecko, 0), vec![]);
+
+        let reports = run_parallel(&g, &cache, 2);
+        assert!(matches!(reports[bad].status, JobStatus::Failed(_)));
+        assert_eq!(reports[good].status, JobStatus::Executed);
+        assert_eq!(reports[summary].status, JobStatus::Skipped);
+        assert_eq!(reports[lone].status, JobStatus::Executed);
+    }
+}

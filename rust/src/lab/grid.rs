@@ -1,0 +1,382 @@
+//! Grid builders (`repro all`) and the consolidated run manifest.
+//!
+//! [`paper_grid`] materializes the full evaluation cross-product the
+//! paper's headline numbers come from — every adaptation policy × trace
+//! model through the sweep engine, every stash codec × model × budget
+//! point through the measurement path, the Table I/II emitters, and the
+//! trace-source figures — as one dependency graph; [`smoke_grid`] is the
+//! tiny CI/bench variant (a 2×2×2 stash core plus two policy runs and the
+//! cheap emitters).  Train jobs join the grid only when compiled AOT
+//! artifacts are present, keyed by the manifest's content hash so a
+//! recompile invalidates cached runs.
+//!
+//! [`write_manifest`] renders one `lab_manifest.json` for a run: every
+//! job's kind, label, content hash, status, wall-clock, and artifact
+//! fingerprints, plus the executed/cached totals the warm-cache CI gate
+//! asserts on.
+
+use super::exec::{JobGraph, JobReport, JobStatus};
+use super::spec::{JobSpec, StashSpec, TrainSpec};
+use crate::formats::Container;
+use crate::policy::sweep::{PolicyKind, SweepConfig};
+use crate::report::footprint::{SAMPLE, STREAM_SEED};
+use crate::stash::CodecKind;
+use crate::util::json::Json;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Knobs of a grid build.
+#[derive(Debug, Clone)]
+pub struct GridOptions {
+    pub batch: usize,
+    /// Stash-sweep budget axis in bytes (0 = unlimited tier).
+    pub budgets: Vec<usize>,
+    /// AOT artifact directory; train jobs are added when its
+    /// `manifest.json` exists.
+    pub artifacts_dir: Option<PathBuf>,
+}
+
+impl Default for GridOptions {
+    fn default() -> Self {
+        Self {
+            batch: 256,
+            budgets: vec![0, 1 << 20],
+            artifacts_dir: None,
+        }
+    }
+}
+
+/// A built grid: the graph plus the indices of the jobs whose artifacts
+/// the CLI surfaces into the output directory.
+pub struct Grid {
+    pub graph: JobGraph,
+    pub policy_summary: Option<usize>,
+    pub stash_summary: Option<usize>,
+}
+
+fn stash_spec(model: &str, codec: CodecKind, budget: usize, batch: usize, sample: usize) -> JobSpec {
+    JobSpec::StashRun(StashSpec {
+        model: model.into(),
+        policy: "qm".into(),
+        codec,
+        container: Container::Bf16,
+        batch,
+        budget_bytes: budget,
+        sample,
+        seed: STREAM_SEED,
+    })
+}
+
+fn push_policy_block(
+    g: &mut JobGraph,
+    models: &[&str],
+    kinds: &[PolicyKind],
+    cfg: &SweepConfig,
+) -> usize {
+    let mut runs = Vec::new();
+    for &model in models {
+        for &policy in kinds {
+            runs.push(g.push(
+                JobSpec::PolicyRun {
+                    model: model.into(),
+                    policy,
+                    cfg: cfg.clone(),
+                },
+                vec![],
+            ));
+        }
+    }
+    g.push(JobSpec::PolicySummary, runs)
+}
+
+fn push_stash_block(
+    g: &mut JobGraph,
+    models: &[&str],
+    codecs: &[CodecKind],
+    budgets: &[usize],
+    batch: usize,
+    sample: usize,
+) -> usize {
+    let mut runs = Vec::new();
+    for &model in models {
+        for &codec in codecs {
+            for &budget in budgets {
+                runs.push(g.push(stash_spec(model, codec, budget, batch, sample), vec![]));
+            }
+        }
+    }
+    g.push(JobSpec::StashSummary, runs)
+}
+
+/// Train-variant axis of the paper grid (base containers + every
+/// adaptation method, stashing through the gecko codec).
+fn push_train_block(g: &mut JobGraph, artifacts_dir: &Path, budgets: &[usize]) {
+    let manifest = artifacts_dir.join("manifest.json");
+    let Ok(hash) = super::hash::file_hash(&manifest) else {
+        return; // no compiled artifacts: the e2e leg stays out of the grid
+    };
+    for variant in ["fp32", "bf16", "qm", "bc", "qmqe", "bw"] {
+        let stash_codec = match variant {
+            "fp32" | "bf16" => None,
+            _ => Some(CodecKind::Gecko),
+        };
+        let budget = budgets.first().copied().unwrap_or(0);
+        g.push(
+            JobSpec::Train(TrainSpec {
+                variant: variant.into(),
+                container: Container::Bf16,
+                epochs: 6,
+                steps_per_epoch: 40,
+                eval_batches: 4,
+                lr0: 0.05,
+                momentum: 0.9,
+                seed: 42,
+                stash_codec,
+                budget_bytes: budget,
+                artifacts_dir: artifacts_dir.to_string_lossy().into_owned(),
+                manifest_hash: hash.clone(),
+            }),
+            vec![],
+        );
+    }
+}
+
+/// The full paper grid: QM+QE / BitWave / QM policies × trace models,
+/// every stash codec × model × budget point, both tables (analytic and
+/// stash-measured), the trace-source figures, and — when artifacts exist —
+/// the e2e train variants.
+pub fn paper_grid(opts: &GridOptions) -> Grid {
+    let mut g = JobGraph::new();
+    let models = ["resnet18", "mobilenet"];
+    let policy_summary = push_policy_block(
+        &mut g,
+        &models,
+        &PolicyKind::all(),
+        &SweepConfig {
+            batch: opts.batch,
+            ..Default::default()
+        },
+    );
+    let stash_summary = push_stash_block(
+        &mut g,
+        &models,
+        &CodecKind::all(),
+        &opts.budgets,
+        opts.batch,
+        SAMPLE,
+    );
+    g.push(JobSpec::Table1, vec![]);
+    g.push(
+        JobSpec::Table2 {
+            batch: opts.batch,
+            source: "model".into(),
+        },
+        vec![],
+    );
+    g.push(
+        JobSpec::Table2 {
+            batch: opts.batch,
+            source: "stash".into(),
+        },
+        vec![],
+    );
+    for id in [9usize, 10, 12, 13] {
+        g.push(
+            JobSpec::Figure {
+                id,
+                batch: opts.batch,
+                sample: 64 * 512,
+            },
+            vec![],
+        );
+    }
+    if let Some(dir) = &opts.artifacts_dir {
+        push_train_block(&mut g, dir, &opts.budgets);
+    }
+    Grid {
+        graph: g,
+        policy_summary: Some(policy_summary),
+        stash_summary: Some(stash_summary),
+    }
+}
+
+/// The tiny CI/bench grid: a 2 models × 2 codecs × 2 budgets stash core,
+/// two short policy sweeps, both cheap tables, and the trace figures at a
+/// reduced sample — small enough to run twice per CI job.
+pub fn smoke_grid() -> Grid {
+    let mut g = JobGraph::new();
+    let policy_summary = push_policy_block(
+        &mut g,
+        &["resnet18"],
+        &[PolicyKind::QmQe, PolicyKind::QmOnly],
+        &SweepConfig {
+            epochs: 6,
+            steps_per_epoch: 20,
+            batch: 128,
+            sample: 8 * 1024,
+            ..Default::default()
+        },
+    );
+    let stash_summary = push_stash_block(
+        &mut g,
+        &["resnet18", "mobilenet"],
+        &[CodecKind::Gecko, CodecKind::Js],
+        &[0, 256 * 1024],
+        128,
+        8 * 1024,
+    );
+    g.push(JobSpec::Table1, vec![]);
+    g.push(
+        JobSpec::Table2 {
+            batch: 256,
+            source: "model".into(),
+        },
+        vec![],
+    );
+    for id in [9usize, 10, 12, 13] {
+        g.push(
+            JobSpec::Figure {
+                id,
+                batch: 256,
+                sample: 4096,
+            },
+            vec![],
+        );
+    }
+    Grid {
+        graph: g,
+        policy_summary: Some(policy_summary),
+        stash_summary: Some(stash_summary),
+    }
+}
+
+/// Aggregate outcome counts of a run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RunTotals {
+    pub total: usize,
+    pub executed: usize,
+    pub cached: usize,
+    pub failed: usize,
+    pub skipped: usize,
+}
+
+impl RunTotals {
+    pub fn of(reports: &[JobReport]) -> RunTotals {
+        let mut t = RunTotals {
+            total: reports.len(),
+            ..Default::default()
+        };
+        for r in reports {
+            match r.status {
+                JobStatus::Executed => t.executed += 1,
+                JobStatus::Cached => t.cached += 1,
+                JobStatus::Failed(_) => t.failed += 1,
+                JobStatus::Skipped => t.skipped += 1,
+            }
+        }
+        t
+    }
+
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.total == 0 {
+            return 1.0;
+        }
+        self.cached as f64 / self.total as f64
+    }
+}
+
+/// Write the consolidated `lab_manifest.json` for one run: per-job rows
+/// (kind, label, content hash, status, wall-clock, artifact fingerprints)
+/// plus the totals the warm-cache acceptance gate asserts on.
+pub fn write_manifest(
+    path: &Path,
+    reports: &[JobReport],
+    wall_ms: f64,
+    mode: &str,
+) -> Result<RunTotals> {
+    let totals = RunTotals::of(reports);
+    let jobs: Vec<Json> = reports
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("id".to_string(), Json::Num(r.id as f64));
+            m.insert("kind".to_string(), Json::Str(r.kind.clone()));
+            m.insert("label".to_string(), Json::Str(r.label.clone()));
+            m.insert("hash".to_string(), Json::Str(r.hash.clone()));
+            let (status, error) = match &r.status {
+                JobStatus::Executed => ("executed", None),
+                JobStatus::Cached => ("cached", None),
+                JobStatus::Failed(e) => ("failed", Some(e.clone())),
+                JobStatus::Skipped => ("skipped", None),
+            };
+            m.insert("status".to_string(), Json::Str(status.to_string()));
+            if let Some(e) = error {
+                m.insert("error".to_string(), Json::Str(e));
+            }
+            m.insert("wall_ms".to_string(), Json::Num(r.wall_ms));
+            m.insert(
+                "artifacts".to_string(),
+                Json::Arr(
+                    r.artifacts
+                        .iter()
+                        .map(super::cache::ArtifactInfo::to_json)
+                        .collect(),
+                ),
+            );
+            Json::Obj(m)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("mode".to_string(), Json::Str(mode.to_string()));
+    root.insert("wall_ms".to_string(), Json::Num(wall_ms));
+    root.insert("total_jobs".to_string(), Json::Num(totals.total as f64));
+    root.insert("executed".to_string(), Json::Num(totals.executed as f64));
+    root.insert("cached".to_string(), Json::Num(totals.cached as f64));
+    root.insert("failed".to_string(), Json::Num(totals.failed as f64));
+    root.insert("skipped".to_string(), Json::Num(totals.skipped as f64));
+    root.insert(
+        "cache_hit_rate".to_string(),
+        Json::Num(totals.cache_hit_rate()),
+    );
+    root.insert("jobs".to_string(), Json::Arr(jobs));
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, Json::Obj(root).to_string())?;
+    Ok(totals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_grid_shape() {
+        let grid = smoke_grid();
+        // 2 policy + summary + 8 stash + summary + 2 tables + 4 figures
+        assert_eq!(grid.graph.len(), 18);
+        let hashes = grid.graph.hashes();
+        let unique: std::collections::BTreeSet<_> = hashes.iter().collect();
+        assert_eq!(unique.len(), hashes.len(), "every job hash distinct");
+    }
+
+    #[test]
+    fn paper_grid_covers_the_axes() {
+        let grid = paper_grid(&GridOptions::default());
+        let kinds: Vec<&str> = grid
+            .graph
+            .nodes
+            .iter()
+            .map(|n| n.spec.kind())
+            .collect();
+        // 6 policy runs (2 models × 3 policies)
+        assert_eq!(kinds.iter().filter(|k| **k == "policy").count(), 6);
+        // 16 stash runs (2 models × 4 codecs × 2 budgets)
+        assert_eq!(kinds.iter().filter(|k| **k == "stash").count(), 16);
+        assert!(kinds.contains(&"table1") && kinds.contains(&"table2"));
+        assert_eq!(kinds.iter().filter(|k| **k == "figure").count(), 4);
+        // no artifacts dir: the e2e leg stays out
+        assert!(!kinds.contains(&"train"));
+    }
+}

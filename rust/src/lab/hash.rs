@@ -1,0 +1,73 @@
+//! Deterministic content hashing for job identities and artifact
+//! fingerprints (FNV-1a 64-bit — the environment is offline, so no crypto
+//! crates; collision resistance at lab-grid scale is ample and the hash is
+//! stable across runs, platforms, and compilers by construction).
+
+/// FNV-1a over a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Canonical 16-hex-digit rendering of a content hash.
+pub fn hex16(h: u64) -> String {
+    format!("{h:016x}")
+}
+
+/// Hash a job identity: its kind, canonical parameter JSON, the hashes of
+/// its dependencies (so one upstream config change re-hashes — and
+/// therefore re-runs — exactly the downstream cone), and the cache schema
+/// version.  Field separators are unambiguous (`\x1f`), so adjacent
+/// fields can never alias.
+pub fn job_hash(kind: &str, params_json: &str, dep_hashes: &[String], version: u32) -> String {
+    let mut buf = String::with_capacity(params_json.len() + 64);
+    buf.push_str(kind);
+    buf.push('\x1f');
+    buf.push_str(params_json);
+    buf.push('\x1f');
+    for d in dep_hashes {
+        buf.push_str(d);
+        buf.push(',');
+    }
+    buf.push('\x1f');
+    buf.push_str(&version.to_string());
+    hex16(fnv1a64(buf.as_bytes()))
+}
+
+/// Hash a file's contents (artifact fingerprints in the cache records and
+/// the lab manifest — what the byte-equivalence acceptance check compares).
+pub fn file_hash(path: &std::path::Path) -> std::io::Result<String> {
+    let bytes = std::fs::read(path)?;
+    Ok(hex16(fnv1a64(&bytes)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn job_hash_separates_fields() {
+        // kind/params must not alias across the separator
+        let a = job_hash("ab", "c", &[], 1);
+        let b = job_hash("a", "bc", &[], 1);
+        assert_ne!(a, b);
+        // dep hashes feed the identity
+        let no_dep = job_hash("k", "p", &[], 1);
+        let dep = job_hash("k", "p", &["x".into()], 1);
+        assert_ne!(no_dep, dep);
+        // schema version bumps invalidate everything
+        assert_ne!(job_hash("k", "p", &[], 1), job_hash("k", "p", &[], 2));
+    }
+}

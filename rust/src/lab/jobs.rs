@@ -1,0 +1,166 @@
+//! Job execution bodies: one function per [`JobSpec`] kind, writing
+//! deterministic artifacts into the staging directory the executor hands
+//! over.  Jobs never print and never time themselves — stdout belongs to
+//! the CLI drivers and timings to the run manifest — so artifact bytes
+//! depend only on the spec (the parallel-vs-serial byte-equivalence
+//! guarantee).  Consolidation jobs read their inputs exclusively through
+//! the dependency records' cached artifact directories.
+
+use super::cache::JobRecord;
+use super::measure::{run_stash_measurement, trace_model};
+use super::spec::{JobSpec, TrainSpec};
+use crate::coordinator::{TrainConfig, Trainer, Variant};
+use crate::hwsim::AccelConfig;
+use crate::policy::sweep;
+use crate::report::{figures, tables};
+use crate::runtime::Runtime;
+use crate::stash::StashConfig;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Execute `spec`, writing artifacts under `art_dir`; `deps` are the
+/// completed dependency records in graph-edge order.
+pub fn execute_spec(spec: &JobSpec, art_dir: &Path, deps: &[JobRecord]) -> Result<()> {
+    match spec {
+        JobSpec::PolicyRun { model, policy, cfg } => {
+            let net = trace_model(model)?;
+            let res = sweep::run_policy(&net, *policy, cfg)?;
+            res.write_json(&art_dir.join("policy.json"))
+        }
+        JobSpec::PolicySummary => policy_summary(art_dir, deps),
+        JobSpec::StashRun(sp) => {
+            let m = run_stash_measurement(sp)?;
+            std::fs::write(art_dir.join("stash.json"), m.to_json().to_string())?;
+            Ok(())
+        }
+        JobSpec::StashSummary => stash_summary(art_dir, deps),
+        JobSpec::Table1 => {
+            let rows = tables::table1();
+            std::fs::write(
+                art_dir.join("table1.json"),
+                tables::table1_json(&rows).to_string(),
+            )?;
+            Ok(())
+        }
+        JobSpec::Table2 { batch, source } => {
+            let rows = match source.as_str() {
+                "model" => tables::table2(&AccelConfig::default(), *batch),
+                "stash" => tables::table2_stash(&AccelConfig::default(), *batch)?,
+                other => return Err(anyhow!("unknown table2 source {other} (model|stash)")),
+            };
+            std::fs::write(
+                art_dir.join("table2.json"),
+                tables::table2_json(&rows).to_string(),
+            )?;
+            Ok(())
+        }
+        JobSpec::Figure { id, batch, sample } => {
+            figures::trace_figure(art_dir, *id, *batch, *sample)?;
+            Ok(())
+        }
+        JobSpec::Train(t) => run_train(t, art_dir),
+    }
+}
+
+/// Read one named JSON artifact from a dependency record.
+fn dep_json(rec: &JobRecord, name: &str) -> Result<Json> {
+    let path = rec.artifacts_dir.join(name);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("read dependency artifact {}", path.display()))?;
+    Json::parse(&text).map_err(|e| anyhow!("parse {}: {e}", path.display()))
+}
+
+/// Consolidate upstream policy runs: per-policy averages of the footprint
+/// reductions (the paper's QM+QE 4.74×→5.64× / BitWave 3.19×→4.56× axis)
+/// plus every run's own numbers.
+fn policy_summary(art_dir: &Path, deps: &[JobRecord]) -> Result<()> {
+    // BTreeMap keyed by policy label: deterministic iteration order
+    let mut by_policy: BTreeMap<String, Vec<Json>> = BTreeMap::new();
+    for rec in deps.iter().filter(|r| r.kind == "policy") {
+        let j = dep_json(rec, "policy.json")?;
+        let policy = j
+            .get("policy")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("policy.json missing 'policy'"))?
+            .to_string();
+        let mut run = BTreeMap::new();
+        for key in ["network", "plan_reduction", "gecko_reduction", "final_plan_bits"] {
+            if let Some(v) = j.get(key) {
+                run.insert(key.to_string(), v.clone());
+            }
+        }
+        by_policy.entry(policy).or_default().push(Json::Obj(run));
+    }
+    let avg = |runs: &[Json], key: &str| -> f64 {
+        let vals: Vec<f64> = runs
+            .iter()
+            .filter_map(|r| r.get(key).and_then(Json::as_f64))
+            .collect();
+        vals.iter().sum::<f64>() / vals.len().max(1) as f64
+    };
+    let policies: Vec<Json> = by_policy
+        .iter()
+        .map(|(policy, runs)| {
+            let mut m = BTreeMap::new();
+            m.insert("policy".to_string(), Json::Str(policy.clone()));
+            m.insert(
+                "avg_plan_reduction".to_string(),
+                Json::Num(avg(runs, "plan_reduction")),
+            );
+            m.insert(
+                "avg_gecko_reduction".to_string(),
+                Json::Num(avg(runs, "gecko_reduction")),
+            );
+            m.insert("runs".to_string(), Json::Arr(runs.clone()));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("policies".to_string(), Json::Arr(policies));
+    std::fs::write(
+        art_dir.join("policy_summary.json"),
+        Json::Obj(root).to_string(),
+    )?;
+    Ok(())
+}
+
+/// Consolidate upstream stash runs into one `stash_sweep.json` array (the
+/// `repro stash` sweep output, now cache-addressed per budget point).
+fn stash_summary(art_dir: &Path, deps: &[JobRecord]) -> Result<()> {
+    let mut rows = Vec::new();
+    for rec in deps.iter().filter(|r| r.kind == "stash") {
+        rows.push(dep_json(rec, "stash.json")?);
+    }
+    std::fs::write(art_dir.join("stash_sweep.json"), Json::Arr(rows).to_string())?;
+    Ok(())
+}
+
+/// One e2e training run against the compiled AOT artifacts; the Trainer's
+/// metric sinks (summary JSON, step CSV, footprint-over-time CSV) land
+/// directly in the job's artifact directory.
+fn run_train(t: &TrainSpec, art_dir: &Path) -> Result<()> {
+    let variant = Variant::parse(&t.variant, t.container)
+        .ok_or_else(|| anyhow!("unknown train variant {}", t.variant))?;
+    let rt = Runtime::load(Path::new(&t.artifacts_dir))?;
+    let cfg = TrainConfig {
+        variant,
+        epochs: t.epochs,
+        steps_per_epoch: t.steps_per_epoch,
+        eval_batches: t.eval_batches,
+        lr0: t.lr0 as f32,
+        momentum: t.momentum as f32,
+        seed: t.seed,
+        out_dir: Some(art_dir.to_path_buf()),
+        stash: t.stash_codec.map(|codec| StashConfig {
+            codec,
+            threads: 0,
+            queue_depth: 0,
+            chunk_values: 0,
+            budget_bytes: t.budget_bytes,
+        }),
+    };
+    Trainer::new(&rt, cfg).run()?;
+    Ok(())
+}

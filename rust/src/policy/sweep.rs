@@ -62,7 +62,7 @@ impl PolicyKind {
     }
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SweepConfig {
     pub epochs: usize,
     pub steps_per_epoch: usize,

@@ -9,8 +9,8 @@ use crate::coordinator::metrics::CsvSink;
 use crate::coordinator::RunResult;
 use crate::formats::Container;
 use crate::stats::{EncodedWidthCdf, ExponentHistogram, Footprint};
-use crate::traces::NetworkTrace;
-use anyhow::Result;
+use crate::traces::{mobilenet_v3_small, resnet18, NetworkTrace};
+use anyhow::{anyhow, Result};
 use std::path::Path;
 
 /// Figs 2 & 6: validation accuracy per epoch, variant vs baseline.
@@ -222,6 +222,44 @@ pub fn fig13(path: &Path, net: &NetworkTrace, batch: usize) -> Result<()> {
         csv.row(&[i as f64, r.bits, r.bits / bf16])?;
     }
     csv.flush()
+}
+
+/// Emit one trace-source figure (ids 9, 10, 12, 13) into `dir`, returning
+/// the file names written — the figure half of `repro fig` factored out so
+/// lab figure jobs and the CLI share one driver.
+pub fn trace_figure(dir: &Path, id: usize, batch: usize, sample: usize) -> Result<Vec<String>> {
+    std::fs::create_dir_all(dir)?;
+    match id {
+        9 => {
+            let (hw, ha) = fig9_from_trace(&resnet18(), sample);
+            fig9_exponents(&dir.join("fig9_exponents.csv"), &hw, &ha)?;
+            Ok(vec!["fig9_exponents.csv".into()])
+        }
+        10 => {
+            let (cw, ca) = fig10_from_trace(&resnet18(), sample);
+            fig10_cdf(&dir.join("fig10_gecko_cdf.csv"), &cw, &ca)?;
+            Ok(vec!["fig10_gecko_cdf.csv".into()])
+        }
+        12 => {
+            let mut out = Vec::new();
+            for net in [resnet18(), mobilenet_v3_small()] {
+                let name = format!("fig12_components_{}.csv", net.name.to_lowercase());
+                fig12_components(&dir.join(&name), &net, batch)?;
+                out.push(name);
+            }
+            Ok(out)
+        }
+        13 => {
+            let mut out = Vec::new();
+            for net in [resnet18(), mobilenet_v3_small()] {
+                let name = format!("fig13_activation_{}.csv", net.name.to_lowercase());
+                fig13(&dir.join(&name), &net, batch)?;
+                out.push(name);
+            }
+            Ok(out)
+        }
+        other => Err(anyhow!("not a trace-source figure id: {other} (9|10|12|13)")),
+    }
 }
 
 #[cfg(test)]

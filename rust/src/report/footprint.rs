@@ -6,6 +6,12 @@
 //! exact encoded bits with the production codec paths, and scale by the
 //! tensor's true element count — the codecs are linear in group count, so
 //! the scaling is exact up to one partial group.
+//!
+//! The stash-measured counterpart of this model lives in
+//! [`crate::lab::measure`]: `repro stash` lab jobs store the *same*
+//! seeded streams through the real codec paths and gate the divergence
+//! (exact for gecko at the model's own `SAMPLE`/`STREAM_SEED`, exact for
+//! raw and js at any sample, reported-ungated for sfp's metadata framing).
 
 use crate::baselines::{self, ActKind};
 use crate::formats::Container;

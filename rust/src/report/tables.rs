@@ -134,6 +134,49 @@ pub fn table2_stash(cfg: &AccelConfig, batch: usize) -> anyhow::Result<Vec<Table
         .collect()
 }
 
+/// Table I rows as a deterministic JSON array (the lab's `table1` job
+/// artifact).
+pub fn table1_json(rows: &[Table1Row]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("network".to_string(), Json::Str(r.network.clone()));
+                m.insert("bf16_rel".to_string(), Json::Num(r.bf16_rel));
+                m.insert("qm_rel".to_string(), Json::Num(r.qm_rel));
+                m.insert("bc_rel".to_string(), Json::Num(r.bc_rel));
+                Json::Obj(m)
+            })
+            .collect(),
+    )
+}
+
+/// Table II rows as a deterministic JSON array (the lab's `table2` job
+/// artifact).
+pub fn table2_json(rows: &[Table2Row]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("network".to_string(), Json::Str(r.network.clone()));
+                m.insert("bf16_speedup".to_string(), Json::Num(r.bf16.0));
+                m.insert("bf16_energy".to_string(), Json::Num(r.bf16.1));
+                m.insert("qm_speedup".to_string(), Json::Num(r.qm.0));
+                m.insert("qm_energy".to_string(), Json::Num(r.qm.1));
+                m.insert("bc_speedup".to_string(), Json::Num(r.bc.0));
+                m.insert("bc_energy".to_string(), Json::Num(r.bc.1));
+                m.insert("membound_fp32".to_string(), Json::Num(r.membound_fp32));
+                m.insert("membound_qm".to_string(), Json::Num(r.membound_qm));
+                Json::Obj(m)
+            })
+            .collect(),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -14,6 +14,16 @@
 //! [`StashLedger`](super::ledger::StashLedger) so DRAM and spill traffic
 //! stay separable in the reports and the hwsim DRAM model.
 //!
+//! Spill I/O runs *off* the arena mutex: each slot carries an in-flight
+//! [`IoState`], the lock is held only to transition tier state, and the
+//! pread/pwrite itself happens with the lock released.  A concurrent
+//! `pin` of a chunk mid-fault waits on that chunk (condvar, re-checked
+//! per slot), not on the whole arena — parallel lab jobs sharing one
+//! process stop serializing on each other's spill traffic.  Evictions
+//! stay transparent because chunk buffers are immutable once stored: the
+//! file copy written outside the lock is always bit-identical to the
+//! buffer a concurrent reader may still be pinning.
+//!
 //! Reads are zero-copy: [`ChunkArena::pin`] hands back `Arc` references to
 //! the chunk buffers themselves (a [`PinnedStream`]), which a
 //! [`SegReader`](crate::gecko::SegReader) decodes in place.  A pinned
@@ -26,7 +36,7 @@ use std::fs::{File, OpenOptions};
 use std::os::unix::fs::FileExt;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Words per arena chunk (32 KiB).  Small enough that a short stream wastes
 /// little, large enough that multi-MB activation stashes need few slots.
@@ -72,6 +82,20 @@ impl PinnedStream {
     }
 }
 
+/// Tier-crossing I/O currently in flight on a slot.  The pwrite/pread runs
+/// with the arena lock released; the slot state keeps concurrent callers
+/// coherent (pins of a `Reading` chunk wait on it, pins of a `Writing`
+/// chunk keep using the still-resident buffer).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+enum IoState {
+    #[default]
+    Idle,
+    /// Eviction pwrite in flight; `buf` stays set until it completes.
+    Writing,
+    /// Demand-fault pread in flight; `buf` appears when it completes.
+    Reading,
+}
+
 /// One chunk slot.  Live slots are either DRAM-resident (`buf` set) or
 /// spilled (`file_slot` set); free-listed slots keep their buffer for
 /// reuse when no reader pins it.
@@ -80,6 +104,7 @@ struct Slot {
     buf: Option<Arc<[u64]>>,
     file_slot: Option<u32>,
     live: bool,
+    io: IoState,
     /// Last-touch stamp (store or pin) — the cold-run eviction order.
     stamp: u64,
 }
@@ -94,18 +119,29 @@ struct Slabs {
     /// Live spilled chunks.
     spilled: usize,
     spill_high_water: usize,
+    /// Eviction pwrites currently in flight (their chunks still count in
+    /// `in_use`, so budget planning must not re-select or double-count).
+    pending_writes: usize,
     /// Recycled slots of the spill file.
     free_file_slots: Vec<u32>,
     /// Spill-file slots ever created (file length / CHUNK_BYTES).
     file_slots: u32,
-    /// Lazily created, unlinked-on-create backing file of the spill tier.
-    spill_file: Option<File>,
-    /// Reusable serialization buffer for spill writes (no 32 KiB alloc
-    /// per eviction under the lock).
-    scratch: Vec<u8>,
+    /// Lazily created, unlinked-on-create backing file of the spill tier
+    /// (`Arc` so the pwrite/pread can run with the arena lock released).
+    spill_file: Option<Arc<File>>,
     stamp: u64,
     evictions: u64,
     faults: u64,
+}
+
+/// One planned eviction, carried out of the lock: the pwrite happens on
+/// the caller's thread with the arena unlocked, then a short re-lock
+/// finalizes the tier transition.
+struct PendingSpill {
+    id: u32,
+    fslot: u32,
+    buf: Arc<[u64]>,
+    file: Arc<File>,
 }
 
 /// Shared, thread-safe tiered chunk store (workers encode into it
@@ -113,6 +149,8 @@ struct Slabs {
 #[derive(Default)]
 pub struct ChunkArena {
     inner: Mutex<Slabs>,
+    /// Signals per-chunk I/O completion (pins waiting on a faulting chunk).
+    cv: Condvar,
     /// DRAM budget in bytes; 0 = unlimited (spill tier disabled).
     budget_bytes: usize,
     /// Directory for the spill file (`None` = the OS temp dir).
@@ -166,6 +204,7 @@ impl ChunkArena {
     ) -> Self {
         Self {
             inner: Mutex::default(),
+            cv: Condvar::new(),
             budget_bytes,
             spill_dir,
             ledger,
@@ -173,7 +212,8 @@ impl ChunkArena {
     }
 
     /// Store a packed bit stream; copies `len_bits.div_ceil(64)` words.
-    /// May evict cold chunks to the spill tier to honor the budget.
+    /// May evict cold chunks to the spill tier to honor the budget (the
+    /// eviction writes run after the arena lock is released).
     pub fn store(&self, words: &[u64], len_bits: usize) -> ChunkSeq {
         let used = len_bits.div_ceil(64);
         debug_assert!(used <= words.len());
@@ -190,7 +230,7 @@ impl ChunkArena {
                 }
             };
             let slot = &mut inner.slots[id as usize];
-            debug_assert!(!slot.live && slot.file_slot.is_none());
+            debug_assert!(!slot.live && slot.file_slot.is_none() && slot.io == IoState::Idle);
             // Reuse the free-listed buffer only when no reader still pins
             // it: a PinnedStream must keep observing the bits it pinned.
             let mut buf = slot
@@ -207,29 +247,83 @@ impl ChunkArena {
         }
         inner.in_use += slots.len();
         inner.high_water = inner.high_water.max(inner.in_use);
-        self.enforce_budget(&mut inner);
+        let pending = self.plan_evictions(&mut inner);
+        drop(inner);
+        self.complete_evictions(pending);
         ChunkSeq { slots, len_bits }
     }
 
     /// Pin a stored stream for zero-copy decoding: spilled chunks fault
-    /// back to DRAM, resident chunks are `Arc`-shared in place.
+    /// back to DRAM (the pread runs with the arena unlocked), resident
+    /// chunks are `Arc`-shared in place.  A chunk another thread is
+    /// already faulting is waited on per-chunk, not per-arena.
     pub fn pin(&self, seq: &ChunkSeq) -> PinnedStream {
         let mut inner = self.inner.lock().unwrap();
         inner.stamp += 1;
         let stamp = inner.stamp;
         let mut chunks = Vec::with_capacity(seq.slots.len());
         for &id in &seq.slots {
-            inner.slots[id as usize].stamp = stamp;
-            let existing = inner.slots[id as usize].buf.clone();
-            let buf = match existing {
-                Some(b) => b,
-                None => self.fault_in(&mut inner, id),
+            let idx = id as usize;
+            let buf = loop {
+                inner.slots[idx].stamp = stamp;
+                if let Some(b) = inner.slots[idx].buf.clone() {
+                    // Resident (possibly mid-eviction-write, which keeps
+                    // the buffer valid until it completes): share in place.
+                    break b;
+                }
+                if inner.slots[idx].io == IoState::Reading {
+                    // Another pin is faulting this exact chunk: wait for
+                    // *it*, re-checking this slot only — stores and pins
+                    // of other chunks proceed under the lock we release.
+                    inner = self.cv.wait(inner).unwrap();
+                    continue;
+                }
+                debug_assert_eq!(inner.slots[idx].io, IoState::Idle);
+                // Spilled and idle: fault it in ourselves, lock dropped
+                // around the pread.
+                inner.slots[idx].io = IoState::Reading;
+                let fslot = inner.slots[idx]
+                    .file_slot
+                    .take()
+                    .expect("chunk neither resident nor spilled");
+                let file = Arc::clone(
+                    inner
+                        .spill_file
+                        .as_ref()
+                        .expect("spill file exists for spilled chunk"),
+                );
+                drop(inner);
+                let mut bytes = vec![0u8; CHUNK_BYTES];
+                file.read_exact_at(&mut bytes, fslot as u64 * CHUNK_BYTES as u64)
+                    .expect("spill tier read failed");
+                let buf: Arc<[u64]> = bytes_to_words(&bytes).into();
+                inner = self.inner.lock().unwrap();
+                inner.slots[idx].io = IoState::Idle;
+                inner.slots[idx].buf = Some(Arc::clone(&buf));
+                inner.free_file_slots.push(fslot);
+                inner.spilled -= 1;
+                inner.faults += 1;
+                if inner.slots[idx].live {
+                    inner.in_use += 1;
+                    inner.high_water = inner.high_water.max(inner.in_use);
+                } else {
+                    // Released while the fault was in flight: finish the
+                    // deferred free (the buffer stays cached for reuse).
+                    inner.free.push(id);
+                }
+                if let Some(l) = &self.ledger {
+                    l.record_spill_read((CHUNK_BYTES * 8) as f64);
+                }
+                self.cv.notify_all();
+                break buf;
             };
             chunks.push(buf);
         }
         // Faulting a run back in may overshoot the budget; re-evict cold
         // chunks (the pinned Arcs stay valid regardless).
-        self.enforce_budget(&mut inner);
+        let pending = self.plan_evictions(&mut inner);
+        drop(inner);
+        self.complete_evictions(pending);
         PinnedStream {
             chunks,
             len_bits: seq.len_bits,
@@ -249,17 +343,18 @@ impl ChunkArena {
     }
 
     /// Return a stream's chunks to the free list (spill-file slots of
-    /// evicted chunks are recycled too).
+    /// evicted chunks are recycled too).  A chunk with tier I/O in flight
+    /// is only marked dead here; the I/O completion finishes the free.
     pub fn release(&self, seq: ChunkSeq) {
         let mut inner = self.inner.lock().unwrap();
         for id in seq.slots {
-            let fslot = {
-                let slot = &mut inner.slots[id as usize];
-                debug_assert!(slot.live);
-                slot.live = false;
-                slot.file_slot.take()
-            };
-            match fslot {
+            let idx = id as usize;
+            debug_assert!(inner.slots[idx].live);
+            inner.slots[idx].live = false;
+            if inner.slots[idx].io != IoState::Idle {
+                continue; // complete_evictions / the faulting pin finalizes
+            }
+            match inner.slots[idx].file_slot.take() {
                 Some(f) => {
                     inner.free_file_slots.push(f);
                     inner.spilled -= 1;
@@ -270,108 +365,113 @@ impl ChunkArena {
         }
     }
 
-    /// Evict one resident chunk to the spill file.
-    ///
-    /// Runs under the arena lock, including the pwrite — the slot's tier
-    /// state and its file bytes must change together or a concurrent
-    /// `pin` could fault in a half-written chunk.  Correctness-first for
-    /// now; staging in-flight writes so the lock drops around the I/O is
-    /// a ROADMAP item.
-    fn evict_one(&self, inner: &mut Slabs, id: u32) {
-        let Some(buf) = inner.slots[id as usize].buf.take() else {
-            return;
-        };
-        let fslot = match inner.free_file_slots.pop() {
-            Some(f) => f,
-            None => {
-                let f = inner.file_slots;
-                inner.file_slots += 1;
-                f
-            }
-        };
-        if inner.spill_file.is_none() {
-            inner.spill_file = Some(create_spill_file(self.spill_dir.as_deref()));
-        }
-        inner.scratch.clear();
-        for w in buf.iter() {
-            inner.scratch.extend_from_slice(&w.to_le_bytes());
-        }
-        inner
-            .spill_file
-            .as_ref()
-            .expect("spill file just created")
-            .write_all_at(&inner.scratch, fslot as u64 * CHUNK_BYTES as u64)
-            .expect("spill tier write failed");
-        inner.slots[id as usize].file_slot = Some(fslot);
-        inner.in_use -= 1;
-        inner.spilled += 1;
-        inner.spill_high_water = inner.spill_high_water.max(inner.spilled);
-        inner.evictions += 1;
-        if let Some(l) = &self.ledger {
-            l.record_spill_write((CHUNK_BYTES * 8) as f64);
-        }
-    }
-
-    /// Fault one spilled chunk back to DRAM (caller holds the lock).
-    fn fault_in(&self, inner: &mut Slabs, id: u32) -> Arc<[u64]> {
-        let fslot = inner.slots[id as usize]
-            .file_slot
-            .take()
-            .expect("chunk neither resident nor spilled");
-        let mut bytes = vec![0u8; CHUNK_BYTES];
-        inner
-            .spill_file
-            .as_ref()
-            .expect("spill file exists for spilled chunk")
-            .read_exact_at(&mut bytes, fslot as u64 * CHUNK_BYTES as u64)
-            .expect("spill tier read failed");
-        let buf: Arc<[u64]> = bytes_to_words(&bytes).into();
-        inner.free_file_slots.push(fslot);
-        inner.slots[id as usize].buf = Some(Arc::clone(&buf));
-        inner.in_use += 1;
-        inner.high_water = inner.high_water.max(inner.in_use);
-        inner.spilled -= 1;
-        inner.faults += 1;
-        if let Some(l) = &self.ledger {
-            l.record_spill_read((CHUNK_BYTES * 8) as f64);
-        }
-        buf
-    }
-
-    /// Evict the coldest live resident chunks until the DRAM tier is back
-    /// under budget (no-op when unbounded).
-    fn enforce_budget(&self, inner: &mut Slabs) {
+    /// Pick the coldest live resident chunks to evict until the DRAM tier
+    /// is back under budget (no-op when unbounded), reserve their spill
+    /// slots, and mark them `Writing` — the caller performs the pwrites
+    /// via [`ChunkArena::complete_evictions`] *after* dropping the lock.
+    fn plan_evictions(&self, inner: &mut Slabs) -> Vec<PendingSpill> {
         if self.budget_bytes == 0 {
-            return;
+            return Vec::new();
         }
         let budget_chunks = self.budget_bytes / CHUNK_BYTES;
-        if inner.in_use <= budget_chunks {
-            return;
+        // Chunks already being written out will leave `in_use` when their
+        // I/O completes; don't double-evict for them.
+        let effective = inner.in_use.saturating_sub(inner.pending_writes);
+        if effective <= budget_chunks {
+            return Vec::new();
         }
         let mut cands: Vec<(u64, u32)> = inner
             .slots
             .iter()
             .enumerate()
-            .filter(|(_, s)| s.live && s.buf.is_some())
+            .filter(|(_, s)| {
+                s.live && s.buf.is_some() && s.io == IoState::Idle && s.file_slot.is_none()
+            })
             .map(|(i, s)| (s.stamp, i as u32))
             .collect();
         // Only the k coldest need to go: partition them to the front in
         // O(n) instead of fully sorting the candidate list (which would
         // cost O(n log n) under the arena lock on every over-budget store).
-        let k = (inner.in_use - budget_chunks).min(cands.len());
+        let k = (effective - budget_chunks).min(cands.len());
         if k == 0 {
-            return;
+            return Vec::new();
         }
         if k < cands.len() {
             cands.select_nth_unstable(k - 1);
             cands.truncate(k);
         }
-        for (_, id) in cands {
-            if inner.in_use <= budget_chunks {
-                break;
-            }
-            self.evict_one(inner, id);
+        if inner.spill_file.is_none() {
+            inner.spill_file = Some(Arc::new(create_spill_file(self.spill_dir.as_deref())));
         }
+        let file = Arc::clone(inner.spill_file.as_ref().expect("spill file just created"));
+        let mut out = Vec::with_capacity(cands.len());
+        for (_, id) in cands {
+            let fslot = match inner.free_file_slots.pop() {
+                Some(f) => f,
+                None => {
+                    let f = inner.file_slots;
+                    inner.file_slots += 1;
+                    f
+                }
+            };
+            inner.slots[id as usize].io = IoState::Writing;
+            let buf = inner.slots[id as usize]
+                .buf
+                .clone()
+                .expect("eviction candidate is resident");
+            inner.pending_writes += 1;
+            out.push(PendingSpill {
+                id,
+                fslot,
+                buf,
+                file: Arc::clone(&file),
+            });
+        }
+        out
+    }
+
+    /// Write planned evictions to the spill file (arena unlocked — chunk
+    /// buffers are immutable once stored, so the file copy is always
+    /// coherent with concurrent pins), then re-lock briefly to flip the
+    /// tier state.  A chunk released mid-write recycles its reserved file
+    /// slot instead of landing spilled.
+    fn complete_evictions(&self, pending: Vec<PendingSpill>) {
+        if pending.is_empty() {
+            return;
+        }
+        let mut scratch = vec![0u8; CHUNK_BYTES];
+        for p in &pending {
+            for (dst, w) in scratch.chunks_exact_mut(8).zip(p.buf.iter()) {
+                dst.copy_from_slice(&w.to_le_bytes());
+            }
+            p.file
+                .write_all_at(&scratch, p.fslot as u64 * CHUNK_BYTES as u64)
+                .expect("spill tier write failed");
+        }
+        let mut inner = self.inner.lock().unwrap();
+        for p in pending {
+            let idx = p.id as usize;
+            inner.pending_writes -= 1;
+            inner.slots[idx].io = IoState::Idle;
+            inner.in_use -= 1;
+            if inner.slots[idx].live {
+                inner.slots[idx].file_slot = Some(p.fslot);
+                inner.slots[idx].buf = None;
+                inner.spilled += 1;
+                inner.spill_high_water = inner.spill_high_water.max(inner.spilled);
+                inner.evictions += 1;
+                if let Some(l) = &self.ledger {
+                    l.record_spill_write((CHUNK_BYTES * 8) as f64);
+                }
+            } else {
+                // Released mid-write: undo the reservation and finish the
+                // deferred free (the buffer stays cached for reuse).
+                inner.free_file_slots.push(p.fslot);
+                inner.free.push(p.id);
+            }
+        }
+        drop(inner);
+        self.cv.notify_all();
     }
 
     /// Bytes currently pinned in DRAM by live streams (whole-chunk
@@ -553,5 +653,66 @@ mod tests {
         assert_eq!(arena.load(&seq), words);
         arena.release(seq);
         assert_eq!(arena.spill_in_use_bytes(), 0);
+    }
+
+    #[test]
+    fn concurrent_pins_of_one_spilled_chunk_fault_once() {
+        // Several threads pin the same spilled stream at once: exactly one
+        // performs the pread, the others wait on that chunk's slot state
+        // (not on the whole arena) and share the faulted buffer.
+        let arena = Arc::new(ChunkArena::with_budget(CHUNK_BYTES, None, None));
+        let a: Vec<u64> = (0..CHUNK_WORDS as u64).map(|i| i ^ 0x5A5A).collect();
+        let b = vec![1u64; CHUNK_WORDS];
+        let sa = Arc::new(arena.store(&a, CHUNK_WORDS * 64));
+        let _sb = arena.store(&b, CHUNK_WORDS * 64); // spills a
+        assert_eq!(arena.evictions(), 1);
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let arena = Arc::clone(&arena);
+                let sa = Arc::clone(&sa);
+                let expect = a.clone();
+                std::thread::spawn(move || {
+                    let pin = arena.pin(&sa);
+                    assert_eq!(pin.segs()[0], &expect[..]);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // one fault serves every concurrent pin (b stays colder than a
+        // afterwards, so a is never re-evicted and re-faulted)
+        assert_eq!(arena.faults(), 1);
+    }
+
+    #[test]
+    fn concurrent_store_pin_release_stress_under_budget_pressure() {
+        // Tiny budget + several threads: every store/pin/release cycle
+        // races evictions and faults whose I/O runs off the arena lock —
+        // data must stay bit-exact and counters must return to zero.
+        let arena = Arc::new(ChunkArena::with_budget(2 * CHUNK_BYTES, None, None));
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let arena = Arc::clone(&arena);
+                std::thread::spawn(move || {
+                    for round in 0..25u64 {
+                        let words: Vec<u64> = (0..CHUNK_WORDS as u64)
+                            .map(|i| i.wrapping_mul(t as u64 + 1).wrapping_add(round << 32))
+                            .collect();
+                        let seq = arena.store(&words, CHUNK_WORDS * 64);
+                        let pin = arena.pin(&seq);
+                        assert_eq!(pin.segs()[0], &words[..], "thread {t} round {round}");
+                        assert_eq!(arena.load(&seq), words);
+                        arena.release(seq);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(arena.in_use_bytes(), 0);
+        assert_eq!(arena.spill_in_use_bytes(), 0);
+        assert!(arena.evictions() >= arena.faults());
     }
 }

@@ -13,6 +13,10 @@
 //!   switches the layout to per-row bias registers, so the policy's
 //!   exponent narrowing reaches the hardware stream too.
 //! * [`RawStashCodec`] — the FP32/BF16 baseline: container words verbatim.
+//! * [`JsStashCodec`] — the §VI-B JS zero-skip baseline on real bytes: one
+//!   tag bit per value, container words only for the non-zeros (exactly
+//!   the [`crate::baselines::js_bits`] accounting) — the real-byte leg of
+//!   the Fig. 13 combined variants.
 //!
 //! Decoding is zero-copy: [`StashCodec::decode_view`] consumes
 //! [`SegReader`]s over arena-resident chunk runs in place; the owned
@@ -373,6 +377,84 @@ impl StashCodec for RawStashCodec {
     }
 }
 
+/// JS zero-skip baseline (§VI-B) over the stored container: one tag bit
+/// per value; non-zero values additionally store their full container
+/// word.  Bit-for-bit the [`crate::baselines::js_bits`] accounting, so
+/// the analytic Fig. 13 bars and the stash-measured bytes agree exactly.
+/// A value is "zero" when it *quantizes* to +0.0 under `meta` (post-ReLU
+/// activations — the sparsity JS exploits); −0.0 keeps its sign bit and
+/// is stored, so decoding stays lossless after quantization.  Like the
+/// raw baseline, the container layout is fixed: sign elision is ignored.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct JsStashCodec;
+
+impl StashCodec for JsStashCodec {
+    fn name(&self) -> &'static str {
+        "js"
+    }
+
+    fn group(&self, _meta: &ContainerMeta) -> usize {
+        1
+    }
+
+    fn encode(&self, vals: &[f32], meta: &ContainerMeta) -> EncodedStreams {
+        let total = meta.container.total_bits();
+        let mut tags = BitWriter::with_capacity(vals.len());
+        let mut payload = BitWriter::with_capacity(vals.len() * total as usize / 2);
+        let mut nonzero = 0usize;
+        for &v in vals {
+            let q = meta.quantized(v);
+            let stored = q.to_bits() != 0;
+            tags.push(stored as u64, 1);
+            if stored {
+                nonzero += 1;
+                match meta.container {
+                    Container::Fp32 => payload.push(q.to_bits() as u64, 32),
+                    Container::Bf16 => payload.push(bf16_bits(q) as u64, 16),
+                }
+            }
+        }
+        let (tw, tb) = tags.into_words();
+        let (pw, pb) = payload.into_words();
+        let nz = nonzero as f64;
+        let bits = ComponentBits {
+            sign: nz,
+            exponent: 8.0 * nz,
+            mantissa: (total as f64 - 9.0) * nz,
+            // the per-value tag bit is the scheme's only metadata
+            metadata: tb as f64,
+        };
+        EncodedStreams {
+            count: vals.len(),
+            streams: vec![(tw, tb), (pw, pb)],
+            bits,
+        }
+    }
+
+    fn decode_view(
+        &self,
+        count: usize,
+        streams: &mut [SegReader<'_>],
+        meta: &ContainerMeta,
+    ) -> Vec<f32> {
+        let [tags, payload] = streams else {
+            panic!("js codec expects 2 streams");
+        };
+        (0..count)
+            .map(|_| {
+                if tags.read(1) == 0 {
+                    0.0
+                } else {
+                    match meta.container {
+                        Container::Fp32 => f32::from_bits(payload.read(32) as u32),
+                        Container::Bf16 => f32::from_bits((payload.read(16) as u32) << 16),
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -383,6 +465,7 @@ mod tests {
             Box::new(GeckoStashCodec),
             Box::new(SfpStashCodec),
             Box::new(RawStashCodec),
+            Box::new(JsStashCodec),
         ]
     }
 
@@ -496,6 +579,32 @@ mod tests {
                     assert_eq!(a.to_bits(), b.to_bits(), "{}", codec.name());
                 }
             }
+        }
+    }
+
+    #[test]
+    fn js_layout_matches_baseline_accounting_exactly() {
+        // The stash-measured JS bytes must equal baselines::js_bits at the
+        // stream's actual post-quantization zero fraction — that identity
+        // is what lets the Fig. 13 combined bars run on real bytes.
+        let meta = ContainerMeta::new(Container::Bf16, 3);
+        let vals = ValueModel::relu_act().sample_values(10_000, 17, true);
+        let enc = JsStashCodec.encode(&vals, &meta);
+        let zeros = vals.iter().filter(|&&v| meta.quantized(v).to_bits() == 0).count();
+        let zero_frac = zeros as f64 / vals.len() as f64;
+        assert!(zero_frac > 0.2, "relu stream should be sparse: {zero_frac}");
+        let analytic = crate::baselines::js_bits(vals.len(), zero_frac, Container::Bf16);
+        assert_eq!(enc.total_bits(), analytic);
+        assert!((enc.bits.total() - analytic as f64).abs() < 1e-9);
+        // sparse stream: JS beats the dense raw container
+        let raw = RawStashCodec.encode(&vals, &meta);
+        assert!(enc.total_bits() < raw.total_bits());
+        // and a negative-zero survives the round trip with its sign bit
+        let tricky = [0.0f32, -0.0, 1.5, 0.0];
+        let enc = JsStashCodec.encode(&tricky, &meta);
+        let back = JsStashCodec.decode(&enc, &meta);
+        for (&v, &b) in tricky.iter().zip(&back) {
+            assert_eq!(meta.quantized(v).to_bits(), b.to_bits());
         }
     }
 

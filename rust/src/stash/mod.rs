@@ -9,7 +9,7 @@
 //!
 //! ```text
 //!  put(id, vals, meta) ──▶ [StashPool workers] ── encode_chunked ──▶
-//!        ▲ back-pressure        │ StashCodec (gecko / sfp / raw)
+//!        ▲ back-pressure        │ StashCodec (gecko / sfp / raw / js)
 //!        │ (bounded queue)      ▼
 //!        │                 [ChunkArena]  fixed 32 KiB chunks, free-list reuse
 //!        │                   │      │ budget crossed: cold runs evict ▼
@@ -19,7 +19,7 @@
 //! ```
 //!
 //! * [`codec::StashCodec`] — pluggable encode/decode, adapters over the
-//!   existing Gecko, SFP, and baseline compression stacks; per-tensor
+//!   existing Gecko, SFP, JS zero-skip, and raw baseline stacks; per-tensor
 //!   [`codec::ContainerMeta`] carries the mantissa/exponent bitlengths the
 //!   active policy (Quantum Mantissa / Quantum Exponent / BitChop) chose.
 //!   Decoding is zero-copy: [`codec::StashCodec::decode_view`] reads
@@ -50,7 +50,8 @@ pub mod pool;
 
 pub use arena::{ChunkArena, ChunkSeq, PinnedStream, CHUNK_BYTES, CHUNK_WORDS};
 pub use codec::{
-    ContainerMeta, EncodedStreams, GeckoStashCodec, RawStashCodec, SfpStashCodec, StashCodec,
+    ContainerMeta, EncodedStreams, GeckoStashCodec, JsStashCodec, RawStashCodec, SfpStashCodec,
+    StashCodec,
 };
 pub use ledger::{EpochTraffic, LedgerSnapshot, StashLedger, TensorClass};
 pub use pool::StashPool;
@@ -67,6 +68,8 @@ pub enum CodecKind {
     Gecko,
     Sfp,
     Raw,
+    /// JS zero-skip baseline (tag bit + container word per non-zero).
+    Js,
 }
 
 impl CodecKind {
@@ -75,6 +78,7 @@ impl CodecKind {
             "gecko" => Some(CodecKind::Gecko),
             "sfp" => Some(CodecKind::Sfp),
             "raw" | "dense" => Some(CodecKind::Raw),
+            "js" => Some(CodecKind::Js),
             _ => None,
         }
     }
@@ -84,6 +88,21 @@ impl CodecKind {
             CodecKind::Gecko => Arc::new(GeckoStashCodec),
             CodecKind::Sfp => Arc::new(SfpStashCodec),
             CodecKind::Raw => Arc::new(RawStashCodec),
+            CodecKind::Js => Arc::new(JsStashCodec),
+        }
+    }
+
+    /// All registered codecs (the lab grid's codec axis).
+    pub fn all() -> [CodecKind; 4] {
+        [CodecKind::Gecko, CodecKind::Sfp, CodecKind::Raw, CodecKind::Js]
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            CodecKind::Gecko => "gecko",
+            CodecKind::Sfp => "sfp",
+            CodecKind::Raw => "raw",
+            CodecKind::Js => "js",
         }
     }
 }

@@ -10,8 +10,8 @@ use sfp::policy::StepSignals;
 use sfp::stats::ExpRangeStats;
 use sfp::sfp::{sfp_bits, SfpCodec};
 use sfp::stash::{
-    CodecKind, ContainerMeta, GeckoStashCodec, RawStashCodec, SfpStashCodec, Stash, StashCodec,
-    StashConfig, TensorId,
+    CodecKind, ContainerMeta, GeckoStashCodec, JsStashCodec, RawStashCodec, SfpStashCodec, Stash,
+    StashCodec, StashConfig, TensorId,
 };
 use sfp::stats::EncodedWidthCdf;
 use sfp::util::prop::{check, Gen};
@@ -227,7 +227,7 @@ fn prop_stash_roundtrip_bit_exact_every_codec() {
             }
             meta = meta.with_sign_elision(true);
         }
-        for kind in [CodecKind::Gecko, CodecKind::Sfp, CodecKind::Raw] {
+        for kind in CodecKind::all() {
             let stash = Stash::new(StashConfig {
                 codec: kind,
                 threads: g.usize_in(1, 4),
@@ -260,7 +260,8 @@ fn prop_stash_chunked_encode_equals_one_shot() {
         let vals = arbitrary_vals(g);
         let meta = arbitrary_meta(g);
         let chunk = g.usize_in(1, 3000);
-        let codecs: [&dyn StashCodec; 3] = [&GeckoStashCodec, &SfpStashCodec, &RawStashCodec];
+        let codecs: [&dyn StashCodec; 4] =
+            [&GeckoStashCodec, &SfpStashCodec, &RawStashCodec, &JsStashCodec];
         for codec in codecs {
             let one = codec.encode(&vals, &meta);
             let cat = codec.encode_chunked(&vals, &meta, chunk);
@@ -279,7 +280,7 @@ fn prop_stash_chunked_encode_equals_one_shot() {
 fn prop_stash_ledger_conserves_bits() {
     check("ledger residency returns to zero after takes", 15, |g| {
         let stash = Stash::new(StashConfig {
-            codec: [CodecKind::Gecko, CodecKind::Sfp, CodecKind::Raw][g.usize_in(0, 2)],
+            codec: [CodecKind::Gecko, CodecKind::Sfp, CodecKind::Raw, CodecKind::Js][g.usize_in(0, 3)],
             threads: g.usize_in(1, 4),
             queue_depth: 2,
             chunk_values: 512,
@@ -316,7 +317,7 @@ fn prop_stash_restore_bit_exact_under_eviction_churn() {
     // extremes and tight fixed-bias exponent groups — must stay bit-exact
     // whether a tensor's chunks are resident, spilled, or a mix.
     check("spill churn keeps restores bit-exact", 12, |g| {
-        for kind in [CodecKind::Gecko, CodecKind::Sfp, CodecKind::Raw] {
+        for kind in CodecKind::all() {
             let stash = Stash::new(StashConfig {
                 codec: kind,
                 threads: g.usize_in(1, 3),
