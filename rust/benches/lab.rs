@@ -30,6 +30,7 @@ fn smoke_2x2x2() -> JobGraph {
                         budget_bytes: budget,
                         sample: 8 * 1024,
                         seed: STREAM_SEED,
+                        threads: 0,
                     }),
                     vec![],
                 ));

@@ -73,7 +73,9 @@ impl ResultCache {
         if let Ok(entries) = std::fs::read_dir(root) {
             for entry in entries.flatten() {
                 let name = entry.file_name().to_string_lossy().into_owned();
-                if name.starts_with(".tmp-") && staging_pid_is_dead(&name) {
+                if (name.starts_with(".tmp-") || name.starts_with(".trash-"))
+                    && staging_pid_is_dead(&name)
+                {
                     let _ = std::fs::remove_dir_all(entry.path());
                 }
             }
@@ -101,32 +103,7 @@ impl ResultCache {
     /// Look a job up by content hash; verifies the record and every
     /// artifact fingerprint so a corrupt entry reads as a miss.
     pub fn lookup(&self, kind: &str, hash: &str) -> Option<JobRecord> {
-        let dir = self.entry_dir(kind, hash);
-        let record = std::fs::read_to_string(dir.join("job.json")).ok()?;
-        let j = Json::parse(&record).ok()?;
-        let artifacts_dir = dir.join("artifacts");
-        let mut artifacts = Vec::new();
-        for a in j.get("artifacts")?.as_arr()? {
-            let info = ArtifactInfo {
-                rel: a.get("rel")?.as_str()?.to_string(),
-                bytes: a.get("bytes")?.as_f64()? as u64,
-                hash: a.get("hash")?.as_str()?.to_string(),
-            };
-            let path = artifacts_dir.join(&info.rel);
-            let meta = std::fs::metadata(&path).ok()?;
-            if meta.len() != info.bytes || file_hash(&path).ok()? != info.hash {
-                return None; // truncated or tampered entry: treat as miss
-            }
-            artifacts.push(info);
-        }
-        Some(JobRecord {
-            kind: j.get("kind")?.as_str()?.to_string(),
-            label: j.get("label")?.as_str()?.to_string(),
-            hash: j.get("hash")?.as_str()?.to_string(),
-            params_json: j.get("params")?.to_string(),
-            artifacts,
-            artifacts_dir,
-        })
+        read_entry(&self.entry_dir(kind, hash))
     }
 
     /// Begin a job execution: returns a private staging directory whose
@@ -175,18 +152,54 @@ impl ResultCache {
         std::fs::write(staging.join("job.json"), Json::Obj(rec).to_string())?;
 
         let final_dir = self.entry_dir(kind, hash);
-        match std::fs::rename(staging, &final_dir) {
-            Ok(()) => {}
-            Err(_) if final_dir.join("job.json").exists() => {
-                // lost a commit race: the winner's entry is equivalent by
-                // content-addressing; drop ours
+        let mut attempts = 0;
+        while let Err(e) = std::fs::rename(staging, &final_dir) {
+            // The slot is occupied.  A *verified* occupant means another
+            // worker or process won the commit race — by content-addressing
+            // its artifacts are equivalent, so ours are surplus and the
+            // winner's record is the result.
+            if let Some(winner) = self.lookup(kind, hash) {
                 let _ = std::fs::remove_dir_all(staging);
+                return Ok(winner);
             }
-            Err(e) => {
+            attempts += 1;
+            if attempts > 8 {
                 return Err(anyhow!(
-                    "commit rename to {} failed: {e}",
+                    "commit rename to {} failed after {attempts} attempts: {e}",
                     final_dir.display()
-                ))
+                ));
+            }
+            // The occupant looked corrupt (truncated by a killed run,
+            // tampered with, or half-deleted).  Evict it by renaming it
+            // aside — never remove_dir_all in place — then re-verify the
+            // renamed-aside copy: if it is actually a *valid* entry, a
+            // fresh commit of the same hash raced in between our lookup
+            // and the eviction, and deleting it would destroy the winner
+            // while its dependents may already be reading it — so rename
+            // it straight back (the next loop pass then yields to it).
+            // Only a copy that re-verifies as corrupt is deleted.  The
+            // trash name keeps the staging dir's pid+nonce suffix so a
+            // dead run's leftovers are swept by `open` like any orphaned
+            // staging directory.
+            let staging_name = staging
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_default();
+            // attempt counter up front: the name must keep `<pid>-<nonce>`
+            // as its trailing segments for the dead-pid sweep to parse
+            let trash = self.root.join(format!(
+                ".trash-{attempts}-{}",
+                staging_name.trim_start_matches(".tmp-")
+            ));
+            let _ = std::fs::rename(&final_dir, &trash);
+            if read_entry(&trash).is_some() {
+                // we grabbed a racing winner: restore it; if yet another
+                // equivalent entry landed meanwhile, ours-aside is surplus
+                if std::fs::rename(&trash, &final_dir).is_err() {
+                    let _ = std::fs::remove_dir_all(&trash);
+                }
+            } else {
+                let _ = std::fs::remove_dir_all(&trash);
             }
         }
         // The fingerprints were computed from the files just written; no
@@ -207,8 +220,40 @@ impl ResultCache {
     }
 }
 
-/// Does the staging-dir name `.tmp-<kind>-<hash>-<pid>-<nonce>` belong to
-/// a process that no longer exists?  Unparseable names read as live (never
+/// Read and fingerprint-verify one entry directory (a committed
+/// `<kind>-<hash>` slot, or a renamed-aside candidate during a commit-race
+/// eviction).  Any truncated or tampered artifact reads as `None`.
+fn read_entry(dir: &Path) -> Option<JobRecord> {
+    let record = std::fs::read_to_string(dir.join("job.json")).ok()?;
+    let j = Json::parse(&record).ok()?;
+    let artifacts_dir = dir.join("artifacts");
+    let mut artifacts = Vec::new();
+    for a in j.get("artifacts")?.as_arr()? {
+        let info = ArtifactInfo {
+            rel: a.get("rel")?.as_str()?.to_string(),
+            bytes: a.get("bytes")?.as_f64()? as u64,
+            hash: a.get("hash")?.as_str()?.to_string(),
+        };
+        let path = artifacts_dir.join(&info.rel);
+        let meta = std::fs::metadata(&path).ok()?;
+        if meta.len() != info.bytes || file_hash(&path).ok()? != info.hash {
+            return None; // truncated or tampered entry: treat as miss
+        }
+        artifacts.push(info);
+    }
+    Some(JobRecord {
+        kind: j.get("kind")?.as_str()?.to_string(),
+        label: j.get("label")?.as_str()?.to_string(),
+        hash: j.get("hash")?.as_str()?.to_string(),
+        params_json: j.get("params")?.to_string(),
+        artifacts,
+        artifacts_dir,
+    })
+}
+
+/// Does the staging-dir name `.tmp-<kind>-<hash>-<pid>-<nonce>` (or a
+/// commit-eviction `.trash-<n>-…-<pid>-<nonce>` leftover) belong to a
+/// process that no longer exists?  Unparseable names read as live (never
 /// delete what we can't attribute); our own pid reads as dead — a
 /// same-pid leftover can only be from a previous process instance.
 fn staging_pid_is_dead(name: &str) -> bool {
@@ -296,5 +341,75 @@ mod tests {
         let rec = cache.commit("t", "l", "h2", "{}", &s2).unwrap();
         assert_eq!(rec.artifacts.len(), 1);
         assert!(!s2.exists(), "loser staging discarded");
+    }
+
+    /// No `.tmp-` / `.trash-` residue under the cache root.
+    fn assert_no_residue(root: &Path) {
+        for entry in std::fs::read_dir(root).unwrap().flatten() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            assert!(
+                !name.starts_with(".tmp-") && !name.starts_with(".trash-"),
+                "leftover staging/trash dir {name}"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_entry_is_replaced_by_a_fresh_commit() {
+        // a fingerprint-mismatched occupant must not make the re-executed
+        // job's commit read as a lost race (which would discard the fresh
+        // artifacts and leave the corrupt entry in place forever)
+        let cache = ResultCache::open(&tdir("evict")).unwrap();
+        let s1 = cache.stage("t", "h3", 1).unwrap();
+        std::fs::write(s1.join("artifacts/a.json"), b"payload").unwrap();
+        let rec = cache.commit("t", "l", "h3", "{}", &s1).unwrap();
+        std::fs::write(rec.artifacts_dir.join("a.json"), b"pay").unwrap();
+        assert!(cache.lookup("t", "h3").is_none(), "corrupt entry = miss");
+
+        let s2 = cache.stage("t", "h3", 2).unwrap();
+        std::fs::write(s2.join("artifacts/a.json"), b"payload").unwrap();
+        let fresh = cache.commit("t", "l", "h3", "{}", &s2).unwrap();
+        assert_eq!(fresh.artifacts.len(), 1);
+        let hit = cache.lookup("t", "h3").expect("fresh entry verifies");
+        assert_eq!(hit.artifacts, fresh.artifacts);
+        assert_no_residue(cache.root());
+    }
+
+    #[test]
+    fn concurrent_same_hash_commits_leave_one_clean_entry() {
+        // many committers, one content hash: every commit must succeed
+        // (winner or graceful loser), the surviving entry must verify, and
+        // no partial directories may remain — including when the slot
+        // starts out corrupt and eviction races the fresh commits
+        let cache = ResultCache::open(&tdir("stress")).unwrap();
+        for round in 0..8u64 {
+            let hash = format!("h{round}");
+            if round % 2 == 1 {
+                // pre-corrupt the slot: a truncated artifact from a "killed run"
+                let s = cache.stage("t", &hash, 1000 + round).unwrap();
+                std::fs::write(s.join("artifacts/a.json"), b"full-payload").unwrap();
+                let rec = cache.commit("t", "l", &hash, "{}", &s).unwrap();
+                std::fs::write(rec.artifacts_dir.join("a.json"), b"x").unwrap();
+            }
+            std::thread::scope(|scope| {
+                for t in 0..8u64 {
+                    let cache = &cache;
+                    let hash = &hash;
+                    scope.spawn(move || {
+                        let s = cache.stage("t", hash, 10 * round + t).unwrap();
+                        std::fs::write(s.join("artifacts/a.json"), b"full-payload").unwrap();
+                        let rec = cache.commit("t", "l", hash, "{}", &s).unwrap();
+                        assert_eq!(rec.artifacts.len(), 1);
+                    });
+                }
+            });
+            let hit = cache.lookup("t", &hash).expect("winner verifies");
+            assert_eq!(hit.artifacts.len(), 1);
+            assert_eq!(
+                std::fs::read(hit.artifacts_dir.join("a.json")).unwrap(),
+                b"full-payload"
+            );
+        }
+        assert_no_residue(cache.root());
     }
 }

@@ -11,10 +11,21 @@
 //!
 //! Execution of one job: content-hash lookup in the
 //! [`ResultCache`](super::cache::ResultCache) first — a hit skips
-//! execution entirely (`cached` in the report); a miss runs the spec into
-//! a staging directory and commits by rename.  A failed job poisons its
+//! execution entirely (`cached` in the report); a miss is handed to the
+//! run's [`ExecBackend`], which runs the spec into a staging directory and
+//! commits by rename — either on a thread of this process
+//! ([`InProcessBackend`], job body fenced by `catch_unwind` so a panic
+//! fails one job instead of aborting the run) or in a `repro worker`
+//! subprocess ([`ProcessBackend`](super::remote::ProcessBackend), where
+//! even a killed worker only fails its job).  A failed job poisons its
 //! transitive dependents (reported `skipped`), but independent branches
 //! keep running — one broken figure doesn't waste the rest of the grid.
+//!
+//! Jobs whose bodies spin a stash worker pool take a per-job thread budget
+//! of `cores / scheduler workers` (unless their spec pins an explicit
+//! hint), so a wide grid never oversubscribes the machine with N
+//! full-sized pools.  Thread counts are an execution knob, not identity:
+//! artifact bytes are the same at any count.
 //!
 //! [`run_serial`] executes the same graph on the caller's thread in
 //! insertion order (a topological order by construction — edges only
@@ -27,7 +38,9 @@ use super::cache::{JobRecord, ResultCache};
 use super::hash::job_hash;
 use super::jobs::execute_spec;
 use super::spec::{JobSpec, CACHE_VERSION};
+use anyhow::{anyhow, Result};
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
@@ -118,10 +131,146 @@ impl JobReport {
     }
 }
 
+/// Everything a backend needs to run one cache-miss job to a committed
+/// entry: the spec, its content hash (the cache address, chained through
+/// the whole dependency cone by the orchestrator), the resolved thread
+/// budget, and the completed dependency records in graph-edge order.
+pub struct ExecRequest<'a> {
+    pub spec: &'a JobSpec,
+    pub hash: &'a str,
+    pub label: &'a str,
+    /// Worker-pool threads this job may spin (0 = whole machine).
+    pub threads: usize,
+    pub deps: &'a [JobRecord],
+}
+
+/// Where job bodies run.  The scheduler (DAG order, cache lookups, cone
+/// poisoning) is backend-agnostic; a backend only turns one cache miss
+/// into a committed `<kind>-<hash>` entry — in this process, in a worker
+/// subprocess, or on another machine entirely: the content-addressed cache
+/// is the only artifact channel either way, so artifacts are byte-identical
+/// across backends.
+pub trait ExecBackend: Sync {
+    /// Execute one job (`worker` is the scheduler thread index, letting
+    /// process backends pin one subprocess per scheduler worker).  `Ok`
+    /// returns the committed record; `Err` fails the job and poisons its
+    /// dependent cone — it must never leave a committed partial entry.
+    fn execute(
+        &self,
+        worker: usize,
+        cache: &ResultCache,
+        req: &ExecRequest,
+    ) -> Result<JobRecord>;
+}
+
+/// The default backend: stage → execute on this thread → commit.  The job
+/// body runs under `catch_unwind`, so a panicking job is a normal failure
+/// (its cone is poisoned, siblings keep running) instead of aborting the
+/// whole grid.
+#[derive(Default)]
+pub struct InProcessBackend {
+    nonce: AtomicUsize,
+}
+
+impl InProcessBackend {
+    pub fn new() -> InProcessBackend {
+        InProcessBackend::default()
+    }
+}
+
+/// Render a panic payload (`&str` / `String` are the common cases).
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// The one stage → `catch_unwind(execute)` → commit/discard sequence both
+/// execution sites share (in-process backend and the worker serve loop),
+/// so the byte-identical-across-backends contract has a single
+/// implementation: a panic or error discards the staging directory and
+/// never commits a partial entry.
+pub(crate) fn stage_execute_commit(
+    cache: &ResultCache,
+    spec: &JobSpec,
+    label: &str,
+    hash: &str,
+    nonce: u64,
+    deps: &[JobRecord],
+    threads: usize,
+) -> Result<JobRecord> {
+    let kind = spec.kind();
+    let staging = cache.stage(kind, hash, nonce)?;
+    let art_dir = staging.join("artifacts");
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        execute_spec(spec, &art_dir, deps, threads)
+    }));
+    match outcome {
+        Ok(Ok(())) => cache.commit(kind, label, hash, &spec.params_json(), &staging),
+        Ok(Err(e)) => {
+            cache.discard(&staging);
+            Err(e)
+        }
+        Err(payload) => {
+            cache.discard(&staging);
+            Err(anyhow!("job panicked: {}", panic_message(payload)))
+        }
+    }
+}
+
+impl ExecBackend for InProcessBackend {
+    fn execute(
+        &self,
+        _worker: usize,
+        cache: &ResultCache,
+        req: &ExecRequest,
+    ) -> Result<JobRecord> {
+        let nonce = self.nonce.fetch_add(1, Ordering::SeqCst) as u64;
+        stage_execute_commit(
+            cache, req.spec, req.label, req.hash, nonce, req.deps, req.threads,
+        )
+    }
+}
+
+/// Per-job stash-pool thread budget for a run with `workers` concurrent
+/// scheduler threads on a `cores`-wide machine: concurrent jobs split the
+/// cores evenly (never below 1), so total pool threads stay ≤ cores.  A
+/// single-worker (serial) run keeps 0 = whole machine.
+fn budget_for(cores: usize, workers: usize) -> usize {
+    if workers <= 1 {
+        0
+    } else {
+        (cores / workers).max(1)
+    }
+}
+
+fn detected_cores() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Resolve a run's scheduler worker count: 0 = available parallelism,
+/// always clamped to `[1, graph size]`.  Callers sizing an external
+/// resource one-to-one with scheduler workers (the process backend's
+/// subprocess slots) use this to stay in lockstep with
+/// [`run_with_backend`].
+pub fn resolve_workers(graph: &JobGraph, threads: usize) -> usize {
+    let threads = if threads == 0 { detected_cores() } else { threads };
+    threads.clamp(1, graph.len().max(1))
+}
+
 struct Scheduler<'g> {
     graph: &'g JobGraph,
     hashes: Vec<String>,
     cache: &'g ResultCache,
+    backend: &'g dyn ExecBackend,
+    /// Per-job stash-pool thread budget (0 = whole machine).
+    thread_budget: usize,
     deques: Vec<Mutex<VecDeque<usize>>>,
     remaining: Vec<AtomicUsize>,
     dependents: Vec<Vec<usize>>,
@@ -131,12 +280,17 @@ struct Scheduler<'g> {
     poisoned: Vec<AtomicUsize>,
     reports: Mutex<Vec<Option<JobReport>>>,
     done: AtomicUsize,
-    nonce: AtomicUsize,
     idle: (Mutex<usize>, Condvar),
 }
 
 impl<'g> Scheduler<'g> {
-    fn new(graph: &'g JobGraph, cache: &'g ResultCache, workers: usize) -> Scheduler<'g> {
+    fn new(
+        graph: &'g JobGraph,
+        cache: &'g ResultCache,
+        workers: usize,
+        backend: &'g dyn ExecBackend,
+        thread_budget: usize,
+    ) -> Scheduler<'g> {
         let n = graph.len();
         let mut dependents = vec![Vec::new(); n];
         for (id, node) in graph.nodes.iter().enumerate() {
@@ -148,6 +302,8 @@ impl<'g> Scheduler<'g> {
             hashes: graph.hashes(),
             graph,
             cache,
+            backend,
+            thread_budget,
             deques: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
             remaining: graph
                 .nodes
@@ -159,7 +315,6 @@ impl<'g> Scheduler<'g> {
             poisoned: (0..n).map(|_| AtomicUsize::new(0)).collect(),
             reports: Mutex::new((0..n).map(|_| None).collect()),
             done: AtomicUsize::new(0),
-            nonce: AtomicUsize::new(0),
             idle: (Mutex::new(0), Condvar::new()),
         }
     }
@@ -216,28 +371,16 @@ impl<'g> Scheduler<'g> {
                             .expect("dependency completed before dependent")
                     })
                     .collect();
-                let nonce = self.nonce.fetch_add(1, Ordering::SeqCst) as u64;
-                match self.cache.stage(kind, hash, nonce) {
+                let req = ExecRequest {
+                    spec: &node.spec,
+                    hash,
+                    label: &label,
+                    threads: node.spec.resolve_threads(self.thread_budget),
+                    deps: &deps,
+                };
+                match self.backend.execute(worker, self.cache, &req) {
+                    Ok(rec) => (JobStatus::Executed, Some(rec)),
                     Err(e) => (JobStatus::Failed(format!("{e:#}")), None),
-                    Ok(staging) => {
-                        let art_dir = staging.join("artifacts");
-                        match execute_spec(&node.spec, &art_dir, &deps) {
-                            Ok(()) => match self.cache.commit(
-                                kind,
-                                &label,
-                                hash,
-                                &node.spec.params_json(),
-                                &staging,
-                            ) {
-                                Ok(rec) => (JobStatus::Executed, Some(rec)),
-                                Err(e) => (JobStatus::Failed(format!("{e:#}")), None),
-                            },
-                            Err(e) => {
-                                self.cache.discard(&staging);
-                                (JobStatus::Failed(format!("{e:#}")), None)
-                            }
-                        }
-                    }
                 }
             };
 
@@ -304,24 +447,33 @@ impl<'g> Scheduler<'g> {
 }
 
 /// Run the graph on `threads` workers (0 = available parallelism, capped
-/// at the job count).  Returns one report per job, in graph order.
-pub fn run_parallel(
+/// at the job count) with job bodies executing in this process.  Returns
+/// one report per job, in graph order.
+pub fn run_parallel(graph: &JobGraph, cache: &ResultCache, threads: usize) -> Vec<JobReport> {
+    run_with_backend(graph, cache, threads, &InProcessBackend::new())
+}
+
+/// Run the graph on `threads` scheduler workers (0 = available
+/// parallelism, capped at the job count), dispatching cache misses to
+/// `backend`.  Per-job stash-pool budgets split the machine's cores across
+/// the workers so concurrent jobs never oversubscribe.
+pub fn run_with_backend(
     graph: &JobGraph,
     cache: &ResultCache,
     threads: usize,
+    backend: &dyn ExecBackend,
 ) -> Vec<JobReport> {
     if graph.is_empty() {
         return Vec::new();
     }
-    let threads = if threads == 0 {
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(4)
-    } else {
-        threads
-    };
-    let threads = threads.clamp(1, graph.len());
-    let sched = Scheduler::new(graph, cache, threads);
+    let threads = resolve_workers(graph, threads);
+    let sched = Scheduler::new(
+        graph,
+        cache,
+        threads,
+        backend,
+        budget_for(detected_cores(), threads),
+    );
     sched.seed();
     std::thread::scope(|scope| {
         for w in 1..threads {
@@ -346,7 +498,8 @@ pub fn run_serial(graph: &JobGraph, cache: &ResultCache) -> Vec<JobReport> {
     if graph.is_empty() {
         return Vec::new();
     }
-    let sched = Scheduler::new(graph, cache, 1);
+    let backend = InProcessBackend::new();
+    let sched = Scheduler::new(graph, cache, 1, &backend, 0);
     for id in 0..graph.len() {
         // insertion order is topological: all deps already ran
         sched.run_job(0, id);
@@ -384,6 +537,7 @@ mod tests {
             budget_bytes: budget,
             sample: 2048,
             seed: 0x5EED,
+            threads: 0,
         })
     }
 
@@ -471,5 +625,67 @@ mod tests {
         assert_eq!(reports[good].status, JobStatus::Executed);
         assert_eq!(reports[summary].status, JobStatus::Skipped);
         assert_eq!(reports[lone].status, JobStatus::Executed);
+    }
+
+    #[test]
+    fn panicking_job_fails_its_cone_while_siblings_complete() {
+        // regression: job bodies used to run without catch_unwind, so one
+        // panicking job aborted the entire grid run
+        let cache = ResultCache::open(&tdir("panic")).unwrap();
+        let mut g = JobGraph::new();
+        let boom = g.push(
+            JobSpec::Probe {
+                mode: "panic".into(),
+                payload: 1,
+            },
+            vec![],
+        );
+        let downstream = g.push(
+            JobSpec::Probe {
+                mode: "ok".into(),
+                payload: 2,
+            },
+            vec![boom],
+        );
+        let sibling = g.push(
+            JobSpec::Probe {
+                mode: "ok".into(),
+                payload: 3,
+            },
+            vec![],
+        );
+
+        let reports = run_parallel(&g, &cache, 2);
+        match &reports[boom].status {
+            JobStatus::Failed(e) => {
+                assert!(e.contains("panicked"), "failure names the panic: {e}")
+            }
+            other => panic!("panicking job must fail, got {other:?}"),
+        }
+        assert_eq!(reports[downstream].status, JobStatus::Skipped);
+        assert_eq!(reports[sibling].status, JobStatus::Executed);
+        // no committed entry for the panicked job: a re-run attempts it again
+        let rerun = run_parallel(&g, &cache, 2);
+        assert!(matches!(rerun[boom].status, JobStatus::Failed(_)));
+        assert_eq!(rerun[sibling].status, JobStatus::Cached);
+    }
+
+    #[test]
+    fn thread_budget_never_oversubscribes() {
+        // serial keeps the whole machine; parallel splits cores across
+        // workers with a floor of one
+        assert_eq!(budget_for(8, 1), 0);
+        assert_eq!(budget_for(8, 2), 4);
+        assert_eq!(budget_for(8, 3), 2);
+        assert_eq!(budget_for(8, 16), 1);
+        assert_eq!(budget_for(1, 4), 1);
+        for cores in 1..=64usize {
+            for workers in 2..=32usize {
+                assert!(
+                    budget_for(cores, workers) * workers <= cores.max(workers),
+                    "workers x budget stays within cores ({cores} cores, {workers} workers)"
+                );
+            }
+        }
     }
 }

@@ -65,6 +65,7 @@ fn stash_spec(model: &str, codec: CodecKind, budget: usize, batch: usize, sample
         budget_bytes: budget,
         sample,
         seed: STREAM_SEED,
+        threads: 0,
     })
 }
 

@@ -21,8 +21,16 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 /// Execute `spec`, writing artifacts under `art_dir`; `deps` are the
-/// completed dependency records in graph-edge order.
-pub fn execute_spec(spec: &JobSpec, art_dir: &Path, deps: &[JobRecord]) -> Result<()> {
+/// completed dependency records in graph-edge order and `threads` is the
+/// scheduler's resolved worker-pool budget for this job (0 = whole
+/// machine) — an execution knob, never part of the job identity, because
+/// thread counts don't change artifact bytes.
+pub fn execute_spec(
+    spec: &JobSpec,
+    art_dir: &Path,
+    deps: &[JobRecord],
+    threads: usize,
+) -> Result<()> {
     match spec {
         JobSpec::PolicyRun { model, policy, cfg } => {
             let net = trace_model(model)?;
@@ -31,7 +39,7 @@ pub fn execute_spec(spec: &JobSpec, art_dir: &Path, deps: &[JobRecord]) -> Resul
         }
         JobSpec::PolicySummary => policy_summary(art_dir, deps),
         JobSpec::StashRun(sp) => {
-            let m = run_stash_measurement(sp)?;
+            let m = run_stash_measurement(sp, threads)?;
             std::fs::write(art_dir.join("stash.json"), m.to_json().to_string())?;
             Ok(())
         }
@@ -60,7 +68,18 @@ pub fn execute_spec(spec: &JobSpec, art_dir: &Path, deps: &[JobRecord]) -> Resul
             figures::trace_figure(art_dir, *id, *batch, *sample)?;
             Ok(())
         }
-        JobSpec::Train(t) => run_train(t, art_dir),
+        JobSpec::Train(t) => run_train(t, art_dir, threads),
+        JobSpec::Probe { mode, payload } => match mode.as_str() {
+            "ok" => {
+                let mut m = BTreeMap::new();
+                m.insert("payload".to_string(), Json::Num(*payload as f64));
+                std::fs::write(art_dir.join("probe.json"), Json::Obj(m).to_string())?;
+                Ok(())
+            }
+            "panic" => panic!("probe panic (payload {payload})"),
+            "abort" => std::process::abort(),
+            other => Err(anyhow!("unknown probe mode {other} (ok|panic|abort)")),
+        },
     }
 }
 
@@ -140,7 +159,7 @@ fn stash_summary(art_dir: &Path, deps: &[JobRecord]) -> Result<()> {
 /// One e2e training run against the compiled AOT artifacts; the Trainer's
 /// metric sinks (summary JSON, step CSV, footprint-over-time CSV) land
 /// directly in the job's artifact directory.
-fn run_train(t: &TrainSpec, art_dir: &Path) -> Result<()> {
+fn run_train(t: &TrainSpec, art_dir: &Path, threads: usize) -> Result<()> {
     let variant = Variant::parse(&t.variant, t.container)
         .ok_or_else(|| anyhow!("unknown train variant {}", t.variant))?;
     let rt = Runtime::load(Path::new(&t.artifacts_dir))?;
@@ -155,7 +174,7 @@ fn run_train(t: &TrainSpec, art_dir: &Path) -> Result<()> {
         out_dir: Some(art_dir.to_path_buf()),
         stash: t.stash_codec.map(|codec| StashConfig {
             codec,
-            threads: 0,
+            threads,
             queue_depth: 0,
             chunk_values: 0,
             budget_bytes: t.budget_bytes,

@@ -139,14 +139,17 @@ impl StashMeasurement {
 /// Run one stash measurement.  Errors are real experiment failures: codec
 /// divergence from the analytic model beyond 1%, a non-bit-exact restore,
 /// or a budget below the working set that never engaged the spill tier.
-pub fn run_stash_measurement(spec: &StashSpec) -> Result<StashMeasurement> {
+/// `threads` is the resolved worker-pool size for this job (0 = whole
+/// machine) — the scheduler budgets it so N parallel measurements don't
+/// spin N full-machine pools; stored bytes are identical at any count.
+pub fn run_stash_measurement(spec: &StashSpec, threads: usize) -> Result<StashMeasurement> {
     let net = trace_model(&spec.model)?;
     let policy = mantissa_policy(&spec.policy, spec.container)?;
     let n_layers = net.layers.len();
     let sched = policy.integer_schedule(n_layers, spec.container);
     let stash = Stash::new(StashConfig {
         codec: spec.codec,
-        threads: 0,
+        threads,
         queue_depth: 0,
         chunk_values: 0,
         budget_bytes: spec.budget_bytes,
@@ -352,12 +355,13 @@ mod tests {
             budget_bytes: budget,
             sample,
             seed: STREAM_SEED,
+            threads: 0,
         }
     }
 
     #[test]
     fn gecko_measurement_matches_analytic_at_full_sample() {
-        let m = run_stash_measurement(&spec(CodecKind::Gecko, 0, SAMPLE)).unwrap();
+        let m = run_stash_measurement(&spec(CodecKind::Gecko, 0, SAMPLE), 0).unwrap();
         assert!(m.delta_pct() < 1.0, "delta {}", m.delta_pct());
         assert!(m.frac_of_fp32() < 0.5);
         assert!(m.restore_bit_exact);
@@ -366,17 +370,17 @@ mod tests {
 
     #[test]
     fn js_measurement_is_exact_at_any_sample() {
-        let m = run_stash_measurement(&spec(CodecKind::Js, 0, 2048)).unwrap();
+        let m = run_stash_measurement(&spec(CodecKind::Js, 0, 2048), 0).unwrap();
         assert!(m.delta_pct() < 1e-9, "js accounting is exact: {}", m.delta_pct());
         // JS on BF16 beats dense FP32 but not the adaptive-container codecs
         assert!(m.frac_of_fp32() < 0.6);
-        let g = run_stash_measurement(&spec(CodecKind::Gecko, 0, 2048)).unwrap();
+        let g = run_stash_measurement(&spec(CodecKind::Gecko, 0, 2048), 0).unwrap();
         assert!(g.frac_of_fp32() < m.frac_of_fp32());
     }
 
     #[test]
     fn undersized_budget_engages_spill_tier() {
-        let m = run_stash_measurement(&spec(CodecKind::Raw, 256 * 1024, 8192)).unwrap();
+        let m = run_stash_measurement(&spec(CodecKind::Raw, 256 * 1024, 8192), 0).unwrap();
         assert!(m.ledger.evictions > 0);
         assert!(m.spill_peak_bytes > 0);
         let json = m.to_json();
@@ -386,8 +390,8 @@ mod tests {
 
     #[test]
     fn measurement_json_is_deterministic() {
-        let a = run_stash_measurement(&spec(CodecKind::Gecko, 0, 4096)).unwrap();
-        let b = run_stash_measurement(&spec(CodecKind::Gecko, 0, 4096)).unwrap();
+        let a = run_stash_measurement(&spec(CodecKind::Gecko, 0, 4096), 0).unwrap();
+        let b = run_stash_measurement(&spec(CodecKind::Gecko, 0, 4096), 2).unwrap();
         assert_eq!(a.to_json().to_string(), b.to_json().to_string());
     }
 }

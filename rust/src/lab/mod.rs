@@ -28,7 +28,13 @@
 //! * [`exec`] — the scheduler: [`exec::run_parallel`] (work stealing) and
 //!   [`exec::run_serial`] (insertion order) must produce byte-identical
 //!   artifacts — jobs are deterministic and only communicate through
-//!   declared dependency artifacts (CI diffs the two modes).
+//!   declared dependency artifacts (CI diffs the two modes).  Cache misses
+//!   dispatch through an [`exec::ExecBackend`] seam: in-process closures
+//!   (job bodies fenced by `catch_unwind`) or subprocess workers.
+//! * [`remote`] — the process backend: `repro worker` subprocesses speak a
+//!   one-line JSON protocol and commit into the same content-addressed
+//!   cache, so fingerprints stay byte-identical to `--serial` and a killed
+//!   worker poisons only its job's dependent cone.
 //! * [`jobs`] — execution bodies: policy sweeps, stash measurements,
 //!   table/figure emitters, e2e train runs, and the consolidation jobs
 //!   that read upstream artifacts through the cache.
@@ -47,10 +53,15 @@ pub mod grid;
 pub mod hash;
 pub mod jobs;
 pub mod measure;
+pub mod remote;
 pub mod spec;
 
 pub use cache::{ArtifactInfo, JobRecord, ResultCache};
-pub use exec::{run_parallel, run_serial, JobGraph, JobReport, JobStatus};
+pub use exec::{
+    resolve_workers, run_parallel, run_serial, run_with_backend, ExecBackend, ExecRequest,
+    InProcessBackend, JobGraph, JobReport, JobStatus,
+};
 pub use grid::{paper_grid, smoke_grid, write_manifest, Grid, GridOptions, RunTotals};
 pub use measure::{run_stash_measurement, StashMeasurement};
+pub use remote::{worker_main, ProcessBackend};
 pub use spec::{JobSpec, StashSpec, TrainSpec, CACHE_VERSION};

@@ -1,0 +1,479 @@
+//! Process-level remote execution backend: job specs ship to `repro
+//! worker` subprocesses over a one-line-per-message JSON protocol, and the
+//! shared content-addressed cache is the *only* artifact channel — workers
+//! commit `<kind>-<hash>` entries exactly as the in-process path does, so
+//! manifest fingerprints stay byte-identical to `--serial` no matter where
+//! a job ran.  Scaling past one machine is therefore a cache-layout
+//! question (point workers at a shared root), not an architecture one.
+//!
+//! Protocol (orchestrator → worker on stdin, worker → orchestrator on
+//! stdout, one JSON object per line):
+//!
+//! ```text
+//! → {"kind":"stash","label":"...","hash":"<cone-chained content hash>",
+//!    "threads":2,"params":{...canonical spec params...},
+//!    "deps":[{"kind":"stash","hash":"..."}]}
+//! ← {"hash":"...","ok":true}            entry committed (or already present)
+//! ← {"hash":"...","ok":false,"error":"..."}
+//! ```
+//!
+//! The worker rebuilds the spec via [`JobSpec::from_parts`] (round-trip is
+//! byte-exact, so params re-render identically), resolves dependency
+//! artifacts through fingerprint-verified cache lookups, executes under
+//! `catch_unwind` (a panicking job answers `ok:false` and the worker lives
+//! on), and commits by atomic rename.  Job bodies never write to stdout,
+//! so the protocol stream stays clean; worker stderr is inherited.
+//!
+//! Crash isolation: each scheduler thread leases one persistent worker
+//! subprocess.  A worker that dies mid-job (killed, aborted, OOM) surfaces
+//! as an I/O error on the protocol pipe — the orchestrator fails just that
+//! job (poisoning its dependent cone) and respawns the slot's worker
+//! lazily for the next job.  A killed worker can leave only a `.tmp-`
+//! staging directory, never a partial committed entry; dead-pid staging is
+//! swept on the next [`ResultCache::open`].  Warm runs resolve every job
+//! orchestrator-side, so a 100%-cached run spawns zero subprocesses.
+
+use super::cache::{JobRecord, ResultCache};
+use super::exec::{stage_execute_commit, ExecBackend, ExecRequest};
+use super::spec::JobSpec;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::Mutex;
+
+/// One leased worker subprocess (protocol pipes + the child handle).
+struct Worker {
+    child: Child,
+    stdin: ChildStdin,
+    stdout: BufReader<ChildStdout>,
+}
+
+/// [`ExecBackend`] that dispatches cache misses to `repro worker`
+/// subprocesses: one persistent worker per scheduler thread, spawned
+/// lazily on first use and respawned after a death.
+pub struct ProcessBackend {
+    cache_root: PathBuf,
+    program: PathBuf,
+    slots: Vec<Mutex<Option<Worker>>>,
+}
+
+impl ProcessBackend {
+    /// `workers` slots dispatching into the cache at `cache_root`;
+    /// `program` is the worker binary (defaults to this executable, which
+    /// is the `repro` binary in production).
+    pub fn new(
+        cache_root: &Path,
+        workers: usize,
+        program: Option<PathBuf>,
+    ) -> Result<ProcessBackend> {
+        let program = match program {
+            Some(p) => p,
+            None => std::env::current_exe().context("resolve current executable")?,
+        };
+        Ok(ProcessBackend {
+            cache_root: cache_root.to_path_buf(),
+            program,
+            slots: (0..workers.max(1)).map(|_| Mutex::new(None)).collect(),
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn spawn_worker(&self) -> Result<Worker> {
+        let mut child = Command::new(&self.program)
+            .arg("worker")
+            .arg("--cache")
+            .arg(&self.cache_root)
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .spawn()
+            .with_context(|| format!("spawn worker {}", self.program.display()))?;
+        let stdin = child.stdin.take().expect("piped stdin");
+        let stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
+        Ok(Worker {
+            child,
+            stdin,
+            stdout,
+        })
+    }
+}
+
+impl ExecBackend for ProcessBackend {
+    fn execute(
+        &self,
+        worker: usize,
+        cache: &ResultCache,
+        req: &ExecRequest,
+    ) -> Result<JobRecord> {
+        let slot = &self.slots[worker % self.slots.len()];
+        let mut guard = slot.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(self.spawn_worker()?);
+        }
+
+        let line = render_request(req);
+        let send = |w: &mut Worker| -> std::io::Result<()> {
+            w.stdin.write_all(line.as_bytes())?;
+            w.stdin.write_all(b"\n")?;
+            w.stdin.flush()
+        };
+        // A send failure means the slot's worker died while *idle* (between
+        // jobs): the request provably never reached it, so a fresh worker
+        // can take the job with no double-execution risk — respawn once and
+        // retry rather than spuriously poisoning the cone.
+        if let Err(first) = send(guard.as_mut().expect("worker just ensured")) {
+            retire(&mut guard);
+            *guard = Some(self.spawn_worker()?);
+            if let Err(second) = send(guard.as_mut().expect("worker respawned")) {
+                retire(&mut guard);
+                return Err(anyhow!(
+                    "worker died before accepting the request (twice: {first}; {second}) [{}]",
+                    req.label
+                ));
+            }
+        }
+
+        let recv = |w: &mut Worker| -> std::io::Result<String> {
+            let mut resp = String::new();
+            if w.stdout.read_line(&mut resp)? == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "worker closed its protocol stream",
+                ));
+            }
+            Ok(resp)
+        };
+        match recv(guard.as_mut().expect("worker present")) {
+            Err(io) => {
+                // the worker died mid-job (killed / aborted / OOM): reap it
+                // and leave the slot empty so the next job respawns.  Only
+                // this job fails — its cone poisons, siblings keep going.
+                let status = retire(&mut guard)
+                    .map(|s| s.to_string())
+                    .unwrap_or_else(|| "unreaped".to_string());
+                // a death between commit and response still leaves a valid
+                // entry in the shared cache — recover it rather than
+                // wasting the dependent cone on an already-computed result
+                if let Some(rec) = cache.lookup(req.spec.kind(), req.hash) {
+                    return Ok(rec);
+                }
+                Err(anyhow!(
+                    "worker subprocess died mid-job ({status}): {io} [{}]",
+                    req.label
+                ))
+            }
+            Ok(resp) => {
+                let reply = match parse_response(&resp) {
+                    Ok(reply) if reply.hash == req.hash => reply,
+                    parsed => {
+                        // unparseable or wrong-hash response: the stream is
+                        // misaligned and every later exchange on it would be
+                        // off by one — retire this worker so the slot
+                        // respawns clean for its next job
+                        retire(&mut guard);
+                        return Err(match parsed {
+                            Ok(reply) => anyhow!(
+                                "worker protocol desync: sent {} got {} (worker retired)",
+                                req.hash,
+                                reply.hash
+                            ),
+                            Err(e) => anyhow!("{e:#} (worker retired)"),
+                        });
+                    }
+                };
+                if let Some(err) = reply.error {
+                    return Err(anyhow!("{err}"));
+                }
+                // The committed entry in the shared cache is the only
+                // artifact channel; re-read it through the verifying lookup.
+                cache.lookup(req.spec.kind(), req.hash).ok_or_else(|| {
+                    anyhow!(
+                        "worker reported success but {}-{} is missing or corrupt in the cache",
+                        req.spec.kind(),
+                        req.hash
+                    )
+                })
+            }
+        }
+    }
+}
+
+impl Drop for ProcessBackend {
+    fn drop(&mut self) {
+        for slot in &self.slots {
+            if let Some(mut w) = slot.lock().unwrap().take() {
+                // closing stdin ends the serve loop; reap to avoid zombies
+                drop(w.stdin);
+                let _ = w.child.wait();
+            }
+        }
+    }
+}
+
+/// Kill and reap a slot's worker (if any), leaving the slot empty so the
+/// next job respawns lazily.  Returns the exit status when reaped.
+fn retire(slot: &mut Option<Worker>) -> Option<std::process::ExitStatus> {
+    let mut w = slot.take()?;
+    let _ = w.child.kill();
+    w.child.wait().ok()
+}
+
+/// Render one request line for `req` (the orchestrator side).
+fn render_request(req: &ExecRequest) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("kind".to_string(), Json::Str(req.spec.kind().to_string()));
+    m.insert("label".to_string(), Json::Str(req.label.to_string()));
+    m.insert("hash".to_string(), Json::Str(req.hash.to_string()));
+    m.insert("threads".to_string(), Json::Num(req.threads as f64));
+    m.insert(
+        "params".to_string(),
+        Json::parse(&req.spec.params_json()).expect("canonical params parse"),
+    );
+    let deps: Vec<Json> = req
+        .deps
+        .iter()
+        .map(|d| {
+            let mut dm = BTreeMap::new();
+            dm.insert("kind".to_string(), Json::Str(d.kind.clone()));
+            dm.insert("hash".to_string(), Json::Str(d.hash.clone()));
+            Json::Obj(dm)
+        })
+        .collect();
+    m.insert("deps".to_string(), Json::Arr(deps));
+    Json::Obj(m).to_string()
+}
+
+struct Reply {
+    hash: String,
+    /// `None` = success; `Some` carries the worker's failure message.
+    error: Option<String>,
+}
+
+fn parse_response(line: &str) -> Result<Reply> {
+    let j = Json::parse(line.trim())
+        .map_err(|e| anyhow!("bad worker response line: {e} ({:?})", line.trim()))?;
+    let hash = j
+        .get("hash")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("worker response missing 'hash'"))?
+        .to_string();
+    let ok = matches!(j.get("ok"), Some(Json::Bool(true)));
+    let error = if ok {
+        None
+    } else {
+        Some(
+            j.get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("worker reported failure without a message")
+                .to_string(),
+        )
+    };
+    Ok(Reply { hash, error })
+}
+
+fn render_response(hash: &str, error: Option<&str>) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("hash".to_string(), Json::Str(hash.to_string()));
+    m.insert("ok".to_string(), Json::Bool(error.is_none()));
+    if let Some(e) = error {
+        m.insert("error".to_string(), Json::Str(e.to_string()));
+    }
+    Json::Obj(m).to_string()
+}
+
+/// Serve one parsed request against the shared cache: lookup → (maybe)
+/// execute under `catch_unwind` → commit.  Returns the request's hash so
+/// the response echoes it even on failure.
+fn serve_request(cache: &ResultCache, line: &str, nonce: &mut u64) -> (String, Option<String>) {
+    let run = |nonce: &mut u64| -> Result<String> {
+        let j = Json::parse(line).map_err(|e| anyhow!("bad request line: {e}"))?;
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("request missing 'kind'"))?
+            .to_string();
+        let hash = j
+            .get("hash")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("request missing 'hash'"))?
+            .to_string();
+        let label = j.get("label").and_then(Json::as_str).unwrap_or(&kind);
+        let threads = j.get("threads").and_then(Json::as_usize).unwrap_or(0);
+        let params = j
+            .get("params")
+            .ok_or_else(|| anyhow!("request missing 'params'"))?;
+        let spec = JobSpec::from_parts(&kind, params)?;
+
+        // another worker/process may have committed this entry meanwhile —
+        // the verified entry is equivalent by content-addressing
+        if cache.lookup(&kind, &hash).is_some() {
+            return Ok(hash);
+        }
+        let mut deps = Vec::new();
+        for d in j.get("deps").and_then(Json::as_arr).unwrap_or(&[]) {
+            let dk = d
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("dep ref missing 'kind'"))?;
+            let dh = d
+                .get("hash")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("dep ref missing 'hash'"))?;
+            deps.push(cache.lookup(dk, dh).ok_or_else(|| {
+                anyhow!("dependency {dk}-{dh} missing from the shared cache")
+            })?);
+        }
+        *nonce += 1;
+        stage_execute_commit(cache, &spec, label, &hash, *nonce, &deps, threads)?;
+        Ok(hash)
+    };
+    match run(nonce) {
+        Ok(hash) => (hash, None),
+        Err(e) => {
+            // echo the hash when the line parsed far enough to carry one
+            let hash = Json::parse(line)
+                .ok()
+                .and_then(|j| j.get("hash").and_then(Json::as_str).map(str::to_string))
+                .unwrap_or_default();
+            (hash, Some(format!("{e:#}")))
+        }
+    }
+}
+
+/// The `repro worker` body: serve requests from stdin until EOF (the
+/// orchestrator closing the pipe is the shutdown signal).  stdout carries
+/// exactly one response line per request — job bodies are quiet by the
+/// lab's determinism contract, so nothing else ever lands there.
+pub fn worker_main(cache_root: &Path) -> Result<()> {
+    let cache = ResultCache::open(cache_root)?;
+    let stdin = std::io::stdin().lock();
+    let mut stdout = std::io::stdout().lock();
+    let mut nonce = 0u64;
+    for line in stdin.lines() {
+        let line = line.context("read request line")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (hash, error) = serve_request(&cache, line.trim(), &mut nonce);
+        let resp = render_response(&hash, error.as_deref());
+        writeln!(stdout, "{resp}").context("write response line")?;
+        stdout.flush().context("flush response")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Container;
+    use crate::lab::spec::StashSpec;
+    use crate::stash::CodecKind;
+
+    fn request() -> (JobSpec, Vec<JobRecord>) {
+        let spec = JobSpec::StashRun(StashSpec {
+            model: "resnet18".into(),
+            policy: "qm".into(),
+            codec: CodecKind::Gecko,
+            container: Container::Bf16,
+            batch: 64,
+            budget_bytes: 0,
+            sample: 1024,
+            seed: 1,
+            threads: 0,
+        });
+        let dep = JobRecord {
+            kind: "stash".into(),
+            label: "dep".into(),
+            hash: "aaaa0000aaaa0000".into(),
+            params_json: "{}".into(),
+            artifacts: Vec::new(),
+            artifacts_dir: PathBuf::from("/nonexistent"),
+        };
+        (spec, vec![dep])
+    }
+
+    #[test]
+    fn request_line_round_trips_spec_hash_and_deps() {
+        let (spec, deps) = request();
+        let req = ExecRequest {
+            spec: &spec,
+            hash: "0123456789abcdef",
+            label: "stash:resnet18",
+            threads: 3,
+            deps: &deps,
+        };
+        let line = render_request(&req);
+        assert!(!line.contains('\n'), "one request = one line");
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("hash").unwrap().as_str(), Some("0123456789abcdef"));
+        assert_eq!(j.get("threads").unwrap().as_usize(), Some(3));
+        let back = JobSpec::from_parts(
+            j.get("kind").unwrap().as_str().unwrap(),
+            j.get("params").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.params_json(), spec.params_json());
+        let dep = j.get("deps").unwrap().idx(0).unwrap();
+        assert_eq!(dep.get("hash").unwrap().as_str(), Some("aaaa0000aaaa0000"));
+    }
+
+    #[test]
+    fn response_lines_round_trip() {
+        let ok = parse_response(&render_response("abcd", None)).unwrap();
+        assert_eq!(ok.hash, "abcd");
+        assert!(ok.error.is_none());
+        let err = parse_response(&render_response("abcd", Some("boom\nline2"))).unwrap();
+        assert_eq!(err.error.as_deref(), Some("boom\nline2"));
+        assert!(parse_response("not json").is_err());
+    }
+
+    #[test]
+    fn worker_serves_a_request_against_a_fresh_cache() {
+        let dir = std::env::temp_dir().join(format!("sfp_remote_serve_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = ResultCache::open(&dir).unwrap();
+        let spec = JobSpec::Probe {
+            mode: "ok".into(),
+            payload: 9,
+        };
+        let req = ExecRequest {
+            spec: &spec,
+            hash: "feedfacefeedface",
+            label: "probe:ok",
+            threads: 0,
+            deps: &[],
+        };
+        let mut nonce = 0;
+        let (hash, error) = serve_request(&cache, &render_request(&req), &mut nonce);
+        assert_eq!(hash, "feedfacefeedface");
+        assert_eq!(error, None);
+        let rec = cache.lookup("probe", "feedfacefeedface").expect("committed");
+        assert_eq!(rec.artifacts.len(), 1);
+        // second serve resolves from the cache without re-executing
+        let (_, error) = serve_request(&cache, &render_request(&req), &mut nonce);
+        assert_eq!(error, None);
+
+        // a panicking body answers ok:false and leaves no committed entry
+        let boom = JobSpec::Probe {
+            mode: "panic".into(),
+            payload: 1,
+        };
+        let req = ExecRequest {
+            spec: &boom,
+            hash: "0000111122223333",
+            label: "probe:panic",
+            threads: 0,
+            deps: &[],
+        };
+        let (hash, error) = serve_request(&cache, &render_request(&req), &mut nonce);
+        assert_eq!(hash, "0000111122223333");
+        assert!(error.unwrap().contains("panicked"));
+        assert!(cache.lookup("probe", "0000111122223333").is_none());
+    }
+}

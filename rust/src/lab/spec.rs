@@ -8,6 +8,7 @@ use crate::formats::Container;
 use crate::policy::sweep::{PolicyKind, SweepConfig};
 use crate::stash::CodecKind;
 use crate::util::json::Json;
+use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 
 /// Bump to invalidate every cache entry when artifact formats change.
@@ -28,6 +29,12 @@ pub struct StashSpec {
     /// Values sampled per tensor stream.
     pub sample: usize,
     pub seed: u64,
+    /// Stash worker-pool thread hint: 0 lets the scheduler budget threads
+    /// against the machine's parallelism (cores / concurrent jobs), any
+    /// other value is used verbatim.  The default hint is omitted from the
+    /// canonical JSON, so it never perturbs existing cache identities, and
+    /// thread counts never change artifact bytes either way.
+    pub threads: usize,
 }
 
 /// One end-to-end training run through the PJRT runtime.
@@ -78,6 +85,11 @@ pub enum JobSpec {
     Figure { id: usize, batch: usize, sample: usize },
     /// One e2e training run (requires compiled AOT artifacts).
     Train(TrainSpec),
+    /// Diagnostic probe (tests and backend health checks): `ok` writes a
+    /// one-line artifact, `panic` panics inside the job body, `abort`
+    /// aborts the executing process — the latter two exercise the crash
+    /// isolation paths (in-process `catch_unwind`, worker-death recovery).
+    Probe { mode: String, payload: usize },
 }
 
 fn obj(fields: Vec<(&str, Json)>) -> Json {
@@ -115,6 +127,7 @@ impl JobSpec {
             JobSpec::Table2 { .. } => "table2",
             JobSpec::Figure { .. } => "figure",
             JobSpec::Train(_) => "train",
+            JobSpec::Probe { .. } => "probe",
         }
     }
 
@@ -136,6 +149,17 @@ impl JobSpec {
             JobSpec::Table2 { source, .. } => format!("table2:{source}"),
             JobSpec::Figure { id, .. } => format!("fig{id}"),
             JobSpec::Train(t) => format!("train:{}", t.variant),
+            JobSpec::Probe { mode, .. } => format!("probe:{mode}"),
+        }
+    }
+
+    /// Worker-pool threads this job should use, given the scheduler's
+    /// per-job budget (0 = whole machine).  Jobs carrying an explicit
+    /// non-zero hint keep it; everything else takes the budget.
+    pub fn resolve_threads(&self, budget: usize) -> usize {
+        match self {
+            JobSpec::StashRun(sp) if sp.threads != 0 => sp.threads,
+            _ => budget,
         }
     }
 
@@ -155,16 +179,24 @@ impl JobSpec {
                 ("seed", n(cfg.seed as usize)),
             ]),
             JobSpec::PolicySummary => obj(vec![]),
-            JobSpec::StashRun(sp) => obj(vec![
-                ("model", s(&sp.model)),
-                ("policy", s(&sp.policy)),
-                ("codec", s(sp.codec.label())),
-                ("container", s(container_str(sp.container))),
-                ("batch", n(sp.batch)),
-                ("budget_bytes", n(sp.budget_bytes)),
-                ("sample", n(sp.sample)),
-                ("seed", n(sp.seed as usize)),
-            ]),
+            JobSpec::StashRun(sp) => {
+                let mut fields = vec![
+                    ("model", s(&sp.model)),
+                    ("policy", s(&sp.policy)),
+                    ("codec", s(sp.codec.label())),
+                    ("container", s(container_str(sp.container))),
+                    ("batch", n(sp.batch)),
+                    ("budget_bytes", n(sp.budget_bytes)),
+                    ("sample", n(sp.sample)),
+                    ("seed", n(sp.seed as usize)),
+                ];
+                // the default hint stays out of the canonical JSON so the
+                // field's introduction never invalidated existing caches
+                if sp.threads != 0 {
+                    fields.push(("threads", n(sp.threads)));
+                }
+                obj(fields)
+            }
             JobSpec::StashSummary => obj(vec![]),
             JobSpec::Table1 => obj(vec![]),
             JobSpec::Table2 { batch, source } => {
@@ -195,8 +227,119 @@ impl JobSpec {
                 ("artifacts_dir", s(&t.artifacts_dir)),
                 ("manifest_hash", s(&t.manifest_hash)),
             ]),
+            JobSpec::Probe { mode, payload } => {
+                obj(vec![("mode", s(mode)), ("payload", n(*payload))])
+            }
         };
         j.to_string()
+    }
+
+    /// Reconstruct a spec from its kind tag and parsed canonical parameter
+    /// JSON — the inverse of [`JobSpec::params_json`], used by remote
+    /// workers to rebuild the job a request line describes.  Round-tripping
+    /// is byte-exact: `from_parts(kind, parse(params_json)).params_json()`
+    /// equals the original string, so content hashes agree across the
+    /// process boundary.
+    pub fn from_parts(kind: &str, params: &Json) -> Result<JobSpec> {
+        let str_of = |k: &str| -> Result<String> {
+            params
+                .get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("{kind} params missing string '{k}'"))
+        };
+        let usize_of = |k: &str| -> Result<usize> {
+            params
+                .get(k)
+                .and_then(Json::as_f64)
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow!("{kind} params missing number '{k}'"))
+        };
+        let f64_of = |k: &str| -> Result<f64> {
+            params
+                .get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("{kind} params missing number '{k}'"))
+        };
+        let container_of = |k: &str| -> Result<Container> {
+            match str_of(k)?.as_str() {
+                "fp32" => Ok(Container::Fp32),
+                "bf16" => Ok(Container::Bf16),
+                other => Err(anyhow!("{kind} params: unknown container '{other}'")),
+            }
+        };
+        let codec_of = |k: &str| -> Result<CodecKind> {
+            let name = str_of(k)?;
+            CodecKind::parse(&name)
+                .ok_or_else(|| anyhow!("{kind} params: unknown codec '{name}'"))
+        };
+        match kind {
+            "policy" => {
+                let name = str_of("policy")?;
+                Ok(JobSpec::PolicyRun {
+                    model: str_of("model")?,
+                    policy: PolicyKind::parse(&name)
+                        .ok_or_else(|| anyhow!("unknown policy '{name}'"))?,
+                    cfg: SweepConfig {
+                        epochs: usize_of("epochs")?,
+                        steps_per_epoch: usize_of("steps_per_epoch")?,
+                        batch: usize_of("batch")?,
+                        container: container_of("container")?,
+                        sample: usize_of("sample")?,
+                        seed: usize_of("seed")? as u64,
+                    },
+                })
+            }
+            "policy_summary" => Ok(JobSpec::PolicySummary),
+            "stash" => Ok(JobSpec::StashRun(StashSpec {
+                model: str_of("model")?,
+                policy: str_of("policy")?,
+                codec: codec_of("codec")?,
+                container: container_of("container")?,
+                batch: usize_of("batch")?,
+                budget_bytes: usize_of("budget_bytes")?,
+                sample: usize_of("sample")?,
+                seed: usize_of("seed")? as u64,
+                threads: params
+                    .get("threads")
+                    .and_then(Json::as_f64)
+                    .map(|v| v as usize)
+                    .unwrap_or(0),
+            })),
+            "stash_summary" => Ok(JobSpec::StashSummary),
+            "table1" => Ok(JobSpec::Table1),
+            "table2" => Ok(JobSpec::Table2 {
+                batch: usize_of("batch")?,
+                source: str_of("source")?,
+            }),
+            "figure" => Ok(JobSpec::Figure {
+                id: usize_of("id")?,
+                batch: usize_of("batch")?,
+                sample: usize_of("sample")?,
+            }),
+            "train" => Ok(JobSpec::Train(TrainSpec {
+                variant: str_of("variant")?,
+                container: container_of("container")?,
+                epochs: usize_of("epochs")?,
+                steps_per_epoch: usize_of("steps_per_epoch")?,
+                eval_batches: usize_of("eval_batches")?,
+                lr0: f64_of("lr0")?,
+                momentum: f64_of("momentum")?,
+                seed: usize_of("seed")? as u64,
+                stash_codec: match params.get("stash_codec") {
+                    Some(Json::Null) | None => None,
+                    Some(_) => Some(codec_of("stash_codec")?),
+                },
+                budget_bytes: usize_of("budget_bytes")?,
+                artifacts_dir: str_of("artifacts_dir")?,
+                manifest_hash: str_of("manifest_hash")?,
+            })),
+            "probe" => Ok(JobSpec::Probe {
+                mode: str_of("mode")?,
+                payload: usize_of("payload")?,
+            }),
+            other => Err(anyhow!("unknown job kind '{other}'")),
+        }
     }
 }
 
@@ -215,6 +358,7 @@ mod tests {
             budget_bytes: 0,
             sample: 4096,
             seed: 0x5EED,
+            threads: 0,
         }
     }
 
@@ -262,6 +406,7 @@ mod tests {
             StashSpec { budget_bytes: 1 << 20, ..base.clone() },
             StashSpec { sample: 8192, ..base.clone() },
             StashSpec { seed: 7, ..base.clone() },
+            StashSpec { threads: 2, ..base.clone() },
         ];
         let mut seen = std::collections::BTreeSet::new();
         seen.insert(h0.clone());
@@ -269,6 +414,108 @@ mod tests {
             let hm = h(m);
             assert_ne!(hm, h0, "mutation {m:?} must re-hash");
             assert!(seen.insert(hm), "distinct mutations must not collide");
+        }
+    }
+
+    #[test]
+    fn default_thread_hint_keeps_the_historical_hash() {
+        // the hint rides outside the identity at its default, so adding
+        // the field never invalidated existing caches
+        let base = JobSpec::StashRun(stash_spec());
+        assert!(!base.params_json().contains("threads"));
+        let hinted = JobSpec::StashRun(StashSpec {
+            threads: 4,
+            ..stash_spec()
+        });
+        assert!(hinted.params_json().contains("\"threads\":4"));
+        assert_ne!(
+            job_hash(base.kind(), &base.params_json(), &[], CACHE_VERSION),
+            job_hash(hinted.kind(), &hinted.params_json(), &[], CACHE_VERSION),
+        );
+    }
+
+    #[test]
+    fn resolve_threads_prefers_the_explicit_hint() {
+        let auto = JobSpec::StashRun(stash_spec());
+        assert_eq!(auto.resolve_threads(3), 3);
+        assert_eq!(auto.resolve_threads(0), 0);
+        let hinted = JobSpec::StashRun(StashSpec {
+            threads: 2,
+            ..stash_spec()
+        });
+        assert_eq!(hinted.resolve_threads(3), 2);
+        assert_eq!(JobSpec::Table1.resolve_threads(5), 5);
+    }
+
+    #[test]
+    fn every_spec_kind_round_trips_through_canonical_json() {
+        let specs = vec![
+            JobSpec::PolicyRun {
+                model: "resnet18".into(),
+                policy: PolicyKind::QmQe,
+                cfg: SweepConfig::default(),
+            },
+            JobSpec::PolicySummary,
+            JobSpec::StashRun(stash_spec()),
+            JobSpec::StashRun(StashSpec {
+                threads: 2,
+                ..stash_spec()
+            }),
+            JobSpec::StashSummary,
+            JobSpec::Table1,
+            JobSpec::Table2 {
+                batch: 128,
+                source: "stash".into(),
+            },
+            JobSpec::Figure {
+                id: 13,
+                batch: 256,
+                sample: 4096,
+            },
+            JobSpec::Train(TrainSpec {
+                variant: "qmqe".into(),
+                container: Container::Bf16,
+                epochs: 6,
+                steps_per_epoch: 40,
+                eval_batches: 4,
+                lr0: 0.05,
+                momentum: 0.9,
+                seed: 42,
+                stash_codec: Some(CodecKind::Gecko),
+                budget_bytes: 1 << 20,
+                artifacts_dir: "artifacts".into(),
+                manifest_hash: "deadbeefdeadbeef".into(),
+            }),
+            JobSpec::Train(TrainSpec {
+                variant: "fp32".into(),
+                container: Container::Fp32,
+                epochs: 1,
+                steps_per_epoch: 2,
+                eval_batches: 1,
+                lr0: 0.1,
+                momentum: 0.0,
+                seed: 7,
+                stash_codec: None,
+                budget_bytes: 0,
+                artifacts_dir: "a".into(),
+                manifest_hash: "0".into(),
+            }),
+            JobSpec::Probe {
+                mode: "panic".into(),
+                payload: 3,
+            },
+        ];
+        for spec in specs {
+            let json = spec.params_json();
+            let parsed = Json::parse(&json).expect("canonical json parses");
+            let back = JobSpec::from_parts(spec.kind(), &parsed)
+                .unwrap_or_else(|e| panic!("{}: {e}", spec.kind()));
+            assert_eq!(back, spec, "reconstructed spec equals the original");
+            assert_eq!(
+                back.params_json(),
+                json,
+                "round-trip is byte-exact, so hashes agree across processes"
+            );
         }
     }
 }

@@ -64,6 +64,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "stash" => cmd_stash(args),
         "policy" => cmd_policy(args),
         "all" => cmd_all(args),
+        "worker" => cmd_worker(args),
         _ => {
             print_help();
             Ok(())
@@ -95,6 +96,14 @@ fn print_help() {
          \u{20}         [--smoke] (tiny CI grid) [--serial] [--jobs N] [--cache DIR]\n\
          \u{20}         [--budget-bytes N[,N...]] [--artifacts DIR] [--out DIR]\n\
          \u{20}         [--expect-cached] (fail unless 100% cache hits, zero executed)\n\
+         \u{20}         [--backend process --workers N] (subprocess execution backend)\n\
+         worker    serve lab jobs from stdin against a shared cache (spawned by\n\
+         \u{20}         the process backend; not normally run by hand) --cache DIR\n\
+         \n\
+         every lab-backed command also takes --backend inprocess|process and\n\
+         --workers N: the process backend ships jobs to `repro worker`\n\
+         subprocesses over the shared content-addressed cache, so artifacts\n\
+         stay byte-identical and a crashed worker only fails its own job.\n\
          \n\
          lab runs write <out>/lab_manifest.json (every job: artifacts + hash +\n\
          timing) and reuse the content-addressed cache in <out>/lab-cache."
@@ -137,17 +146,32 @@ fn parse_budgets(args: &Args, default: Vec<usize>) -> Result<Vec<usize>> {
 
 /// Run a lab graph in the mode the flags select; any failed job is a
 /// command failure (after the manifest and every healthy branch landed).
-fn run_lab(graph: &JobGraph, cache: &ResultCache, args: &Args) -> (Vec<JobReport>, f64, &'static str) {
+/// `--serial` is the deterministic in-process reference; `--backend
+/// process` dispatches cache misses to `repro worker` subprocesses
+/// (`--workers N` of them, sharing the content-addressed cache).
+fn run_lab(
+    graph: &JobGraph,
+    cache: &ResultCache,
+    args: &Args,
+) -> Result<(Vec<JobReport>, f64, &'static str)> {
     let t0 = Instant::now();
+    let workers = args.get_usize("workers", args.get_usize("jobs", 0));
     let (reports, mode) = if args.has_flag("serial") {
         (lab::run_serial(graph, cache), "serial")
     } else {
-        (
-            lab::run_parallel(graph, cache, args.get_usize("jobs", 0)),
-            "parallel",
-        )
+        match args.get_or("backend", "inprocess").as_str() {
+            "inprocess" => (lab::run_parallel(graph, cache, workers), "parallel"),
+            "process" => {
+                // one worker subprocess per scheduler thread, in lockstep
+                // with run_with_backend's own resolution
+                let n = lab::resolve_workers(graph, workers);
+                let backend = lab::ProcessBackend::new(cache.root(), n, None)?;
+                (lab::run_with_backend(graph, cache, n, &backend), "process")
+            }
+            other => return Err(anyhow!("unknown --backend {other} (inprocess|process)")),
+        }
     };
-    (reports, t0.elapsed().as_secs_f64() * 1e3, mode)
+    Ok((reports, t0.elapsed().as_secs_f64() * 1e3, mode))
 }
 
 fn fail_on_errors(reports: &[JobReport]) -> Result<()> {
@@ -244,7 +268,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         specs.push(spec.clone());
         graph.push(JobSpec::Train(spec), vec![]);
     }
-    let (reports, wall_ms, mode) = run_lab(&graph, &cache, args);
+    let (reports, wall_ms, mode) = run_lab(&graph, &cache, args)?;
     let dir = out_dir(args);
     lab::write_manifest(&dir.join("lab_manifest.json"), &reports, wall_ms, mode)?;
     fail_on_errors(&reports)?;
@@ -504,6 +528,7 @@ fn cmd_stash(args: &Args) -> Result<()> {
             budget_bytes: budget,
             sample: args.get_usize("sample", SAMPLE),
             seed: args.get_usize("seed", STREAM_SEED as usize) as u64,
+            threads: args.get_usize("threads", 0),
         }
     };
     let cache = open_cache(args)?;
@@ -514,7 +539,7 @@ fn cmd_stash(args: &Args) -> Result<()> {
         .collect();
     let summary = graph.push(JobSpec::StashSummary, runs.clone());
 
-    let (reports, wall_ms, mode) = run_lab(&graph, &cache, args);
+    let (reports, wall_ms, mode) = run_lab(&graph, &cache, args)?;
     let dir = out_dir(args);
     std::fs::create_dir_all(&dir)?;
     lab::write_manifest(&dir.join("lab_manifest.json"), &reports, wall_ms, mode)?;
@@ -648,7 +673,7 @@ fn cmd_policy(args: &Args) -> Result<()> {
     }
     let summary = graph.push(JobSpec::PolicySummary, runs.iter().map(|r| r.0).collect());
 
-    let (reports, wall_ms, mode) = run_lab(&graph, &cache, args);
+    let (reports, wall_ms, mode) = run_lab(&graph, &cache, args)?;
     let dir = out_dir(args).join("policy");
     std::fs::create_dir_all(&dir)?;
     lab::write_manifest(&out_dir(args).join("lab_manifest.json"), &reports, wall_ms, mode)?;
@@ -742,7 +767,7 @@ fn cmd_all(args: &Args) -> Result<()> {
         })
     };
     let cache = open_cache(args)?;
-    let (reports, wall_ms, mode) = run_lab(&grid.graph, &cache, args);
+    let (reports, wall_ms, mode) = run_lab(&grid.graph, &cache, args)?;
 
     for r in &reports {
         let status = match &r.status {
@@ -812,4 +837,19 @@ fn cmd_all(args: &Args) -> Result<()> {
         println!("warm cache verified: 100% hits, zero jobs executed");
     }
     Ok(())
+}
+
+// --------------------------------------------------------------------------
+// worker (the process backend's serve loop)
+// --------------------------------------------------------------------------
+
+/// Serve lab jobs from stdin against the shared content-addressed cache —
+/// the subprocess side of `--backend process`.  One JSON request line in,
+/// one response line out, until the orchestrator closes the pipe; all
+/// artifacts flow through `<cache>/<kind>-<hash>` entries, never the pipe.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let cache = args
+        .get("cache")
+        .ok_or_else(|| anyhow!("worker: --cache DIR is required"))?;
+    lab::worker_main(Path::new(cache))
 }

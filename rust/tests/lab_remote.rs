@@ -1,0 +1,160 @@
+//! Process-backend integration tests: real `repro worker` subprocesses
+//! (the binary Cargo built for this test run) executing lab jobs over the
+//! shared content-addressed cache.
+//!
+//! Covers the PR's acceptance criteria end-to-end:
+//!   * artifacts from the process backend are byte-identical to the
+//!     in-process serial reference (fingerprint comparison per job);
+//!   * a worker subprocess killed mid-job (abort probe) poisons exactly
+//!     its dependent cone — the run completes, the failure is recorded,
+//!     the cache holds no partial entry for the killed job, and a re-run
+//!     attempts only the poisoned cone while siblings resolve cached;
+//!   * a panicking job body fails gracefully inside the worker (the
+//!     subprocess survives and keeps serving).
+
+use sfp::formats::Container;
+use sfp::lab::{
+    run_serial, run_with_backend, JobGraph, JobSpec, JobStatus, ProcessBackend, ResultCache,
+    StashSpec,
+};
+use sfp::stash::CodecKind;
+use std::path::PathBuf;
+
+/// The `repro` binary Cargo built alongside this test.
+fn worker_program() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn tdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("sfp_lab_remote_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn tiny_stash(codec: CodecKind) -> JobSpec {
+    JobSpec::StashRun(StashSpec {
+        model: "resnet18".into(),
+        policy: "qm".into(),
+        codec,
+        container: Container::Bf16,
+        batch: 64,
+        budget_bytes: 0,
+        sample: 1024,
+        seed: 0x5EED,
+        threads: 0,
+    })
+}
+
+fn probe(mode: &str, payload: usize) -> JobSpec {
+    JobSpec::Probe {
+        mode: mode.into(),
+        payload,
+    }
+}
+
+#[test]
+fn process_backend_matches_serial_fingerprints_and_warm_runs_cached() {
+    let mut g = JobGraph::new();
+    let a = g.push(tiny_stash(CodecKind::Gecko), vec![]);
+    let b = g.push(tiny_stash(CodecKind::Raw), vec![]);
+    g.push(JobSpec::StashSummary, vec![a, b]);
+    g.push(probe("ok", 7), vec![]);
+
+    let cache_serial = ResultCache::open(&tdir("ref")).unwrap();
+    let serial = run_serial(&g, &cache_serial);
+    assert!(serial.iter().all(|r| r.status == JobStatus::Executed));
+
+    let cache_proc = ResultCache::open(&tdir("proc")).unwrap();
+    let backend = ProcessBackend::new(cache_proc.root(), 2, Some(worker_program())).unwrap();
+    let proc = run_with_backend(&g, &cache_proc, 2, &backend);
+    assert!(
+        proc.iter().all(|r| r.status == JobStatus::Executed),
+        "{proc:?}"
+    );
+
+    // the remote-execution guarantee: same hashes, byte-identical artifacts
+    for (s, p) in serial.iter().zip(&proc) {
+        assert_eq!(s.hash, p.hash, "{}", s.label);
+        assert_eq!(
+            s.artifacts, p.artifacts,
+            "artifact fingerprints must not depend on the backend ({})",
+            s.label
+        );
+        assert!(!p.artifacts.is_empty(), "{}", p.label);
+    }
+
+    // warm re-run: everything resolves orchestrator-side from the cache
+    let backend = ProcessBackend::new(cache_proc.root(), 2, Some(worker_program())).unwrap();
+    let warm = run_with_backend(&g, &cache_proc, 2, &backend);
+    assert!(warm.iter().all(|r| r.status == JobStatus::Cached), "{warm:?}");
+}
+
+#[test]
+fn killed_worker_poisons_exactly_its_cone() {
+    let root = tdir("kill");
+    let mut g = JobGraph::new();
+    // the abort probe takes the whole worker subprocess down mid-job
+    let killed = g.push(probe("abort", 1), vec![]);
+    let downstream = g.push(probe("ok", 2), vec![killed]);
+    let sib1 = g.push(tiny_stash(CodecKind::Gecko), vec![]);
+    let sib2 = g.push(probe("ok", 3), vec![]);
+
+    let hashes = g.hashes();
+    let cache = ResultCache::open(&root).unwrap();
+    let backend = ProcessBackend::new(cache.root(), 2, Some(worker_program())).unwrap();
+    let reports = run_with_backend(&g, &cache, 2, &backend);
+
+    // the run completed and recorded the worker death against the one job
+    match &reports[killed].status {
+        JobStatus::Failed(e) => assert!(
+            e.contains("died mid-job"),
+            "failure names the worker death: {e}"
+        ),
+        other => panic!("killed job must fail, got {other:?}"),
+    }
+    assert_eq!(reports[downstream].status, JobStatus::Skipped);
+    assert_eq!(reports[sib1].status, JobStatus::Executed, "{reports:?}");
+    assert_eq!(reports[sib2].status, JobStatus::Executed, "{reports:?}");
+
+    // no partial committed entry for the killed job (only staging can leak,
+    // and only until the next cache open sweeps the dead worker's pid)
+    assert!(!root.join(format!("probe-{}", hashes[killed])).exists());
+    drop(backend);
+
+    // re-open (sweeps the dead worker's orphaned staging) and re-run: only
+    // the poisoned cone is attempted, siblings come straight from cache
+    let cache = ResultCache::open(&root).unwrap();
+    for entry in std::fs::read_dir(&root).unwrap().flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        assert!(
+            !name.starts_with(".tmp-"),
+            "orphaned staging of the killed worker must be swept, found {name}"
+        );
+    }
+    let backend = ProcessBackend::new(cache.root(), 2, Some(worker_program())).unwrap();
+    let rerun = run_with_backend(&g, &cache, 2, &backend);
+    assert!(matches!(rerun[killed].status, JobStatus::Failed(_)));
+    assert_eq!(rerun[downstream].status, JobStatus::Skipped);
+    assert_eq!(rerun[sib1].status, JobStatus::Cached);
+    assert_eq!(rerun[sib2].status, JobStatus::Cached);
+}
+
+#[test]
+fn panicking_job_fails_inside_a_surviving_worker() {
+    let cache = ResultCache::open(&tdir("panic")).unwrap();
+    let mut g = JobGraph::new();
+    let boom = g.push(probe("panic", 1), vec![]);
+    // chained after the panic on the same single worker: only a surviving
+    // subprocess can execute them
+    let after1 = g.push(probe("ok", 2), vec![]);
+    let after2 = g.push(probe("ok", 3), vec![]);
+
+    let backend = ProcessBackend::new(cache.root(), 1, Some(worker_program())).unwrap();
+    let reports = run_with_backend(&g, &cache, 1, &backend);
+    match &reports[boom].status {
+        JobStatus::Failed(e) => assert!(e.contains("panicked"), "{e}"),
+        other => panic!("panicking job must fail, got {other:?}"),
+    }
+    assert_eq!(reports[after1].status, JobStatus::Executed);
+    assert_eq!(reports[after2].status, JobStatus::Executed);
+}
