@@ -7,6 +7,8 @@
 //!   * parallel grid wall-clock <= serial on machines with >= 4 cores
 //!   * parallel artifacts byte-identical to serial (content fingerprints)
 //!   * warm re-run resolves 100% from cache, executing zero jobs
+//!   * disabled tracing is free: 1M no-op spans cost <= 1% of the serial
+//!     grid wall-clock
 
 use sfp::formats::Container;
 use sfp::lab::{self, JobGraph, JobSpec, JobStatus, ResultCache, StashSpec};
@@ -107,6 +109,32 @@ fn main() {
     // warm re-run must be pure cache hits, executing zero jobs
     if !warm.iter().all(|r| r.status == JobStatus::Cached) {
         eprintln!("FAIL: warm re-run executed jobs instead of hitting the cache");
+        failed = true;
+    }
+
+    // observability off must be observability free: a disabled span is
+    // one relaxed atomic load and no allocation, so even a million of
+    // them (far beyond any real grid) must vanish against the serial
+    // wall-clock
+    assert!(!sfp::obs::enabled(), "bench runs with tracing disabled");
+    const SPAN_ITERS: u64 = 2_000_000;
+    let t0 = Instant::now();
+    for i in 0..SPAN_ITERS {
+        let sp = sfp::obs::span("bench", "noop");
+        std::hint::black_box(&sp);
+        std::hint::black_box(i);
+    }
+    let ns_per_span = t0.elapsed().as_nanos() as f64 / SPAN_ITERS as f64;
+    let per_million_ms = ns_per_span * 1_000_000.0 / 1e6;
+    println!(
+        "lab/disabled_span: {ns_per_span:.1} ns/span ({per_million_ms:.2} ms per 1M spans \
+         vs serial {serial_ms:.1} ms)"
+    );
+    if per_million_ms > 0.01 * serial_ms {
+        eprintln!(
+            "FAIL: disabled-span overhead {per_million_ms:.2} ms per 1M spans exceeds 1% of \
+             serial grid wall-clock {serial_ms:.1} ms"
+        );
         failed = true;
     }
 

@@ -316,8 +316,14 @@ impl<'rt> Trainer<'rt> {
         // the compiled step below executes, hiding stash latency behind
         // compute.  The barrier + bit-exact verification happen after the
         // step returns.
-        let prefetch = self.stash_begin_restore();
-        let stashed = self.stash_put_prestep()?;
+        let prefetch = {
+            let _sp = crate::obs::span("train", "restore_prefetch");
+            self.stash_begin_restore()
+        };
+        let stashed = {
+            let _sp = crate::obs::span("train", "stash_put");
+            self.stash_put_prestep()?
+        };
         let l = self.rt.manifest.num_layers();
         let (x, y) = self.gen.batch(0, self.step as u64);
 
@@ -338,7 +344,10 @@ impl<'rt> Trainer<'rt> {
         inputs.push(HostTensor::scalar_i32(stochastic));
         inputs.push(HostTensor::scalar_i32(self.step));
 
-        let out = self.rt.call("train_step", &inputs)?;
+        let out = {
+            let _sp = crate::obs::span("train", "compiled_call");
+            self.rt.call("train_step", &inputs)?
+        };
         let mut it = out.into_iter();
         self.ws = (0..l).map(|_| it.next().unwrap()).collect();
         self.bs = (0..l).map(|_| it.next().unwrap()).collect();
@@ -374,14 +383,17 @@ impl<'rt> Trainer<'rt> {
         self.step += 1;
         // Pipeline barrier: wait for this step's encodes and the previous
         // step's prefetched decodes, then verify the restores bit-exact.
-        if let Some(stash) = &self.stash {
-            stash.flush();
-            if stash.failures() > 0 {
-                return Err(anyhow!("stash worker failed"));
+        {
+            let _sp = crate::obs::span("train", "barrier");
+            if let Some(stash) = &self.stash {
+                stash.flush();
+                if stash.failures() > 0 {
+                    return Err(anyhow!("stash worker failed"));
+                }
             }
-        }
-        if let Some((prev, ticket)) = prefetch {
-            Self::verify_restored(&prev, &ticket.collect())?;
+            if let Some((prev, ticket)) = prefetch {
+                Self::verify_restored(&prev, &ticket.collect())?;
+            }
         }
         self.pending = stashed;
         Ok((task_loss, n_used_w, n_used_a, a_gecko, w_gecko, zfrac))

@@ -38,6 +38,7 @@ use super::cache::{JobRecord, ResultCache};
 use super::hash::job_hash;
 use super::jobs::execute_spec;
 use super::spec::{JobSpec, CACHE_VERSION};
+use crate::obs;
 use anyhow::{anyhow, Result};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -123,6 +124,10 @@ pub struct JobReport {
     /// Wall-clock of this run's handling (≈0 for cache hits).
     pub wall_ms: f64,
     pub artifacts: Vec<super::cache::ArtifactInfo>,
+    /// For failed jobs under the process backend: the tail of the worker
+    /// subprocess's stderr, so a poisoned cone is diagnosable from the
+    /// manifest without re-running serially.
+    pub stderr_tail: Option<String>,
 }
 
 impl JobReport {
@@ -161,6 +166,12 @@ pub trait ExecBackend: Sync {
         cache: &ResultCache,
         req: &ExecRequest,
     ) -> Result<JobRecord>;
+
+    /// Diagnostic context for the job that just failed on `worker` — the
+    /// process backend returns the tail of the worker subprocess's stderr.
+    fn failure_context(&self, _worker: usize) -> Option<String> {
+        None
+    }
 }
 
 /// The default backend: stage → execute on this thread → commit.  The job
@@ -204,13 +215,22 @@ pub(crate) fn stage_execute_commit(
     threads: usize,
 ) -> Result<JobRecord> {
     let kind = spec.kind();
-    let staging = cache.stage(kind, hash, nonce)?;
+    let staging = {
+        let _sp = obs::span("lab", "stage");
+        cache.stage(kind, hash, nonce)?
+    };
     let art_dir = staging.join("artifacts");
-    let outcome = catch_unwind(AssertUnwindSafe(|| {
-        execute_spec(spec, &art_dir, deps, threads)
-    }));
+    let outcome = {
+        let _sp = obs::span("lab", "execute");
+        catch_unwind(AssertUnwindSafe(|| {
+            execute_spec(spec, &art_dir, deps, threads)
+        }))
+    };
     match outcome {
-        Ok(Ok(())) => cache.commit(kind, label, hash, &spec.params_json(), &staging),
+        Ok(Ok(())) => {
+            let _sp = obs::span("lab", "commit");
+            cache.commit(kind, label, hash, &spec.params_json(), &staging)
+        }
         Ok(Err(e)) => {
             cache.discard(&staging);
             Err(e)
@@ -338,6 +358,7 @@ impl<'g> Scheduler<'g> {
         for off in 1..n {
             let victim = (worker + off) % n;
             if let Some(id) = self.deques[victim].lock().unwrap().pop_back() {
+                obs::metrics::STEALS.inc();
                 return Some(id);
             }
         }
@@ -351,14 +372,22 @@ impl<'g> Scheduler<'g> {
         let hash = &self.hashes[id];
         let kind = node.spec.kind();
         let label = node.spec.label();
+        obs::metrics::JOBS_STARTED.inc();
+        let _job_span = obs::span_with("lab", || (format!("job:{label}"), Some(hash.clone())));
         let t0 = Instant::now();
 
-        let status_and_record: (JobStatus, Option<JobRecord>) =
-            if self.poisoned[id].load(Ordering::SeqCst) != 0 {
-                (JobStatus::Skipped, None)
-            } else if let Some(rec) = self.cache.lookup(kind, hash) {
+        let poisoned = self.poisoned[id].load(Ordering::SeqCst) != 0;
+        let status_and_record: (JobStatus, Option<JobRecord>) = if poisoned {
+            (JobStatus::Skipped, None)
+        } else {
+            let lookup_t0 = Instant::now();
+            let hit = self.cache.lookup(kind, hash);
+            obs::metrics::CACHE_LOOKUP_US.record_duration(lookup_t0.elapsed());
+            if let Some(rec) = hit {
+                obs::metrics::CACHE_HITS.inc();
                 (JobStatus::Cached, Some(rec))
             } else {
+                obs::metrics::CACHE_MISSES.inc();
                 // gather dependency artifact directories, in edge order
                 let deps: Vec<JobRecord> = node
                     .deps
@@ -382,10 +411,22 @@ impl<'g> Scheduler<'g> {
                     Ok(rec) => (JobStatus::Executed, Some(rec)),
                     Err(e) => (JobStatus::Failed(format!("{e:#}")), None),
                 }
-            };
+            }
+        };
 
         let (status, record) = status_and_record;
         let failed = !matches!(status, JobStatus::Executed | JobStatus::Cached);
+        match &status {
+            JobStatus::Executed => obs::metrics::JOBS_EXECUTED.inc(),
+            JobStatus::Cached => obs::metrics::JOBS_CACHED.inc(),
+            JobStatus::Failed(_) => obs::metrics::JOBS_FAILED.inc(),
+            JobStatus::Skipped => {}
+        }
+        let stderr_tail = if matches!(status, JobStatus::Failed(_)) {
+            self.backend.failure_context(worker)
+        } else {
+            None
+        };
         let artifacts = record
             .as_ref()
             .map(|r| r.artifacts.clone())
@@ -399,6 +440,7 @@ impl<'g> Scheduler<'g> {
             status,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
             artifacts,
+            stderr_tail,
         });
 
         // release dependents (poisoning them first on failure, so the
@@ -412,6 +454,7 @@ impl<'g> Scheduler<'g> {
             }
         }
         self.done.fetch_add(1, Ordering::SeqCst);
+        obs::metrics::JOBS_DONE.inc();
         // wake idle workers: new jobs may be stealable, or the run is over
         let (lock, cv) = &self.idle;
         let mut gen = lock.lock().unwrap();
@@ -439,9 +482,11 @@ impl<'g> Scheduler<'g> {
             // re-check the deques under no deque lock is fine: a push that
             // happened before we read `gen` bumps it, so the wait below
             // cannot miss it
+            let wait_t0 = Instant::now();
             let _unused = cv
                 .wait_timeout_while(gen, std::time::Duration::from_millis(50), |g| *g == seen)
                 .unwrap();
+            obs::metrics::EXEC_IDLE_US.add(wait_t0.elapsed().as_micros() as u64);
         }
     }
 }

@@ -315,6 +315,9 @@ pub fn write_manifest(
             if let Some(e) = error {
                 m.insert("error".to_string(), Json::Str(e));
             }
+            if let Some(tail) = &r.stderr_tail {
+                m.insert("stderr_tail".to_string(), Json::Str(tail.clone()));
+            }
             m.insert("wall_ms".to_string(), Json::Num(r.wall_ms));
             m.insert(
                 "artifacts".to_string(),
@@ -360,6 +363,48 @@ mod tests {
         let hashes = grid.graph.hashes();
         let unique: std::collections::BTreeSet<_> = hashes.iter().collect();
         assert_eq!(unique.len(), hashes.len(), "every job hash distinct");
+    }
+
+    #[test]
+    fn manifest_attaches_stderr_tail_to_failed_rows_only() {
+        let reports = vec![
+            JobReport {
+                id: 0,
+                kind: "probe".into(),
+                label: "probe:ok".into(),
+                hash: "aaaa".into(),
+                status: JobStatus::Executed,
+                wall_ms: 1.0,
+                artifacts: Vec::new(),
+                stderr_tail: None,
+            },
+            JobReport {
+                id: 1,
+                kind: "probe".into(),
+                label: "probe:boom".into(),
+                hash: "bbbb".into(),
+                status: JobStatus::Failed("worker died".into()),
+                wall_ms: 2.0,
+                artifacts: Vec::new(),
+                stderr_tail: Some("panic at job body\nsecond line".into()),
+            },
+        ];
+        let dir = std::env::temp_dir().join(format!("sfp_grid_tail_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("lab_manifest.json");
+        let totals = write_manifest(&path, &reports, 3.0, "test").unwrap();
+        assert_eq!(totals.failed, 1);
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let jobs = j.get("jobs").unwrap();
+        assert!(jobs.idx(0).unwrap().get("stderr_tail").is_none());
+        assert_eq!(
+            jobs.idx(1)
+                .unwrap()
+                .get("stderr_tail")
+                .and_then(Json::as_str),
+            Some("panic at job body\nsecond line")
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -22,7 +22,17 @@
 //! artifacts through fingerprint-verified cache lookups, executes under
 //! `catch_unwind` (a panicking job answers `ok:false` and the worker lives
 //! on), and commits by atomic rename.  Job bodies never write to stdout,
-//! so the protocol stream stays clean; worker stderr is inherited.
+//! so the protocol stream stays clean; worker stderr is piped into a
+//! bounded per-slot tail buffer whose contents attach to a failed job's
+//! manifest row (diagnosable without a serial re-run).
+//!
+//! Tracing rides the protocol without touching job identity: a traced
+//! request carries `"trace":true` (transport-level — never part of
+//! `params`, so job hashes are unchanged), and the worker answers with an
+//! extra `{"hash":…,"spans":[…]}` line *before* the response.  The
+//! orchestrator absorbs span-batch lines in its receive loop and merges
+//! them into the host timeline keyed by job hash
+//! ([`crate::obs::trace::absorb_remote_batch`]).
 //!
 //! Crash isolation: each scheduler thread leases one persistent worker
 //! subprocess.  A worker that dies mid-job (killed, aborted, OOM) surfaces
@@ -36,13 +46,22 @@
 use super::cache::{JobRecord, ResultCache};
 use super::exec::{stage_execute_commit, ExecBackend, ExecRequest};
 use super::spec::JobSpec;
+use crate::obs;
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::path::{Path, PathBuf};
 use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+
+/// Lines kept from the end of a worker's stderr stream.
+const STDERR_TAIL_LINES: usize = 50;
+/// Per-line byte cap of the stderr tail (keeps manifests bounded).
+const STDERR_TAIL_LINE_BYTES: usize = 400;
+
+/// Rolling tail of one worker subprocess's stderr, fed by a drain thread.
+type StderrTail = Arc<Mutex<VecDeque<String>>>;
 
 /// One leased worker subprocess (protocol pipes + the child handle).
 struct Worker {
@@ -51,13 +70,23 @@ struct Worker {
     stdout: BufReader<ChildStdout>,
 }
 
+/// A dispatch slot: the live worker (if any) plus the stderr tail of the
+/// slot's current or most recently retired worker — kept outside
+/// [`Worker`] so a failed job can still attach the tail after the worker
+/// was killed and reaped.
+#[derive(Default)]
+struct SlotState {
+    worker: Option<Worker>,
+    tail: Option<StderrTail>,
+}
+
 /// [`ExecBackend`] that dispatches cache misses to `repro worker`
 /// subprocesses: one persistent worker per scheduler thread, spawned
 /// lazily on first use and respawned after a death.
 pub struct ProcessBackend {
     cache_root: PathBuf,
     program: PathBuf,
-    slots: Vec<Mutex<Option<Worker>>>,
+    slots: Vec<Mutex<SlotState>>,
 }
 
 impl ProcessBackend {
@@ -76,7 +105,9 @@ impl ProcessBackend {
         Ok(ProcessBackend {
             cache_root: cache_root.to_path_buf(),
             program,
-            slots: (0..workers.max(1)).map(|_| Mutex::new(None)).collect(),
+            slots: (0..workers.max(1))
+                .map(|_| Mutex::new(SlotState::default()))
+                .collect(),
         })
     }
 
@@ -84,22 +115,57 @@ impl ProcessBackend {
         self.slots.len()
     }
 
-    fn spawn_worker(&self) -> Result<Worker> {
+    fn spawn_worker(&self) -> Result<(Worker, StderrTail)> {
         let mut child = Command::new(&self.program)
             .arg("worker")
             .arg("--cache")
             .arg(&self.cache_root)
             .stdin(Stdio::piped())
             .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
             .spawn()
             .with_context(|| format!("spawn worker {}", self.program.display()))?;
         let stdin = child.stdin.take().expect("piped stdin");
         let stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
-        Ok(Worker {
-            child,
-            stdin,
-            stdout,
-        })
+        let stderr = child.stderr.take().expect("piped stderr");
+        let tail: StderrTail = Arc::new(Mutex::new(VecDeque::new()));
+        let sink = Arc::clone(&tail);
+        // The drain thread exits when the pipe closes (worker death or
+        // shutdown); it holds only the tail Arc, so it never blocks a reap.
+        std::thread::spawn(move || {
+            for line in BufReader::new(stderr).lines() {
+                let Ok(mut line) = line else { break };
+                if line.len() > STDERR_TAIL_LINE_BYTES {
+                    let mut cut = STDERR_TAIL_LINE_BYTES;
+                    while !line.is_char_boundary(cut) {
+                        cut -= 1;
+                    }
+                    line.truncate(cut);
+                }
+                let Ok(mut t) = sink.lock() else { break };
+                if t.len() == STDERR_TAIL_LINES {
+                    t.pop_front();
+                }
+                t.push_back(line);
+            }
+        });
+        Ok((
+            Worker {
+                child,
+                stdin,
+                stdout,
+            },
+            tail,
+        ))
+    }
+
+    fn ensure_worker(&self, slot: &mut SlotState) -> Result<()> {
+        if slot.worker.is_none() {
+            let (w, tail) = self.spawn_worker()?;
+            slot.worker = Some(w);
+            slot.tail = Some(tail);
+        }
+        Ok(())
     }
 }
 
@@ -112,9 +178,7 @@ impl ExecBackend for ProcessBackend {
     ) -> Result<JobRecord> {
         let slot = &self.slots[worker % self.slots.len()];
         let mut guard = slot.lock().unwrap();
-        if guard.is_none() {
-            *guard = Some(self.spawn_worker()?);
-        }
+        self.ensure_worker(&mut guard)?;
 
         let line = render_request(req);
         let send = |w: &mut Worker| -> std::io::Result<()> {
@@ -126,10 +190,10 @@ impl ExecBackend for ProcessBackend {
         // jobs): the request provably never reached it, so a fresh worker
         // can take the job with no double-execution risk — respawn once and
         // retry rather than spuriously poisoning the cone.
-        if let Err(first) = send(guard.as_mut().expect("worker just ensured")) {
+        if let Err(first) = send(guard.worker.as_mut().expect("worker just ensured")) {
             retire(&mut guard);
-            *guard = Some(self.spawn_worker()?);
-            if let Err(second) = send(guard.as_mut().expect("worker respawned")) {
+            self.ensure_worker(&mut guard)?;
+            if let Err(second) = send(guard.worker.as_mut().expect("worker respawned")) {
                 retire(&mut guard);
                 return Err(anyhow!(
                     "worker died before accepting the request (twice: {first}; {second}) [{}]",
@@ -139,16 +203,27 @@ impl ExecBackend for ProcessBackend {
         }
 
         let recv = |w: &mut Worker| -> std::io::Result<String> {
-            let mut resp = String::new();
-            if w.stdout.read_line(&mut resp)? == 0 {
-                return Err(std::io::Error::new(
-                    std::io::ErrorKind::UnexpectedEof,
-                    "worker closed its protocol stream",
-                ));
+            loop {
+                let mut resp = String::new();
+                if w.stdout.read_line(&mut resp)? == 0 {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "worker closed its protocol stream",
+                    ));
+                }
+                // A span batch is an auxiliary line the worker sends just
+                // before its reply: merge it into the host timeline and
+                // keep reading for the actual response.
+                if let Ok(j) = Json::parse(resp.trim()) {
+                    if j.get("spans").is_some() {
+                        obs::trace::absorb_remote_batch(&j);
+                        continue;
+                    }
+                }
+                return Ok(resp);
             }
-            Ok(resp)
         };
-        match recv(guard.as_mut().expect("worker present")) {
+        match recv(guard.worker.as_mut().expect("worker present")) {
             Err(io) => {
                 // the worker died mid-job (killed / aborted / OOM): reap it
                 // and leave the slot empty so the next job respawns.  Only
@@ -201,12 +276,26 @@ impl ExecBackend for ProcessBackend {
             }
         }
     }
+
+    /// The tail of the slot's worker stderr — still available after the
+    /// worker was retired, which is exactly when a failed job needs it.
+    fn failure_context(&self, worker: usize) -> Option<String> {
+        let slot = &self.slots[worker % self.slots.len()];
+        let guard = slot.lock().unwrap();
+        let tail = guard.tail.as_ref()?;
+        let lines: Vec<String> = tail.lock().ok()?.iter().cloned().collect();
+        if lines.is_empty() {
+            None
+        } else {
+            Some(lines.join("\n"))
+        }
+    }
 }
 
 impl Drop for ProcessBackend {
     fn drop(&mut self) {
         for slot in &self.slots {
-            if let Some(mut w) = slot.lock().unwrap().take() {
+            if let Some(mut w) = slot.lock().unwrap().worker.take() {
                 // closing stdin ends the serve loop; reap to avoid zombies
                 drop(w.stdin);
                 let _ = w.child.wait();
@@ -216,9 +305,10 @@ impl Drop for ProcessBackend {
 }
 
 /// Kill and reap a slot's worker (if any), leaving the slot empty so the
-/// next job respawns lazily.  Returns the exit status when reaped.
-fn retire(slot: &mut Option<Worker>) -> Option<std::process::ExitStatus> {
-    let mut w = slot.take()?;
+/// next job respawns lazily — the stderr tail stays behind for diagnosis.
+/// Returns the exit status when reaped.
+fn retire(slot: &mut SlotState) -> Option<std::process::ExitStatus> {
+    let mut w = slot.worker.take()?;
     let _ = w.child.kill();
     w.child.wait().ok()
 }
@@ -245,6 +335,11 @@ fn render_request(req: &ExecRequest) -> String {
         })
         .collect();
     m.insert("deps".to_string(), Json::Arr(deps));
+    // transport-level tracing flag: never part of `params`, so it cannot
+    // affect job hashes or artifact bytes
+    if obs::enabled() {
+        m.insert("trace".to_string(), Json::Bool(true));
+    }
     Json::Obj(m).to_string()
 }
 
@@ -356,10 +451,29 @@ pub fn worker_main(cache_root: &Path) -> Result<()> {
     let mut nonce = 0u64;
     for line in stdin.lines() {
         let line = line.context("read request line")?;
-        if line.trim().is_empty() {
+        let line = line.trim();
+        if line.is_empty() {
             continue;
         }
-        let (hash, error) = serve_request(&cache, line.trim(), &mut nonce);
+        // a traced request turns span collection on for this worker; the
+        // flag is transport-level, so parsing it twice is hash-neutral
+        let traced = Json::parse(line)
+            .ok()
+            .map(|j| matches!(j.get("trace"), Some(Json::Bool(true))))
+            .unwrap_or(false);
+        if traced && !obs::enabled() {
+            obs::set_enabled(true);
+        }
+        let (hash, error) = serve_request(&cache, line, &mut nonce);
+        if traced {
+            // ship this job's spans back before the reply, so the
+            // orchestrator's receive loop can absorb then answer
+            let events = obs::trace::take_events();
+            if !events.is_empty() {
+                let batch = obs::trace::render_span_batch(&hash, &events);
+                writeln!(stdout, "{batch}").context("write span batch line")?;
+            }
+        }
         let resp = render_response(&hash, error.as_deref());
         writeln!(stdout, "{resp}").context("write response line")?;
         stdout.flush().context("flush response")?;
@@ -421,6 +535,28 @@ mod tests {
         assert_eq!(back.params_json(), spec.params_json());
         let dep = j.get("deps").unwrap().idx(0).unwrap();
         assert_eq!(dep.get("hash").unwrap().as_str(), Some("aaaa0000aaaa0000"));
+    }
+
+    #[test]
+    fn trace_flag_rides_the_protocol_only_when_enabled() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(false);
+        let (spec, deps) = request();
+        let req = ExecRequest {
+            spec: &spec,
+            hash: "0123456789abcdef",
+            label: "stash:resnet18",
+            threads: 1,
+            deps: &deps,
+        };
+        let plain = Json::parse(&render_request(&req)).unwrap();
+        assert!(plain.get("trace").is_none(), "untraced request stays lean");
+        crate::obs::set_enabled(true);
+        let traced = Json::parse(&render_request(&req)).unwrap();
+        assert_eq!(traced.get("trace"), Some(&Json::Bool(true)));
+        // the flag lives outside params: job identity is untouched
+        assert_eq!(traced.get("params"), plain.get("params"));
+        crate::obs::set_enabled(false);
     }
 
     #[test]

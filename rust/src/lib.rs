@@ -40,6 +40,15 @@
 //! a spill sweep axis), cut atomically per epoch for the
 //! footprint-over-time reports, and fed to [`hwsim`]'s DRAM model.
 //!
+//! The observability layer ([`obs`]) makes the pipeline's time visible
+//! without ever touching its bytes: RAII spans (thread-local rings, a
+//! global collector, `--trace out.json` Chrome trace-event export with
+//! worker-process batches merged by job hash), lock-free counters and
+//! p50/p99 latency histograms snapshotted to `metrics.json`, one leveled
+//! CLI log sink (`--quiet`/`-v`), and a live TTY progress line.  Job
+//! bodies never print or time themselves, so artifacts and manifests
+//! stay fingerprint-identical with tracing on or off — CI proves it.
+//!
 //! The lab layer ([`lab`]) scales the evaluation surface itself: every
 //! sweep (`repro policy`, `repro stash`, `repro train`, the table/figure
 //! emitters, and the full `repro all` paper grid) is a DAG of content-
@@ -60,6 +69,7 @@ pub mod formats;
 pub mod gecko;
 pub mod hwsim;
 pub mod lab;
+pub mod obs;
 pub mod policy;
 pub mod report;
 pub mod runtime;

@@ -28,6 +28,7 @@ use sfp::hwsim::AccelConfig;
 use sfp::lab::{
     self, JobGraph, JobReport, JobSpec, JobStatus, ResultCache, StashSpec, TrainSpec,
 };
+use sfp::obs::{self, Level, ObsConfig, ProgressLine};
 use sfp::policy::sweep::{self, PolicyKind, SweepConfig};
 use sfp::report::footprint::{SAMPLE, STREAM_SEED};
 use sfp::report::{figures, tables};
@@ -38,6 +39,7 @@ use sfp::stats::ExponentHistogram;
 use sfp::traces::ValueModel;
 use sfp::util::cli::Args;
 use sfp::util::json::Json;
+use sfp::{oerror, oinfo, overbose};
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
@@ -47,7 +49,7 @@ fn main() {
     let code = match run(cmd, &args) {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            oerror!("error: {e:#}");
             1
         }
     };
@@ -55,6 +57,15 @@ fn main() {
 }
 
 fn run(cmd: &str, args: &Args) -> Result<()> {
+    let level = if args.has_flag("quiet") || args.has_flag("q") {
+        Level::Quiet
+    } else if args.has_flag("verbose") || args.has_flag("v") {
+        Level::Verbose
+    } else {
+        Level::Normal
+    };
+    let tracing = args.get("trace").is_some() || std::env::var("SFP_TRACE").as_deref() == Ok("1");
+    obs::init(&ObsConfig { tracing, level });
     match cmd {
         "train" => cmd_train(args),
         "table1" => cmd_table1(args),
@@ -73,7 +84,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
 }
 
 fn print_help() {
-    println!(
+    oinfo!(
         "repro — Schrödinger's FP reproduction\n\
          \n\
          USAGE: repro <command> [--options]\n\
@@ -105,8 +116,15 @@ fn print_help() {
          subprocesses over the shared content-addressed cache, so artifacts\n\
          stay byte-identical and a crashed worker only fails its own job.\n\
          \n\
+         global flags: --quiet/-q (errors only), -v/--verbose (extra\n\
+         diagnostics), --trace FILE (write a Chrome trace-event JSON of\n\
+         Trainer/stash/lab spans; Perfetto-loadable; also enabled by\n\
+         SFP_TRACE=1).  Tracing never changes artifact bytes: manifests and\n\
+         cached artifacts stay fingerprint-identical with it on.\n\
+         \n\
          lab runs write <out>/lab_manifest.json (every job: artifacts + hash +\n\
-         timing) and reuse the content-addressed cache in <out>/lab-cache."
+         timing) plus a <out>/metrics.json latency/counter snapshot, and\n\
+         reuse the content-addressed cache in <out>/lab-cache."
     );
 }
 
@@ -156,6 +174,15 @@ fn run_lab(
 ) -> Result<(Vec<JobReport>, f64, &'static str)> {
     let t0 = Instant::now();
     let workers = args.get_usize("workers", args.get_usize("jobs", 0));
+    // live single-line readout on stderr (TTY only; inert otherwise)
+    let _progress = ProgressLine::start(
+        graph.len(),
+        if args.has_flag("serial") {
+            1
+        } else {
+            lab::resolve_workers(graph, workers)
+        },
+    );
     let (reports, mode) = if args.has_flag("serial") {
         (lab::run_serial(graph, cache), "serial")
     } else {
@@ -187,6 +214,48 @@ fn fail_on_errors(reports: &[JobReport]) -> Result<()> {
     } else {
         Err(anyhow!("{} lab job(s) failed:\n  {}", failures.len(), failures.join("\n  ")))
     }
+}
+
+/// Observability exports after a lab run: the `metrics.json` snapshot
+/// next to `lab_manifest.json`, plus the Chrome trace when `--trace PATH`
+/// was given.  Exports read only process-global sinks — they never touch
+/// the cache or the manifest.
+fn write_obs_exports(args: &Args, dir: &Path) -> Result<()> {
+    obs::metrics::write_snapshot(&dir.join("metrics.json"))?;
+    if let Some(path) = args.get("trace") {
+        let n = obs::trace::write_chrome_trace(Path::new(path))?;
+        oinfo!("trace: {n} spans -> {path}");
+    }
+    Ok(())
+}
+
+/// Append one `{"kind":"restore_latency_summary",...}` row (p50/p99 per
+/// tier: DRAM hit vs. spill fault) to the *surfaced* copy of
+/// `stash_sweep.json`.  The cached artifact is never touched — latency is
+/// an observation of this process, not part of the content-addressed
+/// result — and a run that restored nothing (e.g. fully cached) appends
+/// nothing.
+fn append_restore_latency_summary(path: &Path) -> Result<()> {
+    let dram = obs::metrics::RESTORE_DRAM_US.summary();
+    let fault = obs::metrics::RESTORE_FAULT_US.summary();
+    if dram.count + fault.count == 0 {
+        return Ok(());
+    }
+    let text = std::fs::read_to_string(path)?;
+    let parsed = Json::parse(&text).map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+    let Json::Arr(mut rows) = parsed else {
+        return Err(anyhow!("{} is not a JSON array", path.display()));
+    };
+    let mut row = std::collections::BTreeMap::new();
+    row.insert(
+        "kind".to_string(),
+        Json::Str("restore_latency_summary".to_string()),
+    );
+    row.insert("dram_hit_us".to_string(), dram.to_json());
+    row.insert("spill_fault_us".to_string(), fault.to_json());
+    rows.push(Json::Obj(row));
+    std::fs::write(path, Json::Arr(rows).to_string())?;
+    Ok(())
 }
 
 /// Copy one job's cached artifacts to `dest`, optionally renaming a
@@ -271,6 +340,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let (reports, wall_ms, mode) = run_lab(&graph, &cache, args)?;
     let dir = out_dir(args);
     lab::write_manifest(&dir.join("lab_manifest.json"), &reports, wall_ms, mode)?;
+    write_obs_exports(args, &dir)?;
     fail_on_errors(&reports)?;
     for (report, spec) in reports.iter().zip(&specs) {
         let label = Variant::parse(&spec.variant, spec.container)
@@ -278,15 +348,15 @@ fn cmd_train(args: &Args) -> Result<()> {
             .label();
         let j = job_artifact_json(&cache, report, &format!("{label}_summary.json"))?;
         let num = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
-        println!(
+        oinfo!(
             "variant={label}{}",
             if report.status == JobStatus::Cached { " [cached]" } else { "" }
         );
-        println!("final_val_acc={:.4}", num("final_val_acc"));
-        println!("footprint_rel_fp32={:.4}", num("footprint_rel_fp32"));
-        println!("footprint_rel_bf16={:.4}", num("footprint_rel_bf16"));
+        oinfo!("final_val_acc={:.4}", num("final_val_acc"));
+        oinfo!("footprint_rel_fp32={:.4}", num("footprint_rel_fp32"));
+        oinfo!("footprint_rel_bf16={:.4}", num("footprint_rel_bf16"));
         if j.get("stash_written_bits").is_some() {
-            println!(
+            oinfo!(
                 "stash: wrote {:.1} MB / read {:.1} MB compressed ({:.1}% of FP32)",
                 num("stash_written_bits") / 8e6,
                 num("stash_read_bits") / 8e6,
@@ -295,7 +365,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         surface_artifacts(&cache, report, &dir, None)?;
     }
-    println!("artifacts -> {}", dir.display());
+    oinfo!("artifacts -> {}", dir.display());
     Ok(())
 }
 
@@ -304,12 +374,12 @@ fn cmd_train(args: &Args) -> Result<()> {
 // --------------------------------------------------------------------------
 
 fn cmd_table1(_args: &Args) -> Result<()> {
-    println!("Table I — total footprint vs FP32 (trace models; paper values in brackets)");
-    println!("{:<22} {:>10} {:>16} {:>16}", "Network", "BF16", "SFP_QM", "SFP_BC");
+    oinfo!("Table I — total footprint vs FP32 (trace models; paper values in brackets)");
+    oinfo!("{:<22} {:>10} {:>16} {:>16}", "Network", "BF16", "SFP_QM", "SFP_BC");
     let paper = [("ResNet18", 0.147, 0.237), ("MobileNetV3-Small", 0.249, 0.272)];
     for (row, (pname, pqm, pbc)) in tables::table1().iter().zip(paper) {
         assert_eq!(row.network, pname);
-        println!(
+        oinfo!(
             "{:<22} {:>9.1}% {:>8.1}% [{:>4.1}%] {:>8.1}% [{:>4.1}%]",
             row.network,
             100.0 * row.bf16_rel,
@@ -330,10 +400,10 @@ fn cmd_table2(args: &Args) -> Result<()> {
         "stash" => tables::table2_stash(&AccelConfig::default(), batch)?,
         other => return Err(anyhow!("unknown --source {other} (model|stash)")),
     };
-    println!(
+    oinfo!(
         "Table II — gains vs FP32 baseline (batch {batch}, SFP bits from {source}; paper values in brackets)"
     );
-    println!(
+    oinfo!(
         "{:<22} {:>22} {:>22} {:>22}",
         "Network", "BF16 speed/energy", "SFP_QM speed/energy", "SFP_BC speed/energy"
     );
@@ -343,12 +413,12 @@ fn cmd_table2(args: &Args) -> Result<()> {
     ];
     for (r, (pname, pbf, pqm, pbc)) in rows.iter().zip(paper) {
         assert_eq!(r.network, pname);
-        println!(
+        oinfo!(
             "{:<22} {:>6.2}x/{:<6.2}x [{:.2}/{:.2}] {:>5.2}x/{:<5.2}x [{:.2}/{:.2}] {:>5.2}x/{:<5.2}x [{:.2}/{:.2}]",
             r.network, r.bf16.0, r.bf16.1, pbf.0, pbf.1, r.qm.0, r.qm.1, pqm.0, pqm.1,
             r.bc.0, r.bc.1, pbc.0, pbc.1,
         );
-        println!(
+        oinfo!(
             "{:<22} memory-bound layer passes: {:.0}% (FP32) -> {:.0}% (SFP_QM)",
             "", 100.0 * r.membound_fp32, 100.0 * r.membound_qm
         );
@@ -359,7 +429,7 @@ fn cmd_table2(args: &Args) -> Result<()> {
 fn load_runtime(args: &Args) -> Result<Runtime> {
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let rt = Runtime::load(&dir)?;
-    eprintln!("runtime: platform={} artifacts={}", rt.platform(), rt.manifest.artifacts.len());
+    overbose!("runtime: platform={} artifacts={}", rt.platform(), rt.manifest.artifacts.len());
     Ok(rt)
 }
 
@@ -426,15 +496,15 @@ fn cmd_fig(args: &Args) -> Result<()> {
                 2 => {
                     let base = Trainer::new(&rt, train_cfg_direct(args, Variant::Fp32)?).run()?;
                     figures::fig_accuracy(&dir.join("fig2_accuracy_qm.csv"), &base, &qm)?;
-                    println!("fig2 -> {}", dir.join("fig2_accuracy_qm.csv").display());
+                    oinfo!("fig2 -> {}", dir.join("fig2_accuracy_qm.csv").display());
                 }
                 3 => {
                     figures::fig3_bitlengths(&dir.join("fig3_qm_bitlengths.csv"), &qm)?;
-                    println!("fig3 -> {}", dir.join("fig3_qm_bitlengths.csv").display());
+                    oinfo!("fig3 -> {}", dir.join("fig3_qm_bitlengths.csv").display());
                 }
                 _ => {
                     figures::fig4_per_layer(&dir.join("fig4_qm_per_layer.csv"), &qm)?;
-                    println!("fig4 -> {}", dir.join("fig4_qm_per_layer.csv").display());
+                    oinfo!("fig4 -> {}", dir.join("fig4_qm_per_layer.csv").display());
                 }
             }
         }
@@ -446,17 +516,17 @@ fn cmd_fig(args: &Args) -> Result<()> {
                 6 => {
                     let base = Trainer::new(&rt, train_cfg_direct(args, Variant::Bf16)?).run()?;
                     figures::fig_accuracy(&dir.join("fig6_accuracy_bc.csv"), &base, &bc)?;
-                    println!("fig6 -> {}", dir.join("fig6_accuracy_bc.csv").display());
+                    oinfo!("fig6 -> {}", dir.join("fig6_accuracy_bc.csv").display());
                 }
                 7 => {
                     let fp = Trainer::new(&rt, train_cfg_direct(args, Variant::SfpBc(Container::Fp32))?)
                         .run()?;
                     figures::fig7_bc_bits(&dir.join("fig7_bc_bits.csv"), &bc, Some(&fp))?;
-                    println!("fig7 -> {}", dir.join("fig7_bc_bits.csv").display());
+                    oinfo!("fig7 -> {}", dir.join("fig7_bc_bits.csv").display());
                 }
                 _ => {
                     figures::fig8_bc_histogram(&dir.join("fig8_bc_histogram.csv"), &bc)?;
-                    println!("fig8 -> {}", dir.join("fig8_bc_histogram.csv").display());
+                    oinfo!("fig8 -> {}", dir.join("fig8_bc_histogram.csv").display());
                 }
             }
         }
@@ -464,7 +534,7 @@ fn cmd_fig(args: &Args) -> Result<()> {
             let rt = load_runtime(args)?;
             let (hw, ha) = trained_histograms(&rt, args)?;
             figures::fig9_exponents(&dir.join("fig9_exponents.csv"), &hw, &ha)?;
-            println!("fig9 (e2e) -> {}", dir.join("fig9_exponents.csv").display());
+            oinfo!("fig9 (e2e) -> {}", dir.join("fig9_exponents.csv").display());
         }
         10 if source == "e2e" => {
             return Err(anyhow!("fig10 e2e source: use examples/train_e2e which dumps tensors"));
@@ -473,7 +543,7 @@ fn cmd_fig(args: &Args) -> Result<()> {
             let sample = args.get_usize("sample", 64 * 512);
             let files = figures::trace_figure(&dir, id, args.get_usize("batch", 256), sample)?;
             for f in files {
-                println!("fig{id} -> {}", dir.join(f).display());
+                oinfo!("fig{id} -> {}", dir.join(f).display());
             }
         }
         other => return Err(anyhow!("unknown figure id {other} (2|3|4|6|7|8|9|10|12|13)")),
@@ -497,7 +567,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
             .iter()
             .zip(&back)
             .all(|(&v, &b)| sfp::formats::quantize(v, n, codec.container).to_bits() == b.to_bits());
-        println!(
+        oinfo!(
             "{label:<20} n={n}: {:.2} b/value (ratio {:.3} vs container), cycles/value {:.3}, lossless-after-quant: {lossless}",
             c.total_bits() as f64 / count as f64,
             c.ratio(codec.container),
@@ -543,6 +613,7 @@ fn cmd_stash(args: &Args) -> Result<()> {
     let dir = out_dir(args);
     std::fs::create_dir_all(&dir)?;
     lab::write_manifest(&dir.join("lab_manifest.json"), &reports, wall_ms, mode)?;
+    write_obs_exports(args, &dir)?;
     fail_on_errors(&reports)?;
 
     let verbose = budgets.len() == 1;
@@ -551,7 +622,8 @@ fn cmd_stash(args: &Args) -> Result<()> {
         print_stash_row(&j, reports[id].status == JobStatus::Cached, verbose);
     }
     surface_artifacts(&cache, &reports[summary], &dir, None)?;
-    println!("stash sweep JSON -> {}", dir.join("stash_sweep.json").display());
+    append_restore_latency_summary(&dir.join("stash_sweep.json"))?;
+    oinfo!("stash sweep JSON -> {}", dir.join("stash_sweep.json").display());
     Ok(())
 }
 
@@ -559,7 +631,7 @@ fn print_stash_row(j: &Json, cached: bool, verbose: bool) {
     let num = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
     let s = |k: &str| j.get(k).and_then(Json::as_str).unwrap_or("?").to_string();
     let budget = num("budget_bytes");
-    println!(
+    oinfo!(
         "stash {} @ batch {}, policy {}, codec {}, budget {}{}",
         s("model"),
         num("batch"),
@@ -574,7 +646,7 @@ fn print_stash_row(j: &Json, cached: bool, verbose: bool) {
     );
     if verbose {
         if let Some(layers) = j.get("layers").and_then(Json::as_arr) {
-            println!(
+            oinfo!(
                 "{:<18} {:>4} {:>4} {:>12} {:>12} {:>9}",
                 "layer", "n_a", "n_w", "stash MB", "analytic MB", "delta %"
             );
@@ -582,7 +654,7 @@ fn print_stash_row(j: &Json, cached: bool, verbose: bool) {
                 let ln = |k: &str| l.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
                 let measured = ln("measured_bits");
                 let expected = ln("analytic_bits");
-                println!(
+                oinfo!(
                     "{:<18} {:>4} {:>4} {:>12.2} {:>12.2} {:>8.3}%",
                     l.get("name").and_then(Json::as_str).unwrap_or("?"),
                     ln("n_a"),
@@ -594,7 +666,7 @@ fn print_stash_row(j: &Json, cached: bool, verbose: bool) {
             }
         }
     }
-    println!(
+    oinfo!(
         "totals: stash {:.2} MB vs analytic {:.2} MB — {:.1}% of FP32; \
          hwsim {:.2}x speed / {:.2}x energy (DRAM traffic {:.1}%)",
         num("measured_mb"),
@@ -612,10 +684,10 @@ fn print_stash_row(j: &Json, cached: bool, verbose: bool) {
             .and_then(Json::as_arr)
             .map(|l| 2 * l.len())
             .unwrap_or(0);
-        println!("restore: {tensors}/{tensors} tensors bit-exact after stash round-trip");
+        oinfo!("restore: {tensors}/{tensors} tensors bit-exact after stash round-trip");
     }
     if budget > 0.0 {
-        println!(
+        oinfo!(
             "spill: DRAM peak {:.2} MB / spill peak {:.2} MB; evicted {:.2} MB ({} chunks), faulted {:.2} MB ({} chunks)",
             num("dram_peak_bytes") / 1e6,
             num("spill_peak_bytes") / 1e6,
@@ -677,16 +749,17 @@ fn cmd_policy(args: &Args) -> Result<()> {
     let dir = out_dir(args).join("policy");
     std::fs::create_dir_all(&dir)?;
     lab::write_manifest(&out_dir(args).join("lab_manifest.json"), &reports, wall_ms, mode)?;
+    write_obs_exports(args, &out_dir(args))?;
     fail_on_errors(&reports)?;
 
-    println!(
+    oinfo!(
         "Policy sweep — {} epochs x {} steps, batch {}, container {}, {} values/tensor ({mode})",
         cfg.epochs, cfg.steps_per_epoch, cfg.batch, cfg.container, cfg.sample
     );
-    println!(
+    oinfo!(
         "(paper averages in brackets: QM+QE 4.74x -> +Gecko 5.64x; BitWave 3.19x -> +Gecko 4.56x)"
     );
-    println!(
+    oinfo!(
         "\n{:<20} {:<9} {:>11} {:>12} {:>11} {:>10}",
         "network", "policy", "no-gecko", "gecko", "mant_a", "exp_a"
     );
@@ -700,7 +773,7 @@ fn cmd_policy(args: &Args) -> Result<()> {
                 .and_then(Json::as_f64)
                 .unwrap_or(f64::NAN)
         };
-        println!(
+        oinfo!(
             "{:<20} {:<9} {:>10.2}x {:>11.2}x {:>11.2} {:>10.2}{}",
             j.get("network").and_then(Json::as_str).unwrap_or(model),
             policy.label(),
@@ -713,11 +786,11 @@ fn cmd_policy(args: &Args) -> Result<()> {
         let traj_name = format!("{}_{}.json", model, policy.label().replace('+', "_"));
         surface_artifacts(&cache, &reports[id], &dir, Some(traj_name.as_str()))?;
     }
-    println!();
+    oinfo!("");
     let sj = job_artifact_json(&cache, &reports[summary], "policy_summary.json")?;
     if let Some(policies) = sj.get("policies").and_then(Json::as_arr) {
         for p in policies {
-            println!(
+            oinfo!(
                 "{:<9} average: {:.2}x footprint reduction, {:.2}x with Gecko exponents",
                 p.get("policy").and_then(Json::as_str).unwrap_or("?"),
                 p.get("avg_plan_reduction").and_then(Json::as_f64).unwrap_or(f64::NAN),
@@ -725,7 +798,7 @@ fn cmd_policy(args: &Args) -> Result<()> {
             );
         }
     }
-    println!("trajectories -> {}", dir.display());
+    oinfo!("trajectories -> {}", dir.display());
 
     if args.has_flag("verify-restore") {
         let quick = SweepConfig {
@@ -737,7 +810,7 @@ fn cmd_policy(args: &Args) -> Result<()> {
             for &k in &kinds {
                 let split = quick.steps_per_epoch * (quick.epochs / 3).max(1) + 3;
                 sweep::verify_restore_continuation(&net, k, &quick, split, 40)?;
-                println!(
+                oinfo!(
                     "restore-continuity OK: {} / {} (split at step {split})",
                     net.name,
                     k.label()
@@ -776,12 +849,13 @@ fn cmd_all(args: &Args) -> Result<()> {
             JobStatus::Failed(_) => "FAILED          ".to_string(),
             JobStatus::Skipped => "skipped         ".to_string(),
         };
-        println!("[{status}] {} ({})", r.label, r.hash);
+        oinfo!("[{status}] {} ({})", r.label, r.hash);
     }
 
     let dir = out_dir(args);
     std::fs::create_dir_all(&dir)?;
     let totals = lab::write_manifest(&dir.join("lab_manifest.json"), &reports, wall_ms, mode)?;
+    write_obs_exports(args, &dir)?;
 
     // surface the consolidated artifacts next to the manifest
     for (idx, rename) in [
@@ -812,7 +886,7 @@ fn cmd_all(args: &Args) -> Result<()> {
         }
     }
 
-    println!(
+    oinfo!(
         "\nlab: {} jobs — {} executed, {} cached ({:.1}% cache hits), {} failed, {} skipped in {:.1} s ({mode})",
         totals.total,
         totals.executed,
@@ -822,7 +896,7 @@ fn cmd_all(args: &Args) -> Result<()> {
         totals.skipped,
         wall_ms / 1e3,
     );
-    println!("manifest -> {}", dir.join("lab_manifest.json").display());
+    oinfo!("manifest -> {}", dir.join("lab_manifest.json").display());
 
     fail_on_errors(&reports)?;
     if args.has_flag("expect-cached") {
@@ -834,7 +908,7 @@ fn cmd_all(args: &Args) -> Result<()> {
                 totals.total,
             ));
         }
-        println!("warm cache verified: 100% hits, zero jobs executed");
+        oinfo!("warm cache verified: 100% hits, zero jobs executed");
     }
     Ok(())
 }

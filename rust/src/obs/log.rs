@@ -1,0 +1,111 @@
+//! The one leveled CLI log sink.  Job bodies never print (the lab's
+//! determinism contract); everything user-facing goes through the
+//! crate-root [`oinfo!`](crate::oinfo), [`overbose!`](crate::overbose)
+//! and [`oerror!`](crate::oerror) macros, which check the level *before*
+//! formatting.  Errors always reach stderr; info lands on stdout unless
+//! `--quiet`; verbose lines need `-v`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// CLI verbosity (`--quiet` < default < `-v`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Quiet = 0,
+    Normal = 1,
+    Verbose = 2,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Normal as u8);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Quiet,
+        1 => Level::Normal,
+        _ => Level::Verbose,
+    }
+}
+
+/// Would an info-level line be emitted?
+#[inline]
+pub fn emits_info() -> bool {
+    LEVEL.load(Ordering::Relaxed) >= Level::Normal as u8
+}
+
+/// Would a verbose-level line be emitted?
+#[inline]
+pub fn emits_verbose() -> bool {
+    LEVEL.load(Ordering::Relaxed) >= Level::Verbose as u8
+}
+
+/// Emit a pre-formatted info line (macro back end — prefer `oinfo!`).
+pub fn info_str(s: &str) {
+    if emits_info() {
+        println!("{s}");
+    }
+}
+
+/// Emit a pre-formatted verbose line (macro back end — prefer `overbose!`).
+pub fn verbose_str(s: &str) {
+    if emits_verbose() {
+        println!("{s}");
+    }
+}
+
+/// Emit an error line on stderr — never suppressed.
+pub fn error_str(s: &str) {
+    eprintln!("{s}");
+}
+
+/// Info-level CLI line (stdout; suppressed by `--quiet`).  The format
+/// arguments are only evaluated when the line will be emitted.
+#[macro_export]
+macro_rules! oinfo {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::emits_info() {
+            $crate::obs::log::info_str(&format!($($arg)*));
+        }
+    };
+}
+
+/// Verbose-level CLI line (stdout; needs `-v`).
+#[macro_export]
+macro_rules! overbose {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::emits_verbose() {
+            $crate::obs::log::verbose_str(&format!($($arg)*));
+        }
+    };
+}
+
+/// Error line (stderr; never suppressed).
+#[macro_export]
+macro_rules! oerror {
+    ($($arg:tt)*) => {
+        $crate::obs::log::error_str(&format!($($arg)*));
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_gate_info_and_verbose_but_never_errors() {
+        let _g = crate::obs::test_guard();
+        set_level(Level::Quiet);
+        assert!(!emits_info() && !emits_verbose());
+        set_level(Level::Normal);
+        assert!(emits_info() && !emits_verbose());
+        set_level(Level::Verbose);
+        assert!(emits_info() && emits_verbose());
+        assert_eq!(level(), Level::Verbose);
+        set_level(Level::Normal);
+        assert_eq!(level(), Level::Normal);
+        assert!(Level::Quiet < Level::Normal && Level::Normal < Level::Verbose);
+    }
+}

@@ -1,0 +1,370 @@
+//! Lock-free typed counters and log₂-bucket latency histograms for the
+//! hot paths, plus the `metrics.json` Prometheus-style snapshot.
+//!
+//! Everything here is a fixed named static — no registry, no lock.  The
+//! recording cost is a handful of relaxed atomic ops against ms-scale
+//! codec/executor work, so metrics stay on even when span tracing is
+//! disabled.  Latencies are **process-global** observations: they feed
+//! `metrics.json` and the surfaced sweep summaries, never the
+//! content-addressed artifacts (see the module docs of [`crate::obs`]).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// A monotonically-increasing (or peak-tracking) counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Raise the value to `n` if larger (peak gauges).
+    pub fn record_max(&self, n: u64) {
+        self.0.fetch_max(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log₂ bucket count: bucket `i` holds durations in `[2^(i-1), 2^i)` µs
+/// (bucket 0 = sub-µs), so 44 buckets span sub-µs to ~2.4 hours.
+pub const HIST_BUCKETS: usize = 44;
+
+/// A lock-free latency histogram with power-of-two µs buckets.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+fn bucket_of(us: u64) -> usize {
+    if us == 0 {
+        0
+    } else {
+        (64 - us.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Representative (upper-bound) value of bucket `i` in µs.
+fn bucket_hi(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+impl Histogram {
+    pub const fn new() -> Histogram {
+        Histogram {
+            buckets: [const { AtomicU64::new(0) }; HIST_BUCKETS],
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, us: u64) {
+        self.buckets[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_micros() as u64);
+    }
+
+    /// Point-in-time copy of the bucket counts.
+    pub fn snapshot(&self) -> HistBuckets {
+        let mut counts = [0u64; HIST_BUCKETS];
+        for (out, b) in counts.iter_mut().zip(&self.buckets) {
+            *out = b.load(Ordering::Relaxed);
+        }
+        HistBuckets {
+            counts,
+            count: self.count.load(Ordering::Relaxed),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn summary(&self) -> HistSummary {
+        self.snapshot().summary()
+    }
+}
+
+/// A snapshot of a [`Histogram`]'s buckets — subtractable, so per-epoch
+/// deltas come from two cuts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistBuckets {
+    pub counts: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub sum_us: u64,
+}
+
+impl Default for HistBuckets {
+    fn default() -> Self {
+        HistBuckets {
+            counts: [0; HIST_BUCKETS],
+            count: 0,
+            sum_us: 0,
+        }
+    }
+}
+
+impl HistBuckets {
+    /// The observations recorded between `last` and `self`.
+    pub fn delta(&self, last: &HistBuckets) -> HistBuckets {
+        let mut counts = [0u64; HIST_BUCKETS];
+        for (i, out) in counts.iter_mut().enumerate() {
+            *out = self.counts[i].saturating_sub(last.counts[i]);
+        }
+        HistBuckets {
+            counts,
+            count: self.count.saturating_sub(last.count),
+            sum_us: self.sum_us.saturating_sub(last.sum_us),
+        }
+    }
+
+    /// Quantile as the upper bound of the bucket holding rank `q·count`
+    /// (log₂ resolution — a p50 of 511 µs means "between 256 µs and
+    /// 511 µs").
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return bucket_hi(i);
+            }
+        }
+        bucket_hi(HIST_BUCKETS - 1)
+    }
+
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            count: self.count,
+            sum_us: self.sum_us,
+            p50_us: self.quantile_us(0.50),
+            p99_us: self.quantile_us(0.99),
+        }
+    }
+}
+
+/// Compact p50/p99 digest of a histogram (or of a bucket delta).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub sum_us: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
+impl HistSummary {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("count".to_string(), Json::Num(self.count as f64));
+        m.insert("sum_us".to_string(), Json::Num(self.sum_us as f64));
+        m.insert("p50_us".to_string(), Json::Num(self.p50_us as f64));
+        m.insert("p99_us".to_string(), Json::Num(self.p99_us as f64));
+        Json::Obj(m)
+    }
+}
+
+/// Codec axis labels, index-aligned with [`crate::stash::CodecKind::index`].
+pub const CODEC_LABELS: [&str; 4] = ["gecko", "sfp", "raw", "js"];
+
+// --- lab executor ---
+pub static CACHE_HITS: Counter = Counter::new();
+pub static CACHE_MISSES: Counter = Counter::new();
+pub static CACHE_LOOKUP_US: Histogram = Histogram::new();
+pub static STEALS: Counter = Counter::new();
+/// Accumulated µs executor workers spent parked waiting for work.
+pub static EXEC_IDLE_US: Counter = Counter::new();
+pub static JOBS_STARTED: Counter = Counter::new();
+pub static JOBS_DONE: Counter = Counter::new();
+pub static JOBS_EXECUTED: Counter = Counter::new();
+pub static JOBS_CACHED: Counter = Counter::new();
+pub static JOBS_FAILED: Counter = Counter::new();
+
+// --- stash pool / arena ---
+/// Peak submit-queue depth (jobs pending) over the process lifetime.
+pub static STASH_QUEUE_PEAK: Counter = Counter::new();
+/// Back-pressure: time `submit` blocked on the bounded queue.
+pub static STASH_SUBMIT_WAIT_US: Histogram = Histogram::new();
+/// Arena pin calls blocked on a chunk being faulted in by another thread.
+pub static PIN_WAIT_US: Histogram = Histogram::new();
+/// Demand faults: spill-file read latency per faulted chunk.
+pub static FAULT_US: Histogram = Histogram::new();
+/// Eviction batches: spill-file write latency per planned batch.
+pub static EVICT_US: Histogram = Histogram::new();
+
+// --- codecs ---
+pub static ENCODE_US: [Histogram; 4] = [const { Histogram::new() }; 4];
+pub static DECODE_US: [Histogram; 4] = [const { Histogram::new() }; 4];
+
+// --- restore tiers (global aggregate; the per-stash ledger keeps its own) ---
+/// Restore (pin+decode) latency when every chunk was DRAM-resident.
+pub static RESTORE_DRAM_US: Histogram = Histogram::new();
+/// Restore latency when at least one chunk faulted back from spill.
+pub static RESTORE_FAULT_US: Histogram = Histogram::new();
+
+fn per_codec_json(hists: &[Histogram; 4]) -> Json {
+    let mut m = BTreeMap::new();
+    for (h, label) in hists.iter().zip(CODEC_LABELS) {
+        m.insert(label.to_string(), h.summary().to_json());
+    }
+    Json::Obj(m)
+}
+
+/// Flat Prometheus-style snapshot of every metric.
+pub fn snapshot() -> Json {
+    let mut m = BTreeMap::new();
+    let num = |v: u64| Json::Num(v as f64);
+    m.insert("lab_cache_hits_total".to_string(), num(CACHE_HITS.get()));
+    m.insert("lab_cache_misses_total".to_string(), num(CACHE_MISSES.get()));
+    m.insert(
+        "lab_cache_lookup_us".to_string(),
+        CACHE_LOOKUP_US.summary().to_json(),
+    );
+    m.insert("lab_steals_total".to_string(), num(STEALS.get()));
+    m.insert("lab_worker_idle_us_total".to_string(), num(EXEC_IDLE_US.get()));
+    m.insert("lab_jobs_started_total".to_string(), num(JOBS_STARTED.get()));
+    m.insert("lab_jobs_done_total".to_string(), num(JOBS_DONE.get()));
+    m.insert(
+        "lab_jobs_executed_total".to_string(),
+        num(JOBS_EXECUTED.get()),
+    );
+    m.insert("lab_jobs_cached_total".to_string(), num(JOBS_CACHED.get()));
+    m.insert("lab_jobs_failed_total".to_string(), num(JOBS_FAILED.get()));
+    m.insert(
+        "stash_queue_depth_peak".to_string(),
+        num(STASH_QUEUE_PEAK.get()),
+    );
+    m.insert(
+        "stash_submit_wait_us".to_string(),
+        STASH_SUBMIT_WAIT_US.summary().to_json(),
+    );
+    m.insert("stash_pin_wait_us".to_string(), PIN_WAIT_US.summary().to_json());
+    m.insert("stash_fault_us".to_string(), FAULT_US.summary().to_json());
+    m.insert("stash_evict_us".to_string(), EVICT_US.summary().to_json());
+    m.insert("stash_encode_us".to_string(), per_codec_json(&ENCODE_US));
+    m.insert("stash_decode_us".to_string(), per_codec_json(&DECODE_US));
+    m.insert(
+        "stash_restore_dram_us".to_string(),
+        RESTORE_DRAM_US.summary().to_json(),
+    );
+    m.insert(
+        "stash_restore_fault_us".to_string(),
+        RESTORE_FAULT_US.summary().to_json(),
+    );
+    Json::Obj(m)
+}
+
+/// Write the snapshot to `path` (normally `metrics.json` next to
+/// `lab_manifest.json`).
+pub fn write_snapshot(path: &Path) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, snapshot().to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_add_and_track_peaks() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        c.record_max(3);
+        assert_eq!(c.get(), 5, "peak never regresses");
+        c.record_max(9);
+        assert_eq!(c.get(), 9);
+    }
+
+    #[test]
+    fn histogram_quantiles_land_in_log2_buckets() {
+        let h = Histogram::new();
+        for us in [1u64, 2, 3, 100, 100, 100, 100, 10_000] {
+            h.record(us);
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 8);
+        assert_eq!(s.sum_us, 1 + 2 + 3 + 400 + 10_000);
+        // the median observation (100 µs) sits in bucket [64, 127]
+        assert_eq!(s.p50_us, 127);
+        // the p99 observation (10 ms) sits in bucket [8192, 16383]
+        assert_eq!(s.p99_us, 16383);
+        // empty histograms answer zero, not a panic
+        assert_eq!(Histogram::new().summary(), HistSummary::default());
+    }
+
+    #[test]
+    fn bucket_deltas_summarize_only_new_observations() {
+        let h = Histogram::new();
+        h.record(10);
+        let first = h.snapshot();
+        h.record(1000);
+        h.record(1000);
+        let d = h.snapshot().delta(&first);
+        assert_eq!(d.count, 2);
+        assert_eq!(d.sum_us, 2000);
+        let s = d.summary();
+        assert_eq!(s.p50_us, 1023);
+        assert_eq!(s.p99_us, 1023);
+    }
+
+    #[test]
+    fn snapshot_is_valid_flat_json() {
+        let doc = snapshot().to_string();
+        let j = Json::parse(&doc).unwrap();
+        assert!(j.get("lab_cache_hits_total").is_some());
+        let enc = j.get("stash_encode_us").unwrap();
+        for label in CODEC_LABELS {
+            assert!(enc.get(label).unwrap().get("p99_us").is_some());
+        }
+    }
+
+    #[test]
+    fn summary_json_shape() {
+        let s = HistSummary {
+            count: 3,
+            sum_us: 30,
+            p50_us: 15,
+            p99_us: 15,
+        };
+        let j = s.to_json();
+        assert_eq!(j.get("count").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(j.get("p50_us").and_then(Json::as_f64), Some(15.0));
+    }
+}

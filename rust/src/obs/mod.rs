@@ -1,0 +1,101 @@
+//! Observability: structured tracing, metrics, leveled logging, and the
+//! live progress readout — one cross-cutting layer shared by the Trainer,
+//! the stash, and the lab executor.
+//!
+//! # Pieces
+//!
+//! - [`trace`]: `Span`/`Event` RAII tracing into thread-local rings that
+//!   flush to a global collector.  Disabled (the default) a span is one
+//!   relaxed atomic load and **zero allocation**; enabled it costs two
+//!   monotonic clock reads and a ring push.  `--trace out.json` renders
+//!   the collected events as Chrome trace-event JSON (Perfetto-loadable):
+//!   `{"traceEvents":[{"name","cat","ph":"X","ts","dur","pid","tid",
+//!   "args":{"job":…}}],"displayTimeUnit":"ms"}` with timestamps in
+//!   microseconds since process start.  Under `--backend process` the
+//!   workers ship their spans back as an extra protocol line
+//!   (`{"hash":…,"spans":[…]}`) that the orchestrator merges into the
+//!   host timeline, keyed by job hash.
+//! - [`metrics`]: lock-free counters and log₂-bucket latency histograms
+//!   (p50/p99) on the hot paths — cache lookups, steals, worker idle
+//!   time, per-codec encode/decode, arena pin-wait / spill fault / evict
+//!   stalls, restore latency per tier.  `metrics.json` (a flat
+//!   Prometheus-style snapshot) lands next to `lab_manifest.json`.
+//! - [`log`]: the one leveled sink every CLI print goes through
+//!   (`--quiet` / `-v`), via the crate-root [`oinfo!`](crate::oinfo),
+//!   [`overbose!`](crate::overbose) and [`oerror!`](crate::oerror)
+//!   macros.
+//! - [`progress`]: a single-line live jobs/utilization readout on stderr
+//!   while a grid runs (TTY only, never in CI logs).
+//!
+//! # Invariant: observability never perturbs artifact bytes
+//!
+//! Job bodies never print and never time themselves; spans and metrics
+//! live strictly *outside* `execute_spec`, latencies are recorded only
+//! into process-global sinks, and nothing observability-derived is ever
+//! written into the content-addressed cache.  Manifests and cached
+//! artifacts are fingerprint-identical with and without `--trace` (and
+//! across serial / in-process / process backends) — CI diffs the
+//! fingerprints to prove it.
+
+pub mod log;
+pub mod metrics;
+pub mod progress;
+pub mod trace;
+
+pub use log::Level;
+pub use progress::ProgressLine;
+pub use trace::{span, span_with, Event, Span};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Switches resolved from the CLI (`--trace`, `--quiet`, `-v`) and the
+/// `SFP_TRACE` environment variable.
+#[derive(Debug, Clone, Copy)]
+pub struct ObsConfig {
+    /// Collect spans (metrics counters are always on — they are a few
+    /// relaxed atomics against ms-scale codec work).
+    pub tracing: bool,
+    /// CLI log verbosity.
+    pub level: Level,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            tracing: false,
+            level: Level::Normal,
+        }
+    }
+}
+
+/// Master tracing switch: one relaxed load on the disabled fast path.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Apply a config (normally once, at CLI startup).
+pub fn init(cfg: &ObsConfig) {
+    log::set_level(cfg.level);
+    set_enabled(cfg.tracing);
+}
+
+/// Is span collection on?
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Flip span collection at runtime (the worker loop enables it when the
+/// orchestrator sends a traced request).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Serializes tests that touch the process-global obs state (the enabled
+/// flag, the trace sink, the log level) — tests run concurrently, and two
+/// tests draining the sink would race.  Tests additionally tag their
+/// spans with a unique `cat` and filter on it, so events leaked from
+/// non-obs tests can't confuse assertions.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static GUARD: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}

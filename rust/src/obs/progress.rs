@@ -1,0 +1,78 @@
+//! Live single-line grid progress/utilization readout on stderr.
+//!
+//! A background thread repaints `\r[lab] D/N jobs  R running  util P%
+//! F failed` every 200 ms while a grid runs, reading only the global
+//! [`crate::obs::metrics`] counters — it touches nothing on the job
+//! path.  The line is drawn only when stderr is a TTY (never into CI
+//! logs or redirected files) and the log level is at least Normal;
+//! otherwise [`ProgressLine::start`] is an inert no-op handle.
+
+use super::log;
+use super::metrics;
+use std::io::{IsTerminal, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+const TICK: Duration = Duration::from_millis(200);
+
+/// RAII handle: starts the repaint thread, stops + clears the line on
+/// drop.
+pub struct ProgressLine {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ProgressLine {
+    /// Begin a readout over `total` jobs on `workers` executor threads.
+    pub fn start(total: usize, workers: usize) -> ProgressLine {
+        let stop = Arc::new(AtomicBool::new(false));
+        if !std::io::stderr().is_terminal() || !log::emits_info() {
+            return ProgressLine { stop, handle: None };
+        }
+        // Counters are process-global and survive earlier runs in the
+        // same process; render deltas against this baseline.
+        let done0 = metrics::JOBS_DONE.get();
+        let started0 = metrics::JOBS_STARTED.get();
+        let failed0 = metrics::JOBS_FAILED.get();
+        let idle0 = metrics::EXEC_IDLE_US.get();
+        let t0 = Instant::now();
+        let flag = Arc::clone(&stop);
+        let workers = workers.max(1);
+        let handle = std::thread::spawn(move || {
+            while !flag.load(Ordering::Relaxed) {
+                let done = metrics::JOBS_DONE.get() - done0;
+                let started = metrics::JOBS_STARTED.get() - started0;
+                let failed = metrics::JOBS_FAILED.get() - failed0;
+                let idle_us = metrics::EXEC_IDLE_US.get() - idle0;
+                let elapsed_us = t0.elapsed().as_micros().max(1) as u64;
+                let capacity = (workers as u64 * elapsed_us) as f64;
+                let util = (1.0 - idle_us as f64 / capacity).clamp(0.0, 1.0);
+                let running = started.saturating_sub(done);
+                eprint!(
+                    "\r[lab] {done}/{total} jobs  {running} running  util {:3.0}%  {failed} failed ",
+                    util * 100.0
+                );
+                let _ = std::io::stderr().flush();
+                std::thread::sleep(TICK);
+            }
+            // wipe the line so the final summary starts on a clean row
+            eprint!("\r{:76}\r", "");
+            let _ = std::io::stderr().flush();
+        });
+        ProgressLine {
+            stop,
+            handle: Some(handle),
+        }
+    }
+}
+
+impl Drop for ProgressLine {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,424 @@
+//! Span/event tracing: RAII spans into thread-local rings, a global
+//! collector, Chrome trace-event export, and cross-process batch merge.
+//!
+//! A [`Span`] is recorded on drop as one complete event (`"ph":"X"`).
+//! When tracing is disabled ([`crate::obs::enabled`] is false) a span is
+//! a `None` — constructing and dropping it performs no allocation and no
+//! clock read.  Enabled, events land in a per-thread ring that flushes
+//! to the global sink every [`RING_CAPACITY`] events and on thread exit,
+//! so hot paths never contend on the sink lock.
+//!
+//! Timestamps are microseconds from a process-wide monotonic epoch
+//! (first use), which keeps them positive, small, and Perfetto-friendly.
+//! Worker processes have their own epoch; [`absorb_remote_batch`] shifts
+//! a worker batch so its latest span end lands at the host-side receive
+//! time, which is the best alignment available without a shared clock.
+
+use crate::util::json::Json;
+use std::borrow::Cow;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Events buffered per thread before a flush to the global sink.
+pub const RING_CAPACITY: usize = 128;
+
+/// One completed span, shaped for the Chrome trace-event format.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub name: Cow<'static, str>,
+    pub cat: Cow<'static, str>,
+    /// Start, µs since the process trace epoch.
+    pub ts_us: u64,
+    /// Duration in µs.
+    pub dur_us: u64,
+    pub pid: u32,
+    pub tid: u64,
+    /// Job content hash, when the span belongs to a lab job.
+    pub arg_job: Option<String>,
+}
+
+static SINK: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+struct Ring {
+    buf: Vec<Event>,
+}
+
+impl Drop for Ring {
+    fn drop(&mut self) {
+        flush_to_sink(&mut self.buf);
+    }
+}
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    static RING: RefCell<Ring> = const { RefCell::new(Ring { buf: Vec::new() }) };
+}
+
+/// Microseconds since the process trace epoch (first call wins).
+pub fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+fn flush_to_sink(buf: &mut Vec<Event>) {
+    if buf.is_empty() {
+        return;
+    }
+    if let Ok(mut sink) = SINK.lock() {
+        sink.append(buf);
+    }
+}
+
+fn push_event(ev: Event) {
+    let _ = RING.try_with(|r| {
+        let mut r = r.borrow_mut();
+        r.buf.push(ev);
+        if r.buf.len() >= RING_CAPACITY {
+            flush_to_sink(&mut r.buf);
+        }
+    });
+}
+
+struct SpanData {
+    name: Cow<'static, str>,
+    cat: &'static str,
+    start_us: u64,
+    job: Option<String>,
+}
+
+/// RAII span: records one `Event` on drop.  `None` inside = disabled.
+pub struct Span {
+    data: Option<SpanData>,
+}
+
+impl Span {
+    /// A span that records nothing (the disabled fast path).
+    pub const fn disabled() -> Span {
+        Span { data: None }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(d) = self.data.take() else { return };
+        let end = now_us();
+        push_event(Event {
+            name: d.name,
+            cat: Cow::Borrowed(d.cat),
+            ts_us: d.start_us,
+            dur_us: end.saturating_sub(d.start_us),
+            pid: std::process::id(),
+            tid: TID.with(|t| *t),
+            arg_job: d.job,
+        });
+    }
+}
+
+/// Open a span with static category + name.  One relaxed atomic load and
+/// zero allocation when tracing is disabled.
+#[inline]
+pub fn span(cat: &'static str, name: &'static str) -> Span {
+    if !super::enabled() {
+        return Span::disabled();
+    }
+    Span {
+        data: Some(SpanData {
+            name: Cow::Borrowed(name),
+            cat,
+            start_us: now_us(),
+            job: None,
+        }),
+    }
+}
+
+/// Open a span whose label is computed only when tracing is enabled —
+/// call sites pay for `format!` exclusively on the traced path.
+#[inline]
+pub fn span_with<F>(cat: &'static str, make: F) -> Span
+where
+    F: FnOnce() -> (String, Option<String>),
+{
+    if !super::enabled() {
+        return Span::disabled();
+    }
+    let (name, job) = make();
+    Span {
+        data: Some(SpanData {
+            name: Cow::Owned(name),
+            cat,
+            start_us: now_us(),
+            job,
+        }),
+    }
+}
+
+/// Drain everything collected so far: the calling thread's ring plus the
+/// global sink.  Other live threads' partial rings are not visible —
+/// callers drain after joining their workers.
+pub fn take_events() -> Vec<Event> {
+    let _ = RING.try_with(|r| flush_to_sink(&mut r.borrow_mut().buf));
+    match SINK.lock() {
+        Ok(mut sink) => std::mem::take(&mut *sink),
+        Err(_) => Vec::new(),
+    }
+}
+
+fn event_json(ev: &Event) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(ev.name.to_string()));
+    m.insert("cat".to_string(), Json::Str(ev.cat.to_string()));
+    m.insert("ph".to_string(), Json::Str("X".to_string()));
+    m.insert("ts".to_string(), Json::Num(ev.ts_us as f64));
+    m.insert("dur".to_string(), Json::Num(ev.dur_us as f64));
+    m.insert("pid".to_string(), Json::Num(ev.pid as f64));
+    m.insert("tid".to_string(), Json::Num(ev.tid as f64));
+    if let Some(job) = &ev.arg_job {
+        let mut args = BTreeMap::new();
+        args.insert("job".to_string(), Json::Str(job.clone()));
+        m.insert("args".to_string(), Json::Obj(args));
+    }
+    Json::Obj(m)
+}
+
+fn event_from_json(j: &Json) -> Option<Event> {
+    Some(Event {
+        name: Cow::Owned(j.get("name")?.as_str()?.to_string()),
+        cat: Cow::Owned(j.get("cat")?.as_str()?.to_string()),
+        ts_us: j.get("ts")?.as_f64()? as u64,
+        dur_us: j.get("dur")?.as_f64()? as u64,
+        pid: j.get("pid")?.as_f64()? as u32,
+        tid: j.get("tid")?.as_f64()? as u64,
+        arg_job: j
+            .get("args")
+            .and_then(|a| a.get("job"))
+            .and_then(|s| s.as_str())
+            .map(|s| s.to_string()),
+    })
+}
+
+/// Render events as a Chrome trace-event JSON document.
+pub fn chrome_trace_json(events: &[Event]) -> Json {
+    let mut root = BTreeMap::new();
+    root.insert(
+        "traceEvents".to_string(),
+        Json::Arr(events.iter().map(event_json).collect()),
+    );
+    root.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    Json::Obj(root)
+}
+
+/// Drain all collected events and write them as a Chrome trace to `path`.
+/// Returns the number of events written.
+pub fn write_chrome_trace(path: &Path) -> anyhow::Result<usize> {
+    let events = take_events();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, chrome_trace_json(&events).to_string())?;
+    Ok(events.len())
+}
+
+/// Render a worker-side span batch as one protocol line:
+/// `{"hash":"…","spans":[…]}`.
+pub fn render_span_batch(hash: &str, events: &[Event]) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("hash".to_string(), Json::Str(hash.to_string()));
+    m.insert(
+        "spans".to_string(),
+        Json::Arr(events.iter().map(event_json).collect()),
+    );
+    Json::Obj(m).to_string()
+}
+
+/// Parse a span batch back into `(job hash, events)`.  Returns `None`
+/// when `j` is not a batch (no `"spans"` key).
+pub fn parse_span_batch(j: &Json) -> Option<(String, Vec<Event>)> {
+    let spans = j.get("spans")?.as_arr()?;
+    let hash = j.get("hash").and_then(|h| h.as_str()).unwrap_or("");
+    Some((
+        hash.to_string(),
+        spans.iter().filter_map(event_from_json).collect(),
+    ))
+}
+
+/// Merge a worker span batch into the host timeline.  Worker events keep
+/// their own pid/tid lanes; timestamps are shifted so the batch's latest
+/// span end coincides with the host-side receive time, and spans missing
+/// a job arg inherit the batch's job hash.  Returns how many events were
+/// absorbed.
+pub fn absorb_remote_batch(j: &Json) -> usize {
+    let Some((hash, mut events)) = parse_span_batch(j) else {
+        return 0;
+    };
+    if events.is_empty() {
+        return 0;
+    }
+    let max_end = events
+        .iter()
+        .map(|e| e.ts_us + e.dur_us)
+        .max()
+        .unwrap_or(0);
+    let now = now_us();
+    for e in &mut events {
+        e.ts_us = (e.ts_us + now).saturating_sub(max_end);
+        if e.arg_job.is_none() && !hash.is_empty() {
+            e.arg_job = Some(hash.clone());
+        }
+    }
+    let n = events.len();
+    if let Ok(mut sink) = SINK.lock() {
+        sink.append(&mut events);
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(false);
+        let _ = take_events();
+        for _ in 0..100 {
+            let _sp = span("disabled-test", "noop");
+        }
+        let sp = span_with("disabled-test", || ("never".to_string(), None));
+        drop(sp);
+        assert!(take_events().iter().all(|e| e.cat != "disabled-test"));
+    }
+
+    #[test]
+    fn spans_nest_and_interleave_per_thread() {
+        let _g = crate::obs::test_guard();
+        let _ = take_events();
+        crate::obs::set_enabled(true);
+        const THREADS: usize = 4;
+        const REPS: usize = 50;
+        std::thread::scope(|s| {
+            for _ in 0..THREADS {
+                s.spawn(|| {
+                    for _ in 0..REPS {
+                        let _outer = span("nest-test", "outer");
+                        let _inner = span("nest-test", "inner");
+                    }
+                });
+            }
+        });
+        crate::obs::set_enabled(false);
+        let events: Vec<Event> = take_events()
+            .into_iter()
+            .filter(|e| e.cat == "nest-test")
+            .collect();
+        assert_eq!(events.len(), THREADS * REPS * 2);
+        let mut by_tid: BTreeMap<u64, Vec<&Event>> = BTreeMap::new();
+        for e in &events {
+            by_tid.entry(e.tid).or_default().push(e);
+        }
+        assert_eq!(by_tid.len(), THREADS, "one timeline lane per thread");
+        for evs in by_tid.values() {
+            let outers: Vec<&&Event> = evs.iter().filter(|e| e.name == "outer").collect();
+            let inners: Vec<&&Event> = evs.iter().filter(|e| e.name == "inner").collect();
+            assert_eq!(outers.len(), REPS);
+            assert_eq!(inners.len(), REPS);
+            // every inner interval must lie within an outer interval on
+            // its own thread — the nesting invariant Perfetto renders
+            for i in &inners {
+                assert!(
+                    outers.iter().any(|o| o.ts_us <= i.ts_us
+                        && i.ts_us + i.dur_us <= o.ts_us + o.dur_us),
+                    "inner span must nest inside an outer on its thread"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chrome_trace_json_shape() {
+        let events = vec![Event {
+            name: Cow::Borrowed("encode"),
+            cat: Cow::Borrowed("stash"),
+            ts_us: 5,
+            dur_us: 17,
+            pid: 1,
+            tid: 2,
+            arg_job: Some("cafe0123".to_string()),
+        }];
+        let doc = chrome_trace_json(&events);
+        assert_eq!(
+            doc.get("displayTimeUnit").and_then(Json::as_str),
+            Some("ms")
+        );
+        let ev = doc.get("traceEvents").unwrap().idx(0).unwrap();
+        assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(ev.get("ts").and_then(Json::as_f64), Some(5.0));
+        assert_eq!(ev.get("dur").and_then(Json::as_f64), Some(17.0));
+        assert_eq!(
+            ev.get("args").and_then(|a| a.get("job")).and_then(Json::as_str),
+            Some("cafe0123")
+        );
+    }
+
+    #[test]
+    fn span_batch_round_trips_and_merges_into_the_host_timeline() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(false);
+        let _ = take_events();
+        let events = vec![
+            Event {
+                name: Cow::Borrowed("execute"),
+                cat: Cow::Borrowed("remote-test"),
+                ts_us: 10,
+                dur_us: 80,
+                pid: 4242,
+                tid: 7,
+                arg_job: None,
+            },
+            Event {
+                name: Cow::Borrowed("commit"),
+                cat: Cow::Borrowed("remote-test"),
+                ts_us: 90,
+                dur_us: 10,
+                pid: 4242,
+                tid: 7,
+                arg_job: Some("deadbeef".to_string()),
+            },
+        ];
+        let line = render_span_batch("deadbeef", &events);
+        assert!(!line.contains('\n'), "one batch = one protocol line");
+        let j = Json::parse(&line).unwrap();
+        let (hash, parsed) = parse_span_batch(&j).unwrap();
+        assert_eq!(hash, "deadbeef");
+        assert_eq!(parsed, events);
+        // a response line is not a batch
+        assert!(parse_span_batch(&Json::parse(r#"{"hash":"x","ok":true}"#).unwrap()).is_none());
+
+        assert_eq!(absorb_remote_batch(&j), 2);
+        let merged: Vec<Event> = take_events()
+            .into_iter()
+            .filter(|e| e.cat == "remote-test")
+            .collect();
+        assert_eq!(merged.len(), 2);
+        // worker identity survives the merge; the batch hash keys every span
+        assert!(merged.iter().all(|e| e.pid == 4242));
+        assert!(merged
+            .iter()
+            .all(|e| e.arg_job.as_deref() == Some("deadbeef")));
+        // shifted so the batch's latest end is at/before host receive time
+        let max_end = merged.iter().map(|e| e.ts_us + e.dur_us).max().unwrap();
+        assert!(max_end <= now_us());
+        // relative spacing within the batch is preserved
+        let a = merged.iter().find(|e| e.name == "execute").unwrap();
+        let b = merged.iter().find(|e| e.name == "commit").unwrap();
+        assert_eq!(b.ts_us - a.ts_us, 80);
+        assert_eq!(a.dur_us, 80);
+    }
+}

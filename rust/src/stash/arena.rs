@@ -64,6 +64,10 @@ impl ChunkSeq {
 pub struct PinnedStream {
     chunks: Vec<Arc<[u64]>>,
     pub len_bits: usize,
+    /// True when any chunk came back from the spill tier during this pin
+    /// (faulted by us, or by a concurrent pin we waited on) — the
+    /// DRAM-hit vs. spill-fault restore-latency tier split.
+    pub faulted: bool,
 }
 
 impl PinnedStream {
@@ -262,6 +266,8 @@ impl ChunkArena {
         inner.stamp += 1;
         let stamp = inner.stamp;
         let mut chunks = Vec::with_capacity(seq.slots.len());
+        let mut faulted = false;
+        let mut wait_us = 0u64;
         for &id in &seq.slots {
             let idx = id as usize;
             let buf = loop {
@@ -275,7 +281,10 @@ impl ChunkArena {
                     // Another pin is faulting this exact chunk: wait for
                     // *it*, re-checking this slot only — stores and pins
                     // of other chunks proceed under the lock we release.
+                    faulted = true;
+                    let t0 = std::time::Instant::now();
                     inner = self.cv.wait(inner).unwrap();
+                    wait_us += t0.elapsed().as_micros() as u64;
                     continue;
                 }
                 debug_assert_eq!(inner.slots[idx].io, IoState::Idle);
@@ -292,10 +301,13 @@ impl ChunkArena {
                         .as_ref()
                         .expect("spill file exists for spilled chunk"),
                 );
+                faulted = true;
                 drop(inner);
                 let mut bytes = vec![0u8; CHUNK_BYTES];
+                let t0 = std::time::Instant::now();
                 file.read_exact_at(&mut bytes, fslot as u64 * CHUNK_BYTES as u64)
                     .expect("spill tier read failed");
+                crate::obs::metrics::FAULT_US.record_duration(t0.elapsed());
                 let buf: Arc<[u64]> = bytes_to_words(&bytes).into();
                 inner = self.inner.lock().unwrap();
                 inner.slots[idx].io = IoState::Idle;
@@ -324,9 +336,13 @@ impl ChunkArena {
         let pending = self.plan_evictions(&mut inner);
         drop(inner);
         self.complete_evictions(pending);
+        if wait_us > 0 {
+            crate::obs::metrics::PIN_WAIT_US.record(wait_us);
+        }
         PinnedStream {
             chunks,
             len_bits: seq.len_bits,
+            faulted,
         }
     }
 
@@ -440,6 +456,7 @@ impl ChunkArena {
             return;
         }
         let mut scratch = vec![0u8; CHUNK_BYTES];
+        let t0 = std::time::Instant::now();
         for p in &pending {
             for (dst, w) in scratch.chunks_exact_mut(8).zip(p.buf.iter()) {
                 dst.copy_from_slice(&w.to_le_bytes());
@@ -448,6 +465,7 @@ impl ChunkArena {
                 .write_all_at(&scratch, p.fslot as u64 * CHUNK_BYTES as u64)
                 .expect("spill tier write failed");
         }
+        crate::obs::metrics::EVICT_US.record_duration(t0.elapsed());
         let mut inner = self.inner.lock().unwrap();
         for p in pending {
             let idx = p.id as usize;

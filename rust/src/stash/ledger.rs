@@ -8,6 +8,7 @@
 //! lock and [`StashLedger::mark_epoch`] cuts them in a single snapshot, so
 //! a `footprint_over_time` row can never mix epochs across the two tiers.
 
+use crate::obs::metrics::{HistBuckets, HistSummary, Histogram};
 use crate::stats::{ComponentBits, Footprint};
 use std::sync::Mutex;
 
@@ -67,6 +68,13 @@ pub struct EpochTraffic {
     pub spill_written_bits: f64,
     /// Spill-tier fault-back bytes this epoch (bits, chunk-granular).
     pub spill_read_bits: f64,
+    /// Restore (pin+decode) latency digest for restores this epoch whose
+    /// chunks were all DRAM-resident.  Latency is an observation, never an
+    /// artifact input — the byte/bits fields above stay the only values
+    /// that reach content-addressed outputs.
+    pub restore_dram_us: HistSummary,
+    /// Restore latency digest for restores that faulted ≥1 spilled chunk.
+    pub restore_fault_us: HistSummary,
 }
 
 impl EpochTraffic {
@@ -78,12 +86,25 @@ impl EpochTraffic {
     }
 }
 
+/// Mark-to-mark state: the counter + latency-bucket snapshots at the last
+/// cut, plus the per-epoch delta rows recorded so far.
+#[derive(Default)]
+struct Marks {
+    last: LedgerSnapshot,
+    rows: Vec<EpochTraffic>,
+    last_dram: HistBuckets,
+    last_fault: HistBuckets,
+}
+
 /// Thread-safe ledger shared between pool workers and the caller.
 #[derive(Default)]
 pub struct StashLedger {
     inner: Mutex<LedgerSnapshot>,
-    /// (snapshot at the last mark, per-epoch deltas so far).
-    marks: Mutex<(LedgerSnapshot, Vec<EpochTraffic>)>,
+    marks: Mutex<Marks>,
+    /// Restore latency, DRAM-hit tier (no chunk faulted).
+    restore_dram: Histogram,
+    /// Restore latency, spill-fault tier (≥1 chunk faulted back).
+    restore_fault: Histogram,
 }
 
 impl StashLedger {
@@ -101,20 +122,42 @@ impl StashLedger {
     pub fn mark_epoch(&self) {
         let mut m = self.marks.lock().unwrap();
         let now = self.snapshot();
-        let last = m.0;
-        m.1.push(EpochTraffic {
+        let dram = self.restore_dram.snapshot();
+        let fault = self.restore_fault.snapshot();
+        let last = m.last;
+        let row = EpochTraffic {
             written_bits: now.written_bits - last.written_bits,
             read_bits: now.read_bits - last.read_bits,
             written_fp32_bits: now.written_fp32_bits - last.written_fp32_bits,
             spill_written_bits: now.spill_written_bits - last.spill_written_bits,
             spill_read_bits: now.spill_read_bits - last.spill_read_bits,
-        });
-        m.0 = now;
+            restore_dram_us: dram.delta(&m.last_dram).summary(),
+            restore_fault_us: fault.delta(&m.last_fault).summary(),
+        };
+        m.rows.push(row);
+        m.last = now;
+        m.last_dram = dram;
+        m.last_fault = fault;
     }
 
     /// Per-epoch traffic deltas recorded so far.
     pub fn epoch_traffic(&self) -> Vec<EpochTraffic> {
-        self.marks.lock().unwrap().1.clone()
+        self.marks.lock().unwrap().rows.clone()
+    }
+
+    /// Record one restore's (pin+decode) latency, classified by tier:
+    /// `faulted` = at least one chunk came back from the spill file.
+    pub fn record_restore_latency(&self, faulted: bool, us: u64) {
+        if faulted {
+            self.restore_fault.record(us);
+        } else {
+            self.restore_dram.record(us);
+        }
+    }
+
+    /// Cumulative restore-latency digests: `(DRAM hit, spill fault)`.
+    pub fn restore_latency(&self) -> (HistSummary, HistSummary) {
+        (self.restore_dram.summary(), self.restore_fault.summary())
     }
 
     pub fn record_write(&self, class: TensorClass, bits: ComponentBits, count: usize) {
@@ -216,6 +259,31 @@ mod tests {
         // an epoch with no traffic records a zero row, not a panic
         l.mark_epoch();
         assert!((l.epoch_traffic()[2].written_bits).abs() < 1e-9);
+    }
+
+    #[test]
+    fn restore_latency_splits_tiers_and_cuts_per_epoch() {
+        let l = StashLedger::new();
+        l.record_restore_latency(false, 100);
+        l.record_restore_latency(false, 100);
+        l.record_restore_latency(true, 5000);
+        let (dram, fault) = l.restore_latency();
+        assert_eq!(dram.count, 2);
+        assert_eq!(dram.sum_us, 200);
+        assert_eq!(fault.count, 1);
+        assert!(fault.p50_us >= 4096, "5 ms fault lands in a ms-scale bucket");
+        assert!(dram.p99_us < fault.p50_us, "tiers stay separated");
+
+        l.mark_epoch();
+        l.record_restore_latency(true, 7000);
+        l.mark_epoch();
+        let rows = l.epoch_traffic();
+        assert_eq!(rows[0].restore_dram_us.count, 2);
+        assert_eq!(rows[0].restore_fault_us.count, 1);
+        // the second epoch sees only its own fault, not epoch one's
+        assert_eq!(rows[1].restore_dram_us.count, 0);
+        assert_eq!(rows[1].restore_fault_us.count, 1);
+        assert_eq!(rows[1].restore_fault_us.sum_us, 7000);
     }
 
     #[test]

@@ -105,6 +105,18 @@ impl CodecKind {
             CodecKind::Js => "js",
         }
     }
+
+    /// Position on the per-codec metrics axis
+    /// ([`crate::obs::metrics::CODEC_LABELS`] shares [`CodecKind::all`]'s
+    /// order).
+    pub fn index(self) -> usize {
+        match self {
+            CodecKind::Gecko => 0,
+            CodecKind::Sfp => 1,
+            CodecKind::Raw => 2,
+            CodecKind::Js => 3,
+        }
+    }
 }
 
 /// Stash construction knobs (all zeros = sensible defaults).
@@ -177,6 +189,8 @@ type Store = Mutex<HashMap<TensorId, StoredTensor>>;
 /// The concurrent compressed-tensor stash.
 pub struct Stash {
     codec: Arc<dyn StashCodec>,
+    /// Which codec adapter `codec` is — the per-codec metrics axis.
+    kind: CodecKind,
     arena: Arc<ChunkArena>,
     ledger: Arc<StashLedger>,
     store: Arc<Store>,
@@ -190,6 +204,7 @@ impl Stash {
         let ledger = Arc::new(StashLedger::new());
         Stash {
             codec: cfg.codec.build(),
+            kind: cfg.codec,
             arena: Arc::new(ChunkArena::with_budget(
                 cfg.budget_bytes,
                 None,
@@ -216,9 +231,13 @@ impl Stash {
         let ledger = Arc::clone(&self.ledger);
         let store = Arc::clone(&self.store);
         let chunk_values = self.chunk_values;
+        let kind = self.kind;
         let seq = self.put_seq.fetch_add(1, Ordering::SeqCst);
         self.pool.submit(Box::new(move || {
+            let _sp = crate::obs::span("stash", "encode");
+            let t0 = std::time::Instant::now();
             let enc = codec.encode_chunked(&vals, &meta, chunk_values);
+            crate::obs::metrics::ENCODE_US[kind.index()].record_duration(t0.elapsed());
             let streams: Vec<ChunkSeq> = enc
                 .streams
                 .iter()
@@ -284,7 +303,13 @@ impl Stash {
     pub fn take(&self, id: TensorId) -> Option<Vec<f32>> {
         let stored = self.store.lock().unwrap().remove(&id)?;
         self.ledger.record_read(stored.bits.total());
-        let vals = decode_stored(self.codec.as_ref(), &self.arena, &stored);
+        let vals = restore_stored(
+            self.codec.as_ref(),
+            &self.arena,
+            &self.ledger,
+            self.kind,
+            &stored,
+        );
         release_stored(&self.arena, &self.ledger, id.class, stored);
         Some(vals)
     }
@@ -308,9 +333,10 @@ impl Stash {
             let arena = Arc::clone(&self.arena);
             let ledger = Arc::clone(&self.ledger);
             let results = Arc::clone(&results);
+            let kind = self.kind;
             self.pool.submit(Box::new(move || {
                 ledger.record_read(stored.bits.total());
-                let vals = decode_stored(codec.as_ref(), &arena, &stored);
+                let vals = restore_stored(codec.as_ref(), &arena, &ledger, kind, &stored);
                 release_stored(&arena, &ledger, id.class, stored);
                 results.lock().unwrap()[slot] = Some(vals);
             }));
@@ -416,15 +442,48 @@ impl RestoreTicket {
 /// Zero-copy decode of one stored tensor: pin its chunk runs (faulting
 /// spilled ones back), then decode the pinned memory in place through
 /// segmented bit readers — no materialized `Vec<u64>` stream copies.
-fn decode_stored(codec: &dyn StashCodec, arena: &ChunkArena, stored: &StoredTensor) -> Vec<f32> {
+/// The flag reports whether any chunk had to be faulted back from the
+/// spill tier during the pin.
+fn decode_stored(
+    codec: &dyn StashCodec,
+    arena: &ChunkArena,
+    stored: &StoredTensor,
+) -> (Vec<f32>, bool) {
     let pins: Vec<PinnedStream> = stored.streams.iter().map(|s| arena.pin(s)).collect();
+    let faulted = pins.iter().any(|p| p.faulted);
     let segs: Vec<Vec<&[u64]>> = pins.iter().map(PinnedStream::segs).collect();
     let mut readers: Vec<SegReader> = segs
         .iter()
         .zip(&pins)
         .map(|(s, p)| SegReader::new(s, p.len_bits))
         .collect();
-    codec.decode_view(stored.count, &mut readers, &stored.meta)
+    let vals = codec.decode_view(stored.count, &mut readers, &stored.meta);
+    (vals, faulted)
+}
+
+/// [`decode_stored`] plus observability: a `stash/restore` span, per-codec
+/// decode-latency histograms, and the ledger's per-tier (DRAM hit vs.
+/// spill fault) restore-latency record.  Timing stays in metrics — it
+/// never reaches artifact bytes.
+fn restore_stored(
+    codec: &dyn StashCodec,
+    arena: &ChunkArena,
+    ledger: &StashLedger,
+    kind: CodecKind,
+    stored: &StoredTensor,
+) -> Vec<f32> {
+    let _sp = crate::obs::span("stash", "restore");
+    let t0 = std::time::Instant::now();
+    let (vals, faulted) = decode_stored(codec, arena, stored);
+    let us = t0.elapsed().as_micros() as u64;
+    crate::obs::metrics::DECODE_US[kind.index()].record(us);
+    ledger.record_restore_latency(faulted, us);
+    if faulted {
+        crate::obs::metrics::RESTORE_FAULT_US.record(us);
+    } else {
+        crate::obs::metrics::RESTORE_DRAM_US.record(us);
+    }
+    vals
 }
 
 fn release_stored(

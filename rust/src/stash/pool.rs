@@ -61,15 +61,21 @@ impl StashPool {
 
     /// Submit a job; blocks while the queue is full (back-pressure).
     pub fn submit(&self, job: Job) {
-        {
+        let depth = {
             let (lock, _) = &*self.pending;
-            *lock.lock().unwrap() += 1;
-        }
+            let mut p = lock.lock().unwrap();
+            *p += 1;
+            *p
+        };
+        crate::obs::metrics::STASH_QUEUE_PEAK.record_max(depth as u64);
+        let t0 = std::time::Instant::now();
         self.tx
             .as_ref()
             .expect("pool not shut down")
             .send(job)
             .expect("worker threads alive");
+        // time blocked on the bounded queue = encode back-pressure
+        crate::obs::metrics::STASH_SUBMIT_WAIT_US.record_duration(t0.elapsed());
     }
 
     /// Block until every submitted job has completed.

@@ -1,8 +1,11 @@
 //! Tiny CLI argument parser (clap is unavailable offline).
 //!
-//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
-//! A bare `--name` followed by a non-dash token is parsed as an option
-//! (`--name value`); use `--name=value` or trailing position for flags.
+//! Supports `--flag`, `--key value`, `--key=value`, short `-x` flags,
+//! and positional args.  A bare `--name` followed by a non-dash token is
+//! parsed as an option (`--name value`); use `--name=value` or trailing
+//! position for flags.  A single-dash token that parses as a number
+//! (`-5`, `-0.5`) stays a value/positional, so negative option values
+//! survive.
 
 use std::collections::BTreeMap;
 
@@ -34,6 +37,12 @@ impl Args {
                 }
             } else if let Some(k) = pending.take() {
                 out.options.insert(k, a);
+            } else if let Some(short) = a.strip_prefix('-') {
+                if !short.is_empty() && short.parse::<f64>().is_err() {
+                    out.flags.push(short.to_string());
+                } else {
+                    out.positional.push(a);
+                }
             } else {
                 out.positional.push(a);
             }
@@ -94,5 +103,20 @@ mod tests {
     fn trailing_flag() {
         let a = parse("--quiet");
         assert!(a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn short_flags_vs_negative_numbers() {
+        let a = parse("-v run --shift -5 --scale -0.5 -q");
+        assert!(a.has_flag("v"));
+        assert!(a.has_flag("q"));
+        assert_eq!(a.positional, vec!["run"]);
+        // negative numbers still bind as option values, not flags
+        assert_eq!(a.get("shift"), Some("-5"));
+        assert_eq!(a.get("scale"), Some("-0.5"));
+        // and a bare negative number with no pending option is positional
+        let b = parse("-3");
+        assert!(b.flags.is_empty());
+        assert_eq!(b.positional, vec!["-3"]);
     }
 }
