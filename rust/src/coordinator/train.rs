@@ -198,6 +198,11 @@ pub struct RunResult {
     pub stash: Option<LedgerSnapshot>,
     /// Per-epoch stash traffic (footprint-over-time; empty without stash).
     pub stash_epochs: Vec<EpochTraffic>,
+    /// Adaptation events recorded on the training thread during the run
+    /// (thread-local flight-recorder capture: program order, identical
+    /// across backends) — the replay source for
+    /// [`crate::report::figures::footprint_over_time`].
+    pub events: Vec<crate::obs::AdaptEvent>,
 }
 
 /// Sources and metadata of one step's stashed tensors, held across the
@@ -604,6 +609,10 @@ impl<'rt> Trainer<'rt> {
         let m = &self.rt.manifest;
         let l = m.num_layers();
         let label = self.cfg.variant.label();
+        // Thread-local flight-recorder capture: the policy decisions this
+        // run makes come back in program order, untouched by concurrently
+        // running jobs, so they may feed deterministic artifacts.
+        crate::obs::events::capture_begin();
         let mut res = RunResult {
             label: label.clone(),
             ..Default::default()
@@ -801,6 +810,7 @@ impl<'rt> Trainer<'rt> {
             .as_ref()
             .map(Stash::epoch_traffic)
             .unwrap_or_default();
+        res.events = crate::obs::events::capture_end();
 
         if let Some(dir) = &self.cfg.out_dir {
             let mut s = Summary::new();

@@ -26,13 +26,16 @@
 //! bounded per-slot tail buffer whose contents attach to a failed job's
 //! manifest row (diagnosable without a serial re-run).
 //!
-//! Tracing rides the protocol without touching job identity: a traced
-//! request carries `"trace":true` (transport-level — never part of
-//! `params`, so job hashes are unchanged), and the worker answers with an
-//! extra `{"hash":…,"spans":[…]}` line *before* the response.  The
-//! orchestrator absorbs span-batch lines in its receive loop and merges
-//! them into the host timeline keyed by job hash
-//! ([`crate::obs::trace::absorb_remote_batch`]).
+//! The flight recorder rides the protocol without touching job identity:
+//! a traced request carries `"trace":true` (transport-level — never part
+//! of `params`, so job hashes are unchanged), and the worker answers with
+//! an extra `{"hash":…,"spans":[…],"counters":[…],"events":[…]}` line
+//! *before* the response.  Spans and counter samples ship only when
+//! traced; adaptation events are always-on (they carry the paper's core
+//! signal) and ship on the same line even untraced — the `"spans"` key is
+//! the batch marker either way.  The orchestrator absorbs batch lines in
+//! its receive loop and merges all three streams into the host timeline
+//! keyed by job hash ([`crate::obs::trace::absorb_remote_batch`]).
 //!
 //! Crash isolation: each scheduler thread leases one persistent worker
 //! subprocess.  A worker that dies mid-job (killed, aborted, OOM) surfaces
@@ -211,9 +214,10 @@ impl ExecBackend for ProcessBackend {
                         "worker closed its protocol stream",
                     ));
                 }
-                // A span batch is an auxiliary line the worker sends just
-                // before its reply: merge it into the host timeline and
-                // keep reading for the actual response.
+                // A flight-recorder batch (spans / counter samples /
+                // adaptation events) is an auxiliary line the worker
+                // sends just before its reply: merge it into the host
+                // timeline and keep reading for the actual response.
                 if let Ok(j) = Json::parse(resp.trim()) {
                     if j.get("spans").is_some() {
                         obs::trace::absorb_remote_batch(&j);
@@ -465,14 +469,24 @@ pub fn worker_main(cache_root: &Path) -> Result<()> {
             obs::set_enabled(true);
         }
         let (hash, error) = serve_request(&cache, line, &mut nonce);
-        if traced {
-            // ship this job's spans back before the reply, so the
-            // orchestrator's receive loop can absorb then answer
-            let events = obs::trace::take_events();
-            if !events.is_empty() {
-                let batch = obs::trace::render_span_batch(&hash, &events);
-                writeln!(stdout, "{batch}").context("write span batch line")?;
-            }
+        // ship this job's flight-recorder streams back before the reply,
+        // so the orchestrator's receive loop can absorb then answer.
+        // Spans and counter samples exist only when traced; adaptation
+        // events are always recorded and ride along even untraced.
+        let spans = if traced {
+            obs::trace::take_events()
+        } else {
+            Vec::new()
+        };
+        let samples = if traced {
+            obs::timeseries::take_samples()
+        } else {
+            Vec::new()
+        };
+        let adapt = obs::events::take_events();
+        if !spans.is_empty() || !samples.is_empty() || !adapt.is_empty() {
+            let batch = obs::trace::render_flight_batch(&hash, &spans, &samples, &adapt);
+            writeln!(stdout, "{batch}").context("write flight batch line")?;
         }
         let resp = render_response(&hash, error.as_deref());
         writeln!(stdout, "{resp}").context("write response line")?;

@@ -49,6 +49,22 @@
 //! bodies never print or time themselves, so artifacts and manifests
 //! stay fingerprint-identical with tracing on or off — CI proves it.
 //!
+//! On top of the spans sits a *flight recorder*: sampled gauges
+//! ([`obs::timeseries`] — resident/spill stash bytes, encode-queue
+//! depth, cache hit ratio, worker utilization) render as Chrome-trace
+//! counter tracks next to the span timeline, and an always-on
+//! structured event stream ([`obs::events`]) records every per-layer
+//! stored-bitlength change a policy makes (and stash eviction/fault
+//! bursts) with its triggering signal, serialized to `events.jsonl`
+//! beside the lab manifest — written even when a run aborts partway,
+//! and shipped across the process backend's pipe keyed by job hash.
+//! The recorded events are the replay source for the
+//! footprint-over-time figures, and `repro inspect RUN_DIR` reads the
+//! whole recording back: per-layer bitlength trajectories, a health
+//! summary, a structured two-run diff (artifact fingerprints, per-job
+//! wall clock, metrics counters), and `--baseline BENCH.json --gate
+//! PCT` perf-regression gating against a checked-in baseline.
+//!
 //! The lab layer ([`lab`]) scales the evaluation surface itself: every
 //! sweep (`repro policy`, `repro stash`, `repro train`, the table/figure
 //! emitters, and the full `repro all` paper grid) is a DAG of content-

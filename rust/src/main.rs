@@ -16,6 +16,10 @@
 //!            budgets, tables, figures, e2e variants when artifacts exist —
 //!            as one lab DAG: parallel, dependency-aware, and served from
 //!            the content-addressed cache on warm re-runs
+//!   inspect  read a run's flight-recorder outputs (manifest + metrics +
+//!            events.jsonl): health summary, per-layer bitlength
+//!            trajectories, two-run diffs, and perf-regression gating
+//!            against a checked-in BENCH_*.json baseline
 //!
 //! Every sweep executes through `sfp::lab`: jobs are content-hashed
 //! configs, results live in a content-addressed cache, and each run emits
@@ -75,6 +79,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "stash" => cmd_stash(args),
         "policy" => cmd_policy(args),
         "all" => cmd_all(args),
+        "inspect" => cmd_inspect(args),
         "worker" => cmd_worker(args),
         _ => {
             print_help();
@@ -108,6 +113,13 @@ fn print_help() {
          \u{20}         [--budget-bytes N[,N...]] [--artifacts DIR] [--out DIR]\n\
          \u{20}         [--expect-cached] (fail unless 100% cache hits, zero executed)\n\
          \u{20}         [--backend process --workers N] (subprocess execution backend)\n\
+         inspect   RUN_DIR [RUN_DIR2] — flight-recorder readout of a lab run:\n\
+         \u{20}         health summary, per-layer bitlength trajectories from\n\
+         \u{20}         events.jsonl, and (with RUN_DIR2) a two-run diff of artifact\n\
+         \u{20}         fingerprints, per-job wall-clock, and metrics counters.\n\
+         \u{20}         [--baseline BENCH.json [--gate PCT]] fails on perf regression\n\
+         \u{20}         (wall clock above baseline + PCT%); [--write-baseline FILE]\n\
+         \u{20}         records the current run as the new baseline\n\
          worker    serve lab jobs from stdin against a shared cache (spawned by\n\
          \u{20}         the process backend; not normally run by hand) --cache DIR\n\
          \n\
@@ -118,13 +130,18 @@ fn print_help() {
          \n\
          global flags: --quiet/-q (errors only), -v/--verbose (extra\n\
          diagnostics), --trace FILE (write a Chrome trace-event JSON of\n\
-         Trainer/stash/lab spans; Perfetto-loadable; also enabled by\n\
-         SFP_TRACE=1).  Tracing never changes artifact bytes: manifests and\n\
-         cached artifacts stay fingerprint-identical with it on.\n\
+         Trainer/stash/lab spans plus flight-recorder counter tracks —\n\
+         resident/spill bytes, stash queue depth, cache hit ratio, worker\n\
+         utilization; Perfetto-loadable; also enabled by SFP_TRACE=1).\n\
+         Tracing never changes artifact bytes: manifests and cached\n\
+         artifacts stay fingerprint-identical with it on.\n\
          \n\
          lab runs write <out>/lab_manifest.json (every job: artifacts + hash +\n\
-         timing) plus a <out>/metrics.json latency/counter snapshot, and\n\
-         reuse the content-addressed cache in <out>/lab-cache."
+         timing), a <out>/metrics.json latency/counter snapshot, and the\n\
+         flight recorder's <out>/events.jsonl adaptation-event stream (always\n\
+         on; plus <out>/timeseries.json when traced) — written even when a\n\
+         run aborts partway — and reuse the content-addressed cache in\n\
+         <out>/lab-cache.  `repro inspect <out>` reads them all back."
     );
 }
 
@@ -167,22 +184,45 @@ fn parse_budgets(args: &Args, default: Vec<usize>) -> Result<Vec<usize>> {
 /// `--serial` is the deterministic in-process reference; `--backend
 /// process` dispatches cache misses to `repro worker` subprocesses
 /// (`--workers N` of them, sharing the content-addressed cache).
+///
+/// When the run itself aborts (bad backend, spawn failure, poisoned
+/// scheduler) the flight-recorder exports still land in `<out>` — a
+/// partial run's metrics and events are exactly what diagnosis needs.
 fn run_lab(
+    graph: &JobGraph,
+    cache: &ResultCache,
+    args: &Args,
+) -> Result<(Vec<JobReport>, f64, &'static str)> {
+    let res = run_lab_inner(graph, cache, args);
+    if res.is_err() {
+        let dir = out_dir(args);
+        let flushed = std::fs::create_dir_all(&dir)
+            .map_err(anyhow::Error::from)
+            .and_then(|()| write_obs_exports(args, &dir));
+        if let Err(e) = flushed {
+            oerror!("flight-recorder export after aborted run failed: {e:#}");
+        }
+    }
+    res
+}
+
+fn run_lab_inner(
     graph: &JobGraph,
     cache: &ResultCache,
     args: &Args,
 ) -> Result<(Vec<JobReport>, f64, &'static str)> {
     let t0 = Instant::now();
     let workers = args.get_usize("workers", args.get_usize("jobs", 0));
+    let resolved = if args.has_flag("serial") {
+        1
+    } else {
+        lab::resolve_workers(graph, workers)
+    };
     // live single-line readout on stderr (TTY only; inert otherwise)
-    let _progress = ProgressLine::start(
-        graph.len(),
-        if args.has_flag("serial") {
-            1
-        } else {
-            lab::resolve_workers(graph, workers)
-        },
-    );
+    let _progress = ProgressLine::start(graph.len(), resolved);
+    // pull-style lab gauges (cache hit ratio, worker utilization, jobs in
+    // flight) sampled while the grid runs; inert unless tracing is on
+    let _sampler = obs::LabSampler::start(resolved);
     let (reports, mode) = if args.has_flag("serial") {
         (lab::run_serial(graph, cache), "serial")
     } else {
@@ -191,9 +231,11 @@ fn run_lab(
             "process" => {
                 // one worker subprocess per scheduler thread, in lockstep
                 // with run_with_backend's own resolution
-                let n = lab::resolve_workers(graph, workers);
-                let backend = lab::ProcessBackend::new(cache.root(), n, None)?;
-                (lab::run_with_backend(graph, cache, n, &backend), "process")
+                let backend = lab::ProcessBackend::new(cache.root(), resolved, None)?;
+                (
+                    lab::run_with_backend(graph, cache, resolved, &backend),
+                    "process",
+                )
             }
             other => return Err(anyhow!("unknown --backend {other} (inprocess|process)")),
         }
@@ -216,15 +258,26 @@ fn fail_on_errors(reports: &[JobReport]) -> Result<()> {
     }
 }
 
-/// Observability exports after a lab run: the `metrics.json` snapshot
-/// next to `lab_manifest.json`, plus the Chrome trace when `--trace PATH`
-/// was given.  Exports read only process-global sinks — they never touch
-/// the cache or the manifest.
+/// Flight-recorder exports after a lab run: the `metrics.json` snapshot
+/// and the `events.jsonl` adaptation-event stream (always on) next to
+/// `lab_manifest.json`, plus — when tracing — the drained counter samples
+/// as `timeseries.json` and the Chrome trace (spans + counter tracks)
+/// at `--trace PATH`.  Exports read only process-global sinks — they
+/// never touch the cache or the manifest.
 fn write_obs_exports(args: &Args, dir: &Path) -> Result<()> {
     obs::metrics::write_snapshot(&dir.join("metrics.json"))?;
+    let adapt = obs::events::take_events();
+    obs::events::write_jsonl(&dir.join("events.jsonl"), &adapt)?;
+    if !adapt.is_empty() {
+        overbose!("events: {} adaptation events -> events.jsonl", adapt.len());
+    }
+    let samples = obs::timeseries::take_samples();
+    if !samples.is_empty() {
+        obs::timeseries::write_json(&dir.join("timeseries.json"), &samples)?;
+    }
     if let Some(path) = args.get("trace") {
-        let n = obs::trace::write_chrome_trace(Path::new(path))?;
-        oinfo!("trace: {n} spans -> {path}");
+        let n = obs::trace::write_chrome_trace_with(Path::new(path), &samples)?;
+        oinfo!("trace: {n} events -> {path}");
     }
     Ok(())
 }
@@ -909,6 +962,300 @@ fn cmd_all(args: &Args) -> Result<()> {
             ));
         }
         oinfo!("warm cache verified: 100% hits, zero jobs executed");
+    }
+    Ok(())
+}
+
+// --------------------------------------------------------------------------
+// inspect (flight-recorder readout)
+// --------------------------------------------------------------------------
+
+/// Everything `repro inspect` reads from one run directory: the manifest
+/// (required) plus the metrics snapshot and adaptation-event stream when
+/// present.
+struct RunData {
+    manifest: Json,
+    metrics: Option<Json>,
+    events: Vec<obs::AdaptEvent>,
+}
+
+fn load_run(dir: &Path) -> Result<RunData> {
+    let mpath = dir.join("lab_manifest.json");
+    let text = std::fs::read_to_string(&mpath)
+        .map_err(|e| anyhow!("read {}: {e} (not a lab run directory?)", mpath.display()))?;
+    let manifest = Json::parse(&text).map_err(|e| anyhow!("parse {}: {e}", mpath.display()))?;
+    let metrics = std::fs::read_to_string(dir.join("metrics.json"))
+        .ok()
+        .and_then(|t| Json::parse(&t).ok());
+    let events = std::fs::read_to_string(dir.join("events.jsonl"))
+        .map(|t| obs::events::parse_jsonl(&t))
+        .unwrap_or_default();
+    Ok(RunData {
+        manifest,
+        metrics,
+        events,
+    })
+}
+
+fn manifest_num(m: &Json, key: &str) -> f64 {
+    m.get(key).and_then(Json::as_f64).unwrap_or(f64::NAN)
+}
+
+/// Per-job view of a manifest: label → (content hash, wall-clock ms,
+/// sorted `rel:hash:bytes` artifact fingerprints).
+fn manifest_jobs(m: &Json) -> std::collections::BTreeMap<String, (String, f64, Vec<String>)> {
+    let mut out = std::collections::BTreeMap::new();
+    let Some(jobs) = m.get("jobs").and_then(Json::as_arr) else {
+        return out;
+    };
+    for j in jobs {
+        let label = j.get("label").and_then(Json::as_str).unwrap_or("?").to_string();
+        let hash = j.get("hash").and_then(Json::as_str).unwrap_or("").to_string();
+        let wall = j.get("wall_ms").and_then(Json::as_f64).unwrap_or(0.0);
+        let mut arts: Vec<String> = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .map(|x| {
+                        format!(
+                            "{}:{}:{}",
+                            x.get("rel").and_then(Json::as_str).unwrap_or("?"),
+                            x.get("hash").and_then(Json::as_str).unwrap_or("?"),
+                            x.get("bytes").and_then(Json::as_f64).unwrap_or(0.0),
+                        )
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        arts.sort();
+        out.insert(label, (hash, wall, arts));
+    }
+    out
+}
+
+fn print_health(dir: &Path, run: &RunData) {
+    let m = &run.manifest;
+    oinfo!(
+        "run {} — {:.0} jobs: {:.0} executed, {:.0} cached, {:.0} failed, {:.0} skipped in {:.1} s ({})",
+        dir.display(),
+        manifest_num(m, "total_jobs"),
+        manifest_num(m, "executed"),
+        manifest_num(m, "cached"),
+        manifest_num(m, "failed"),
+        manifest_num(m, "skipped"),
+        manifest_num(m, "wall_ms") / 1e3,
+        m.get("mode").and_then(Json::as_str).unwrap_or("?"),
+    );
+    if let Some(jobs) = m.get("jobs").and_then(Json::as_arr) {
+        for j in jobs {
+            if j.get("status").and_then(Json::as_str) == Some("failed") {
+                oinfo!(
+                    "  FAILED {}: {}",
+                    j.get("label").and_then(Json::as_str).unwrap_or("?"),
+                    j.get("error").and_then(Json::as_str).unwrap_or("?"),
+                );
+            }
+        }
+        let mut executed: Vec<(&str, f64)> = jobs
+            .iter()
+            .filter(|j| j.get("status").and_then(Json::as_str) == Some("executed"))
+            .map(|j| {
+                (
+                    j.get("label").and_then(Json::as_str).unwrap_or("?"),
+                    j.get("wall_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                )
+            })
+            .collect();
+        executed.sort_by(|a, b| b.1.total_cmp(&a.1));
+        for (label, wall) in executed.iter().take(3) {
+            oinfo!("  slowest: {label} ({wall:.0} ms)");
+        }
+    }
+    let bits = run.events.iter().filter(|e| e.kind == "bitlength").count();
+    let pressure = run
+        .events
+        .iter()
+        .filter(|e| e.kind == "stash_pressure")
+        .count();
+    oinfo!("  events: {bits} bitlength changes, {pressure} stash-pressure episodes");
+    if run.metrics.is_none() {
+        oinfo!("  (no metrics.json in this run directory)");
+    }
+}
+
+/// Per-layer stored-bitlength trajectories, replayed from the recorded
+/// adaptation events: one line per (policy, tensor class, component,
+/// layer) stream, oldest decision first.
+fn print_trajectories(events: &[obs::AdaptEvent]) {
+    let mut groups: std::collections::BTreeMap<(String, String), Vec<&obs::AdaptEvent>> =
+        std::collections::BTreeMap::new();
+    for e in events.iter().filter(|e| e.kind == "bitlength") {
+        let stream = format!(
+            "{}/{}/{}",
+            e.source,
+            e.tensor_class.as_deref().unwrap_or("?"),
+            e.component.as_deref().unwrap_or("?"),
+        );
+        let lane = e
+            .layer
+            .map(|l| format!("L{l:02}"))
+            .unwrap_or_else(|| "net".to_string());
+        groups.entry((stream, lane)).or_default().push(e);
+    }
+    if groups.is_empty() {
+        oinfo!("  no bitlength trajectories recorded (fixed containers, or no events.jsonl)");
+        return;
+    }
+    oinfo!("bitlength trajectories (stored bits):");
+    for ((stream, lane), mut evs) in groups {
+        evs.sort_by_key(|e| (e.epoch.unwrap_or(0), e.step.unwrap_or(0)));
+        let mut path = vec![format!("{:.0}", evs[0].from)];
+        path.extend(evs.iter().map(|e| format!("{:.0}", e.to)));
+        let last = evs.last().expect("group is non-empty");
+        oinfo!(
+            "  {stream} {lane}: {} ({} @ e{} s{})",
+            path.join(" -> "),
+            last.trigger,
+            last.epoch.unwrap_or(0),
+            last.step.unwrap_or(0),
+        );
+    }
+}
+
+/// Diff two runs: job sets, artifact fingerprints, per-job wall-clock,
+/// and metrics counter deltas.
+fn print_diff(a_dir: &Path, a: &RunData, b_dir: &Path, b: &RunData) {
+    let ja = manifest_jobs(&a.manifest);
+    let jb = manifest_jobs(&b.manifest);
+    for label in ja.keys().filter(|l| !jb.contains_key(*l)) {
+        oinfo!("  only in {}: {label}", a_dir.display());
+    }
+    for label in jb.keys().filter(|l| !ja.contains_key(*l)) {
+        oinfo!("  only in {}: {label}", b_dir.display());
+    }
+    let mut identical = 0usize;
+    let mut differing = 0usize;
+    let mut deltas: Vec<(&str, f64, f64)> = Vec::new();
+    for (label, (ha, wa, aa)) in &ja {
+        let Some((hb, wb, ab)) = jb.get(label) else {
+            continue;
+        };
+        if ha != hb {
+            differing += 1;
+            oinfo!("  {label}: config hash differs ({ha} vs {hb})");
+        } else if aa != ab {
+            differing += 1;
+            oinfo!("  {label}: artifact fingerprints DIFFER");
+        } else {
+            identical += 1;
+        }
+        if *wa > 0.0 && *wb > 0.0 {
+            deltas.push((label.as_str(), *wa, *wb));
+        }
+    }
+    oinfo!(
+        "  {identical} jobs fingerprint-identical, {differing} differ; total wall {:.0} ms vs {:.0} ms",
+        manifest_num(&a.manifest, "wall_ms"),
+        manifest_num(&b.manifest, "wall_ms"),
+    );
+    deltas.sort_by(|x, y| (y.2 - y.1).abs().total_cmp(&(x.2 - x.1).abs()));
+    for (label, wa, wb) in deltas.iter().take(5) {
+        oinfo!("  wall {label}: {wa:.0} ms -> {wb:.0} ms ({:+.0} ms)", wb - wa);
+    }
+    if let (Some(Json::Obj(ma)), Some(Json::Obj(mb))) = (&a.metrics, &b.metrics) {
+        let mut rows: Vec<(&str, f64, f64)> = Vec::new();
+        for (k, va) in ma {
+            if let (Some(x), Some(y)) = (va.as_f64(), mb.get(k).and_then(Json::as_f64)) {
+                if x != y {
+                    rows.push((k.as_str(), x, y));
+                }
+            }
+        }
+        for (k, x, y) in &rows {
+            oinfo!("  counter {k}: {x:.0} -> {y:.0} ({:+.0})", y - x);
+        }
+        if rows.is_empty() {
+            oinfo!("  all shared metrics counters equal");
+        }
+    }
+}
+
+/// Write a `BENCH_<name>.json` perf baseline from the run's manifest:
+/// total wall clock and the slowest job, for later `--baseline --gate`
+/// comparisons.
+fn write_baseline(path: &Path, run: &RunData) -> Result<()> {
+    let jobs = manifest_jobs(&run.manifest);
+    let max_job = jobs.values().map(|(_, w, _)| *w).fold(0.0, f64::max);
+    let mut m = std::collections::BTreeMap::new();
+    m.insert(
+        "total_wall_ms".to_string(),
+        Json::Num(manifest_num(&run.manifest, "wall_ms")),
+    );
+    m.insert("max_job_wall_ms".to_string(), Json::Num(max_job));
+    m.insert(
+        "total_jobs".to_string(),
+        Json::Num(manifest_num(&run.manifest, "total_jobs")),
+    );
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, Json::Obj(m).to_string())?;
+    Ok(())
+}
+
+/// Gate the run against a checked-in baseline: fail when its total wall
+/// clock exceeds `baseline.total_wall_ms × (1 + gate/100)`.
+fn gate_against_baseline(run: &RunData, baseline: &Path, gate_pct: f64) -> Result<()> {
+    let text = std::fs::read_to_string(baseline)
+        .map_err(|e| anyhow!("read baseline {}: {e}", baseline.display()))?;
+    let b = Json::parse(&text).map_err(|e| anyhow!("parse {}: {e}", baseline.display()))?;
+    let base = b
+        .get("total_wall_ms")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("{}: no total_wall_ms field", baseline.display()))?;
+    let wall = manifest_num(&run.manifest, "wall_ms");
+    let limit = base * (1.0 + gate_pct / 100.0);
+    // NaN wall (manifest missing wall_ms) must fail the gate, not pass it
+    if wall > limit || wall.is_nan() {
+        return Err(anyhow!(
+            "perf regression: run took {wall:.0} ms, baseline {base:.0} ms — gate +{gate_pct:.0}% allows {limit:.0} ms"
+        ));
+    }
+    oinfo!("perf gate OK: {wall:.0} ms <= {limit:.0} ms (baseline {base:.0} ms +{gate_pct:.0}%)");
+    Ok(())
+}
+
+/// `repro inspect RUN_DIR [RUN_DIR2]` — the flight-recorder readout:
+/// health summary + bitlength trajectories of one run, a structured diff
+/// of two, and `--baseline BENCH.json --gate PCT` regression gating.
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dirs: Vec<&String> = args.positional.iter().skip(1).collect();
+    let Some(first) = dirs.first() else {
+        return Err(anyhow!(
+            "usage: repro inspect RUN_DIR [RUN_DIR2] [--baseline FILE [--gate PCT]] [--write-baseline FILE]"
+        ));
+    };
+    let a_dir = PathBuf::from(first);
+    let a = load_run(&a_dir)?;
+    print_health(&a_dir, &a);
+    print_trajectories(&a.events);
+    if let Some(second) = dirs.get(1) {
+        let b_dir = PathBuf::from(second);
+        let b = load_run(&b_dir)?;
+        oinfo!("");
+        print_health(&b_dir, &b);
+        oinfo!("diff {} vs {}:", a_dir.display(), b_dir.display());
+        print_diff(&a_dir, &a, &b_dir, &b);
+    }
+    if let Some(path) = args.get("write-baseline") {
+        write_baseline(Path::new(path), &a)?;
+        oinfo!("baseline -> {path}");
+    }
+    if let Some(bpath) = args.get("baseline") {
+        gate_against_baseline(&a, Path::new(bpath), args.get_f64("gate", 100.0))?;
     }
     Ok(())
 }

@@ -45,6 +45,7 @@ pub fn emits_verbose() -> bool {
 /// Emit a pre-formatted info line (macro back end — prefer `oinfo!`).
 pub fn info_str(s: &str) {
     if emits_info() {
+        super::progress::clear_for_emit();
         println!("{s}");
     }
 }
@@ -52,12 +53,15 @@ pub fn info_str(s: &str) {
 /// Emit a pre-formatted verbose line (macro back end — prefer `overbose!`).
 pub fn verbose_str(s: &str) {
     if emits_verbose() {
+        super::progress::clear_for_emit();
         println!("{s}");
     }
 }
 
-/// Emit an error line on stderr — never suppressed.
+/// Emit an error line on stderr — never suppressed.  Clears the live
+/// progress readout first so failures never interleave with it.
 pub fn error_str(s: &str) {
+    super::progress::clear_for_emit();
     eprintln!("{s}");
 }
 

@@ -13,19 +13,29 @@
 //!   "args":{"job":…}}],"displayTimeUnit":"ms"}` with timestamps in
 //!   microseconds since process start.  Under `--backend process` the
 //!   workers ship their spans back as an extra protocol line
-//!   (`{"hash":…,"spans":[…]}`) that the orchestrator merges into the
-//!   host timeline, keyed by job hash.
+//!   (`{"hash":…,"spans":[…],"counters":[…],"events":[…]}`) that the
+//!   orchestrator merges into the host timeline, keyed by job hash.
 //! - [`metrics`]: lock-free counters and log₂-bucket latency histograms
 //!   (p50/p99) on the hot paths — cache lookups, steals, worker idle
 //!   time, per-codec encode/decode, arena pin-wait / spill fault / evict
 //!   stalls, restore latency per tier.  `metrics.json` (a flat
 //!   Prometheus-style snapshot) lands next to `lab_manifest.json`.
+//! - [`timeseries`]: the flight recorder's sampled gauges — resident vs.
+//!   spill stash bytes, queue depth, cache hit ratio, worker utilization
+//!   — rendered as Chrome *counter tracks* (`"ph":"C"`) in the same
+//!   trace document and exported as `timeseries.json`.
+//! - [`events`]: the flight recorder's structured adaptation-event
+//!   stream — every `BitPolicy` bitlength change with its triggering
+//!   signal, plus stash eviction storms / fault bursts — always on
+//!   (not gated by `--trace`), serialized as `events.jsonl` and replayed
+//!   by `repro inspect` and the footprint figures.
 //! - [`log`]: the one leveled sink every CLI print goes through
 //!   (`--quiet` / `-v`), via the crate-root [`oinfo!`](crate::oinfo),
 //!   [`overbose!`](crate::overbose) and [`oerror!`](crate::oerror)
 //!   macros.
 //! - [`progress`]: a single-line live jobs/utilization readout on stderr
-//!   while a grid runs (TTY only, never in CI logs).
+//!   while a grid runs (TTY only, never in CI logs).  Log emissions
+//!   clear the live line first so errors never interleave with it.
 //!
 //! # Invariant: observability never perturbs artifact bytes
 //!
@@ -35,15 +45,24 @@
 //! written into the content-addressed cache.  Manifests and cached
 //! artifacts are fingerprint-identical with and without `--trace` (and
 //! across serial / in-process / process backends) — CI diffs the
-//! fingerprints to prove it.
+//! fingerprints to prove it.  The one sanctioned path from recorder to
+//! artifact is the Trainer's *thread-local* event capture
+//! ([`events::capture_begin`]): it sees exactly the events the job's own
+//! thread emitted, in program order, so replayed figures stay
+//! byte-identical across backends while the racy global sinks feed only
+//! side files (`events.jsonl`, `timeseries.json`, the trace).
 
+pub mod events;
 pub mod log;
 pub mod metrics;
 pub mod progress;
+pub mod timeseries;
 pub mod trace;
 
+pub use events::AdaptEvent;
 pub use log::Level;
 pub use progress::ProgressLine;
+pub use timeseries::{CounterSample, LabSampler};
 pub use trace::{span, span_with, Event, Span};
 
 use std::sync::atomic::{AtomicBool, Ordering};

@@ -6,16 +6,39 @@
 //! path.  The line is drawn only when stderr is a TTY (never into CI
 //! logs or redirected files) and the log level is at least Normal;
 //! otherwise [`ProgressLine::start`] is an inert no-op handle.
+//!
+//! The log sink calls [`clear_for_emit`] before every `oinfo!` /
+//! `oerror!` line, which wipes the live readout (under the shared paint
+//! lock) so emitted output — job-failure errors in particular — never
+//! interleaves with it; the next 200 ms tick repaints.
 
 use super::log;
 use super::metrics;
 use std::io::{IsTerminal, Write};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 const TICK: Duration = Duration::from_millis(200);
+
+/// Paint state shared with the log sink: `true` while the live line is
+/// currently on screen.  The lock also serializes paints against log
+/// emissions so a wipe can never tear a half-painted line.
+static PAINTED: Mutex<bool> = Mutex::new(false);
+
+/// Wipe the live readout if it is on screen — called by the log sink
+/// right before any line is printed.  The repaint thread restores the
+/// readout on its next tick.
+pub(crate) fn clear_for_emit() {
+    if let Ok(mut painted) = PAINTED.lock() {
+        if *painted {
+            eprint!("\r{:76}\r", "");
+            let _ = std::io::stderr().flush();
+            *painted = false;
+        }
+    }
+}
 
 /// RAII handle: starts the repaint thread, stops + clears the line on
 /// drop.
@@ -50,16 +73,18 @@ impl ProgressLine {
                 let capacity = (workers as u64 * elapsed_us) as f64;
                 let util = (1.0 - idle_us as f64 / capacity).clamp(0.0, 1.0);
                 let running = started.saturating_sub(done);
-                eprint!(
-                    "\r[lab] {done}/{total} jobs  {running} running  util {:3.0}%  {failed} failed ",
-                    util * 100.0
-                );
-                let _ = std::io::stderr().flush();
+                if let Ok(mut painted) = PAINTED.lock() {
+                    eprint!(
+                        "\r[lab] {done}/{total} jobs  {running} running  util {:3.0}%  {failed} failed ",
+                        util * 100.0
+                    );
+                    let _ = std::io::stderr().flush();
+                    *painted = true;
+                }
                 std::thread::sleep(TICK);
             }
             // wipe the line so the final summary starts on a clean row
-            eprint!("\r{:76}\r", "");
-            let _ = std::io::stderr().flush();
+            clear_for_emit();
         });
         ProgressLine {
             stop,

@@ -1,0 +1,240 @@
+//! Sampled gauges and stamped scalar series — the "how much, over time"
+//! half of the flight recorder, rendered as Chrome-trace *counter
+//! tracks* (`"ph":"C"`) alongside the span timeline.
+//!
+//! Producers call [`record`] with a track name and the current value;
+//! samples land in a global sink only while tracing is on (one relaxed
+//! load on the disabled path, like spans).  Track names follow
+//! `group.series` — samples with the same group render as one Chrome
+//! counter track with one line per series, so `stash_bytes.resident`
+//! and `stash_bytes.spill` stack in a single lane.  A bare name renders
+//! as a single-series track named `value`.
+//!
+//! Push-style samples come from the stash (`resident`/`spill` bytes on
+//! every put and flush, queue depth on every submit); the pull-style
+//! lab gauges (cache hit ratio, worker utilization, jobs running) are
+//! polled by a [`LabSampler`] background thread while a grid runs.
+
+use crate::util::json::Json;
+use std::borrow::Cow;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// One timestamped scalar sample on a named counter track.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CounterSample {
+    /// `group.series` (or a bare group name).
+    pub track: Cow<'static, str>,
+    /// µs since the process trace epoch (shared with spans).
+    pub ts_us: u64,
+    pub value: f64,
+    pub pid: u32,
+}
+
+impl CounterSample {
+    /// Split the track name into (chrome counter name, series key).
+    pub fn name_series(&self) -> (&str, &str) {
+        match self.track.split_once('.') {
+            Some((name, series)) => (name, series),
+            None => (self.track.as_ref(), "value"),
+        }
+    }
+}
+
+static SINK: Mutex<Vec<CounterSample>> = Mutex::new(Vec::new());
+
+/// Record one sample.  No-op (one relaxed load) unless tracing is on —
+/// counter tracks only exist inside a Chrome trace, so sampling without
+/// `--trace` would buffer unread data forever.
+#[inline]
+pub fn record(track: &'static str, value: f64) {
+    if !super::enabled() {
+        return;
+    }
+    push(CounterSample {
+        track: Cow::Borrowed(track),
+        ts_us: super::trace::now_us(),
+        value,
+        pid: std::process::id(),
+    });
+}
+
+fn push(s: CounterSample) {
+    if let Ok(mut sink) = SINK.lock() {
+        sink.push(s);
+    }
+}
+
+/// Append pre-built samples (the cross-process merge path).
+pub fn absorb(samples: Vec<CounterSample>) {
+    if samples.is_empty() {
+        return;
+    }
+    if let Ok(mut sink) = SINK.lock() {
+        sink.extend(samples);
+    }
+}
+
+/// Drain the global sink.
+pub fn take_samples() -> Vec<CounterSample> {
+    match SINK.lock() {
+        Ok(mut sink) => std::mem::take(&mut *sink),
+        Err(_) => Vec::new(),
+    }
+}
+
+/// One sample as a flat JSON object — the shape shared by the
+/// `timeseries.json` export and the worker batch protocol.
+pub fn sample_json(s: &CounterSample) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("track".to_string(), Json::Str(s.track.to_string()));
+    m.insert("ts".to_string(), Json::Num(s.ts_us as f64));
+    m.insert("value".to_string(), Json::Num(s.value));
+    m.insert("pid".to_string(), Json::Num(s.pid as f64));
+    Json::Obj(m)
+}
+
+/// Inverse of [`sample_json`].
+pub fn sample_from_json(j: &Json) -> Option<CounterSample> {
+    Some(CounterSample {
+        track: Cow::Owned(j.get("track")?.as_str()?.to_string()),
+        ts_us: j.get("ts")?.as_f64()? as u64,
+        value: j.get("value")?.as_f64()?,
+        pid: j.get("pid")?.as_f64()? as u32,
+    })
+}
+
+/// Write samples as a `timeseries.json` array at `path` (parent created).
+pub fn write_json(path: &Path, samples: &[CounterSample]) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let arr: Vec<Json> = samples.iter().map(sample_json).collect();
+    std::fs::write(path, Json::Arr(arr).to_string())?;
+    Ok(())
+}
+
+/// Polling interval for the lab gauges.
+const SAMPLE_TICK: Duration = Duration::from_millis(50);
+
+/// RAII background sampler for the pull-style lab gauges: cache hit
+/// ratio, worker utilization, and jobs in flight.  Inert when tracing
+/// is off at start.  Reads only global metrics counters — nothing on
+/// the job path.
+pub struct LabSampler {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl LabSampler {
+    /// Start sampling against `workers` executor threads.
+    pub fn start(workers: usize) -> LabSampler {
+        let stop = Arc::new(AtomicBool::new(false));
+        if !super::enabled() {
+            return LabSampler { stop, handle: None };
+        }
+        use super::metrics;
+        let hits0 = metrics::CACHE_HITS.get();
+        let misses0 = metrics::CACHE_MISSES.get();
+        let done0 = metrics::JOBS_DONE.get();
+        let started0 = metrics::JOBS_STARTED.get();
+        let idle0 = metrics::EXEC_IDLE_US.get();
+        let t0_us = super::trace::now_us();
+        let workers = workers.max(1);
+        let flag = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || loop {
+            let hits = metrics::CACHE_HITS.get() - hits0;
+            let misses = metrics::CACHE_MISSES.get() - misses0;
+            let lookups = hits + misses;
+            if lookups > 0 {
+                record("lab_cache_hit_ratio", hits as f64 / lookups as f64);
+            }
+            let idle_us = metrics::EXEC_IDLE_US.get() - idle0;
+            let elapsed_us = (super::trace::now_us() - t0_us).max(1);
+            let capacity = (workers as u64 * elapsed_us) as f64;
+            let util = (1.0 - idle_us as f64 / capacity).clamp(0.0, 1.0);
+            record("lab_worker_util_pct", util * 100.0);
+            let running = (metrics::JOBS_STARTED.get() - started0)
+                .saturating_sub(metrics::JOBS_DONE.get() - done0);
+            record("lab_jobs_running", running as f64);
+            if flag.load(Ordering::Relaxed) {
+                return; // final sample taken after stop was requested
+            }
+            std::thread::sleep(SAMPLE_TICK);
+        });
+        LabSampler {
+            stop,
+            handle: Some(handle),
+        }
+    }
+}
+
+impl Drop for LabSampler {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_is_gated_on_the_tracing_switch() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(false);
+        let _ = take_samples();
+        record("gate_test.x", 1.0);
+        assert!(take_samples().is_empty());
+        crate::obs::set_enabled(true);
+        record("gate_test.x", 2.0);
+        record("gate_test", 3.0);
+        crate::obs::set_enabled(false);
+        let samples = take_samples();
+        assert_eq!(samples.len(), 2);
+        assert_eq!(samples[0].name_series(), ("gate_test", "x"));
+        assert_eq!(samples[1].name_series(), ("gate_test", "value"));
+        assert_eq!(samples[1].value, 3.0);
+    }
+
+    #[test]
+    fn lab_sampler_emits_gauges_while_running() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(true);
+        let _ = take_samples();
+        {
+            let _s = LabSampler::start(2);
+            std::thread::sleep(Duration::from_millis(60));
+        }
+        crate::obs::set_enabled(false);
+        let samples = take_samples();
+        let tracks: std::collections::BTreeSet<&str> =
+            samples.iter().map(|s| s.track.as_ref()).collect();
+        assert!(tracks.contains("lab_worker_util_pct"), "{tracks:?}");
+        assert!(tracks.contains("lab_jobs_running"), "{tracks:?}");
+        assert!(samples
+            .iter()
+            .all(|s| s.value.is_finite() && s.pid == std::process::id()));
+    }
+
+    #[test]
+    fn lab_sampler_is_inert_when_tracing_is_off() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(false);
+        let _ = take_samples();
+        {
+            let _s = LabSampler::start(2);
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(take_samples().is_empty());
+    }
+}

@@ -13,7 +13,15 @@
 //! Worker processes have their own epoch; [`absorb_remote_batch`] shifts
 //! a worker batch so its latest span end lands at the host-side receive
 //! time, which is the best alignment available without a shared clock.
+//!
+//! Beyond spans, the Chrome export interleaves *counter tracks*
+//! (`"ph":"C"`) from [`super::timeseries`] samples, and the worker batch
+//! line carries the other flight-recorder streams too:
+//! `{"hash":…,"spans":[…],"counters":[…],"events":[…]}` — all three
+//! shifted onto the host clock on absorb.
 
+use super::events::AdaptEvent;
+use super::timeseries::CounterSample;
 use crate::util::json::Json;
 use std::borrow::Cow;
 use std::cell::RefCell;
@@ -201,39 +209,87 @@ fn event_from_json(j: &Json) -> Option<Event> {
     })
 }
 
-/// Render events as a Chrome trace-event JSON document.
-pub fn chrome_trace_json(events: &[Event]) -> Json {
+/// One timeseries sample as a Chrome counter event (`"ph":"C"`): the
+/// track group becomes the counter name, the series the `args` key, so
+/// same-group samples stack into one lane.
+fn counter_event_json(s: &CounterSample) -> Json {
+    let (name, series) = s.name_series();
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(name.to_string()));
+    m.insert("cat".to_string(), Json::Str("counter".to_string()));
+    m.insert("ph".to_string(), Json::Str("C".to_string()));
+    m.insert("ts".to_string(), Json::Num(s.ts_us as f64));
+    m.insert("pid".to_string(), Json::Num(s.pid as f64));
+    m.insert("tid".to_string(), Json::Num(0.0));
+    let mut args = BTreeMap::new();
+    args.insert(series.to_string(), Json::Num(s.value));
+    m.insert("args".to_string(), Json::Obj(args));
+    Json::Obj(m)
+}
+
+/// Render spans + counter samples as a Chrome trace-event JSON document.
+pub fn chrome_trace_json(events: &[Event], samples: &[CounterSample]) -> Json {
     let mut root = BTreeMap::new();
-    root.insert(
-        "traceEvents".to_string(),
-        Json::Arr(events.iter().map(event_json).collect()),
-    );
+    let mut arr: Vec<Json> = events.iter().map(event_json).collect();
+    arr.extend(samples.iter().map(counter_event_json));
+    root.insert("traceEvents".to_string(), Json::Arr(arr));
     root.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
     Json::Obj(root)
 }
 
-/// Drain all collected events and write them as a Chrome trace to `path`.
-/// Returns the number of events written.
+/// Drain all collected spans *and* timeseries samples and write them as
+/// one Chrome trace to `path`.  Returns the number of trace events
+/// written (spans + counter samples).
 pub fn write_chrome_trace(path: &Path) -> anyhow::Result<usize> {
+    write_chrome_trace_with(path, &super::timeseries::take_samples())
+}
+
+/// As [`write_chrome_trace`], but with the counter samples supplied by
+/// the caller (who may have drained them already for `timeseries.json`).
+pub fn write_chrome_trace_with(path: &Path, samples: &[CounterSample]) -> anyhow::Result<usize> {
     let events = take_events();
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
             std::fs::create_dir_all(parent)?;
         }
     }
-    std::fs::write(path, chrome_trace_json(&events).to_string())?;
-    Ok(events.len())
+    std::fs::write(path, chrome_trace_json(&events, samples).to_string())?;
+    Ok(events.len() + samples.len())
 }
 
 /// Render a worker-side span batch as one protocol line:
 /// `{"hash":"…","spans":[…]}`.
 pub fn render_span_batch(hash: &str, events: &[Event]) -> String {
+    render_flight_batch(hash, events, &[], &[])
+}
+
+/// Render the full flight-recorder batch — spans, counter samples, and
+/// adaptation events — as one protocol line.  The `"spans"` key is
+/// always present (it is the batch marker the orchestrator keys on).
+pub fn render_flight_batch(
+    hash: &str,
+    events: &[Event],
+    samples: &[CounterSample],
+    adapt: &[AdaptEvent],
+) -> String {
     let mut m = BTreeMap::new();
     m.insert("hash".to_string(), Json::Str(hash.to_string()));
     m.insert(
         "spans".to_string(),
         Json::Arr(events.iter().map(event_json).collect()),
     );
+    if !samples.is_empty() {
+        m.insert(
+            "counters".to_string(),
+            Json::Arr(samples.iter().map(super::timeseries::sample_json).collect()),
+        );
+    }
+    if !adapt.is_empty() {
+        m.insert(
+            "events".to_string(),
+            Json::Arr(adapt.iter().map(super::events::event_json).collect()),
+        );
+    }
     Json::Obj(m).to_string()
 }
 
@@ -248,34 +304,66 @@ pub fn parse_span_batch(j: &Json) -> Option<(String, Vec<Event>)> {
     ))
 }
 
-/// Merge a worker span batch into the host timeline.  Worker events keep
-/// their own pid/tid lanes; timestamps are shifted so the batch's latest
-/// span end coincides with the host-side receive time, and spans missing
-/// a job arg inherit the batch's job hash.  Returns how many events were
-/// absorbed.
+/// Merge a worker flight-recorder batch into the host timeline.  Worker
+/// spans keep their own pid/tid lanes; all three streams (spans, counter
+/// samples, adaptation events) are shifted by one common delta so the
+/// batch's latest timestamp coincides with the host-side receive time,
+/// and items missing a job arg inherit the batch's job hash.  Returns
+/// how many items were absorbed.  An all-empty batch is a no-op.
 pub fn absorb_remote_batch(j: &Json) -> usize {
     let Some((hash, mut events)) = parse_span_batch(j) else {
         return 0;
     };
-    if events.is_empty() {
-        return 0;
-    }
+    let mut samples: Vec<CounterSample> = j
+        .get("counters")
+        .and_then(Json::as_arr)
+        .map(|arr| {
+            arr.iter()
+                .filter_map(super::timeseries::sample_from_json)
+                .collect()
+        })
+        .unwrap_or_default();
+    let mut adapt: Vec<AdaptEvent> = j
+        .get("events")
+        .and_then(Json::as_arr)
+        .map(|arr| {
+            arr.iter()
+                .filter_map(super::events::event_from_json)
+                .collect()
+        })
+        .unwrap_or_default();
     let max_end = events
         .iter()
         .map(|e| e.ts_us + e.dur_us)
-        .max()
-        .unwrap_or(0);
+        .chain(samples.iter().map(|s| s.ts_us))
+        .chain(adapt.iter().map(|a| a.ts_us))
+        .max();
+    let Some(max_end) = max_end else {
+        return 0; // nothing in the batch
+    };
     let now = now_us();
+    let shift = |ts: u64| (ts + now).saturating_sub(max_end);
     for e in &mut events {
-        e.ts_us = (e.ts_us + now).saturating_sub(max_end);
+        e.ts_us = shift(e.ts_us);
         if e.arg_job.is_none() && !hash.is_empty() {
             e.arg_job = Some(hash.clone());
         }
     }
-    let n = events.len();
+    for s in &mut samples {
+        s.ts_us = shift(s.ts_us);
+    }
+    for a in &mut adapt {
+        a.ts_us = shift(a.ts_us);
+        if a.arg_job.is_none() && !hash.is_empty() {
+            a.arg_job = Some(hash.clone());
+        }
+    }
+    let n = events.len() + samples.len() + adapt.len();
     if let Ok(mut sink) = SINK.lock() {
         sink.append(&mut events);
     }
+    super::timeseries::absorb(samples);
+    super::events::absorb(adapt);
     n
 }
 
@@ -352,7 +440,21 @@ mod tests {
             tid: 2,
             arg_job: Some("cafe0123".to_string()),
         }];
-        let doc = chrome_trace_json(&events);
+        let samples = vec![
+            CounterSample {
+                track: Cow::Borrowed("stash_bytes.resident"),
+                ts_us: 6,
+                value: 4096.0,
+                pid: 1,
+            },
+            CounterSample {
+                track: Cow::Borrowed("stash_queue_depth"),
+                ts_us: 7,
+                value: 3.0,
+                pid: 1,
+            },
+        ];
+        let doc = chrome_trace_json(&events, &samples);
         assert_eq!(
             doc.get("displayTimeUnit").and_then(Json::as_str),
             Some("ms")
@@ -364,6 +466,24 @@ mod tests {
         assert_eq!(
             ev.get("args").and_then(|a| a.get("job")).and_then(Json::as_str),
             Some("cafe0123")
+        );
+        // counter samples render as ph:"C" tracks: group -> name,
+        // series -> args key (bare names get series "value")
+        let c0 = doc.get("traceEvents").unwrap().idx(1).unwrap();
+        assert_eq!(c0.get("ph").and_then(Json::as_str), Some("C"));
+        assert_eq!(c0.get("name").and_then(Json::as_str), Some("stash_bytes"));
+        assert_eq!(
+            c0.get("args").and_then(|a| a.get("resident")).and_then(Json::as_f64),
+            Some(4096.0)
+        );
+        let c1 = doc.get("traceEvents").unwrap().idx(2).unwrap();
+        assert_eq!(
+            c1.get("name").and_then(Json::as_str),
+            Some("stash_queue_depth")
+        );
+        assert_eq!(
+            c1.get("args").and_then(|a| a.get("value")).and_then(Json::as_f64),
+            Some(3.0)
         );
     }
 
@@ -420,5 +540,74 @@ mod tests {
         let b = merged.iter().find(|e| e.name == "commit").unwrap();
         assert_eq!(b.ts_us - a.ts_us, 80);
         assert_eq!(a.dur_us, 80);
+    }
+
+    #[test]
+    fn empty_and_interleaved_batches_merge_cleanly() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(false);
+        let _ = take_events();
+        let _ = super::super::events::take_events();
+        let _ = super::super::timeseries::take_samples();
+        // an all-empty batch (worker had nothing to report) is a no-op
+        let empty = Json::parse(r#"{"hash":"aaaa","spans":[]}"#).unwrap();
+        assert_eq!(absorb_remote_batch(&empty), 0);
+        assert!(take_events().is_empty());
+        // interleave batches from two workers, out of order, including a
+        // spans-empty batch that still carries counters + adapt events
+        let mk_span = |name: &'static str, pid: u32| Event {
+            name: Cow::Borrowed(name),
+            cat: Cow::Borrowed("interleave-test"),
+            ts_us: 10,
+            dur_us: 5,
+            pid,
+            tid: 1,
+            arg_job: None,
+        };
+        let w1a = render_span_batch("1111", &[mk_span("j1.execute", 100)]);
+        let samples = vec![CounterSample {
+            track: Cow::Borrowed("stash_bytes.resident"),
+            ts_us: 20,
+            value: 512.0,
+            pid: 200,
+        }];
+        let adapt = vec![AdaptEvent {
+            ts_us: 21,
+            pid: 200,
+            kind: Cow::Borrowed("bitlength"),
+            source: Cow::Borrowed("qm"),
+            trigger: Cow::Borrowed("qm_gradient_step"),
+            layer: Some(0),
+            tensor_class: Some(Cow::Borrowed("act")),
+            component: Some(Cow::Borrowed("mant")),
+            epoch: Some(0),
+            step: Some(1),
+            from: 8.0,
+            to: 7.0,
+            arg_job: None,
+        }];
+        let w2 = render_flight_batch("2222", &[], &samples, &adapt);
+        let w1b = render_span_batch("1111", &[mk_span("j1.commit", 100)]);
+        for line in [&w2, &w1a, &w1b] {
+            let n = absorb_remote_batch(&Json::parse(line).unwrap());
+            assert!(n >= 1, "every non-empty batch absorbs something");
+        }
+        let spans: Vec<Event> = take_events()
+            .into_iter()
+            .filter(|e| e.cat == "interleave-test")
+            .collect();
+        assert_eq!(spans.len(), 2);
+        assert!(spans.iter().all(|e| e.arg_job.as_deref() == Some("1111")));
+        let merged_samples = super::super::timeseries::take_samples();
+        assert_eq!(merged_samples.len(), 1);
+        assert_eq!(merged_samples[0].track, "stash_bytes.resident");
+        // filter: the adapt sink is always-on and unguarded tests may
+        // push concurrently — key on this test's batch hash
+        let merged_adapt: Vec<AdaptEvent> = super::super::events::take_events()
+            .into_iter()
+            .filter(|a| a.arg_job.as_deref() == Some("2222"))
+            .collect();
+        assert_eq!(merged_adapt.len(), 1);
+        assert!(merged_adapt[0].ts_us <= now_us());
     }
 }

@@ -50,6 +50,11 @@ pub struct BitWave {
     /// the network-wide container decision).
     mode_a: Vec<Mode>,
     mode_w: Vec<Mode>,
+    /// Last *effective* (cooldown-aware) stored bits reported to the
+    /// flight recorder — observational only, outside checkpoint/restore.
+    /// Network-wide, so events carry `layer: None` and class `"network"`.
+    emitted_mant: u32,
+    emitted_exp: u32,
 }
 
 impl BitWave {
@@ -63,6 +68,8 @@ impl BitWave {
             improve_run: 0,
             mode_a: vec![Mode::Delta; layers],
             mode_w: vec![Mode::Delta; layers],
+            emitted_mant: container.mant_bits(),
+            emitted_exp: 8,
         }
     }
 
@@ -137,6 +144,7 @@ impl BitPolicy for BitWave {
         } else {
             self.exp_floor = 8;
         }
+        let floor_clamped = self.exp_bits < self.exp_floor;
         self.exp_bits = self.exp_bits.max(self.exp_floor);
 
         // ---- mantissa: the unmodified Eq. 8/9 controller
@@ -154,6 +162,43 @@ impl BitPolicy for BitWave {
                 self.exp_bits -= 1;
                 self.improve_run = 0;
             }
+        }
+
+        // ---- flight recorder: report effective stored-bit crossings
+        let (mant, exp) = self.effective();
+        let mant_bits = mant.max(0.0).ceil() as u32;
+        if mant_bits != self.emitted_mant {
+            crate::obs::events::bit_change(
+                "bitwave",
+                "bitwave_loss_ema",
+                "network",
+                "mant",
+                None,
+                sig.epoch,
+                sig.step,
+                self.emitted_mant as f64,
+                mant_bits as f64,
+            );
+            self.emitted_mant = mant_bits;
+        }
+        if exp != self.emitted_exp {
+            let trigger = if floor_clamped && exp > self.emitted_exp {
+                "bitwave_overflow_floor"
+            } else {
+                "bitwave_loss_ema"
+            };
+            crate::obs::events::bit_change(
+                "bitwave",
+                trigger,
+                "network",
+                "exp",
+                None,
+                sig.epoch,
+                sig.step,
+                self.emitted_exp as f64,
+                exp as f64,
+            );
+            self.emitted_exp = exp;
         }
         self.make_plan()
     }
@@ -201,6 +246,9 @@ pub struct BitChopPolicy {
     chop: BitChop,
     container: Container,
     layers: usize,
+    /// Last effective stored activation mantissa reported to the flight
+    /// recorder (observational only, outside checkpoint/restore).
+    emitted_mant: u32,
 }
 
 impl BitChopPolicy {
@@ -209,6 +257,7 @@ impl BitChopPolicy {
             chop: BitChop::new(container.mant_bits()),
             container,
             layers,
+            emitted_mant: container.mant_bits(),
         }
     }
 
@@ -232,6 +281,21 @@ impl BitPolicy for BitChopPolicy {
             self.chop.notify_lr_change();
         }
         self.chop.observe(sig.loss);
+        let bits = self.chop.bits();
+        if bits != self.emitted_mant {
+            crate::obs::events::bit_change(
+                "bc",
+                "bitchop_loss_ema",
+                "act",
+                "mant",
+                None,
+                sig.epoch,
+                sig.step,
+                self.emitted_mant as f64,
+                bits as f64,
+            );
+            self.emitted_mant = bits;
+        }
         self.make_plan()
     }
 
@@ -350,6 +414,23 @@ mod tests {
             bw.observe(&sig(1, 60 + i, 1.0 + 0.2 * i as f64, &a, &w));
         }
         assert!(bw.plan().acts[0].exp_bits > low);
+    }
+
+    #[test]
+    fn loss_ema_crossings_emit_network_wide_events() {
+        crate::obs::events::capture_begin();
+        let (a, w) = stats(3);
+        let mut bw = BitWave::new(Container::Bf16, vec![true]);
+        for i in 0..60 {
+            bw.observe(&sig(0, i, 5.0 - 0.08 * i as f64, &a, &w));
+        }
+        let events = crate::obs::events::capture_end();
+        let ours: Vec<_> = events.iter().filter(|e| e.source == "bitwave").collect();
+        assert!(!ours.is_empty());
+        assert!(ours.iter().all(|e| e.layer.is_none()), "network-wide");
+        assert!(ours.iter().any(|e| e.component.as_deref() == Some("mant")));
+        assert!(ours.iter().any(|e| e.component.as_deref() == Some("exp")));
+        assert!(ours.iter().all(|e| e.trigger.starts_with("bitwave_")));
     }
 
     #[test]

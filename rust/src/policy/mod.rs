@@ -163,6 +163,16 @@ pub struct StepSignals<'a> {
 
 /// The adaptation-policy contract: observe one period's signals, emit the
 /// container plan for the next period, and checkpoint/restore bit-exactly.
+///
+/// Every adaptive implementation also reports its decisions to the
+/// flight recorder ([`crate::obs::events`]): whenever a *stored* integer
+/// bitlength crosses to a new value inside `observe`, a `bit_change`
+/// event is emitted with the triggering signal (`qm_gradient_step`,
+/// `qe_overflow_floor`, `bitwave_loss_ema`, …).  The tracking state is
+/// observational only and deliberately excluded from
+/// checkpoint/restore.  [`Composite`] delegates `observe` to both
+/// halves, so its events arrive under the inner policies' names;
+/// [`FixedPolicy`] never changes its plan and emits nothing.
 pub trait BitPolicy: Send {
     /// Short identifier for CLI rows / JSON summaries.
     fn name(&self) -> &'static str;

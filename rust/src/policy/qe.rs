@@ -50,6 +50,10 @@ pub struct QuantumExponent {
     /// Descent per unit lr_n·γ (run-length scaled, like the QM surrogate).
     scale: f32,
     rounded: bool,
+    /// Last *stored* (ceil-clamped) widths reported to the flight
+    /// recorder — observational only, outside checkpoint/restore.
+    emitted_a: Vec<u32>,
+    emitted_w: Vec<u32>,
 }
 
 impl QuantumExponent {
@@ -77,6 +81,8 @@ impl QuantumExponent {
             mode_w: vec![Mode::Delta; layers],
             scale,
             rounded: false,
+            emitted_a: vec![8; layers],
+            emitted_w: vec![8; layers],
         }
     }
 
@@ -110,6 +116,7 @@ impl QuantumExponent {
 
     /// One tensor's update: requirement floor from the streaming stats,
     /// γ-paced descent of the learned width, storage-mode refresh.
+    /// Returns `true` when the overflow floor forced the width up.
     fn update_one(
         e: &mut f32,
         req: &mut f32,
@@ -117,7 +124,7 @@ impl QuantumExponent {
         stats: &ExpRangeStats,
         step: f32,
         frozen: bool,
-    ) {
+    ) -> bool {
         if stats.count > 0 {
             *req = stats.needed_exp_bits(OVERFLOW_TOL) as f32;
             *mode = stats.gecko_best().1;
@@ -126,9 +133,18 @@ impl QuantumExponent {
             // range violation: saturation would corrupt restored tensors,
             // so recovery overrides even the frozen endgame
             *e = *req;
-        } else if !frozen {
-            *e = (*e - step).max(*req);
+            true
+        } else {
+            if !frozen {
+                *e = (*e - step).max(*req);
+            }
+            false
         }
+    }
+
+    /// The integer width a learned value actually stores (the plan's).
+    fn stored_width(e: f32) -> u32 {
+        (e.ceil() as u32).clamp(1, 8)
     }
 }
 
@@ -143,12 +159,54 @@ impl BitPolicy for QuantumExponent {
         let step = lr_n * gamma * self.scale;
         for (i, (e, req)) in self.e_a.iter_mut().zip(self.req_a.iter_mut()).enumerate() {
             if let Some(stats) = sig.act_stats.get(i) {
-                Self::update_one(e, req, &mut self.mode_a[i], stats, step, in_roundup);
+                let clamped =
+                    Self::update_one(e, req, &mut self.mode_a[i], stats, step, in_roundup);
+                let width = Self::stored_width(*e);
+                if width != self.emitted_a[i] {
+                    let trigger = if clamped {
+                        "qe_overflow_floor"
+                    } else {
+                        "qe_gradient_step"
+                    };
+                    crate::obs::events::bit_change(
+                        "qe",
+                        trigger,
+                        "act",
+                        "exp",
+                        Some(i),
+                        sig.epoch,
+                        sig.step,
+                        self.emitted_a[i] as f64,
+                        width as f64,
+                    );
+                    self.emitted_a[i] = width;
+                }
             }
         }
         for (i, (e, req)) in self.e_w.iter_mut().zip(self.req_w.iter_mut()).enumerate() {
             if let Some(stats) = sig.weight_stats.get(i) {
-                Self::update_one(e, req, &mut self.mode_w[i], stats, step, in_roundup);
+                let clamped =
+                    Self::update_one(e, req, &mut self.mode_w[i], stats, step, in_roundup);
+                let width = Self::stored_width(*e);
+                if width != self.emitted_w[i] {
+                    let trigger = if clamped {
+                        "qe_overflow_floor"
+                    } else {
+                        "qe_gradient_step"
+                    };
+                    crate::obs::events::bit_change(
+                        "qe",
+                        trigger,
+                        "weight",
+                        "exp",
+                        Some(i),
+                        sig.epoch,
+                        sig.step,
+                        self.emitted_w[i] as f64,
+                        width as f64,
+                    );
+                    self.emitted_w[i] = width;
+                }
             }
         }
         if in_roundup && !self.rounded {
@@ -289,6 +347,43 @@ mod tests {
             plan.acts[0].exp_bits >= wide[0].needed_exp_bits(1e-5),
             "overflow guard must react in one period"
         );
+    }
+
+    #[test]
+    fn width_changes_emit_events_with_overflow_floor_trigger() {
+        crate::obs::events::capture_begin();
+        let narrow = vec![ExpRangeStats::from_exponents(&[124u8; 4096])];
+        let wgt = vec![ExpRangeStats::from_exponents(&[121u8; 4096])];
+        let mut p = QuantumExponent::new(Container::Bf16, 6, 30, vec![false]);
+        let sig = |epoch, step, a: &'_ [ExpRangeStats], w: &'_ [ExpRangeStats]| StepSignals {
+            epoch,
+            step,
+            loss: 1.0,
+            lr_changed: false,
+            learned_n_a: None,
+            learned_n_w: None,
+            act_stats: a,
+            weight_stats: w,
+        };
+        for s in 0..100 {
+            p.observe(&sig(s / 30, s, &narrow, &wgt));
+        }
+        let mut wide_exps = vec![124u8; 4096];
+        for (k, e) in wide_exps.iter_mut().enumerate() {
+            if k % 3 == 0 {
+                *e = 90;
+            }
+        }
+        let wide = vec![ExpRangeStats::from_exponents(&wide_exps)];
+        p.observe(&sig(5, 210, &wide, &wgt));
+        let events = crate::obs::events::capture_end();
+        let qe: Vec<_> = events.iter().filter(|e| e.source == "qe").collect();
+        assert!(!qe.is_empty());
+        assert!(qe.iter().all(|e| e.component.as_deref() == Some("exp")));
+        // the descent crossed integer widths on the way down...
+        assert!(qe.iter().any(|e| e.trigger == "qe_gradient_step" && e.to < e.from));
+        // ...and the blown-up range fired the overflow floor on the way up
+        assert!(qe.iter().any(|e| e.trigger == "qe_overflow_floor" && e.to > e.from));
     }
 
     #[test]

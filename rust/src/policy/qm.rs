@@ -40,6 +40,10 @@ pub struct QuantumMantissa {
     surrogate_scale: f32,
     /// Round-up endgame entered (bitlengths ceiled and frozen).
     rounded: bool,
+    /// Last *stored* (ceiled) bitlengths reported to the flight recorder
+    /// — observational only, deliberately outside checkpoint/restore.
+    emitted_a: Vec<u32>,
+    emitted_w: Vec<u32>,
 }
 
 impl QuantumMantissa {
@@ -94,11 +98,53 @@ impl QuantumMantissa {
             targets,
             surrogate_scale,
             rounded: false,
+            emitted_a: vec![mmax.ceil() as u32; layers],
+            emitted_w: vec![mmax.ceil() as u32; layers],
         }
     }
 
     fn mmax(&self) -> f32 {
         self.container.mant_bits() as f32
+    }
+
+    /// Report any per-layer *stored* (ceiled) bitlength crossings to the
+    /// flight recorder.  Fractional drift between integer boundaries is
+    /// silent — only changes that alter artifact bytes are events.
+    fn emit_bit_changes(&mut self, sig: &StepSignals, trigger: &'static str) {
+        for (i, (&n, last)) in self.n_a.iter().zip(self.emitted_a.iter_mut()).enumerate() {
+            let bits = n.max(0.0).ceil() as u32;
+            if bits != *last {
+                crate::obs::events::bit_change(
+                    "qm",
+                    trigger,
+                    "act",
+                    "mant",
+                    Some(i),
+                    sig.epoch,
+                    sig.step,
+                    *last as f64,
+                    bits as f64,
+                );
+                *last = bits;
+            }
+        }
+        for (i, (&n, last)) in self.n_w.iter().zip(self.emitted_w.iter_mut()).enumerate() {
+            let bits = n.max(0.0).ceil() as u32;
+            if bits != *last {
+                crate::obs::events::bit_change(
+                    "qm",
+                    trigger,
+                    "weight",
+                    "mant",
+                    Some(i),
+                    sig.epoch,
+                    sig.step,
+                    *last as f64,
+                    bits as f64,
+                );
+                *last = bits;
+            }
+        }
     }
 
     fn make_plan(&self) -> NetworkPlan {
@@ -147,6 +193,7 @@ impl BitPolicy for QuantumMantissa {
                 GammaSchedule::round_up(&mut self.n_a, mmax);
                 GammaSchedule::round_up(&mut self.n_w, mmax);
                 self.rounded = true;
+                self.emit_bit_changes(sig, "qm_roundup");
             }
             return self.make_plan();
         }
@@ -166,6 +213,7 @@ impl BitPolicy for QuantumMantissa {
                 self.n_w[i] = (self.n_w[i] - step).clamp(tw.min(mmax), mmax);
             }
         }
+        self.emit_bit_changes(sig, "qm_gradient_step");
         self.make_plan()
     }
 
@@ -257,6 +305,39 @@ mod tests {
         assert_eq!(plan.weights[1].mant, 2.5);
         // store bits are ceiled
         assert_eq!(plan.acts[1].store_mant_bits(), 2);
+    }
+
+    #[test]
+    fn surrogate_descent_emits_integer_bitlength_events() {
+        crate::obs::events::capture_begin();
+        let mut p = QuantumMantissa::surrogate(
+            Container::Bf16,
+            6,
+            30,
+            vec![true, false],
+            vec![(1.0, 2.0), (2.0, 3.0)],
+        );
+        let mut step = 0;
+        for epoch in 0..6 {
+            for _ in 0..30 {
+                p.observe(&sig(epoch, step));
+                step += 1;
+            }
+        }
+        let events = crate::obs::events::capture_end();
+        let qm: Vec<_> = events.iter().filter(|e| e.source == "qm").collect();
+        assert!(!qm.is_empty(), "descent must cross integer boundaries");
+        for e in &qm {
+            assert_eq!(e.kind, "bitlength");
+            assert_eq!(e.component.as_deref(), Some("mant"));
+            assert_ne!(e.from, e.to, "events only on change");
+            assert_eq!(e.from.fract(), 0.0, "stored bits are integers");
+        }
+        // layer 0 acts walked all the way down to its 1-bit target
+        let reached = qm.iter().any(|e| {
+            e.layer == Some(0) && e.tensor_class.as_deref() == Some("act") && e.to == 1.0
+        });
+        assert!(reached, "layer 0 acts never reached the 1-bit target");
     }
 
     #[test]

@@ -8,6 +8,7 @@ use super::footprint::{fig13_rows, FootprintModel};
 use crate::coordinator::metrics::CsvSink;
 use crate::coordinator::RunResult;
 use crate::formats::Container;
+use crate::obs::AdaptEvent;
 use crate::stats::{EncodedWidthCdf, ExponentHistogram, Footprint};
 use crate::traces::{mobilenet_v3_small, resnet18, NetworkTrace};
 use anyhow::{anyhow, Result};
@@ -84,11 +85,101 @@ pub fn fig8_bc_histogram(path: &Path, bc: &RunResult) -> Result<()> {
     csv.flush()
 }
 
+/// Replay one recorded bitlength-event stream (a `(tensor class,
+/// component)` pair) into the layer-mean stored width at the end of each
+/// epoch.  Per-layer events update their layer; network-wide events
+/// (`layer: None`, BitWave) update every layer.  Each layer's starting
+/// width is the `from` of its first event; layers the policy never
+/// touched keep their `seed` fallback.  Returns `None` when the run
+/// recorded no events for this stream — callers fall back to the
+/// measured per-epoch means.
+fn replay_mean_bits(
+    events: &[AdaptEvent],
+    class: &str,
+    component: &str,
+    layers: usize,
+    seed: &[f64],
+    epochs: usize,
+) -> Option<Vec<f64>> {
+    let mut stream: Vec<&AdaptEvent> = events
+        .iter()
+        .filter(|e| {
+            e.kind == "bitlength"
+                && e.tensor_class.as_deref() == Some(class)
+                && e.component.as_deref() == Some(component)
+        })
+        .collect();
+    if stream.is_empty() || layers == 0 {
+        return None;
+    }
+    stream.sort_by_key(|e| (e.epoch.unwrap_or(0), e.step.unwrap_or(0)));
+    let mut state: Vec<f64> = (0..layers)
+        .map(|i| seed.get(i).copied().unwrap_or(f64::NAN))
+        .collect();
+    let mut seeded = vec![false; layers];
+    for e in &stream {
+        match e.layer {
+            Some(l) if l < layers => {
+                if !seeded[l] {
+                    state[l] = e.from;
+                    seeded[l] = true;
+                }
+            }
+            None => {
+                for l in 0..layers {
+                    if !seeded[l] {
+                        state[l] = e.from;
+                        seeded[l] = true;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut out = Vec::with_capacity(epochs);
+    let mut idx = 0;
+    for epoch in 0..epochs {
+        while idx < stream.len() && stream[idx].epoch.unwrap_or(0) <= epoch {
+            let e = stream[idx];
+            match e.layer {
+                Some(l) if l < layers => state[l] = e.to,
+                None => state.iter_mut().for_each(|s| *s = e.to),
+                _ => {}
+            }
+            idx += 1;
+        }
+        out.push(state.iter().sum::<f64>() / layers as f64);
+    }
+    Some(out)
+}
+
 /// Footprint-over-time: per-epoch stash traffic of a run (what an
-/// adapting container actually wrote/read each epoch, plus the planned
-/// exponent width trajectory) — the policy engine's adaptation curve on
-/// real stored bytes.  Requires a run with `TrainConfig::stash` set.
+/// adapting container actually wrote/read each epoch, plus the stored
+/// bitlength trajectory) — the policy engine's adaptation curve on real
+/// stored bytes.  Requires a run with `TrainConfig::stash` set.
+///
+/// The bitlength columns replay the run's *recorded* adaptation events
+/// (`RunResult::events`, the flight recorder's thread-local capture):
+/// the layer-mean stored mantissa/exponent width at each epoch end.
+/// A run whose policy recorded no events for a stream (fixed variants,
+/// exponent-passive policies) falls back to the measured per-epoch
+/// means, as before.
 pub fn footprint_over_time(path: &Path, run: &RunResult) -> Result<()> {
+    let layers = run
+        .epochs
+        .first()
+        .map(|e| e.per_layer_bits_a.len())
+        .unwrap_or(0);
+    let seed_mant: Vec<f64> = run
+        .epochs
+        .first()
+        .map(|e| e.per_layer_bits_a.clone())
+        .unwrap_or_default();
+    let seed_exp: Vec<f64> =
+        vec![run.epochs.first().map(|e| e.mean_exp_bits_a).unwrap_or(8.0); layers];
+    let n = run.stash_epochs.len();
+    let mant = replay_mean_bits(&run.events, "act", "mant", layers, &seed_mant, n);
+    let exp = replay_mean_bits(&run.events, "act", "exp", layers, &seed_exp, n);
     let mut csv = CsvSink::create(
         path,
         &[
@@ -103,11 +194,13 @@ pub fn footprint_over_time(path: &Path, run: &RunResult) -> Result<()> {
         ],
     )?;
     for (i, e) in run.stash_epochs.iter().enumerate() {
-        let (bits, exp) = run
+        let (fallback_bits, fallback_exp) = run
             .epochs
             .get(i)
             .map(|s| (s.mean_bits_a, s.mean_exp_bits_a))
             .unwrap_or((f64::NAN, f64::NAN));
+        let bits = mant.as_ref().map_or(fallback_bits, |v| v[i]);
+        let exp = exp.as_ref().map_or(fallback_exp, |v| v[i]);
         csv.row(&[
             i as f64,
             e.written_bits / 8e6,
@@ -320,6 +413,76 @@ mod tests {
         let text = std::fs::read_to_string(&p).unwrap();
         assert_eq!(text.lines().count(), 4);
         assert!(text.starts_with("epoch,written_mb"));
+        // no recorded events: the bitlength column is the measured mean
+        let row0: Vec<&str> = text.lines().nth(1).unwrap().split(',').collect();
+        assert_eq!(row0[6].parse::<f64>().unwrap(), 7.0);
+    }
+
+    #[test]
+    fn footprint_over_time_replays_recorded_events() {
+        use crate::coordinator::train::EpochStats;
+        use crate::stash::EpochTraffic;
+        use std::borrow::Cow;
+        let mut run = RunResult::default();
+        for i in 0..3 {
+            run.stash_epochs.push(EpochTraffic {
+                written_bits: 8e6,
+                written_fp32_bits: 32e6,
+                ..Default::default()
+            });
+            run.epochs.push(EpochStats {
+                epoch: i,
+                mean_bits_a: 4.2, // measured mean: must NOT be used
+                mean_exp_bits_a: 8.0,
+                per_layer_bits_a: vec![8.0, 8.0],
+                ..Default::default()
+            });
+        }
+        let bit = |epoch, step, layer: Option<usize>, from: f64, to: f64| AdaptEvent {
+            ts_us: 0,
+            pid: 1,
+            kind: Cow::Borrowed("bitlength"),
+            source: Cow::Borrowed("qm"),
+            trigger: Cow::Borrowed("qm_gradient_step"),
+            layer,
+            tensor_class: Some(Cow::Borrowed("act")),
+            component: Some(Cow::Borrowed("mant")),
+            epoch: Some(epoch),
+            step: Some(step),
+            from,
+            to,
+            arg_job: None,
+        };
+        // layer 0 drops 8→7 in epoch 0, then 7→5 in epoch 2; layer 1
+        // never adapts and keeps its recorded starting width (8)
+        run.events = vec![bit(2, 80, Some(0), 7.0, 5.0), bit(0, 10, Some(0), 8.0, 7.0)];
+        let p = tdir().join("fpot_replay.csv");
+        footprint_over_time(&p, &run).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let means: Vec<f64> = text
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').nth(6).unwrap().parse().unwrap())
+            .collect();
+        assert_eq!(means, vec![7.5, 7.5, 6.5]);
+        // exponent stream recorded nothing: measured fallback holds
+        let exps: Vec<f64> = text
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').nth(7).unwrap().parse().unwrap())
+            .collect();
+        assert_eq!(exps, vec![8.0, 8.0, 8.0]);
+
+        // a network-wide (layer: None) event rewrites every layer
+        run.events.push(bit(1, 40, None, 8.0, 6.0));
+        footprint_over_time(&p, &run).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let means: Vec<f64> = text
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').nth(6).unwrap().parse().unwrap())
+            .collect();
+        assert_eq!(means, vec![7.5, 6.0, 5.5]);
     }
 
     #[test]

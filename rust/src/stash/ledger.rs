@@ -96,6 +96,38 @@ struct Marks {
     last_fault: HistBuckets,
 }
 
+/// Spill-tier crossings inside one window count toward a pressure event.
+const BURST_THRESHOLD: u64 = 16;
+/// Window length for the burst detector, µs.
+const BURST_WINDOW_US: u64 = 250_000;
+
+/// Sliding-window burst detector: `note` returns the crossing count when
+/// the threshold is reached inside the window (then re-arms), `None`
+/// otherwise.
+#[derive(Default)]
+struct BurstWindow {
+    start_us: u64,
+    count: u64,
+}
+
+impl BurstWindow {
+    fn note(&mut self, now_us: u64) -> Option<u64> {
+        if now_us.saturating_sub(self.start_us) > BURST_WINDOW_US {
+            self.start_us = now_us;
+            self.count = 0;
+        }
+        self.count += 1;
+        if self.count >= BURST_THRESHOLD {
+            let n = self.count;
+            self.start_us = now_us;
+            self.count = 0;
+            Some(n)
+        } else {
+            None
+        }
+    }
+}
+
 /// Thread-safe ledger shared between pool workers and the caller.
 #[derive(Default)]
 pub struct StashLedger {
@@ -105,6 +137,9 @@ pub struct StashLedger {
     restore_dram: Histogram,
     /// Restore latency, spill-fault tier (≥1 chunk faulted back).
     restore_fault: Histogram,
+    /// Flight-recorder burst detectors (eviction storms / fault bursts).
+    burst_evict: Mutex<BurstWindow>,
+    burst_fault: Mutex<BurstWindow>,
 }
 
 impl StashLedger {
@@ -180,16 +215,30 @@ impl StashLedger {
 
     /// A cold chunk was evicted DRAM → spill.
     pub fn record_spill_write(&self, bits: f64) {
-        let mut s = self.inner.lock().unwrap();
-        s.spill_written_bits += bits;
-        s.evictions += 1;
+        {
+            let mut s = self.inner.lock().unwrap();
+            s.spill_written_bits += bits;
+            s.evictions += 1;
+        }
+        // flight recorder: many evictions inside one window = a storm
+        // (the budget is actively thrashing, not just trimming cold data)
+        let now = crate::obs::trace::now_us();
+        if let Some(n) = self.burst_evict.lock().unwrap().note(now) {
+            crate::obs::events::stash_pressure("eviction_storm", n, BURST_WINDOW_US);
+        }
     }
 
     /// A spilled chunk was faulted back spill → DRAM.
     pub fn record_spill_read(&self, bits: f64) {
-        let mut s = self.inner.lock().unwrap();
-        s.spill_read_bits += bits;
-        s.faults += 1;
+        {
+            let mut s = self.inner.lock().unwrap();
+            s.spill_read_bits += bits;
+            s.faults += 1;
+        }
+        let now = crate::obs::trace::now_us();
+        if let Some(n) = self.burst_fault.lock().unwrap().note(now) {
+            crate::obs::events::stash_pressure("fault_burst", n, BURST_WINDOW_US);
+        }
     }
 
     /// A tensor left the stash: subtract its components from residency.
@@ -284,6 +333,29 @@ mod tests {
         assert_eq!(rows[1].restore_dram_us.count, 0);
         assert_eq!(rows[1].restore_fault_us.count, 1);
         assert_eq!(rows[1].restore_fault_us.sum_us, 7000);
+    }
+
+    #[test]
+    fn spill_bursts_emit_pressure_events() {
+        crate::obs::events::capture_begin();
+        let l = StashLedger::new();
+        for _ in 0..BURST_THRESHOLD {
+            l.record_spill_write(4096.0);
+        }
+        // one below the threshold: no fault event yet
+        for _ in 0..BURST_THRESHOLD - 1 {
+            l.record_spill_read(4096.0);
+        }
+        let mid = crate::obs::events::capture_end();
+        assert!(mid.iter().any(|e| e.trigger == "eviction_storm"));
+        assert!(!mid.iter().any(|e| e.trigger == "fault_burst"));
+        crate::obs::events::capture_begin();
+        l.record_spill_read(4096.0);
+        let events = crate::obs::events::capture_end();
+        let burst = events.iter().find(|e| e.trigger == "fault_burst").unwrap();
+        assert_eq!(burst.kind, "stash_pressure");
+        assert_eq!(burst.source, "stash");
+        assert_eq!(burst.from, BURST_THRESHOLD as f64, "episode count");
     }
 
     #[test]

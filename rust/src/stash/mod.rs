@@ -226,6 +226,10 @@ impl Stash {
     /// as the job is accepted; blocks only on queue back-pressure.  A
     /// tensor already stored under `id` is replaced (its chunks freed).
     pub fn put(&self, id: TensorId, vals: Vec<f32>, meta: ContainerMeta) {
+        // flight recorder: resident vs. spill gauges sampled at the put
+        // cadence (no-op unless tracing; reads two arena atomics)
+        crate::obs::timeseries::record("stash_bytes.resident", self.arena.in_use_bytes() as f64);
+        crate::obs::timeseries::record("stash_bytes.spill", self.arena.spill_in_use_bytes() as f64);
         let codec = Arc::clone(&self.codec);
         let arena = Arc::clone(&self.arena);
         let ledger = Arc::clone(&self.ledger);
@@ -271,6 +275,9 @@ impl Stash {
     /// Barrier: wait until every queued put/take job has finished.
     pub fn flush(&self) {
         self.pool.wait_idle();
+        // settled high-water sample once all encodes landed
+        crate::obs::timeseries::record("stash_bytes.resident", self.arena.in_use_bytes() as f64);
+        crate::obs::timeseries::record("stash_bytes.spill", self.arena.spill_in_use_bytes() as f64);
     }
 
     /// Decode a resident tensor without removing it.  Call after

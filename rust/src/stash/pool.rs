@@ -68,6 +68,8 @@ impl StashPool {
             *p
         };
         crate::obs::metrics::STASH_QUEUE_PEAK.record_max(depth as u64);
+        // flight recorder: queue depth over time (no-op unless tracing)
+        crate::obs::timeseries::record("stash_queue_depth", depth as f64);
         let t0 = std::time::Instant::now();
         self.tx
             .as_ref()

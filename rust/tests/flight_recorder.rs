@@ -1,0 +1,242 @@
+//! Flight-recorder integration tests against the built `repro` binary:
+//! the always-on adaptation-event stream lands in `events.jsonl` with at
+//! least one bitlength change per adaptive policy, metrics snapshots are
+//! deterministic across serial and parallel execution, counter tracks
+//! show up in the Chrome trace, and `repro inspect` reads runs back,
+//! diffs them, and gates wall clock against a perf baseline.
+
+use sfp::util::json::Json;
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+/// The `repro` binary Cargo built alongside this test.
+fn repro() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn tdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("sfp_flight_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Run and assert success, returning captured output.
+fn run_ok(cmd: &mut Command) -> Output {
+    let out = cmd.output().expect("spawn repro");
+    assert!(
+        out.status.success(),
+        "repro failed\nstdout:\n{}\nstderr:\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr),
+    );
+    out
+}
+
+fn stdout_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn parse_json(path: &Path) -> Json {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    Json::parse(&text).unwrap_or_else(|e| panic!("parse {}: {e}", path.display()))
+}
+
+/// A small serial policy sweep writing its run directory to `out`,
+/// reusing `cache` so a second invocation resolves fully cached.
+fn policy_sweep(out: &Path, cache: &Path) -> Output {
+    run_ok(
+        repro()
+            .args(["policy", "--model", "resnet18", "--policy", "all"])
+            .args(["--sample", "4096", "--serial"])
+            .arg("--out")
+            .arg(out)
+            .arg("--cache")
+            .arg(cache),
+    )
+}
+
+#[test]
+fn policy_sweep_records_events_per_adaptive_policy_and_inspect_reads_them() {
+    let root = tdir("events");
+    let (a, b, cache) = (root.join("a"), root.join("b"), root.join("cache"));
+    policy_sweep(&a, &cache);
+
+    // The always-on event stream exists without --trace and records at
+    // least one stored-bitlength change from every adaptive policy in
+    // the sweep: QM (mantissa), QE (exponent), BitWave (network-wide).
+    let text = std::fs::read_to_string(a.join("events.jsonl")).expect("events.jsonl");
+    let events: Vec<Json> = text
+        .lines()
+        .map(|l| Json::parse(l).expect("event line"))
+        .collect();
+    assert!(!events.is_empty(), "events.jsonl is empty");
+    let sources: BTreeSet<&str> = events
+        .iter()
+        .filter(|e| e.get("kind").and_then(Json::as_str) == Some("bitlength"))
+        .filter_map(|e| e.get("source").and_then(Json::as_str))
+        .collect();
+    for src in ["qm", "qe", "bitwave"] {
+        assert!(
+            sources.contains(src),
+            "no bitlength event from {src} (saw {sources:?})"
+        );
+    }
+
+    // Single-run inspect prints the health summary and replayed
+    // bitlength trajectories.
+    let out = run_ok(repro().arg("inspect").arg(&a));
+    let text = stdout_of(&out);
+    assert!(text.contains("bitlength trajectories"), "{text}");
+    assert!(text.contains("bitlength changes"), "{text}");
+    assert!(text.contains(" -> "), "no trajectory arrows:\n{text}");
+
+    // Baseline round-trip: record this run, then gate against it — the
+    // run that produced a baseline always passes its own gate.
+    let bench = root.join("BENCH_test.json");
+    let mut wb = repro();
+    wb.arg("inspect").arg(&a);
+    wb.arg("--write-baseline").arg(&bench);
+    run_ok(&mut wb);
+    let base = parse_json(&bench);
+    assert!(base.get("total_wall_ms").and_then(Json::as_f64).unwrap() > 0.0);
+    assert_eq!(base.get("total_jobs").and_then(Json::as_f64), Some(4.0));
+    let out = run_ok(
+        repro()
+            .arg("inspect")
+            .arg(&a)
+            .arg("--baseline")
+            .arg(&bench)
+            .args(["--gate", "200"]),
+    );
+    assert!(stdout_of(&out).contains("perf gate OK"));
+
+    // An absurdly tight baseline must trip the regression gate.
+    let tight = root.join("BENCH_tight.json");
+    std::fs::write(&tight, r#"{"total_wall_ms": 0.0001}"#).unwrap();
+    let out = repro()
+        .arg("inspect")
+        .arg(&a)
+        .arg("--baseline")
+        .arg(&tight)
+        .args(["--gate", "0"])
+        .output()
+        .expect("spawn repro");
+    assert!(!out.status.success(), "tight baseline should fail the gate");
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("perf regression"),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr),
+    );
+
+    // Warm re-run into a second directory (shared cache), then diff:
+    // identical configs against the same cache are fingerprint-identical.
+    policy_sweep(&b, &cache);
+    let out = run_ok(repro().arg("inspect").arg(&a).arg(&b));
+    let text = stdout_of(&out);
+    assert!(text.contains("4 jobs fingerprint-identical, 0 differ"), "{text}");
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// A tiny stash sweep (two budget points + summary) into `out`.
+fn stash_sweep(out: &Path, serial: bool, trace: Option<&Path>) -> Output {
+    let mut cmd = repro();
+    cmd.args(["stash", "--model", "resnet18", "--sample", "1024"])
+        .args(["--batch", "64", "--budget-bytes", "0,262144"])
+        .arg("--out")
+        .arg(out)
+        .arg("--cache")
+        .arg(out.join("cache"));
+    if serial {
+        cmd.arg("--serial");
+    }
+    if let Some(path) = trace {
+        cmd.arg("--trace").arg(path);
+    }
+    run_ok(&mut cmd)
+}
+
+#[test]
+fn metrics_snapshot_is_deterministic_across_serial_and_parallel() {
+    let root = tdir("metrics");
+    let (sdir, pdir) = (root.join("serial"), root.join("par"));
+    let trace_path = sdir.join("trace.json");
+    stash_sweep(&sdir, true, Some(&trace_path));
+    stash_sweep(&pdir, false, None);
+
+    let (Json::Obj(ms), Json::Obj(mp)) = (
+        parse_json(&sdir.join("metrics.json")),
+        parse_json(&pdir.join("metrics.json")),
+    ) else {
+        panic!("metrics.json is not an object");
+    };
+
+    // Same counters present either way, and the work-accounting ones
+    // agree exactly: the snapshot layout must not depend on the
+    // execution mode, only latency distributions may differ.
+    let ks: Vec<&String> = ms.keys().collect();
+    let kp: Vec<&String> = mp.keys().collect();
+    assert_eq!(ks, kp, "metrics key sets differ between serial and parallel");
+    for key in [
+        "lab_jobs_done_total",
+        "lab_jobs_executed_total",
+        "lab_jobs_failed_total",
+        "lab_jobs_cached_total",
+    ] {
+        assert_eq!(
+            ms.get(key).and_then(Json::as_f64),
+            mp.get(key).and_then(Json::as_f64),
+            "{key} differs between serial and parallel"
+        );
+    }
+    assert_eq!(ms.get("lab_jobs_done_total").and_then(Json::as_f64), Some(3.0));
+    assert_eq!(ms.get("lab_jobs_failed_total").and_then(Json::as_f64), Some(0.0));
+
+    // Monotone counters never go negative, and histogram quantiles are
+    // ordered, in both snapshots.
+    for m in [&ms, &mp] {
+        for (key, v) in m {
+            match v {
+                Json::Num(x) => assert!(*x >= 0.0, "{key} = {x}"),
+                Json::Obj(h) => {
+                    let q = |k: &str| h.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                    assert!(q("p50_us") <= q("p99_us"), "{key}: p50 > p99");
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // The traced serial run rendered counter tracks into the Chrome
+    // trace ("ph":"C" with numeric args) and exported timeseries.json
+    // in the same shape the trace was built from.
+    let trace = parse_json(&trace_path);
+    let trace_events = trace
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents");
+    let counter_names: BTreeSet<&str> = trace_events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("C"))
+        .filter_map(|e| e.get("name").and_then(Json::as_str))
+        .collect();
+    assert!(
+        counter_names.contains("stash_bytes"),
+        "no stash_bytes counter track (saw {counter_names:?})"
+    );
+    assert!(
+        counter_names.contains("stash_queue_depth"),
+        "no stash_queue_depth counter track (saw {counter_names:?})"
+    );
+    let series = parse_json(&sdir.join("timeseries.json"));
+    let samples = series.as_arr().expect("timeseries.json array");
+    assert!(!samples.is_empty());
+    for s in samples {
+        assert!(s.get("track").and_then(Json::as_str).is_some());
+        assert!(s.get("value").and_then(Json::as_f64).is_some());
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+}
