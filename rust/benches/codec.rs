@@ -1,52 +1,188 @@
-//! Codec throughput benches — the L3 hot path (§Perf).  Measures the
-//! Gecko exponent codec, the full SFP pack/unpack pipe, and the pure
-//! accounting path, in values/second on trained-like streams.
+//! Codec throughput benches — the L3 hot path (see EXPERIMENTS.md §Perf).
+//! Measures the Gecko exponent codec and the full SFP pack/unpack pipe
+//! with the word-parallel kernels against the scalar reference (asserting
+//! the ≥4× gecko encode speedup the kernels exist for), then every
+//! [`StashCodec`] end-to-end in GB/s of f32 payload.
+//!
+//! Besides stdout, the run emits `results-codec/lab_manifest.json` (one
+//! synthetic job per case, `wall_ms` = median time for one pass over the
+//! stream) so `repro inspect results-codec --baseline BENCH_codec.json
+//! --gate PCT` gates codec regressions exactly like lab-run regressions.
 
 use sfp::formats::Container;
-use sfp::gecko::{self, Mode};
+use sfp::gecko::{self, Kernel, Mode, SegReader};
 use sfp::sfp::{sfp_bits, SfpCodec};
+use sfp::stash::{
+    ContainerMeta, GeckoStashCodec, JsStashCodec, RawStashCodec, SfpStashCodec, StashCodec,
+};
 use sfp::traces::ValueModel;
-use sfp::util::bench::{black_box, Bench};
+use sfp::util::bench::{black_box, Bench, Report};
+use sfp::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One manifest row: a bench case with its median per-pass wall clock and
+/// payload throughput.
+struct Case {
+    label: String,
+    wall_ms: f64,
+    gbps: f64,
+}
+
+impl Case {
+    fn new(label: &str, bytes: f64, r: Report) -> Case {
+        // 1 byte/ns = 1 (decimal) GB/s, so bytes/median_ns is GB/s.
+        let gbps = bytes / r.median_ns;
+        println!("    {label}: {gbps:.2} GB/s");
+        Case {
+            label: label.to_string(),
+            wall_ms: r.median_ns / 1e6,
+            gbps,
+        }
+    }
+}
+
+fn write_manifest(cases: &[Case]) {
+    let jobs: Vec<Json> = cases
+        .iter()
+        .map(|c| {
+            let mut j = BTreeMap::new();
+            j.insert("label".to_string(), Json::Str(c.label.clone()));
+            j.insert("wall_ms".to_string(), Json::Num(c.wall_ms));
+            j.insert("gbps".to_string(), Json::Num(c.gbps));
+            j.insert("status".to_string(), Json::Str("executed".to_string()));
+            Json::Obj(j)
+        })
+        .collect();
+    let mut m = BTreeMap::new();
+    m.insert("mode".to_string(), Json::Str("bench-codec".to_string()));
+    m.insert("total_jobs".to_string(), Json::Num(cases.len() as f64));
+    m.insert("executed".to_string(), Json::Num(cases.len() as f64));
+    m.insert("cached".to_string(), Json::Num(0.0));
+    m.insert("failed".to_string(), Json::Num(0.0));
+    m.insert("skipped".to_string(), Json::Num(0.0));
+    m.insert(
+        "wall_ms".to_string(),
+        Json::Num(cases.iter().map(|c| c.wall_ms).sum()),
+    );
+    m.insert("jobs".to_string(), Json::Arr(jobs));
+    std::fs::create_dir_all("results-codec").expect("create results-codec");
+    std::fs::write("results-codec/lab_manifest.json", Json::Obj(m).to_string())
+        .expect("write codec bench manifest");
+    println!("manifest -> results-codec/lab_manifest.json");
+}
 
 fn main() {
-    let n = 64 * 4096; // 256k values per iteration
+    let n = 64 * 4096; // 256k values = 1 MiB of f32 payload per pass
+    let f32_bytes = (n * 4) as f64;
+    let exp_bytes = n as f64; // gecko packs one exponent byte per value
     let acts = ValueModel::relu_act().sample_values(n, 1, true);
     let weights = ValueModel::weights().sample_values(n, 2, false);
     let act_exps = gecko::exponents(&acts);
+    let mut cases: Vec<Case> = Vec::new();
 
+    // -- gecko exponent codec: word kernels vs the scalar reference --
     let b = Bench::new("gecko");
     b.run("exponents_extract", n as f64, || {
         black_box(gecko::exponents(black_box(&acts)));
     });
-    b.run("encode_delta_acts", n as f64, || {
-        black_box(gecko::encode(black_box(&act_exps), Mode::Delta));
-    });
+    let kernel_pair = |case: &str, mode: Mode| -> (Report, Report) {
+        let scalar = b.run(&format!("{case}_scalar"), n as f64, || {
+            black_box(gecko::encode_kernel(black_box(&act_exps), mode, Kernel::Scalar));
+        });
+        let word = b.run(&format!("{case}_word"), n as f64, || {
+            black_box(gecko::encode_kernel(black_box(&act_exps), mode, Kernel::Word));
+        });
+        println!(
+            "    {case}: word {:.2} GB/s, {:.2}x over scalar",
+            exp_bytes / word.median_ns,
+            scalar.median_ns / word.median_ns,
+        );
+        (scalar, word)
+    };
+    let (delta_scalar, delta_word) = kernel_pair("encode_delta_acts", Mode::Delta);
+    let fixed = Mode::FixedBias { bias: 127, group: 8 };
+    kernel_pair("encode_fixed_acts", fixed);
+    cases.push(Case::new("gecko/encode_delta_word", exp_bytes, delta_word));
     let enc = gecko::encode(&act_exps, Mode::Delta);
-    b.run("decode_delta_acts", n as f64, || {
-        black_box(gecko::decode(black_box(&enc), Mode::Delta));
-    });
+    for (kernel, label) in [(Kernel::Scalar, "scalar"), (Kernel::Word, "word")] {
+        let r = b.run(&format!("decode_delta_acts_{label}"), n as f64, || {
+            let mut payload = SegReader::single(&enc.payload, enc.payload_bits);
+            let mut meta = SegReader::single(&enc.metadata, enc.metadata_bits);
+            black_box(gecko::decode_readers_kernel(
+                &mut payload,
+                &mut meta,
+                enc.count,
+                Mode::Delta,
+                kernel,
+            ));
+        });
+        if kernel == Kernel::Word {
+            cases.push(Case::new("gecko/decode_delta_word", exp_bytes, r));
+        }
+    }
     b.run("encoded_bits_only", n as f64, || {
         black_box(gecko::encoded_bits(black_box(&act_exps), Mode::Delta));
     });
-    let fixed = Mode::FixedBias { bias: 127, group: 8 };
-    b.run("encode_fixed_acts", n as f64, || {
-        black_box(gecko::encode(black_box(&act_exps), fixed));
-    });
+    // The word kernels are this PR's reason to exist: hold the ≥4x
+    // single-thread gecko delta-encode speedup (relative, same process —
+    // machine-independent) or fail the bench run loudly.
+    let speedup = delta_scalar.median_ns / delta_word.median_ns;
+    assert!(
+        speedup >= 4.0,
+        "gecko delta encode word kernel must be >= 4x scalar, got {speedup:.2}x"
+    );
 
+    // -- full SFP pipe: word vs scalar compress, then decompress --
     let b = Bench::new("sfp_codec");
     for (label, vals, elide) in [("acts", &acts, true), ("weights", &weights, false)] {
         let codec = SfpCodec::new(Container::Bf16, elide);
         for n_mant in [1u32, 4, 7] {
-            b.run(&format!("compress_{label}_n{n_mant}"), n as f64, || {
-                black_box(codec.compress(black_box(vals), n_mant));
+            let word = b.run(&format!("compress_{label}_n{n_mant}"), n as f64, || {
+                black_box(codec.compress_kernel(black_box(vals), n_mant, Kernel::Word));
             });
+            if n_mant == 4 {
+                let scalar = b.run(&format!("compress_{label}_n4_scalar"), n as f64, || {
+                    black_box(codec.compress_kernel(black_box(vals), n_mant, Kernel::Scalar));
+                });
+                println!(
+                    "    compress_{label}_n4: word {:.2} GB/s, {:.2}x over scalar",
+                    f32_bytes / word.median_ns,
+                    scalar.median_ns / word.median_ns,
+                );
+                cases.push(Case::new(&format!("sfp/compress_{label}_n4"), f32_bytes, word));
+            }
         }
         let c = codec.compress(vals, 4);
-        b.run(&format!("decompress_{label}_n4"), n as f64, || {
+        let r = b.run(&format!("decompress_{label}_n4"), n as f64, || {
             black_box(codec.decompress(black_box(&c)));
         });
+        cases.push(Case::new(&format!("sfp/decompress_{label}_n4"), f32_bytes, r));
         b.run(&format!("bits_only_{label}_n4"), n as f64, || {
             black_box(sfp_bits(black_box(vals), 4, Container::Bf16, elide));
         });
     }
+
+    // -- every StashCodec end-to-end (encode + decode GB/s of f32) --
+    let b = Bench::new("stash_codec");
+    let codecs: [&dyn StashCodec; 4] = [
+        &GeckoStashCodec,
+        &SfpStashCodec,
+        &RawStashCodec,
+        &JsStashCodec,
+    ];
+    let meta = ContainerMeta::new(Container::Bf16, 7);
+    for codec in codecs {
+        let name = codec.name();
+        let r = b.run(&format!("encode_{name}"), n as f64, || {
+            black_box(codec.encode(black_box(&acts), &meta));
+        });
+        cases.push(Case::new(&format!("stash/encode_{name}"), f32_bytes, r));
+        let enc = codec.encode(&acts, &meta);
+        let r = b.run(&format!("decode_{name}"), n as f64, || {
+            black_box(codec.decode(black_box(&enc), &meta));
+        });
+        cases.push(Case::new(&format!("stash/decode_{name}"), f32_bytes, r));
+    }
+
+    write_manifest(&cases);
 }

@@ -1,6 +1,47 @@
 //! Minimal MSB-first bit-packing primitives shared by the Gecko and SFP
 //! codecs.  The writer packs into `u64` words (the hot path of the whole
 //! compression stack — see EXPERIMENTS.md §Perf for the iteration log).
+//!
+//! Two tiers of primitives share one bitstream layout:
+//!
+//! * scalar: [`BitWriter::push`] / [`SegReader::read`] — one field per
+//!   call, ≤ 57 bits.  The reference implementation.
+//! * word-parallel: [`BitWriter::push_word`] / [`BitWriter::pack_lanes`]
+//!   and [`SegReader::read_word`] / [`SegReader::unpack_lanes`] — a whole
+//!   row of same-width fields spliced per call through a 128-bit staging
+//!   accumulator (bitstream-SIMD with shifts and masks; std-only, no
+//!   intrinsics).  Bit-identical to the equivalent scalar call sequence
+//!   by construction, which [`Kernel`]-differential tests pin down.
+
+use std::sync::OnceLock;
+
+/// Which codec kernel implementation drives encode/decode.
+///
+/// Both kernels emit (and consume) *identical* bitstreams — the choice is
+/// transport-level only, so content hashes, cache entries, and manifest
+/// fingerprints never depend on it.  CI proves that by re-running the lab
+/// grid with the word kernels against a cache populated by the scalar
+/// reference and asserting 100% fingerprint-verified hits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// u64-lane word-parallel kernels (the production path).
+    Word,
+    /// Per-value scalar reference implementation.
+    Scalar,
+}
+
+impl Kernel {
+    /// Process-wide kernel selection: `SFP_CODEC_KERNELS=scalar` forces
+    /// the reference implementation; anything else (including unset)
+    /// selects the word-parallel kernels.  Read once, then cached.
+    pub fn active() -> Kernel {
+        static ACTIVE: OnceLock<Kernel> = OnceLock::new();
+        *ACTIVE.get_or_init(|| match std::env::var("SFP_CODEC_KERNELS").as_deref() {
+            Ok("scalar") => Kernel::Scalar,
+            _ => Kernel::Word,
+        })
+    }
+}
 
 /// Append-only bit writer, MSB-first within each 64-bit word.
 #[derive(Default, Debug, Clone)]
@@ -45,6 +86,86 @@ impl BitWriter {
             self.words.push(v << (64 - hi));
         }
         self.len += n as usize;
+    }
+
+    /// Append the low `n` bits of `v` in one splice, `n <= 64` — the
+    /// word-granular sibling of [`BitWriter::push`] used by the
+    /// [`Kernel::Word`] encode paths: a whole row of fields is combined
+    /// into one word with shifts/ORs, then spliced here in a single call
+    /// instead of one `push` per field.  Bit-identical to pushing the
+    /// fields individually.
+    #[inline]
+    pub fn push_word(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 64);
+        debug_assert!(n == 64 || v < (1u64 << n));
+        if n == 0 {
+            return;
+        }
+        let bit = (self.len & 63) as u32;
+        if bit == 0 {
+            // fresh word: the value lands MSB-aligned in one store
+            self.words.push(if n == 64 { v } else { v << (64 - n) });
+        } else {
+            // bit >= 1, so avail <= 63 and every shift below is in 1..=63
+            let avail = 64 - bit;
+            let last = self.words.last_mut().expect("partial word exists");
+            if n <= avail {
+                *last |= v << (avail - n);
+            } else {
+                let hi = n - avail;
+                *last |= v >> hi;
+                self.words.push(v << (64 - hi));
+            }
+        }
+        self.len += n as usize;
+    }
+
+    /// Append `fields.len()` fields of uniform `width` bits each — the
+    /// bit-plane-transposed pack: instead of one bit-offset computation
+    /// per field (scalar `push`), fields stream through a 128-bit staging
+    /// accumulator and whole 64-bit words flush as they fill.
+    ///
+    /// Mask derivation (MSB-first stream order, `fill` = pending bits):
+    ///
+    /// ```text
+    ///   acc (128 b):  [ pending tail (fill bits) | zeros ............ ]
+    ///                   bit 127 ...                              bit 0
+    ///   place field:  acc |= field << (128 - fill - width)
+    ///   flush:        fill >= 64  =>  emit (acc >> 64), acc <<= 64
+    /// ```
+    ///
+    /// `fill < 64` at every loop entry and `width <= 64`, so the place
+    /// shift is in `1..=127` and never overflows the staging accumulator.
+    /// Bit-identical to calling [`BitWriter::push`] once per field.
+    pub fn pack_lanes(&mut self, fields: &[u64], width: u32) {
+        debug_assert!(width <= 64);
+        if width == 0 || fields.is_empty() {
+            return;
+        }
+        let total_bits = fields.len() * width as usize;
+        self.words.reserve(total_bits / 64 + 2);
+        let mut fill = (self.len & 63) as u32;
+        // Seed the accumulator with the current partial word (if any) so
+        // the flushes below re-emit it completed.
+        let mut acc: u128 = if fill == 0 {
+            0
+        } else {
+            (self.words.pop().expect("partial word exists") as u128) << 64
+        };
+        for &f in fields {
+            debug_assert!(width == 64 || f < (1u64 << width));
+            acc |= (f as u128) << (128 - fill - width);
+            fill += width;
+            if fill >= 64 {
+                self.words.push((acc >> 64) as u64);
+                acc <<= 64;
+                fill -= 64;
+            }
+        }
+        if fill > 0 {
+            self.words.push((acc >> 64) as u64);
+        }
+        self.len += total_bits;
     }
 
     /// Rebuild a writer from previously-emitted words (to extend or
@@ -285,6 +406,77 @@ impl<'a> SegReader<'a> {
         out
     }
 
+    /// Read the next `n` bits in one splice, `n <= 64` — the word-granular
+    /// sibling of [`SegReader::read`] ([`Kernel::Word`] decode paths pull
+    /// a whole row per call and peel lanes with shifts/masks).
+    #[inline]
+    pub fn read_word(&mut self, n: u32) -> u64 {
+        debug_assert!(n <= 64);
+        debug_assert!(self.pos + n as usize <= self.len, "bitstream overrun");
+        if n == 0 {
+            return 0;
+        }
+        self.pos += n as usize;
+        // `have <= 63` always holds, so this branch implies n <= 63 and
+        // both shifts below stay in range.
+        if self.have >= n {
+            let out = self.acc >> (64 - n);
+            self.acc <<= n;
+            self.have -= n;
+            return out;
+        }
+        let hi_bits = self.have;
+        let hi = if hi_bits == 0 {
+            0
+        } else {
+            self.acc >> (64 - hi_bits)
+        };
+        let w = self.fetch();
+        let lo = n - hi_bits; // 1..=64; lo == 64 only when have == 0, n == 64
+        if lo == 64 {
+            self.acc = 0;
+            self.have = 0;
+            return w;
+        }
+        let out = (hi << lo) | (w >> (64 - lo));
+        self.acc = w << lo;
+        self.have = 64 - lo;
+        out
+    }
+
+    /// Read `out.len()` fields of uniform `width` bits each (`1..=64`) —
+    /// the unpack mirror of [`BitWriter::pack_lanes`]: fields stream out
+    /// of a 128-bit staging accumulator topped up one word at a time,
+    /// extracted MSB-first with one shift per field.  Bit-identical to
+    /// calling [`SegReader::read`] once per field.
+    pub fn unpack_lanes(&mut self, width: u32, out: &mut [u64]) {
+        debug_assert!((1..=64).contains(&width));
+        debug_assert!(
+            self.pos + out.len() * width as usize <= self.len,
+            "bitstream overrun"
+        );
+        // Staging layout mirrors pack_lanes: the top `have` bits of `acc`
+        // are the next bits of the stream.
+        let mut acc: u128 = (self.acc as u128) << 64;
+        let mut have = self.have;
+        for o in out.iter_mut() {
+            if have < width {
+                // have <= 63 here, so the place shift is in 1..=64
+                let w = self.fetch();
+                acc |= (w as u128) << (64 - have);
+                have += 64;
+            }
+            *o = (acc >> (128 - width)) as u64;
+            acc <<= width;
+            have -= width;
+        }
+        self.pos += out.len() * width as usize;
+        // have < 64 on exit (have_new = have_old [+ 64] - width), so the
+        // scalar accumulator invariant is restored.
+        self.acc = (acc >> 64) as u64;
+        self.have = have;
+    }
+
     /// Bits remaining.
     pub fn remaining(&self) -> usize {
         self.len - self.pos
@@ -486,5 +678,128 @@ mod tests {
         let mut r = SegReader::new(&[], 0);
         assert_eq!(r.remaining(), 0);
         assert_eq!(r.read(0), 0);
+    }
+
+    fn pseudo_word(i: u64) -> u64 {
+        i.wrapping_mul(0x9E3779B97F4A7C15).rotate_left((i % 63) as u32)
+    }
+
+    #[test]
+    fn push_word_matches_scalar_pushes() {
+        // Any width 1..=64 at any starting bit offset must splice exactly
+        // the bits two <=32-bit scalar pushes would.
+        for lead in [0u32, 1, 7, 31, 33, 57] {
+            for n in 1..=64u32 {
+                let v = pseudo_word(u64::from(lead * 67 + n)) & mask(n);
+                let mut scalar = BitWriter::new();
+                let mut word = BitWriter::new();
+                scalar.push(0, lead);
+                word.push(0, lead);
+                let hi = n.min(32);
+                scalar.push(v >> (n - hi), hi);
+                if n > hi {
+                    scalar.push(v & mask(n - hi), n - hi);
+                }
+                word.push_word(v, n);
+                assert_eq!(scalar.len_bits(), word.len_bits(), "lead {lead} n {n}");
+                assert_eq!(scalar.words(), word.words(), "lead {lead} n {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_lanes_matches_scalar_pushes() {
+        for width in 1..=64u32 {
+            for count in [1usize, 3, 8, 17, 64] {
+                let fields: Vec<u64> = (0..count as u64)
+                    .map(|i| pseudo_word(i + u64::from(width)) & mask(width))
+                    .collect();
+                for lead in [0u32, 5, 57] {
+                    let mut scalar = BitWriter::new();
+                    let mut word = BitWriter::new();
+                    scalar.push(0, lead);
+                    word.push(0, lead);
+                    for &f in &fields {
+                        let hi = width.min(32);
+                        scalar.push(f >> (width - hi), hi);
+                        if width > hi {
+                            scalar.push(f & mask(width - hi), width - hi);
+                        }
+                    }
+                    word.pack_lanes(&fields, width);
+                    assert_eq!(scalar.words(), word.words(), "w {width} c {count} l {lead}");
+                    assert_eq!(scalar.len_bits(), word.len_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn read_word_and_unpack_lanes_match_scalar_reads() {
+        // One stream, three readers: scalar read(), read_word(), and
+        // unpack_lanes() must all see the same fields — including across
+        // word-granular segment splits.
+        for width in 1..=64u32 {
+            let count = 37usize;
+            let fields: Vec<u64> = (0..count as u64)
+                .map(|i| pseudo_word(i * 3 + u64::from(width)) & mask(width))
+                .collect();
+            let mut w = BitWriter::new();
+            w.pack_lanes(&fields, width);
+            let (words, len) = w.into_words();
+            let mid = words.len() / 2;
+            let segs: Vec<&[u64]> = vec![&words[..mid], &words[mid..]];
+
+            let mut scalar = SegReader::new(&segs, len);
+            let mut word = SegReader::new(&segs, len);
+            let mut lanes = SegReader::new(&segs, len);
+            let mut got = vec![0u64; count];
+            lanes.unpack_lanes(width, &mut got);
+            for (i, &f) in fields.iter().enumerate() {
+                let hi = width.min(32);
+                let mut v = scalar.read(hi);
+                if width > hi {
+                    v = (v << (width - hi)) | scalar.read(width - hi);
+                }
+                assert_eq!(v, f, "scalar w {width} i {i}");
+                assert_eq!(word.read_word(width), f, "read_word w {width} i {i}");
+                assert_eq!(got[i], f, "unpack w {width} i {i}");
+            }
+            assert_eq!(word.remaining(), 0);
+            assert_eq!(lanes.remaining(), 0);
+        }
+    }
+
+    #[test]
+    fn word_and_scalar_calls_interleave_on_one_stream() {
+        // The staging accumulator must stay coherent when scalar and word
+        // calls alternate mid-stream on both sides.
+        let mut w = BitWriter::new();
+        w.push(0b101, 3);
+        w.push_word(0xDEAD_BEEF_CAFE_F00D, 64);
+        w.pack_lanes(&[1, 2, 3, 4, 5], 11);
+        w.push(0x3F, 6);
+        w.push_word(0x1FFFF, 17);
+        let (words, len) = w.into_words();
+        let mut r = SegReader::single(&words, len);
+        assert_eq!(r.read(3), 0b101);
+        assert_eq!(r.read_word(64), 0xDEAD_BEEF_CAFE_F00D);
+        let mut lanes = [0u64; 5];
+        r.unpack_lanes(11, &mut lanes);
+        assert_eq!(lanes, [1, 2, 3, 4, 5]);
+        assert_eq!(r.read(6), 0x3F);
+        assert_eq!(r.read_word(17), 0x1FFFF);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn zero_width_word_calls_are_noops() {
+        let mut w = BitWriter::new();
+        w.push_word(0, 0);
+        w.pack_lanes(&[], 7);
+        w.pack_lanes(&[1, 2, 3], 0);
+        assert_eq!(w.len_bits(), 0);
+        let mut r = SegReader::new(&[], 0);
+        assert_eq!(r.read_word(0), 0);
     }
 }

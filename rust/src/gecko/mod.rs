@@ -22,7 +22,7 @@
 
 pub mod bitstream;
 
-pub use bitstream::{BitReader, BitWriter, SegReader};
+pub use bitstream::{BitReader, BitWriter, Kernel, SegReader};
 
 use crate::formats::mag_width;
 
@@ -84,10 +84,22 @@ pub fn exponents(vals: &[f32]) -> Vec<u8> {
 /// Encode a stream of biased exponents.  Trailing partial groups are padded
 /// by repeating the last exponent (zero deltas), as the hardware pads the
 /// final burst; padding costs are charged to the stream.
+///
+/// Runs the process-wide [`Kernel::active`] implementation; both kernels
+/// emit bit-identical streams (see [`encode_kernel`]).
 pub fn encode(exps: &[u8], mode: Mode) -> Encoded {
-    match mode {
-        Mode::Delta => encode_delta(exps),
-        Mode::FixedBias { bias, group } => encode_fixed(exps, bias, group),
+    encode_kernel(exps, mode, Kernel::active())
+}
+
+/// [`encode`] with an explicit kernel — [`Kernel::Word`] is the
+/// word-parallel production path, [`Kernel::Scalar`] the per-value
+/// reference; differential tests drive both and assert identical streams.
+pub fn encode_kernel(exps: &[u8], mode: Mode, kernel: Kernel) -> Encoded {
+    match (mode, kernel) {
+        (Mode::Delta, Kernel::Word) => encode_delta_word(exps),
+        (Mode::Delta, Kernel::Scalar) => encode_delta(exps),
+        (Mode::FixedBias { bias, group }, Kernel::Word) => encode_fixed_word(exps, bias, group),
+        (Mode::FixedBias { bias, group }, Kernel::Scalar) => encode_fixed(exps, bias, group),
     }
 }
 
@@ -107,9 +119,26 @@ pub fn decode_readers(
     count: usize,
     mode: Mode,
 ) -> Vec<u8> {
-    match mode {
-        Mode::Delta => decode_delta(payload, metadata, count),
-        Mode::FixedBias { bias, group } => decode_fixed(payload, metadata, count, bias, group),
+    decode_readers_kernel(payload, metadata, count, mode, Kernel::active())
+}
+
+/// [`decode_readers`] with an explicit kernel (see [`encode_kernel`]).
+pub fn decode_readers_kernel(
+    payload: &mut SegReader,
+    metadata: &mut SegReader,
+    count: usize,
+    mode: Mode,
+    kernel: Kernel,
+) -> Vec<u8> {
+    match (mode, kernel) {
+        (Mode::Delta, Kernel::Word) => decode_delta_word(payload, metadata, count),
+        (Mode::Delta, Kernel::Scalar) => decode_delta(payload, metadata, count),
+        (Mode::FixedBias { bias, group }, Kernel::Word) => {
+            decode_fixed_word(payload, metadata, count, bias, group)
+        }
+        (Mode::FixedBias { bias, group }, Kernel::Scalar) => {
+            decode_fixed(payload, metadata, count, bias, group)
+        }
     }
 }
 
@@ -260,6 +289,203 @@ fn decode_fixed(
                 let d = if field >> w == 1 { -mag } else { mag };
                 out.push((bias as i32 + d) as u8);
             }
+        }
+    }
+    out.truncate(count);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Word-parallel kernels (Kernel::Word) — bit-identical to the scalar
+// reference above, but one whole row is spliced per BitWriter call.
+// ---------------------------------------------------------------------------
+
+/// Pack one 8×8 delta-mode group with row-granular word splices.
+///
+/// Bit-plane view of one row (width code `w <= 6`, field `f = w + 1`):
+///
+/// ```text
+///   lane:        0         1        ...       7
+///   field:   [s|mag]   [s|mag]      ...   [s|mag]     f bits each
+///   row word = l0 << 7f | l1 << 6f | ... | l7          (8f <= 56 bits)
+/// ```
+///
+/// The row word is assembled lane-major with shifts/ORs and spliced into
+/// the payload in ONE `push_word` instead of eight scalar pushes.  The
+/// raw-escape row is the degenerate `f = 8` case, where the row word is
+/// just the eight exponent bytes big-endian.  The shared row width comes
+/// from one leading-one detector over the OR of the eight magnitudes
+/// (`mag_width(m0 | .. | m7) == max(mag_width(m_i))`, monotone in the OR).
+fn encode_delta_group(g: &[u8; GROUP], payload: &mut BitWriter, metadata: &mut BitWriter) {
+    // Row 0: the 8 column bases, raw — already a big-endian byte word.
+    let bases: &[u8; ROWS] = g[..ROWS].try_into().expect("8 bases");
+    payload.push_word(u64::from_be_bytes(*bases), 64);
+    let mut meta_word = 0u64;
+    for r in 1..ROWS {
+        let row: &[u8; ROWS] = g[r * ROWS..(r + 1) * ROWS].try_into().expect("8-lane row");
+        let mut mags = [0u32; ROWS];
+        let mut neg = [false; ROWS];
+        let mut or = 0u32;
+        for c in 0..ROWS {
+            let d = row[c] as i32 - bases[c] as i32;
+            neg[c] = d < 0;
+            mags[c] = d.unsigned_abs();
+            or |= mags[c];
+        }
+        let w = mag_width(or);
+        if w <= 6 {
+            let f = w + 1;
+            let mut roww = 0u64;
+            for c in 0..ROWS {
+                roww = (roww << f) | ((neg[c] as u64) << w) | mags[c] as u64;
+            }
+            payload.push_word(roww, 8 * f);
+            meta_word = (meta_word << WIDTH_FIELD_BITS) | w as u64;
+        } else {
+            payload.push_word(u64::from_be_bytes(*row), 64);
+            meta_word = (meta_word << WIDTH_FIELD_BITS) | RAW_ESCAPE as u64;
+        }
+    }
+    // 7 row-width codes, 3 bits each, in one 21-bit splice (MSB-first, so
+    // row 1's code lands first — same stream as seven scalar pushes).
+    metadata.push_word(meta_word, (ROWS as u32 - 1) * WIDTH_FIELD_BITS);
+}
+
+fn encode_delta_word(exps: &[u8]) -> Encoded {
+    let mut payload = BitWriter::with_capacity(exps.len() * 6);
+    let mut metadata = BitWriter::with_capacity(exps.len() / ROWS * 3);
+    let mut it = exps.chunks_exact(GROUP);
+    for g in it.by_ref() {
+        encode_delta_group(g.try_into().expect("GROUP-sized chunk"), &mut payload, &mut metadata);
+    }
+    let rem = it.remainder();
+    if !rem.is_empty() {
+        // Pad the final group by repeating the last exponent — same stream
+        // as the scalar `padded` path, without copying the whole input.
+        let mut tail = [rem[rem.len() - 1]; GROUP];
+        tail[..rem.len()].copy_from_slice(rem);
+        encode_delta_group(&tail, &mut payload, &mut metadata);
+    }
+    let (pw, pb) = payload.into_words();
+    let (mw, mb) = metadata.into_words();
+    Encoded {
+        payload: pw,
+        payload_bits: pb,
+        metadata: mw,
+        metadata_bits: mb,
+        count: exps.len(),
+    }
+}
+
+fn decode_delta_word(payload: &mut SegReader, metadata: &mut SegReader, count: usize) -> Vec<u8> {
+    let padded_len = count.div_ceil(GROUP) * GROUP;
+    let mut out = Vec::with_capacity(padded_len);
+    for _ in 0..padded_len / GROUP {
+        let bases = payload.read_word(64).to_be_bytes();
+        out.extend_from_slice(&bases);
+        // All 7 row-width codes in one 21-bit read; codes peel MSB-first.
+        let codes = metadata.read_word((ROWS as u32 - 1) * WIDTH_FIELD_BITS);
+        for r in 1..ROWS {
+            let w = ((codes >> ((ROWS - 1 - r) as u32 * WIDTH_FIELD_BITS)) & 0x7) as u32;
+            if w == RAW_ESCAPE {
+                out.extend_from_slice(&payload.read_word(64).to_be_bytes());
+            } else {
+                let f = w + 1;
+                let roww = payload.read_word(8 * f);
+                // lane c sits at bit offset (7 - c)·f — peel MSB-first
+                for c in 0..ROWS {
+                    let field = (roww >> ((ROWS - 1 - c) as u32 * f)) & ((1u64 << f) - 1);
+                    let mag = (field & ((1 << w) - 1)) as i32;
+                    let d = if field >> w == 1 { -mag } else { mag };
+                    out.push((bases[c] as i32 + d) as u8);
+                }
+            }
+        }
+    }
+    out.truncate(count);
+    out
+}
+
+/// Fixed-bias groups have runtime-sized groups (typically 8), so fields
+/// route through the general [`BitWriter::pack_lanes`] staging path
+/// instead of a single-word splice.
+fn encode_fixed_group(
+    g: &[u8],
+    bias: u8,
+    payload: &mut BitWriter,
+    metadata: &mut BitWriter,
+    fields: &mut Vec<u64>,
+) {
+    let b = bias as i32;
+    let mut or = 0u32;
+    for &e in g {
+        or |= (e as i32 - b).unsigned_abs();
+    }
+    let w = mag_width(or);
+    fields.clear();
+    if w <= 6 {
+        metadata.push(w as u64, WIDTH_FIELD_BITS);
+        fields.extend(g.iter().map(|&e| {
+            let d = e as i32 - b;
+            (((d < 0) as u64) << w) | d.unsigned_abs() as u64
+        }));
+        payload.pack_lanes(fields, w + 1);
+    } else {
+        metadata.push(RAW_ESCAPE as u64, WIDTH_FIELD_BITS);
+        fields.extend(g.iter().map(|&e| e as u64));
+        payload.pack_lanes(fields, 8);
+    }
+}
+
+fn encode_fixed_word(exps: &[u8], bias: u8, group: usize) -> Encoded {
+    assert!(group > 0);
+    let mut payload = BitWriter::with_capacity(exps.len() * 6);
+    let mut metadata = BitWriter::with_capacity(exps.len() / group * 3);
+    let mut fields: Vec<u64> = Vec::with_capacity(group);
+    let mut it = exps.chunks_exact(group);
+    for g in it.by_ref() {
+        encode_fixed_group(g, bias, &mut payload, &mut metadata, &mut fields);
+    }
+    let rem = it.remainder();
+    if !rem.is_empty() {
+        let mut tail = vec![rem[rem.len() - 1]; group];
+        tail[..rem.len()].copy_from_slice(rem);
+        encode_fixed_group(&tail, bias, &mut payload, &mut metadata, &mut fields);
+    }
+    let (pw, pb) = payload.into_words();
+    let (mw, mb) = metadata.into_words();
+    Encoded {
+        payload: pw,
+        payload_bits: pb,
+        metadata: mw,
+        metadata_bits: mb,
+        count: exps.len(),
+    }
+}
+
+fn decode_fixed_word(
+    payload: &mut SegReader,
+    metadata: &mut SegReader,
+    count: usize,
+    bias: u8,
+    group: usize,
+) -> Vec<u8> {
+    let padded_len = count.div_ceil(group) * group;
+    let mut out = Vec::with_capacity(padded_len);
+    let mut fields = vec![0u64; group];
+    let b = bias as i32;
+    for _ in 0..padded_len / group {
+        let w = metadata.read(WIDTH_FIELD_BITS) as u32;
+        if w == RAW_ESCAPE {
+            payload.unpack_lanes(8, &mut fields);
+            out.extend(fields.iter().map(|&f| f as u8));
+        } else {
+            payload.unpack_lanes(w + 1, &mut fields);
+            out.extend(fields.iter().map(|&field| {
+                let mag = (field & ((1 << w) - 1)) as i32;
+                let d = if field >> w == 1 { -mag } else { mag };
+                (b + d) as u8
+            }));
         }
     }
     out.truncate(count);
@@ -450,6 +676,62 @@ mod tests {
             assert_eq!(cat.payload, one.payload, "chunk {chunk}");
             assert_eq!(cat.metadata, one.metadata, "chunk {chunk}");
             assert_eq!(decode(&cat, Mode::Delta), e);
+        }
+    }
+
+    /// Word and scalar kernels must emit bit-identical streams — word for
+    /// word, length for length — so content hashes and cache fingerprints
+    /// are kernel-independent.  Covers tight clusters (narrow widths),
+    /// mixed extreme exponents (raw escapes), zeros, and ragged tails.
+    #[test]
+    fn word_kernel_streams_bit_identical_to_scalar() {
+        let mut streams: Vec<Vec<u8>> = Vec::new();
+        for (len, seed, scale) in [(64, 1, 1.0), (1000, 2, 10.0), (137, 3, 2.0), (7, 4, 0.5)] {
+            streams.push(exps_from(&pseudo_vals(len, seed, scale)));
+        }
+        let mut extreme = pseudo_vals(100, 5, 1e30);
+        extreme.extend(pseudo_vals(100, 6, 1e-30));
+        extreme[17] = 0.0;
+        streams.push(exps_from(&extreme));
+        streams.push(vec![127u8; 64]);
+        streams.push(Vec::new());
+
+        for e in &streams {
+            for mode in [
+                Mode::Delta,
+                Mode::FixedBias { bias: 127, group: 8 },
+                Mode::FixedBias { bias: 100, group: 5 },
+            ] {
+                let w = encode_kernel(e, mode, Kernel::Word);
+                let s = encode_kernel(e, mode, Kernel::Scalar);
+                assert_eq!(w.payload, s.payload, "{mode:?} len {}", e.len());
+                assert_eq!(w.payload_bits, s.payload_bits, "{mode:?}");
+                assert_eq!(w.metadata, s.metadata, "{mode:?}");
+                assert_eq!(w.metadata_bits, s.metadata_bits, "{mode:?}");
+                // and both kernels decode either stream back to the input
+                for kernel in [Kernel::Word, Kernel::Scalar] {
+                    let mut p = SegReader::single(&w.payload, w.payload_bits);
+                    let mut m = SegReader::single(&w.metadata, w.metadata_bits);
+                    let got = decode_readers_kernel(&mut p, &mut m, w.count, mode, kernel);
+                    assert_eq!(&got, e, "{mode:?} decode {kernel:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn word_kernel_decodes_across_segment_splits() {
+        // Restore reads payload/metadata from arena chunk segments; the
+        // word kernel's bulk reads must stitch across word boundaries.
+        let e = exps_from(&pseudo_vals(64 * 4 + 19, 31, 8.0));
+        let enc = encode_kernel(&e, Mode::Delta, Kernel::Scalar);
+        for cut in [1, 2, 3] {
+            let k = enc.payload.len() * cut / 4;
+            let (a, b) = enc.payload.split_at(k);
+            let mut p = SegReader::new(&[a, b], enc.payload_bits);
+            let mut m = SegReader::single(&enc.metadata, enc.metadata_bits);
+            let got = decode_readers_kernel(&mut p, &mut m, enc.count, Mode::Delta, Kernel::Word);
+            assert_eq!(got, e, "cut {cut}");
         }
     }
 

@@ -26,6 +26,19 @@
 //! policy over the trace models to reproduce the paper's QM+QE / BitWave /
 //! +Gecko footprint ordering.
 //!
+//! The codec hot paths are *word-parallel*: bit-plane transposed
+//! pack/unpack kernels ([`gecko::bitstream`]) stage a whole 8-lane row
+//! (or a uniform-width lane group) in one `u64`/`u128` and splice it
+//! with a single `push_word`/`read_word` call, for all four stash
+//! codecs.  The original per-field scalar pipeline is kept as the
+//! differential reference behind the same `Kernel` dispatch
+//! (`SFP_CODEC_KERNELS=scalar`); both kernels produce bit-identical
+//! streams, so content hashes and lab cache fingerprints never depend
+//! on the kernel — proven by property tests (`tests/codec_kernels.rs`)
+//! and a CI job that replays a scalar-populated cache under the word
+//! kernels.  `EXPERIMENTS.md §Perf` logs the iteration history and the
+//! measured GB/s.
+//!
 //! The stash layer ([`stash`]) is the memory path the paper's claims hinge
 //! on: tensors are encoded by a bounded worker pool into a *tiered*
 //! chunk-recycling arena (a DRAM tier plus a budget-driven file-backed

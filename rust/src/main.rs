@@ -1079,8 +1079,50 @@ fn print_health(dir: &Path, run: &RunData) {
         .filter(|e| e.kind == "stash_pressure")
         .count();
     oinfo!("  events: {bits} bitlength changes, {pressure} stash-pressure episodes");
-    if run.metrics.is_none() {
-        oinfo!("  (no metrics.json in this run directory)");
+    match &run.metrics {
+        Some(metrics) => print_codec_throughput(metrics),
+        None => oinfo!("  (no metrics.json in this run directory)"),
+    }
+}
+
+/// Derive per-codec encode/decode GB/s from the metrics snapshot (byte
+/// counters over latency-histogram `sum_us`) and summarize run-granular
+/// spill syscall coalescing; silent when the run stashed nothing.
+fn print_codec_throughput(metrics: &Json) {
+    let num = |key: &str| metrics.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+    let mut rows = Vec::new();
+    for codec in obs::metrics::CODEC_LABELS {
+        let gbps = |bytes_key: &str, us_key: &str| -> Option<f64> {
+            let bytes = metrics.get(bytes_key)?.get(codec)?.as_f64()?;
+            let us = metrics.get(us_key)?.get(codec)?.get("sum_us")?.as_f64()?;
+            if bytes > 0.0 && us > 0.0 {
+                Some(bytes / 1e3 / us)
+            } else {
+                None
+            }
+        };
+        let enc = gbps("stash_encode_bytes_total", "stash_encode_us");
+        let dec = gbps("stash_decode_bytes_total", "stash_decode_us");
+        if enc.is_some() || dec.is_some() {
+            let fmt = |v: Option<f64>| match v {
+                Some(g) => format!("{g:.2} GB/s"),
+                None => "-".to_string(),
+            };
+            rows.push(format!("{codec} enc {} dec {}", fmt(enc), fmt(dec)));
+        }
+    }
+    if !rows.is_empty() {
+        oinfo!("  codec throughput: {}", rows.join(", "));
+    }
+    let chunks = num("stash_spill_chunks_read_total") + num("stash_spill_chunks_written_total");
+    if chunks > 0.0 {
+        let calls = num("stash_spill_pread_calls_total") + num("stash_spill_pwrite_calls_total");
+        oinfo!(
+            "  spill I/O: {:.0} chunks in {:.0} syscalls ({:.1} chunks/call, run-granular)",
+            chunks,
+            calls,
+            chunks / calls.max(1.0),
+        );
     }
 }
 

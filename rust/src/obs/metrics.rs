@@ -217,14 +217,27 @@ pub static STASH_QUEUE_PEAK: Counter = Counter::new();
 pub static STASH_SUBMIT_WAIT_US: Histogram = Histogram::new();
 /// Arena pin calls blocked on a chunk being faulted in by another thread.
 pub static PIN_WAIT_US: Histogram = Histogram::new();
-/// Demand faults: spill-file read latency per faulted chunk.
+/// Demand faults: spill-file read latency per faulted batch.
 pub static FAULT_US: Histogram = Histogram::new();
 /// Eviction batches: spill-file write latency per planned batch.
 pub static EVICT_US: Histogram = Histogram::new();
+/// Spill-tier pread syscalls (run-granular: adjacent chunks share one).
+pub static SPILL_PREAD_CALLS: Counter = Counter::new();
+/// Spill-tier pwrite syscalls (run-granular: adjacent chunks share one).
+pub static SPILL_PWRITE_CALLS: Counter = Counter::new();
+/// Chunks faulted spill → DRAM across all arenas.
+pub static SPILL_CHUNKS_READ: Counter = Counter::new();
+/// Chunks evicted DRAM → spill across all arenas.
+pub static SPILL_CHUNKS_WRITTEN: Counter = Counter::new();
 
 // --- codecs ---
 pub static ENCODE_US: [Histogram; 4] = [const { Histogram::new() }; 4];
 pub static DECODE_US: [Histogram; 4] = [const { Histogram::new() }; 4];
+/// f32 payload bytes handed to each codec's encode path (input side —
+/// with the matching `_US` histogram's `sum_us` this yields GB/s).
+pub static ENCODE_BYTES: [Counter; 4] = [const { Counter::new() }; 4];
+/// f32 payload bytes produced by each codec's decode path.
+pub static DECODE_BYTES: [Counter; 4] = [const { Counter::new() }; 4];
 
 // --- restore tiers (global aggregate; the per-stash ledger keeps its own) ---
 /// Restore (pin+decode) latency when every chunk was DRAM-resident.
@@ -236,6 +249,14 @@ fn per_codec_json(hists: &[Histogram; 4]) -> Json {
     let mut m = BTreeMap::new();
     for (h, label) in hists.iter().zip(CODEC_LABELS) {
         m.insert(label.to_string(), h.summary().to_json());
+    }
+    Json::Obj(m)
+}
+
+fn per_codec_bytes(counters: &[Counter; 4]) -> Json {
+    let mut m = BTreeMap::new();
+    for (c, label) in counters.iter().zip(CODEC_LABELS) {
+        m.insert(label.to_string(), Json::Num(c.get() as f64));
     }
     Json::Obj(m)
 }
@@ -271,8 +292,32 @@ pub fn snapshot() -> Json {
     m.insert("stash_pin_wait_us".to_string(), PIN_WAIT_US.summary().to_json());
     m.insert("stash_fault_us".to_string(), FAULT_US.summary().to_json());
     m.insert("stash_evict_us".to_string(), EVICT_US.summary().to_json());
+    m.insert(
+        "stash_spill_pread_calls_total".to_string(),
+        num(SPILL_PREAD_CALLS.get()),
+    );
+    m.insert(
+        "stash_spill_pwrite_calls_total".to_string(),
+        num(SPILL_PWRITE_CALLS.get()),
+    );
+    m.insert(
+        "stash_spill_chunks_read_total".to_string(),
+        num(SPILL_CHUNKS_READ.get()),
+    );
+    m.insert(
+        "stash_spill_chunks_written_total".to_string(),
+        num(SPILL_CHUNKS_WRITTEN.get()),
+    );
     m.insert("stash_encode_us".to_string(), per_codec_json(&ENCODE_US));
     m.insert("stash_decode_us".to_string(), per_codec_json(&DECODE_US));
+    m.insert(
+        "stash_encode_bytes_total".to_string(),
+        per_codec_bytes(&ENCODE_BYTES),
+    );
+    m.insert(
+        "stash_decode_bytes_total".to_string(),
+        per_codec_bytes(&DECODE_BYTES),
+    );
     m.insert(
         "stash_restore_dram_us".to_string(),
         RESTORE_DRAM_US.summary().to_json(),

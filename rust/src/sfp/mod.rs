@@ -25,7 +25,7 @@
 //! truncated (property-tested in `rust/tests/props.rs`).
 
 use crate::formats::{mag_width, Container, F32_MANT_BITS};
-use crate::gecko::{BitWriter, SegReader, RAW_ESCAPE, WIDTH_FIELD_BITS};
+use crate::gecko::{BitWriter, Kernel, SegReader, RAW_ESCAPE, WIDTH_FIELD_BITS};
 
 /// Values per hardware row (= packer lanes).
 pub const LANES: usize = 8;
@@ -96,7 +96,24 @@ impl SfpCodec {
     ///
     /// Values are expected in stream order; the trailing partial group is
     /// padded with the last value, as the hardware pads the final burst.
+    /// Runs the process-wide [`Kernel::active`] implementation; both
+    /// kernels emit bit-identical streams.
     pub fn compress(&self, vals: &[f32], n: u32) -> Compressed {
+        self.compress_kernel(vals, n, Kernel::active())
+    }
+
+    /// [`SfpCodec::compress`] with an explicit kernel — [`Kernel::Word`]
+    /// packs each 8-lane row with one [`BitWriter::pack_lanes`] call,
+    /// [`Kernel::Scalar`] is the per-value reference; differential tests
+    /// drive both and assert identical streams.
+    pub fn compress_kernel(&self, vals: &[f32], n: u32, kernel: Kernel) -> Compressed {
+        match kernel {
+            Kernel::Word => self.compress_word(vals, n),
+            Kernel::Scalar => self.compress_scalar(vals, n),
+        }
+    }
+
+    fn compress_scalar(&self, vals: &[f32], n: u32) -> Compressed {
         let n = n.min(self.container.mant_bits());
         let sign_bits: u32 = if self.elide_sign { 0 } else { 1 };
         let mut payload = BitWriter::with_capacity(vals.len() * (n as usize + 8));
@@ -231,6 +248,151 @@ impl SfpCodec {
         }
     }
 
+    /// Word-parallel compress: one [`BitWriter::pack_lanes`] splice per
+    /// 8-lane row instead of eight scalar pushes.  Every lane of a row
+    /// shares one width (`sign + exp_field + n`), which is exactly the
+    /// property the hardware's tandem packers exploit — and what makes the
+    /// row a uniform bit-plane the staging accumulator can stream.
+    fn compress_word(&self, vals: &[f32], n: u32) -> Compressed {
+        let n = n.min(self.container.mant_bits());
+        if vals.is_empty() {
+            return Compressed {
+                payload: Vec::new(),
+                payload_bits: 0,
+                metadata: Vec::new(),
+                metadata_bits: 0,
+                count: 0,
+                mant_bits: n,
+                cycles: 0,
+            };
+        }
+        let mut payload = BitWriter::with_capacity(vals.len() * (n as usize + 8));
+        let mut metadata = BitWriter::with_capacity(vals.len() / ROWS * 3);
+
+        let mut it = vals.chunks_exact(GROUP);
+        for g in it.by_ref() {
+            let g: &[f32; GROUP] = g.try_into().expect("GROUP-sized chunk");
+            self.compress_group_word(g, n, &mut payload, &mut metadata);
+        }
+        let rem = it.remainder();
+        if !rem.is_empty() {
+            // Pad the final group with the last value — same stream as the
+            // scalar path, without copying the whole input.
+            let mut tail = [*vals.last().unwrap(); GROUP];
+            tail[..rem.len()].copy_from_slice(rem);
+            self.compress_group_word(&tail, n, &mut payload, &mut metadata);
+        }
+
+        let padded_len = vals.len().div_ceil(GROUP) * GROUP;
+        let (pw, pb) = payload.into_words();
+        let (mw, mb) = metadata.into_words();
+        let cycles = self.cycles_for(padded_len, pb + mb);
+        Compressed {
+            payload: pw,
+            payload_bits: pb,
+            metadata: mw,
+            metadata_bits: mb,
+            count: vals.len(),
+            mant_bits: n,
+            cycles,
+        }
+    }
+
+    /// Pack one 8×8 group row-by-row.  Per row: derive the shared exponent
+    /// width from the OR of the eight delta magnitudes (one leading-one
+    /// detector instead of eight), assemble the eight fused
+    /// `[sign | exp-field | mantissa]` lane words, splice them in one
+    /// `pack_lanes` call.
+    fn compress_group_word(
+        &self,
+        g: &[f32; GROUP],
+        n: u32,
+        payload: &mut BitWriter,
+        metadata: &mut BitWriter,
+    ) {
+        let sign_bits = u32::from(!self.elide_sign);
+        let mut fields = [0u64; LANES];
+        if let Some(bias) = self.bias {
+            // Bias-register layout: every row deltas against the learned
+            // register at a shared per-row width.
+            for r in 0..ROWS {
+                let row = &g[r * LANES..(r + 1) * LANES];
+                let mut bits = [0u32; LANES];
+                let mut exps = [0i32; LANES];
+                let mut or = 0u32;
+                for c in 0..LANES {
+                    bits[c] = row[c].to_bits();
+                    exps[c] = ((bits[c] >> 23) & 0xFF) as i32;
+                    or |= (exps[c] - bias as i32).unsigned_abs();
+                }
+                let w = mag_width(or);
+                let (code, raw) = if w <= 6 { (w, false) } else { (RAW_ESCAPE, true) };
+                metadata.push(code as u64, WIDTH_FIELD_BITS + 1);
+                let exp_bits = if raw { 8 } else { w + 1 };
+                for c in 0..LANES {
+                    let mant = self.top_mantissa(bits[c], n) as u64;
+                    let exp_field = if raw {
+                        exps[c] as u64
+                    } else {
+                        let d = exps[c] - bias as i32;
+                        (((d < 0) as u64) << w) | d.unsigned_abs() as u64
+                    };
+                    let mut f = (exp_field << n) | mant;
+                    if !self.elide_sign {
+                        f |= ((bits[c] >> 31) as u64) << (exp_bits + n);
+                    }
+                    fields[c] = f;
+                }
+                payload.pack_lanes(&fields, sign_bits + exp_bits + n);
+            }
+            return;
+        }
+        // §V base layout: row 0 carries raw column bases.
+        let mut bases = [0u32; LANES];
+        for c in 0..LANES {
+            let b = g[c].to_bits();
+            bases[c] = (b >> 23) & 0xFF;
+            let mant = self.top_mantissa(b, n) as u64;
+            let mut f = ((bases[c] as u64) << n) | mant;
+            if !self.elide_sign {
+                f |= ((b >> 31) as u64) << (8 + n);
+            }
+            fields[c] = f;
+        }
+        payload.pack_lanes(&fields, sign_bits + 8 + n);
+        metadata.push(8, WIDTH_FIELD_BITS + 1); // row-0 marker (see scalar path)
+        for r in 1..ROWS {
+            let row = &g[r * LANES..(r + 1) * LANES];
+            let mut bits = [0u32; LANES];
+            let mut exps = [0i32; LANES];
+            let mut or = 0u32;
+            for c in 0..LANES {
+                bits[c] = row[c].to_bits();
+                exps[c] = ((bits[c] >> 23) & 0xFF) as i32;
+                or |= (exps[c] - bases[c] as i32).unsigned_abs();
+            }
+            let w = mag_width(or);
+            let (code, raw) = if w <= 6 { (w, false) } else { (RAW_ESCAPE, true) };
+            metadata.push(code as u64, WIDTH_FIELD_BITS + 1);
+            let exp_bits = if raw { 8 } else { w + 1 };
+            for c in 0..LANES {
+                let mant = self.top_mantissa(bits[c], n) as u64;
+                let exp_field = if raw {
+                    exps[c] as u64
+                } else {
+                    let d = exps[c] - bases[c] as i32;
+                    (((d < 0) as u64) << w) | d.unsigned_abs() as u64
+                };
+                let mut f = (exp_field << n) | mant;
+                if !self.elide_sign {
+                    f |= ((bits[c] >> 31) as u64) << (exp_bits + n);
+                }
+                fields[c] = f;
+            }
+            payload.pack_lanes(&fields, sign_bits + exp_bits + n);
+        }
+    }
+
     /// Decompress back into container-format values (trimmed mantissa bits
     /// return as zeros, signs return as + when elided).
     pub fn decompress(&self, c: &Compressed) -> Vec<f32> {
@@ -243,6 +405,32 @@ impl SfpCodec {
     /// readers — the zero-copy restore path (the readers may span arena
     /// chunk segments).
     pub fn decompress_readers(
+        &self,
+        payload: &mut SegReader,
+        metadata: &mut SegReader,
+        count: usize,
+        n: u32,
+    ) -> Vec<f32> {
+        self.decompress_readers_kernel(payload, metadata, count, n, Kernel::active())
+    }
+
+    /// [`SfpCodec::decompress_readers`] with an explicit kernel (see
+    /// [`SfpCodec::compress_kernel`]).
+    pub fn decompress_readers_kernel(
+        &self,
+        payload: &mut SegReader,
+        metadata: &mut SegReader,
+        count: usize,
+        n: u32,
+        kernel: Kernel,
+    ) -> Vec<f32> {
+        match kernel {
+            Kernel::Word => self.decompress_readers_word(payload, metadata, count, n),
+            Kernel::Scalar => self.decompress_readers_scalar(payload, metadata, count, n),
+        }
+    }
+
+    fn decompress_readers_scalar(
         &self,
         payload: &mut SegReader,
         metadata: &mut SegReader,
@@ -309,6 +497,84 @@ impl SfpCodec {
                         let mag = (exp_field & ((1 << code) - 1)) as i32;
                         let d = if exp_field >> code == 1 { -mag } else { mag };
                         (*base as i32 + d) as u32
+                    };
+                    let m = word as u32 & mant_mask(n);
+                    out.push(self.assemble(sign, e, m, n));
+                }
+            }
+        }
+        out.truncate(count);
+        out
+    }
+
+    /// Word-parallel decompress: one [`SegReader::unpack_lanes`] call per
+    /// 8-lane row, then lane fields split with shifts/masks — the mirror
+    /// of [`SfpCodec::compress_group_word`].
+    fn decompress_readers_word(
+        &self,
+        payload: &mut SegReader,
+        metadata: &mut SegReader,
+        count: usize,
+        n: u32,
+    ) -> Vec<f32> {
+        let padded_len = count.div_ceil(GROUP) * GROUP;
+        let mut out = Vec::with_capacity(padded_len);
+        let sign_bits = u32::from(!self.elide_sign);
+        let mut fields = [0u64; LANES];
+        for _ in 0..padded_len / GROUP {
+            if let Some(bias) = self.bias {
+                for _ in 0..ROWS {
+                    let code = metadata.read(WIDTH_FIELD_BITS + 1) as u32;
+                    let exp_bits = if code == RAW_ESCAPE { 8 } else { code + 1 };
+                    payload.unpack_lanes(sign_bits + exp_bits + n, &mut fields);
+                    for &word in &fields {
+                        let sign = if self.elide_sign {
+                            0
+                        } else {
+                            (word >> (exp_bits + n)) as u32 & 1
+                        };
+                        let exp_field = (word >> n) & ((1u64 << exp_bits) - 1);
+                        let e = if code == RAW_ESCAPE {
+                            exp_field as u32
+                        } else {
+                            let mag = (exp_field & ((1 << code) - 1)) as i32;
+                            let d = if exp_field >> code == 1 { -mag } else { mag };
+                            (bias as i32 + d) as u32
+                        };
+                        let m = word as u32 & mant_mask(n);
+                        out.push(self.assemble(sign, e, m, n));
+                    }
+                }
+                continue;
+            }
+            let marker = metadata.read(WIDTH_FIELD_BITS + 1) as u32;
+            debug_assert_eq!(marker, 8);
+            let mut bases = [0u32; LANES];
+            payload.unpack_lanes(sign_bits + 8 + n, &mut fields);
+            for (c, &word) in fields.iter().enumerate() {
+                let sign = if self.elide_sign { 0 } else { (word >> (8 + n)) as u32 & 1 };
+                let e = (word >> n) as u32 & 0xFF;
+                bases[c] = e;
+                let m = word as u32 & mant_mask(n);
+                out.push(self.assemble(sign, e, m, n));
+            }
+            for _ in 1..ROWS {
+                let code = metadata.read(WIDTH_FIELD_BITS + 1) as u32;
+                let exp_bits = if code == RAW_ESCAPE { 8 } else { code + 1 };
+                payload.unpack_lanes(sign_bits + exp_bits + n, &mut fields);
+                for (c, &word) in fields.iter().enumerate() {
+                    let sign = if self.elide_sign {
+                        0
+                    } else {
+                        (word >> (exp_bits + n)) as u32 & 1
+                    };
+                    let exp_field = (word >> n) & ((1u64 << exp_bits) - 1);
+                    let e = if code == RAW_ESCAPE {
+                        exp_field as u32
+                    } else {
+                        let mag = (exp_field & ((1 << code) - 1)) as i32;
+                        let d = if exp_field >> code == 1 { -mag } else { mag };
+                        (bases[c] as i32 + d) as u32
                     };
                     let m = word as u32 & mant_mask(n);
                     out.push(self.assemble(sign, e, m, n));
@@ -568,6 +834,72 @@ mod tests {
             .decompress(&biased);
         for (&v, &b) in vals.iter().zip(&back) {
             assert_eq!(truncate_mantissa(v, 3).to_bits(), b.to_bits());
+        }
+    }
+
+    /// Word and scalar kernels must emit bit-identical streams across both
+    /// exponent layouts, sign elision, mantissa extremes (0 and 1 bits, and
+    /// the full container), ragged tails, and raw-escape exponent mixes.
+    #[test]
+    fn word_kernel_streams_bit_identical_to_scalar() {
+        let mut streams: Vec<Vec<f32>> = vec![
+            pseudo_vals(1000, 41, 5.0),
+            pseudo_vals(64, 42, 1.0),
+            pseudo_vals(137, 43, 2.0),
+            pseudo_vals(7, 44, 0.5),
+            vec![0.0; 64],
+        ];
+        let mut extreme = pseudo_vals(100, 45, 1e30);
+        extreme.extend(pseudo_vals(100, 46, 1e-30));
+        extreme[9] = 0.0;
+        streams.push(extreme);
+        streams.push(Vec::new());
+
+        for vals in &streams {
+            for container in [Container::Fp32, Container::Bf16] {
+                for n in [0u32, 1, 7, 23] {
+                    for elide in [false, true] {
+                        for bias in [None, Some(127u8), Some(3)] {
+                            let vals: Vec<f32> = if elide {
+                                vals.iter().map(|v| v.abs()).collect()
+                            } else {
+                                vals.clone()
+                            };
+                            let codec = SfpCodec::new(container, elide).with_bias(bias);
+                            let w = codec.compress_kernel(&vals, n, Kernel::Word);
+                            let s = codec.compress_kernel(&vals, n, Kernel::Scalar);
+                            let ctx = format!(
+                                "{container:?} n={n} elide={elide} bias={bias:?} len={}",
+                                vals.len()
+                            );
+                            assert_eq!(w.payload, s.payload, "{ctx}");
+                            assert_eq!(w.payload_bits, s.payload_bits, "{ctx}");
+                            assert_eq!(w.metadata, s.metadata, "{ctx}");
+                            assert_eq!(w.metadata_bits, s.metadata_bits, "{ctx}");
+                            assert_eq!(w.cycles, s.cycles, "{ctx}");
+                            for kernel in [Kernel::Word, Kernel::Scalar] {
+                                let mut p = SegReader::single(&w.payload, w.payload_bits);
+                                let mut m = SegReader::single(&w.metadata, w.metadata_bits);
+                                let back = codec.decompress_readers_kernel(
+                                    &mut p,
+                                    &mut m,
+                                    w.count,
+                                    w.mant_bits,
+                                    kernel,
+                                );
+                                let n_eff = n.min(container.mant_bits());
+                                for (i, (&v, &b)) in vals.iter().zip(&back).enumerate() {
+                                    assert_eq!(
+                                        truncate_mantissa(v, n_eff).to_bits(),
+                                        b.to_bits(),
+                                        "{ctx} {kernel:?} i={i}"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
         }
     }
 

@@ -24,6 +24,16 @@
 //! file copy written outside the lock is always bit-identical to the
 //! buffer a concurrent reader may still be pinning.
 //!
+//! Spill I/O is also *run-granular*: eviction batches receive ascending
+//! file slots and chunks occupying adjacent slots are staged into one
+//! buffer and written with a single pwrite; faulting a pinned stream
+//! claims every spilled chunk in one locked pass and reads each
+//! adjacent-slot run back with a single pread.  Multi-chunk streams —
+//! the normal case for activation stashes — thus pay one syscall per
+//! *run*, not one per 32 KiB chunk; the per-arena
+//! [`ChunkArena::spill_pread_calls`] / [`ChunkArena::spill_pwrite_calls`]
+//! counters (and the matching `obs::metrics` globals) expose the ratio.
+//!
 //! Reads are zero-copy: [`ChunkArena::pin`] hands back `Arc` references to
 //! the chunk buffers themselves (a [`PinnedStream`]), which a
 //! [`SegReader`](crate::gecko::SegReader) decodes in place.  A pinned
@@ -136,6 +146,10 @@ struct Slabs {
     stamp: u64,
     evictions: u64,
     faults: u64,
+    /// Spill-tier syscalls issued (run-granular batching: adjacent chunk
+    /// slots coalesce, so these run well below `evictions`/`faults`).
+    pread_calls: u64,
+    pwrite_calls: u64,
 }
 
 /// One planned eviction, carried out of the lock: the pwrite happens on
@@ -258,58 +272,103 @@ impl ChunkArena {
     }
 
     /// Pin a stored stream for zero-copy decoding: spilled chunks fault
-    /// back to DRAM (the pread runs with the arena unlocked), resident
-    /// chunks are `Arc`-shared in place.  A chunk another thread is
-    /// already faulting is waited on per-chunk, not per-arena.
+    /// back to DRAM (the preads run with the arena unlocked), resident
+    /// chunks are `Arc`-shared in place.  Faulting is *run-granular*:
+    /// every spilled chunk of the stream is claimed in one pass under the
+    /// lock, then chunks occupying adjacent spill-file slots come back in
+    /// a single coalesced pread per run instead of one syscall per chunk.
+    /// A chunk another thread is already faulting is waited on per-chunk,
+    /// not per-arena.
     pub fn pin(&self, seq: &ChunkSeq) -> PinnedStream {
         let mut inner = self.inner.lock().unwrap();
         inner.stamp += 1;
         let stamp = inner.stamp;
-        let mut chunks = Vec::with_capacity(seq.slots.len());
+        let mut chunks: Vec<Option<Arc<[u64]>>> = vec![None; seq.slots.len()];
         let mut faulted = false;
         let mut wait_us = 0u64;
-        for &id in &seq.slots {
-            let idx = id as usize;
-            let buf = loop {
+        loop {
+            // Pass 1 (locked): resolve resident chunks in place and claim
+            // every spilled-idle chunk for this thread's batched fault.
+            let mut to_fault: Vec<(usize, u32, u32)> = Vec::new(); // (pos, id, fslot)
+            let mut must_wait = false;
+            for (pos, &id) in seq.slots.iter().enumerate() {
+                if chunks[pos].is_some() {
+                    continue;
+                }
+                let idx = id as usize;
                 inner.slots[idx].stamp = stamp;
                 if let Some(b) = inner.slots[idx].buf.clone() {
                     // Resident (possibly mid-eviction-write, which keeps
                     // the buffer valid until it completes): share in place.
-                    break b;
+                    chunks[pos] = Some(b);
+                    continue;
                 }
                 if inner.slots[idx].io == IoState::Reading {
-                    // Another pin is faulting this exact chunk: wait for
-                    // *it*, re-checking this slot only — stores and pins
-                    // of other chunks proceed under the lock we release.
+                    // Another pin is faulting this exact chunk: it resolves
+                    // on a later pass, after that thread installs the buffer.
                     faulted = true;
-                    let t0 = std::time::Instant::now();
-                    inner = self.cv.wait(inner).unwrap();
-                    wait_us += t0.elapsed().as_micros() as u64;
+                    must_wait = true;
                     continue;
                 }
                 debug_assert_eq!(inner.slots[idx].io, IoState::Idle);
-                // Spilled and idle: fault it in ourselves, lock dropped
-                // around the pread.
                 inner.slots[idx].io = IoState::Reading;
                 let fslot = inner.slots[idx]
                     .file_slot
                     .take()
                     .expect("chunk neither resident nor spilled");
-                let file = Arc::clone(
-                    inner
-                        .spill_file
-                        .as_ref()
-                        .expect("spill file exists for spilled chunk"),
-                );
+                to_fault.push((pos, id, fslot));
                 faulted = true;
-                drop(inner);
-                let mut bytes = vec![0u8; CHUNK_BYTES];
+            }
+            if to_fault.is_empty() {
+                if !must_wait {
+                    break; // every chunk resolved
+                }
+                // Nothing to fault ourselves; wait for the other thread's
+                // pread — stores and pins of other chunks proceed under
+                // the lock we release.
                 let t0 = std::time::Instant::now();
-                file.read_exact_at(&mut bytes, fslot as u64 * CHUNK_BYTES as u64)
+                inner = self.cv.wait(inner).unwrap();
+                wait_us += t0.elapsed().as_micros() as u64;
+                continue;
+            }
+            // Pass 2 (unlocked): sort the claimed chunks by spill-file
+            // slot and fault each adjacent-slot run in one pread.
+            let file = Arc::clone(
+                inner
+                    .spill_file
+                    .as_ref()
+                    .expect("spill file exists for spilled chunk"),
+            );
+            drop(inner);
+            to_fault.sort_unstable_by_key(|&(_, _, fslot)| fslot);
+            let mut bufs: Vec<(usize, u32, u32, Arc<[u64]>)> = Vec::with_capacity(to_fault.len());
+            let mut preads = 0u64;
+            let t0 = std::time::Instant::now();
+            let mut i = 0;
+            while i < to_fault.len() {
+                let mut j = i + 1;
+                while j < to_fault.len() && to_fault[j].2 == to_fault[j - 1].2 + 1 {
+                    j += 1;
+                }
+                let run = &to_fault[i..j];
+                let mut bytes = vec![0u8; run.len() * CHUNK_BYTES];
+                file.read_exact_at(&mut bytes, run[0].2 as u64 * CHUNK_BYTES as u64)
                     .expect("spill tier read failed");
-                crate::obs::metrics::FAULT_US.record_duration(t0.elapsed());
-                let buf: Arc<[u64]> = bytes_to_words(&bytes).into();
-                inner = self.inner.lock().unwrap();
+                preads += 1;
+                for (k, &(pos, id, fslot)) in run.iter().enumerate() {
+                    let piece = &bytes[k * CHUNK_BYTES..(k + 1) * CHUNK_BYTES];
+                    bufs.push((pos, id, fslot, bytes_to_words(piece).into()));
+                }
+                i = j;
+            }
+            crate::obs::metrics::FAULT_US.record_duration(t0.elapsed());
+            crate::obs::metrics::SPILL_PREAD_CALLS.add(preads);
+            crate::obs::metrics::SPILL_CHUNKS_READ.add(to_fault.len() as u64);
+            // Pass 3 (relocked): one lock acquisition installs the batch.
+            inner = self.inner.lock().unwrap();
+            inner.pread_calls += preads;
+            for (pos, id, fslot, buf) in bufs {
+                let idx = id as usize;
                 inner.slots[idx].io = IoState::Idle;
                 inner.slots[idx].buf = Some(Arc::clone(&buf));
                 inner.free_file_slots.push(fslot);
@@ -326,10 +385,9 @@ impl ChunkArena {
                 if let Some(l) = &self.ledger {
                     l.record_spill_read((CHUNK_BYTES * 8) as f64);
                 }
-                self.cv.notify_all();
-                break buf;
-            };
-            chunks.push(buf);
+                chunks[pos] = Some(buf);
+            }
+            self.cv.notify_all();
         }
         // Faulting a run back in may overshoot the budget; re-evict cold
         // chunks (the pinned Arcs stay valid regardless).
@@ -340,7 +398,10 @@ impl ChunkArena {
             crate::obs::metrics::PIN_WAIT_US.record(wait_us);
         }
         PinnedStream {
-            chunks,
+            chunks: chunks
+                .into_iter()
+                .map(|c| c.expect("all chunks resolved"))
+                .collect(),
             len_bits: seq.len_bits,
             faulted,
         }
@@ -420,6 +481,11 @@ impl ChunkArena {
             inner.spill_file = Some(Arc::new(create_spill_file(self.spill_dir.as_deref())));
         }
         let file = Arc::clone(inner.spill_file.as_ref().expect("spill file just created"));
+        // Hand out ascending file slots so one planning batch lands as a
+        // contiguous spill-file run: complete_evictions coalesces adjacent
+        // slots into a single pwrite, and the symmetric fault path gets
+        // adjacency for free when the run is pinned back.
+        inner.free_file_slots.sort_unstable_by(|a, b| b.cmp(a));
         let mut out = Vec::with_capacity(cands.len());
         for (_, id) in cands {
             let fslot = match inner.free_file_slots.pop() {
@@ -449,24 +515,44 @@ impl ChunkArena {
     /// Write planned evictions to the spill file (arena unlocked — chunk
     /// buffers are immutable once stored, so the file copy is always
     /// coherent with concurrent pins), then re-lock briefly to flip the
-    /// tier state.  A chunk released mid-write recycles its reserved file
-    /// slot instead of landing spilled.
-    fn complete_evictions(&self, pending: Vec<PendingSpill>) {
+    /// tier state.  The writes are *run-granular*: chunks holding adjacent
+    /// spill-file slots (the common case, since plan_evictions hands out
+    /// ascending slots) are staged into one buffer and written with a
+    /// single pwrite per run.  A chunk released mid-write recycles its
+    /// reserved file slot instead of landing spilled.
+    fn complete_evictions(&self, mut pending: Vec<PendingSpill>) {
         if pending.is_empty() {
             return;
         }
-        let mut scratch = vec![0u8; CHUNK_BYTES];
+        pending.sort_unstable_by_key(|p| p.fslot);
+        let mut pwrites = 0u64;
         let t0 = std::time::Instant::now();
-        for p in &pending {
-            for (dst, w) in scratch.chunks_exact_mut(8).zip(p.buf.iter()) {
-                dst.copy_from_slice(&w.to_le_bytes());
+        let mut i = 0;
+        while i < pending.len() {
+            let mut j = i + 1;
+            while j < pending.len() && pending[j].fslot == pending[j - 1].fslot + 1 {
+                j += 1;
             }
-            p.file
-                .write_all_at(&scratch, p.fslot as u64 * CHUNK_BYTES as u64)
+            let run = &pending[i..j];
+            let mut scratch = vec![0u8; run.len() * CHUNK_BYTES];
+            for (k, p) in run.iter().enumerate() {
+                let dst = &mut scratch[k * CHUNK_BYTES..(k + 1) * CHUNK_BYTES];
+                for (d, w) in dst.chunks_exact_mut(8).zip(p.buf.iter()) {
+                    d.copy_from_slice(&w.to_le_bytes());
+                }
+            }
+            run[0]
+                .file
+                .write_all_at(&scratch, run[0].fslot as u64 * CHUNK_BYTES as u64)
                 .expect("spill tier write failed");
+            pwrites += 1;
+            i = j;
         }
         crate::obs::metrics::EVICT_US.record_duration(t0.elapsed());
+        crate::obs::metrics::SPILL_PWRITE_CALLS.add(pwrites);
+        crate::obs::metrics::SPILL_CHUNKS_WRITTEN.add(pending.len() as u64);
         let mut inner = self.inner.lock().unwrap();
+        inner.pwrite_calls += pwrites;
         for p in pending {
             let idx = p.id as usize;
             inner.pending_writes -= 1;
@@ -532,6 +618,19 @@ impl ChunkArena {
     /// Chunks faulted spill → DRAM over the arena's lifetime.
     pub fn faults(&self) -> u64 {
         self.inner.lock().unwrap().faults
+    }
+
+    /// Spill-tier pread syscalls issued over the arena's lifetime.
+    /// Run-granular faulting keeps this at or below [`Self::faults`]:
+    /// chunks in adjacent spill-file slots share one call.
+    pub fn spill_pread_calls(&self) -> u64 {
+        self.inner.lock().unwrap().pread_calls
+    }
+
+    /// Spill-tier pwrite syscalls issued over the arena's lifetime
+    /// (at or below [`Self::evictions`]; see [`Self::spill_pread_calls`]).
+    pub fn spill_pwrite_calls(&self) -> u64 {
+        self.inner.lock().unwrap().pwrite_calls
     }
 }
 
@@ -671,6 +770,24 @@ mod tests {
         assert_eq!(arena.load(&seq), words);
         arena.release(seq);
         assert_eq!(arena.spill_in_use_bytes(), 0);
+    }
+
+    #[test]
+    fn multi_chunk_run_spills_and_faults_in_single_syscalls() {
+        // 4-chunk stream + sub-chunk budget: the whole stream spills as
+        // one batch of adjacent file slots (one pwrite) and faults back
+        // as one run (one pread), while tier accounting stays per-chunk.
+        let arena = ChunkArena::with_budget(1024, None, None);
+        let words: Vec<u64> = (0..CHUNK_WORDS as u64 * 4)
+            .map(|i| i.wrapping_mul(0x2545F4914F6CDD1D))
+            .collect();
+        let seq = arena.store(&words, words.len() * 64);
+        assert_eq!(arena.evictions(), 4);
+        assert_eq!(arena.spill_pwrite_calls(), 1, "adjacent chunks must share one pwrite");
+        assert_eq!(arena.load(&seq), words);
+        assert_eq!(arena.faults(), 4);
+        assert_eq!(arena.spill_pread_calls(), 1, "adjacent chunks must share one pread");
+        arena.release(seq);
     }
 
     #[test]

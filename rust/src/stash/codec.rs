@@ -27,7 +27,7 @@
 //! tested in `rust/tests/props.rs`, down to the 1-mantissa-bit extreme).
 
 use crate::formats::{bf16_bits, Container, F32_MANT_BITS};
-use crate::gecko::{self, BitWriter, Mode, SegReader};
+use crate::gecko::{self, BitWriter, Kernel, Mode, SegReader};
 use crate::sfp::SfpCodec;
 use crate::stats::ComponentBits;
 
@@ -133,8 +133,25 @@ pub trait StashCodec: Send + Sync {
     /// interior chunk would bake padding into the middle of the stream).
     fn group(&self, meta: &ContainerMeta) -> usize;
 
-    /// Encode `vals` under `meta`.
-    fn encode(&self, vals: &[f32], meta: &ContainerMeta) -> EncodedStreams;
+    /// Encode `vals` under `meta` with an explicit [`Kernel`] — `Word` is
+    /// the word-parallel production path, `Scalar` the per-value reference.
+    /// Both emit bit-identical streams (differential-tested), so content
+    /// hashes and cache fingerprints never depend on the kernel.
+    fn encode_kernel(&self, vals: &[f32], meta: &ContainerMeta, kernel: Kernel) -> EncodedStreams;
+
+    /// [`StashCodec::decode_view`] with an explicit kernel.
+    fn decode_view_kernel(
+        &self,
+        count: usize,
+        streams: &mut [SegReader<'_>],
+        meta: &ContainerMeta,
+        kernel: Kernel,
+    ) -> Vec<f32>;
+
+    /// Encode `vals` under `meta` (with the process-wide active kernel).
+    fn encode(&self, vals: &[f32], meta: &ContainerMeta) -> EncodedStreams {
+        self.encode_kernel(vals, meta, Kernel::active())
+    }
 
     /// Decode a tensor from per-stream bit readers (codec-defined stream
     /// order, matching [`EncodedStreams::streams`]) — the zero-copy
@@ -145,18 +162,30 @@ pub trait StashCodec: Send + Sync {
         count: usize,
         streams: &mut [SegReader<'_>],
         meta: &ContainerMeta,
-    ) -> Vec<f32>;
+    ) -> Vec<f32> {
+        self.decode_view_kernel(count, streams, meta, Kernel::active())
+    }
 
     /// Decode a materialized tensor encoded with the same `meta`
     /// (convenience over [`StashCodec::decode_view`] for one-shot paths,
     /// tests, and benches).
     fn decode(&self, enc: &EncodedStreams, meta: &ContainerMeta) -> Vec<f32> {
+        self.decode_kernel(enc, meta, Kernel::active())
+    }
+
+    /// [`StashCodec::decode`] with an explicit kernel.
+    fn decode_kernel(
+        &self,
+        enc: &EncodedStreams,
+        meta: &ContainerMeta,
+        kernel: Kernel,
+    ) -> Vec<f32> {
         let mut readers: Vec<SegReader> = enc
             .streams
             .iter()
             .map(|(words, bits)| SegReader::single(words, *bits))
             .collect();
-        self.decode_view(enc.count, &mut readers, meta)
+        self.decode_view_kernel(enc.count, &mut readers, meta, kernel)
     }
 
     /// Encode in `chunk_values`-sized pieces (rounded up to a group
@@ -169,11 +198,24 @@ pub trait StashCodec: Send + Sync {
         meta: &ContainerMeta,
         chunk_values: usize,
     ) -> EncodedStreams {
+        self.encode_chunked_kernel(vals, meta, chunk_values, Kernel::active())
+    }
+
+    /// [`StashCodec::encode_chunked`] with an explicit kernel.
+    fn encode_chunked_kernel(
+        &self,
+        vals: &[f32],
+        meta: &ContainerMeta,
+        chunk_values: usize,
+        kernel: Kernel,
+    ) -> EncodedStreams {
         let g = self.group(meta).max(1);
         let chunk = chunk_values.max(1).div_ceil(g) * g;
-        let parts: Vec<EncodedStreams> =
-            vals.chunks(chunk).map(|c| self.encode(c, meta)).collect();
-        EncodedStreams::concat(&parts).unwrap_or_else(|| self.encode(vals, meta))
+        let parts: Vec<EncodedStreams> = vals
+            .chunks(chunk)
+            .map(|c| self.encode_kernel(c, meta, kernel))
+            .collect();
+        EncodedStreams::concat(&parts).unwrap_or_else(|| self.encode_kernel(vals, meta, kernel))
     }
 }
 
@@ -193,19 +235,45 @@ impl StashCodec for GeckoStashCodec {
         }
     }
 
-    fn encode(&self, vals: &[f32], meta: &ContainerMeta) -> EncodedStreams {
+    fn encode_kernel(&self, vals: &[f32], meta: &ContainerMeta, kernel: Kernel) -> EncodedStreams {
         let n = meta.mant();
         let exps = gecko::exponents(vals);
-        let enc = gecko::encode(&exps, meta.exp_mode);
+        let enc = gecko::encode_kernel(&exps, meta.exp_mode, kernel);
         let mut mant = BitWriter::with_capacity(vals.len() * n as usize);
         let mut sign = BitWriter::with_capacity(if meta.elide_sign { 0 } else { vals.len() });
-        for &v in vals {
-            let b = v.to_bits();
-            if n > 0 {
-                mant.push(((b >> (F32_MANT_BITS - n)) & ((1u32 << n) - 1)) as u64, n);
+        match kernel {
+            Kernel::Word => {
+                // Bit-plane packing: the mantissa plane streams 64 fields
+                // per `pack_lanes` call; the sign plane collapses to one
+                // 64-bit splice per chunk (first value's sign at the MSB,
+                // exactly the scalar push order).
+                let mut fields = [0u64; 64];
+                for chunk in vals.chunks(64) {
+                    if n > 0 {
+                        for (f, &v) in fields.iter_mut().zip(chunk) {
+                            *f = ((v.to_bits() >> (F32_MANT_BITS - n)) & ((1u32 << n) - 1)) as u64;
+                        }
+                        mant.pack_lanes(&fields[..chunk.len()], n);
+                    }
+                    if !meta.elide_sign {
+                        let mut w = 0u64;
+                        for &v in chunk {
+                            w = (w << 1) | (v.to_bits() >> 31) as u64;
+                        }
+                        sign.push_word(w, chunk.len() as u32);
+                    }
+                }
             }
-            if !meta.elide_sign {
-                sign.push((b >> 31) as u64, 1);
+            Kernel::Scalar => {
+                for &v in vals {
+                    let b = v.to_bits();
+                    if n > 0 {
+                        mant.push(((b >> (F32_MANT_BITS - n)) & ((1u32 << n) - 1)) as u64, n);
+                    }
+                    if !meta.elide_sign {
+                        sign.push((b >> 31) as u64, 1);
+                    }
+                }
             }
         }
         let (mw, mb) = mant.into_words();
@@ -228,32 +296,61 @@ impl StashCodec for GeckoStashCodec {
         }
     }
 
-    fn decode_view(
+    fn decode_view_kernel(
         &self,
         count: usize,
         streams: &mut [SegReader<'_>],
         meta: &ContainerMeta,
+        kernel: Kernel,
     ) -> Vec<f32> {
         let n = meta.mant();
         let [payload, metadata, mant, sign] = streams else {
             panic!("gecko codec expects 4 streams");
         };
-        let exps = gecko::decode_readers(payload, metadata, count, meta.exp_mode);
-        exps.iter()
-            .map(|&e| {
-                let m = if n > 0 {
-                    (mant.read(n) as u32) << (F32_MANT_BITS - n)
-                } else {
-                    0
-                };
-                let s = if meta.elide_sign {
-                    0
-                } else {
-                    sign.read(1) as u32
-                };
-                f32::from_bits((s << 31) | ((e as u32) << 23) | m)
-            })
-            .collect()
+        let exps = gecko::decode_readers_kernel(payload, metadata, count, meta.exp_mode, kernel);
+        match kernel {
+            Kernel::Word => {
+                let mut out = Vec::with_capacity(count);
+                let mut mants = [0u64; 64];
+                for chunk in exps.chunks(64) {
+                    let l = chunk.len();
+                    if n > 0 {
+                        mant.unpack_lanes(n, &mut mants[..l]);
+                    }
+                    let sw = if meta.elide_sign { 0 } else { sign.read_word(l as u32) };
+                    for (c, &e) in chunk.iter().enumerate() {
+                        let m = if n > 0 {
+                            (mants[c] as u32) << (F32_MANT_BITS - n)
+                        } else {
+                            0
+                        };
+                        let s = if meta.elide_sign {
+                            0
+                        } else {
+                            ((sw >> (l - 1 - c)) & 1) as u32
+                        };
+                        out.push(f32::from_bits((s << 31) | ((e as u32) << 23) | m));
+                    }
+                }
+                out
+            }
+            Kernel::Scalar => exps
+                .iter()
+                .map(|&e| {
+                    let m = if n > 0 {
+                        (mant.read(n) as u32) << (F32_MANT_BITS - n)
+                    } else {
+                        0
+                    };
+                    let s = if meta.elide_sign {
+                        0
+                    } else {
+                        sign.read(1) as u32
+                    };
+                    f32::from_bits((s << 31) | ((e as u32) << 23) | m)
+                })
+                .collect(),
+        }
     }
 }
 
@@ -280,9 +377,9 @@ impl StashCodec for SfpStashCodec {
         crate::sfp::GROUP
     }
 
-    fn encode(&self, vals: &[f32], meta: &ContainerMeta) -> EncodedStreams {
+    fn encode_kernel(&self, vals: &[f32], meta: &ContainerMeta, kernel: Kernel) -> EncodedStreams {
         let codec = SfpCodec::new(meta.container, meta.elide_sign).with_bias(sfp_bias_of(meta));
-        let c = codec.compress(vals, meta.mant());
+        let c = codec.compress_kernel(vals, meta.mant(), kernel);
         let padded = if vals.is_empty() {
             0
         } else {
@@ -305,17 +402,18 @@ impl StashCodec for SfpStashCodec {
         }
     }
 
-    fn decode_view(
+    fn decode_view_kernel(
         &self,
         count: usize,
         streams: &mut [SegReader<'_>],
         meta: &ContainerMeta,
+        kernel: Kernel,
     ) -> Vec<f32> {
         let [payload, metadata] = streams else {
             panic!("sfp codec expects 2 streams");
         };
         let codec = SfpCodec::new(meta.container, meta.elide_sign).with_bias(sfp_bias_of(meta));
-        codec.decompress_readers(payload, metadata, count, meta.mant())
+        codec.decompress_readers_kernel(payload, metadata, count, meta.mant(), kernel)
     }
 }
 
@@ -334,14 +432,31 @@ impl StashCodec for RawStashCodec {
         1
     }
 
-    fn encode(&self, vals: &[f32], meta: &ContainerMeta) -> EncodedStreams {
+    fn encode_kernel(&self, vals: &[f32], meta: &ContainerMeta, kernel: Kernel) -> EncodedStreams {
         let total = meta.container.total_bits();
         let mut w = BitWriter::with_capacity(vals.len() * total as usize);
-        for &v in vals {
-            let q = meta.quantized(v);
-            match meta.container {
-                Container::Fp32 => w.push(q.to_bits() as u64, 32),
-                Container::Bf16 => w.push(bf16_bits(q) as u64, 16),
+        match kernel {
+            Kernel::Word => {
+                let mut fields = [0u64; 64];
+                for chunk in vals.chunks(64) {
+                    for (f, &v) in fields.iter_mut().zip(chunk) {
+                        let q = meta.quantized(v);
+                        *f = match meta.container {
+                            Container::Fp32 => q.to_bits() as u64,
+                            Container::Bf16 => bf16_bits(q) as u64,
+                        };
+                    }
+                    w.pack_lanes(&fields[..chunk.len()], total);
+                }
+            }
+            Kernel::Scalar => {
+                for &v in vals {
+                    let q = meta.quantized(v);
+                    match meta.container {
+                        Container::Fp32 => w.push(q.to_bits() as u64, 32),
+                        Container::Bf16 => w.push(bf16_bits(q) as u64, 16),
+                    }
+                }
             }
         }
         let (words, len) = w.into_words();
@@ -359,21 +474,45 @@ impl StashCodec for RawStashCodec {
         }
     }
 
-    fn decode_view(
+    fn decode_view_kernel(
         &self,
         count: usize,
         streams: &mut [SegReader<'_>],
         meta: &ContainerMeta,
+        kernel: Kernel,
     ) -> Vec<f32> {
         let [r] = streams else {
             panic!("raw codec expects 1 stream");
         };
-        (0..count)
-            .map(|_| match meta.container {
-                Container::Fp32 => f32::from_bits(r.read(32) as u32),
-                Container::Bf16 => f32::from_bits((r.read(16) as u32) << 16),
-            })
-            .collect()
+        match kernel {
+            Kernel::Word => {
+                let total = meta.container.total_bits();
+                let mut out = Vec::with_capacity(count);
+                let mut fields = [0u64; 64];
+                let mut rem = count;
+                while rem > 0 {
+                    let l = rem.min(64);
+                    r.unpack_lanes(total, &mut fields[..l]);
+                    match meta.container {
+                        Container::Fp32 => {
+                            out.extend(fields[..l].iter().map(|&f| f32::from_bits(f as u32)));
+                        }
+                        Container::Bf16 => {
+                            let lanes = fields[..l].iter();
+                            out.extend(lanes.map(|&f| f32::from_bits((f as u32) << 16)));
+                        }
+                    }
+                    rem -= l;
+                }
+                out
+            }
+            Kernel::Scalar => (0..count)
+                .map(|_| match meta.container {
+                    Container::Fp32 => f32::from_bits(r.read(32) as u32),
+                    Container::Bf16 => f32::from_bits((r.read(16) as u32) << 16),
+                })
+                .collect(),
+        }
     }
 }
 
@@ -397,20 +536,49 @@ impl StashCodec for JsStashCodec {
         1
     }
 
-    fn encode(&self, vals: &[f32], meta: &ContainerMeta) -> EncodedStreams {
+    fn encode_kernel(&self, vals: &[f32], meta: &ContainerMeta, kernel: Kernel) -> EncodedStreams {
         let total = meta.container.total_bits();
         let mut tags = BitWriter::with_capacity(vals.len());
         let mut payload = BitWriter::with_capacity(vals.len() * total as usize / 2);
         let mut nonzero = 0usize;
-        for &v in vals {
-            let q = meta.quantized(v);
-            let stored = q.to_bits() != 0;
-            tags.push(stored as u64, 1);
-            if stored {
-                nonzero += 1;
-                match meta.container {
-                    Container::Fp32 => payload.push(q.to_bits() as u64, 32),
-                    Container::Bf16 => payload.push(bf16_bits(q) as u64, 16),
+        match kernel {
+            Kernel::Word => {
+                // Tag plane: 64 tag bits gathered into one word splice;
+                // payload plane: the chunk's non-zero container words
+                // compacted left and packed in one `pack_lanes` call.
+                let mut fields = [0u64; 64];
+                for chunk in vals.chunks(64) {
+                    let mut tagw = 0u64;
+                    let mut stored = 0usize;
+                    for &v in chunk {
+                        let q = meta.quantized(v);
+                        let keep = q.to_bits() != 0;
+                        tagw = (tagw << 1) | keep as u64;
+                        if keep {
+                            fields[stored] = match meta.container {
+                                Container::Fp32 => q.to_bits() as u64,
+                                Container::Bf16 => bf16_bits(q) as u64,
+                            };
+                            stored += 1;
+                        }
+                    }
+                    tags.push_word(tagw, chunk.len() as u32);
+                    payload.pack_lanes(&fields[..stored], total);
+                    nonzero += stored;
+                }
+            }
+            Kernel::Scalar => {
+                for &v in vals {
+                    let q = meta.quantized(v);
+                    let stored = q.to_bits() != 0;
+                    tags.push(stored as u64, 1);
+                    if stored {
+                        nonzero += 1;
+                        match meta.container {
+                            Container::Fp32 => payload.push(q.to_bits() as u64, 32),
+                            Container::Bf16 => payload.push(bf16_bits(q) as u64, 16),
+                        }
+                    }
                 }
             }
         }
@@ -431,27 +599,59 @@ impl StashCodec for JsStashCodec {
         }
     }
 
-    fn decode_view(
+    fn decode_view_kernel(
         &self,
         count: usize,
         streams: &mut [SegReader<'_>],
         meta: &ContainerMeta,
+        kernel: Kernel,
     ) -> Vec<f32> {
         let [tags, payload] = streams else {
             panic!("js codec expects 2 streams");
         };
-        (0..count)
-            .map(|_| {
-                if tags.read(1) == 0 {
-                    0.0
-                } else {
-                    match meta.container {
-                        Container::Fp32 => f32::from_bits(payload.read(32) as u32),
-                        Container::Bf16 => f32::from_bits((payload.read(16) as u32) << 16),
+        match kernel {
+            Kernel::Word => {
+                let total = meta.container.total_bits();
+                let mut out = Vec::with_capacity(count);
+                let mut fields = [0u64; 64];
+                let mut rem = count;
+                while rem > 0 {
+                    let l = rem.min(64);
+                    // popcount of the tag word tells how many container
+                    // words to bulk-read before positions are assigned
+                    let tagw = tags.read_word(l as u32);
+                    let stored = tagw.count_ones() as usize;
+                    payload.unpack_lanes(total, &mut fields[..stored]);
+                    let mut k = 0usize;
+                    for c in 0..l {
+                        if (tagw >> (l - 1 - c)) & 1 == 0 {
+                            out.push(0.0);
+                        } else {
+                            let f = fields[k] as u32;
+                            k += 1;
+                            out.push(match meta.container {
+                                Container::Fp32 => f32::from_bits(f),
+                                Container::Bf16 => f32::from_bits(f << 16),
+                            });
+                        }
                     }
+                    rem -= l;
                 }
-            })
-            .collect()
+                out
+            }
+            Kernel::Scalar => (0..count)
+                .map(|_| {
+                    if tags.read(1) == 0 {
+                        0.0
+                    } else {
+                        match meta.container {
+                            Container::Fp32 => f32::from_bits(payload.read(32) as u32),
+                            Container::Bf16 => f32::from_bits((payload.read(16) as u32) << 16),
+                        }
+                    }
+                })
+                .collect(),
+        }
     }
 }
 
@@ -578,6 +778,58 @@ mod tests {
                 for (a, b) in owned.iter().zip(&viewed) {
                     assert_eq!(a.to_bits(), b.to_bits(), "{}", codec.name());
                 }
+            }
+        }
+    }
+
+    /// Word-parallel and scalar kernels must produce byte-identical stream
+    /// vectors for every codec — the invariant that keeps content hashes,
+    /// cache entries, and manifest fingerprints kernel-independent.
+    #[test]
+    fn word_kernel_bit_identical_all_codecs() {
+        let acts = ValueModel::relu_act().sample_values(64 * 7 + 13, 29, true);
+        let weights = ValueModel::weights().sample_values(1000, 31, false);
+        for (vals, elide) in [(&acts, true), (&weights, false)] {
+            for codec in codecs() {
+                for container in [Container::Fp32, Container::Bf16] {
+                    for n in [0u32, 1, 7] {
+                        for mode in [Mode::Delta, Mode::FixedBias { bias: 127, group: 8 }] {
+                            let meta = ContainerMeta::new(container, n)
+                                .with_sign_elision(elide)
+                                .with_exp_mode(mode);
+                            let w = codec.encode_kernel(vals, &meta, Kernel::Word);
+                            let s = codec.encode_kernel(vals, &meta, Kernel::Scalar);
+                            let ctx = format!("{} {container} n={n} {mode:?}", codec.name());
+                            assert_eq!(w.count, s.count, "{ctx}");
+                            assert_eq!(w.streams, s.streams, "{ctx}");
+                            for kernel in [Kernel::Word, Kernel::Scalar] {
+                                let back = codec.decode_kernel(&w, &meta, kernel);
+                                for (i, (&v, &b)) in vals.iter().zip(&back).enumerate() {
+                                    assert_eq!(
+                                        meta.quantized(v).to_bits(),
+                                        b.to_bits(),
+                                        "{ctx} {kernel:?} i={i}"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn word_kernel_chunked_encode_matches_scalar_one_shot() {
+        // The strongest cross-path identity: chunked word-parallel encode
+        // (the production pool path) equals scalar one-shot bit-for-bit.
+        let vals = ValueModel::relu_act().sample_values(64 * 5 + 37, 33, true);
+        let meta = ContainerMeta::new(Container::Bf16, 3).with_sign_elision(true);
+        for codec in codecs() {
+            let scalar = codec.encode_kernel(&vals, &meta, Kernel::Scalar);
+            for chunk in [64usize, 100, 129] {
+                let word = codec.encode_chunked_kernel(&vals, &meta, chunk, Kernel::Word);
+                assert_eq!(word.streams, scalar.streams, "{} chunk {chunk}", codec.name());
             }
         }
     }

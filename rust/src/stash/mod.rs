@@ -242,6 +242,7 @@ impl Stash {
             let t0 = std::time::Instant::now();
             let enc = codec.encode_chunked(&vals, &meta, chunk_values);
             crate::obs::metrics::ENCODE_US[kind.index()].record_duration(t0.elapsed());
+            crate::obs::metrics::ENCODE_BYTES[kind.index()].add((vals.len() * 4) as u64);
             let streams: Vec<ChunkSeq> = enc
                 .streams
                 .iter()
@@ -484,6 +485,7 @@ fn restore_stored(
     let (vals, faulted) = decode_stored(codec, arena, stored);
     let us = t0.elapsed().as_micros() as u64;
     crate::obs::metrics::DECODE_US[kind.index()].record(us);
+    crate::obs::metrics::DECODE_BYTES[kind.index()].add((vals.len() * 4) as u64);
     ledger.record_restore_latency(faulted, us);
     if faulted {
         crate::obs::metrics::RESTORE_FAULT_US.record(us);

@@ -1,0 +1,205 @@
+//! Differential properties of the word-parallel codec kernels (in-tree
+//! `util::prop` harness): for every codec, both containers, every
+//! mantissa length including the 0/1-bit extremes, both exponent modes,
+//! ragged tails, and arbitrary chunk/segment splits, [`Kernel::Word`]
+//! must emit and consume streams bit-identical to the [`Kernel::Scalar`]
+//! reference.  This equivalence is what keeps content hashes and lab
+//! cache fingerprints kernel-independent (CI proves the same property
+//! end-to-end with a scalar-populated warm cache).
+
+use sfp::formats::Container;
+use sfp::gecko::{self, Kernel, Mode, SegReader};
+use sfp::sfp::SfpCodec;
+use sfp::stash::{
+    ContainerMeta, GeckoStashCodec, JsStashCodec, RawStashCodec, SfpStashCodec, StashCodec,
+};
+use sfp::util::prop::{check, Gen};
+
+fn codecs() -> [&'static dyn StashCodec; 4] {
+    [&GeckoStashCodec, &SfpStashCodec, &RawStashCodec, &JsStashCodec]
+}
+
+/// Value streams whose lengths hug the 64-value group boundary (exact
+/// multiples, one short, one over) plus fully arbitrary lengths, over
+/// arbitrary-finite / trained-like / zero-heavy distributions.
+fn ragged_vals(g: &mut Gen) -> Vec<f32> {
+    let len = match g.u32_in(0, 4) {
+        0 => g.usize_in(1, 63),
+        1 => 64 * g.usize_in(1, 6),
+        2 => 64 * g.usize_in(1, 6) + g.usize_in(1, 63),
+        3 => g.usize_in(1, 2000),
+        _ => 1,
+    };
+    match g.u32_in(0, 2) {
+        0 => g.vec_f32(len, |g| g.finite_f32()),
+        1 => g.vec_f32(len, |g| g.gaussian_f32(3.0)),
+        _ => g.vec_f32(len, |g| {
+            if g.bool() {
+                0.0
+            } else {
+                g.gaussian_f32(0.1)
+            }
+        }),
+    }
+}
+
+/// Container metadata biased toward the paper's extremes: 0- and 1-bit
+/// mantissas, both containers, both exponent modes (tight fixed-bias
+/// groups included).
+fn extreme_meta(g: &mut Gen) -> ContainerMeta {
+    let container = if g.bool() { Container::Fp32 } else { Container::Bf16 };
+    let mant = [0u32, 0, 1, 1, 7, 23][g.usize_in(0, 5)];
+    let exp_mode = if g.bool() {
+        Mode::Delta
+    } else {
+        Mode::FixedBias {
+            bias: g.u32_in(0, 255) as u8,
+            group: g.usize_in(1, 32),
+        }
+    };
+    ContainerMeta::new(container, mant).with_exp_mode(exp_mode)
+}
+
+fn strip_signs(vals: &mut [f32]) {
+    for v in vals.iter_mut() {
+        *v = f32::from_bits(v.to_bits() & 0x7FFF_FFFF);
+    }
+}
+
+fn bit_pattern(vals: &[f32]) -> Vec<u32> {
+    vals.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn prop_word_and_scalar_streams_identical_every_codec() {
+    check("word streams == scalar streams, every codec", 40, |g| {
+        let mut vals = ragged_vals(g);
+        let mut meta = extreme_meta(g);
+        if g.bool() {
+            strip_signs(&mut vals);
+            meta = meta.with_sign_elision(true);
+        }
+        for codec in codecs() {
+            let ctx = format!("{} len={} {meta:?}", codec.name(), vals.len());
+            let s = codec.encode_kernel(&vals, &meta, Kernel::Scalar);
+            let w = codec.encode_kernel(&vals, &meta, Kernel::Word);
+            assert_eq!(s.count, w.count, "{ctx}");
+            assert_eq!(s.streams, w.streams, "{ctx}");
+            // both kernels decode both kernels' (identical) bytes, and the
+            // result is the container quantization of the input
+            let ds = codec.decode_kernel(&s, &meta, Kernel::Scalar);
+            let dw = codec.decode_kernel(&w, &meta, Kernel::Word);
+            assert_eq!(bit_pattern(&ds), bit_pattern(&dw), "{ctx}");
+            assert_eq!(dw.len(), vals.len(), "{ctx}");
+            for (i, (&v, &b)) in vals.iter().zip(&dw).enumerate() {
+                assert_eq!(meta.quantized(v).to_bits(), b.to_bits(), "{ctx} i={i}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_gecko_word_kernel_bit_identical_across_modes() {
+    check("gecko word == scalar across modes", 150, |g| {
+        let vals = ragged_vals(g);
+        let exps = gecko::exponents(&vals);
+        let mode = if g.bool() {
+            Mode::Delta
+        } else {
+            Mode::FixedBias {
+                bias: g.u32_in(0, 255) as u8,
+                group: g.usize_in(1, 32),
+            }
+        };
+        let s = gecko::encode_kernel(&exps, mode, Kernel::Scalar);
+        let w = gecko::encode_kernel(&exps, mode, Kernel::Word);
+        let ctx = format!("{mode:?} len={}", exps.len());
+        assert_eq!(s.payload, w.payload, "{ctx}");
+        assert_eq!(s.payload_bits, w.payload_bits, "{ctx}");
+        assert_eq!(s.metadata, w.metadata, "{ctx}");
+        assert_eq!(s.metadata_bits, w.metadata_bits, "{ctx}");
+        assert_eq!(gecko::decode(&w, mode), exps, "{ctx}");
+    });
+}
+
+#[test]
+fn prop_sfp_word_kernel_bit_identical() {
+    check("sfp word == scalar", 100, |g| {
+        let mut vals = ragged_vals(g);
+        let n = [0u32, 1, 7, 23][g.usize_in(0, 3)];
+        let container = if g.bool() { Container::Fp32 } else { Container::Bf16 };
+        let elide = g.bool();
+        if elide {
+            strip_signs(&mut vals);
+        }
+        let bias = [None, None, Some(127u8), Some(3)][g.usize_in(0, 3)];
+        let codec = SfpCodec::new(container, elide).with_bias(bias);
+        let s = codec.compress_kernel(&vals, n, Kernel::Scalar);
+        let w = codec.compress_kernel(&vals, n, Kernel::Word);
+        let ctx = format!("{container} n={n} elide={elide} bias={bias:?} len={}", vals.len());
+        assert_eq!(s.payload, w.payload, "{ctx}");
+        assert_eq!(s.payload_bits, w.payload_bits, "{ctx}");
+        assert_eq!(s.metadata, w.metadata, "{ctx}");
+        assert_eq!(s.metadata_bits, w.metadata_bits, "{ctx}");
+        assert_eq!(s.cycles, w.cycles, "{ctx}");
+        let back_w = bit_pattern(&codec.decompress(&w));
+        let back_s = bit_pattern(&codec.decompress(&s));
+        assert_eq!(back_w, back_s, "{ctx}");
+    });
+}
+
+#[test]
+fn prop_chunked_word_encode_equals_scalar_one_shot() {
+    // Chunk-boundary splits: the pool encodes tensors in chunk_values
+    // pieces, so a word-kernel chunked encode must equal the scalar
+    // one-shot stream for any chunk size.
+    check("chunked word == one-shot scalar", 40, |g| {
+        let vals = ragged_vals(g);
+        let meta = extreme_meta(g);
+        let chunk = g.usize_in(1, 3000);
+        for codec in codecs() {
+            let one = codec.encode_kernel(&vals, &meta, Kernel::Scalar);
+            let cat = codec.encode_chunked_kernel(&vals, &meta, chunk, Kernel::Word);
+            assert_eq!(one.count, cat.count, "{} chunk={chunk}", codec.name());
+            assert_eq!(one.streams, cat.streams, "{} chunk={chunk} {meta:?}", codec.name());
+        }
+    });
+}
+
+#[test]
+fn prop_word_decode_across_segment_splits() {
+    // Arena streams arrive as multi-segment SegReaders (one segment per
+    // 32 KiB chunk); the word kernels' bulk reads must stay exact when
+    // stream words are split at arbitrary segment boundaries.
+    check("word decode across segment splits", 40, |g| {
+        let vals = ragged_vals(g);
+        let meta = extreme_meta(g);
+        for codec in codecs() {
+            let enc = codec.encode_kernel(&vals, &meta, Kernel::Scalar);
+            let parts: Vec<Vec<&[u64]>> = enc
+                .streams
+                .iter()
+                .map(|(words, _)| {
+                    let cut = g.usize_in(0, words.len());
+                    let cut2 = g.usize_in(cut, words.len());
+                    vec![&words[..cut], &words[cut..cut2], &words[cut2..]]
+                })
+                .collect();
+            let mut readers: Vec<SegReader> = parts
+                .iter()
+                .zip(&enc.streams)
+                .map(|(segs, (_, bits))| SegReader::new(segs, *bits))
+                .collect();
+            let dw = codec.decode_view_kernel(enc.count, &mut readers, &meta, Kernel::Word);
+            assert_eq!(dw.len(), vals.len(), "{}", codec.name());
+            for (i, (&v, &b)) in vals.iter().zip(&dw).enumerate() {
+                assert_eq!(
+                    meta.quantized(v).to_bits(),
+                    b.to_bits(),
+                    "{} i={i} {meta:?}",
+                    codec.name()
+                );
+            }
+        }
+    });
+}
