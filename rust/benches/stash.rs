@@ -6,9 +6,10 @@
 
 use sfp::formats::Container;
 use sfp::gecko::SegReader;
+use sfp::serve::StashService;
 use sfp::stash::{
     ChunkArena, ChunkSeq, CodecKind, ContainerMeta, EncodedStreams, GeckoStashCodec,
-    RawStashCodec, Stash, StashCodec, StashConfig, TensorId,
+    RawStashCodec, Stash, StashCodec, StashConfig, TensorId, CHUNK_BYTES,
 };
 use sfp::traces::ValueModel;
 use sfp::util::bench::{black_box, Bench};
@@ -206,6 +207,47 @@ fn main() {
         stash.arena_allocated_bytes() as f64 / 1e6,
         steps as f64 / t0.elapsed().as_secs_f64(),
     );
+
+    // --- multi-tenant serve: leased facades over one shared arena -------
+    // Print-only (no gate): the same round-trip when two leases split a
+    // budgeted service — evictions and spill faults on purpose — next to
+    // the unlimited single-tenant numbers above, plus the per-tenant
+    // counters `repro serve` reports.
+    let service = StashService::new(8 * CHUNK_BYTES, None);
+    let leases = [
+        service.lease("bench-a", 4 * CHUNK_BYTES, 0).expect("lease a"),
+        service.lease("bench-b", 4 * CHUNK_BYTES, 0).expect("lease b"),
+    ];
+    let serve_cfg = StashConfig {
+        codec: CodecKind::Gecko,
+        threads,
+        queue_depth: 2 * threads,
+        chunk_values: 16 * 1024,
+        budget_bytes: 0,
+    };
+    let tenants: Vec<Stash> = leases.iter().map(|l| l.open(serve_cfg)).collect();
+    let b = Bench::new("stash_serve").with_epochs(3);
+    b.run("two_leases_shared_arena", 2.0 * total, || {
+        for stash in &tenants {
+            for (i, vals) in data.iter().enumerate() {
+                stash.put(TensorId::act(i), vals.clone(), meta);
+            }
+            stash.flush();
+        }
+        for stash in &tenants {
+            black_box(stash.take_all(&ids));
+        }
+    });
+    for lease in &leases {
+        let st = lease.stats();
+        println!(
+            "serve_lease {}: {} evictions, {} spill faults under a {} KiB budget",
+            lease.label(),
+            st.evictions,
+            st.faults,
+            lease.budget_bytes() / 1024,
+        );
+    }
 
     if gate_failed {
         eprintln!("FAIL: pool encode speedup below the 2x acceptance gate");

@@ -44,6 +44,12 @@ pub fn execute_spec(
             Ok(())
         }
         JobSpec::StashSummary => stash_summary(art_dir, deps),
+        JobSpec::ServeRun(sp) => {
+            let m = crate::serve::run_serve_measurement(sp)?;
+            std::fs::write(art_dir.join("serve.json"), m.to_json().to_string())?;
+            Ok(())
+        }
+        JobSpec::ServeSummary => serve_summary(art_dir, deps),
         JobSpec::Table1 => {
             let rows = tables::table1();
             std::fs::write(
@@ -153,6 +159,19 @@ fn stash_summary(art_dir: &Path, deps: &[JobRecord]) -> Result<()> {
         rows.push(dep_json(rec, "stash.json")?);
     }
     std::fs::write(art_dir.join("stash_sweep.json"), Json::Arr(rows).to_string())?;
+    Ok(())
+}
+
+/// Consolidate upstream serve runs into one `serve_sweep.json` array (the
+/// `repro serve` scaling output, one row per tenant count — deterministic
+/// counters only; the CLI appends wall-clock latency/throughput
+/// observations to its *surfaced* copy).
+fn serve_summary(art_dir: &Path, deps: &[JobRecord]) -> Result<()> {
+    let mut rows = Vec::new();
+    for rec in deps.iter().filter(|r| r.kind == "serve") {
+        rows.push(dep_json(rec, "serve.json")?);
+    }
+    std::fs::write(art_dir.join("serve_sweep.json"), Json::Arr(rows).to_string())?;
     Ok(())
 }
 

@@ -64,4 +64,4 @@ pub use exec::{
 pub use grid::{paper_grid, smoke_grid, write_manifest, Grid, GridOptions, RunTotals};
 pub use measure::{run_stash_measurement, StashMeasurement};
 pub use remote::{worker_main, ProcessBackend};
-pub use spec::{JobSpec, StashSpec, TrainSpec, CACHE_VERSION};
+pub use spec::{JobSpec, ServeSpec, StashSpec, TrainSpec, CACHE_VERSION};

@@ -37,6 +37,31 @@ pub struct StashSpec {
     pub threads: usize,
 }
 
+/// One multi-tenant serve scenario (the `repro serve` unit, one tenant
+/// count).  No thread hint: the scenario pins every session facade to a
+/// single worker so the shared arena sees one deterministic operation
+/// order — the artifact is a pure function of these fields.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSpec {
+    /// Trace model name (`resnet18` | `mobilenet`).
+    pub model: String,
+    /// Mantissa policy preset (`qm` | `bc` | `full`).
+    pub policy: String,
+    pub codec: CodecKind,
+    pub container: Container,
+    /// Concurrent leased sessions sharing one arena.
+    pub tenants: usize,
+    /// Put → restore-verify → epoch-cut cycles per session.
+    pub steps: usize,
+    /// Per-tenant DRAM budget in bytes (the service's global budget is
+    /// `tenants × budget_bytes`, fully leased).  Must be non-zero: the
+    /// scenario exists to exercise the spill tier under sharing.
+    pub budget_bytes: usize,
+    /// Values sampled per tensor stream.
+    pub sample: usize,
+    pub seed: u64,
+}
+
 /// One end-to-end training run through the PJRT runtime.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainSpec {
@@ -77,6 +102,11 @@ pub enum JobSpec {
     /// Consolidates upstream [`JobSpec::StashRun`] artifacts into
     /// `stash_sweep.json` (the `repro stash` sweep output).
     StashSummary,
+    /// One multi-tenant serve scenario at a fixed tenant count.
+    ServeRun(ServeSpec),
+    /// Consolidates upstream [`JobSpec::ServeRun`] artifacts into
+    /// `serve_sweep.json` (the `repro serve` scaling output).
+    ServeSummary,
     /// Table I footprint columns (trace models, analytic).
     Table1,
     /// Table II perf/energy; `source` is `model` or `stash`.
@@ -123,6 +153,8 @@ impl JobSpec {
             JobSpec::PolicySummary => "policy_summary",
             JobSpec::StashRun(_) => "stash",
             JobSpec::StashSummary => "stash_summary",
+            JobSpec::ServeRun(_) => "serve",
+            JobSpec::ServeSummary => "serve_summary",
             JobSpec::Table1 => "table1",
             JobSpec::Table2 { .. } => "table2",
             JobSpec::Figure { .. } => "figure",
@@ -145,6 +177,13 @@ impl JobSpec {
                 sp.budget_bytes
             ),
             JobSpec::StashSummary => "stash-summary".into(),
+            JobSpec::ServeRun(sp) => format!(
+                "serve:{}/{}/tenants={}",
+                sp.model,
+                sp.codec.label(),
+                sp.tenants
+            ),
+            JobSpec::ServeSummary => "serve-summary".into(),
             JobSpec::Table1 => "table1".into(),
             JobSpec::Table2 { source, .. } => format!("table2:{source}"),
             JobSpec::Figure { id, .. } => format!("fig{id}"),
@@ -198,6 +237,18 @@ impl JobSpec {
                 obj(fields)
             }
             JobSpec::StashSummary => obj(vec![]),
+            JobSpec::ServeRun(sp) => obj(vec![
+                ("model", s(&sp.model)),
+                ("policy", s(&sp.policy)),
+                ("codec", s(sp.codec.label())),
+                ("container", s(container_str(sp.container))),
+                ("tenants", n(sp.tenants)),
+                ("steps", n(sp.steps)),
+                ("budget_bytes", n(sp.budget_bytes)),
+                ("sample", n(sp.sample)),
+                ("seed", n(sp.seed as usize)),
+            ]),
+            JobSpec::ServeSummary => obj(vec![]),
             JobSpec::Table1 => obj(vec![]),
             JobSpec::Table2 { batch, source } => {
                 obj(vec![("batch", n(*batch)), ("source", s(source))])
@@ -307,6 +358,18 @@ impl JobSpec {
                     .unwrap_or(0),
             })),
             "stash_summary" => Ok(JobSpec::StashSummary),
+            "serve" => Ok(JobSpec::ServeRun(ServeSpec {
+                model: str_of("model")?,
+                policy: str_of("policy")?,
+                codec: codec_of("codec")?,
+                container: container_of("container")?,
+                tenants: usize_of("tenants")?,
+                steps: usize_of("steps")?,
+                budget_bytes: usize_of("budget_bytes")?,
+                sample: usize_of("sample")?,
+                seed: usize_of("seed")? as u64,
+            })),
+            "serve_summary" => Ok(JobSpec::ServeSummary),
             "table1" => Ok(JobSpec::Table1),
             "table2" => Ok(JobSpec::Table2 {
                 batch: usize_of("batch")?,
@@ -462,6 +525,18 @@ mod tests {
                 ..stash_spec()
             }),
             JobSpec::StashSummary,
+            JobSpec::ServeRun(ServeSpec {
+                model: "resnet18".into(),
+                policy: "qm".into(),
+                codec: CodecKind::Raw,
+                container: Container::Fp32,
+                tenants: 8,
+                steps: 2,
+                budget_bytes: 1 << 17,
+                sample: 1024,
+                seed: 0x5EED,
+            }),
+            JobSpec::ServeSummary,
             JobSpec::Table1,
             JobSpec::Table2 {
                 batch: 128,

@@ -53,6 +53,20 @@
 //! a spill sweep axis), cut atomically per epoch for the
 //! footprint-over-time reports, and fed to [`hwsim`]'s DRAM model.
 //!
+//! On top of the stash sits the multi-tenant serve layer ([`serve`]):
+//! a [`serve::StashService`] owns one shared chunk arena, and each
+//! concurrent session takes a [`serve::StashLease`] — tenant id, DRAM
+//! byte budget, eviction priority, and a private owner-tagged ledger —
+//! then opens ordinary [`stash::Stash`] facades over it
+//! ([`serve::StashLease::open`]).  Admission caps the sum of lease
+//! budgets at the service total, and placement evicts an over-budget
+//! tenant's *own* coldest runs before the global backstop ever looks at
+//! a neighbour — so one session churning at 10× its budget cannot push
+//! another into spill thrash (property-tested).  `repro serve` scales a
+//! simulated session fleet over one service and emits
+//! `serve_sweep.json`: per-tenant p50/p99 restore latency split
+//! DRAM-hit vs spill-fault, plus aggregate throughput by tenant count.
+//!
 //! The observability layer ([`obs`]) makes the pipeline's time visible
 //! without ever touching its bytes: RAII spans (thread-local rings, a
 //! global collector, `--trace out.json` Chrome trace-event export with
@@ -102,6 +116,7 @@ pub mod obs;
 pub mod policy;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sfp;
 pub mod stash;
 pub mod stats;

@@ -60,6 +60,11 @@ pub struct AdaptEvent {
     /// Job content hash, filled in when the event crossed the worker
     /// protocol (host-side events are keyed by run instead).
     pub arg_job: Option<String>,
+    /// Originating tenant / owner label for shared-resource episodes
+    /// (stash pressure from a leased arena) — lets `repro inspect`
+    /// attribute thrash to the tenant that caused it instead of
+    /// reporting it globally.  `None` for single-owner sources.
+    pub owner: Option<Cow<'static, str>>,
 }
 
 static SINK: Mutex<Vec<AdaptEvent>> = Mutex::new(Vec::new());
@@ -109,12 +114,25 @@ pub fn bit_change(
         from,
         to,
         arg_job: None,
+        owner: None,
     });
 }
 
 /// Record a stash pressure episode: `count` evictions/faults landed
 /// within `window_us`.
 pub fn stash_pressure(trigger: &'static str, count: u64, window_us: u64) {
+    stash_pressure_for(None, trigger, count, window_us);
+}
+
+/// [`stash_pressure`] tagged with the originating tenant/owner label —
+/// the multi-tenant arena path, so eviction storms and fault bursts are
+/// attributable to the lease that caused them.
+pub fn stash_pressure_for(
+    owner: Option<Cow<'static, str>>,
+    trigger: &'static str,
+    count: u64,
+    window_us: u64,
+) {
     record(AdaptEvent {
         ts_us: super::trace::now_us(),
         pid: std::process::id(),
@@ -129,6 +147,7 @@ pub fn stash_pressure(trigger: &'static str, count: u64, window_us: u64) {
         from: count as f64,
         to: window_us as f64,
         arg_job: None,
+        owner,
     });
 }
 
@@ -194,6 +213,9 @@ pub fn event_json(ev: &AdaptEvent) -> Json {
     if let Some(job) = &ev.arg_job {
         m.insert("job".to_string(), Json::Str(job.clone()));
     }
+    if let Some(o) = &ev.owner {
+        m.insert("owner".to_string(), Json::Str(o.to_string()));
+    }
     Json::Obj(m)
 }
 
@@ -221,6 +243,7 @@ pub fn event_from_json(j: &Json) -> Option<AdaptEvent> {
             .get("job")
             .and_then(Json::as_str)
             .map(|s| s.to_string()),
+        owner: owned("owner"),
     })
 }
 
@@ -277,6 +300,7 @@ mod tests {
                 from: 8.0,
                 to: 6.0,
                 arg_job: Some("cafe".to_string()),
+                owner: None,
             },
             AdaptEvent {
                 ts_us: 99,
@@ -292,6 +316,7 @@ mod tests {
                 from: 16.0,
                 to: 250_000.0,
                 arg_job: None,
+                owner: Some(Cow::Borrowed("serve.t3")),
             },
         ];
         let text = render_jsonl(&events);

@@ -217,6 +217,9 @@ pub static STASH_QUEUE_PEAK: Counter = Counter::new();
 pub static STASH_SUBMIT_WAIT_US: Histogram = Histogram::new();
 /// Arena pin calls blocked on a chunk being faulted in by another thread.
 pub static PIN_WAIT_US: Histogram = Histogram::new();
+/// Bounded pin waits that ended with the chunk still in flight (timeout
+/// or wake-and-retry) — the pin starvation / fairness observability knob.
+pub static PIN_STALL_RETRIES: Counter = Counter::new();
 /// Demand faults: spill-file read latency per faulted batch.
 pub static FAULT_US: Histogram = Histogram::new();
 /// Eviction batches: spill-file write latency per planned batch.
@@ -290,6 +293,10 @@ pub fn snapshot() -> Json {
         STASH_SUBMIT_WAIT_US.summary().to_json(),
     );
     m.insert("stash_pin_wait_us".to_string(), PIN_WAIT_US.summary().to_json());
+    m.insert(
+        "stash_pin_stall_retries_total".to_string(),
+        num(PIN_STALL_RETRIES.get()),
+    );
     m.insert("stash_fault_us".to_string(), FAULT_US.summary().to_json());
     m.insert("stash_evict_us".to_string(), EVICT_US.summary().to_json());
     m.insert(

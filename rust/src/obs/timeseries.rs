@@ -63,6 +63,23 @@ pub fn record(track: &'static str, value: f64) {
     });
 }
 
+/// [`record`] with an owned track name — for tracks only known at run
+/// time, like the per-tenant serve gauges (`serve_bytes.<lease label>`).
+/// Callers should gate the name construction on [`super::enabled`] so the
+/// disabled path stays allocation-free.
+#[inline]
+pub fn record_owned(track: String, value: f64) {
+    if !super::enabled() {
+        return;
+    }
+    push(CounterSample {
+        track: Cow::Owned(track),
+        ts_us: super::trace::now_us(),
+        value,
+        pid: std::process::id(),
+    });
+}
+
 fn push(s: CounterSample) {
     if let Ok(mut sink) = SINK.lock() {
         sink.push(s);

@@ -585,6 +585,7 @@ mod tests {
             from: 8.0,
             to: 7.0,
             arg_job: None,
+            owner: None,
         }];
         let w2 = render_flight_batch("2222", &[], &samples, &adapt);
         let w1b = render_span_batch("1111", &[mk_span("j1.commit", 100)]);

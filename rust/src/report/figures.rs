@@ -452,6 +452,7 @@ mod tests {
             from,
             to,
             arg_job: None,
+            owner: None,
         };
         // layer 0 drops 8→7 in epoch 0, then 7→5 in epoch 2; layer 1
         // never adapts and keeps its recorded starting width (8)

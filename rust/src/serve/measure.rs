@@ -1,0 +1,438 @@
+//! The `repro serve` load scenario: N simulated training sessions —
+//! trace-model streams under an adaptive mantissa policy, like `repro
+//! stash` — each holding a [`StashLease`](super::StashLease) on one
+//! shared [`StashService`](super::StashService), put/restore cycling
+//! every step.
+//!
+//! Determinism contract: the artifact ([`ServeMeasurement::to_json`])
+//! carries only counter-derived values (bits, evictions, faults, the
+//! fairness-probe verdict), never timings.  Sessions run round-robin on
+//! the driver thread with single-worker facade pools, so the arena sees
+//! one deterministic operation order and the artifact bytes depend only
+//! on the [`ServeSpec`] — cache fingerprints stay stable across re-runs
+//! and machines.  Wall-clock restore latency (the p50/p99 DRAM-hit vs
+//! spill-fault split) and throughput are *observations*: they flow
+//! through the process-global registry
+//! ([`super::push_observation`]/[`super::take_observations`]) and the
+//! CLI appends them to the *surfaced* sweep JSON only.
+//!
+//! The embedded fairness probe replays the ISSUE's property end-to-end:
+//! the same victim session runs once alone and once beside a tenant
+//! churning ten victim-sized working sets through its own equal-sized
+//! lease every step; per-tenant placement must keep the victim's fault
+//! count flat (within a two-chunk slack), or the measurement reports
+//! `fair_eviction: false`.
+
+use super::{push_observation, ServeObservation, StashService};
+use crate::lab::measure::{mantissa_policy, trace_model};
+use crate::lab::spec::ServeSpec;
+use crate::report::footprint::{ACT_EXP_SEED, ACT_VAL_SEED, WEIGHT_EXP_SEED, WEIGHT_VAL_SEED};
+use crate::stash::{ContainerMeta, Stash, StashConfig, TensorId};
+use crate::traces::{values_with_exponents, NetworkTrace};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// Extra faults the contended fairness-probe phase may show over the solo
+/// phase before the measurement calls the eviction policy unfair (absorbs
+/// chunk-boundary rounding; cross-tenant eviction would blow far past it).
+const FAIR_FAULT_SLACK: u64 = 2;
+
+/// One tenant's deterministic slice of a serve run.
+#[derive(Debug, Clone)]
+pub struct ServeTenantRow {
+    pub label: String,
+    pub written_bits: f64,
+    pub read_bits: f64,
+    pub spill_written_bits: f64,
+    pub spill_read_bits: f64,
+    pub evictions: u64,
+    pub faults: u64,
+    /// Epoch cuts recorded on the tenant's ledger (one per step).
+    pub epochs: usize,
+}
+
+/// The full result of one serve scenario at one tenant count.
+#[derive(Debug, Clone)]
+pub struct ServeMeasurement {
+    pub spec: ServeSpec,
+    pub codec_name: &'static str,
+    /// Arena-global budget: `tenants × spec.budget_bytes` (fully leased).
+    pub global_budget_bytes: usize,
+    pub tenants: Vec<ServeTenantRow>,
+    pub total_written_bits: f64,
+    pub total_read_bits: f64,
+    pub total_evictions: u64,
+    pub total_faults: u64,
+    pub dram_high_water_bytes: usize,
+    pub spill_high_water_bytes: usize,
+    /// Fairness probe: the victim session's faults running alone…
+    pub solo_faults: u64,
+    /// …and beside a 10× churner on an equal lease.
+    pub contended_faults: u64,
+    pub fair_eviction: bool,
+    pub restore_bit_exact: bool,
+    /// Wall-clock latency/throughput samples (also pushed to the serve
+    /// registry) — observations only, never part of [`Self::to_json`].
+    pub observations: Vec<ServeObservation>,
+}
+
+impl ServeMeasurement {
+    /// Deterministic JSON row (the lab artifact; counters only, no
+    /// timings — latency observations ride the serve registry instead).
+    pub fn to_json(&self) -> Json {
+        let mut row = BTreeMap::new();
+        let mut put = |k: &str, v: Json| {
+            row.insert(k.to_string(), v);
+        };
+        put("model", Json::Str(self.spec.model.clone()));
+        put("codec", Json::Str(self.codec_name.to_string()));
+        put("policy", Json::Str(self.spec.policy.clone()));
+        put("tenants", Json::Num(self.spec.tenants as f64));
+        put("steps", Json::Num(self.spec.steps as f64));
+        put("budget_bytes", Json::Num(self.spec.budget_bytes as f64));
+        put(
+            "global_budget_bytes",
+            Json::Num(self.global_budget_bytes as f64),
+        );
+        put("written_mb", Json::Num(self.total_written_bits / 8e6));
+        put("read_mb", Json::Num(self.total_read_bits / 8e6));
+        put("evictions", Json::Num(self.total_evictions as f64));
+        put("faults", Json::Num(self.total_faults as f64));
+        put(
+            "dram_high_water_bytes",
+            Json::Num(self.dram_high_water_bytes as f64),
+        );
+        put(
+            "spill_high_water_bytes",
+            Json::Num(self.spill_high_water_bytes as f64),
+        );
+        put("solo_faults", Json::Num(self.solo_faults as f64));
+        put("contended_faults", Json::Num(self.contended_faults as f64));
+        put("fair_eviction", Json::Bool(self.fair_eviction));
+        put("restore_bit_exact", Json::Bool(self.restore_bit_exact));
+        let tenants: Vec<Json> = self
+            .tenants
+            .iter()
+            .map(|t| {
+                let mut m = BTreeMap::new();
+                m.insert("tenant".to_string(), Json::Str(t.label.clone()));
+                m.insert("written_bits".to_string(), Json::Num(t.written_bits));
+                m.insert("read_bits".to_string(), Json::Num(t.read_bits));
+                m.insert(
+                    "spill_written_bits".to_string(),
+                    Json::Num(t.spill_written_bits),
+                );
+                m.insert("spill_read_bits".to_string(), Json::Num(t.spill_read_bits));
+                m.insert("evictions".to_string(), Json::Num(t.evictions as f64));
+                m.insert("faults".to_string(), Json::Num(t.faults as f64));
+                m.insert("epochs".to_string(), Json::Num(t.epochs as f64));
+                Json::Obj(m)
+            })
+            .collect();
+        put("per_tenant", Json::Arr(tenants));
+        Json::Obj(row)
+    }
+}
+
+/// One session's tensor streams: the trace model's layers under the
+/// policy's integer schedule, sampled with the tenant-mixed seed (the
+/// `repro stash` seed idiom, so two tenants never share value streams).
+fn session_streams(
+    spec: &ServeSpec,
+    net: &NetworkTrace,
+    sched: &[(u32, u32)],
+    tseed: u64,
+) -> Vec<(TensorId, Vec<f32>, ContainerMeta)> {
+    let mut streams = Vec::with_capacity(2 * net.layers.len());
+    for (i, l) in net.layers.iter().enumerate() {
+        let seed = tseed ^ i as u64;
+        let (n_a, n_w) = sched[i];
+        let a_exps = l.act_model.sample_exponents(spec.sample, seed ^ ACT_EXP_SEED);
+        let a_vals = values_with_exponents(&a_exps, seed ^ ACT_VAL_SEED, l.nonneg_act);
+        let a_meta = ContainerMeta::new(spec.container, n_a).with_sign_elision(l.nonneg_act);
+        streams.push((TensorId::act(i), a_vals, a_meta));
+
+        let w_count = spec.sample.min(l.weight_elems.max(64));
+        let w_exps = l.weight_model.sample_exponents(w_count, seed ^ WEIGHT_EXP_SEED);
+        let w_vals = values_with_exponents(&w_exps, seed ^ WEIGHT_VAL_SEED, false);
+        let w_meta = ContainerMeta::new(spec.container, n_w);
+        streams.push((TensorId::weight(i), w_vals, w_meta));
+    }
+    streams
+}
+
+/// Submit every stream and barrier until the encodes land.
+fn put_all(stash: &Stash, streams: &[(TensorId, Vec<f32>, ContainerMeta)]) {
+    for (id, vals, meta) in streams {
+        stash.put(*id, vals.clone(), *meta);
+    }
+    stash.flush();
+}
+
+/// Restore every stream (faulting spilled runs back) and verify each
+/// value against the quantized original; returns bit-exactness.
+fn take_verify(stash: &Stash, streams: &[(TensorId, Vec<f32>, ContainerMeta)]) -> bool {
+    let ids: Vec<TensorId> = streams.iter().map(|(id, ..)| *id).collect();
+    let back = stash.take_all(&ids);
+    let mut exact = true;
+    for ((_, vals, meta), b) in streams.iter().zip(&back) {
+        match b {
+            Some(b) if b.len() == vals.len() => {
+                for (&v, &x) in vals.iter().zip(b) {
+                    if meta.quantized(v).to_bits() != x.to_bits() {
+                        exact = false;
+                        break;
+                    }
+                }
+            }
+            _ => exact = false,
+        }
+    }
+    exact
+}
+
+/// Two-phase fairness probe: the same victim session runs solo, then
+/// beside a churner streaming ten victim-sized working sets through an
+/// equal lease every step.  Returns `(solo_faults, contended_faults)` —
+/// both deterministic (serialized single-worker sessions).
+fn fairness_probe(
+    spec: &ServeSpec,
+    net: &NetworkTrace,
+    sched: &[(u32, u32)],
+    cfg: StashConfig,
+) -> Result<(u64, u64)> {
+    let victim_seed = spec.seed ^ 0xFA1E_0000_0000_0001;
+    let steps = spec.steps.max(1);
+    let streams = session_streams(spec, net, sched, victim_seed);
+
+    let solo = {
+        let svc = StashService::new(spec.budget_bytes, None);
+        let lease = svc.lease("probe.victim", spec.budget_bytes, 0)?;
+        let stash = lease.open(cfg);
+        for _ in 0..steps {
+            put_all(&stash, &streams);
+            take_verify(&stash, &streams);
+        }
+        if stash.failures() > 0 {
+            return Err(anyhow!("fairness probe: solo session worker failed"));
+        }
+        lease.stats().faults
+    };
+
+    let contended = {
+        let svc = StashService::new(2 * spec.budget_bytes, None);
+        let victim = svc.lease("probe.victim", spec.budget_bytes, 0)?;
+        let churner = svc.lease("probe.churn", spec.budget_bytes, 0)?;
+        let vstash = victim.open(cfg);
+        let cstash = churner.open(cfg);
+        let churn_sets: Vec<Vec<(TensorId, Vec<f32>, ContainerMeta)>> = (0..10u64)
+            .map(|k| session_streams(spec, net, sched, spec.seed ^ ((k + 1) << 40)))
+            .collect();
+        for _ in 0..steps {
+            // victim resident, then the churner floods its own lease —
+            // any cross-tenant eviction would surface as victim faults on
+            // the take below
+            put_all(&vstash, &streams);
+            for set in &churn_sets {
+                put_all(&cstash, set);
+                take_verify(&cstash, set);
+            }
+            take_verify(&vstash, &streams);
+        }
+        if vstash.failures() + cstash.failures() > 0 {
+            return Err(anyhow!("fairness probe: contended session worker failed"));
+        }
+        victim.stats().faults
+    };
+
+    Ok((solo, contended))
+}
+
+/// Run one serve scenario: `spec.tenants` leased sessions, each cycling
+/// its stream set through put → restore-verify → epoch cut for
+/// `spec.steps` steps over one fully-leased shared arena.  Deterministic
+/// by construction (see the module docs); latency/throughput samples are
+/// pushed to the serve registry as a side channel.
+pub fn run_serve_measurement(spec: &ServeSpec) -> Result<ServeMeasurement> {
+    if spec.tenants == 0 {
+        return Err(anyhow!("serve needs at least one tenant"));
+    }
+    if spec.budget_bytes == 0 {
+        return Err(anyhow!(
+            "serve needs a per-tenant budget (0 would disable the spill tier)"
+        ));
+    }
+    let net = trace_model(&spec.model)?;
+    let policy = mantissa_policy(&spec.policy, spec.container)?;
+    let sched = policy.integer_schedule(net.layers.len(), spec.container);
+    let global_budget = spec.budget_bytes * spec.tenants;
+    let svc = StashService::new(global_budget, None);
+    // single-worker facades: the scenario's operation order — and with it
+    // every counter in the artifact — is a pure function of the spec
+    let cfg = StashConfig {
+        codec: spec.codec,
+        threads: 1,
+        queue_depth: 2,
+        chunk_values: 4096,
+        budget_bytes: 0, // the lease budget governs placement
+    };
+
+    let mut sessions = Vec::with_capacity(spec.tenants);
+    for t in 0..spec.tenants {
+        let label = format!("t{t}");
+        let lease = svc.lease(&label, spec.budget_bytes, 0)?;
+        let stash = lease.open(cfg);
+        let tseed = spec.seed ^ (t as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let streams = session_streams(spec, &net, &sched, tseed);
+        sessions.push((lease, stash, streams));
+    }
+
+    let t0 = std::time::Instant::now();
+    let mut bit_exact = true;
+    for _ in 0..spec.steps {
+        for (lease, stash, streams) in &sessions {
+            put_all(stash, streams);
+            if crate::obs::enabled() {
+                // per-tenant resident-bytes counter track (Chrome trace)
+                crate::obs::timeseries::record_owned(
+                    format!("serve_bytes.{}", lease.label()),
+                    lease.stats().in_use_bytes as f64,
+                );
+            }
+        }
+        for (_, stash, streams) in &sessions {
+            if !take_verify(stash, streams) {
+                bit_exact = false;
+            }
+            stash.mark_epoch();
+        }
+    }
+    let wall_us = t0.elapsed().as_micros() as u64;
+
+    let mut rows = Vec::with_capacity(sessions.len());
+    let mut observations = Vec::with_capacity(sessions.len());
+    let (mut written, mut read) = (0.0f64, 0.0f64);
+    let (mut evictions, mut faults) = (0u64, 0u64);
+    for (lease, stash, _) in &sessions {
+        if stash.failures() > 0 {
+            return Err(anyhow!(
+                "serve session {}: {} worker jobs failed",
+                lease.label(),
+                stash.failures()
+            ));
+        }
+        let snap = stash.ledger();
+        let stats = lease.stats();
+        written += snap.written_bits;
+        read += snap.read_bits;
+        evictions += stats.evictions;
+        faults += stats.faults;
+        rows.push(ServeTenantRow {
+            label: lease.label().to_string(),
+            written_bits: snap.written_bits,
+            read_bits: snap.read_bits,
+            spill_written_bits: snap.spill_written_bits,
+            spill_read_bits: snap.spill_read_bits,
+            evictions: stats.evictions,
+            faults: stats.faults,
+            epochs: stash.epoch_traffic().len(),
+        });
+        let (dram, fault) = stash.restore_latency();
+        observations.push(ServeObservation {
+            scale_tenants: spec.tenants,
+            tenant: lease.label().to_string(),
+            dram,
+            fault,
+            restored_bytes: snap.read_bits / 8.0,
+            wall_us,
+        });
+    }
+    let dram_hw = svc.arena().high_water_bytes();
+    let spill_hw = svc.arena().spill_high_water_bytes();
+    if evictions == 0 && dram_hw + spill_hw > global_budget {
+        return Err(anyhow!(
+            "per-tenant budget {} B is below the working set but the spill \
+             tier never engaged",
+            spec.budget_bytes
+        ));
+    }
+
+    let (solo_faults, contended_faults) = fairness_probe(spec, &net, &sched, cfg)?;
+    for o in &observations {
+        push_observation(o.clone());
+    }
+    Ok(ServeMeasurement {
+        spec: spec.clone(),
+        codec_name: cfg.codec.label(),
+        global_budget_bytes: global_budget,
+        tenants: rows,
+        total_written_bits: written,
+        total_read_bits: read,
+        total_evictions: evictions,
+        total_faults: faults,
+        dram_high_water_bytes: dram_hw,
+        spill_high_water_bytes: spill_hw,
+        solo_faults,
+        contended_faults,
+        fair_eviction: contended_faults <= solo_faults + FAIR_FAULT_SLACK,
+        restore_bit_exact: bit_exact,
+        observations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Container;
+    use crate::stash::{CodecKind, CHUNK_BYTES};
+
+    fn spec(tenants: usize, budget_chunks: usize, sample: usize) -> ServeSpec {
+        ServeSpec {
+            model: "resnet18".into(),
+            policy: "qm".into(),
+            codec: CodecKind::Raw,
+            container: Container::Fp32,
+            tenants,
+            steps: 2,
+            budget_bytes: budget_chunks * CHUNK_BYTES,
+            sample,
+            seed: 0x5EED,
+        }
+    }
+
+    #[test]
+    fn serve_measurement_is_deterministic_and_fair() {
+        // raw FP32 streams at sample 1024 put each session's working set
+        // well past a 2-chunk lease, so every tenant self-spills
+        let sp = spec(2, 2, 1024);
+        let a = run_serve_measurement(&sp).unwrap();
+        let b = run_serve_measurement(&sp).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert!(a.restore_bit_exact);
+        assert!(a.fair_eviction, "contended {} vs solo {}", a.contended_faults, a.solo_faults);
+        assert!(a.total_evictions > 0, "undersized leases must spill");
+        assert!(a.total_faults > 0, "restores must fault spilled runs back");
+        // per-tenant rows partition the totals
+        let sum_w: f64 = a.tenants.iter().map(|t| t.written_bits).sum();
+        let sum_f: u64 = a.tenants.iter().map(|t| t.faults).sum();
+        assert!((sum_w - a.total_written_bits).abs() < 1e-6);
+        assert_eq!(sum_f, a.total_faults);
+        assert!(a.tenants.iter().all(|t| t.epochs == sp.steps));
+    }
+
+    #[test]
+    fn serve_observations_cover_every_tenant() {
+        let m = run_serve_measurement(&spec(3, 2, 1024)).unwrap();
+        assert_eq!(m.observations.len(), 3);
+        for o in &m.observations {
+            assert_eq!(o.scale_tenants, 3);
+            assert!(o.restored_bytes > 0.0);
+            // every session restored something in at least one tier
+            assert!(o.dram.count + o.fault.count > 0, "{}", o.tenant);
+        }
+        // labels are the lease labels, in tenant order
+        let labels: Vec<&str> = m.observations.iter().map(|o| o.tenant.as_str()).collect();
+        assert_eq!(labels, ["t0", "t1", "t2"]);
+    }
+}

@@ -1,0 +1,335 @@
+//! Multi-tenant stash service — a shared chunk-store that training
+//! sessions *lease* slices of.
+//!
+//! The stash was built as a private resource: one [`Stash`], one
+//! [`ChunkArena`], one budget.  Serving several concurrent sessions
+//! (fine-tunes, eval jobs, a second experiment on the same box) from one
+//! memory pool needs one more layer: a [`StashService`] owns a single
+//! shared arena, and each session takes a [`StashLease`] — a tenant id, a
+//! DRAM byte budget, an eviction priority, and a private
+//! [`StashLedger`] — then opens ordinary [`Stash`] facades over it:
+//!
+//! ```text
+//!  StashService::new(total_budget) ─── owns ──▶ [shared ChunkArena]
+//!        │ lease("t0", budget, pri)                  ▲  ▲
+//!        ▼                                           │  │ store_for(tenant)
+//!  StashLease ── open(cfg) ──▶ Stash facade ─────────┘  │
+//!  StashLease ── open(cfg) ──▶ Stash facade ────────────┘
+//!     │ per-tenant ledger (owner-tagged pressure events,
+//!     ▼  restore-latency tier split, epoch cuts)
+//!  metrics.json / events.jsonl / serve_sweep.json
+//! ```
+//!
+//! **Fair eviction.**  Placement enforces the *per-tenant* budgets first:
+//! a tenant that crosses its own budget evicts its own coldest runs, and
+//! the arena-global budget only acts as a backstop (by priority, then
+//! age).  Because admission caps the sum of leased budgets at the
+//! service's total, the backstop never fires under leases alone — so a
+//! tenant churning at 10× its budget cannot drive a well-behaved
+//! neighbour into spill thrash (property-tested below and in
+//! `arena::tests`).
+//!
+//! **Observability.**  Each lease's ledger is owner-tagged
+//! ([`StashLedger::set_owner`]), so eviction storms and fault bursts in
+//! `events.jsonl` carry the offending tenant, `repro inspect` can
+//! attribute thrash, and per-tenant restore-latency digests split
+//! DRAM-hit vs spill-fault.  The [`measure`] submodule is the `repro
+//! serve` load scenario: N simulated sessions round-robin over one
+//! service, emitting a deterministic lab artifact plus wall-clock
+//! latency/throughput observations collected through the process-global
+//! registry here ([`take_observations`]).
+
+pub mod measure;
+
+pub use measure::{run_serve_measurement, ServeMeasurement, ServeTenantRow};
+
+use crate::obs::metrics::HistSummary;
+use crate::stash::{ChunkArena, Stash, StashConfig, StashLedger, TenantStats};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// A shared chunk-store sessions lease from: one arena, many tenants.
+pub struct StashService {
+    arena: Arc<ChunkArena>,
+    /// Arena-global DRAM budget (0 = unbounded service).
+    total_budget_bytes: usize,
+    /// Sum of admitted lease budgets — admission state.
+    leased_bytes: Mutex<usize>,
+}
+
+impl StashService {
+    /// Create a service with `total_budget_bytes` of resident DRAM across
+    /// all tenants (0 = unbounded, spill tier off) spilling cold runs
+    /// under `spill_dir` (`None` = temp dir).
+    pub fn new(total_budget_bytes: usize, spill_dir: Option<PathBuf>) -> StashService {
+        StashService {
+            arena: Arc::new(ChunkArena::with_budget(total_budget_bytes, spill_dir, None)),
+            total_budget_bytes,
+            leased_bytes: Mutex::new(0),
+        }
+    }
+
+    /// Admit one tenant: reserve `budget_bytes` of the service's DRAM
+    /// budget under `label` at `priority` (higher survives the global
+    /// backstop longer).  Admission fails when the lease would
+    /// oversubscribe the service — keeping the sum of lease budgets
+    /// within the total is exactly what makes eviction fair (no tenant
+    /// can push another into the spill tier).  On a bounded service every
+    /// lease must be bounded too.
+    pub fn lease(&self, label: &str, budget_bytes: usize, priority: u8) -> Result<StashLease> {
+        if self.total_budget_bytes != 0 {
+            if budget_bytes == 0 {
+                return Err(anyhow!(
+                    "lease '{label}': unbounded lease on a bounded service"
+                ));
+            }
+            let mut leased = self.leased_bytes.lock().unwrap();
+            if *leased + budget_bytes > self.total_budget_bytes {
+                return Err(anyhow!(
+                    "lease '{label}': {budget_bytes} B oversubscribes the service \
+                     ({} of {} B already leased)",
+                    *leased,
+                    self.total_budget_bytes
+                ));
+            }
+            *leased += budget_bytes;
+        }
+        let ledger = Arc::new(StashLedger::new());
+        ledger.set_owner(label);
+        let tenant = self
+            .arena
+            .register_tenant(budget_bytes, priority, Some(Arc::clone(&ledger)));
+        Ok(StashLease {
+            arena: Arc::clone(&self.arena),
+            ledger,
+            tenant,
+            label: label.to_string(),
+            budget_bytes,
+            priority,
+        })
+    }
+
+    /// The shared arena (aggregate accounting: in-use/spill/high-water).
+    pub fn arena(&self) -> &Arc<ChunkArena> {
+        &self.arena
+    }
+
+    /// Sum of admitted lease budgets.
+    pub fn leased_bytes(&self) -> usize {
+        *self.leased_bytes.lock().unwrap()
+    }
+
+    /// The service's arena-global budget (0 = unbounded).
+    pub fn total_budget_bytes(&self) -> usize {
+        self.total_budget_bytes
+    }
+}
+
+/// One tenant's handle on a [`StashService`]: identity, budget, priority,
+/// and the private owner-tagged ledger its traffic lands in.
+pub struct StashLease {
+    arena: Arc<ChunkArena>,
+    ledger: Arc<StashLedger>,
+    tenant: u32,
+    label: String,
+    budget_bytes: usize,
+    priority: u8,
+}
+
+impl StashLease {
+    /// Open a [`Stash`] facade over the shared arena under this lease.
+    /// `cfg.budget_bytes` is ignored — the lease's budget governs
+    /// placement.  Several facades may share one lease (they share its
+    /// budget and ledger).
+    pub fn open(&self, cfg: StashConfig) -> Stash {
+        Stash::with_arena(
+            cfg,
+            Arc::clone(&self.arena),
+            Arc::clone(&self.ledger),
+            self.tenant,
+        )
+    }
+
+    /// Arena tenant id this lease stores under.
+    pub fn tenant(&self) -> u32 {
+        self.tenant
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    pub fn priority(&self) -> u8 {
+        self.priority
+    }
+
+    /// The lease's private ledger (owner-tagged at admission).
+    pub fn ledger(&self) -> &Arc<StashLedger> {
+        &self.ledger
+    }
+
+    /// This tenant's accounting slice of the shared arena.
+    pub fn stats(&self) -> TenantStats {
+        self.arena.tenant_stats(self.tenant)
+    }
+}
+
+/// One wall-clock observation from a serve scenario: a tenant's restore
+/// latency digests (DRAM-hit vs spill-fault) and restored volume at one
+/// tenant-count scale point.  Latency never enters content-addressed
+/// artifacts — observations flow through the process-global registry and
+/// are appended only to the *surfaced* `serve_sweep.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeObservation {
+    /// Tenant count of the scenario this sample came from.
+    pub scale_tenants: usize,
+    /// Lease label (`t0`, `t1`, …).
+    pub tenant: String,
+    /// Restore latency, all chunks DRAM-resident.
+    pub dram: HistSummary,
+    /// Restore latency, ≥1 chunk faulted back from the spill tier.
+    pub fault: HistSummary,
+    /// Bytes this tenant restored (decoded stream bytes).
+    pub restored_bytes: f64,
+    /// Wall-clock of the whole scenario's measured section, µs (shared by
+    /// every tenant of the scale point; aggregate throughput =
+    /// Σ restored_bytes / wall).
+    pub wall_us: u64,
+}
+
+static OBSERVATIONS: Mutex<Vec<ServeObservation>> = Mutex::new(Vec::new());
+
+/// Record one serve observation in the process-global registry.
+pub fn push_observation(o: ServeObservation) {
+    if let Ok(mut sink) = OBSERVATIONS.lock() {
+        sink.push(o);
+    }
+}
+
+/// Drain the registry — the `repro serve` driver calls this after the lab
+/// run and appends the samples to the surfaced sweep JSON (cache-warm
+/// re-runs execute nothing, drain nothing, and append nothing).
+pub fn take_observations() -> Vec<ServeObservation> {
+    match OBSERVATIONS.lock() {
+        Ok(mut sink) => std::mem::take(&mut *sink),
+        Err(_) => Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Container;
+    use crate::stash::{CodecKind, ContainerMeta, TensorId, CHUNK_BYTES};
+    use crate::traces::ValueModel;
+
+    fn raw_cfg() -> StashConfig {
+        StashConfig {
+            codec: CodecKind::Raw,
+            threads: 1,
+            queue_depth: 2,
+            chunk_values: 4096,
+            budget_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn lease_admission_enforces_the_service_budget() {
+        let svc = StashService::new(4 * CHUNK_BYTES, None);
+        let a = svc.lease("t0", 2 * CHUNK_BYTES, 0).unwrap();
+        assert_eq!(a.label(), "t0");
+        assert_eq!(a.budget_bytes(), 2 * CHUNK_BYTES);
+        assert_eq!(a.ledger().owner().as_deref(), Some("t0"));
+        let b = svc.lease("t1", 2 * CHUNK_BYTES, 1).unwrap();
+        assert_ne!(a.tenant(), b.tenant());
+        assert_eq!(svc.leased_bytes(), 4 * CHUNK_BYTES);
+        // the service is fully subscribed: one more byte is refused…
+        assert!(svc.lease("t2", CHUNK_BYTES, 0).is_err());
+        // …and a bounded service never admits an unbounded lease
+        assert!(svc.lease("t3", 0, 0).is_err());
+        // an unbounded service admits anything
+        let open = StashService::new(0, None);
+        assert!(open.lease("x", 0, 0).is_ok());
+        assert!(open.lease("y", 123 * CHUNK_BYTES, 0).is_ok());
+    }
+
+    #[test]
+    fn churning_lease_cannot_thrash_a_neighbor() {
+        // The ISSUE's fairness property at the service level: tenant A
+        // churning a working set ~10× its own budget, concurrently, must
+        // not raise well-behaved tenant B's fault count at all — B stays
+        // under its budget, so per-tenant placement never touches it and
+        // the global backstop never fires (Σ lease budgets = total).
+        let svc = StashService::new(6 * CHUNK_BYTES, None);
+        let victim = svc.lease("calm", 4 * CHUNK_BYTES, 0).unwrap();
+        let churner = svc.lease("churn", 2 * CHUNK_BYTES, 0).unwrap();
+        let vs = victim.open(raw_cfg());
+        let meta = ContainerMeta::new(Container::Fp32, 23);
+        // victim: 3 one-chunk tensors, comfortably under its 4-chunk lease
+        let tensors: Vec<Vec<f32>> = (0..3)
+            .map(|i| ValueModel::weights().sample_values(4000, i as u64, false))
+            .collect();
+        for (i, t) in tensors.iter().enumerate() {
+            vs.put(TensorId::act(i), t.clone(), meta);
+        }
+        vs.flush();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let churn_thread = {
+            let stop = Arc::clone(&stop);
+            let cs = churner.open(raw_cfg());
+            std::thread::spawn(move || {
+                let churn: Vec<Vec<f32>> = (0..20)
+                    .map(|i| ValueModel::weights().sample_values(4000, 100 + i as u64, false))
+                    .collect();
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    for (i, t) in churn.iter().enumerate() {
+                        cs.put(TensorId::weight(i), t.clone(), meta);
+                    }
+                    let ids: Vec<TensorId> = (0..20).map(TensorId::weight).collect();
+                    for v in cs.take_all(&ids) {
+                        assert!(v.is_some());
+                    }
+                }
+                assert_eq!(cs.failures(), 0);
+            })
+        };
+        // sample the victim's takes while the churn is live
+        for round in 0..30 {
+            let i = round % 3;
+            let back = vs.get(TensorId::act(i)).unwrap();
+            for (&v, &b) in tensors[i].iter().zip(&back) {
+                assert_eq!(meta.quantized(v).to_bits(), b.to_bits());
+            }
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        churn_thread.join().unwrap();
+        // the churner thrashed itself…
+        assert!(churner.stats().evictions > 0, "churner must self-evict");
+        assert!(churner.stats().faults > 0);
+        // …and never displaced a single victim chunk
+        assert_eq!(victim.stats().evictions, 0, "victim must not be evicted");
+        assert_eq!(victim.stats().faults, 0, "victim must not fault");
+        assert_eq!(vs.failures(), 0);
+    }
+
+    #[test]
+    fn observation_registry_drains_once() {
+        let o = ServeObservation {
+            scale_tenants: 99,
+            tenant: "t0".into(),
+            dram: HistSummary::default(),
+            fault: HistSummary::default(),
+            restored_bytes: 1.0,
+            wall_us: 2,
+        };
+        push_observation(o.clone());
+        let got = take_observations();
+        assert!(got.contains(&o));
+        assert!(!take_observations().contains(&o));
+    }
+}

@@ -40,6 +40,18 @@
 //! chunk stays valid even if the arena concurrently releases, reuses, or
 //! spills its slot — slot reuse allocates a fresh buffer whenever a reader
 //! still holds the old one.
+//!
+//! The arena is also *multi-tenant*: [`ChunkArena::register_tenant`] hands
+//! out tenant ids carrying a per-tenant DRAM budget, a placement priority,
+//! and an optional per-tenant ledger; [`ChunkArena::store_for`] tags every
+//! chunk with its owner.  Eviction planning then runs in two passes —
+//! first each over-budget tenant's *own* coldest chunks, then the global
+//! budget backstop keyed `(priority, stamp)` — so a tenant churning far
+//! past its lease spills its own working set and cannot drive a
+//! well-behaved neighbor into fault thrash (the fairness contract the
+//! `repro serve` scenario measures).  Tenant 0 is the implicit legacy
+//! owner: unlimited per-tenant budget, traffic charged to the arena-global
+//! ledger, so single-owner arenas behave exactly as before.
 
 use super::ledger::StashLedger;
 use std::fs::{File, OpenOptions};
@@ -121,6 +133,45 @@ struct Slot {
     io: IoState,
     /// Last-touch stamp (store or pin) — the cold-run eviction order.
     stamp: u64,
+    /// Owning tenant (0 = the arena's legacy single owner).
+    tenant: u32,
+}
+
+/// Per-tenant accounting and placement policy.  Index 0 is the implicit
+/// legacy owner; [`ChunkArena::register_tenant`] appends leased tenants.
+#[derive(Default)]
+struct TenantState {
+    /// Live DRAM-resident chunks owned by this tenant.
+    in_use: usize,
+    /// Live spilled chunks owned by this tenant.
+    spilled: usize,
+    /// Eviction pwrites in flight on this tenant's chunks.
+    pending_writes: usize,
+    /// DRAM budget in chunks (`None` = unlimited).  A tenant past its own
+    /// budget has its own coldest chunks evicted first, before the global
+    /// backstop runs — the fair-eviction half of the lease contract.
+    budget_chunks: Option<usize>,
+    /// Placement priority under the global backstop: lower-priority
+    /// tenants evict first; ties fall back to cold-first stamps.
+    priority: u8,
+    /// Spill traffic on this tenant's chunks is charged here instead of
+    /// the arena-global ledger.
+    ledger: Option<Arc<StashLedger>>,
+    evictions: u64,
+    faults: u64,
+}
+
+/// Point-in-time accounting for one tenant of a shared arena.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TenantStats {
+    /// Live DRAM-resident bytes owned by the tenant (chunk granularity).
+    pub in_use_bytes: usize,
+    /// Live spilled bytes owned by the tenant.
+    pub spilled_bytes: usize,
+    /// Chunks of this tenant evicted DRAM → spill over the arena lifetime.
+    pub evictions: u64,
+    /// Chunks of this tenant faulted spill → DRAM over the arena lifetime.
+    pub faults: u64,
 }
 
 #[derive(Default)]
@@ -150,6 +201,23 @@ struct Slabs {
     /// slots coalesce, so these run well below `evictions`/`faults`).
     pread_calls: u64,
     pwrite_calls: u64,
+    /// Per-tenant accounting; lazily grown, index = tenant id.
+    tenants: Vec<TenantState>,
+    /// Bounded pin waits taken (pass-1 retries that timed out or woke
+    /// while their chunk was still in flight) — starvation observability.
+    pin_stalls: u64,
+}
+
+impl Slabs {
+    /// Tenant accounting slot, lazily materialized (tenant 0 appears on
+    /// the legacy owner's first store).
+    fn tenant_mut(&mut self, tenant: u32) -> &mut TenantState {
+        let idx = tenant as usize;
+        while self.tenants.len() <= idx {
+            self.tenants.push(TenantState::default());
+        }
+        &mut self.tenants[idx]
+    }
 }
 
 /// One planned eviction, carried out of the lock: the pwrite happens on
@@ -229,10 +297,42 @@ impl ChunkArena {
         }
     }
 
+    /// Register a leased tenant and return its id.  Chunks stored through
+    /// [`Self::store_for`] under the id are accounted separately, keep to
+    /// `budget_bytes` of DRAM (`0` = unlimited) by evicting the tenant's
+    /// *own* coldest chunks first, and charge their spill traffic to
+    /// `ledger` (falling back to the arena-global ledger when `None`).
+    /// Higher `priority` tenants are evicted later by the global budget
+    /// backstop.  Tenant 0 is reserved for the legacy owner
+    /// ([`Self::store`]): unlimited budget, priority 0, global ledger.
+    pub fn register_tenant(
+        &self,
+        budget_bytes: usize,
+        priority: u8,
+        ledger: Option<Arc<StashLedger>>,
+    ) -> u32 {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tenant_mut(0); // reserve the legacy owner's id
+        inner.tenants.push(TenantState {
+            budget_chunks: (budget_bytes != 0).then_some(budget_bytes / CHUNK_BYTES),
+            priority,
+            ledger,
+            ..TenantState::default()
+        });
+        (inner.tenants.len() - 1) as u32
+    }
+
     /// Store a packed bit stream; copies `len_bits.div_ceil(64)` words.
     /// May evict cold chunks to the spill tier to honor the budget (the
     /// eviction writes run after the arena lock is released).
     pub fn store(&self, words: &[u64], len_bits: usize) -> ChunkSeq {
+        self.store_for(0, words, len_bits)
+    }
+
+    /// [`Self::store`] under a tenant lease: the stream's chunks are
+    /// tagged with and accounted to `tenant`, and storing past the
+    /// tenant's budget evicts the tenant's own cold chunks first.
+    pub fn store_for(&self, tenant: u32, words: &[u64], len_bits: usize) -> ChunkSeq {
         let used = len_bits.div_ceil(64);
         debug_assert!(used <= words.len());
         let mut inner = self.inner.lock().unwrap();
@@ -261,10 +361,12 @@ impl ChunkArena {
             slot.buf = Some(buf);
             slot.live = true;
             slot.stamp = stamp;
+            slot.tenant = tenant;
             slots.push(id);
         }
         inner.in_use += slots.len();
         inner.high_water = inner.high_water.max(inner.in_use);
+        inner.tenant_mut(tenant).in_use += slots.len();
         let pending = self.plan_evictions(&mut inner);
         drop(inner);
         self.complete_evictions(pending);
@@ -281,12 +383,20 @@ impl ChunkArena {
     /// not per-arena.
     pub fn pin(&self, seq: &ChunkSeq) -> PinnedStream {
         let mut inner = self.inner.lock().unwrap();
-        inner.stamp += 1;
-        let stamp = inner.stamp;
         let mut chunks: Vec<Option<Arc<[u64]>>> = vec![None; seq.slots.len()];
         let mut faulted = false;
         let mut wait_us = 0u64;
+        let mut stalls = 0u64;
+        let mut backoff_us = 100u64;
         loop {
+            // A fresh stamp every pass: chunks this pin still needs must be
+            // re-marked hot against the *current* clock.  Stamping once at
+            // entry starves a pinner racing a sustained store stream — the
+            // global stamp keeps advancing while it waits, so the chunk it
+            // waits for looks ever colder and is re-evicted the moment the
+            // faulting thread installs it.
+            inner.stamp += 1;
+            let stamp = inner.stamp;
             // Pass 1 (locked): resolve resident chunks in place and claim
             // every spilled-idle chunk for this thread's batched fault.
             let mut to_fault: Vec<(usize, u32, u32)> = Vec::new(); // (pos, id, fslot)
@@ -325,10 +435,23 @@ impl ChunkArena {
                 }
                 // Nothing to fault ourselves; wait for the other thread's
                 // pread — stores and pins of other chunks proceed under
-                // the lock we release.
+                // the lock we release.  The wait is *bounded* with an
+                // escalating backoff: under a sustained eviction stream
+                // the installed buffer can be gone again before this
+                // thread reacquires the lock, and the notification that
+                // announced it is already consumed — an unbounded wait
+                // would stall the pinner indefinitely.  Timing out simply
+                // re-runs pass 1, which re-stamps the chunk hot and lets
+                // this thread claim and fault it itself.
                 let t0 = std::time::Instant::now();
-                inner = self.cv.wait(inner).unwrap();
+                let (guard, _) = self
+                    .cv
+                    .wait_timeout(inner, std::time::Duration::from_micros(backoff_us))
+                    .unwrap();
+                inner = guard;
                 wait_us += t0.elapsed().as_micros() as u64;
+                backoff_us = (backoff_us * 2).min(2_000);
+                stalls += 1;
                 continue;
             }
             // Pass 2 (unlocked): sort the claimed chunks by spill-file
@@ -374,7 +497,17 @@ impl ChunkArena {
                 inner.free_file_slots.push(fslot);
                 inner.spilled -= 1;
                 inner.faults += 1;
-                if inner.slots[idx].live {
+                let tenant = inner.slots[idx].tenant;
+                let live = inner.slots[idx].live;
+                {
+                    let ts = inner.tenant_mut(tenant);
+                    ts.spilled -= 1;
+                    ts.faults += 1;
+                    if live {
+                        ts.in_use += 1;
+                    }
+                }
+                if live {
                     inner.in_use += 1;
                     inner.high_water = inner.high_water.max(inner.in_use);
                 } else {
@@ -382,7 +515,8 @@ impl ChunkArena {
                     // deferred free (the buffer stays cached for reuse).
                     inner.free.push(id);
                 }
-                if let Some(l) = &self.ledger {
+                let tenant_ledger = inner.tenants[tenant as usize].ledger.clone();
+                if let Some(l) = tenant_ledger.as_ref().or(self.ledger.as_ref()) {
                     l.record_spill_read((CHUNK_BYTES * 8) as f64);
                 }
                 chunks[pos] = Some(buf);
@@ -391,11 +525,15 @@ impl ChunkArena {
         }
         // Faulting a run back in may overshoot the budget; re-evict cold
         // chunks (the pinned Arcs stay valid regardless).
+        inner.pin_stalls += stalls;
         let pending = self.plan_evictions(&mut inner);
         drop(inner);
         self.complete_evictions(pending);
         if wait_us > 0 {
             crate::obs::metrics::PIN_WAIT_US.record(wait_us);
+        }
+        if stalls > 0 {
+            crate::obs::metrics::PIN_STALL_RETRIES.add(stalls);
         }
         PinnedStream {
             chunks: chunks
@@ -431,51 +569,124 @@ impl ChunkArena {
             if inner.slots[idx].io != IoState::Idle {
                 continue; // complete_evictions / the faulting pin finalizes
             }
+            let tenant = inner.slots[idx].tenant;
             match inner.slots[idx].file_slot.take() {
                 Some(f) => {
                     inner.free_file_slots.push(f);
                     inner.spilled -= 1;
+                    inner.tenant_mut(tenant).spilled -= 1;
                 }
-                None => inner.in_use -= 1,
+                None => {
+                    inner.in_use -= 1;
+                    inner.tenant_mut(tenant).in_use -= 1;
+                }
             }
             inner.free.push(id);
         }
     }
 
-    /// Pick the coldest live resident chunks to evict until the DRAM tier
-    /// is back under budget (no-op when unbounded), reserve their spill
-    /// slots, and mark them `Writing` — the caller performs the pwrites
-    /// via [`ChunkArena::complete_evictions`] *after* dropping the lock.
+    /// Pick cold live resident chunks to evict, reserve their spill slots,
+    /// and mark them `Writing` — the caller performs the pwrites via
+    /// [`ChunkArena::complete_evictions`] *after* dropping the lock.
+    ///
+    /// Planning runs in two passes.  Pass 1 enforces each tenant's own
+    /// budget: an over-budget tenant contributes its own coldest chunks,
+    /// regardless of global headroom, so one tenant's churn becomes that
+    /// tenant's spill traffic and never a neighbor's fault storm.  Pass 2
+    /// is the global DRAM budget backstop, keyed `(priority, stamp)` so
+    /// lower-priority tenants evict first and equal priorities reduce to
+    /// the historical cold-first order.
     fn plan_evictions(&self, inner: &mut Slabs) -> Vec<PendingSpill> {
-        if self.budget_bytes == 0 {
-            return Vec::new();
+        let eligible = |s: &Slot| {
+            s.live && s.buf.is_some() && s.io == IoState::Idle && s.file_slot.is_none()
+        };
+        let mut selected: Vec<u32> = Vec::new();
+        // Pass 1: per-tenant budget enforcement (skipped entirely for
+        // legacy single-owner arenas, which register no budgets).
+        if inner.tenants.iter().any(|t| t.budget_chunks.is_some()) {
+            // Chunks already being written out will leave `in_use` when
+            // their I/O completes; don't double-evict for them.
+            let over: Vec<(u32, usize)> = inner
+                .tenants
+                .iter()
+                .enumerate()
+                .filter_map(|(t, ts)| {
+                    let budget = ts.budget_chunks?;
+                    let effective = ts.in_use.saturating_sub(ts.pending_writes);
+                    (effective > budget).then_some((t as u32, effective - budget))
+                })
+                .collect();
+            if !over.is_empty() {
+                // One scan builds candidate lists only for the tenants
+                // that are actually over budget.
+                let mut cands: Vec<Vec<(u64, u32)>> = vec![Vec::new(); over.len()];
+                for (i, s) in inner.slots.iter().enumerate() {
+                    if !eligible(s) {
+                        continue;
+                    }
+                    if let Some(oi) = over.iter().position(|&(t, _)| t == s.tenant) {
+                        cands[oi].push((s.stamp, i as u32));
+                    }
+                }
+                for (&(tenant, need), mut list) in over.iter().zip(cands) {
+                    let k = need.min(list.len());
+                    if k == 0 {
+                        continue;
+                    }
+                    if k < list.len() {
+                        list.select_nth_unstable(k - 1);
+                        list.truncate(k);
+                    }
+                    for (_, id) in list {
+                        inner.slots[id as usize].io = IoState::Writing;
+                        inner.pending_writes += 1;
+                        inner.tenant_mut(tenant).pending_writes += 1;
+                        selected.push(id);
+                    }
+                }
+            }
         }
-        let budget_chunks = self.budget_bytes / CHUNK_BYTES;
-        // Chunks already being written out will leave `in_use` when their
-        // I/O completes; don't double-evict for them.
-        let effective = inner.in_use.saturating_sub(inner.pending_writes);
-        if effective <= budget_chunks {
-            return Vec::new();
+        // Pass 2: global budget backstop (0 = unbounded DRAM tier).  Pass
+        // 1's selections are already marked `Writing` and counted in
+        // `pending_writes`, so they are neither re-selected nor
+        // double-counted here.
+        if self.budget_bytes != 0 {
+            let budget_chunks = self.budget_bytes / CHUNK_BYTES;
+            let effective = inner.in_use.saturating_sub(inner.pending_writes);
+            if effective > budget_chunks {
+                let tenants = &inner.tenants;
+                let mut cands: Vec<(u8, u64, u32)> = inner
+                    .slots
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, s)| eligible(s))
+                    .map(|(i, s)| {
+                        let pri = tenants.get(s.tenant as usize).map_or(0, |t| t.priority);
+                        (pri, s.stamp, i as u32)
+                    })
+                    .collect();
+                // Only the k coldest need to go: partition them to the
+                // front in O(n) instead of fully sorting the candidate
+                // list (which would cost O(n log n) under the arena lock
+                // on every over-budget store).
+                let k = (effective - budget_chunks).min(cands.len());
+                if k > 0 {
+                    if k < cands.len() {
+                        cands.select_nth_unstable(k - 1);
+                        cands.truncate(k);
+                    }
+                    for (_, _, id) in cands {
+                        let tenant = inner.slots[id as usize].tenant;
+                        inner.slots[id as usize].io = IoState::Writing;
+                        inner.pending_writes += 1;
+                        inner.tenant_mut(tenant).pending_writes += 1;
+                        selected.push(id);
+                    }
+                }
+            }
         }
-        let mut cands: Vec<(u64, u32)> = inner
-            .slots
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| {
-                s.live && s.buf.is_some() && s.io == IoState::Idle && s.file_slot.is_none()
-            })
-            .map(|(i, s)| (s.stamp, i as u32))
-            .collect();
-        // Only the k coldest need to go: partition them to the front in
-        // O(n) instead of fully sorting the candidate list (which would
-        // cost O(n log n) under the arena lock on every over-budget store).
-        let k = (effective - budget_chunks).min(cands.len());
-        if k == 0 {
+        if selected.is_empty() {
             return Vec::new();
-        }
-        if k < cands.len() {
-            cands.select_nth_unstable(k - 1);
-            cands.truncate(k);
         }
         if inner.spill_file.is_none() {
             inner.spill_file = Some(Arc::new(create_spill_file(self.spill_dir.as_deref())));
@@ -486,8 +697,8 @@ impl ChunkArena {
         // slots into a single pwrite, and the symmetric fault path gets
         // adjacency for free when the run is pinned back.
         inner.free_file_slots.sort_unstable_by(|a, b| b.cmp(a));
-        let mut out = Vec::with_capacity(cands.len());
-        for (_, id) in cands {
+        let mut out = Vec::with_capacity(selected.len());
+        for id in selected {
             let fslot = match inner.free_file_slots.pop() {
                 Some(f) => f,
                 None => {
@@ -496,12 +707,10 @@ impl ChunkArena {
                     f
                 }
             };
-            inner.slots[id as usize].io = IoState::Writing;
             let buf = inner.slots[id as usize]
                 .buf
                 .clone()
                 .expect("eviction candidate is resident");
-            inner.pending_writes += 1;
             out.push(PendingSpill {
                 id,
                 fslot,
@@ -558,13 +767,25 @@ impl ChunkArena {
             inner.pending_writes -= 1;
             inner.slots[idx].io = IoState::Idle;
             inner.in_use -= 1;
+            let tenant = inner.slots[idx].tenant;
+            {
+                let ts = inner.tenant_mut(tenant);
+                ts.pending_writes -= 1;
+                ts.in_use -= 1;
+            }
             if inner.slots[idx].live {
                 inner.slots[idx].file_slot = Some(p.fslot);
                 inner.slots[idx].buf = None;
                 inner.spilled += 1;
                 inner.spill_high_water = inner.spill_high_water.max(inner.spilled);
                 inner.evictions += 1;
-                if let Some(l) = &self.ledger {
+                {
+                    let ts = inner.tenant_mut(tenant);
+                    ts.spilled += 1;
+                    ts.evictions += 1;
+                }
+                let tenant_ledger = inner.tenants[tenant as usize].ledger.clone();
+                if let Some(l) = tenant_ledger.as_ref().or(self.ledger.as_ref()) {
                     l.record_spill_write((CHUNK_BYTES * 8) as f64);
                 }
             } else {
@@ -631,6 +852,28 @@ impl ChunkArena {
     /// (at or below [`Self::evictions`]; see [`Self::spill_pread_calls`]).
     pub fn spill_pwrite_calls(&self) -> u64 {
         self.inner.lock().unwrap().pwrite_calls
+    }
+
+    /// Bounded pin waits taken over the arena's lifetime: pass-1 retries
+    /// whose chunk was still in flight when the wait ended.  The
+    /// starvation-observability counter next to `stash_pin_wait_us`.
+    pub fn pin_stalls(&self) -> u64 {
+        self.inner.lock().unwrap().pin_stalls
+    }
+
+    /// Point-in-time accounting for one tenant (zeros if the id was never
+    /// registered or never stored).
+    pub fn tenant_stats(&self, tenant: u32) -> TenantStats {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .tenants
+            .get(tenant as usize)
+            .map_or(TenantStats::default(), |t| TenantStats {
+                in_use_bytes: t.in_use * CHUNK_BYTES,
+                spilled_bytes: t.spilled * CHUNK_BYTES,
+                evictions: t.evictions,
+                faults: t.faults,
+            })
     }
 }
 
@@ -849,5 +1092,137 @@ mod tests {
         assert_eq!(arena.in_use_bytes(), 0);
         assert_eq!(arena.spill_in_use_bytes(), 0);
         assert!(arena.evictions() >= arena.faults());
+    }
+
+    #[test]
+    fn over_budget_tenant_evicts_its_own_chunks_first() {
+        // Global budget fits 4 chunks, so pass 2 never triggers here; the
+        // over-budget tenant's own coldest chunk must spill even with
+        // global headroom, and the neighbor's chunk must stay resident.
+        let arena = ChunkArena::with_budget(4 * CHUNK_BYTES, None, None);
+        let ta = arena.register_tenant(CHUNK_BYTES, 0, None);
+        let tb = arena.register_tenant(CHUNK_BYTES, 0, None);
+        let wb = vec![1u64; CHUNK_WORDS];
+        let wa1 = vec![2u64; CHUNK_WORDS];
+        let wa2 = vec![3u64; CHUNK_WORDS];
+        let sb = arena.store_for(tb, &wb, CHUNK_WORDS * 64);
+        let sa1 = arena.store_for(ta, &wa1, CHUNK_WORDS * 64);
+        let sa2 = arena.store_for(ta, &wa2, CHUNK_WORDS * 64);
+        assert_eq!(arena.tenant_stats(ta).evictions, 1, "a must evict its own");
+        assert_eq!(arena.tenant_stats(ta).in_use_bytes, CHUNK_BYTES);
+        assert_eq!(arena.tenant_stats(tb).evictions, 0);
+        assert_eq!(arena.tenant_stats(tb).in_use_bytes, CHUNK_BYTES);
+        // everything reads back exact, and b never faults
+        assert_eq!(arena.load(&sa1), wa1);
+        assert_eq!(arena.load(&sa2), wa2);
+        assert_eq!(arena.load(&sb), wb);
+        assert_eq!(arena.tenant_stats(tb).faults, 0);
+        arena.release(sa1);
+        arena.release(sa2);
+        arena.release(sb);
+        assert_eq!(arena.tenant_stats(ta).in_use_bytes, 0);
+        assert_eq!(arena.tenant_stats(tb).in_use_bytes, 0);
+    }
+
+    #[test]
+    fn churning_tenant_cannot_inflate_neighbor_faults() {
+        // The arena-level fairness contract: a tenant churning far past
+        // its lease spills only its own working set.  The calm tenant's
+        // streams stay resident and fault exactly zero times.
+        let arena = ChunkArena::with_budget(8 * CHUNK_BYTES, None, None);
+        let churn = arena.register_tenant(2 * CHUNK_BYTES, 0, None);
+        let calm = arena.register_tenant(4 * CHUNK_BYTES, 0, None);
+        let calm_words: Vec<Vec<u64>> =
+            (0..4u64).map(|i| vec![i + 10; CHUNK_WORDS]).collect();
+        let calm_seqs: Vec<_> = calm_words
+            .iter()
+            .map(|w| arena.store_for(calm, w, CHUNK_WORDS * 64))
+            .collect();
+        // churner repeatedly holds 2 two-chunk streams against a 2-chunk
+        // budget — 10x-style pressure, every round over budget
+        let mut held: Option<ChunkSeq> = None;
+        for round in 0..40u64 {
+            let w = vec![round; CHUNK_WORDS * 2];
+            let s = arena.store_for(churn, &w, CHUNK_WORDS * 2 * 64);
+            assert_eq!(arena.load(&s), w);
+            if let Some(prev) = held.replace(s) {
+                arena.release(prev);
+            }
+        }
+        if let Some(s) = held {
+            arena.release(s);
+        }
+        assert!(arena.tenant_stats(churn).evictions > 0);
+        assert_eq!(arena.tenant_stats(calm).evictions, 0);
+        for (s, w) in calm_seqs.iter().zip(&calm_words) {
+            let pin = arena.pin(s);
+            assert!(!pin.faulted, "calm tenant must stay DRAM-resident");
+            assert_eq!(pin.segs()[0], &w[..]);
+        }
+        assert_eq!(arena.tenant_stats(calm).faults, 0);
+        for s in calm_seqs {
+            arena.release(s);
+        }
+    }
+
+    #[test]
+    fn global_backstop_evicts_low_priority_tenants_first() {
+        // No per-tenant budgets: the global pass keys on (priority, stamp),
+        // so the low-priority tenant's chunk spills even though the
+        // high-priority tenant's chunk is colder.
+        let arena = ChunkArena::with_budget(2 * CHUNK_BYTES, None, None);
+        let lo = arena.register_tenant(0, 0, None);
+        let hi = arena.register_tenant(0, 1, None);
+        let w_hi = vec![1u64; CHUNK_WORDS];
+        let w_lo = vec![2u64; CHUNK_WORDS];
+        let w_new = vec![3u64; CHUNK_WORDS];
+        let s_hi = arena.store_for(hi, &w_hi, CHUNK_WORDS * 64); // coldest
+        let s_lo = arena.store_for(lo, &w_lo, CHUNK_WORDS * 64);
+        let s_new = arena.store_for(lo, &w_new, CHUNK_WORDS * 64); // over budget
+        assert_eq!(arena.tenant_stats(lo).evictions, 1);
+        assert_eq!(arena.tenant_stats(hi).evictions, 0);
+        assert_eq!(arena.load(&s_lo), w_lo);
+        assert_eq!(arena.load(&s_hi), w_hi);
+        assert_eq!(arena.load(&s_new), w_new);
+        arena.release(s_hi);
+        arena.release(s_lo);
+        arena.release(s_new);
+    }
+
+    #[test]
+    fn pin_survives_sustained_eviction_churn() {
+        // Regression for the pin retry-loop starvation: with the stamp
+        // taken once at entry, a pinner racing a sustained store stream
+        // kept re-marking its chunks with an ever-staler stamp, so they
+        // were re-evicted the moment they landed and the pin could spin
+        // indefinitely.  Fresh per-pass stamps + the bounded wait make
+        // this terminate; completion with exact bits is the assertion.
+        use std::sync::atomic::AtomicBool;
+        let arena = Arc::new(ChunkArena::with_budget(2 * CHUNK_BYTES, None, None));
+        let target: Vec<u64> = (0..CHUNK_WORDS as u64 * 2).map(|i| i ^ 0xABCD).collect();
+        let seq = Arc::new(arena.store(&target, target.len() * 64));
+        let stop = Arc::new(AtomicBool::new(false));
+        let churn: Vec<_> = (0..2u64)
+            .map(|t| {
+                let arena = Arc::clone(&arena);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let words = vec![t; CHUNK_WORDS];
+                    while !stop.load(Ordering::Relaxed) {
+                        let s = arena.store(&words, CHUNK_WORDS * 64);
+                        arena.release(s);
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..50 {
+            let pin = arena.pin(&seq);
+            let got: Vec<u64> = pin.segs().concat();
+            assert_eq!(got, target);
+        }
+        stop.store(true, Ordering::Relaxed);
+        for h in churn {
+            h.join().unwrap();
+        }
     }
 }

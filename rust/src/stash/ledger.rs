@@ -10,6 +10,7 @@
 
 use crate::obs::metrics::{HistBuckets, HistSummary, Histogram};
 use crate::stats::{ComponentBits, Footprint};
+use std::borrow::Cow;
 use std::sync::Mutex;
 
 /// Which side of the [`Footprint`] ledger a tensor belongs to.
@@ -140,11 +141,30 @@ pub struct StashLedger {
     /// Flight-recorder burst detectors (eviction storms / fault bursts).
     burst_evict: Mutex<BurstWindow>,
     burst_fault: Mutex<BurstWindow>,
+    /// Owner / tenant label stamped onto this ledger's pressure events
+    /// (set at lease time; `None` for single-owner stashes).
+    owner: Mutex<Option<String>>,
 }
 
 impl StashLedger {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Tag this ledger's pressure events with an owner/tenant label so
+    /// `repro inspect` can attribute eviction storms and fault bursts to
+    /// the lease that caused them instead of reporting them globally.
+    pub fn set_owner(&self, label: impl Into<String>) {
+        *self.owner.lock().unwrap() = Some(label.into());
+    }
+
+    /// The owner/tenant label, if one was set.
+    pub fn owner(&self) -> Option<String> {
+        self.owner.lock().unwrap().clone()
+    }
+
+    fn owner_cow(&self) -> Option<Cow<'static, str>> {
+        self.owner.lock().unwrap().clone().map(Cow::Owned)
     }
 
     /// Cut an epoch boundary: record the traffic since the previous mark.
@@ -224,7 +244,12 @@ impl StashLedger {
         // (the budget is actively thrashing, not just trimming cold data)
         let now = crate::obs::trace::now_us();
         if let Some(n) = self.burst_evict.lock().unwrap().note(now) {
-            crate::obs::events::stash_pressure("eviction_storm", n, BURST_WINDOW_US);
+            crate::obs::events::stash_pressure_for(
+                self.owner_cow(),
+                "eviction_storm",
+                n,
+                BURST_WINDOW_US,
+            );
         }
     }
 
@@ -237,7 +262,12 @@ impl StashLedger {
         }
         let now = crate::obs::trace::now_us();
         if let Some(n) = self.burst_fault.lock().unwrap().note(now) {
-            crate::obs::events::stash_pressure("fault_burst", n, BURST_WINDOW_US);
+            crate::obs::events::stash_pressure_for(
+                self.owner_cow(),
+                "fault_burst",
+                n,
+                BURST_WINDOW_US,
+            );
         }
     }
 
@@ -356,6 +386,74 @@ mod tests {
         assert_eq!(burst.kind, "stash_pressure");
         assert_eq!(burst.source, "stash");
         assert_eq!(burst.from, BURST_THRESHOLD as f64, "episode count");
+        assert_eq!(burst.owner, None, "single-owner ledgers stay untagged");
+    }
+
+    #[test]
+    fn pressure_events_carry_the_owner_tag() {
+        crate::obs::events::capture_begin();
+        let l = StashLedger::new();
+        l.set_owner("serve.t1");
+        for _ in 0..BURST_THRESHOLD {
+            l.record_spill_write(4096.0);
+        }
+        let events = crate::obs::events::capture_end();
+        let burst = events.iter().find(|e| e.trigger == "eviction_storm").unwrap();
+        assert_eq!(burst.owner.as_deref(), Some("serve.t1"));
+        assert_eq!(l.owner().as_deref(), Some("serve.t1"));
+    }
+
+    #[test]
+    fn concurrent_epoch_cuts_are_disjoint_and_sum_consistent() {
+        // Satellite coverage: two owners cutting epochs while workers
+        // stream writes/reads.  The marks lock serializes cuts into
+        // disjoint [last, now] intervals, so the per-row deltas must be
+        // non-negative and sum exactly to the cumulative counters — an
+        // overlapping or smeared cut breaks one of the two.
+        use std::sync::Arc;
+        let l = Arc::new(StashLedger::new());
+        let writers: Vec<_> = (0..2)
+            .map(|_| {
+                let l = Arc::clone(&l);
+                std::thread::spawn(move || {
+                    for _ in 0..500 {
+                        l.record_write(TensorClass::Activation, cb(0.0, 0.0, 64.0, 0.0), 2);
+                        l.record_read(64.0);
+                    }
+                })
+            })
+            .collect();
+        let cutters: Vec<_> = (0..2)
+            .map(|_| {
+                let l = Arc::clone(&l);
+                std::thread::spawn(move || {
+                    for _ in 0..25 {
+                        l.mark_epoch();
+                        std::thread::yield_now();
+                    }
+                })
+            })
+            .collect();
+        for h in writers {
+            h.join().unwrap();
+        }
+        for h in cutters {
+            h.join().unwrap();
+        }
+        l.mark_epoch(); // final cut collects any tail traffic
+        let rows = l.epoch_traffic();
+        assert_eq!(rows.len(), 51);
+        let s = l.snapshot();
+        assert!(
+            rows.iter().all(|r| r.written_bits >= 0.0 && r.read_bits >= 0.0),
+            "overlapping cuts would produce a negative delta"
+        );
+        let written: f64 = rows.iter().map(|r| r.written_bits).sum();
+        let read: f64 = rows.iter().map(|r| r.read_bits).sum();
+        assert!((written - s.written_bits).abs() < 1e-6, "cuts partition writes");
+        assert!((read - s.read_bits).abs() < 1e-6, "cuts partition reads");
+        assert!((s.written_bits - 2.0 * 500.0 * 64.0).abs() < 1e-6);
+        assert!((s.read_bits - 2.0 * 500.0 * 64.0).abs() < 1e-6);
     }
 
     #[test]

@@ -48,7 +48,7 @@ pub mod codec;
 pub mod ledger;
 pub mod pool;
 
-pub use arena::{ChunkArena, ChunkSeq, PinnedStream, CHUNK_BYTES, CHUNK_WORDS};
+pub use arena::{ChunkArena, ChunkSeq, PinnedStream, TenantStats, CHUNK_BYTES, CHUNK_WORDS};
 pub use codec::{
     ContainerMeta, EncodedStreams, GeckoStashCodec, JsStashCodec, RawStashCodec, SfpStashCodec,
     StashCodec,
@@ -57,6 +57,7 @@ pub use ledger::{EpochTraffic, LedgerSnapshot, StashLedger, TensorClass};
 pub use pool::StashPool;
 
 use crate::gecko::SegReader;
+use crate::obs::metrics::HistSummary;
 use crate::stats::ComponentBits;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -197,19 +198,48 @@ pub struct Stash {
     pool: StashPool,
     chunk_values: usize,
     put_seq: AtomicU64,
+    /// Arena tenant this stash stores under (0 = sole owner of a private
+    /// arena; leased facades over a shared arena carry their lease's id).
+    tenant: u32,
 }
 
 impl Stash {
     pub fn new(cfg: StashConfig) -> Stash {
         let ledger = Arc::new(StashLedger::new());
+        let arena = Arc::new(ChunkArena::with_budget(
+            cfg.budget_bytes,
+            None,
+            Some(Arc::clone(&ledger)),
+        ));
+        Self::facade(cfg, arena, ledger, 0)
+    }
+
+    /// Per-tenant facade over a *shared* [`ChunkArena`]: every stream this
+    /// stash stores is tagged with `tenant` (already registered on the
+    /// arena, e.g. via [`ChunkArena::register_tenant`] or a
+    /// [`crate::serve::StashService`] lease), so placement honors the
+    /// tenant's budget and its spill traffic lands in `ledger` — the
+    /// lease's per-tenant ledger.  `cfg.budget_bytes` is ignored: the
+    /// shared arena's per-tenant and global budgets govern placement.
+    pub fn with_arena(
+        cfg: StashConfig,
+        arena: Arc<ChunkArena>,
+        ledger: Arc<StashLedger>,
+        tenant: u32,
+    ) -> Stash {
+        Self::facade(cfg, arena, ledger, tenant)
+    }
+
+    fn facade(
+        cfg: StashConfig,
+        arena: Arc<ChunkArena>,
+        ledger: Arc<StashLedger>,
+        tenant: u32,
+    ) -> Stash {
         Stash {
             codec: cfg.codec.build(),
             kind: cfg.codec,
-            arena: Arc::new(ChunkArena::with_budget(
-                cfg.budget_bytes,
-                None,
-                Some(Arc::clone(&ledger)),
-            )),
+            arena,
             ledger,
             store: Arc::new(Mutex::new(HashMap::new())),
             pool: StashPool::new(cfg.threads, cfg.queue_depth),
@@ -219,6 +249,7 @@ impl Stash {
                 cfg.chunk_values
             },
             put_seq: AtomicU64::new(0),
+            tenant,
         }
     }
 
@@ -236,6 +267,7 @@ impl Stash {
         let store = Arc::clone(&self.store);
         let chunk_values = self.chunk_values;
         let kind = self.kind;
+        let tenant = self.tenant;
         let seq = self.put_seq.fetch_add(1, Ordering::SeqCst);
         self.pool.submit(Box::new(move || {
             let _sp = crate::obs::span("stash", "encode");
@@ -246,7 +278,7 @@ impl Stash {
             let streams: Vec<ChunkSeq> = enc
                 .streams
                 .iter()
-                .map(|(words, len)| arena.store(words, *len))
+                .map(|(words, len)| arena.store_for(tenant, words, *len))
                 .collect();
             ledger.record_write(id.class, enc.bits, enc.count);
             let fresh = StoredTensor {
@@ -416,6 +448,24 @@ impl Stash {
     /// Peak concurrently-spilled bytes over the stash's lifetime.
     pub fn arena_spill_high_water_bytes(&self) -> usize {
         self.arena.spill_high_water_bytes()
+    }
+
+    /// This stash's tenant id on its (possibly shared) arena.
+    pub fn tenant(&self) -> u32 {
+        self.tenant
+    }
+
+    /// This tenant's accounting slice of the arena (for a sole-owner
+    /// stash, tenant 0 — i.e. the whole arena).
+    pub fn tenant_stats(&self) -> TenantStats {
+        self.arena.tenant_stats(self.tenant)
+    }
+
+    /// Restore-latency digests from this stash's ledger: `(DRAM hit,
+    /// spill fault)` — the per-tenant tier split the serve scenario
+    /// aggregates.
+    pub fn restore_latency(&self) -> (HistSummary, HistSummary) {
+        self.ledger.restore_latency()
     }
 
     pub fn codec_name(&self) -> &'static str {
@@ -669,6 +719,54 @@ mod tests {
         assert_eq!(stash.arena_spill_bytes(), 0);
         assert_eq!(stash.arena_in_use_bytes(), 0);
         assert_eq!(stash.failures(), 0);
+    }
+
+    #[test]
+    fn leased_facades_share_one_arena_with_isolated_accounting() {
+        // Two per-tenant facades over one shared arena: stores route to
+        // their own tenant, reads stay bit-exact, and the tenant stats
+        // partition the arena's accounting exactly.
+        let arena = Arc::new(ChunkArena::with_budget(64 * CHUNK_BYTES, None, None));
+        let la = Arc::new(StashLedger::new());
+        let lb = Arc::new(StashLedger::new());
+        let ta = arena.register_tenant(32 * CHUNK_BYTES, 0, Some(Arc::clone(&la)));
+        let tb = arena.register_tenant(32 * CHUNK_BYTES, 0, Some(Arc::clone(&lb)));
+        let cfg = StashConfig {
+            codec: CodecKind::Raw,
+            threads: 1,
+            queue_depth: 2,
+            chunk_values: 4096,
+            budget_bytes: 0,
+        };
+        let sa = Stash::with_arena(cfg, Arc::clone(&arena), la, ta);
+        let sb = Stash::with_arena(cfg, Arc::clone(&arena), lb, tb);
+        let meta = ContainerMeta::new(Container::Fp32, 23);
+        let va = ValueModel::weights().sample_values(20_000, 1, false);
+        let vb = ValueModel::weights().sample_values(20_000, 2, false);
+        sa.put(TensorId::act(0), va.clone(), meta);
+        sb.put(TensorId::act(0), vb.clone(), meta);
+        sa.flush();
+        sb.flush();
+        // each facade sees only its own tensor under the shared arena...
+        assert_eq!(sa.resident_tensors(), 1);
+        assert_eq!(sb.resident_tensors(), 1);
+        // ...and its own accounting slice partitions the arena total
+        assert!(sa.tenant_stats().in_use_bytes > 0);
+        assert_eq!(
+            sa.tenant_stats().in_use_bytes + sb.tenant_stats().in_use_bytes,
+            arena.in_use_bytes()
+        );
+        assert!(sa.ledger().written_bits > 0.0);
+        let ba = sa.take(TensorId::act(0)).unwrap();
+        for (&v, &b) in va.iter().zip(&ba) {
+            assert_eq!(meta.quantized(v).to_bits(), b.to_bits());
+        }
+        let bb = sb.take(TensorId::act(0)).unwrap();
+        for (&v, &b) in vb.iter().zip(&bb) {
+            assert_eq!(meta.quantized(v).to_bits(), b.to_bits());
+        }
+        assert_eq!(arena.in_use_bytes(), 0);
+        assert_eq!(sa.failures() + sb.failures(), 0);
     }
 
     #[test]
