@@ -9,7 +9,7 @@
 //! stream) so `repro inspect results-codec --baseline BENCH_codec.json
 //! --gate PCT` gates codec regressions exactly like lab-run regressions.
 
-use sfp::formats::Container;
+use sfp::formats::{Container, ExponentLayout};
 use sfp::gecko::{self, Kernel, Mode, SegReader};
 use sfp::sfp::{sfp_bits, SfpCodec};
 use sfp::stash::{
@@ -183,6 +183,20 @@ fn main() {
         });
         cases.push(Case::new(&format!("stash/decode_{name}"), f32_bytes, r));
     }
+
+    // -- block-shared exponent layout (Flexpoint-style) on the gecko path:
+    // one shared exponent per 16-value block, max-reduced at encode --
+    let blk = ContainerMeta::new(Container::Bf16, 7)
+        .with_layout(ExponentLayout::BlockShared { block: 16, bits: 8 });
+    let r = b.run("encode_gecko_blk16", n as f64, || {
+        black_box(GeckoStashCodec.encode(black_box(&acts), &blk));
+    });
+    cases.push(Case::new("stash/encode_gecko_blk16", f32_bytes, r));
+    let enc = GeckoStashCodec.encode(&acts, &blk);
+    let r = b.run("decode_gecko_blk16", n as f64, || {
+        black_box(GeckoStashCodec.decode(black_box(&enc), &blk));
+    });
+    cases.push(Case::new("stash/decode_gecko_blk16", f32_bytes, r));
 
     write_manifest(&cases);
 }

@@ -33,6 +33,7 @@ fn smoke_2x2x2() -> JobGraph {
                         sample: 8 * 1024,
                         seed: STREAM_SEED,
                         threads: 0,
+                        layout: String::new(),
                     }),
                     vec![],
                 ));

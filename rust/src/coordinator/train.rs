@@ -50,6 +50,9 @@ pub enum Variant {
     SfpQmQe(Container),
     /// BitWave: loss-driven network-wide mantissa + exponent bitlengths.
     SfpBw(Container),
+    /// Quantum Mantissa + AdaptivFloat: learned mantissa bitlengths with a
+    /// per-tensor exponent bias window fitted from the range statistics.
+    SfpAf(Container),
 }
 
 impl Variant {
@@ -60,7 +63,8 @@ impl Variant {
             Variant::SfpQm(c)
             | Variant::SfpBc(c)
             | Variant::SfpQmQe(c)
-            | Variant::SfpBw(c) => *c,
+            | Variant::SfpBw(c)
+            | Variant::SfpAf(c) => *c,
         }
     }
 
@@ -72,6 +76,7 @@ impl Variant {
             Variant::SfpBc(c) => format!("sfp_bc_{}", c).to_lowercase(),
             Variant::SfpQmQe(c) => format!("sfp_qmqe_{}", c).to_lowercase(),
             Variant::SfpBw(c) => format!("sfp_bw_{}", c).to_lowercase(),
+            Variant::SfpAf(c) => format!("sfp_af_{}", c).to_lowercase(),
         }
     }
 
@@ -83,6 +88,7 @@ impl Variant {
             "bc" | "sfp_bc" => Some(Variant::SfpBc(container)),
             "qmqe" | "qm_qe" | "sfp_qmqe" => Some(Variant::SfpQmQe(container)),
             "bw" | "bitwave" | "sfp_bw" => Some(Variant::SfpBw(container)),
+            "af" | "adaptivfloat" | "sfp_af" => Some(Variant::SfpAf(container)),
             _ => None,
         }
     }
@@ -90,13 +96,19 @@ impl Variant {
     /// Adapts mantissa bitlengths through the compiled step's in-graph
     /// learner (the QM family).
     fn learns_mantissa_in_graph(&self) -> bool {
-        matches!(self, Variant::SfpQm(_) | Variant::SfpQmQe(_))
+        matches!(
+            self,
+            Variant::SfpQm(_) | Variant::SfpQmQe(_) | Variant::SfpAf(_)
+        )
     }
 
     /// Needs per-period exponent-range statistics (the exponent-adapting
     /// policies).
     fn needs_exp_stats(&self) -> bool {
-        matches!(self, Variant::SfpQmQe(_) | Variant::SfpBw(_))
+        matches!(
+            self,
+            Variant::SfpQmQe(_) | Variant::SfpBw(_) | Variant::SfpAf(_)
+        )
     }
 
     /// Build the adaptation policy driving this variant.
@@ -121,6 +133,11 @@ impl Variant {
                 Box::new(QuantumExponent::new(c, epochs, steps_per_epoch, nonneg)),
             )),
             Variant::SfpBw(_) => Box::new(crate::policy::BitWave::new(c, nonneg)),
+            Variant::SfpAf(_) => Box::new(Composite::new(
+                "qm+af",
+                Box::new(QuantumMantissa::e2e(c, layers, epochs)),
+                Box::new(crate::policy::AdaptivFloatPolicy::new(c, epochs, nonneg)),
+            )),
         }
     }
 }
@@ -671,9 +688,11 @@ impl<'rt> Trainer<'rt> {
                         | Variant::SfpBc(_)
                         | Variant::SfpQmQe(_)
                         | Variant::SfpBw(_)
+                        | Variant::SfpAf(_)
                 );
-                // exponent-adapting variants charge the learned fixed-width
-                // exponent field (the paper's pre-Gecko QM+QE / BitWave
+                // exponent-adapting variants charge the plan's amortized
+                // exponent bits (learned field width, bias window, or
+                // block-shared — the paper's pre-Gecko QM+QE / BitWave
                 // accounting); the others charge Gecko's measured bits
                 let plan_exp = self.cfg.variant.needs_exp_stats();
                 for i in 0..l {
@@ -684,12 +703,12 @@ impl<'rt> Trainer<'rt> {
                         // Gecko (the step reports exact encoded bits);
                         // mantissa = adaptive bits × elements.
                         let exp_a = if plan_exp {
-                            self.plan.acts[i].exp_bits as f64 * a_elems[i]
+                            self.plan.acts[i].exp_bits_per_value() * a_elems[i]
                         } else {
                             a_gecko[i] as f64
                         };
                         let exp_w = if plan_exp {
-                            self.plan.weights[i].exp_bits as f64 * w_elems[i]
+                            self.plan.weights[i].exp_bits_per_value() * w_elems[i]
                         } else {
                             w_gecko[i] as f64
                         };

@@ -1,0 +1,532 @@
+//! [`ExponentLayout`] — the exponent axis as a first-class shape.
+//!
+//! Schrödinger's FP learns a per-value exponent *field width* (stored
+//! losslessly by Gecko); the two strongest related container families
+//! shape the exponent differently:
+//!
+//! * [`ExponentLayout::Width`] — the paper's shape: every value keeps its
+//!   own biased exponent in a learned `bits`-wide field, stored under a
+//!   lossless Gecko [`Mode`] (delta or fixed-bias).  Quantization is pure
+//!   mantissa truncation; the exponent never loses information.
+//! * [`ExponentLayout::Bias`] — AdaptivFloat: a per-tensor *learned bias*
+//!   centres a fixed `bits`-wide exponent window on the tensor's observed
+//!   range.  Exponents below the window flush to (signed) zero; above it
+//!   they saturate to the window top with a full mantissa.
+//! * [`ExponentLayout::BlockShared`] — Flexpoint: one shared exponent per
+//!   `block` values.  Each value stores an explicit-leading-one
+//!   significand of `mant + 1` bits, right-shifted by its distance from
+//!   the block maximum (small values lose low mantissa bits; values more
+//!   than `mant` octaves below the block max flush to zero).
+//!
+//! Every layout defines a deterministic quantizer ([`ExponentLayout::
+//! quantize_slice`]); the stash codecs round-trip bit-exactly to that
+//! quantizer for all four codecs and both kernels (property-tested).
+
+use super::{assemble, exponent, mag_width, quantize, Container, EXP_BITS, F32_MANT_BITS};
+use crate::gecko::Mode;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// How a tensor's exponents are shaped and stored (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ExponentLayout {
+    /// Per-value exponent in a learned `bits`-wide field, stored under a
+    /// lossless Gecko `mode` (today's Quantum-Exponent/BitWave shape).
+    Width { bits: u32, mode: Mode },
+    /// AdaptivFloat: fixed `bits`-wide field centred on a learned
+    /// per-tensor `bias`; out-of-window values flush/saturate.
+    Bias { bits: u32, bias: u8 },
+    /// Flexpoint: one `bits`-wide exponent shared by each `block` values;
+    /// values store `mant + 1`-bit explicit-leading-one significands.
+    BlockShared { block: usize, bits: u32 },
+}
+
+impl Default for ExponentLayout {
+    fn default() -> Self {
+        ExponentLayout::Width {
+            bits: EXP_BITS,
+            mode: Mode::Delta,
+        }
+    }
+}
+
+impl ExponentLayout {
+    /// The full-width per-value layout (the historical default).
+    pub fn is_default(&self) -> bool {
+        *self == Self::default()
+    }
+
+    /// Stored exponent-field width in bits, clamped to the container
+    /// exponent field ([`EXP_BITS`]) — a plan can never charge more
+    /// exponent bits than the container has.
+    pub fn field_bits(&self) -> u32 {
+        match *self {
+            ExponentLayout::Width { bits, .. } => bits.min(EXP_BITS),
+            ExponentLayout::Bias { bits, .. } => bits.clamp(1, EXP_BITS),
+            ExponentLayout::BlockShared { bits, .. } => bits.clamp(1, EXP_BITS),
+        }
+    }
+
+    /// Amortized exponent storage per value: the full field for per-value
+    /// layouts, `bits / block` for a shared exponent.
+    pub fn exponent_bits_per_value(&self) -> f64 {
+        match *self {
+            ExponentLayout::BlockShared { block, .. } => {
+                self.field_bits() as f64 / block.max(1) as f64
+            }
+            _ => self.field_bits() as f64,
+        }
+    }
+
+    /// Extra per-value mantissa-stream bits the layout costs: the
+    /// block-shared significand carries an explicit leading one.
+    pub fn mantissa_overhead_bits(&self) -> f64 {
+        match self {
+            ExponentLayout::BlockShared { .. } => 1.0,
+            _ => 0.0,
+        }
+    }
+
+    /// The Gecko storage mode for per-value exponent streams (`Delta`
+    /// for the non-Width layouts, which do not use Gecko's adaptive path).
+    pub fn gecko_mode(&self) -> Mode {
+        match *self {
+            ExponentLayout::Width { mode, .. } => mode,
+            _ => Mode::Delta,
+        }
+    }
+
+    /// Block size for shared-exponent layouts.
+    pub fn block(&self) -> Option<usize> {
+        match *self {
+            ExponentLayout::BlockShared { block, .. } => Some(block.max(1)),
+            _ => None,
+        }
+    }
+
+    /// Short human label for event streams and tables.
+    pub fn label(&self) -> String {
+        match *self {
+            ExponentLayout::Width { bits, mode: Mode::Delta } => format!("w{bits}"),
+            ExponentLayout::Width {
+                bits,
+                mode: Mode::FixedBias { bias, .. },
+            } => format!("w{bits}b{bias}"),
+            ExponentLayout::Bias { bits, bias } => format!("af{bits}b{bias}"),
+            ExponentLayout::BlockShared { block, bits } => format!("blk{block}e{bits}"),
+        }
+    }
+
+    /// The exponent window `[lo, hi]` (biased) a `Bias` layout keeps;
+    /// `None` for other layouts.
+    pub fn bias_window(&self) -> Option<(i32, i32)> {
+        match *self {
+            ExponentLayout::Bias { bias, .. } => {
+                let b = self.field_bits();
+                // field value 0 is reserved for zero; the remaining
+                // 2^b - 1 codes cover [lo, hi] centred on the bias
+                let lo = bias as i32 - (1i32 << (b - 1)) + 1;
+                Some((lo, lo + (1i32 << b) - 2))
+            }
+            _ => None,
+        }
+    }
+
+    /// The container value every stored f32 is reduced to under this
+    /// layout, for layouts whose quantizer is per-value.  Panics for
+    /// `BlockShared` (use [`ExponentLayout::quantize_slice`]).
+    pub fn quantize_value(&self, v: f32, mant: u32, container: Container) -> f32 {
+        match *self {
+            ExponentLayout::Width { .. } => quantize(v, mant, container),
+            ExponentLayout::Bias { .. } => {
+                let (lo, hi) = self.bias_window().unwrap();
+                bias_quantize(v, mant, container, lo, hi)
+            }
+            ExponentLayout::BlockShared { .. } => {
+                panic!("block-shared quantization needs the whole slice")
+            }
+        }
+    }
+
+    /// Quantize a whole tensor under this layout — the fixed point every
+    /// stash codec round-trips to.
+    pub fn quantize_slice(&self, vals: &[f32], mant: u32, container: Container) -> Vec<f32> {
+        match *self {
+            ExponentLayout::BlockShared { block, .. } => {
+                let n = mant.min(container.mant_bits());
+                let block = block.max(1);
+                let (emaxs, fields) = block_fields(vals, n, container, block, self.field_bits());
+                vals.iter()
+                    .enumerate()
+                    .map(|(i, &v)| {
+                        block_value(emaxs[i / block], fields[i], v.to_bits() >> 31, n)
+                    })
+                    .collect()
+            }
+            _ => vals
+                .iter()
+                .map(|&v| self.quantize_value(v, mant, container))
+                .collect(),
+        }
+    }
+
+    // ---- serialization --------------------------------------------------
+
+    /// Compact CLI/spec string (inverse of [`ExponentLayout::parse_spec`]);
+    /// the default layout renders as `""`.
+    pub fn spec_string(&self) -> String {
+        match *self {
+            _ if self.is_default() => String::new(),
+            ExponentLayout::Width { bits, mode: Mode::Delta } => format!("width:{bits}"),
+            ExponentLayout::Width { .. } => {
+                panic!("fixed-bias width layouts are policy-internal, not spec-addressable")
+            }
+            ExponentLayout::Bias { bits, bias } => format!("bias:{bits}:{bias}"),
+            ExponentLayout::BlockShared { block, bits } => format!("block:{block}:{bits}"),
+        }
+    }
+
+    /// Parse a CLI/spec string: `""`/`"width"` (default), `"width:BITS"`,
+    /// `"bias:BITS:BIAS"`, `"block:BLOCK"` (8-bit shared exponent) or
+    /// `"block:BLOCK:BITS"`.
+    pub fn parse_spec(s: &str) -> Result<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let num = |p: &str| -> Result<u32> {
+            p.parse::<u32>()
+                .map_err(|_| anyhow!("bad exponent-layout number '{p}' in '{s}'"))
+        };
+        match parts.as_slice() {
+            [""] | ["width"] => Ok(Self::default()),
+            ["width", b] => Ok(ExponentLayout::Width {
+                bits: num(b)?,
+                mode: Mode::Delta,
+            }),
+            ["bias", b, bias] => Ok(ExponentLayout::Bias {
+                bits: num(b)?,
+                bias: num(bias)?.min(254) as u8,
+            }),
+            ["block", blk] => Ok(ExponentLayout::BlockShared {
+                block: num(blk)?.max(1) as usize,
+                bits: EXP_BITS,
+            }),
+            ["block", blk, b] => Ok(ExponentLayout::BlockShared {
+                block: num(blk)?.max(1) as usize,
+                bits: num(b)?,
+            }),
+            _ => bail!("unknown exponent layout '{s}' (width:BITS|bias:BITS:BIAS|block:BLOCK[:BITS])"),
+        }
+    }
+
+    /// JSON form for policy checkpoints (inverse of
+    /// [`ExponentLayout::from_json`]).
+    pub fn to_json(&self) -> Json {
+        let obj = |k: &str, fields: Vec<(&str, f64)>| {
+            let mut inner = BTreeMap::new();
+            for (name, v) in fields {
+                inner.insert(name.to_string(), Json::Num(v));
+            }
+            let mut o = BTreeMap::new();
+            o.insert(k.to_string(), Json::Obj(inner));
+            Json::Obj(o)
+        };
+        match *self {
+            ExponentLayout::Width { bits, mode } => {
+                let mut inner = BTreeMap::new();
+                inner.insert("bits".to_string(), Json::Num(bits as f64));
+                inner.insert(
+                    "mode".to_string(),
+                    match mode {
+                        Mode::Delta => Json::Str("delta".to_string()),
+                        Mode::FixedBias { bias, group } => {
+                            let mut m = BTreeMap::new();
+                            m.insert("bias".to_string(), Json::Num(bias as f64));
+                            m.insert("group".to_string(), Json::Num(group as f64));
+                            Json::Obj(m)
+                        }
+                    },
+                );
+                let mut o = BTreeMap::new();
+                o.insert("width".to_string(), Json::Obj(inner));
+                Json::Obj(o)
+            }
+            ExponentLayout::Bias { bits, bias } => obj(
+                "bias",
+                vec![("bits", bits as f64), ("bias", bias as f64)],
+            ),
+            ExponentLayout::BlockShared { block, bits } => obj(
+                "block",
+                vec![("block", block as f64), ("bits", bits as f64)],
+            ),
+        }
+    }
+
+    /// Parse the JSON form produced by [`ExponentLayout::to_json`].
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let n = |j: &Json, k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("exponent layout: missing number '{k}'"))
+        };
+        if let Some(w) = j.get("width") {
+            let mode = match w.get("mode") {
+                Some(Json::Str(s)) if s == "delta" => Mode::Delta,
+                Some(m @ Json::Obj(_)) => Mode::FixedBias {
+                    bias: n(m, "bias")? as u8,
+                    group: n(m, "group")? as usize,
+                },
+                _ => bail!("exponent layout: bad width mode"),
+            };
+            Ok(ExponentLayout::Width {
+                bits: n(w, "bits")? as u32,
+                mode,
+            })
+        } else if let Some(b) = j.get("bias") {
+            Ok(ExponentLayout::Bias {
+                bits: n(b, "bits")? as u32,
+                bias: n(b, "bias")? as u8,
+            })
+        } else if let Some(b) = j.get("block") {
+            Ok(ExponentLayout::BlockShared {
+                block: n(b, "block")? as usize,
+                bits: n(b, "bits")? as u32,
+            })
+        } else {
+            bail!("exponent layout: unknown shape")
+        }
+    }
+}
+
+/// AdaptivFloat per-value quantizer: mantissa truncation, then clamp the
+/// biased exponent to the window `[lo, hi]` — below flushes to signed
+/// zero, above saturates to `hi` with a full mantissa.
+#[inline]
+pub fn bias_quantize(v: f32, mant: u32, container: Container, lo: i32, hi: i32) -> f32 {
+    let q = quantize(v, mant, container);
+    let e = exponent(q) as i32;
+    if e == 0 || e < lo {
+        return f32::from_bits(q.to_bits() & 0x8000_0000);
+    }
+    if e > hi {
+        let n = mant.min(container.mant_bits());
+        let full = if n == 0 { 0 } else { ((1u32 << n) - 1) << (F32_MANT_BITS - n) };
+        return assemble(q.to_bits() >> 31, hi as u32, full);
+    }
+    q
+}
+
+/// Flexpoint block fields: per block the shared (clamped) maximum biased
+/// exponent, and per value the `mant + 1`-bit explicit-leading-one
+/// significand shifted by its distance from the block maximum.  Handles
+/// ragged final blocks (any `vals.len()`).
+pub fn block_fields(
+    vals: &[f32],
+    mant: u32,
+    container: Container,
+    block: usize,
+    exp_bits: u32,
+) -> (Vec<u8>, Vec<u32>) {
+    let n = mant.min(container.mant_bits());
+    let block = block.max(1);
+    let cap = ((1u32 << exp_bits.clamp(1, EXP_BITS)) - 1) as i32;
+    let mut emaxs = Vec::with_capacity(vals.len().div_ceil(block));
+    let mut fields = Vec::with_capacity(vals.len());
+    for chunk in vals.chunks(block) {
+        let emax = chunk.iter().map(|&v| exponent(v) as i32).max().unwrap_or(0);
+        let emax_q = emax.min(cap);
+        emaxs.push(emax_q as u8);
+        for &v in chunk {
+            let e = exponent(v) as i32;
+            fields.push(if e == 0 || emax_q - e > n as i32 {
+                0
+            } else if e > emax_q {
+                // the shared exponent was clamped below this value:
+                // saturate to the block top with a full significand
+                (1u32 << (n + 1)) - 1
+            } else {
+                let top = if n == 0 {
+                    0
+                } else {
+                    (v.to_bits() >> (F32_MANT_BITS - n)) & ((1u32 << n) - 1)
+                };
+                ((1u32 << n) | top) >> (emax_q - e) as u32
+            });
+        }
+    }
+    (emaxs, fields)
+}
+
+/// Reconstruct one value from its block's shared exponent and its
+/// significand field (inverse of [`block_fields`]; `sign` is the raw
+/// sign bit).
+#[inline]
+pub fn block_value(emax: u8, field: u32, sign: u32, mant: u32) -> f32 {
+    if field == 0 {
+        return f32::from_bits(sign << 31);
+    }
+    let delta = mant + 1 - mag_width(field);
+    let e = emax as u32 - delta;
+    let m = if mant == 0 {
+        0
+    } else {
+        ((field << delta) & ((1u32 << mant) - 1)) << (F32_MANT_BITS - mant)
+    };
+    assemble(sign, e, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_full_width_delta() {
+        let d = ExponentLayout::default();
+        assert!(d.is_default());
+        assert_eq!(d.field_bits(), 8);
+        assert_eq!(d.exponent_bits_per_value(), 8.0);
+        assert_eq!(d.mantissa_overhead_bits(), 0.0);
+        assert!(!ExponentLayout::Bias { bits: 4, bias: 127 }.is_default());
+    }
+
+    #[test]
+    fn field_bits_clamps_to_container_field() {
+        let w = ExponentLayout::Width { bits: 12, mode: Mode::Delta };
+        assert_eq!(w.field_bits(), 8);
+        let b = ExponentLayout::Bias { bits: 99, bias: 127 };
+        assert_eq!(b.field_bits(), 8);
+    }
+
+    #[test]
+    fn block_shared_amortizes_exponent() {
+        let l = ExponentLayout::BlockShared { block: 16, bits: 8 };
+        assert_eq!(l.exponent_bits_per_value(), 0.5);
+        assert_eq!(l.mantissa_overhead_bits(), 1.0);
+    }
+
+    #[test]
+    fn width_quantize_matches_plain_truncation() {
+        let l = ExponentLayout::Width { bits: 5, mode: Mode::Delta };
+        for &v in &[1.234f32, -9.75e-3, 0.0, -0.0, 6.022e23] {
+            assert_eq!(
+                l.quantize_value(v, 3, Container::Bf16).to_bits(),
+                quantize(v, 3, Container::Bf16).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn bias_window_flush_and_saturate() {
+        let l = ExponentLayout::Bias { bits: 4, bias: 127 };
+        let (lo, hi) = l.bias_window().unwrap();
+        assert_eq!((lo, hi), (120, 134));
+        // in-window value survives as plain quantization
+        let v = 1.5f32; // e = 127
+        assert_eq!(
+            l.quantize_value(v, 7, Container::Fp32).to_bits(),
+            quantize(v, 7, Container::Fp32).to_bits()
+        );
+        // tiny value flushes to signed zero
+        let tiny = -1e-20f32;
+        let f = l.quantize_value(tiny, 7, Container::Fp32);
+        assert_eq!(f.to_bits(), (-0.0f32).to_bits());
+        // huge value saturates to the window top with full mantissa
+        let huge = 1e20f32;
+        let s = l.quantize_value(huge, 3, Container::Fp32);
+        let (sg, e, m) = crate::formats::split(s);
+        assert_eq!((sg, e as i32), (0, hi));
+        assert_eq!(m, 0b111 << 20);
+    }
+
+    #[test]
+    fn bias_full_width_window_is_lossless() {
+        // an 8-bit window centred at 127 covers every normal exponent
+        let l = ExponentLayout::Bias { bits: 8, bias: 127 };
+        for &v in &[1.0f32, -3.5e-38, 2.9e38, 0.25, -7.0] {
+            assert_eq!(
+                l.quantize_value(v, 23, Container::Fp32).to_bits(),
+                v.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn block_fields_roundtrip_block_max() {
+        // the block max survives with its full (truncated) mantissa
+        let vals = [8.0f32, 1.0, -0.5, 0.0, 6.5, 0.125];
+        let n = 4;
+        let (emaxs, fields) = block_fields(&vals, n, Container::Fp32, 3, 8);
+        assert_eq!(emaxs.len(), 2);
+        let back: Vec<f32> = vals
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| block_value(emaxs[i / 3], fields[i], v.to_bits() >> 31, n))
+            .collect();
+        assert_eq!(back[0], 8.0);
+        assert_eq!(back[4], 6.5);
+        // values within n octaves of the max keep their exponent
+        assert_eq!(crate::formats::exponent(back[1]), crate::formats::exponent(1.0f32));
+        // a value > n octaves below the block max flushes to zero
+        assert_eq!(back[3].to_bits(), 0);
+    }
+
+    #[test]
+    fn block_quantize_slice_is_idempotent() {
+        let l = ExponentLayout::BlockShared { block: 4, bits: 8 };
+        let vals: Vec<f32> = (0..23).map(|i| ((i * 37) % 19) as f32 * 0.37 - 3.0).collect();
+        let q1 = l.quantize_slice(&vals, 3, Container::Bf16);
+        let q2 = l.quantize_slice(&q1, 3, Container::Bf16);
+        for (a, b) in q1.iter().zip(&q2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn block_zero_mantissa_corner() {
+        // n = 0: one-bit significands — values either hold the block
+        // exponent exactly or flush
+        let vals = [4.0f32, 5.5, 2.0, 0.0];
+        let (emaxs, fields) = block_fields(&vals, 0, Container::Bf16, 4, 8);
+        let back: Vec<f32> = vals
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| block_value(emaxs[i / 4], fields[i], v.to_bits() >> 31, 0))
+            .collect();
+        assert_eq!(back[0], 4.0);
+        assert_eq!(back[1], 4.0); // mantissa truncated away at the shared exponent
+        assert_eq!(back[2].to_bits(), 0); // > 0 octaves below max flushes
+        assert_eq!(back[3].to_bits(), 0);
+    }
+
+    #[test]
+    fn spec_string_roundtrip() {
+        for l in [
+            ExponentLayout::default(),
+            ExponentLayout::Width { bits: 5, mode: Mode::Delta },
+            ExponentLayout::Bias { bits: 4, bias: 127 },
+            ExponentLayout::BlockShared { block: 16, bits: 8 },
+            ExponentLayout::BlockShared { block: 32, bits: 6 },
+        ] {
+            assert_eq!(ExponentLayout::parse_spec(&l.spec_string()).unwrap(), l);
+        }
+        assert_eq!(
+            ExponentLayout::parse_spec("block:16").unwrap(),
+            ExponentLayout::BlockShared { block: 16, bits: 8 }
+        );
+        assert!(ExponentLayout::parse_spec("nope:3").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_all_shapes() {
+        for l in [
+            ExponentLayout::default(),
+            ExponentLayout::Width {
+                bits: 4,
+                mode: Mode::FixedBias { bias: 121, group: 8 },
+            },
+            ExponentLayout::Bias { bits: 4, bias: 130 },
+            ExponentLayout::BlockShared { block: 16, bits: 8 },
+        ] {
+            assert_eq!(ExponentLayout::from_json(&l.to_json()).unwrap(), l);
+        }
+    }
+}

@@ -7,6 +7,10 @@
 //! modelled as an `f32` whose low 16 mantissa bits are zero (the hardware
 //! ships 16-bit containers; the arithmetic value is identical).
 
+pub mod layout;
+
+pub use layout::ExponentLayout;
+
 /// Mantissa bits of an IEEE-754 binary32.
 pub const F32_MANT_BITS: u32 = 23;
 /// Mantissa bits of BFloat16.

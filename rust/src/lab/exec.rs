@@ -583,6 +583,7 @@ mod tests {
             sample: 2048,
             seed: 0x5EED,
             threads: 0,
+            layout: String::new(),
         })
     }
 

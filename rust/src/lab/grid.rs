@@ -52,6 +52,7 @@ impl Default for GridOptions {
 pub struct Grid {
     pub graph: JobGraph,
     pub policy_summary: Option<usize>,
+    pub crosspaper: Option<usize>,
     pub stash_summary: Option<usize>,
 }
 
@@ -66,15 +67,35 @@ fn stash_spec(model: &str, codec: CodecKind, budget: usize, batch: usize, sample
         sample,
         seed: STREAM_SEED,
         threads: 0,
+        layout: String::new(),
     })
 }
 
+/// A stash run pinned to an explicit exponent layout (the block-shared /
+/// bias-window axis) through the Gecko codec.
+fn layout_stash_spec(model: &str, layout: &str, batch: usize, sample: usize) -> JobSpec {
+    JobSpec::StashRun(StashSpec {
+        model: model.into(),
+        policy: "qm".into(),
+        codec: CodecKind::Gecko,
+        container: Container::Bf16,
+        batch,
+        budget_bytes: 0,
+        sample,
+        seed: STREAM_SEED,
+        threads: 0,
+        layout: layout.into(),
+    })
+}
+
+/// Push the policy axis plus both consolidators over the same runs;
+/// returns `(policy_summary, crosspaper)` indices.
 fn push_policy_block(
     g: &mut JobGraph,
     models: &[&str],
     kinds: &[PolicyKind],
     cfg: &SweepConfig,
-) -> usize {
+) -> (usize, usize) {
     let mut runs = Vec::new();
     for &model in models {
         for &policy in kinds {
@@ -88,7 +109,9 @@ fn push_policy_block(
             ));
         }
     }
-    g.push(JobSpec::PolicySummary, runs)
+    let summary = g.push(JobSpec::PolicySummary, runs.clone());
+    let crosspaper = g.push(JobSpec::CrossPaper, runs);
+    (summary, crosspaper)
 }
 
 fn push_stash_block(
@@ -98,6 +121,7 @@ fn push_stash_block(
     budgets: &[usize],
     batch: usize,
     sample: usize,
+    layouts: &[&str],
 ) -> usize {
     let mut runs = Vec::new();
     for &model in models {
@@ -105,6 +129,9 @@ fn push_stash_block(
             for &budget in budgets {
                 runs.push(g.push(stash_spec(model, codec, budget, batch, sample), vec![]));
             }
+        }
+        for &layout in layouts {
+            runs.push(g.push(layout_stash_spec(model, layout, batch, sample), vec![]));
         }
     }
     g.push(JobSpec::StashSummary, runs)
@@ -143,14 +170,17 @@ fn push_train_block(g: &mut JobGraph, artifacts_dir: &Path, budgets: &[usize]) {
     }
 }
 
-/// The full paper grid: QM+QE / BitWave / QM policies × trace models,
-/// every stash codec × model × budget point, both tables (analytic and
-/// stash-measured), the trace-source figures, and — when artifacts exist —
-/// the e2e train variants.
+/// The full paper grid: every policy kind (QM+QE / BitWave / QM plus the
+/// cross-paper AdaptivFloat, Flexpoint, fp8 and bf16 families) × trace
+/// models, every stash codec × model × budget point plus a block-shared
+/// layout point, both tables (analytic and stash-measured), the
+/// trace-source figures, and — when artifacts exist — the e2e train
+/// variants.  The policy runs feed both `policy_summary.json` and the
+/// cross-paper comparison `crosspaper.json`.
 pub fn paper_grid(opts: &GridOptions) -> Grid {
     let mut g = JobGraph::new();
     let models = ["resnet18", "mobilenet"];
-    let policy_summary = push_policy_block(
+    let (policy_summary, crosspaper) = push_policy_block(
         &mut g,
         &models,
         &PolicyKind::all(),
@@ -166,6 +196,7 @@ pub fn paper_grid(opts: &GridOptions) -> Grid {
         &opts.budgets,
         opts.batch,
         SAMPLE,
+        &["block:16"],
     );
     g.push(JobSpec::Table1, vec![]);
     g.push(
@@ -198,19 +229,28 @@ pub fn paper_grid(opts: &GridOptions) -> Grid {
     Grid {
         graph: g,
         policy_summary: Some(policy_summary),
+        crosspaper: Some(crosspaper),
         stash_summary: Some(stash_summary),
     }
 }
 
-/// The tiny CI/bench grid: a 2 models × 2 codecs × 2 budgets stash core,
-/// two short policy sweeps, both cheap tables, and the trace figures at a
-/// reduced sample — small enough to run twice per CI job.
+/// The tiny CI/bench grid: a 2 models × 2 codecs × 2 budgets stash core
+/// plus one block-shared layout point per model, short policy sweeps over
+/// the cross-paper container families, both cheap tables, and the trace
+/// figures at a reduced sample — small enough to run twice per CI job.
 pub fn smoke_grid() -> Grid {
     let mut g = JobGraph::new();
-    let policy_summary = push_policy_block(
+    let (policy_summary, crosspaper) = push_policy_block(
         &mut g,
         &["resnet18"],
-        &[PolicyKind::QmQe, PolicyKind::QmOnly],
+        &[
+            PolicyKind::QmQe,
+            PolicyKind::QmOnly,
+            PolicyKind::AdaptivFloat,
+            PolicyKind::Flexpoint,
+            PolicyKind::Fp8,
+            PolicyKind::Bf16,
+        ],
         &SweepConfig {
             epochs: 6,
             steps_per_epoch: 20,
@@ -226,6 +266,7 @@ pub fn smoke_grid() -> Grid {
         &[0, 256 * 1024],
         128,
         8 * 1024,
+        &["block:16"],
     );
     g.push(JobSpec::Table1, vec![]);
     g.push(
@@ -248,6 +289,7 @@ pub fn smoke_grid() -> Grid {
     Grid {
         graph: g,
         policy_summary: Some(policy_summary),
+        crosspaper: Some(crosspaper),
         stash_summary: Some(stash_summary),
     }
 }
@@ -358,11 +400,23 @@ mod tests {
     #[test]
     fn smoke_grid_shape() {
         let grid = smoke_grid();
-        // 2 policy + summary + 8 stash + summary + 2 tables + 4 figures
-        assert_eq!(grid.graph.len(), 18);
+        // 6 policy + summary + crosspaper + 10 stash (8 core + 2 layout)
+        // + summary + 2 tables + 4 figures
+        assert_eq!(grid.graph.len(), 25);
         let hashes = grid.graph.hashes();
         let unique: std::collections::BTreeSet<_> = hashes.iter().collect();
         assert_eq!(unique.len(), hashes.len(), "every job hash distinct");
+        let kinds: Vec<&str> = grid.graph.nodes.iter().map(|n| n.spec.kind()).collect();
+        assert!(kinds.contains(&"crosspaper"));
+        // the cross-paper container families all ride the smoke grid
+        let labels: Vec<String> = grid.graph.nodes.iter().map(|n| n.spec.label()).collect();
+        for policy in ["qm+qe", "qm", "qm+af", "flexpoint", "fp8", "bf16"] {
+            assert!(
+                labels.iter().any(|l| l == &format!("policy:resnet18/{policy}")),
+                "missing {policy}"
+            );
+        }
+        assert!(labels.iter().any(|l| l.contains("block:16")));
     }
 
     #[test]
@@ -416,10 +470,11 @@ mod tests {
             .iter()
             .map(|n| n.spec.kind())
             .collect();
-        // 6 policy runs (2 models × 3 policies)
-        assert_eq!(kinds.iter().filter(|k| **k == "policy").count(), 6);
-        // 16 stash runs (2 models × 4 codecs × 2 budgets)
-        assert_eq!(kinds.iter().filter(|k| **k == "stash").count(), 16);
+        // 14 policy runs (2 models × 7 policies)
+        assert_eq!(kinds.iter().filter(|k| **k == "policy").count(), 14);
+        // 18 stash runs (2 models × (4 codecs × 2 budgets + 1 layout))
+        assert_eq!(kinds.iter().filter(|k| **k == "stash").count(), 18);
+        assert!(kinds.contains(&"crosspaper"));
         assert!(kinds.contains(&"table1") && kinds.contains(&"table2"));
         assert_eq!(kinds.iter().filter(|k| **k == "figure").count(), 4);
         // no artifacts dir: the e2e leg stays out

@@ -38,6 +38,7 @@ pub fn execute_spec(
             res.write_json(&art_dir.join("policy.json"))
         }
         JobSpec::PolicySummary => policy_summary(art_dir, deps),
+        JobSpec::CrossPaper => crosspaper(art_dir, deps),
         JobSpec::StashRun(sp) => {
             let m = run_stash_measurement(sp, threads)?;
             std::fs::write(art_dir.join("stash.json"), m.to_json().to_string())?;
@@ -148,6 +149,48 @@ fn policy_summary(art_dir: &Path, deps: &[JobRecord]) -> Result<()> {
         art_dir.join("policy_summary.json"),
         Json::Obj(root).to_string(),
     )?;
+    Ok(())
+}
+
+/// Consolidate upstream policy runs into `crosspaper.json`: one row per
+/// `(policy, network)` putting the container families from different
+/// papers side by side — QM+QE and BitWave (per-value learned widths),
+/// QM+AdaptivFloat (per-tensor bias windows), Flexpoint (block-shared
+/// exponents) and the static fp8/bf16 presets — by footprint reduction
+/// with and without Gecko.  Rows are sorted by `(policy, network)`, so the
+/// artifact is byte-stable for any dependency order.
+fn crosspaper(art_dir: &Path, deps: &[JobRecord]) -> Result<()> {
+    let mut keyed: BTreeMap<(String, String), Json> = BTreeMap::new();
+    for rec in deps.iter().filter(|r| r.kind == "policy") {
+        let j = dep_json(rec, "policy.json")?;
+        let field = |k: &str| -> Result<Json> {
+            j.get(k)
+                .cloned()
+                .ok_or_else(|| anyhow!("policy.json missing '{k}'"))
+        };
+        let policy = field("policy")?;
+        let network = field("network")?;
+        let key = (
+            policy.as_str().unwrap_or_default().to_string(),
+            network.as_str().unwrap_or_default().to_string(),
+        );
+        let mut row = BTreeMap::new();
+        row.insert("policy".to_string(), policy);
+        row.insert("network".to_string(), network);
+        for k in ["final_plan_bits", "plan_reduction", "gecko_reduction"] {
+            row.insert(k.to_string(), field(k)?);
+        }
+        keyed.insert(key, Json::Obj(row));
+    }
+    if keyed.is_empty() {
+        return Err(anyhow!("crosspaper: no upstream policy runs"));
+    }
+    let mut root = BTreeMap::new();
+    root.insert(
+        "rows".to_string(),
+        Json::Arr(keyed.into_values().collect()),
+    );
+    std::fs::write(art_dir.join("crosspaper.json"), Json::Obj(root).to_string())?;
     Ok(())
 }
 

@@ -12,7 +12,7 @@
 //! measured bytes into the hwsim DRAM model.
 
 use super::spec::StashSpec;
-use crate::formats::Container;
+use crate::formats::{Container, ExponentLayout};
 use crate::hwsim::{gains, simulate_pass_with_bits, AccelConfig, ComputeType, LayerBits};
 use crate::report::footprint::{
     FootprintModel, MantissaPolicy, ACT_EXP_SEED, ACT_VAL_SEED, SAMPLE, STREAM_SEED,
@@ -99,6 +99,10 @@ impl StashMeasurement {
         put("policy", Json::Str(self.spec.policy.clone()));
         put("batch", Json::Num(self.spec.batch as f64));
         put("budget_bytes", Json::Num(self.spec.budget_bytes as f64));
+        // omitted at default, so historical artifact bytes are unchanged
+        if !self.spec.layout.is_empty() {
+            put("layout", Json::Str(self.spec.layout.clone()));
+        }
         put("measured_mb", Json::Num(self.measured_total_bits / 8e6));
         put("analytic_mb", Json::Num(self.analytic_total_bits / 8e6));
         put("frac_of_fp32", Json::Num(self.frac_of_fp32()));
@@ -145,6 +149,12 @@ impl StashMeasurement {
 pub fn run_stash_measurement(spec: &StashSpec, threads: usize) -> Result<StashMeasurement> {
     let net = trace_model(&spec.model)?;
     let policy = mantissa_policy(&spec.policy, spec.container)?;
+    // exponent-layout override: empty keeps the per-value default
+    let layout = if spec.layout.is_empty() {
+        None
+    } else {
+        Some(ExponentLayout::parse_spec(&spec.layout)?)
+    };
     let n_layers = net.layers.len();
     let sched = policy.integer_schedule(n_layers, spec.container);
     let stash = Stash::new(StashConfig {
@@ -164,14 +174,20 @@ pub fn run_stash_measurement(spec: &StashSpec, threads: usize) -> Result<StashMe
         let (n_a, n_w) = sched[i];
         let a_exps = l.act_model.sample_exponents(spec.sample, seed ^ ACT_EXP_SEED);
         let a_vals = values_with_exponents(&a_exps, seed ^ ACT_VAL_SEED, l.nonneg_act);
-        let a_meta = ContainerMeta::new(spec.container, n_a).with_sign_elision(l.nonneg_act);
+        let mut a_meta = ContainerMeta::new(spec.container, n_a).with_sign_elision(l.nonneg_act);
+        if let Some(l) = layout {
+            a_meta = a_meta.with_layout(l);
+        }
         let a_scale = (l.act_elems * spec.batch) as f64 / spec.sample as f64;
         streams.push((TensorId::act(i), a_vals, a_meta, a_scale));
 
         let w_count = spec.sample.min(l.weight_elems.max(64));
         let w_exps = l.weight_model.sample_exponents(w_count, seed ^ WEIGHT_EXP_SEED);
         let w_vals = values_with_exponents(&w_exps, seed ^ WEIGHT_VAL_SEED, false);
-        let w_meta = ContainerMeta::new(spec.container, n_w);
+        let mut w_meta = ContainerMeta::new(spec.container, n_w);
+        if let Some(l) = layout {
+            w_meta = w_meta.with_layout(l);
+        }
         let w_scale = l.weight_elems as f64 / w_count as f64;
         streams.push((TensorId::weight(i), w_vals, w_meta, w_scale));
     }
@@ -197,6 +213,11 @@ pub fn run_stash_measurement(spec: &StashSpec, threads: usize) -> Result<StashMe
         _ => Some(FootprintModel::from_schedule(spec.container, &sched)),
     };
     let cbits = spec.container.total_bits() as f64;
+    // bias / block-shared overrides carry their own exact stream accounting
+    let structured_layout = matches!(
+        layout,
+        Some(ExponentLayout::Bias { .. } | ExponentLayout::BlockShared { .. })
+    );
     let mut layers = Vec::with_capacity(n_layers);
     let mut measured_total = 0.0;
     let mut analytic_total = 0.0;
@@ -210,26 +231,50 @@ pub fn run_stash_measurement(spec: &StashSpec, threads: usize) -> Result<StashMe
             .ok_or_else(|| anyhow!("weight {i} not resident"))?;
         let (a_scale, w_scale) = (streams[2 * i].3, streams[2 * i + 1].3);
         let measured = a.total() * a_scale + w.total() * w_scale;
-        let expected = match &analytic_model {
-            Some(model) => {
-                // centered depth fraction => PerLayer policy index is i
-                let frac = (i as f64 + 0.5) / n_layers as f64;
-                let lf = model.layer(l, frac, spec.batch, spec.seed ^ i as u64);
-                lf.total_act_bits() + lf.total_weight_bits()
-            }
-            None => {
-                // JS accounting on the actual quantized streams: one tag
-                // bit per value + container bits per non-zero (exact)
-                let js_of = |vals: &[f32], meta: &ContainerMeta, scale: f64| {
-                    let nz = vals
-                        .iter()
-                        .filter(|&&v| meta.quantized(v).to_bits() != 0)
-                        .count() as f64;
-                    (vals.len() as f64 + nz * cbits) * scale
-                };
-                let (_, av, am, asc) = &streams[2 * i];
-                let (_, wv, wm, wsc) = &streams[2 * i + 1];
-                js_of(av, am, *asc) + js_of(wv, wm, *wsc)
+        // Exact per-stream accounting for the stream-structured layouts
+        // under the component codec: bias windows store `field_bits` per
+        // exponent; block-shared layouts store one field per (ragged)
+        // block and one extra leading mantissa bit per value.
+        let exact_layout_bits = |vals: &[f32], meta: &ContainerMeta, scale: f64| -> f64 {
+            let count = vals.len() as f64;
+            let n = meta.mant() as f64;
+            let sign = if meta.elide_sign { 0.0 } else { count };
+            let (exp, mant) = match meta.layout {
+                ExponentLayout::BlockShared { block, bits } => (
+                    vals.len().div_ceil(block) as f64 * bits as f64,
+                    count * (n + 1.0),
+                ),
+                lay => (count * lay.field_bits() as f64, count * n),
+            };
+            (sign + exp + mant) * scale
+        };
+        let expected = if structured_layout && spec.codec == CodecKind::Gecko {
+            let (_, av, am, asc) = &streams[2 * i];
+            let (_, wv, wm, wsc) = &streams[2 * i + 1];
+            exact_layout_bits(av, am, *asc) + exact_layout_bits(wv, wm, *wsc)
+        } else {
+            match &analytic_model {
+                Some(model) => {
+                    // centered depth fraction => PerLayer policy index is i
+                    let frac = (i as f64 + 0.5) / n_layers as f64;
+                    let lf = model.layer(l, frac, spec.batch, spec.seed ^ i as u64);
+                    lf.total_act_bits() + lf.total_weight_bits()
+                }
+                None => {
+                    // JS accounting on the actual quantized streams: one tag
+                    // bit per value + container bits per non-zero (exact)
+                    let js_of = |vals: &[f32], meta: &ContainerMeta, scale: f64| {
+                        let nz = meta
+                            .quantized_slice(vals)
+                            .iter()
+                            .filter(|v| v.to_bits() != 0)
+                            .count() as f64;
+                        (vals.len() as f64 + nz * cbits) * scale
+                    };
+                    let (_, av, am, asc) = &streams[2 * i];
+                    let (_, wv, wm, wsc) = &streams[2 * i + 1];
+                    js_of(av, am, *asc) + js_of(wv, wm, *wsc)
+                }
             }
         };
         measured_bits.push(LayerBits {
@@ -253,7 +298,10 @@ pub fn run_stash_measurement(spec: &StashSpec, threads: usize) -> Result<StashMe
     // sample, sfp's metadata framing is a known deviation.
     let gate = match spec.codec {
         CodecKind::Raw | CodecKind::Js => true,
-        CodecKind::Gecko => spec.sample == SAMPLE && spec.seed == STREAM_SEED,
+        // the structured-layout accounting is exact at any sample/seed
+        CodecKind::Gecko => {
+            structured_layout || (spec.sample == SAMPLE && spec.seed == STREAM_SEED)
+        }
         CodecKind::Sfp => false,
     };
     if gate && delta > 1.0 {
@@ -275,8 +323,11 @@ pub fn run_stash_measurement(spec: &StashSpec, threads: usize) -> Result<StashMe
         if back.len() != vals.len() {
             return Err(anyhow!("{id:?} restore length mismatch"));
         }
-        for (&v, &b) in vals.iter().zip(back) {
-            if meta.quantized(v).to_bits() != b.to_bits() {
+        // quantized_slice is the layout-generic oracle (block-shared
+        // layouts have no per-value quantizer)
+        let q = meta.quantized_slice(vals);
+        for (&v, &b) in q.iter().zip(back) {
+            if v.to_bits() != b.to_bits() {
                 return Err(anyhow!("{id:?} restore not bit-exact"));
             }
         }
@@ -356,6 +407,7 @@ mod tests {
             sample,
             seed: STREAM_SEED,
             threads: 0,
+            layout: String::new(),
         }
     }
 
@@ -386,6 +438,44 @@ mod tests {
         let json = m.to_json();
         assert_eq!(json.get("codec").unwrap().as_str(), Some("raw"));
         assert!(json.get("evictions").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn block_shared_layout_measurement_is_exact_and_restores() {
+        // the exact block-shared accounting gates gecko at any sample
+        let m = run_stash_measurement(
+            &StashSpec {
+                layout: "block:16".into(),
+                ..spec(CodecKind::Gecko, 0, 2048)
+            },
+            0,
+        )
+        .unwrap();
+        assert!(m.delta_pct() < 1e-9, "block accounting exact: {}", m.delta_pct());
+        assert!(m.restore_bit_exact);
+        assert_eq!(
+            m.to_json().get("layout").and_then(Json::as_str),
+            Some("block:16")
+        );
+        // one 8-bit field per 16 values beats the default per-value
+        // exponent stream on the same streams
+        let d = run_stash_measurement(&spec(CodecKind::Gecko, 0, 2048), 0).unwrap();
+        assert!(m.frac_of_fp32() < 0.5);
+        assert!(d.measured_total_bits > 0.0 && m.measured_total_bits > 0.0);
+    }
+
+    #[test]
+    fn bias_layout_measurement_is_exact() {
+        let m = run_stash_measurement(
+            &StashSpec {
+                layout: "bias:4:127".into(),
+                ..spec(CodecKind::Gecko, 0, 2048)
+            },
+            0,
+        )
+        .unwrap();
+        assert!(m.delta_pct() < 1e-9, "bias accounting exact: {}", m.delta_pct());
+        assert!(m.restore_bit_exact);
     }
 
     #[test]

@@ -513,6 +513,7 @@ mod tests {
             sample: 1024,
             seed: 1,
             threads: 0,
+            layout: String::new(),
         });
         let dep = JobRecord {
             kind: "stash".into(),

@@ -35,6 +35,14 @@ pub struct StashSpec {
     /// canonical JSON, so it never perturbs existing cache identities, and
     /// thread counts never change artifact bytes either way.
     pub threads: usize,
+    /// Exponent-layout override as an [`ExponentLayout`] spec string
+    /// (`width:BITS` | `bias:BITS:BIAS` | `block:BLOCK[:BITS]`); empty
+    /// keeps the policy's per-value default.  Like `threads`, the default
+    /// stays out of the canonical JSON so the axis's introduction left
+    /// every existing cache identity untouched.
+    ///
+    /// [`ExponentLayout`]: crate::formats::ExponentLayout
+    pub layout: String,
 }
 
 /// One multi-tenant serve scenario (the `repro serve` unit, one tenant
@@ -97,6 +105,12 @@ pub enum JobSpec {
     /// Consolidates every upstream [`JobSpec::PolicyRun`] artifact into
     /// `policy_summary.json` (per-policy averages, paper ordering).
     PolicySummary,
+    /// Consolidates upstream [`JobSpec::PolicyRun`] artifacts into
+    /// `crosspaper.json` — one row per (policy, network) comparing the
+    /// container families across papers (QM+QE, BitWave, AdaptivFloat,
+    /// Flexpoint block-shared, fp8/bf16 presets) by footprint reduction
+    /// with and without Gecko.
+    CrossPaper,
     /// One stash measurement at a fixed budget point.
     StashRun(StashSpec),
     /// Consolidates upstream [`JobSpec::StashRun`] artifacts into
@@ -151,6 +165,7 @@ impl JobSpec {
         match self {
             JobSpec::PolicyRun { .. } => "policy",
             JobSpec::PolicySummary => "policy_summary",
+            JobSpec::CrossPaper => "crosspaper",
             JobSpec::StashRun(_) => "stash",
             JobSpec::StashSummary => "stash_summary",
             JobSpec::ServeRun(_) => "serve",
@@ -170,12 +185,20 @@ impl JobSpec {
                 format!("policy:{model}/{}", policy.label())
             }
             JobSpec::PolicySummary => "policy-summary".into(),
-            JobSpec::StashRun(sp) => format!(
-                "stash:{}/{}/budget={}",
-                sp.model,
-                sp.codec.label(),
-                sp.budget_bytes
-            ),
+            JobSpec::CrossPaper => "crosspaper".into(),
+            JobSpec::StashRun(sp) => {
+                let layout = if sp.layout.is_empty() {
+                    String::new()
+                } else {
+                    format!("/{}", sp.layout)
+                };
+                format!(
+                    "stash:{}/{}{layout}/budget={}",
+                    sp.model,
+                    sp.codec.label(),
+                    sp.budget_bytes
+                )
+            }
             JobSpec::StashSummary => "stash-summary".into(),
             JobSpec::ServeRun(sp) => format!(
                 "serve:{}/{}/tenants={}",
@@ -218,6 +241,7 @@ impl JobSpec {
                 ("seed", n(cfg.seed as usize)),
             ]),
             JobSpec::PolicySummary => obj(vec![]),
+            JobSpec::CrossPaper => obj(vec![]),
             JobSpec::StashRun(sp) => {
                 let mut fields = vec![
                     ("model", s(&sp.model)),
@@ -233,6 +257,11 @@ impl JobSpec {
                 // field's introduction never invalidated existing caches
                 if sp.threads != 0 {
                     fields.push(("threads", n(sp.threads)));
+                }
+                // like threads: the default layout stays out of the
+                // canonical JSON, so historical identities are untouched
+                if !sp.layout.is_empty() {
+                    fields.push(("layout", s(&sp.layout)));
                 }
                 obj(fields)
             }
@@ -342,6 +371,7 @@ impl JobSpec {
                 })
             }
             "policy_summary" => Ok(JobSpec::PolicySummary),
+            "crosspaper" => Ok(JobSpec::CrossPaper),
             "stash" => Ok(JobSpec::StashRun(StashSpec {
                 model: str_of("model")?,
                 policy: str_of("policy")?,
@@ -356,6 +386,11 @@ impl JobSpec {
                     .and_then(Json::as_f64)
                     .map(|v| v as usize)
                     .unwrap_or(0),
+                layout: params
+                    .get("layout")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
             })),
             "stash_summary" => Ok(JobSpec::StashSummary),
             "serve" => Ok(JobSpec::ServeRun(ServeSpec {
@@ -422,6 +457,7 @@ mod tests {
             sample: 4096,
             seed: 0x5EED,
             threads: 0,
+            layout: String::new(),
         }
     }
 
@@ -470,6 +506,8 @@ mod tests {
             StashSpec { sample: 8192, ..base.clone() },
             StashSpec { seed: 7, ..base.clone() },
             StashSpec { threads: 2, ..base.clone() },
+            StashSpec { layout: "block:16".into(), ..base.clone() },
+            StashSpec { layout: "bias:4:121".into(), ..base.clone() },
         ];
         let mut seen = std::collections::BTreeSet::new();
         seen.insert(h0.clone());
@@ -498,6 +536,29 @@ mod tests {
     }
 
     #[test]
+    fn default_layout_keeps_the_historical_identity() {
+        // Pinned canonical JSON: this is the byte string historical cache
+        // identities hashed before the layout axis existed.  If this
+        // assertion ever needs to change, bump CACHE_VERSION.
+        let base = JobSpec::StashRun(stash_spec());
+        assert_eq!(
+            base.params_json(),
+            "{\"batch\":256,\"budget_bytes\":0,\"codec\":\"gecko\",\
+             \"container\":\"bf16\",\"model\":\"resnet18\",\"policy\":\"qm\",\
+             \"sample\":4096,\"seed\":24301}",
+        );
+        let laid = JobSpec::StashRun(StashSpec {
+            layout: "block:16".into(),
+            ..stash_spec()
+        });
+        assert!(laid.params_json().contains("\"layout\":\"block:16\""));
+        assert_ne!(
+            job_hash(base.kind(), &base.params_json(), &[], CACHE_VERSION),
+            job_hash(laid.kind(), &laid.params_json(), &[], CACHE_VERSION),
+        );
+    }
+
+    #[test]
     fn resolve_threads_prefers_the_explicit_hint() {
         let auto = JobSpec::StashRun(stash_spec());
         assert_eq!(auto.resolve_threads(3), 3);
@@ -518,10 +579,20 @@ mod tests {
                 policy: PolicyKind::QmQe,
                 cfg: SweepConfig::default(),
             },
+            JobSpec::PolicyRun {
+                model: "mobilenet".into(),
+                policy: PolicyKind::Flexpoint,
+                cfg: SweepConfig::default(),
+            },
             JobSpec::PolicySummary,
+            JobSpec::CrossPaper,
             JobSpec::StashRun(stash_spec()),
             JobSpec::StashRun(StashSpec {
                 threads: 2,
+                ..stash_spec()
+            }),
+            JobSpec::StashRun(StashSpec {
+                layout: "bias:4:121".into(),
                 ..stash_spec()
             }),
             JobSpec::StashSummary,

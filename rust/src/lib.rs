@@ -26,6 +26,17 @@
 //! policy over the trace models to reproduce the paper's QM+QE / BitWave /
 //! +Gecko footprint ordering.
 //!
+//! The exponent axis of every plan is a first-class
+//! [`formats::ExponentLayout`]: per-value learned widths (the paper's
+//! axis), a fixed-bias window (AdaptivFloat's per-tensor post-hoc fit,
+//! [`policy::AdaptivFloatPolicy`]), or a block shared exponent
+//! (Flexpoint, one max-exponent per block).  The layout threads through
+//! the codecs, the stash measurement (`repro stash --layout`), hwsim,
+//! and the flight recorder, and the cross-paper container families —
+//! `qm+af`, `flexpoint`, `fp8`, `bf16` presets — sweep next to the
+//! paper's controllers into one `crosspaper.json` comparison table
+//! (EXPERIMENTS.md §Cross-paper comparison).
+//!
 //! The codec hot paths are *word-parallel*: bit-plane transposed
 //! pack/unpack kernels ([`gecko::bitstream`]) stage a whole 8-lane row
 //! (or a uniform-width lane group) in one `u64`/`u128` and splice it

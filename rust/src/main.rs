@@ -110,22 +110,28 @@ fn print_help() {
          stash     --model resnet18|mobilenet [--policy qm|bc|full]\n\
          \u{20}         [--codec gecko|sfp|raw|js] [--batch N] [--sample N]\n\
          \u{20}         [--budget-bytes N[,N...]] (spill-tier sweep axis; JSON in <out>)\n\
+         \u{20}         [--layout width:B|bias:B:BIAS|block:BLK[:BITS]] (exponent\n\
+         \u{20}         container layout; default per-value width, delta-coded)\n\
          serve     --tenants N[,N...] (session-fleet scaling axis, default 1,8,64)\n\
          \u{20}         [--model resnet18|mobilenet] [--policy qm|bc|full]\n\
          \u{20}         [--codec gecko|sfp|raw|js] [--steps N] [--sample N]\n\
          \u{20}         [--budget-bytes N] (per-lease DRAM budget; cold runs spill)\n\
          \u{20}         [--smoke] (tiny CI scenario) [--expect-cached]\n\
          \u{20}         leased facades share one arena; emits <out>/serve_sweep.json\n\
-         policy    --model resnet18|mobilenet|all [--policy qmqe|bitwave|qm|all]\n\
+         policy    --model resnet18|mobilenet|all\n\
+         \u{20}         [--policy qmqe|bitwave|qm|af|flexpoint|fp8|bf16|all]\n\
          \u{20}         [--epochs N] [--steps N] [--batch N] [--sample N] [--out DIR]\n\
          \u{20}         [--verify-restore] (check mid-run checkpoint/restore continuity)\n\
+         \u{20}         cross-paper families (AdaptivFloat windows, Flexpoint block\n\
+         \u{20}         exponents, fp8/bf16 presets) land in <out>/crosspaper.json\n\
          all       materialize the paper grid as one parallel, cached lab run\n\
          \u{20}         [--smoke] (tiny CI grid) [--serial] [--jobs N] [--cache DIR]\n\
          \u{20}         [--budget-bytes N[,N...]] [--artifacts DIR] [--out DIR]\n\
          \u{20}         [--expect-cached] (fail unless 100% cache hits, zero executed)\n\
          \u{20}         [--backend process --workers N] (subprocess execution backend)\n\
          inspect   RUN_DIR [RUN_DIR2] — flight-recorder readout of a lab run:\n\
-         \u{20}         health summary, per-layer bitlength trajectories from\n\
+         \u{20}         health summary, per-layer bitlength and exponent-layout\n\
+         \u{20}         trajectories from\n\
          \u{20}         events.jsonl, and (with RUN_DIR2) a two-run diff of artifact\n\
          \u{20}         fingerprints, per-job wall-clock, and metrics counters.\n\
          \u{20}         [--baseline BENCH.json [--gate PCT]] fails on perf regression\n\
@@ -663,6 +669,7 @@ fn cmd_stash(args: &Args) -> Result<()> {
             sample: args.get_usize("sample", SAMPLE),
             seed: args.get_usize("seed", STREAM_SEED as usize) as u64,
             threads: args.get_usize("threads", 0),
+            layout: args.get_or("layout", ""),
         }
     };
     let cache = open_cache(args)?;
@@ -965,8 +972,9 @@ fn cmd_policy(args: &Args) -> Result<()> {
     };
     let kinds: Vec<PolicyKind> = match args.get_or("policy", "all").as_str() {
         "all" => PolicyKind::all().to_vec(),
-        s => vec![PolicyKind::parse(s)
-            .ok_or_else(|| anyhow!("unknown --policy {s} (qmqe|bitwave|qm|all)"))?],
+        s => vec![PolicyKind::parse(s).ok_or_else(|| {
+            anyhow!("unknown --policy {s} (qmqe|bitwave|qm|af|flexpoint|fp8|bf16|all)")
+        })?],
     };
     let cfg = SweepConfig {
         epochs: args.get_usize("epochs", 9),
@@ -994,6 +1002,7 @@ fn cmd_policy(args: &Args) -> Result<()> {
         }
     }
     let summary = graph.push(JobSpec::PolicySummary, runs.iter().map(|r| r.0).collect());
+    let crosspaper = graph.push(JobSpec::CrossPaper, runs.iter().map(|r| r.0).collect());
 
     let (reports, wall_ms, mode) = run_lab(&graph, &cache, args)?;
     let dir = out_dir(args).join("policy");
@@ -1048,7 +1057,9 @@ fn cmd_policy(args: &Args) -> Result<()> {
             );
         }
     }
+    surface_artifacts(&cache, &reports[crosspaper], &dir, None)?;
     oinfo!("trajectories -> {}", dir.display());
+    oinfo!("cross-paper comparison -> {}", dir.join("crosspaper.json").display());
 
     if args.has_flag("verify-restore") {
         let quick = SweepConfig {
@@ -1110,6 +1121,7 @@ fn cmd_all(args: &Args) -> Result<()> {
     // surface the consolidated artifacts next to the manifest
     for (idx, rename) in [
         (grid.policy_summary, None::<&str>),
+        (grid.crosspaper, None),
         (grid.stash_summary, None),
     ] {
         if let Some(id) = idx {
@@ -1270,12 +1282,16 @@ fn print_health(dir: &Path, run: &RunData) {
         }
     }
     let bits = run.events.iter().filter(|e| e.kind == "bitlength").count();
+    let layouts = run.events.iter().filter(|e| e.kind == "layout").count();
     let pressure = run
         .events
         .iter()
         .filter(|e| e.kind == "stash_pressure")
         .count();
-    oinfo!("  events: {bits} bitlength changes, {pressure} stash-pressure episodes");
+    oinfo!(
+        "  events: {bits} bitlength changes, {layouts} exponent-layout changes, \
+         {pressure} stash-pressure episodes"
+    );
     if pressure > 0 {
         // attribute thrash to the tenant that caused it: pressure events
         // carry the owner label of the lease (or trainer) they came from
@@ -1367,6 +1383,48 @@ fn print_trajectories(events: &[obs::AdaptEvent]) {
         evs.sort_by_key(|e| (e.epoch.unwrap_or(0), e.step.unwrap_or(0)));
         let mut path = vec![format!("{:.0}", evs[0].from)];
         path.extend(evs.iter().map(|e| format!("{:.0}", e.to)));
+        let last = evs.last().expect("group is non-empty");
+        oinfo!(
+            "  {stream} {lane}: {} ({} @ e{} s{})",
+            path.join(" -> "),
+            last.trigger,
+            last.epoch.unwrap_or(0),
+            last.step.unwrap_or(0),
+        );
+    }
+}
+
+/// Per-layer exponent-layout trajectories, replayed from the recorded
+/// `layout` events: every lane prints the chain of layout labels
+/// (`w8 -> af4b121 -> ...`) the adaptation walked through.
+fn print_layout_trajectories(events: &[obs::AdaptEvent]) {
+    let mut groups: std::collections::BTreeMap<(String, String), Vec<&obs::AdaptEvent>> =
+        std::collections::BTreeMap::new();
+    for e in events.iter().filter(|e| e.kind == "layout") {
+        let stream = format!("{}/{}", e.source, e.tensor_class.as_deref().unwrap_or("?"));
+        let lane = e
+            .layer
+            .map(|l| format!("L{l:02}"))
+            .unwrap_or_else(|| "net".to_string());
+        groups.entry((stream, lane)).or_default().push(e);
+    }
+    if groups.is_empty() {
+        return; // per-value-width runs: the layout axis never moved
+    }
+    oinfo!("exponent-layout trajectories:");
+    for ((stream, lane), mut evs) in groups {
+        evs.sort_by_key(|e| (e.epoch.unwrap_or(0), e.step.unwrap_or(0)));
+        // each event's detail reads "<from-label> -> <to-label>": seed the
+        // path with the first from-label, then chain the to-labels
+        let mut path: Vec<&str> = Vec::new();
+        for (i, e) in evs.iter().enumerate() {
+            let d = e.detail.as_deref().unwrap_or("? -> ?");
+            let (from, to) = d.split_once(" -> ").unwrap_or(("?", d));
+            if i == 0 {
+                path.push(from);
+            }
+            path.push(to);
+        }
         let last = evs.last().expect("group is non-empty");
         oinfo!(
             "  {stream} {lane}: {} ({} @ e{} s{})",
@@ -1497,6 +1555,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     let a = load_run(&a_dir)?;
     print_health(&a_dir, &a);
     print_trajectories(&a.events);
+    print_layout_trajectories(&a.events);
     if let Some(second) = dirs.get(1) {
         let b_dir = PathBuf::from(second);
         let b = load_run(&b_dir)?;

@@ -36,8 +36,9 @@ pub struct AdaptEvent {
     /// µs since the process trace epoch (shared with spans).
     pub ts_us: u64,
     pub pid: u32,
-    /// `"bitlength"` for policy decisions, `"stash_pressure"` for
-    /// eviction storms / fault bursts.
+    /// `"bitlength"` for stored-width policy decisions, `"layout"` for
+    /// exponent-layout switches (width ↔ bias window ↔ block-shared),
+    /// `"stash_pressure"` for eviction storms / fault bursts.
     pub kind: Cow<'static, str>,
     /// Policy name (`"qm"`, `"qe"`, `"bitwave"`, `"bc"`) or `"stash"`.
     pub source: Cow<'static, str>,
@@ -57,6 +58,12 @@ pub struct AdaptEvent {
     pub from: f64,
     /// New value (stored bits) — or window length in µs for pressure.
     pub to: f64,
+    /// Free-form transition label for `"layout"` events (e.g.
+    /// `"w8 -> af4b121"` — [`ExponentLayout::label`] strings); `None`
+    /// for bitlength/pressure events.
+    ///
+    /// [`ExponentLayout::label`]: crate::formats::ExponentLayout::label
+    pub detail: Option<Cow<'static, str>>,
     /// Job content hash, filled in when the event crossed the worker
     /// protocol (host-side events are keyed by run instead).
     pub arg_job: Option<String>,
@@ -113,6 +120,42 @@ pub fn bit_change(
         step: Some(step),
         from,
         to,
+        detail: None,
+        arg_job: None,
+        owner: None,
+    });
+}
+
+/// Record a per-layer exponent-layout switch: `from`/`to` carry the
+/// stored exponent-field bits (so numeric trajectories keep working) and
+/// `detail` the human transition label (`"w8 -> af4b121"`).  `layer =
+/// None` marks a network-wide switch.
+#[allow(clippy::too_many_arguments)]
+pub fn layout_change(
+    source: &'static str,
+    trigger: &'static str,
+    tensor_class: &'static str,
+    layer: Option<usize>,
+    epoch: usize,
+    step: usize,
+    from: f64,
+    to: f64,
+    detail: String,
+) {
+    record(AdaptEvent {
+        ts_us: super::trace::now_us(),
+        pid: std::process::id(),
+        kind: Cow::Borrowed("layout"),
+        source: Cow::Borrowed(source),
+        trigger: Cow::Borrowed(trigger),
+        layer,
+        tensor_class: Some(Cow::Borrowed(tensor_class)),
+        component: Some(Cow::Borrowed("exp")),
+        epoch: Some(epoch),
+        step: Some(step),
+        from,
+        to,
+        detail: Some(Cow::Owned(detail)),
         arg_job: None,
         owner: None,
     });
@@ -146,6 +189,7 @@ pub fn stash_pressure_for(
         step: None,
         from: count as f64,
         to: window_us as f64,
+        detail: None,
         arg_job: None,
         owner,
     });
@@ -210,6 +254,9 @@ pub fn event_json(ev: &AdaptEvent) -> Json {
     }
     m.insert("from".to_string(), Json::Num(ev.from));
     m.insert("to".to_string(), Json::Num(ev.to));
+    if let Some(d) = &ev.detail {
+        m.insert("detail".to_string(), Json::Str(d.to_string()));
+    }
     if let Some(job) = &ev.arg_job {
         m.insert("job".to_string(), Json::Str(job.clone()));
     }
@@ -239,6 +286,7 @@ pub fn event_from_json(j: &Json) -> Option<AdaptEvent> {
         step: j.get("step").and_then(Json::as_f64).map(|v| v as usize),
         from: j.get("from")?.as_f64()?,
         to: j.get("to")?.as_f64()?,
+        detail: owned("detail"),
         arg_job: j
             .get("job")
             .and_then(Json::as_str)
@@ -299,7 +347,25 @@ mod tests {
                 step: Some(40),
                 from: 8.0,
                 to: 6.0,
+                detail: None,
                 arg_job: Some("cafe".to_string()),
+                owner: None,
+            },
+            AdaptEvent {
+                ts_us: 50,
+                pid: 7,
+                kind: Cow::Borrowed("layout"),
+                source: Cow::Borrowed("af"),
+                trigger: Cow::Borrowed("af_window_fit"),
+                layer: Some(1),
+                tensor_class: Some(Cow::Borrowed("act")),
+                component: Some(Cow::Borrowed("exp")),
+                epoch: Some(2),
+                step: Some(61),
+                from: 8.0,
+                to: 4.0,
+                detail: Some(Cow::Borrowed("w8 -> af4b121")),
+                arg_job: None,
                 owner: None,
             },
             AdaptEvent {
@@ -315,12 +381,13 @@ mod tests {
                 step: None,
                 from: 16.0,
                 to: 250_000.0,
+                detail: None,
                 arg_job: None,
                 owner: Some(Cow::Borrowed("serve.t3")),
             },
         ];
         let text = render_jsonl(&events);
-        assert_eq!(text.lines().count(), 2, "one object per line");
+        assert_eq!(text.lines().count(), 3, "one object per line");
         assert_eq!(parse_jsonl(&text), events);
         assert_eq!(parse_jsonl(""), Vec::<AdaptEvent>::new());
     }

@@ -584,6 +584,7 @@ mod tests {
             step: Some(1),
             from: 8.0,
             to: 7.0,
+            detail: None,
             arg_job: None,
             owner: None,
         }];

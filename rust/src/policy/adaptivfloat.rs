@@ -1,0 +1,283 @@
+//! AdaptivFloat behind the [`BitPolicy`] trait (PAPERS.md): a per-tensor
+//! *learned exponent bias* instead of a learned field width.
+//!
+//! AdaptivFloat keeps a short fixed-width exponent field and recenters it
+//! on each tensor's observed dynamic range with a per-tensor bias — the
+//! same range signal Quantum Exponent consumes, spent on window *position*
+//! rather than window *size*.  The policy runs a full-precision warmup
+//! (ranges early in training move too much to commit a window), then fits
+//! each tensor's [`ExponentLayout::Bias`] from the streaming statistics
+//! every period: the window top is pinned to the observed maximum
+//! exponent, because saturating a stashed tensor corrupts the values the
+//! backward pass restores, while the values below the window are the
+//! tensor's smallest and flushing them is the quantization AdaptivFloat
+//! accepts.
+//!
+//! The policy owns only the exponent axis (plans carry the container's
+//! full mantissa); compose with Quantum Mantissa for the cross-paper
+//! QM+AF variant.  Every window fit or shift is reported to the flight
+//! recorder as an exponent-layout event, so `repro inspect` shows the
+//! per-layer layout trajectory next to the bitlength one.
+
+use super::{BitPolicy, ContainerPlan, NetworkPlan, StepSignals};
+use crate::formats::{Container, ExponentLayout};
+use crate::stats::ExpRangeStats;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// Exponent window width of the fitted layouts (AdaptivFloat's short
+/// exponent field; 2⁴−1 codes cover 15 octaves, ample for trained
+/// tensors whose ranges span ~6–10).
+const WINDOW_BITS: u32 = 4;
+
+pub struct AdaptivFloatPolicy {
+    container: Container,
+    nonneg_act: Vec<bool>,
+    /// First epoch the windows are fitted; before it every tensor stays
+    /// at the full-width default layout.
+    fit_epoch: usize,
+    /// Current per-tensor exponent layouts (default until fitted).
+    layout_a: Vec<ExponentLayout>,
+    layout_w: Vec<ExponentLayout>,
+    /// Last layouts reported to the flight recorder — observational
+    /// only, deliberately outside checkpoint/restore.
+    emitted_a: Vec<ExponentLayout>,
+    emitted_w: Vec<ExponentLayout>,
+}
+
+impl AdaptivFloatPolicy {
+    pub fn new(container: Container, epochs: usize, nonneg_act: Vec<bool>) -> Self {
+        let layers = nonneg_act.len();
+        Self {
+            container,
+            nonneg_act,
+            // the same warmup third the γ schedule spends at high noise
+            fit_epoch: (epochs / 3).max(1),
+            layout_a: vec![ExponentLayout::default(); layers],
+            layout_w: vec![ExponentLayout::default(); layers],
+            emitted_a: vec![ExponentLayout::default(); layers],
+            emitted_w: vec![ExponentLayout::default(); layers],
+        }
+    }
+
+    /// Fit one tensor's bias window: the window top sits on the observed
+    /// maximum biased exponent (no saturation on the range seen so far).
+    fn fit_layout(stats: &ExpRangeStats) -> ExponentLayout {
+        let half = 1i32 << (WINDOW_BITS - 1);
+        let bias = (stats.max_exp as i32 - half + 1).clamp(1, 254) as u8;
+        ExponentLayout::Bias {
+            bits: WINDOW_BITS,
+            bias,
+        }
+    }
+
+    fn make_plan(&self) -> NetworkPlan {
+        let mant = self.container.mant_bits() as f32;
+        let acts = self
+            .layout_a
+            .iter()
+            .zip(&self.nonneg_act)
+            .map(|(&layout, &nonneg)| ContainerPlan {
+                mant,
+                layout,
+                elide_sign: nonneg,
+            })
+            .collect();
+        let weights = self
+            .layout_w
+            .iter()
+            .map(|&layout| ContainerPlan {
+                mant,
+                layout,
+                elide_sign: false,
+            })
+            .collect();
+        NetworkPlan { acts, weights }
+    }
+
+    /// Report layout switches for one tensor class to the flight recorder.
+    fn emit_layout_changes(
+        class: &'static str,
+        layouts: &[ExponentLayout],
+        emitted: &mut [ExponentLayout],
+        sig: &StepSignals,
+    ) {
+        for (i, (l, last)) in layouts.iter().zip(emitted.iter_mut()).enumerate() {
+            if *l != *last {
+                let trigger = if last.is_default() {
+                    "af_window_fit"
+                } else {
+                    "af_window_shift"
+                };
+                crate::obs::events::layout_change(
+                    "af",
+                    trigger,
+                    class,
+                    Some(i),
+                    sig.epoch,
+                    sig.step,
+                    last.field_bits() as f64,
+                    l.field_bits() as f64,
+                    format!("{} -> {}", last.label(), l.label()),
+                );
+                *last = *l;
+            }
+        }
+    }
+}
+
+fn layouts_to_json(ls: &[ExponentLayout]) -> Json {
+    Json::Arr(ls.iter().map(|l| l.to_json()).collect())
+}
+
+fn layouts_from_json(state: &Json, key: &str) -> Result<Vec<ExponentLayout>> {
+    state
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("af state: missing array '{key}'"))?
+        .iter()
+        .map(ExponentLayout::from_json)
+        .collect()
+}
+
+impl BitPolicy for AdaptivFloatPolicy {
+    fn name(&self) -> &'static str {
+        "af"
+    }
+
+    fn observe(&mut self, sig: &StepSignals) -> NetworkPlan {
+        if sig.epoch >= self.fit_epoch {
+            for (i, stats) in sig.act_stats.iter().enumerate() {
+                if stats.count > 0 {
+                    if let Some(l) = self.layout_a.get_mut(i) {
+                        *l = Self::fit_layout(stats);
+                    }
+                }
+            }
+            for (i, stats) in sig.weight_stats.iter().enumerate() {
+                if stats.count > 0 {
+                    if let Some(l) = self.layout_w.get_mut(i) {
+                        *l = Self::fit_layout(stats);
+                    }
+                }
+            }
+        }
+        Self::emit_layout_changes("act", &self.layout_a, &mut self.emitted_a, sig);
+        Self::emit_layout_changes("weight", &self.layout_w, &mut self.emitted_w, sig);
+        self.make_plan()
+    }
+
+    fn plan(&self) -> NetworkPlan {
+        self.make_plan()
+    }
+
+    fn checkpoint(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("layout_a".to_string(), layouts_to_json(&self.layout_a));
+        o.insert("layout_w".to_string(), layouts_to_json(&self.layout_w));
+        Json::Obj(o)
+    }
+
+    fn restore(&mut self, state: &Json) -> Result<()> {
+        self.layout_a = layouts_from_json(state, "layout_a")?;
+        self.layout_w = layouts_from_json(state, "layout_w")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traces::ValueModel;
+
+    fn stats_for(model: ValueModel, seed: u64) -> ExpRangeStats {
+        ExpRangeStats::from_exponents(&model.sample_exponents(16 * 1024, seed))
+    }
+
+    fn sig<'a>(
+        epoch: usize,
+        step: usize,
+        a: &'a [ExpRangeStats],
+        w: &'a [ExpRangeStats],
+    ) -> StepSignals<'a> {
+        StepSignals {
+            epoch,
+            step,
+            loss: 1.0,
+            lr_changed: false,
+            learned_n_a: None,
+            learned_n_w: None,
+            act_stats: a,
+            weight_stats: w,
+        }
+    }
+
+    #[test]
+    fn warmup_stays_full_width_then_fits_windows() {
+        let act = vec![stats_for(ValueModel::relu_act(), 11)];
+        let wgt = vec![stats_for(ValueModel::weights(), 13)];
+        let mut p = AdaptivFloatPolicy::new(Container::Bf16, 9, vec![true]);
+        // epoch 0-2: warmup third of a 9-epoch run
+        let plan = p.observe(&sig(0, 0, &act, &wgt));
+        assert!(plan.acts[0].layout.is_default());
+        assert_eq!(plan.acts[0].exp_bits(), 8);
+        // past the warmup: fitted 4-bit bias windows
+        let plan = p.observe(&sig(3, 90, &act, &wgt));
+        let (_, hi) = plan.acts[0].layout.bias_window().expect("bias layout");
+        assert_eq!(hi, act[0].max_exp as i32, "window top on the observed max");
+        assert_eq!(plan.acts[0].exp_bits(), WINDOW_BITS);
+        assert_eq!(plan.weights[0].exp_bits(), WINDOW_BITS);
+        // the exponent half leaves the mantissa at container precision
+        assert_eq!(plan.acts[0].mant, 7.0);
+        assert!(plan.acts[0].elide_sign);
+        assert!(!plan.weights[0].elide_sign);
+    }
+
+    #[test]
+    fn missing_stats_keep_the_default_layout() {
+        let mut p = AdaptivFloatPolicy::new(Container::Bf16, 6, vec![false; 2]);
+        for s in 0..80 {
+            p.observe(&sig(s / 20, s, &[], &[]));
+        }
+        assert!(p.plan().acts.iter().all(|c| c.layout.is_default()));
+    }
+
+    #[test]
+    fn window_fit_emits_layout_events() {
+        crate::obs::events::capture_begin();
+        let act = vec![stats_for(ValueModel::relu_act(), 5)];
+        let wgt = vec![stats_for(ValueModel::weights(), 7)];
+        let mut p = AdaptivFloatPolicy::new(Container::Bf16, 6, vec![false]);
+        for s in 0..80 {
+            p.observe(&sig(s / 20, s, &act, &wgt));
+        }
+        let events = crate::obs::events::capture_end();
+        let af: Vec<_> = events.iter().filter(|e| e.source == "af").collect();
+        assert_eq!(af.len(), 2, "one fit per tensor, then stable");
+        for e in &af {
+            assert_eq!(e.kind, "layout");
+            assert_eq!(e.trigger, "af_window_fit");
+            assert_eq!(e.component.as_deref(), Some("exp"));
+            assert_eq!(e.from, 8.0);
+            assert_eq!(e.to, WINDOW_BITS as f64);
+            let d = e.detail.as_deref().expect("layout events carry labels");
+            assert!(d.starts_with("w8 -> af"), "detail {d}");
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_stable() {
+        let act = vec![stats_for(ValueModel::relu_act(), 3)];
+        let wgt = vec![stats_for(ValueModel::weights(), 5)];
+        let mut p = AdaptivFloatPolicy::new(Container::Bf16, 6, vec![true]);
+        for s in 0..70 {
+            p.observe(&sig(s / 20, s, &act, &wgt));
+        }
+        let ck = p.checkpoint();
+        let mut q = AdaptivFloatPolicy::new(Container::Bf16, 6, vec![true]);
+        q.restore(&ck).unwrap();
+        assert_eq!(ck, q.checkpoint());
+        assert_eq!(p.plan(), q.plan());
+    }
+}

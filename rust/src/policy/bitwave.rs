@@ -88,22 +88,12 @@ impl BitWave {
             .mode_a
             .iter()
             .zip(&self.nonneg_act)
-            .map(|(&mode, &nonneg)| ContainerPlan {
-                mant,
-                exp_bits,
-                exp_mode: mode,
-                elide_sign: nonneg,
-            })
+            .map(|(&mode, &nonneg)| ContainerPlan::width(mant, exp_bits, mode, nonneg))
             .collect();
         let weights = self
             .mode_w
             .iter()
-            .map(|&mode| ContainerPlan {
-                mant,
-                exp_bits,
-                exp_mode: mode,
-                elide_sign: false,
-            })
+            .map(|&mode| ContainerPlan::width(mant, exp_bits, mode, false))
             .collect();
         NetworkPlan { acts, weights }
     }
@@ -367,14 +357,14 @@ mod tests {
         }
         let plan = bw.plan();
         assert!(plan.acts[0].mant < 7.0, "mantissa chopped: {}", plan.acts[0].mant);
-        assert!(plan.acts[0].exp_bits < 8, "exponent chopped: {}", plan.acts[0].exp_bits);
+        assert!(plan.acts[0].exp_bits() < 8, "exponent chopped: {}", plan.acts[0].exp_bits());
         // the floor from the range stats is never violated
         let floor = a[0]
             .needed_exp_bits(1e-5)
             .max(w[0].needed_exp_bits(1e-5));
-        assert!(plan.acts[0].exp_bits >= floor);
+        assert!(plan.acts[0].exp_bits() >= floor);
         // weights ride the same network-wide container
-        assert_eq!(plan.weights[0].exp_bits, plan.acts[0].exp_bits);
+        assert_eq!(plan.weights[0].exp_bits(), plan.acts[0].exp_bits());
         assert_eq!(plan.weights[0].mant, plan.acts[0].mant);
     }
 
@@ -384,7 +374,7 @@ mod tests {
         for i in 0..60 {
             bw.observe(&sig(0, i, 5.0 - 0.08 * i as f64, &[], &[]));
         }
-        assert_eq!(bw.plan().acts[0].exp_bits, 8);
+        assert_eq!(bw.plan().acts[0].exp_bits(), 8);
         assert!(bw.plan().acts[0].mant < 7.0);
     }
 
@@ -395,11 +385,11 @@ mod tests {
         for i in 0..60 {
             bw.observe(&sig(0, i, 5.0 - 0.08 * i as f64, &a, &w));
         }
-        assert!(bw.plan().acts[0].exp_bits < 8);
+        assert!(bw.plan().acts[0].exp_bits() < 8);
         bw.notify_lr_change();
         let plan = bw.plan();
         assert_eq!(plan.acts[0].mant, 7.0);
-        assert_eq!(plan.acts[0].exp_bits, 8);
+        assert_eq!(plan.acts[0].exp_bits(), 8);
     }
 
     #[test]
@@ -409,11 +399,11 @@ mod tests {
         for i in 0..60 {
             bw.observe(&sig(0, i, 5.0 - 0.08 * i as f64, &a, &w));
         }
-        let low = bw.plan().acts[0].exp_bits;
+        let low = bw.plan().acts[0].exp_bits();
         for i in 0..40 {
             bw.observe(&sig(1, 60 + i, 1.0 + 0.2 * i as f64, &a, &w));
         }
-        assert!(bw.plan().acts[0].exp_bits > low);
+        assert!(bw.plan().acts[0].exp_bits() > low);
     }
 
     #[test]
@@ -462,7 +452,7 @@ mod tests {
         let plan = p.plan();
         assert!(plan.acts[0].mant < 7.0);
         assert_eq!(plan.weights[0].mant, 7.0, "weights stay at container");
-        assert_eq!(plan.acts[0].exp_bits, 8, "exponent untouched");
+        assert_eq!(plan.acts[0].exp_bits(), 8, "exponent untouched");
         assert!(plan.acts.iter().all(|c| c.mant == plan.acts[0].mant));
     }
 }

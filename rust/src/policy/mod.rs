@@ -13,10 +13,12 @@
 //! ```
 //!
 //! A [`ContainerPlan`] carries the three axes the paper adapts (§IV):
-//! fractional mantissa bitlength (ceiled for storage), exponent field
-//! width + lossless Gecko storage mode, and sign elision.  Policies
-//! checkpoint/restore their full adaptation state as JSON ([`BitPolicy::
-//! checkpoint`]) so a mid-run restore continues with identical plans.
+//! fractional mantissa bitlength (ceiled for storage), an exponent
+//! [`ExponentLayout`] (per-value learned width + lossless Gecko storage
+//! mode, an AdaptivFloat per-tensor bias window, or a Flexpoint
+//! block-shared exponent), and sign elision.  Policies checkpoint/restore
+//! their full adaptation state as JSON ([`BitPolicy::checkpoint`]) so a
+//! mid-run restore continues with identical plans.
 //!
 //! Implementations:
 //! * [`qm::QuantumMantissa`] — §IV-A learned per-layer mantissa bitlengths
@@ -29,27 +31,33 @@
 //! * [`bitwave::BitWave`] — the loss-EMA controller extended to drive
 //!   exponent *and* mantissa network-wide (Eq. 8/9 semantics preserved via
 //!   the embedded [`crate::coordinator::BitChop`]).
+//! * [`adaptivfloat::AdaptivFloatPolicy`] — AdaptivFloat (PAPERS.md): a
+//!   per-tensor exponent *bias window* fitted post-hoc from the streaming
+//!   range statistics, emitted as [`ExponentLayout::Bias`] plans.
 //! * [`Composite`] — mantissa bits from one policy, exponent layout from
 //!   another: QM + QE is the paper's headline pair.
-//! * [`FixedPolicy`] — static full-container baselines (FP32/BF16).
+//! * [`FixedPolicy`] — static baselines: full containers (FP32/BF16) and
+//!   the cross-paper presets (fp8 `Bias` window, Flexpoint `BlockShared`).
 //!
 //! The [`sweep`] module runs each policy over the ImageNet-scale trace
 //! models (`repro policy`), emitting per-epoch bitlength trajectories and
 //! end-of-run footprints with and without Gecko on the exponent streams.
 
+pub mod adaptivfloat;
 pub mod bitwave;
 pub mod qe;
 pub mod qm;
 pub mod schedule;
 pub mod sweep;
 
+pub use adaptivfloat::AdaptivFloatPolicy;
 pub use bitwave::{BitChopPolicy, BitWave};
 pub use qe::QuantumExponent;
 pub use qm::QuantumMantissa;
 pub use schedule::GammaSchedule;
 pub use sweep::{PolicyKind, PolicyRunResult, SweepConfig};
 
-use crate::formats::Container;
+use crate::formats::{Container, ExponentLayout};
 use crate::gecko::Mode;
 use crate::stash::ContainerMeta;
 use crate::stats::ExpRangeStats;
@@ -63,10 +71,9 @@ pub struct ContainerPlan {
     /// Fractional mantissa bitlength (drives the stochastic train-step
     /// quantizer); storage keeps `ceil(mant)` bits.
     pub mant: f32,
-    /// Learned exponent container width in bits (8 = the full IEEE field).
-    pub exp_bits: u32,
-    /// Lossless Gecko layout the stash stores the exponent stream in.
-    pub exp_mode: Mode,
+    /// How the exponent axis is shaped and stored (learned per-value
+    /// width, AdaptivFloat bias window, or Flexpoint block-shared).
+    pub layout: ExponentLayout,
     /// Elide value signs (valid only for known-non-negative tensors, §IV-D).
     pub elide_sign: bool,
 }
@@ -76,9 +83,20 @@ impl ContainerPlan {
     pub fn full(container: Container) -> Self {
         Self {
             mant: container.mant_bits() as f32,
-            exp_bits: 8,
-            exp_mode: Mode::Delta,
+            layout: ExponentLayout::default(),
             elide_sign: false,
+        }
+    }
+
+    /// A per-value learned-width plan — the paper's historical shape.
+    pub fn width(mant: f32, exp_bits: u32, exp_mode: Mode, elide_sign: bool) -> Self {
+        Self {
+            mant,
+            layout: ExponentLayout::Width {
+                bits: exp_bits,
+                mode: exp_mode,
+            },
+            elide_sign,
         }
     }
 
@@ -87,19 +105,41 @@ impl ContainerPlan {
         self.mant.max(0.0).ceil() as u32
     }
 
-    /// Plan-accounted stored bits per value: sign + fixed-width learned
-    /// exponent field + ceiled mantissa.  This is the *pre-Gecko* number
+    /// Stored exponent-field width in bits, clamped to the container's
+    /// exponent field (a plan can never charge more than the 8 bits the
+    /// container has).
+    pub fn exp_bits(&self) -> u32 {
+        self.layout.field_bits()
+    }
+
+    /// Amortized exponent bits per value (differs from [`Self::exp_bits`]
+    /// only for block-shared layouts).
+    pub fn exp_bits_per_value(&self) -> f64 {
+        self.layout.exponent_bits_per_value()
+    }
+
+    /// The lossless Gecko storage mode for per-value exponent streams.
+    pub fn exp_mode(&self) -> Mode {
+        self.layout.gecko_mode()
+    }
+
+    /// Plan-accounted stored bits per value: sign + amortized exponent
+    /// (field width clamped to the container's, shared exponents divided
+    /// across the block) + ceiled mantissa (+ the explicit leading one a
+    /// block-shared significand carries).  This is the *pre-Gecko* number
     /// (the paper's QM+QE / BitWave footprints); Gecko on the exponent
     /// stream only ever shrinks it further.
     pub fn bits_per_value(&self, container: Container) -> f64 {
         let sign = if self.elide_sign { 0.0 } else { 1.0 };
-        sign + self.exp_bits as f64 + self.store_mant_bits().min(container.mant_bits()) as f64
+        sign + self.layout.exponent_bits_per_value()
+            + self.store_mant_bits().min(container.mant_bits()) as f64
+            + self.layout.mantissa_overhead_bits()
     }
 
     /// The stash container metadata this plan induces.
     pub fn meta(&self, container: Container) -> ContainerMeta {
         ContainerMeta::new(container, self.store_mant_bits())
-            .with_exp_mode(self.exp_mode)
+            .with_layout(self.layout)
             .with_sign_elision(self.elide_sign)
     }
 }
@@ -135,11 +175,11 @@ impl NetworkPlan {
     }
 
     pub fn mean_act_exp(&self) -> f64 {
-        Self::mean(&self.acts, |p| p.exp_bits as f64)
+        Self::mean(&self.acts, |p| p.exp_bits_per_value())
     }
 
     pub fn mean_weight_exp(&self) -> f64 {
-        Self::mean(&self.weights, |p| p.exp_bits as f64)
+        Self::mean(&self.weights, |p| p.exp_bits_per_value())
     }
 }
 
@@ -221,8 +261,7 @@ impl Composite {
                 .zip(es)
                 .map(|(mp, ep)| ContainerPlan {
                     mant: mp.mant,
-                    exp_bits: ep.exp_bits,
-                    exp_mode: ep.exp_mode,
+                    layout: ep.layout,
                     elide_sign: mp.elide_sign || ep.elide_sign,
                 })
                 .collect()
@@ -274,23 +313,75 @@ impl BitPolicy for Composite {
     }
 }
 
-/// Static full-container policy — the FP32/BF16 baselines expressed through
-/// the same engine so the Trainer has exactly one wiring path.
+/// Static-plan policy — the FP32/BF16 full-container baselines and the
+/// cross-paper fixed presets (fp8 bias window, Flexpoint block-shared,
+/// plain bf16) expressed through the same engine so the Trainer has
+/// exactly one wiring path.
 pub struct FixedPolicy {
+    name: &'static str,
     plan: NetworkPlan,
 }
 
 impl FixedPolicy {
     pub fn new(container: Container, layers: usize) -> Self {
         Self {
+            name: "fixed",
             plan: NetworkPlan::full(container, layers),
         }
+    }
+
+    /// A named preset with one uniform `ContainerPlan` for every tensor.
+    pub fn preset(
+        name: &'static str,
+        layers: usize,
+        mant: f32,
+        layout: ExponentLayout,
+    ) -> Self {
+        let plan = ContainerPlan {
+            mant,
+            layout,
+            elide_sign: false,
+        };
+        Self {
+            name,
+            plan: NetworkPlan {
+                acts: vec![plan; layers],
+                weights: vec![plan; layers],
+            },
+        }
+    }
+
+    /// Flexpoint (PAPERS.md): bf16-width mantissa under a 16-value shared
+    /// 8-bit exponent — ~9.5 stored bits per value before Gecko.
+    pub fn flexpoint(layers: usize) -> Self {
+        Self::preset(
+            "flexpoint",
+            layers,
+            7.0,
+            ExponentLayout::BlockShared { block: 16, bits: 8 },
+        )
+    }
+
+    /// An fp8 (e4m3-shaped) container: 4-bit exponent window centred at
+    /// the IEEE bias, 3 mantissa bits — exactly 8 stored bits per value.
+    pub fn fp8(layers: usize) -> Self {
+        Self::preset(
+            "fp8",
+            layers,
+            3.0,
+            ExponentLayout::Bias { bits: 4, bias: 127 },
+        )
+    }
+
+    /// Plain BF16 under the default full-width layout.
+    pub fn bf16(layers: usize) -> Self {
+        Self::preset("bf16", layers, 7.0, ExponentLayout::default())
     }
 }
 
 impl BitPolicy for FixedPolicy {
     fn name(&self) -> &'static str {
-        "fixed"
+        self.name
     }
 
     fn observe(&mut self, _sig: &StepSignals) -> NetworkPlan {
@@ -391,12 +482,7 @@ mod tests {
 
     #[test]
     fn plan_bits_per_value() {
-        let p = ContainerPlan {
-            mant: 1.3,
-            exp_bits: 4,
-            exp_mode: Mode::Delta,
-            elide_sign: true,
-        };
+        let p = ContainerPlan::width(1.3, 4, Mode::Delta, true);
         // 0 sign + 4 exponent + ceil(1.3)=2 mantissa
         assert_eq!(p.bits_per_value(Container::Bf16), 6.0);
         assert_eq!(p.store_mant_bits(), 2);
@@ -407,49 +493,82 @@ mod tests {
     }
 
     #[test]
-    fn plan_meta_application() {
-        let p = ContainerPlan {
-            mant: 2.7,
-            exp_bits: 4,
-            exp_mode: Mode::FixedBias { bias: 124, group: 8 },
-            elide_sign: true,
+    fn bits_per_value_clamps_exponent_to_container_field() {
+        // an over-wide requested exponent field charges only the 8 bits
+        // the container has (historically it billed the raw number)
+        let p = ContainerPlan::width(30.0, 12, Mode::Delta, false);
+        assert_eq!(p.exp_bits(), 8);
+        // 1 sign + 8 exponent + 7 mantissa (both axes clamped)
+        assert_eq!(p.bits_per_value(Container::Bf16), 16.0);
+    }
+
+    #[test]
+    fn bits_per_value_by_layout() {
+        // fp8 preset: 1 sign + 4-bit window + 3 mantissa = 8 exactly
+        let fp8 = ContainerPlan {
+            mant: 3.0,
+            layout: ExponentLayout::Bias { bits: 4, bias: 127 },
+            elide_sign: false,
         };
+        assert_eq!(fp8.bits_per_value(Container::Fp32), 8.0);
+        // flexpoint: 1 sign + 8/16 shared exponent + (7 + 1) significand
+        let flex = ContainerPlan {
+            mant: 7.0,
+            layout: ExponentLayout::BlockShared { block: 16, bits: 8 },
+            elide_sign: false,
+        };
+        assert_eq!(flex.bits_per_value(Container::Bf16), 9.5);
+    }
+
+    #[test]
+    fn plan_meta_application() {
+        let p = ContainerPlan::width(2.7, 4, Mode::FixedBias { bias: 124, group: 8 }, true);
         let m = p.meta(Container::Bf16);
         assert_eq!(m.mant_bits, 3);
         assert!(m.elide_sign);
-        assert_eq!(m.exp_mode, Mode::FixedBias { bias: 124, group: 8 });
+        assert_eq!(m.exp_mode(), Mode::FixedBias { bias: 124, group: 8 });
+        // non-width layouts pass through to the stash meta verbatim
+        let b = ContainerPlan {
+            mant: 3.0,
+            layout: ExponentLayout::Bias { bits: 4, bias: 121 },
+            elide_sign: false,
+        };
+        assert_eq!(
+            b.meta(Container::Fp32).layout,
+            ExponentLayout::Bias { bits: 4, bias: 121 }
+        );
     }
 
     #[test]
     fn composite_merges_axes() {
         let m = NetworkPlan {
-            acts: vec![ContainerPlan {
-                mant: 1.0,
-                exp_bits: 8,
-                exp_mode: Mode::Delta,
-                elide_sign: true,
-            }],
+            acts: vec![ContainerPlan::width(1.0, 8, Mode::Delta, true)],
             weights: vec![ContainerPlan::full(Container::Bf16)],
         };
         let e = NetworkPlan {
-            acts: vec![ContainerPlan {
-                mant: 7.0,
-                exp_bits: 4,
-                exp_mode: Mode::FixedBias { bias: 120, group: 8 },
-                elide_sign: false,
-            }],
-            weights: vec![ContainerPlan {
-                mant: 7.0,
-                exp_bits: 3,
-                exp_mode: Mode::Delta,
-                elide_sign: false,
-            }],
+            acts: vec![ContainerPlan::width(
+                7.0,
+                4,
+                Mode::FixedBias { bias: 120, group: 8 },
+                false,
+            )],
+            weights: vec![ContainerPlan::width(7.0, 3, Mode::Delta, false)],
         };
         let out = Composite::merge(m, &e);
         assert_eq!(out.acts[0].mant, 1.0);
-        assert_eq!(out.acts[0].exp_bits, 4);
+        assert_eq!(out.acts[0].exp_bits(), 4);
         assert!(out.acts[0].elide_sign);
-        assert_eq!(out.weights[0].exp_bits, 3);
+        assert_eq!(out.weights[0].exp_bits(), 3);
+    }
+
+    #[test]
+    fn fixed_presets_have_the_advertised_footprints() {
+        let fp8 = FixedPolicy::fp8(2).plan();
+        assert_eq!(fp8.acts[0].bits_per_value(Container::Fp32), 8.0);
+        let flex = FixedPolicy::flexpoint(2).plan();
+        assert_eq!(flex.acts[0].bits_per_value(Container::Bf16), 9.5);
+        let bf16 = FixedPolicy::bf16(2).plan();
+        assert_eq!(bf16.acts[0].bits_per_value(Container::Bf16), 16.0);
     }
 
     #[test]

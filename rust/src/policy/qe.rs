@@ -93,23 +93,15 @@ impl QuantumExponent {
             .iter()
             .zip(&self.mode_a)
             .zip(&self.nonneg_act)
-            .map(|((&e, &mode), &nonneg)| ContainerPlan {
-                mant,
-                exp_bits: (e.ceil() as u32).clamp(1, 8),
-                exp_mode: mode,
-                elide_sign: nonneg,
+            .map(|((&e, &mode), &nonneg)| {
+                ContainerPlan::width(mant, Self::stored_width(e), mode, nonneg)
             })
             .collect();
         let weights = self
             .e_w
             .iter()
             .zip(&self.mode_w)
-            .map(|(&e, &mode)| ContainerPlan {
-                mant,
-                exp_bits: (e.ceil() as u32).clamp(1, 8),
-                exp_mode: mode,
-                elide_sign: false,
-            })
+            .map(|(&e, &mode)| ContainerPlan::width(mant, Self::stored_width(e), mode, false))
             .collect();
         NetworkPlan { acts, weights }
     }
@@ -280,18 +272,18 @@ mod tests {
         // §IV: "3 or 4 exponent bits" — trained-like streams land there
         // (the tight-tolerance activation tail needs one more).
         assert!(
-            (3..=5).contains(&plan.acts[0].exp_bits),
+            (3..=5).contains(&plan.acts[0].exp_bits()),
             "act exp bits {}",
-            plan.acts[0].exp_bits
+            plan.acts[0].exp_bits()
         );
         assert!(
-            (3..=4).contains(&plan.weights[0].exp_bits),
+            (3..=4).contains(&plan.weights[0].exp_bits()),
             "weight exp bits {}",
-            plan.weights[0].exp_bits
+            plan.weights[0].exp_bits()
         );
         // learned widths must cover the observed range at the tolerance
-        assert!(plan.acts[0].exp_bits >= act[0].needed_exp_bits(1e-5));
-        assert!(plan.weights[0].exp_bits >= wgt[0].needed_exp_bits(1e-5));
+        assert!(plan.acts[0].exp_bits() >= act[0].needed_exp_bits(1e-5));
+        assert!(plan.weights[0].exp_bits() >= wgt[0].needed_exp_bits(1e-5));
     }
 
     #[test]
@@ -309,7 +301,7 @@ mod tests {
                 weight_stats: &[],
             });
         }
-        assert!(p.plan().acts.iter().all(|c| c.exp_bits == 8));
+        assert!(p.plan().acts.iter().all(|c| c.exp_bits() == 8));
     }
 
     #[test]
@@ -331,7 +323,7 @@ mod tests {
         for s in 0..100 {
             p.observe(&sig(s / 30, s, &narrow, &wgt));
         }
-        let before = p.plan().acts[0].exp_bits;
+        let before = p.plan().acts[0].exp_bits();
         assert!(before <= 2, "constant stream narrows hard: {before}");
         // the range blows up in the frozen endgame: widths must jump, not
         // drift — saturating stashed tensors is never acceptable
@@ -344,7 +336,7 @@ mod tests {
         let wide = vec![ExpRangeStats::from_exponents(&wide_exps)];
         let plan = p.observe(&sig(5, 210, &wide, &wgt));
         assert!(
-            plan.acts[0].exp_bits >= wide[0].needed_exp_bits(1e-5),
+            plan.acts[0].exp_bits() >= wide[0].needed_exp_bits(1e-5),
             "overflow guard must react in one period"
         );
     }

@@ -152,22 +152,12 @@ impl QuantumMantissa {
             .n_a
             .iter()
             .zip(&self.nonneg_act)
-            .map(|(&n, &nonneg)| ContainerPlan {
-                mant: n,
-                exp_bits: 8,
-                exp_mode: Mode::Delta,
-                elide_sign: nonneg,
-            })
+            .map(|(&n, &nonneg)| ContainerPlan::width(n, 8, Mode::Delta, nonneg))
             .collect();
         let weights = self
             .n_w
             .iter()
-            .map(|&n| ContainerPlan {
-                mant: n,
-                exp_bits: 8,
-                exp_mode: Mode::Delta,
-                elide_sign: false,
-            })
+            .map(|&n| ContainerPlan::width(n, 8, Mode::Delta, false))
             .collect();
         NetworkPlan { acts, weights }
     }
@@ -282,7 +272,7 @@ mod tests {
         assert_eq!(plan.weights[2].mant, 3.0);
         assert!(plan.acts[0].elide_sign);
         assert!(!plan.acts[2].elide_sign);
-        assert_eq!(plan.acts[0].exp_bits, 8, "QM alone leaves exponents full");
+        assert_eq!(plan.acts[0].exp_bits(), 8, "QM alone leaves exponents full");
     }
 
     #[test]

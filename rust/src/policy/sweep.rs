@@ -13,7 +13,10 @@
 //! carries a mantissa-quantization penalty term, so chopping bits too far
 //! *raises* the observed loss exactly as it would in real training.
 
-use super::{BitPolicy, Composite, NetworkPlan, QuantumExponent, QuantumMantissa};
+use super::{
+    AdaptivFloatPolicy, BitPolicy, Composite, FixedPolicy, NetworkPlan, QuantumExponent,
+    QuantumMantissa,
+};
 use crate::formats::Container;
 use crate::hwsim;
 use crate::report::footprint::{
@@ -37,6 +40,16 @@ pub enum PolicyKind {
     /// Quantum Mantissa alone (exponents stay at the full 8-bit field) —
     /// shows that exponent adaptation is the load-bearing half.
     QmOnly,
+    /// Quantum Mantissa + AdaptivFloat — cross-paper pair spending the
+    /// range signal on a per-tensor exponent *bias* instead of a width.
+    AdaptivFloat,
+    /// Flexpoint-style block-shared exponent (one field per 16 values),
+    /// fixed full mantissa — a static cross-paper baseline.
+    Flexpoint,
+    /// Static fp8-like preset (E4M3 footprint via a 4-bit bias window).
+    Fp8,
+    /// Static bf16 passthrough — the no-adaptation floor.
+    Bf16,
 }
 
 impl PolicyKind {
@@ -45,6 +58,10 @@ impl PolicyKind {
             "qmqe" | "qm_qe" | "qm+qe" => Some(PolicyKind::QmQe),
             "bitwave" | "bw" => Some(PolicyKind::BitWave),
             "qm" | "qm_only" => Some(PolicyKind::QmOnly),
+            "adaptivfloat" | "af" | "qm+af" => Some(PolicyKind::AdaptivFloat),
+            "flexpoint" | "flex" => Some(PolicyKind::Flexpoint),
+            "fp8" => Some(PolicyKind::Fp8),
+            "bf16" => Some(PolicyKind::Bf16),
             _ => None,
         }
     }
@@ -54,11 +71,23 @@ impl PolicyKind {
             PolicyKind::QmQe => "qm+qe",
             PolicyKind::BitWave => "bitwave",
             PolicyKind::QmOnly => "qm",
+            PolicyKind::AdaptivFloat => "qm+af",
+            PolicyKind::Flexpoint => "flexpoint",
+            PolicyKind::Fp8 => "fp8",
+            PolicyKind::Bf16 => "bf16",
         }
     }
 
-    pub fn all() -> [PolicyKind; 3] {
-        [PolicyKind::QmQe, PolicyKind::BitWave, PolicyKind::QmOnly]
+    pub fn all() -> [PolicyKind; 7] {
+        [
+            PolicyKind::QmQe,
+            PolicyKind::BitWave,
+            PolicyKind::QmOnly,
+            PolicyKind::AdaptivFloat,
+            PolicyKind::Flexpoint,
+            PolicyKind::Fp8,
+            PolicyKind::Bf16,
+        ]
     }
 }
 
@@ -223,6 +252,20 @@ pub fn build_policy(kind: PolicyKind, net: &NetworkTrace, cfg: &SweepConfig) -> 
             targets,
         )),
         PolicyKind::BitWave => Box::new(super::BitWave::new(cfg.container, nonneg)),
+        PolicyKind::AdaptivFloat => Box::new(Composite::new(
+            "qm+af",
+            Box::new(QuantumMantissa::surrogate(
+                cfg.container,
+                cfg.epochs,
+                cfg.steps_per_epoch,
+                nonneg.clone(),
+                targets,
+            )),
+            Box::new(AdaptivFloatPolicy::new(cfg.container, cfg.epochs, nonneg)),
+        )),
+        PolicyKind::Flexpoint => Box::new(FixedPolicy::flexpoint(net.layers.len())),
+        PolicyKind::Fp8 => Box::new(FixedPolicy::fp8(net.layers.len())),
+        PolicyKind::Bf16 => Box::new(FixedPolicy::bf16(net.layers.len())),
     }
 }
 

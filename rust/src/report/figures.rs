@@ -451,6 +451,7 @@ mod tests {
             step: Some(step),
             from,
             to,
+            detail: None,
             arg_job: None,
             owner: None,
         };

@@ -26,21 +26,23 @@
 //! equals `quantize(v, meta.mant(), meta.container)` bit-for-bit (property
 //! tested in `rust/tests/props.rs`, down to the 1-mantissa-bit extreme).
 
-use crate::formats::{bf16_bits, Container, F32_MANT_BITS};
+use crate::formats::layout::{block_fields, block_value};
+use crate::formats::{bf16_bits, exponent, Container, ExponentLayout, F32_MANT_BITS};
 use crate::gecko::{self, BitWriter, Kernel, Mode, SegReader};
 use crate::sfp::SfpCodec;
 use crate::stats::ComponentBits;
 
 /// Per-tensor container metadata chosen by the active policy (QM/BitChop):
 /// which container the tensor is stashed in and how many mantissa bits
-/// survive, plus the exponent encoding and sign handling.
+/// survive, plus the exponent layout and sign handling.
 #[derive(Debug, Clone, Copy)]
 pub struct ContainerMeta {
     pub container: Container,
     /// Mantissa bits to keep (clamped to the container's mantissa length).
     pub mant_bits: u32,
-    /// Exponent encoding; both modes are lossless (raw escape).
-    pub exp_mode: Mode,
+    /// Exponent shape: per-value learned width (lossless Gecko storage),
+    /// AdaptivFloat per-tensor bias window, or Flexpoint block-shared.
+    pub layout: ExponentLayout,
     /// Elide value signs — only valid for known-non-negative tensors
     /// (post-ReLU activations, §IV-D).
     pub elide_sign: bool,
@@ -51,7 +53,7 @@ impl ContainerMeta {
         Self {
             container,
             mant_bits,
-            exp_mode: Mode::Delta,
+            layout: ExponentLayout::default(),
             elide_sign: false,
         }
     }
@@ -61,9 +63,26 @@ impl ContainerMeta {
         self
     }
 
+    /// Set the Gecko storage mode of a per-value-width exponent stream
+    /// (the historical `exp_mode` knob, kept for the Width layout).
     pub fn with_exp_mode(mut self, mode: Mode) -> Self {
-        self.exp_mode = mode;
+        let bits = match self.layout {
+            ExponentLayout::Width { bits, .. } => bits,
+            _ => crate::formats::EXP_BITS,
+        };
+        self.layout = ExponentLayout::Width { bits, mode };
         self
+    }
+
+    pub fn with_layout(mut self, layout: ExponentLayout) -> Self {
+        self.layout = layout;
+        self
+    }
+
+    /// Gecko storage mode of the per-value exponent stream (`Delta` for
+    /// the non-Width layouts, which do not use the adaptive Gecko path).
+    pub fn exp_mode(&self) -> Mode {
+        self.layout.gecko_mode()
     }
 
     /// Effective mantissa length inside this container.
@@ -71,9 +90,18 @@ impl ContainerMeta {
         self.mant_bits.min(self.container.mant_bits())
     }
 
-    /// The container value every stored f32 is reduced to.
+    /// The container value every stored f32 is reduced to, for layouts
+    /// whose quantizer is per-value; panics for `BlockShared` (whose
+    /// quantizer needs the whole slice — use
+    /// [`ContainerMeta::quantized_slice`]).
     pub fn quantized(&self, v: f32) -> f32 {
-        crate::formats::quantize(v, self.mant(), self.container)
+        self.layout.quantize_value(v, self.mant(), self.container)
+    }
+
+    /// Quantize a whole tensor under this meta — the fixed point every
+    /// codec's `decode(encode(vals))` equals bit-for-bit.
+    pub fn quantized_slice(&self, vals: &[f32]) -> Vec<f32> {
+        self.layout.quantize_slice(vals, self.mant(), self.container)
     }
 }
 
@@ -229,16 +257,28 @@ impl StashCodec for GeckoStashCodec {
     }
 
     fn group(&self, meta: &ContainerMeta) -> usize {
-        match meta.exp_mode {
-            Mode::Delta => gecko::GROUP,
-            Mode::FixedBias { group, .. } => group,
+        match meta.layout {
+            ExponentLayout::BlockShared { block, .. } => block.max(1),
+            // fixed-width per-value fields: any chunk partition is
+            // bit-identical, no group padding
+            ExponentLayout::Bias { .. } => 1,
+            ExponentLayout::Width { mode: Mode::Delta, .. } => gecko::GROUP,
+            ExponentLayout::Width {
+                mode: Mode::FixedBias { group, .. },
+                ..
+            } => group,
         }
     }
 
     fn encode_kernel(&self, vals: &[f32], meta: &ContainerMeta, kernel: Kernel) -> EncodedStreams {
+        match meta.layout {
+            ExponentLayout::Bias { .. } => return encode_bias_streams(vals, meta, kernel),
+            ExponentLayout::BlockShared { .. } => return encode_block_streams(vals, meta, kernel),
+            ExponentLayout::Width { .. } => {}
+        }
         let n = meta.mant();
         let exps = gecko::exponents(vals);
-        let enc = gecko::encode_kernel(&exps, meta.exp_mode, kernel);
+        let enc = gecko::encode_kernel(&exps, meta.exp_mode(), kernel);
         let mut mant = BitWriter::with_capacity(vals.len() * n as usize);
         let mut sign = BitWriter::with_capacity(if meta.elide_sign { 0 } else { vals.len() });
         match kernel {
@@ -303,11 +343,18 @@ impl StashCodec for GeckoStashCodec {
         meta: &ContainerMeta,
         kernel: Kernel,
     ) -> Vec<f32> {
+        match meta.layout {
+            ExponentLayout::Bias { .. } => return decode_bias_streams(count, streams, meta, kernel),
+            ExponentLayout::BlockShared { .. } => {
+                return decode_block_streams(count, streams, meta, kernel)
+            }
+            ExponentLayout::Width { .. } => {}
+        }
         let n = meta.mant();
         let [payload, metadata, mant, sign] = streams else {
             panic!("gecko codec expects 4 streams");
         };
-        let exps = gecko::decode_readers_kernel(payload, metadata, count, meta.exp_mode, kernel);
+        let exps = gecko::decode_readers_kernel(payload, metadata, count, meta.exp_mode(), kernel);
         match kernel {
             Kernel::Word => {
                 let mut out = Vec::with_capacity(count);
@@ -354,13 +401,286 @@ impl StashCodec for GeckoStashCodec {
     }
 }
 
+/// AdaptivFloat component streams: a fixed `layout.field_bits()`-wide
+/// exponent field per value (0 = zero, else `e - lo + 1` within the bias
+/// window — exactly the bits `ContainerPlan::bits_per_value` charges), a
+/// packed `n`-bit mantissa stream, and signs.  Stream order mirrors the
+/// Gecko layout (`[exponent, metadata, mantissa, sign]`) with an empty
+/// metadata stream: the field width is fixed, nothing adapts per group.
+fn encode_bias_streams(vals: &[f32], meta: &ContainerMeta, kernel: Kernel) -> EncodedStreams {
+    let n = meta.mant();
+    let b = meta.layout.field_bits();
+    let (lo, _) = meta.layout.bias_window().expect("bias layout");
+    let field_of = |q: f32| -> u64 {
+        let e = exponent(q) as i32;
+        if e == 0 {
+            0
+        } else {
+            (e - lo + 1) as u64
+        }
+    };
+    let mant_of = |q: f32| -> u64 {
+        if n == 0 {
+            0
+        } else {
+            ((q.to_bits() >> (F32_MANT_BITS - n)) & ((1u32 << n) - 1)) as u64
+        }
+    };
+    let mut exp = BitWriter::with_capacity(vals.len() * b as usize);
+    let mut mant = BitWriter::with_capacity(vals.len() * n as usize);
+    let mut sign = BitWriter::with_capacity(if meta.elide_sign { 0 } else { vals.len() });
+    match kernel {
+        Kernel::Word => {
+            let mut ef = [0u64; 64];
+            let mut mf = [0u64; 64];
+            for chunk in vals.chunks(64) {
+                let mut sw = 0u64;
+                for (c, &v) in chunk.iter().enumerate() {
+                    let q = meta.quantized(v);
+                    ef[c] = field_of(q);
+                    mf[c] = mant_of(q);
+                    sw = (sw << 1) | (q.to_bits() >> 31) as u64;
+                }
+                exp.pack_lanes(&ef[..chunk.len()], b);
+                if n > 0 {
+                    mant.pack_lanes(&mf[..chunk.len()], n);
+                }
+                if !meta.elide_sign {
+                    sign.push_word(sw, chunk.len() as u32);
+                }
+            }
+        }
+        Kernel::Scalar => {
+            for &v in vals {
+                let q = meta.quantized(v);
+                exp.push(field_of(q), b);
+                if n > 0 {
+                    mant.push(mant_of(q), n);
+                }
+                if !meta.elide_sign {
+                    sign.push((q.to_bits() >> 31) as u64, 1);
+                }
+            }
+        }
+    }
+    let (ew, eb) = exp.into_words();
+    let (mw, mb) = mant.into_words();
+    let (sw, sb) = sign.into_words();
+    let bits = ComponentBits {
+        sign: sb as f64,
+        exponent: eb as f64,
+        mantissa: mb as f64,
+        metadata: 0.0,
+    };
+    EncodedStreams {
+        count: vals.len(),
+        streams: vec![(ew, eb), (Vec::new(), 0), (mw, mb), (sw, sb)],
+        bits,
+    }
+}
+
+fn decode_bias_streams(
+    count: usize,
+    streams: &mut [SegReader<'_>],
+    meta: &ContainerMeta,
+    kernel: Kernel,
+) -> Vec<f32> {
+    let [exp, _metadata, mant, sign] = streams else {
+        panic!("bias layout expects 4 streams");
+    };
+    let n = meta.mant();
+    let b = meta.layout.field_bits();
+    let (lo, _) = meta.layout.bias_window().expect("bias layout");
+    let value_of = |f: u64, m: u64, s: u32| -> f32 {
+        let e = if f == 0 { 0 } else { (f as i32 + lo - 1) as u32 };
+        let m = if n == 0 {
+            0
+        } else {
+            (m as u32) << (F32_MANT_BITS - n)
+        };
+        f32::from_bits((s << 31) | (e << 23) | m)
+    };
+    match kernel {
+        Kernel::Word => {
+            let mut out = Vec::with_capacity(count);
+            let mut ef = [0u64; 64];
+            let mut mf = [0u64; 64];
+            let mut rem = count;
+            while rem > 0 {
+                let l = rem.min(64);
+                exp.unpack_lanes(b, &mut ef[..l]);
+                if n > 0 {
+                    mant.unpack_lanes(n, &mut mf[..l]);
+                }
+                let sw = if meta.elide_sign { 0 } else { sign.read_word(l as u32) };
+                for c in 0..l {
+                    let s = if meta.elide_sign {
+                        0
+                    } else {
+                        ((sw >> (l - 1 - c)) & 1) as u32
+                    };
+                    let m = if n > 0 { mf[c] } else { 0 };
+                    out.push(value_of(ef[c], m, s));
+                }
+                rem -= l;
+            }
+            out
+        }
+        Kernel::Scalar => (0..count)
+            .map(|_| {
+                let f = exp.read(b);
+                let m = if n > 0 { mant.read(n) } else { 0 };
+                let s = if meta.elide_sign { 0 } else { sign.read(1) as u32 };
+                value_of(f, m, s)
+            })
+            .collect(),
+    }
+}
+
+/// Flexpoint component streams: one `field_bits()`-wide shared exponent
+/// per block, a packed `n + 1`-bit explicit-leading-one significand per
+/// value, and signs — stream order mirrors the Gecko layout with an
+/// empty metadata stream.  Used by both the gecko and sfp adapters (the
+/// block layout has no per-value exponents for either stack to
+/// compress, so their streams coincide).
+fn encode_block_streams(vals: &[f32], meta: &ContainerMeta, kernel: Kernel) -> EncodedStreams {
+    let n = meta.mant();
+    let block = meta.layout.block().expect("block layout");
+    let eb = meta.layout.field_bits();
+    let w = n + 1;
+    let (emaxs, fields) = block_fields(vals, n, meta.container, block, eb);
+    let mut exp = BitWriter::with_capacity(emaxs.len() * eb as usize);
+    let mut mant = BitWriter::with_capacity(vals.len() * w as usize);
+    let mut sign = BitWriter::with_capacity(if meta.elide_sign { 0 } else { vals.len() });
+    match kernel {
+        Kernel::Word => {
+            let mut buf = [0u64; 64];
+            for chunk in emaxs.chunks(64) {
+                for (f, &e) in buf.iter_mut().zip(chunk) {
+                    *f = e as u64;
+                }
+                exp.pack_lanes(&buf[..chunk.len()], eb);
+            }
+            for chunk in fields.chunks(64) {
+                for (f, &m) in buf.iter_mut().zip(chunk) {
+                    *f = m as u64;
+                }
+                mant.pack_lanes(&buf[..chunk.len()], w);
+            }
+            if !meta.elide_sign {
+                for chunk in vals.chunks(64) {
+                    let mut sw = 0u64;
+                    for &v in chunk {
+                        sw = (sw << 1) | (v.to_bits() >> 31) as u64;
+                    }
+                    sign.push_word(sw, chunk.len() as u32);
+                }
+            }
+        }
+        Kernel::Scalar => {
+            for &e in &emaxs {
+                exp.push(e as u64, eb);
+            }
+            for &m in &fields {
+                mant.push(m as u64, w);
+            }
+            if !meta.elide_sign {
+                for &v in vals {
+                    sign.push((v.to_bits() >> 31) as u64, 1);
+                }
+            }
+        }
+    }
+    let (ew, ebits) = exp.into_words();
+    let (mw, mb) = mant.into_words();
+    let (sw, sb) = sign.into_words();
+    let bits = ComponentBits {
+        sign: sb as f64,
+        exponent: ebits as f64,
+        mantissa: mb as f64,
+        metadata: 0.0,
+    };
+    EncodedStreams {
+        count: vals.len(),
+        streams: vec![(ew, ebits), (Vec::new(), 0), (mw, mb), (sw, sb)],
+        bits,
+    }
+}
+
+fn decode_block_streams(
+    count: usize,
+    streams: &mut [SegReader<'_>],
+    meta: &ContainerMeta,
+    kernel: Kernel,
+) -> Vec<f32> {
+    let [exp, _metadata, mant, sign] = streams else {
+        panic!("block layout expects 4 streams");
+    };
+    let n = meta.mant();
+    let block = meta.layout.block().expect("block layout");
+    let eb = meta.layout.field_bits();
+    let w = n + 1;
+    let nblocks = count.div_ceil(block.max(1));
+    let mut emaxs = Vec::with_capacity(nblocks);
+    match kernel {
+        Kernel::Word => {
+            let mut buf = [0u64; 64];
+            let mut rem = nblocks;
+            while rem > 0 {
+                let l = rem.min(64);
+                exp.unpack_lanes(eb, &mut buf[..l]);
+                emaxs.extend(buf[..l].iter().map(|&e| e as u8));
+                rem -= l;
+            }
+            let mut out = Vec::with_capacity(count);
+            let mut mf = [0u64; 64];
+            let mut i = 0usize;
+            let mut rem = count;
+            while rem > 0 {
+                let l = rem.min(64);
+                mant.unpack_lanes(w, &mut mf[..l]);
+                let sw = if meta.elide_sign { 0 } else { sign.read_word(l as u32) };
+                for (c, &m) in mf[..l].iter().enumerate() {
+                    let s = if meta.elide_sign {
+                        0
+                    } else {
+                        ((sw >> (l - 1 - c)) & 1) as u32
+                    };
+                    out.push(block_value(emaxs[i / block], m as u32, s, n));
+                    i += 1;
+                }
+                rem -= l;
+            }
+            out
+        }
+        Kernel::Scalar => {
+            for _ in 0..nblocks {
+                emaxs.push(exp.read(eb) as u8);
+            }
+            (0..count)
+                .map(|i| {
+                    let m = mant.read(w) as u32;
+                    let s = if meta.elide_sign { 0 } else { sign.read(1) as u32 };
+                    block_value(emaxs[i / block], m, s, n)
+                })
+                .collect()
+        }
+    }
+}
+
 /// The learned exponent bias register the SFP hardware layout uses for a
 /// tensor stored under `meta` — Quantum Exponent's per-layer fixed-bias
-/// choice carries straight into the §V stream (see [`SfpCodec::bias`]).
+/// choice (and AdaptivFloat's learned tensor bias) carries straight into
+/// the §V stream (see [`SfpCodec::bias`]).
 fn sfp_bias_of(meta: &ContainerMeta) -> Option<u8> {
-    match meta.exp_mode {
-        Mode::Delta => None,
-        Mode::FixedBias { bias, .. } => Some(bias),
+    match meta.layout {
+        ExponentLayout::Width { mode: Mode::Delta, .. } => None,
+        ExponentLayout::Width {
+            mode: Mode::FixedBias { bias, .. },
+            ..
+        } => Some(bias),
+        ExponentLayout::Bias { bias, .. } => Some(bias),
+        ExponentLayout::BlockShared { .. } => None,
     }
 }
 
@@ -373,13 +693,31 @@ impl StashCodec for SfpStashCodec {
         "sfp"
     }
 
-    fn group(&self, _meta: &ContainerMeta) -> usize {
-        crate::sfp::GROUP
+    fn group(&self, meta: &ContainerMeta) -> usize {
+        match meta.layout {
+            ExponentLayout::BlockShared { block, .. } => block.max(1),
+            _ => crate::sfp::GROUP,
+        }
     }
 
     fn encode_kernel(&self, vals: &[f32], meta: &ContainerMeta, kernel: Kernel) -> EncodedStreams {
+        if matches!(meta.layout, ExponentLayout::BlockShared { .. }) {
+            // no per-value exponents for the 8-lane stack to compress —
+            // the hardware stream degenerates to the block component
+            // layout (shared with the gecko adapter)
+            return encode_block_streams(vals, meta, kernel);
+        }
         let codec = SfpCodec::new(meta.container, meta.elide_sign).with_bias(sfp_bias_of(meta));
-        let c = codec.compress_kernel(vals, meta.mant(), kernel);
+        // AdaptivFloat windows the values first; the bias register then
+        // narrows every row's exponent deltas around the learned bias
+        let owned;
+        let src: &[f32] = if matches!(meta.layout, ExponentLayout::Bias { .. }) {
+            owned = meta.quantized_slice(vals);
+            &owned
+        } else {
+            vals
+        };
+        let c = codec.compress_kernel(src, meta.mant(), kernel);
         let padded = if vals.is_empty() {
             0
         } else {
@@ -409,6 +747,9 @@ impl StashCodec for SfpStashCodec {
         meta: &ContainerMeta,
         kernel: Kernel,
     ) -> Vec<f32> {
+        if matches!(meta.layout, ExponentLayout::BlockShared { .. }) {
+            return decode_block_streams(count, streams, meta, kernel);
+        }
         let [payload, metadata] = streams else {
             panic!("sfp codec expects 2 streams");
         };
@@ -428,33 +769,33 @@ impl StashCodec for RawStashCodec {
         "raw"
     }
 
-    fn group(&self, _meta: &ContainerMeta) -> usize {
-        1
+    fn group(&self, meta: &ContainerMeta) -> usize {
+        // block-shared quantization needs whole blocks per chunk
+        meta.layout.block().unwrap_or(1)
     }
 
     fn encode_kernel(&self, vals: &[f32], meta: &ContainerMeta, kernel: Kernel) -> EncodedStreams {
+        let q = meta.quantized_slice(vals);
         let total = meta.container.total_bits();
         let mut w = BitWriter::with_capacity(vals.len() * total as usize);
         match kernel {
             Kernel::Word => {
                 let mut fields = [0u64; 64];
-                for chunk in vals.chunks(64) {
-                    for (f, &v) in fields.iter_mut().zip(chunk) {
-                        let q = meta.quantized(v);
+                for chunk in q.chunks(64) {
+                    for (f, &qv) in fields.iter_mut().zip(chunk) {
                         *f = match meta.container {
-                            Container::Fp32 => q.to_bits() as u64,
-                            Container::Bf16 => bf16_bits(q) as u64,
+                            Container::Fp32 => qv.to_bits() as u64,
+                            Container::Bf16 => bf16_bits(qv) as u64,
                         };
                     }
                     w.pack_lanes(&fields[..chunk.len()], total);
                 }
             }
             Kernel::Scalar => {
-                for &v in vals {
-                    let q = meta.quantized(v);
+                for &qv in &q {
                     match meta.container {
-                        Container::Fp32 => w.push(q.to_bits() as u64, 32),
-                        Container::Bf16 => w.push(bf16_bits(q) as u64, 16),
+                        Container::Fp32 => w.push(qv.to_bits() as u64, 32),
+                        Container::Bf16 => w.push(bf16_bits(qv) as u64, 16),
                     }
                 }
             }
@@ -532,11 +873,13 @@ impl StashCodec for JsStashCodec {
         "js"
     }
 
-    fn group(&self, _meta: &ContainerMeta) -> usize {
-        1
+    fn group(&self, meta: &ContainerMeta) -> usize {
+        // block-shared quantization needs whole blocks per chunk
+        meta.layout.block().unwrap_or(1)
     }
 
     fn encode_kernel(&self, vals: &[f32], meta: &ContainerMeta, kernel: Kernel) -> EncodedStreams {
+        let qs = meta.quantized_slice(vals);
         let total = meta.container.total_bits();
         let mut tags = BitWriter::with_capacity(vals.len());
         let mut payload = BitWriter::with_capacity(vals.len() * total as usize / 2);
@@ -547,11 +890,10 @@ impl StashCodec for JsStashCodec {
                 // payload plane: the chunk's non-zero container words
                 // compacted left and packed in one `pack_lanes` call.
                 let mut fields = [0u64; 64];
-                for chunk in vals.chunks(64) {
+                for chunk in qs.chunks(64) {
                     let mut tagw = 0u64;
                     let mut stored = 0usize;
-                    for &v in chunk {
-                        let q = meta.quantized(v);
+                    for &q in chunk {
                         let keep = q.to_bits() != 0;
                         tagw = (tagw << 1) | keep as u64;
                         if keep {
@@ -568,8 +910,7 @@ impl StashCodec for JsStashCodec {
                 }
             }
             Kernel::Scalar => {
-                for &v in vals {
-                    let q = meta.quantized(v);
+                for &q in &qs {
                     let stored = q.to_bits() != 0;
                     tags.push(stored as u64, 1);
                     if stored {
@@ -857,6 +1198,168 @@ mod tests {
         let back = JsStashCodec.decode(&enc, &meta);
         for (&v, &b) in tricky.iter().zip(&back) {
             assert_eq!(meta.quantized(v).to_bits(), b.to_bits());
+        }
+    }
+
+    fn layouts_under_test() -> Vec<ExponentLayout> {
+        vec![
+            ExponentLayout::Bias { bits: 8, bias: 127 },
+            ExponentLayout::Bias { bits: 4, bias: 127 },
+            ExponentLayout::Bias { bits: 2, bias: 120 },
+            ExponentLayout::Bias { bits: 4, bias: 1 },
+            ExponentLayout::Bias { bits: 4, bias: 254 },
+            ExponentLayout::BlockShared { block: 16, bits: 8 },
+            ExponentLayout::BlockShared { block: 7, bits: 8 },
+            ExponentLayout::BlockShared { block: 16, bits: 6 },
+            ExponentLayout::BlockShared { block: 1, bits: 8 },
+        ]
+    }
+
+    #[test]
+    fn new_layouts_roundtrip_to_slice_quantization_all_codecs() {
+        // bit-exact restore for every layout × codec × container ×
+        // mantissa corner, on a ragged length (1003 is not a multiple of
+        // any block size under test)
+        let vals = ValueModel::weights().sample_values(1003, 41, false);
+        for layout in layouts_under_test() {
+            for codec in codecs() {
+                for n in [0u32, 1, 4, 7] {
+                    for container in [Container::Fp32, Container::Bf16] {
+                        let meta = ContainerMeta::new(container, n).with_layout(layout);
+                        let q = meta.quantized_slice(&vals);
+                        let enc = codec.encode(&vals, &meta);
+                        let back = codec.decode(&enc, &meta);
+                        assert_eq!(back.len(), vals.len());
+                        for (i, (&want, &got)) in q.iter().zip(&back).enumerate() {
+                            assert_eq!(
+                                want.to_bits(),
+                                got.to_bits(),
+                                "{} {} n={n} {container} i={i}",
+                                codec.name(),
+                                layout.label()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn new_layouts_word_kernel_bit_identical_all_codecs() {
+        let acts = ValueModel::relu_act().sample_values(64 * 3 + 29, 43, true);
+        let weights = ValueModel::weights().sample_values(777, 47, false);
+        for (vals, elide) in [(&acts, true), (&weights, false)] {
+            for layout in layouts_under_test() {
+                for codec in codecs() {
+                    for n in [0u32, 1, 7] {
+                        let meta = ContainerMeta::new(Container::Bf16, n)
+                            .with_sign_elision(elide)
+                            .with_layout(layout);
+                        let w = codec.encode_kernel(vals, &meta, Kernel::Word);
+                        let s = codec.encode_kernel(vals, &meta, Kernel::Scalar);
+                        let ctx = format!("{} {} n={n}", codec.name(), layout.label());
+                        assert_eq!(w.count, s.count, "{ctx}");
+                        assert_eq!(w.streams, s.streams, "{ctx}");
+                        let q = meta.quantized_slice(vals);
+                        for kernel in [Kernel::Word, Kernel::Scalar] {
+                            let back = codec.decode_kernel(&w, &meta, kernel);
+                            for (i, (&want, &got)) in q.iter().zip(&back).enumerate() {
+                                assert_eq!(
+                                    want.to_bits(),
+                                    got.to_bits(),
+                                    "{ctx} {kernel:?} i={i}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn new_layouts_chunked_equals_one_shot() {
+        // chunk boundaries land mid-block unless the codec group aligns
+        // them — this is what `group()` guarantees for the new layouts
+        let vals = ValueModel::relu_act().sample_values(16 * 13 + 9, 51, true);
+        for layout in layouts_under_test() {
+            let meta = ContainerMeta::new(Container::Bf16, 3)
+                .with_sign_elision(true)
+                .with_layout(layout);
+            for codec in codecs() {
+                let one = codec.encode(&vals, &meta);
+                for chunk in [1usize, 16, 100, 129] {
+                    let cat = codec.encode_chunked(&vals, &meta, chunk);
+                    assert_eq!(
+                        cat.streams,
+                        one.streams,
+                        "{} {} chunk {chunk}",
+                        codec.name(),
+                        layout.label()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_shared_component_split_and_footprint() {
+        // exponent bits amortize across the block: bits × nblocks exactly,
+        // mantissa stream carries the explicit leading one
+        let vals = ValueModel::weights().sample_values(1000, 53, false);
+        let layout = ExponentLayout::BlockShared { block: 16, bits: 8 };
+        let meta = ContainerMeta::new(Container::Bf16, 4).with_layout(layout);
+        for codec in [&GeckoStashCodec as &dyn StashCodec, &SfpStashCodec] {
+            let enc = codec.encode(&vals, &meta);
+            assert_eq!(enc.bits.total() as usize, enc.total_bits());
+            assert_eq!(enc.bits.exponent, 8.0 * 63.0); // ceil(1000 / 16) blocks
+            assert_eq!(enc.bits.mantissa, 5.0 * 1000.0);
+            assert_eq!(enc.bits.sign, 1000.0);
+            assert_eq!(enc.bits.metadata, 0.0);
+        }
+        // gecko and sfp degenerate to the same stream bytes under a
+        // shared-exponent layout
+        let g = GeckoStashCodec.encode(&vals, &meta);
+        let s = SfpStashCodec.encode(&vals, &meta);
+        assert_eq!(g.streams, s.streams);
+    }
+
+    #[test]
+    fn bias_component_split_matches_fixed_field() {
+        let vals = ValueModel::weights().sample_values(1000, 59, false);
+        let layout = ExponentLayout::Bias { bits: 4, bias: 127 };
+        let meta = ContainerMeta::new(Container::Bf16, 3).with_layout(layout);
+        let enc = GeckoStashCodec.encode(&vals, &meta);
+        assert_eq!(enc.bits.total() as usize, enc.total_bits());
+        assert_eq!(enc.bits.exponent, 4.0 * 1000.0);
+        assert_eq!(enc.bits.mantissa, 3.0 * 1000.0);
+        assert_eq!(enc.bits.sign, 1000.0);
+        assert_eq!(enc.bits.metadata, 0.0);
+        // 8 bits/value total — the fp8 preset's exact footprint
+        assert_eq!(enc.total_bits(), 8 * 1000);
+    }
+
+    #[test]
+    fn bias_sfp_stream_narrows_around_learned_bias() {
+        // the AdaptivFloat bias carried into the §V bias registers must
+        // narrow the hardware stream vs. the delta layout, and still
+        // restore bit-exactly to the windowed quantization
+        let vals = ValueModel::weights().sample_values(64 * 64, 61, false);
+        let delta = ContainerMeta::new(Container::Bf16, 2);
+        let af = delta.with_layout(ExponentLayout::Bias { bits: 8, bias: 121 });
+        let enc_delta = SfpStashCodec.encode(&vals, &delta);
+        let enc_af = SfpStashCodec.encode(&vals, &af);
+        assert!(
+            enc_af.total_bits() < enc_delta.total_bits(),
+            "af {} vs delta {}",
+            enc_af.total_bits(),
+            enc_delta.total_bits()
+        );
+        let q = af.quantized_slice(&vals);
+        let back = SfpStashCodec.decode(&enc_af, &af);
+        for (&want, &got) in q.iter().zip(&back) {
+            assert_eq!(want.to_bits(), got.to_bits());
         }
     }
 

@@ -20,8 +20,11 @@
 //!
 //! * [`codec::StashCodec`] — pluggable encode/decode, adapters over the
 //!   existing Gecko, SFP, JS zero-skip, and raw baseline stacks; per-tensor
-//!   [`codec::ContainerMeta`] carries the mantissa/exponent bitlengths the
-//!   active policy (Quantum Mantissa / Quantum Exponent / BitChop) chose.
+//!   [`codec::ContainerMeta`] carries the mantissa bitlength and the
+//!   exponent [`crate::formats::ExponentLayout`] the active policy chose —
+//!   per-value width (Quantum Exponent / BitWave), fixed-bias window
+//!   (AdaptivFloat), or block shared exponent (Flexpoint; blocks align
+//!   with chunk boundaries so chunked encodes stay bit-exact).
 //!   Decoding is zero-copy: [`codec::StashCodec::decode_view`] reads
 //!   pinned arena chunks in place through segmented bit readers.
 //! * [`arena::ChunkArena`] — tiered chunk storage: a free-list-recycled

@@ -7,7 +7,7 @@
 //! cache fingerprints kernel-independent (CI proves the same property
 //! end-to-end with a scalar-populated warm cache).
 
-use sfp::formats::Container;
+use sfp::formats::{Container, ExponentLayout};
 use sfp::gecko::{self, Kernel, Mode, SegReader};
 use sfp::sfp::SfpCodec;
 use sfp::stash::{
@@ -94,6 +94,65 @@ fn prop_word_and_scalar_streams_identical_every_codec() {
             for (i, (&v, &b)) in vals.iter().zip(&dw).enumerate() {
                 assert_eq!(meta.quantized(v).to_bits(), b.to_bits(), "{ctx} i={i}");
             }
+        }
+    });
+}
+
+/// Metadata over the full [`ExponentLayout`] axis: bias windows including
+/// the 1/254 extremes, block-shared fields with non-power-of-two blocks,
+/// narrow per-value widths — crossed with the 0/1-bit mantissa corners.
+fn layout_meta(g: &mut Gen) -> ContainerMeta {
+    let container = if g.bool() { Container::Fp32 } else { Container::Bf16 };
+    let mant = [0u32, 0, 1, 1, 7, 23][g.usize_in(0, 5)];
+    let layout = match g.u32_in(0, 2) {
+        0 => ExponentLayout::Width {
+            bits: g.u32_in(1, 8),
+            mode: if g.bool() {
+                Mode::Delta
+            } else {
+                Mode::FixedBias {
+                    bias: g.u32_in(0, 255) as u8,
+                    group: g.usize_in(1, 32),
+                }
+            },
+        },
+        1 => ExponentLayout::Bias {
+            bits: g.u32_in(1, 8),
+            bias: [1u8, 127, 254, g.u32_in(1, 254) as u8][g.usize_in(0, 3)],
+        },
+        _ => ExponentLayout::BlockShared {
+            block: [1usize, 3, 16, 64][g.usize_in(0, 3)],
+            bits: g.u32_in(1, 8),
+        },
+    };
+    ContainerMeta::new(container, mant).with_layout(layout)
+}
+
+#[test]
+fn prop_word_and_scalar_streams_identical_every_layout() {
+    check("word == scalar across exponent layouts", 40, |g| {
+        let mut vals = ragged_vals(g);
+        let mut meta = layout_meta(g);
+        if g.bool() {
+            strip_signs(&mut vals);
+            meta = meta.with_sign_elision(true);
+        }
+        let expect = bit_pattern(&meta.quantized_slice(&vals));
+        for codec in codecs() {
+            let ctx = format!("{} len={} {meta:?}", codec.name(), vals.len());
+            let s = codec.encode_kernel(&vals, &meta, Kernel::Scalar);
+            let w = codec.encode_kernel(&vals, &meta, Kernel::Word);
+            assert_eq!(s.count, w.count, "{ctx}");
+            assert_eq!(s.streams, w.streams, "{ctx}");
+            let ds = codec.decode_kernel(&s, &meta, Kernel::Scalar);
+            let dw = codec.decode_kernel(&w, &meta, Kernel::Word);
+            assert_eq!(bit_pattern(&ds), bit_pattern(&dw), "{ctx}");
+            assert_eq!(bit_pattern(&dw), expect, "{ctx}");
+            // chunked word encode stays on block/group boundaries, so it
+            // must still match the scalar one-shot stream
+            let chunk = g.usize_in(1, 3000);
+            let cat = codec.encode_chunked_kernel(&vals, &meta, chunk, Kernel::Word);
+            assert_eq!(s.streams, cat.streams, "{ctx} chunk={chunk}");
         }
     });
 }

@@ -42,6 +42,7 @@ fn tiny_stash(codec: CodecKind) -> JobSpec {
         sample: 1024,
         seed: 0x5EED,
         threads: 0,
+        layout: String::new(),
     })
 }
 

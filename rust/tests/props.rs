@@ -3,7 +3,7 @@
 
 use sfp::baselines::{self, ActKind};
 use sfp::coordinator::BitChop;
-use sfp::formats::{quantize, truncate_mantissa, Container};
+use sfp::formats::{quantize, truncate_mantissa, Container, ExponentLayout};
 use sfp::gecko::{self, Mode};
 use sfp::policy::sweep::{build_policy, PolicyKind, SweepConfig};
 use sfp::policy::StepSignals;
@@ -246,9 +246,75 @@ fn prop_stash_roundtrip_bit_exact_every_codec() {
                     b.to_bits(),
                     "{kind:?} i={i} mant={} mode={:?}",
                     meta.mant_bits,
-                    meta.exp_mode,
+                    meta.exp_mode(),
                 );
             }
+            assert_eq!(stash.failures(), 0, "{kind:?}");
+        }
+    });
+}
+
+/// Exponent layouts across every representation family, weighted toward
+/// the corner cases: 1-bit windows, bias extremes (1/127/254), single-value
+/// and oversized blocks (ragged tails come from the arbitrary lengths).
+fn arbitrary_layout(g: &mut Gen) -> ExponentLayout {
+    match g.u32_in(0, 3) {
+        0 => ExponentLayout::Width { bits: g.u32_in(1, 8), mode: Mode::Delta },
+        1 => ExponentLayout::Width {
+            bits: g.u32_in(1, 8),
+            mode: Mode::FixedBias {
+                bias: g.u32_in(0, 255) as u8,
+                group: g.usize_in(1, 32),
+            },
+        },
+        2 => ExponentLayout::Bias {
+            bits: g.u32_in(1, 8),
+            bias: [1u8, 127, 254, g.u32_in(1, 254) as u8][g.usize_in(0, 3)],
+        },
+        _ => ExponentLayout::BlockShared {
+            block: [1usize, 3, 16, 64][g.usize_in(0, 3)],
+            bits: g.u32_in(1, 8),
+        },
+    }
+}
+
+#[test]
+fn prop_stash_roundtrip_bit_exact_every_layout() {
+    check("restore == quantized_slice for every layout × codec", 30, |g| {
+        let mut vals = arbitrary_vals(g);
+        let mant = [0u32, 1, 3, 7, 23][g.usize_in(0, 4)];
+        let container = if g.bool() { Container::Fp32 } else { Container::Bf16 };
+        let mut meta = ContainerMeta::new(container, mant).with_layout(arbitrary_layout(g));
+        if g.bool() {
+            // sign elision requires a non-negative tensor
+            for v in vals.iter_mut() {
+                *v = f32::from_bits(v.to_bits() & 0x7FFF_FFFF);
+            }
+            meta = meta.with_sign_elision(true);
+        }
+        let expect = meta.quantized_slice(&vals);
+        for kind in CodecKind::all() {
+            let stash = Stash::new(StashConfig {
+                codec: kind,
+                threads: g.usize_in(1, 4),
+                queue_depth: g.usize_in(1, 4),
+                chunk_values: g.usize_in(1, 800),
+                // sometimes squeeze the arena so the spill tier engages
+                budget_bytes: if g.bool() { g.usize_in(1, 64) * 1024 } else { 0 },
+            });
+            stash.put(TensorId::act(0), vals.clone(), meta);
+            stash.flush();
+            let back = stash.take(TensorId::act(0)).unwrap();
+            assert_eq!(back.len(), expect.len(), "{kind:?} layout={:?}", meta.layout);
+            let bad = expect
+                .iter()
+                .zip(&back)
+                .position(|(e, b)| e.to_bits() != b.to_bits());
+            assert!(
+                bad.is_none(),
+                "{kind:?} first mismatch at {bad:?} layout={:?} mant={mant}",
+                meta.layout,
+            );
             assert_eq!(stash.failures(), 0, "{kind:?}");
         }
     });
